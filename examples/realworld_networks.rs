@@ -1,0 +1,107 @@
+//! End-to-end driver on the real-world benchmark networks (paper §7.5):
+//! learn SACHS (11 vars / 17 edges) and CHILD (20 vars / 25 edges) from
+//! forward-sampled data, with both CV-LR (through the full three-layer
+//! PJRT hot path when artifacts are available) and the exact CV score on
+//! a subsample, reporting the paper's headline metric — the CV/CV-LR
+//! runtime ratio at matched accuracy.
+//!
+//! ```text
+//! cargo run --release --example realworld_networks [-- --n 1000 --cv-n 300]
+//! ```
+
+use std::sync::Arc;
+
+use cvlr::coordinator::{discover, DiscoveryConfig, EngineKind, Method};
+use cvlr::data::networks;
+use cvlr::graph::{normalized_shd, skeleton_f1};
+use cvlr::util::cli::Args;
+use cvlr::util::csv::Table;
+use cvlr::util::timing::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 1000);
+    // exact CV is O(n³) per score — cap its sample size separately so the
+    // example stays interactive (pass --cv-n 0 to skip CV entirely).
+    let cv_n = args.usize_or("cv-n", 300);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let pjrt_ok = cvlr::runtime::Runtime::load(&artifacts).is_ok();
+
+    for net in [networks::sachs(), networks::child()] {
+        println!("\n=== {} ({} vars, {} edges, n={n}) ===", net.name, net.dag.parent_list().len(), net.dag.num_edges());
+        let ds = Arc::new(networks::forward_sample(&net, n, 5));
+        let mut table = Table::new(&["method", "engine", "n", "F1", "SHD", "time"]);
+
+        // CV-LR through the native backend
+        let out = discover(ds.clone(), &DiscoveryConfig::default())?;
+        let t_cvlr = out.seconds;
+        table.row(&[
+            "CV-LR".into(),
+            "native".into(),
+            n.to_string(),
+            format!("{:.3}", skeleton_f1(&out.cpdag, &net.dag)),
+            format!("{:.3}", normalized_shd(&out.cpdag, &net.dag)),
+            fmt_secs(out.seconds),
+        ]);
+
+        // CV-LR through the AOT XLA artifacts (the three-layer hot path)
+        if pjrt_ok {
+            let out = discover(
+                ds.clone(),
+                &DiscoveryConfig {
+                    engine: EngineKind::Pjrt,
+                    artifacts_dir: artifacts.clone(),
+                    ..Default::default()
+                },
+            )?;
+            table.row(&[
+                "CV-LR".into(),
+                "pjrt".into(),
+                n.to_string(),
+                format!("{:.3}", skeleton_f1(&out.cpdag, &net.dag)),
+                format!("{:.3}", normalized_shd(&out.cpdag, &net.dag)),
+                fmt_secs(out.seconds),
+            ]);
+        }
+
+        // BDeu baseline (the discrete-data specialist)
+        let out = discover(
+            ds.clone(),
+            &DiscoveryConfig { method: Method::Bdeu, ..Default::default() },
+        )?;
+        table.row(&[
+            "BDeu".into(),
+            "-".into(),
+            n.to_string(),
+            format!("{:.3}", skeleton_f1(&out.cpdag, &net.dag)),
+            format!("{:.3}", normalized_shd(&out.cpdag, &net.dag)),
+            fmt_secs(out.seconds),
+        ]);
+
+        // exact CV on a subsample — the O(n³) baseline the paper
+        // accelerates; its runtime ratio vs CV-LR is the headline claim.
+        if cv_n >= 40 {
+            let ds_small = Arc::new(networks::forward_sample(&net, cv_n, 5));
+            let out_cv = discover(
+                ds_small.clone(),
+                &DiscoveryConfig { method: Method::Cv, ..Default::default() },
+            )?;
+            table.row(&[
+                "CV".into(),
+                "native".into(),
+                cv_n.to_string(),
+                format!("{:.3}", skeleton_f1(&out_cv.cpdag, &net.dag)),
+                format!("{:.3}", normalized_shd(&out_cv.cpdag, &net.dag)),
+                fmt_secs(out_cv.seconds),
+            ]);
+            let out_lr = discover(ds_small, &DiscoveryConfig::default())?;
+            println!(
+                "CV/CV-LR runtime ratio at n={cv_n}: {:.0}x (paper: 600-1000x at n=2000)",
+                out_cv.seconds / out_lr.seconds.max(1e-9)
+            );
+        }
+        println!("{}", table.render());
+        let _ = t_cvlr;
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! The score service as a standalone component: batched local-score
+//! requests routed through dedup, cache and a worker pool, with the
+//! CV-LR score running on the AOT XLA artifacts — the serving-style
+//! view of the coordinator (DESIGN.md §2, L3).
+//!
+//! Prints per-batch latency/throughput and the final service metrics.
+//!
+//! ```text
+//! cargo run --release --example score_service [-- --n 1000 --workers 4]
+//! ```
+
+use std::sync::Arc;
+
+use cvlr::coordinator::ScoreService;
+use cvlr::data::synth::{generate, SynthConfig};
+use cvlr::runtime::pjrt_kernel::PjrtCvLrKernel;
+use cvlr::runtime::Runtime;
+use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::folds::CvParams;
+use cvlr::score::LocalScore;
+use cvlr::util::cli::Args;
+use cvlr::util::timing::fmt_secs;
+use cvlr::util::{Pcg64, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 1000);
+    let d = args.usize_or("vars", 10);
+    let workers = args.usize_or("workers", 4);
+    let batches = args.usize_or("batches", 5);
+    let batch_size = args.usize_or("batch-size", 32);
+    let artifacts = args.get_or("artifacts", "artifacts");
+
+    let (ds, _) = generate(&SynthConfig {
+        n,
+        num_vars: d,
+        density: 0.4,
+        seed: 11,
+        ..Default::default()
+    });
+    let ds = Arc::new(ds);
+
+    // Backend: PJRT artifacts when available, else the native kernel.
+    let backend: Arc<dyn LocalScore> = match Runtime::load(&artifacts) {
+        Ok(rt) => {
+            println!("backend: PJRT artifacts ({} buckets)", rt.cvlr_buckets.len());
+            Arc::new(CvLrScore::with_backend(
+                ds.clone(),
+                CvParams::default(),
+                Default::default(),
+                PjrtCvLrKernel::new(Arc::new(rt)),
+            ))
+        }
+        Err(e) => {
+            println!("backend: native (artifacts unavailable: {e})");
+            Arc::new(CvLrScore::native(ds.clone()))
+        }
+    };
+    let service = ScoreService::new(backend, workers);
+
+    // Synthetic request stream: random (target, parent-set) queries with
+    // realistic GES-like overlap (small parent sets, repeated queries).
+    let mut rng = Pcg64::new(99);
+    println!("\n{batches} batches x {batch_size} requests, {workers} workers:");
+    for b in 0..batches {
+        let reqs: Vec<(usize, Vec<usize>)> = (0..batch_size)
+            .map(|_| {
+                let t = rng.below(d);
+                let k = rng.below(3);
+                let mut pa: Vec<usize> = (0..k)
+                    .map(|_| {
+                        let mut v = rng.below(d);
+                        while v == t {
+                            v = rng.below(d);
+                        }
+                        v
+                    })
+                    .collect();
+                pa.sort_unstable();
+                pa.dedup();
+                (t, pa)
+            })
+            .collect();
+        let sw = Stopwatch::start();
+        let scores = service.score_batch(&reqs);
+        let secs = sw.secs();
+        let sum: f64 = scores.iter().sum();
+        println!(
+            "  batch {b}: {} req in {} ({:.1} req/s)   Σscores = {sum:.1}",
+            reqs.len(),
+            fmt_secs(secs),
+            reqs.len() as f64 / secs.max(1e-12),
+        );
+    }
+
+    let st = service.stats();
+    println!("\nservice metrics:");
+    println!("  requests     : {}", st.requests);
+    println!("  cache hits   : {} ({:.0}%)", st.cache_hits, 100.0 * st.cache_hits as f64 / st.requests.max(1) as f64);
+    println!("  evaluations  : {}", st.evaluations);
+    println!("  batches      : {}", st.batches);
+    println!("  scoring time : {}", fmt_secs(st.eval_seconds));
+    Ok(())
+}

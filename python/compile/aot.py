@@ -1,0 +1,138 @@
+"""AOT lowering: JAX score graphs → HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all f64):
+
+* ``cvlr_cond_n{N}`` / ``cvlr_marg_n{N}`` for the shape buckets
+  N ∈ {256, 512, 1024, 2048, 4096}: one CV fold of the paper's CV-LR
+  score from zero-padded centered factors (N1 = N train rows,
+  N0 = N/4 test rows, M = 128 columns) + true-count/λ/γ scalars.
+  Padding is exact (DESIGN.md §2), so one bucket serves every n ≤ N.
+* ``exact_cond_n{n}`` / ``exact_marg_n{n}`` for
+  n ∈ {200, 500, 1000, 2000, 4000}: one fold of the exact O(n³) CV
+  score from raw fold data (n0 = n/10 test rows, n1 = 9n/10 train
+  rows; feature dims padded to DX=8 / DZ=32) — the Fig. 1 baseline,
+  running through the same PJRT runtime as CV-LR.
+
+``manifest.json`` (written last — it is the Makefile's stamp file)
+records every artifact's shapes for the rust runtime.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# CV-LR factor shape buckets (train rows; test rows = N/4, columns = M).
+CVLR_BUCKETS = [256, 512, 1024, 2048, 4096]
+# Column (rank) buckets: the adaptive low-rank algorithms usually stop
+# well below the m=100 cap (single variables and small discrete sets are
+# rank ≲ 30), and the artifact pays Gram FLOPs for every padded column —
+# a 32-column bucket cuts that 16x on the common path (EXPERIMENTS.md
+# §Perf, L3 iteration 1).
+M_BUCKETS = [32, 128]
+M = 128
+# Exact-CV sample sizes (Fig. 1 / Table 1 sweep; 10-fold → n1 = 0.9n).
+EXACT_SIZES = [200, 500, 1000, 2000, 4000]
+DX = 8
+DZ = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def lower_all(out_dir: str) -> list[dict]:
+    entries = []
+
+    def emit(name, fn, specs, meta):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "file": fname, **meta})
+        print(f"  {name}: {len(text)} chars")
+
+    scalar = _spec()
+    for n1 in CVLR_BUCKETS:
+        n0 = n1 // 4
+        for m in M_BUCKETS:
+            emit(
+                f"cvlr_cond_n{n1}_m{m}",
+                lambda lx0, lx1, lz0, lz1, a, b, c, d: (model.cvlr_cond(lx0, lx1, lz0, lz1, a, b, c, d),),
+                [_spec(n0, m), _spec(n1, m), _spec(n0, m), _spec(n1, m), scalar, scalar, scalar, scalar],
+                {"kind": "cvlr_cond", "n1_cap": n1, "n0_cap": n0, "m": m},
+            )
+            emit(
+                f"cvlr_marg_n{n1}_m{m}",
+                lambda lx0, lx1, a, b, c, d: (model.cvlr_marg(lx0, lx1, a, b, c, d),),
+                [_spec(n0, m), _spec(n1, m), scalar, scalar, scalar, scalar],
+                {"kind": "cvlr_marg", "n1_cap": n1, "n0_cap": n0, "m": m},
+            )
+
+    for n in EXACT_SIZES:
+        n0, n1 = n // 10, n - n // 10
+        emit(
+            f"exact_cond_n{n}",
+            lambda x0, x1, z0, z1, sx, sz, lam, gam: (model.cv_exact_cond(x0, x1, z0, z1, sx, sz, lam, gam),),
+            [_spec(n0, DX), _spec(n1, DX), _spec(n0, DZ), _spec(n1, DZ), scalar, scalar, scalar, scalar],
+            {"kind": "exact_cond", "n": n, "n0": n0, "n1": n1, "dx": DX, "dz": DZ},
+        )
+        emit(
+            f"exact_marg_n{n}",
+            lambda x0, x1, sx, lam, gam: (model.cv_exact_marg(x0, x1, sx, lam, gam),),
+            [_spec(n0, DX), _spec(n1, DX), scalar, scalar, scalar],
+            {"kind": "exact_marg", "n": n, "n0": n0, "n1": n1, "dx": DX},
+        )
+
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    print(f"lowering score graphs to {args.out} (f64, HLO text)")
+    entries = lower_all(args.out)
+    manifest = {
+        "dtype": "f64",
+        "cvlr_buckets": CVLR_BUCKETS,
+        "m_buckets": M_BUCKETS,
+        "exact_sizes": EXACT_SIZES,
+        "m": M,
+        "dx": DX,
+        "dz": DZ,
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: tiled Gram products AᵀB.
+
+The CV-LR score's only O(n·m²) work is forming the six m×m cores
+P,E,F,V,U,S = Λᵀ·Λ cross-products (paper §5); everything downstream is
+O(m³). This kernel expresses that reduction TPU-style:
+
+* the sample axis n is the grid's reduction dimension — each grid step
+  streams one (block_n × m) tile of each factor from HBM into VMEM and
+  accumulates its (m × m) outer contribution in the output block, which
+  stays resident in VMEM across the grid (standard Pallas accumulation
+  pattern);
+* tile sizes: block_n=256, m≤128 → 256·128·8B = 256 KiB per operand
+  tile (f64), comfortably double-bufferable in 16 MiB VMEM; the MXU
+  sees (m × block_n)·(block_n × m) contractions.
+
+On this CPU-only image the kernel must run with interpret=True (Mosaic
+custom-calls cannot execute on CPU PJRT) — see DESIGN.md §Hardware
+adaptation; numerics are validated against `ref.gram_ref` by pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default reduction tile (rows of the factor streamed per grid step).
+BLOCK_N = 256
+
+
+def _gram_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o += a_tileᵀ @ b_tile (accumulate across the grid)."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def gram_tt(a: jax.Array, b: jax.Array, block_n: int = BLOCK_N) -> jax.Array:
+    """Compute aᵀ @ b for (n × ma), (n × mb) factors via the Pallas tile
+    reduction. n must be divisible by the chosen block (callers use
+    power-of-two shape buckets; for small inputs the whole axis becomes
+    one block)."""
+    n, ma = a.shape
+    n_b, mb = b.shape
+    assert n == n_b, f"row mismatch {n} vs {n_b}"
+    if n % block_n != 0:
+        block_n = n  # single-tile fallback for odd/small sizes
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, ma), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, mb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ma, mb), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ma, mb), a.dtype),
+        interpret=True,
+    )(a, b)

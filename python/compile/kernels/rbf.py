@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled pairwise RBF (Gaussian) kernel matrix.
+
+The exact-CV baseline score (paper Eq. 8/9) needs full n×n kernel
+matrices K_ij = exp(−‖x_i − x_j‖² / 2σ²) — its O(n²d) construction is
+one of the two exact-path hot spots (the other being the O(n³) solves).
+
+Tiling: 2-D grid over (row tiles × col tiles); each step loads one
+(block × d) tile of each operand into VMEM and emits a (block × block)
+output tile using the ‖x‖² + ‖y‖² − 2xyᵀ expansion, so the MXU handles
+the cross-term contraction. interpret=True on this CPU-only image.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+
+
+def _rbf_kernel(x_ref, y_ref, inv_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)       # (bx, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True).T      # (1, by)
+    xy = jnp.dot(x, y.T, preferred_element_type=o_ref.dtype)
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+    o_ref[...] = jnp.exp(-d2 * inv_ref[0])
+
+
+def rbf_cross(x: jax.Array, y: jax.Array, sigma: jax.Array, block: int = BLOCK) -> jax.Array:
+    """K(x, y) with K_ij = exp(−‖x_i−y_j‖²/(2σ²)); shapes (nx×d),(ny×d).
+
+    σ is a traced scalar (the median-heuristic width is data-dependent
+    and computed by the rust coordinator at run time)."""
+    nx, d = x.shape
+    ny, d2 = y.shape
+    assert d == d2
+    bx = block if nx % block == 0 else nx
+    by = block if ny % block == 0 else ny
+    inv = (0.5 / (sigma * sigma)).reshape((1,))
+    return pl.pallas_call(
+        _rbf_kernel,
+        grid=(nx // bx, ny // by),
+        in_specs=[
+            pl.BlockSpec((bx, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((by, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bx, by), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny), x.dtype),
+        interpret=True,
+    )(x, y, inv)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the L1 Pallas kernels and a literal, dense
+implementation of the paper's Eq. (8)/(9) used to validate the L2
+dumbbell-form score graphs.
+
+Everything here is O(n²)/O(n³) on purpose — these are the correctness
+references, never the production path.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(a, b):
+    """aᵀ @ b."""
+    return a.T @ b
+
+
+def rbf_ref(x, y, sigma):
+    """Dense pairwise RBF kernel."""
+    d2 = (
+        jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+        - 2.0 * (x @ y.T)
+    )
+    return jnp.exp(-jnp.maximum(d2, 0.0) / (2.0 * sigma * sigma))
+
+
+def cv_cond_dense_ref(lx0, lx1, lz0, lz1, n0, n1, lam, gam):
+    """Paper Eq. (8) computed literally on the dense kernel matrices
+    reconstructed from the (already centered) low-rank factors:
+    K̃ₓ¹ = Λ̃ₓ₁Λ̃ₓ₁ᵀ etc. O(n³) — the oracle for `model.cvlr_cond`."""
+    kx11 = lx1 @ lx1.T
+    kx01 = lx0 @ lx1.T
+    kz11 = lz1 @ lz1.T
+    kz01 = lz0 @ lz1.T
+    tr_kx00 = jnp.trace(lx0 @ lx0.T)
+    beta = lam * lam / gam
+    nn1 = kx11.shape[0]
+
+    a = jnp.linalg.inv(kz11 + n1 * lam * jnp.eye(nn1))
+    b = a @ kx11 @ a
+    q = n1 * beta * b + jnp.eye(nn1)
+    sign, logdet = jnp.linalg.slogdet(q)
+    c = a @ jnp.linalg.inv(q) @ a
+
+    t1 = tr_kx00
+    t2 = jnp.trace(kz01 @ b @ kz01.T)
+    t3 = jnp.trace(kx01 @ a @ kz01.T)
+    t4 = jnp.trace(kx01 @ c @ kx01.T)
+    t5 = jnp.trace(kz01 @ a @ kx11 @ c @ kx11 @ a @ kz01.T)
+    t6 = jnp.trace(kx01 @ c @ kx11 @ a @ kz01.T)
+    trace_total = t1 + t2 - 2 * t3 - n1 * beta * t4 - n1 * beta * t5 + 2 * n1 * beta * t6
+
+    return (
+        -(n0 * n0 / 2) * jnp.log(2 * jnp.pi)
+        - (n0 / 2) * logdet
+        - (n0 * n1 / 2) * jnp.log(gam)
+        - trace_total / (2 * gam)
+    )
+
+
+def cv_marg_dense_ref(lx0, lx1, n0, n1, lam, gam):
+    """Paper Eq. (9) (§5 "|z|=0" form) on dense matrices from factors."""
+    kx11 = lx1 @ lx1.T
+    kx01 = lx0 @ lx1.T
+    tr_kx00 = jnp.trace(lx0 @ lx0.T)
+    nn1 = kx11.shape[0]
+
+    q = jnp.eye(nn1) + kx11 / (n1 * lam)
+    sign, logdet = jnp.linalg.slogdet(q)
+    bchk = jnp.linalg.inv(q)
+    t2 = jnp.trace(kx01 @ bchk @ kx01.T)
+    trace_total = tr_kx00 - t2 / (n1 * gam)
+
+    return (
+        -(n0 * n0 / 2) * jnp.log(2 * jnp.pi)
+        - (n0 / 2) * logdet
+        - (n0 * n1 / 2) * jnp.log(gam)
+        - trace_total / (2 * gam)
+    )

@@ -1,0 +1,216 @@
+"""L2: the CV-LR and exact-CV score functions as JAX computation graphs.
+
+Built once by `aot.py` into fixed-shape HLO-text artifacts that the rust
+coordinator executes through PJRT — python never runs on the request
+path.
+
+Shape conventions (DESIGN.md §2):
+
+* `cvlr_cond` / `cvlr_marg` take *zero-padded* centered factors
+  Λ̃ (rows padded with zeros beyond the true n₀/n₁, columns padded with
+  zeros beyond the true m) plus the true sample counts as f64 scalars.
+  Both paddings are exact no-ops for the score: zero rows contribute
+  nothing to any Gram product, and zero columns extend every dumbbell
+  core block-diagonally with identity/zero blocks.
+* `cv_exact_cond` / `cv_exact_marg` take raw fold data (train/test
+  sample blocks, zero-padded in the *feature* dimension only, which RBF
+  distances ignore) and the kernel widths as scalars; the row counts are
+  static shapes, so these artifacts are compiled per (n₀, n₁) pair.
+
+All graphs are f64 (`jax_enable_x64`), matching the rust reference
+bit-for-bit up to BLAS reduction order.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gram import gram_tt
+from .kernels.rbf import rbf_cross
+
+jax.config.update("jax_enable_x64", True)
+
+LOG_2PI = float(jnp.log(2 * jnp.pi))
+
+
+def _chol_logdet_inv(q):
+    """(log|Q|, Q⁻¹) for an SPD matrix via unpivoted Gauss-Jordan.
+
+    Deliberately NOT `jnp.linalg.cholesky` + `cho_solve`: those lower to
+    LAPACK FFI custom-calls (`lapack_dpotrf_ffi`, `lapack_dtrsm_ffi`)
+    which the pinned xla_extension 0.5.1 PJRT cannot compile
+    ("Unknown custom-call API version enum value: 4"). The Gauss-Jordan
+    sweep lowers to a pure-HLO while loop + dynamic slices, and is
+    numerically equivalent to LDLᵀ for SPD inputs (no pivoting needed:
+    every Schur complement of an SPD matrix is SPD, so the pivots stay
+    positive — they also directly give log|Q| = Σ log pivotₖ).
+    """
+    m = q.shape[0]
+    dtype = q.dtype
+    idx = jnp.arange(m)
+
+    def body(k, carry):
+        a, inv, logdet = carry
+        p = a[k, k]
+        logdet = logdet + jnp.log(p)
+        arow = a[k, :] / p
+        irow = inv[k, :] / p
+        colm = jnp.where(idx == k, 0.0, a[:, k])
+        a = a - jnp.outer(colm, arow)
+        inv = inv - jnp.outer(colm, irow)
+        a = a.at[k, :].set(arow)
+        inv = inv.at[k, :].set(irow)
+        return a, inv, logdet
+
+    _, inv, logdet = jax.lax.fori_loop(
+        0, m, body, (q, jnp.eye(m, dtype=dtype), jnp.zeros((), dtype))
+    )
+    return logdet, inv
+
+
+def cvlr_cond(lx0, lx1, lz0, lz1, n0, n1, lam, gam):
+    """One fold of the conditional CV-LR score (paper §5, Eq. 26).
+
+    lx0,lz0: (N0, M) padded test factors; lx1,lz1: (N1, M) padded train
+    factors; n0,n1: true counts (f64 scalars); lam,gam: λ, γ.
+    """
+    beta = lam * lam / gam
+    c1 = 1.0 / (n1 * lam)
+
+    # O(n·m²): the six dumbbell cores, via the L1 Pallas kernel.
+    p = gram_tt(lx1, lx1)   # P  (M×M)
+    e = gram_tt(lz1, lx1)   # E
+    f = gram_tt(lz1, lz1)   # F
+    v = gram_tt(lx0, lx0)   # V
+    u = gram_tt(lz0, lx0)   # U
+    s = gram_tt(lz0, lz0)   # S
+
+    eye_x = jnp.eye(p.shape[0], dtype=p.dtype)
+    eye_z = jnp.eye(f.shape[0], dtype=f.dtype)
+
+    # D = (n₁λI + F)⁻¹
+    _, d = _chol_logdet_inv(f + n1 * lam * eye_z)
+    de = d @ e
+    t = p - 2.0 * (e.T @ de) + de.T @ (f @ de)  # Eq. 17 core
+
+    # Q = I + T/(n₁γ): log|Q| = log|n₁βB + I| (Eq. 20-21); G = Q⁻¹
+    logdet, g = _chol_logdet_inv(eye_x + t / (n1 * gam))
+
+    # W = c₁²T − n₁β c₁⁴ · T G T  ( = Λ̃ₓ₁ᵀ C Λ̃ₓ₁ )
+    w = c1 * c1 * t - (n1 * beta * c1**4) * (t @ g @ t)
+
+    # M₂ = V − 2c₁·Eᵀ(I−DF)U + c₁²·Eᵀ(I−DF)S(I−DF)ᵀE   (Eq. 26)
+    idf = eye_z - d @ f
+    et_idf = e.T @ idf
+    m2 = v - 2.0 * c1 * (et_idf @ u) + c1 * c1 * (et_idf @ s @ et_idf.T)
+
+    total_trace = jnp.trace(m2) - n1 * beta * jnp.sum(w * m2.T)
+
+    return (
+        -(n0 * n0 / 2.0) * LOG_2PI
+        - (n0 / 2.0) * logdet
+        - (n0 * n1 / 2.0) * jnp.log(gam)
+        - total_trace / (2.0 * gam)
+    )
+
+
+def cvlr_marg(lx0, lx1, n0, n1, lam, gam):
+    """One fold of the marginal (|Z|=0) CV-LR score (Eq. 27-30)."""
+    c1 = 1.0 / (n1 * lam)
+    p = gram_tt(lx1, lx1)
+    v = gram_tt(lx0, lx0)
+    m = p.shape[0]
+    eye = jnp.eye(m, dtype=p.dtype)
+
+    logdet, dchk = _chol_logdet_inv(eye + c1 * p)
+    vp = v @ p
+    tr_vp = jnp.trace(vp)
+    tr_vpdp = jnp.sum((vp @ dchk) * p.T)
+    trace_total = jnp.trace(v) - (tr_vp - c1 * tr_vpdp) / (n1 * gam)
+
+    return (
+        -(n0 * n0 / 2.0) * LOG_2PI
+        - (n0 / 2.0) * logdet
+        - (n0 * n1 / 2.0) * jnp.log(gam)
+        - trace_total / (2.0 * gam)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exact CV (the O(n³) baseline), computed end-to-end on device: RBF
+# kernels from the L1 Pallas kernel, train-mean centering, Eq. 8/9.
+# ---------------------------------------------------------------------------
+
+
+def _centered_blocks(x0, x1, sigma):
+    """Kernel blocks of one fold, centered by the train mean:
+    returns (K̃¹¹ (n1×n1), K̃⁰¹ (n0×n1), Tr K̃⁰⁰)."""
+    n1 = x1.shape[0]
+    k11 = rbf_cross(x1, x1, sigma)
+    k01 = rbf_cross(x0, x1, sigma)
+    colmean = jnp.mean(k11, axis=0)          # (n1,)
+    grand = jnp.mean(k11)
+    rowmean01 = jnp.mean(k01, axis=1)        # (n0,)
+    k11c = k11 - colmean[:, None] - colmean[None, :] + grand
+    k01c = k01 - rowmean01[:, None] - colmean[None, :] + grand
+    # RBF diag is 1: Tr K̃⁰⁰ = Σ_i (1 − 2·rowmean01_i + grand)
+    tr_k00 = jnp.sum(1.0 - 2.0 * rowmean01 + grand)
+    del n1
+    return k11c, k01c, tr_k00
+
+
+def cv_exact_cond(x0, x1, z0, z1, sigx, sigz, lam, gam):
+    """One fold of the exact conditional CV score (Eq. 8). Row counts are
+    static; feature dims may be zero-padded."""
+    n0 = float(x0.shape[0])
+    n1 = float(x1.shape[0])
+    beta = lam * lam / gam
+
+    kx11, kx01, tr_kx00 = _centered_blocks(x0, x1, sigx)
+    kz11, kz01, _ = _centered_blocks(z0, z1, sigz)
+    nn1 = kx11.shape[0]
+    eye = jnp.eye(nn1, dtype=kx11.dtype)
+
+    _, a = _chol_logdet_inv(kz11 + n1 * lam * eye)
+    ax = a @ kx11
+    b = ax @ a
+    logdet, qinv = _chol_logdet_inv(n1 * beta * b + eye)
+    c = a @ qinv @ a
+
+    t1 = tr_kx00
+    zb = kz01 @ b
+    t2 = jnp.sum(zb * kz01)
+    t3 = jnp.sum((kx01 @ a) * kz01)
+    xc = kx01 @ c
+    t4 = jnp.sum(xc * kx01)
+    zax = kz01 @ a @ kx11
+    t5 = jnp.sum((zax @ c) * zax)
+    t6 = jnp.sum((xc @ kx11 @ a) * kz01)
+    trace_total = t1 + t2 - 2 * t3 - n1 * beta * t4 - n1 * beta * t5 + 2 * n1 * beta * t6
+
+    return (
+        -(n0 * n0 / 2.0) * LOG_2PI
+        - (n0 / 2.0) * logdet
+        - (n0 * n1 / 2.0) * jnp.log(gam)
+        - trace_total / (2.0 * gam)
+    )
+
+
+def cv_exact_marg(x0, x1, sigx, lam, gam):
+    """One fold of the exact marginal CV score (Eq. 9)."""
+    n0 = float(x0.shape[0])
+    n1 = float(x1.shape[0])
+
+    kx11, kx01, tr_kx00 = _centered_blocks(x0, x1, sigx)
+    nn1 = kx11.shape[0]
+    eye = jnp.eye(nn1, dtype=kx11.dtype)
+
+    logdet, bchk = _chol_logdet_inv(eye + kx11 / (n1 * lam))
+    t2 = jnp.sum((kx01 @ bchk) * kx01)
+    trace_total = tr_kx00 - t2 / (n1 * gam)
+
+    return (
+        -(n0 * n0 / 2.0) * LOG_2PI
+        - (n0 / 2.0) * logdet
+        - (n0 * n1 / 2.0) * jnp.log(gam)
+        - trace_total / (2.0 * gam)
+    )

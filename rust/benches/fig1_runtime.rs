@@ -1,0 +1,116 @@
+//! Fig. 1 — runtime of a single CV vs CV-LR local-score evaluation,
+//! continuous & discrete data, |Z| ∈ {0, 6}, across sample sizes.
+//!
+//! Paper shape to reproduce: CV grows ~n³ while CV-LR stays ~linear;
+//! the speedup ratio explodes with n, largest for discrete |Z|=0
+//! (10,000x at n=4000 in the paper) and smallest for continuous |Z|=6.
+//!
+//! ```text
+//! cargo bench --bench fig1_runtime [-- --full]
+//! ```
+//! Smoke scale caps the exact CV at n ≤ 1000 (it is the O(n³) baseline;
+//! an n = 4000 exact score takes minutes); `--full` runs the paper's
+//! n ∈ {200, 500, 1000, 2000, 4000} everywhere.
+
+use std::sync::Arc;
+
+use cvlr::bench::{BenchConfig, Report};
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::data::{networks, Dataset};
+use cvlr::score::cv_exact::CvExactScore;
+use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::folds::CvParams;
+use cvlr::score::LocalScore;
+use cvlr::util::timing::{bench_fn, fmt_secs};
+
+/// The four panels of Fig. 1.
+struct Setting {
+    name: &'static str,
+    discrete: bool,
+    cond: usize, // |Z|
+}
+
+const SETTINGS: [Setting; 4] = [
+    Setting { name: "continuous |Z|=0", discrete: false, cond: 0 },
+    Setting { name: "continuous |Z|=6", discrete: false, cond: 6 },
+    Setting { name: "discrete   |Z|=0", discrete: true, cond: 0 },
+    Setting { name: "discrete   |Z|=6", discrete: true, cond: 6 },
+];
+
+fn dataset_for(discrete: bool, n: usize, seed: u64) -> Arc<Dataset> {
+    if discrete {
+        // CHILD-style discrete data (§7.2 uses CHILD samples)
+        let net = networks::child();
+        Arc::new(networks::forward_sample(&net, n, seed))
+    } else {
+        let (ds, _) = generate(&SynthConfig {
+            n,
+            num_vars: 7,
+            density: 0.5,
+            kind: DataKind::Continuous,
+            seed,
+        });
+        Arc::new(ds)
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env(3, 5);
+    let sizes: [usize; 5] = [200, 500, 1000, 2000, 4000];
+    // exact CV cost cap on the smoke scale
+    let cv_cap = if cfg.full { usize::MAX } else { 1000 };
+
+    let mut rep = Report::new(
+        &cfg,
+        "fig1_runtime",
+        &["setting", "n", "cv_seconds", "cvlr_seconds", "speedup"],
+    );
+
+    for s in &SETTINGS {
+        for &n in &sizes {
+            let ds = dataset_for(s.discrete, n, cfg.seed);
+            let target = 0usize;
+            let parents: Vec<usize> = (1..=s.cond).collect();
+
+            // CV-LR (the paper's method) — fresh score each rep so the
+            // factor cache does not amortize across reps.
+            let lr_stats = bench_fn(1, cfg.reps, || {
+                let lr = CvLrScore::native(ds.clone());
+                let _ = lr.local_score(target, &parents);
+            });
+
+            // exact CV — O(n³); skipped above the smoke cap.
+            let cv_mean = if n <= cv_cap {
+                let st = bench_fn(0, if cfg.full { cfg.reps } else { 1 }, || {
+                    let cv = CvExactScore::new(ds.clone(), CvParams::default());
+                    let _ = cv.local_score(target, &parents);
+                });
+                Some(st.mean_s)
+            } else {
+                None
+            };
+
+            let speedup = cv_mean.map(|c| c / lr_stats.mean_s);
+            println!(
+                "{:<18} n={:<5} CV={:<10} CV-LR={:<10} speedup={}",
+                s.name,
+                n,
+                cv_mean.map(fmt_secs).unwrap_or_else(|| "-".into()),
+                fmt_secs(lr_stats.mean_s),
+                speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into())
+            );
+            rep.row(&[
+                s.name.trim().to_string(),
+                n.to_string(),
+                cv_mean.map(|x| format!("{x:.6}")).unwrap_or_default(),
+                format!("{:.6}", lr_stats.mean_s),
+                speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
+            ]);
+        }
+    }
+    rep.finish("Fig. 1 — single-score runtime, CV vs CV-LR");
+    println!(
+        "expected shape: CV ~ n³, CV-LR ~ n; largest ratios for discrete |Z|=0\n\
+         (paper: 150x at n=4000 |Z|=6; 2,000x continuous / 10,000x discrete |Z|=0)"
+    );
+}

@@ -1,0 +1,123 @@
+//! Fig. 2 / 3 / 4 — F1 and normalized SHD of recovered causal graphs on
+//! synthetic FCM data: density sweep {0.2..0.8} × data kind
+//! {continuous, mixed, multi-dim} × sample size n ∈ {200, 500, 1000} ×
+//! method {CV-LR, CV, BIC, BDeu, SC, PC, MM}.
+//!
+//! Paper shape to reproduce: CV-LR ≈ CV everywhere; kernel scores lead
+//! at high density and on multi-dim data; constraint-based methods
+//! (PC/MM) degrade as density grows; BIC/SC trail on nonlinear data.
+//!
+//! ```text
+//! cargo bench --bench fig2_4_synthetic [-- --full]
+//! ```
+//! Smoke: n = 200, reps = 3, methods {CV-LR, BIC, SC, PC}. Full: the
+//! paper grid with 20 reps and all methods (CV included — hours).
+
+use std::sync::Arc;
+
+use cvlr::bench::{mean_std, BenchConfig, Report};
+use cvlr::coordinator::{discover, DiscoveryConfig, Method};
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::graph::{normalized_shd, skeleton_f1};
+
+fn applicable(method: Method, kind: DataKind) -> bool {
+    match method {
+        // BDeu requires all-discrete data; none of the synthetic kinds
+        // is fully discrete (mixed is 50/50), matching the paper's plots
+        // where BDeu only appears on discrete networks.
+        Method::Bdeu => false,
+        // SC (Spearman BIC) is undefined for multi-dimensional variables
+        // (§7.1): skip it there.
+        Method::Sc => kind != DataKind::MultiDim,
+        // BIC assumes scalar continuous variables; on multi-dim data the
+        // paper's causal-learn BIC treats each block — our BicScore
+        // handles blocks, so keep it (it just performs poorly).
+        _ => true,
+    }
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env(2, 20);
+    let sizes: &[usize] = if cfg.full { &[200, 500, 1000] } else { &[200] };
+    let methods: &[Method] = if cfg.full {
+        &[Method::CvLr, Method::Cv, Method::Bic, Method::Sc, Method::Pc, Method::Mm]
+    } else {
+        &[Method::CvLr, Method::Bic, Method::Sc, Method::Pc]
+    };
+    let kinds = [
+        (DataKind::Continuous, "continuous"),
+        (DataKind::Mixed, "mixed"),
+        (DataKind::MultiDim, "multidim"),
+    ];
+    let densities = [0.2, 0.4, 0.6, 0.8];
+
+    let mut rep = Report::new(
+        &cfg,
+        "fig2_4_synthetic",
+        &["n", "kind", "density", "method", "f1_mean", "f1_std", "shd_mean", "shd_std", "secs_mean"],
+    );
+
+    for &n in sizes {
+        for (kind, kname) in kinds {
+            for &density in &densities {
+                for &method in methods {
+                    if !applicable(method, kind) {
+                        continue;
+                    }
+                    let mut f1s = vec![];
+                    let mut shds = vec![];
+                    let mut secs = vec![];
+                    for r in 0..cfg.reps {
+                        let (ds, dag) = generate(&SynthConfig {
+                            n,
+                            num_vars: 7,
+                            density,
+                            kind,
+                            seed: cfg.seed + 131 * r as u64,
+                        });
+                        match discover(
+                            Arc::new(ds),
+                            &DiscoveryConfig { method, ..Default::default() },
+                        ) {
+                            Ok(out) => {
+                                f1s.push(skeleton_f1(&out.cpdag, &dag));
+                                shds.push(normalized_shd(&out.cpdag, &dag));
+                                secs.push(out.seconds);
+                            }
+                            Err(e) => eprintln!(
+                                "  {} failed on {kname} density {density}: {e}",
+                                method.name()
+                            ),
+                        }
+                    }
+                    if f1s.is_empty() {
+                        continue;
+                    }
+                    let (f1m, f1s_) = mean_std(&f1s);
+                    let (shm, shs) = mean_std(&shds);
+                    let (tm, _) = mean_std(&secs);
+                    println!(
+                        "n={n:<5} {kname:<10} density={density:.1} {:<6} F1={f1m:.3}±{f1s_:.3} SHD={shm:.3}±{shs:.3} {tm:.2}s",
+                        method.name()
+                    );
+                    rep.row(&[
+                        n.to_string(),
+                        kname.to_string(),
+                        format!("{density:.1}"),
+                        method.name().to_string(),
+                        format!("{f1m:.4}"),
+                        format!("{f1s_:.4}"),
+                        format!("{shm:.4}"),
+                        format!("{shs:.4}"),
+                        format!("{tm:.3}"),
+                    ]);
+                }
+            }
+        }
+    }
+    rep.finish("Fig. 2-4 — synthetic-data accuracy sweep");
+    println!(
+        "expected shape: CV-LR ≈ CV; kernel scores lead at high density and\n\
+         multi-dim data; PC/MM degrade with density; BIC/SC trail on nonlinear data"
+    );
+}

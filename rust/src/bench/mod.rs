@@ -1,0 +1,121 @@
+//! Shared bench-harness support for the experiment drivers under
+//! `rust/benches/` (criterion is unavailable offline; each bench is a
+//! `harness = false` binary that prints the paper-shaped table and
+//! writes a CSV under `results/`).
+//!
+//! Conventions:
+//!
+//! * every bench accepts `--full` for paper-scale parameters; the
+//!   default is a smoke scale that finishes in minutes on one core;
+//! * `--reps N` overrides the repetition count, `--seed S` the base
+//!   seed, `--out DIR` the results directory;
+//! * rows go to stdout as a fixed-width table *and* to
+//!   `results/<bench>.csv` for plotting.
+
+use crate::util::cli::Args;
+use crate::util::csv::{CsvWriter, Table};
+
+/// Common bench configuration parsed from argv.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Paper-scale parameters instead of the smoke scale.
+    pub full: bool,
+    /// Repetitions per cell (20 in the paper; smoke default varies).
+    pub reps: usize,
+    /// Base seed; rep r of cell c uses `seed + r` forked per cell.
+    pub seed: u64,
+    /// Output directory for CSV results.
+    pub out_dir: String,
+    /// Raw args for bench-specific options.
+    pub args: Args,
+}
+
+impl BenchConfig {
+    /// Parse from the process environment. `default_reps` applies to
+    /// the smoke scale; `--full` switches to `full_reps`.
+    pub fn from_env(default_reps: usize, full_reps: usize) -> BenchConfig {
+        let args = Args::from_env();
+        let full = args.flag("full");
+        let reps = args.usize_or("reps", if full { full_reps } else { default_reps });
+        BenchConfig {
+            full,
+            reps,
+            seed: args.u64_or("seed", 7),
+            out_dir: args.get_or("out", "results"),
+            args,
+        }
+    }
+
+    /// CSV writer for `<out_dir>/<name>.csv`.
+    pub fn csv(&self, name: &str, header: &[&str]) -> CsvWriter {
+        let path = format!("{}/{}.csv", self.out_dir, name);
+        CsvWriter::create(&path, header)
+            .unwrap_or_else(|e| panic!("cannot create {path}: {e}"))
+    }
+}
+
+/// Accumulates rows for stdout rendering and CSV output simultaneously.
+pub struct Report {
+    table: Table,
+    csv: CsvWriter,
+}
+
+impl Report {
+    pub fn new(cfg: &BenchConfig, name: &str, header: &[&str]) -> Report {
+        Report { table: Table::new(header), csv: cfg.csv(name, header) }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        self.table.row(fields);
+        self.csv.row(fields).expect("csv write");
+    }
+
+    /// Render the table to stdout.
+    pub fn finish(self, title: &str) {
+        println!("\n== {title} ==");
+        println!("{}", self.table.render());
+    }
+}
+
+/// Mean and sample standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = if xs.len() > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0)
+    } else {
+        0.0
+    };
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+
+    #[test]
+    fn report_writes_csv() {
+        let dir = std::env::temp_dir().join("cvlr_bench_test");
+        let cfg = BenchConfig {
+            full: false,
+            reps: 1,
+            seed: 0,
+            out_dir: dir.to_string_lossy().to_string(),
+            args: Args::default(),
+        };
+        let mut rep = Report::new(&cfg, "unit", &["a", "b"]);
+        rep.row(&["1".into(), "2".into()]);
+        rep.finish("unit");
+        let body = std::fs::read_to_string(dir.join("unit.csv")).unwrap();
+        assert_eq!(body.trim(), "a,b\n1,2");
+    }
+}

@@ -1,0 +1,236 @@
+//! Kernel-based conditional independence test (KCI, Zhang et al. 2011),
+//! as used by the PC and MM-MB baselines in §7.1.
+//!
+//! * Unconditional: statistic `Tr(K̃ₓ K̃_y)` with the gamma approximation
+//!   of the null (mean/variance matched from kernel traces).
+//! * Conditional: residualized kernels `K̈ = R_z K̃ R_z` with
+//!   `R_z = ε(K̃_z + εI)⁻¹`, statistic `Tr(K̈ₓ K̈_y)`, null approximated by
+//!   a gamma fit to the weighted-chi-square spectrum (eigenvalue products
+//!   of the residual kernels) — the `approx=True` path of the reference
+//!   implementation. X is augmented with Z/2 before computing K̃ₓ, as in
+//!   the reference.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::data::Dataset;
+use crate::kernel::{center_gram, gram, median_heuristic, Kernel};
+use crate::linalg::{sym_eig, Cholesky, Mat};
+use crate::util::special::gamma_sf;
+
+/// A conditional-independence test over dataset variables.
+pub trait CiTest: Send + Sync {
+    /// p-value for X_i ⊥ X_j | X_S.
+    fn pvalue(&self, i: usize, j: usize, cond: &[usize]) -> f64;
+    fn num_vars(&self) -> usize;
+}
+
+/// KCI test with p-value caching.
+pub struct Kci {
+    pub ds: Arc<Dataset>,
+    /// Ridge ε of the residualizing operator R_z (reference: 1e-3).
+    pub epsilon: f64,
+    /// Kernel width factor over the median distance (PC setting: 1.0).
+    pub width_factor: f64,
+    cache: Mutex<HashMap<(usize, usize, Vec<usize>), f64>>,
+    /// Test-invocation counter (coordinator metrics).
+    calls: Mutex<u64>,
+}
+
+impl Kci {
+    pub fn new(ds: Arc<Dataset>) -> Kci {
+        Kci {
+            ds,
+            epsilon: 1e-3,
+            width_factor: 1.0,
+            cache: Mutex::new(HashMap::new()),
+            calls: Mutex::new(0),
+        }
+    }
+
+    pub fn calls(&self) -> u64 {
+        *self.calls.lock().unwrap()
+    }
+
+    fn centered_kernel(&self, block: &Mat) -> Mat {
+        let k = Kernel::Rbf { sigma: median_heuristic(block, self.width_factor) };
+        center_gram(&gram(k, block))
+    }
+
+    /// Unconditional KCI via the gamma approximation.
+    fn test_unconditional(&self, x: &Mat, y: &Mat) -> f64 {
+        let n = x.rows as f64;
+        let kx = self.centered_kernel(x);
+        let ky = self.centered_kernel(y);
+        let sta = kx.frob_dot(&ky); // Tr(K̃x K̃y) — both symmetric
+        let mean = kx.trace() * ky.trace() / n;
+        let var = 2.0 * kx.frob_dot(&kx) * ky.frob_dot(&ky) / (n * n);
+        if mean <= 0.0 || var <= 0.0 {
+            return 1.0;
+        }
+        let k_shape = mean * mean / var;
+        let theta = var / mean;
+        gamma_sf(sta, k_shape, theta).clamp(0.0, 1.0)
+    }
+
+    /// Conditional KCI via residual kernels + spectral gamma fit.
+    fn test_conditional(&self, x: &Mat, y: &Mat, z: &Mat) -> f64 {
+        let n = x.rows;
+        // augment x with z/2 (reference implementation)
+        let xz = x.hcat(&z.scale(0.5));
+        let kx = self.centered_kernel(&xz);
+        let ky = self.centered_kernel(y);
+        let kz = self.centered_kernel(z);
+
+        // R_z = ε (K̃_z + εI)⁻¹
+        let eps = self.epsilon * n as f64 * 1e-0; // scale-free enough; ref uses fixed 1e-3·I on normalized kernels
+        let rz = Cholesky::new(&kz.add_diag(eps))
+            .expect("K̃z + εI SPD")
+            .inverse()
+            .scale(eps);
+        let kxr = rz.matmul(&kx).matmul(&rz);
+        let kyr = rz.matmul(&ky).matmul(&rz);
+        let sta = kxr.frob_dot(&kyr);
+
+        // spectral gamma fit: eigenvalue products of the residual kernels
+        let (wx, vx) = sym_eig(&kxr);
+        let (wy, vy) = sym_eig(&kyr);
+        let thresh_x = wx.first().cloned().unwrap_or(0.0) * 1e-5;
+        let thresh_y = wy.first().cloned().unwrap_or(0.0) * 1e-5;
+        let keep = |w: &[f64], t: f64, cap: usize| -> Vec<usize> {
+            w.iter().enumerate().filter(|(_, &v)| v > t && v > 0.0).map(|(i, _)| i).take(cap).collect()
+        };
+        // cap products so uu has at most ~512 columns
+        let ix = keep(&wx, thresh_x, 24);
+        let iy = keep(&wy, thresh_y, 24);
+        if ix.is_empty() || iy.is_empty() {
+            return 1.0;
+        }
+        // uu columns: sqrt(wx_i wy_j) * (vx_i ∘ vy_j)
+        let cols = ix.len() * iy.len();
+        let mut uu = Mat::zeros(n, cols);
+        let mut c = 0;
+        for &i in &ix {
+            for &j in &iy {
+                let s = (wx[i] * wy[j]).sqrt();
+                for r in 0..n {
+                    uu[(r, c)] = s * vx[(r, i)] * vy[(r, j)];
+                }
+                c += 1;
+            }
+        }
+        // uu_prod = uu uuᵀ; we only need tr(P) and tr(P²):
+        // tr(P) = ‖uu‖_F²; tr(P²) = ‖uuᵀuu‖_F².
+        let gram_small = uu.t_matmul(&uu); // cols×cols
+        let mean = gram_small.trace();
+        let var = 2.0 * gram_small.frob_dot(&gram_small);
+        if mean <= 0.0 || var <= 0.0 {
+            return 1.0;
+        }
+        let k_shape = mean * mean / var;
+        let theta = var / mean;
+        gamma_sf(sta, k_shape, theta).clamp(0.0, 1.0)
+    }
+}
+
+impl CiTest for Kci {
+    fn pvalue(&self, i: usize, j: usize, cond: &[usize]) -> f64 {
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        let mut key_cond: Vec<usize> = cond.to_vec();
+        key_cond.sort_unstable();
+        let key = (a, b, key_cond.clone());
+        if let Some(&p) = self.cache.lock().unwrap().get(&key) {
+            return p;
+        }
+        *self.calls.lock().unwrap() += 1;
+        let x = self.ds.block(a);
+        let y = self.ds.block(b);
+        let p = if key_cond.is_empty() {
+            self.test_unconditional(&x, &y)
+        } else {
+            let z = self.ds.block_multi(&key_cond);
+            self.test_conditional(&x, &y, &z)
+        };
+        self.cache.lock().unwrap().insert(key, p);
+        p
+    }
+
+    fn num_vars(&self) -> usize {
+        self.ds.d()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn tri_ds(n: usize, seed: u64) -> Arc<Dataset> {
+        // X → Y → W chain plus independent V:
+        let mut rng = Pcg64::new(seed);
+        let mut data = Mat::zeros(n, 4);
+        for r in 0..n {
+            let x = rng.normal();
+            let y = (1.5 * x).tanh() + 0.3 * rng.normal();
+            let w = 1.2 * y + 0.3 * rng.normal();
+            let v = rng.normal();
+            data[(r, 0)] = x;
+            data[(r, 1)] = y;
+            data[(r, 2)] = w;
+            data[(r, 3)] = v;
+        }
+        Arc::new(Dataset::from_columns(data, &[false; 4]))
+    }
+
+    #[test]
+    fn detects_marginal_dependence() {
+        let kci = Kci::new(tri_ds(200, 1));
+        assert!(kci.pvalue(0, 1, &[]) < 0.01, "X,Y strongly dependent");
+        assert!(kci.pvalue(0, 2, &[]) < 0.05, "X,W dependent through Y");
+    }
+
+    #[test]
+    fn accepts_marginal_independence() {
+        let kci = Kci::new(tri_ds(200, 2));
+        let p = kci.pvalue(0, 3, &[]);
+        assert!(p > 0.05, "independent pair should not be rejected: p={p}");
+    }
+
+    #[test]
+    fn conditional_independence_given_mediator() {
+        let kci = Kci::new(tri_ds(300, 3));
+        let p_cond = kci.pvalue(0, 2, &[1]);
+        assert!(p_cond > 0.05, "X ⊥ W | Y must hold: p={p_cond}");
+        let p_dep = kci.pvalue(0, 1, &[3]);
+        assert!(p_dep < 0.05, "X,Y dependent given irrelevant V: p={p_dep}");
+    }
+
+    #[test]
+    fn unconditional_null_calibration() {
+        // p-values under independence should not be concentrated near 0
+        let mut rejections = 0;
+        for seed in 0..20 {
+            let mut rng = Pcg64::new(1000 + seed);
+            let n = 100;
+            let mut data = Mat::zeros(n, 2);
+            for v in &mut data.data {
+                *v = rng.normal();
+            }
+            let ds = Arc::new(Dataset::from_columns(data, &[false, false]));
+            let kci = Kci::new(ds);
+            if kci.pvalue(0, 1, &[]) < 0.05 {
+                rejections += 1;
+            }
+        }
+        assert!(rejections <= 4, "type-I error too high: {rejections}/20");
+    }
+
+    #[test]
+    fn cache_symmetric_in_arguments() {
+        let kci = Kci::new(tri_ds(100, 4));
+        let p1 = kci.pvalue(0, 1, &[2]);
+        let p2 = kci.pvalue(1, 0, &[2]);
+        assert_eq!(p1, p2);
+        assert_eq!(kci.calls(), 1, "second call must hit the cache");
+    }
+}

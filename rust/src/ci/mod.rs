@@ -1,0 +1,5 @@
+//! Conditional-independence testing for the constraint-based baselines.
+
+pub mod kci;
+
+pub use kci::{CiTest, Kci};

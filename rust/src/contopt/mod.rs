@@ -1,0 +1,99 @@
+//! Continuous-optimization causal discovery baselines (paper App. B.2
+//! Table 2 / B.3 Table 3):
+//!
+//! * [`notears`] — linear NOTEARS (Zheng et al. 2018): least squares +
+//!   ℓ1 with the tr(e^{W∘W})−d acyclicity function, augmented
+//!   Lagrangian outer loop, Adam inner loop;
+//! * [`dagma`] — DAGMA (Bello et al. 2022): the −logdet(sI−W∘W)
+//!   acyclicity function on a central path;
+//! * [`grandag`] — GraN-DAG-lite: per-variable one-hidden-layer MLPs
+//!   with hand-written backprop, acyclicity on the input-weight path
+//!   matrix (a faithful small-scale stand-in for the pytorch original —
+//!   see DESIGN.md §7);
+//! * [`score_method`] — SCORE (Rolland et al. 2022): Stein-estimated
+//!   score-Jacobian leaf ordering + regression pruning.
+
+pub mod adam;
+pub mod notears;
+pub mod dagma;
+pub mod grandag;
+pub mod score_method;
+
+use crate::graph::Dag;
+use crate::linalg::Mat;
+
+/// Threshold a weight matrix into a DAG: zero the diagonal, keep
+/// |w| > thresh, and if cycles remain drop the weakest edges until
+/// acyclic (standard NOTEARS post-processing).
+pub fn threshold_to_dag(w: &Mat, thresh: f64) -> Dag {
+    let d = w.rows;
+    let mut edges: Vec<(usize, usize, f64)> = vec![];
+    for i in 0..d {
+        for j in 0..d {
+            if i != j && w[(i, j)].abs() > thresh {
+                edges.push((i, j, w[(i, j)].abs()));
+            }
+        }
+    }
+    // strongest-first greedy insertion keeps the graph acyclic
+    edges.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let mut g = Dag::new(d);
+    for (i, j, _) in edges {
+        if !g.creates_cycle(i, j) {
+            g.add_edge(i, j);
+        }
+    }
+    g
+}
+
+/// Standardize a dataset matrix column-wise (zero mean, unit variance).
+pub fn standardized(x: &Mat) -> Mat {
+    let mut out = x.clone();
+    for c in 0..x.cols {
+        let mut mean = 0.0;
+        for r in 0..x.rows {
+            mean += x[(r, c)];
+        }
+        mean /= x.rows as f64;
+        let mut var = 0.0;
+        for r in 0..x.rows {
+            let d = x[(r, c)] - mean;
+            var += d * d;
+        }
+        let sd = (var / x.rows as f64).sqrt().max(1e-12);
+        for r in 0..x.rows {
+            out[(r, c)] = (x[(r, c)] - mean) / sd;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_keeps_strong_edges_acyclic() {
+        let mut w = Mat::zeros(3, 3);
+        w[(0, 1)] = 0.9;
+        w[(1, 2)] = 0.8;
+        w[(2, 0)] = 0.5; // would close a cycle — weakest, dropped
+        w[(1, 0)] = 0.05; // below threshold
+        let g = threshold_to_dag(&w, 0.3);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
+        assert!(!g.has_edge(2, 0));
+        assert!(g.topological_order().is_some());
+    }
+
+    #[test]
+    fn standardized_columns() {
+        let x = Mat::from_rows(&[&[1.0, 10.0], &[3.0, 30.0], &[5.0, 20.0]]);
+        let s = standardized(&x);
+        for c in 0..2 {
+            let mean: f64 = (0..3).map(|r| s[(r, c)]).sum::<f64>() / 3.0;
+            let var: f64 = (0..3).map(|r| s[(r, c)] * s[(r, c)]).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Linear NOTEARS (Zheng et al., NeurIPS 2018).
+//!
+//! min_W  (1/2n)‖X − XW‖²_F + λ₁‖W‖₁   s.t.  h(W) = tr(e^{W∘W}) − d = 0
+//!
+//! solved by the augmented Lagrangian
+//! L(W) = loss + α·h + (ρ/2)·h², ρ escalated until h < h_tol, with Adam
+//! as the (unconstrained) inner optimizer. Post-processing thresholds
+//! |W| > w_thresh into a DAG. Hyper-parameters follow App. B.2, except
+//! h_tol: the reference uses L-BFGS-B and h_tol = 1e-8; Adam's
+//! per-coordinate normalization amplifies the vanishing h-gradient at
+//! extreme ρ (it erases converged weights), so we stop at h_tol = 5e-4,
+//! where the graph-relevant weights are stable and the residual cycle
+//! mass stays far below the 0.3 edge threshold.
+
+use super::adam::Adam;
+use super::{standardized, threshold_to_dag};
+use crate::graph::Dag;
+use crate::linalg::{expm, Mat};
+
+#[derive(Clone, Copy, Debug)]
+pub struct NotearsConfig {
+    pub lambda1: f64,
+    pub w_thresh: f64,
+    pub h_tol: f64,
+    pub rho_max: f64,
+    pub inner_iters: usize,
+    pub outer_iters: usize,
+    pub lr: f64,
+}
+
+impl Default for NotearsConfig {
+    fn default() -> Self {
+        NotearsConfig {
+            lambda1: 0.01,
+            w_thresh: 0.3,
+            h_tol: 5e-4,
+            rho_max: 1e8,
+            inner_iters: 800,
+            outer_iters: 12,
+            lr: 0.03,
+        }
+    }
+}
+
+/// h(W) = tr(e^{W∘W}) − d and its gradient (e^{W∘W})ᵀ ∘ 2W.
+pub fn acyclicity(w: &Mat) -> (f64, Mat) {
+    let d = w.rows;
+    let mut ww = w.clone();
+    for x in &mut ww.data {
+        *x = *x * *x;
+    }
+    let e = expm(&ww);
+    let h = e.trace() - d as f64;
+    let et = e.transpose();
+    let mut grad = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            grad[(i, j)] = et[(i, j)] * 2.0 * w[(i, j)];
+        }
+    }
+    (h, grad)
+}
+
+/// (loss, gradient) of the least-squares term.
+fn ls_loss(x: &Mat, w: &Mat) -> (f64, Mat) {
+    let n = x.rows as f64;
+    let xw = x.matmul(w);
+    let resid = x - &xw; // n×d
+    let loss = 0.5 / n * resid.data.iter().map(|v| v * v).sum::<f64>();
+    // ∇ = −(1/n) Xᵀ (X − XW)
+    let grad = x.t_matmul(&resid).scale(-1.0 / n);
+    (loss, grad)
+}
+
+/// Run NOTEARS on an n×d sample matrix; returns the estimated DAG and
+/// the final weight matrix.
+pub fn notears(x_raw: &Mat, cfg: &NotearsConfig) -> (Dag, Mat) {
+    let x = standardized(x_raw);
+    let d = x.cols;
+    let mut w = Mat::zeros(d, d);
+    let mut alpha = 0.0;
+    let mut rho = 1.0;
+    let mut h_prev = f64::INFINITY;
+
+    for _outer in 0..cfg.outer_iters {
+        // inner minimization of the augmented Lagrangian at (α, ρ)
+        let mut opt = Adam::new(d * d, cfg.lr);
+        for _ in 0..cfg.inner_iters {
+            let (_, g_ls) = ls_loss(&x, &w);
+            let (h, g_h) = acyclicity(&w);
+            let mut grad = vec![0.0; d * d];
+            for i in 0..d * d {
+                let l1g = cfg.lambda1 * w.data[i].signum();
+                grad[i] = g_ls.data[i] + (alpha + rho * h) * g_h.data[i] + l1g;
+            }
+            // keep the diagonal pinned at zero
+            for i in 0..d {
+                grad[i * d + i] = 0.0;
+            }
+            opt.step(&mut w.data, &grad);
+            for i in 0..d {
+                w.data[i * d + i] = 0.0;
+            }
+        }
+        let (h_val, _) = acyclicity(&w);
+        if h_val < cfg.h_tol || rho > cfg.rho_max {
+            break;
+        }
+        alpha += rho * h_val;
+        // standard NOTEARS continuation: escalate ρ only while the
+        // constraint violation is not shrinking fast enough
+        if h_val > 0.25 * h_prev {
+            rho *= 10.0;
+        }
+        h_prev = h_val;
+    }
+    (threshold_to_dag(&w, cfg.w_thresh), w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn linear_sem(n: usize, seed: u64) -> (Mat, Dag) {
+        // X1 → X2 → X3, X1 → X3
+        let mut rng = Pcg64::new(seed);
+        let mut x = Mat::zeros(n, 3);
+        for r in 0..n {
+            let a = rng.normal();
+            let b = 1.4 * a + 0.4 * rng.normal();
+            let c = 0.9 * b - 0.8 * a + 0.4 * rng.normal();
+            x[(r, 0)] = a;
+            x[(r, 1)] = b;
+            x[(r, 2)] = c;
+        }
+        (x, Dag::from_edges(3, &[(0, 1), (1, 2), (0, 2)]))
+    }
+
+    #[test]
+    fn acyclicity_zero_for_dag_weights() {
+        let mut w = Mat::zeros(3, 3);
+        w[(0, 1)] = 0.5;
+        w[(1, 2)] = -0.7;
+        let (h, _) = acyclicity(&w);
+        assert!(h.abs() < 1e-10);
+    }
+
+    #[test]
+    fn acyclicity_positive_for_cycles() {
+        let mut w = Mat::zeros(2, 2);
+        w[(0, 1)] = 0.5;
+        w[(1, 0)] = 0.5;
+        let (h, g) = acyclicity(&w);
+        assert!(h > 0.01);
+        assert!(g[(0, 1)] > 0.0 && g[(1, 0)] > 0.0, "gradient pushes weights down");
+    }
+
+    #[test]
+    fn recovers_linear_sem_skeleton() {
+        let (x, truth) = linear_sem(500, 1);
+        let (dag, _w) = notears(&x, &NotearsConfig::default());
+        // skeleton recovery (orientation of 3-clique is hard for l2 loss)
+        let est: std::collections::HashSet<(usize, usize)> =
+            dag.skeleton().into_iter().collect();
+        let want: std::collections::HashSet<(usize, usize)> =
+            truth.skeleton().into_iter().collect();
+        let inter = est.intersection(&want).count();
+        assert!(inter >= 2, "at least 2 of 3 true edges found, got {inter} ({est:?})");
+        assert!(dag.topological_order().is_some());
+    }
+}

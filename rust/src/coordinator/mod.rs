@@ -1,0 +1,9 @@
+//! L3 coordinator: the score service (request routing, dedup caching,
+//! batch dispatch over a worker pool) and the discovery engine that
+//! glues datasets, scores, searches and the PJRT runtime together.
+
+pub mod service;
+pub mod engine;
+
+pub use engine::{discover, DiscoveryConfig, DiscoveryOutcome, EngineKind, Method};
+pub use service::ScoreService;

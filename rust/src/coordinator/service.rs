@@ -1,0 +1,215 @@
+//! The score service: routes local-score requests from the search to
+//! the scoring backend with request deduplication, a shared memo cache
+//! and a worker pool for batch evaluation.
+//!
+//! GES evaluates hundreds of (target, parent-set) candidates per step,
+//! with heavy overlap between steps — the service's cache turns that
+//! overlap into hits, and `score_batch` fans independent misses out
+//! over `workers` threads (each backend is `Sync`; the PJRT backend
+//! serializes device access internally, so threads help exactly when
+//! the native backend or factor construction dominates).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::score::LocalScore;
+
+/// Service metrics.
+#[derive(Default, Debug, Clone)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub evaluations: u64,
+    pub batches: u64,
+    pub eval_seconds: f64,
+}
+
+/// Memoizing, batching façade over any `LocalScore`.
+pub struct ScoreService {
+    backend: Arc<dyn LocalScore>,
+    workers: usize,
+    cache: Mutex<HashMap<(usize, Vec<usize>), f64>>,
+    requests: AtomicU64,
+    hits: AtomicU64,
+    evals: AtomicU64,
+    batches: AtomicU64,
+    eval_secs: Mutex<f64>,
+}
+
+impl ScoreService {
+    pub fn new(backend: Arc<dyn LocalScore>, workers: usize) -> ScoreService {
+        ScoreService {
+            backend,
+            workers: workers.max(1),
+            cache: Mutex::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            evals: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            eval_secs: Mutex::new(0.0),
+        }
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            cache_hits: self.hits.load(Ordering::Relaxed),
+            evaluations: self.evals.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            eval_seconds: *self.eval_secs.lock().unwrap(),
+        }
+    }
+
+    fn key(target: usize, parents: &[usize]) -> (usize, Vec<usize>) {
+        let mut p = parents.to_vec();
+        p.sort_unstable();
+        (target, p)
+    }
+
+    /// Evaluate a batch of requests: dedup, split misses across the
+    /// worker pool, fill the cache, return scores in request order.
+    pub fn score_batch(&self, reqs: &[(usize, Vec<usize>)]) -> Vec<f64> {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let keys: Vec<(usize, Vec<usize>)> =
+            reqs.iter().map(|(t, p)| Self::key(*t, p)).collect();
+
+        // collect unique misses
+        let mut misses: Vec<(usize, Vec<usize>)> = vec![];
+        {
+            let cache = self.cache.lock().unwrap();
+            let mut seen: HashMap<&(usize, Vec<usize>), ()> = HashMap::new();
+            for k in &keys {
+                if cache.contains_key(k) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else if seen.insert(k, ()).is_none() {
+                    misses.push(k.clone());
+                }
+            }
+        }
+
+        if !misses.is_empty() {
+            let sw = crate::util::Stopwatch::start();
+            let results: Vec<f64> = if self.workers <= 1 || misses.len() <= 1 {
+                misses
+                    .iter()
+                    .map(|(t, p)| self.backend.local_score(*t, p))
+                    .collect()
+            } else {
+                let chunk = misses.len().div_ceil(self.workers);
+                let backend = &self.backend;
+                let mut out = vec![0.0; misses.len()];
+                std::thread::scope(|scope| {
+                    let mut handles = vec![];
+                    for (ci, batch) in misses.chunks(chunk).enumerate() {
+                        let backend = backend.clone();
+                        handles.push((
+                            ci,
+                            scope.spawn(move || {
+                                batch
+                                    .iter()
+                                    .map(|(t, p)| backend.local_score(*t, p))
+                                    .collect::<Vec<f64>>()
+                            }),
+                        ));
+                    }
+                    for (ci, h) in handles {
+                        let vals = h.join().expect("score worker panicked");
+                        out[ci * chunk..ci * chunk + vals.len()].copy_from_slice(&vals);
+                    }
+                });
+                out
+            };
+            self.evals.fetch_add(misses.len() as u64, Ordering::Relaxed);
+            *self.eval_secs.lock().unwrap() += sw.secs();
+            let mut cache = self.cache.lock().unwrap();
+            for (k, v) in misses.into_iter().zip(results) {
+                cache.insert(k, v);
+            }
+        }
+
+        let cache = self.cache.lock().unwrap();
+        keys.iter().map(|k| cache[k]).collect()
+    }
+}
+
+impl LocalScore for ScoreService {
+    fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let key = Self::key(target, parents);
+        if let Some(&v) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v;
+        }
+        let sw = crate::util::Stopwatch::start();
+        let v = self.backend.local_score(target, &key.1);
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        *self.eval_secs.lock().unwrap() += sw.secs();
+        self.cache.lock().unwrap().insert(key, v);
+        v
+    }
+
+    fn num_vars(&self) -> usize {
+        self.backend.num_vars()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    struct SlowScore {
+        calls: AtomicUsize,
+    }
+
+    impl LocalScore for SlowScore {
+        fn local_score(&self, t: usize, p: &[usize]) -> f64 {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            t as f64 + p.len() as f64 * 0.1
+        }
+        fn num_vars(&self) -> usize {
+            5
+        }
+    }
+
+    #[test]
+    fn batch_dedups_and_caches() {
+        let svc = ScoreService::new(Arc::new(SlowScore { calls: AtomicUsize::new(0) }), 2);
+        let reqs = vec![
+            (0usize, vec![1usize]),
+            (0, vec![1]),     // duplicate
+            (1, vec![0, 2]),
+            (1, vec![2, 0]),  // same set, different order
+        ];
+        let out = svc.score_batch(&reqs);
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[2], out[3]);
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 2, "only two unique evaluations");
+        // second batch: all hits
+        let out2 = svc.score_batch(&reqs);
+        assert_eq!(out, out2);
+        assert_eq!(svc.stats().evaluations, 2);
+    }
+
+    #[test]
+    fn single_requests_cached() {
+        let svc = ScoreService::new(Arc::new(SlowScore { calls: AtomicUsize::new(0) }), 1);
+        let a = svc.local_score(2, &[4, 3]);
+        let b = svc.local_score(2, &[3, 4]);
+        assert_eq!(a, b);
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 1);
+        assert_eq!(st.cache_hits, 1);
+    }
+
+    #[test]
+    fn parallel_batch_order_preserved() {
+        let svc = ScoreService::new(Arc::new(SlowScore { calls: AtomicUsize::new(0) }), 4);
+        let reqs: Vec<(usize, Vec<usize>)> = (0..5).map(|t| (t, vec![])).collect();
+        let out = svc.score_batch(&reqs);
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,198 @@
+//! The `Dataset` type shared by every score function and search algorithm.
+
+use crate::linalg::Mat;
+
+/// One random variable = a block of columns of the sample matrix.
+#[derive(Clone, Debug)]
+pub struct Variable {
+    pub name: String,
+    /// First column of the block.
+    pub col_start: usize,
+    /// Block width (≥ 1; multi-dimensional variables have width > 1).
+    pub dim: usize,
+    /// Discrete variables enable the exact Algorithm-2 factorization and
+    /// the BDeu score.
+    pub discrete: bool,
+    /// Number of categories for discrete variables (0 for continuous).
+    pub cardinality: usize,
+}
+
+/// n samples of d variables stored as one n × D row-major matrix.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub data: Mat,
+    pub vars: Vec<Variable>,
+}
+
+impl Dataset {
+    /// Build from a matrix where each variable is a single column, with
+    /// `discrete[i]` marking discrete columns.
+    pub fn from_columns(data: Mat, discrete: &[bool]) -> Dataset {
+        assert_eq!(data.cols, discrete.len());
+        let vars = discrete
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| {
+                let card = if d {
+                    let mut vals: Vec<i64> = (0..data.rows).map(|r| data[(r, i)] as i64).collect();
+                    vals.sort();
+                    vals.dedup();
+                    vals.len()
+                } else {
+                    0
+                };
+                Variable {
+                    name: format!("X{}", i + 1),
+                    col_start: i,
+                    dim: 1,
+                    discrete: d,
+                    cardinality: card,
+                }
+            })
+            .collect();
+        Dataset { data, vars }
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.data.rows
+    }
+
+    /// Number of variables.
+    pub fn d(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// The n × dim block of variable `i`.
+    pub fn block(&self, i: usize) -> Mat {
+        let v = &self.vars[i];
+        let mut out = Mat::zeros(self.n(), v.dim);
+        for r in 0..self.n() {
+            out.row_mut(r)
+                .copy_from_slice(&self.data.row(r)[v.col_start..v.col_start + v.dim]);
+        }
+        out
+    }
+
+    /// Concatenated block of several variables (in the given order) —
+    /// the conditioning-set matrix Z for a parent set.
+    pub fn block_multi(&self, idxs: &[usize]) -> Mat {
+        let total: usize = idxs.iter().map(|&i| self.vars[i].dim).sum();
+        let mut out = Mat::zeros(self.n(), total);
+        let mut c0 = 0;
+        for &i in idxs {
+            let v = &self.vars[i];
+            for r in 0..self.n() {
+                out.row_mut(r)[c0..c0 + v.dim]
+                    .copy_from_slice(&self.data.row(r)[v.col_start..v.col_start + v.dim]);
+            }
+            c0 += v.dim;
+        }
+        out
+    }
+
+    /// Are all the given variables discrete?
+    pub fn all_discrete(&self, idxs: &[usize]) -> bool {
+        idxs.iter().all(|&i| self.vars[i].discrete)
+    }
+
+    /// Discrete level of variable `i` at row `r` (assumes integer coding).
+    pub fn level(&self, i: usize, r: usize) -> usize {
+        debug_assert!(self.vars[i].discrete);
+        self.data[(r, self.vars[i].col_start)] as usize
+    }
+
+    /// Restrict to the first `n` samples (for sample-size sweeps).
+    pub fn head(&self, n: usize) -> Dataset {
+        assert!(n <= self.n());
+        let mut data = Mat::zeros(n, self.data.cols);
+        for r in 0..n {
+            data.row_mut(r).copy_from_slice(self.data.row(r));
+        }
+        Dataset { data, vars: self.vars.clone() }
+    }
+
+    /// Z-score standardize continuous columns (in place); leaves discrete
+    /// columns untouched. Stabilizes kernel widths across mechanisms.
+    pub fn standardize(&mut self) {
+        for v in &self.vars {
+            if v.discrete {
+                continue;
+            }
+            for c in v.col_start..v.col_start + v.dim {
+                let n = self.n();
+                let mut mean = 0.0;
+                for r in 0..n {
+                    mean += self.data[(r, c)];
+                }
+                mean /= n as f64;
+                let mut var = 0.0;
+                for r in 0..n {
+                    let d = self.data[(r, c)] - mean;
+                    var += d * d;
+                }
+                var /= n as f64;
+                let sd = var.sqrt().max(1e-12);
+                for r in 0..n {
+                    self.data[(r, c)] = (self.data[(r, c)] - mean) / sd;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // 3 samples, X1 continuous (1 col), X2 discrete (1 col)
+        let data = Mat::from_rows(&[&[0.5, 1.0], &[1.5, 0.0], &[2.5, 1.0]]);
+        Dataset::from_columns(data, &[false, true])
+    }
+
+    #[test]
+    fn block_extraction() {
+        let ds = toy();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 2);
+        let b = ds.block(1);
+        assert_eq!(b.data, vec![1.0, 0.0, 1.0]);
+        assert_eq!(ds.vars[1].cardinality, 2);
+    }
+
+    #[test]
+    fn block_multi_concatenates() {
+        let ds = toy();
+        let b = ds.block_multi(&[1, 0]);
+        assert_eq!(b.cols, 2);
+        assert_eq!(b.row(0), &[1.0, 0.5]);
+    }
+
+    #[test]
+    fn all_discrete_flag() {
+        let ds = toy();
+        assert!(ds.all_discrete(&[1]));
+        assert!(!ds.all_discrete(&[0, 1]));
+        assert!(ds.all_discrete(&[]));
+    }
+
+    #[test]
+    fn head_truncates() {
+        let ds = toy();
+        let h = ds.head(2);
+        assert_eq!(h.n(), 2);
+        assert_eq!(h.d(), 2);
+    }
+
+    #[test]
+    fn standardize_continuous_only() {
+        let mut ds = toy();
+        ds.standardize();
+        let b = ds.block(0);
+        let mean: f64 = b.data.iter().sum::<f64>() / 3.0;
+        assert!(mean.abs() < 1e-12);
+        // discrete column unchanged
+        assert_eq!(ds.block(1).data, vec![1.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Datasets and data generation.
+//!
+//! * [`dataset`] — the `Dataset` type: an n×D sample matrix partitioned
+//!   into variables (column blocks; multi-dimensional variables per paper
+//!   §7.4 have width > 1), each continuous or discrete.
+//! * [`synth`] — the post-nonlinear functional causal model generator of
+//!   Appendix A.1 (continuous / mixed / multi-dimensional).
+//! * [`networks`] — the SACHS and CHILD benchmark networks with
+//!   random-CPT forward sampling, plus a continuous-SACHS SEM
+//!   (substitutions documented in DESIGN.md §7).
+
+pub mod dataset;
+pub mod synth;
+pub mod networks;
+
+pub use dataset::{Dataset, Variable};
+pub use networks::{child, forward_sample, sachs, sachs_continuous, DiscreteNetwork};
+pub use synth::{generate, random_dag, DataKind, SynthConfig};
+

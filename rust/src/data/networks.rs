@@ -1,0 +1,281 @@
+//! The SACHS and CHILD benchmark networks (§7.5) and samplers.
+//!
+//! Substitution (DESIGN.md §7): the paper samples the bnlearn datasets;
+//! offline we hard-code the published network *structures* and
+//! cardinalities and draw the CPTs from a Dirichlet prior with a fixed
+//! seed, sharpened towards deterministic rows so that the conditional
+//! dependencies are strong (as in the real networks). The continuous
+//! SACHS variant (App. B.3) is simulated as a nonlinear SEM over the
+//! same DAG with n = 853.
+
+use super::dataset::{Dataset, Variable};
+use crate::graph::dag::Dag;
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// A discrete Bayesian network: structure + per-variable cardinalities.
+pub struct DiscreteNetwork {
+    pub name: &'static str,
+    pub dag: Dag,
+    pub cards: Vec<usize>,
+    pub var_names: Vec<&'static str>,
+}
+
+/// The SACHS protein-signalling network: 11 variables, 17 edges.
+pub fn sachs() -> DiscreteNetwork {
+    // 0 Raf, 1 Mek, 2 Plcg, 3 PIP2, 4 PIP3, 5 Erk, 6 Akt, 7 PKA, 8 PKC,
+    // 9 P38, 10 Jnk  (bnlearn's consensus structure)
+    let names = ["Raf", "Mek", "Plcg", "PIP2", "PIP3", "Erk", "Akt", "PKA", "PKC", "P38", "Jnk"];
+    let edges = [
+        (8, 0),  // PKC → Raf
+        (8, 1),  // PKC → Mek
+        (8, 10), // PKC → Jnk
+        (8, 9),  // PKC → P38
+        (8, 7),  // PKC → PKA
+        (7, 0),  // PKA → Raf
+        (7, 1),  // PKA → Mek
+        (7, 5),  // PKA → Erk
+        (7, 6),  // PKA → Akt
+        (7, 10), // PKA → Jnk
+        (7, 9),  // PKA → P38
+        (0, 1),  // Raf → Mek
+        (1, 5),  // Mek → Erk
+        (5, 6),  // Erk → Akt
+        (2, 3),  // Plcg → PIP2
+        (2, 4),  // Plcg → PIP3
+        (4, 3),  // PIP3 → PIP2
+    ];
+    let dag = Dag::from_edges(11, &edges);
+    assert_eq!(dag.num_edges(), 17);
+    DiscreteNetwork { name: "SACHS", dag, cards: vec![3; 11], var_names: names.to_vec() }
+}
+
+/// The CHILD network: 20 variables, 25 edges.
+pub fn child() -> DiscreteNetwork {
+    // bnlearn CHILD structure + cardinalities
+    let names = [
+        "BirthAsphyxia", // 0 (2)
+        "Disease",       // 1 (6)
+        "Age",           // 2 (3)
+        "LVH",           // 3 (2)
+        "DuctFlow",      // 4 (3)
+        "CardiacMixing", // 5 (4)
+        "LungParench",   // 6 (3)
+        "LungFlow",      // 7 (3)
+        "Sick",          // 8 (2)
+        "LVHreport",     // 9 (2)
+        "Grunting",      // 10 (2)
+        "HypDistrib",    // 11 (2)
+        "HypoxiaInO2",   // 12 (3)
+        "CO2",           // 13 (3)
+        "ChestXray",     // 14 (5)
+        "GruntingReport",// 15 (2)
+        "LowerBodyO2",   // 16 (3)
+        "RUQO2",         // 17 (3)
+        "CO2Report",     // 18 (2)
+        "XrayReport",    // 19 (5)
+    ];
+    let cards = vec![2, 6, 3, 2, 3, 4, 3, 3, 2, 2, 2, 2, 3, 3, 5, 2, 3, 3, 2, 5];
+    let edges = [
+        (0, 1),   // BirthAsphyxia → Disease
+        (1, 2),   // Disease → Age
+        (1, 3),   // Disease → LVH
+        (1, 4),   // Disease → DuctFlow
+        (1, 5),   // Disease → CardiacMixing
+        (1, 6),   // Disease → LungParench
+        (1, 7),   // Disease → LungFlow
+        (1, 8),   // Disease → Sick
+        (3, 9),   // LVH → LVHreport
+        (4, 11),  // DuctFlow → HypDistrib
+        (5, 11),  // CardiacMixing → HypDistrib
+        (5, 12),  // CardiacMixing → HypoxiaInO2
+        (6, 12),  // LungParench → HypoxiaInO2
+        (6, 13),  // LungParench → CO2
+        (6, 14),  // LungParench → ChestXray
+        (6, 10),  // LungParench → Grunting
+        (7, 14),  // LungFlow → ChestXray
+        (8, 10),  // Sick → Grunting
+        (8, 2),   // Sick → Age
+        (10, 15), // Grunting → GruntingReport
+        (11, 16), // HypDistrib → LowerBodyO2
+        (12, 16), // HypoxiaInO2 → LowerBodyO2
+        (12, 17), // HypoxiaInO2 → RUQO2
+        (13, 18), // CO2 → CO2Report
+        (14, 19), // ChestXray → XrayReport
+    ];
+    let dag = Dag::from_edges(20, &edges);
+    assert_eq!(dag.num_edges(), 25);
+    DiscreteNetwork { name: "CHILD", dag, cards, var_names: names.to_vec() }
+}
+
+/// Random CPTs from a sharpened Dirichlet prior (one strongly-preferred
+/// outcome per parent configuration — mimicking the near-deterministic
+/// rows of the real networks) and forward sampling in topological order.
+pub fn forward_sample(net: &DiscreteNetwork, n: usize, seed: u64) -> Dataset {
+    let d = net.dag.d;
+    let mut rng = Pcg64::new(seed ^ 0xBEEF);
+    let topo = net.dag.topological_order().unwrap();
+
+    // CPTs: per variable, a table of parent-config → distribution
+    let mut cpts: Vec<Vec<Vec<f64>>> = Vec::with_capacity(d);
+    for v in 0..d {
+        let parents = net.dag.parents(v);
+        let q: usize = parents.iter().map(|&p| net.cards[p]).product::<usize>().max(1);
+        let mut table = Vec::with_capacity(q);
+        for _ in 0..q {
+            // Dirichlet(0.5) + sharpening: boost one random outcome
+            let mut probs = rng.dirichlet(net.cards[v], 0.5);
+            let fav = rng.below(net.cards[v]);
+            probs[fav] += 1.5;
+            let s: f64 = probs.iter().sum();
+            for p in &mut probs {
+                *p /= s;
+            }
+            table.push(probs);
+        }
+        cpts.push(table);
+    }
+
+    let mut data = Mat::zeros(n, d);
+    for r in 0..n {
+        for &v in &topo {
+            let parents = net.dag.parents(v);
+            let mut cfg_idx = 0usize;
+            for &p in &parents {
+                cfg_idx = cfg_idx * net.cards[p] + data[(r, p)] as usize;
+            }
+            let level = rng.categorical(&cpts[v][cfg_idx]);
+            data[(r, v)] = level as f64;
+        }
+    }
+
+    let vars = (0..d)
+        .map(|i| Variable {
+            name: net.var_names[i].to_string(),
+            col_start: i,
+            dim: 1,
+            discrete: true,
+            cardinality: net.cards[i],
+        })
+        .collect();
+    Dataset { data, vars }
+}
+
+/// Continuous SACHS substitute (App. B.3): nonlinear SEM over the SACHS
+/// DAG, n samples (the paper's dataset has n = 853).
+pub fn sachs_continuous(n: usize, seed: u64) -> (Dataset, Dag) {
+    let net = sachs();
+    let mut rng = Pcg64::new(seed ^ 0xCAFE);
+    let topo = net.dag.topological_order().unwrap();
+    let d = net.dag.d;
+    // per-edge weights and per-node mechanism
+    let mut w = vec![0.0; d * d];
+    for (i, j) in net.dag.edges() {
+        w[i * d + j] = rng.uniform_in(0.7, 1.3) * if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+    }
+    let mech: Vec<usize> = (0..d).map(|_| rng.below(3)).collect();
+    let mut data = Mat::zeros(n, d);
+    for r in 0..n {
+        for &v in &topo {
+            let parents = net.dag.parents(v);
+            let val = if parents.is_empty() {
+                rng.normal()
+            } else {
+                let s: f64 = parents.iter().map(|&p| w[p * d + v] * data[(r, p)]).sum();
+                let f = match mech[v] {
+                    0 => s.tanh(),
+                    1 => s.sin(),
+                    _ => s,
+                };
+                f + 0.3 * rng.normal()
+            };
+            data[(r, v)] = val;
+        }
+    }
+    let mut ds = Dataset::from_columns(data, &vec![false; d]);
+    ds.standardize();
+    (ds, net.dag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sachs_structure() {
+        let net = sachs();
+        assert_eq!(net.dag.d, 11);
+        assert_eq!(net.dag.num_edges(), 17);
+        assert!(net.dag.topological_order().is_some());
+    }
+
+    #[test]
+    fn child_structure() {
+        let net = child();
+        assert_eq!(net.dag.d, 20);
+        assert_eq!(net.dag.num_edges(), 25);
+        assert_eq!(net.cards.len(), 20);
+        assert!(net.dag.topological_order().is_some());
+        assert!(net.cards.iter().all(|&c| (2..=6).contains(&c)));
+    }
+
+    #[test]
+    fn forward_sampling_respects_cardinalities() {
+        let net = child();
+        let ds = forward_sample(&net, 300, 1);
+        assert_eq!(ds.n(), 300);
+        assert_eq!(ds.d(), 20);
+        for (i, v) in ds.vars.iter().enumerate() {
+            assert!(v.discrete);
+            for r in 0..ds.n() {
+                let lvl = ds.level(i, r);
+                assert!(lvl < net.cards[i], "level {lvl} out of range for var {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_sampling_creates_dependence() {
+        // child of an edge should be statistically dependent on parent
+        let net = sachs();
+        let ds = forward_sample(&net, 2000, 2);
+        // PKC → PKA edge (8 → 7): mutual information proxy via Spearman on codes
+        let a: Vec<f64> = (0..ds.n()).map(|r| ds.data[(r, 8)]).collect();
+        let b: Vec<f64> = (0..ds.n()).map(|r| ds.data[(r, 7)]).collect();
+        // chi-square style: compare joint vs product on a coarse table
+        let mut joint = [[0f64; 3]; 3];
+        for r in 0..ds.n() {
+            joint[a[r] as usize][b[r] as usize] += 1.0;
+        }
+        let n = ds.n() as f64;
+        let mut chi2 = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                let pi: f64 = joint[i].iter().sum::<f64>() / n;
+                let pj: f64 = (0..3).map(|k| joint[k][j]).sum::<f64>() / n;
+                let e = pi * pj * n;
+                if e > 0.0 {
+                    chi2 += (joint[i][j] - e).powi(2) / e;
+                }
+            }
+        }
+        assert!(chi2 > 20.0, "PKC→PKA dependence too weak: chi2={chi2}");
+    }
+
+    #[test]
+    fn continuous_sachs_shape() {
+        let (ds, dag) = sachs_continuous(853, 1);
+        assert_eq!(ds.n(), 853);
+        assert_eq!(ds.d(), 11);
+        assert_eq!(dag.num_edges(), 17);
+        assert!(ds.data.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sampling_deterministic() {
+        let net = sachs();
+        let a = forward_sample(&net, 50, 9);
+        let b = forward_sample(&net, 50, 9);
+        assert_eq!(a.data.data, b.data.data);
+    }
+}

@@ -1,0 +1,157 @@
+//! Directed acyclic graphs over d variables (d ≤ a few dozen — dense
+//! adjacency-matrix representation).
+
+/// DAG as a dense adjacency matrix: `adj[i][j]` ⇔ edge i → j.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Dag {
+    pub d: usize,
+    adj: Vec<bool>,
+}
+
+impl Dag {
+    pub fn new(d: usize) -> Dag {
+        Dag { d, adj: vec![false; d * d] }
+    }
+
+    /// Build from an edge list; panics if a cycle results.
+    pub fn from_edges(d: usize, edges: &[(usize, usize)]) -> Dag {
+        let mut g = Dag::new(d);
+        for &(i, j) in edges {
+            g.add_edge(i, j);
+        }
+        assert!(g.topological_order().is_some(), "edge list contains a cycle");
+        g
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i * self.d + j]
+    }
+
+    pub fn add_edge(&mut self, i: usize, j: usize) {
+        assert_ne!(i, j);
+        self.adj[i * self.d + j] = true;
+    }
+
+    pub fn remove_edge(&mut self, i: usize, j: usize) {
+        self.adj[i * self.d + j] = false;
+    }
+
+    pub fn parents(&self, j: usize) -> Vec<usize> {
+        (0..self.d).filter(|&i| self.has_edge(i, j)).collect()
+    }
+
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (0..self.d).filter(|&j| self.has_edge(i, j)).collect()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().filter(|&&b| b).count()
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = vec![];
+        for i in 0..self.d {
+            for j in 0..self.d {
+                if self.has_edge(i, j) {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Parent list per node — the shape the decomposable scores take.
+    pub fn parent_list(&self) -> Vec<Vec<usize>> {
+        (0..self.d).map(|j| self.parents(j)).collect()
+    }
+
+    /// Kahn's algorithm; `None` if cyclic.
+    pub fn topological_order(&self) -> Option<Vec<usize>> {
+        let mut indeg: Vec<usize> = (0..self.d).map(|j| self.parents(j).len()).collect();
+        let mut queue: Vec<usize> = (0..self.d).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.d);
+        while let Some(v) = queue.pop() {
+            order.push(v);
+            for c in self.children(v) {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if order.len() == self.d {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// Would adding i→j create a cycle?
+    pub fn creates_cycle(&self, i: usize, j: usize) -> bool {
+        // cycle iff j reaches i already
+        let mut stack = vec![j];
+        let mut seen = vec![false; self.d];
+        while let Some(v) = stack.pop() {
+            if v == i {
+                return true;
+            }
+            if seen[v] {
+                continue;
+            }
+            seen[v] = true;
+            stack.extend(self.children(v));
+        }
+        false
+    }
+
+    /// Skeleton: set of unordered adjacent pairs.
+    pub fn skeleton(&self) -> Vec<(usize, usize)> {
+        let mut out = vec![];
+        for i in 0..self.d {
+            for j in (i + 1)..self.d {
+                if self.has_edge(i, j) || self.has_edge(j, i) {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_topology() {
+        let g = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        assert_eq!(g.parents(2), vec![1]);
+        assert_eq!(g.children(0), vec![1]);
+        let topo = g.topological_order().unwrap();
+        let pos = |v: usize| topo.iter().position(|&x| x == v).unwrap();
+        assert!(pos(0) < pos(1) && pos(1) < pos(2));
+    }
+
+    #[test]
+    fn cycle_detection() {
+        let mut g = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        assert!(g.creates_cycle(2, 0));
+        assert!(!g.creates_cycle(0, 2));
+        g.add_edge(2, 0);
+        assert!(g.topological_order().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn from_edges_rejects_cycle() {
+        Dag::from_edges(2, &[(0, 1), (1, 0)]);
+    }
+
+    #[test]
+    fn skeleton_pairs() {
+        let g = Dag::from_edges(4, &[(0, 1), (2, 1)]);
+        assert_eq!(g.skeleton(), vec![(0, 1), (1, 2)]);
+        assert_eq!(g.num_edges(), 2);
+    }
+}

@@ -1,0 +1,117 @@
+//! Accuracy metrics of §7.1: skeleton F1 and normalized structural
+//! Hamming distance (SHD) between Markov equivalence classes.
+
+use super::dag::Dag;
+use super::pdag::{dag_to_cpdag, Pdag};
+
+/// F1 of the recovered skeleton vs the true skeleton (adjacency as
+/// unordered pairs).
+pub fn skeleton_f1(estimated: &Pdag, truth: &Dag) -> f64 {
+    let d = truth.d;
+    assert_eq!(estimated.d, d);
+    let mut tp = 0.0;
+    let mut fp = 0.0;
+    let mut fnn = 0.0;
+    for i in 0..d {
+        for j in (i + 1)..d {
+            let est = estimated.adjacent(i, j);
+            let tru = truth.has_edge(i, j) || truth.has_edge(j, i);
+            match (est, tru) {
+                (true, true) => tp += 1.0,
+                (true, false) => fp += 1.0,
+                (false, true) => fnn += 1.0,
+                _ => {}
+            }
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fnn);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Edge type of a pair in a PDAG, for SHD comparison.
+#[derive(PartialEq)]
+enum PairType {
+    None,
+    Undirected,
+    Forward,
+    Backward,
+}
+
+fn pair_type(p: &Pdag, i: usize, j: usize) -> PairType {
+    if p.undirected(i, j) {
+        PairType::Undirected
+    } else if p.directed(i, j) {
+        PairType::Forward
+    } else if p.directed(j, i) {
+        PairType::Backward
+    } else {
+        PairType::None
+    }
+}
+
+/// Normalized SHD between the estimated equivalence class and the true
+/// one (the true DAG is converted to its CPDAG): the number of variable
+/// pairs whose edge type differs, divided by d(d−1)/2. Lower is better.
+pub fn normalized_shd(estimated: &Pdag, truth: &Dag) -> f64 {
+    let d = truth.d;
+    assert_eq!(estimated.d, d);
+    let true_cpdag = dag_to_cpdag(truth);
+    let mut mismatches = 0usize;
+    for i in 0..d {
+        for j in (i + 1)..d {
+            if pair_type(estimated, i, j) != pair_type(&true_cpdag, i, j) {
+                mismatches += 1;
+            }
+        }
+    }
+    mismatches as f64 / (d * (d - 1) / 2) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_recovery() {
+        let g = Dag::from_edges(4, &[(0, 2), (1, 2), (2, 3)]);
+        let est = dag_to_cpdag(&g);
+        assert_eq!(skeleton_f1(&est, &g), 1.0);
+        assert_eq!(normalized_shd(&est, &g), 0.0);
+    }
+
+    #[test]
+    fn equivalent_dag_scores_perfectly() {
+        // X→Y→Z vs X←Y→Z are in the same class: SHD between their
+        // CPDAGs is 0.
+        let g1 = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let g2 = Dag::from_edges(3, &[(1, 0), (1, 2)]);
+        let est = dag_to_cpdag(&g2);
+        assert_eq!(normalized_shd(&est, &g1), 0.0);
+        assert_eq!(skeleton_f1(&est, &g1), 1.0);
+    }
+
+    #[test]
+    fn empty_estimate_zero_f1() {
+        let g = Dag::from_edges(3, &[(0, 1)]);
+        let est = Pdag::new(3);
+        assert_eq!(skeleton_f1(&est, &g), 0.0);
+        // one pair differs out of 3
+        assert!((normalized_shd(&est, &g) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wrong_orientation_counts() {
+        // truth: collider 0→2←1 (compelled). estimate: 0→2, 2→1.
+        let g = Dag::from_edges(3, &[(0, 2), (1, 2)]);
+        let mut est = Pdag::new(3);
+        est.add_directed(0, 2);
+        est.add_directed(2, 1);
+        // pair (1,2) differs in orientation; pair (0,2) matches; (0,1) matches (none)
+        assert!((normalized_shd(&est, &g) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(skeleton_f1(&est, &g), 1.0);
+    }
+}

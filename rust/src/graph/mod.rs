@@ -1,0 +1,10 @@
+//! Graph machinery: DAGs, PDAGs/CPDAGs, the conversions between them,
+//! Meek orientation rules, and the accuracy metrics of §7.1.
+
+pub mod dag;
+pub mod pdag;
+pub mod metrics;
+
+pub use dag::Dag;
+pub use metrics::{normalized_shd, skeleton_f1};
+pub use pdag::Pdag;

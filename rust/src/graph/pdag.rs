@@ -1,0 +1,462 @@
+//! Partially directed acyclic graphs (PDAGs) and completed PDAGs
+//! (CPDAGs, the Markov-equivalence-class representation GES searches
+//! over), with:
+//!
+//! * `dag_to_cpdag` — Chickering (1995) edge-labeling (compelled vs
+//!   reversible edges);
+//! * `pdag_to_dag` — Dor & Tarsi (1992) consistent extension;
+//! * `meek_closure` — Meek (1995) orientation rules R1-R4.
+
+use super::dag::Dag;
+
+/// PDAG as a boolean "mark" matrix: `i → j` iff mark(i,j) ∧ ¬mark(j,i);
+/// `i − j` (undirected) iff mark(i,j) ∧ mark(j,i).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct Pdag {
+    pub d: usize,
+    mark: Vec<bool>,
+}
+
+impl Pdag {
+    pub fn new(d: usize) -> Pdag {
+        Pdag { d, mark: vec![false; d * d] }
+    }
+
+    #[inline]
+    fn m(&self, i: usize, j: usize) -> bool {
+        self.mark[i * self.d + j]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.mark[i * self.d + j] = v;
+    }
+
+    /// Any edge between i and j (directed either way or undirected)?
+    pub fn adjacent(&self, i: usize, j: usize) -> bool {
+        self.m(i, j) || self.m(j, i)
+    }
+
+    /// Directed i → j?
+    pub fn directed(&self, i: usize, j: usize) -> bool {
+        self.m(i, j) && !self.m(j, i)
+    }
+
+    /// Undirected i − j?
+    pub fn undirected(&self, i: usize, j: usize) -> bool {
+        self.m(i, j) && self.m(j, i)
+    }
+
+    pub fn add_undirected(&mut self, i: usize, j: usize) {
+        self.set(i, j, true);
+        self.set(j, i, true);
+    }
+
+    pub fn add_directed(&mut self, i: usize, j: usize) {
+        self.set(i, j, true);
+        self.set(j, i, false);
+    }
+
+    /// Turn whatever edge exists between i,j into i → j.
+    pub fn orient(&mut self, i: usize, j: usize) {
+        debug_assert!(self.adjacent(i, j));
+        self.add_directed(i, j);
+    }
+
+    pub fn remove_edge(&mut self, i: usize, j: usize) {
+        self.set(i, j, false);
+        self.set(j, i, false);
+    }
+
+    /// Directed parents {i : i → j}.
+    pub fn parents(&self, j: usize) -> Vec<usize> {
+        (0..self.d).filter(|&i| self.directed(i, j)).collect()
+    }
+
+    /// Neighbors connected by an *undirected* edge.
+    pub fn neighbors(&self, j: usize) -> Vec<usize> {
+        (0..self.d).filter(|&i| self.undirected(i, j)).collect()
+    }
+
+    /// All adjacent nodes.
+    pub fn adjacencies(&self, j: usize) -> Vec<usize> {
+        (0..self.d).filter(|&i| i != j && self.adjacent(i, j)).collect()
+    }
+
+    /// NA_{Y,X}: neighbors of y that are adjacent to x (Chickering 2002).
+    pub fn na(&self, y: usize, x: usize) -> Vec<usize> {
+        self.neighbors(y).into_iter().filter(|&n| self.adjacent(n, x)).collect()
+    }
+
+    /// Is `set` a clique (every pair adjacent)?
+    pub fn is_clique(&self, set: &[usize]) -> bool {
+        for (a, &i) in set.iter().enumerate() {
+            for &j in set.iter().skip(a + 1) {
+                if !self.adjacent(i, j) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Does every semi-directed (possibly-directed) path from `from` to
+    /// `to` pass through `blocked`? Used by the Insert validity test.
+    /// A semi-directed path follows undirected edges or edges directed
+    /// along the walk direction.
+    pub fn all_semi_directed_paths_blocked(&self, from: usize, to: usize, blocked: &[usize]) -> bool {
+        // BFS over nodes not in `blocked`; reachable `to` ⇒ some path avoids it
+        let mut seen = vec![false; self.d];
+        let mut stack = vec![from];
+        seen[from] = true;
+        if blocked.contains(&from) {
+            return true;
+        }
+        while let Some(v) = stack.pop() {
+            if v == to {
+                return false;
+            }
+            for w in 0..self.d {
+                if seen[w] || blocked.contains(&w) {
+                    continue;
+                }
+                // step v→w allowed if v→w directed or v−w undirected
+                if self.directed(v, w) || self.undirected(v, w) {
+                    seen[w] = true;
+                    stack.push(w);
+                }
+            }
+        }
+        true
+    }
+
+    pub fn num_edges(&self) -> usize {
+        let mut n = 0;
+        for i in 0..self.d {
+            for j in (i + 1)..self.d {
+                if self.adjacent(i, j) {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Skeleton as unordered pairs.
+    pub fn skeleton(&self) -> Vec<(usize, usize)> {
+        let mut out = vec![];
+        for i in 0..self.d {
+            for j in (i + 1)..self.d {
+                if self.adjacent(i, j) {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply Meek rules R1-R4 to closure (orients undirected edges that
+    /// are compelled by the current orientations).
+    pub fn meek_closure(&mut self) {
+        loop {
+            let mut changed = false;
+            for a in 0..self.d {
+                for b in 0..self.d {
+                    if a == b || !self.undirected(a, b) {
+                        continue;
+                    }
+                    // R1: ∃c: c→a, c,b nonadjacent ⇒ a→b
+                    let r1 = (0..self.d)
+                        .any(|c| c != b && self.directed(c, a) && !self.adjacent(c, b));
+                    // R2: ∃c: a→c→b ⇒ a→b
+                    let r2 = (0..self.d).any(|c| self.directed(a, c) && self.directed(c, b));
+                    // R3: ∃c,d: a−c, a−d, c→b, d→b, c,d nonadjacent ⇒ a→b
+                    let r3 = {
+                        let mut hit = false;
+                        for c in 0..self.d {
+                            if !(self.undirected(a, c) && self.directed(c, b)) {
+                                continue;
+                            }
+                            for dd in 0..self.d {
+                                if dd != c
+                                    && self.undirected(a, dd)
+                                    && self.directed(dd, b)
+                                    && !self.adjacent(c, dd)
+                                {
+                                    hit = true;
+                                    break;
+                                }
+                            }
+                            if hit {
+                                break;
+                            }
+                        }
+                        hit
+                    };
+                    // R4: ∃c,d: a−d (or a adjacent d), d→c, c→b, a−c,
+                    //     b,d nonadjacent ⇒ a→b
+                    let r4 = {
+                        let mut hit = false;
+                        for c in 0..self.d {
+                            if !(self.undirected(a, c) || self.adjacent(a, c)) || !self.directed(c, b) {
+                                continue;
+                            }
+                            for dd in 0..self.d {
+                                if dd != c
+                                    && self.adjacent(a, dd)
+                                    && self.directed(dd, c)
+                                    && !self.adjacent(dd, b)
+                                {
+                                    hit = true;
+                                    break;
+                                }
+                            }
+                            if hit {
+                                break;
+                            }
+                        }
+                        hit
+                    };
+                    if r1 || r2 || r3 || r4 {
+                        self.orient(a, b);
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// Dor & Tarsi (1992): a DAG that is a consistent extension of this
+    /// PDAG, or `None` if none exists.
+    pub fn to_dag(&self) -> Option<Dag> {
+        let mut work = self.clone();
+        let mut out = Dag::new(self.d);
+        // copy already-directed edges
+        for i in 0..self.d {
+            for j in 0..self.d {
+                if self.directed(i, j) {
+                    out.add_edge(i, j);
+                }
+            }
+        }
+        let mut alive: Vec<bool> = vec![true; self.d];
+        let mut remaining = self.d;
+        while remaining > 0 {
+            let mut found = None;
+            'cand: for x in 0..self.d {
+                if !alive[x] {
+                    continue;
+                }
+                // (a) no outgoing directed edge from x (to alive nodes)
+                for y in 0..self.d {
+                    if alive[y] && work.directed(x, y) {
+                        continue 'cand;
+                    }
+                }
+                // (b) every undirected neighbor of x is adjacent to all
+                // other nodes adjacent to x
+                let nbrs: Vec<usize> =
+                    (0..self.d).filter(|&y| alive[y] && work.undirected(x, y)).collect();
+                let adjs: Vec<usize> =
+                    (0..self.d).filter(|&y| alive[y] && y != x && work.adjacent(x, y)).collect();
+                for &nb in &nbrs {
+                    for &ad in &adjs {
+                        if ad != nb && !work.adjacent(nb, ad) {
+                            continue 'cand;
+                        }
+                    }
+                }
+                found = Some((x, nbrs));
+                break;
+            }
+            let (x, nbrs) = found?;
+            // orient undirected edges into x
+            for nb in nbrs {
+                out.add_edge(nb, x);
+            }
+            // remove x
+            for y in 0..self.d {
+                work.remove_edge(x, y);
+            }
+            alive[x] = false;
+            remaining -= 1;
+        }
+        debug_assert!(out.topological_order().is_some());
+        Some(out)
+    }
+}
+
+/// Chickering (1995): label each DAG edge compelled/reversible; the
+/// compelled edges directed + reversible edges undirected = the CPDAG of
+/// the DAG's Markov equivalence class.
+pub fn dag_to_cpdag(g: &Dag) -> Pdag {
+    let d = g.d;
+    let topo = g.topological_order().expect("input must be a DAG");
+    let pos: Vec<usize> = {
+        let mut p = vec![0; d];
+        for (i, &v) in topo.iter().enumerate() {
+            p[v] = i;
+        }
+        p
+    };
+    // total order on edges: by topo position of y ascending, then topo
+    // position of x DESCENDING (Chickering's "order-edges")
+    let mut edges: Vec<(usize, usize)> = g.edges();
+    edges.sort_by_key(|&(x, y)| (pos[y], std::cmp::Reverse(pos[x])));
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum Label {
+        Unknown,
+        Compelled,
+        Reversible,
+    }
+    use Label::*;
+    let mut label: std::collections::HashMap<(usize, usize), Label> =
+        edges.iter().map(|&e| (e, Unknown)).collect();
+
+    for &(x, y) in &edges {
+        if label[&(x, y)] != Unknown {
+            continue;
+        }
+        let mut done = false;
+        // for every w → x labeled compelled
+        let wx: Vec<usize> = g
+            .parents(x)
+            .into_iter()
+            .filter(|&w| label.get(&(w, x)) == Some(&Compelled))
+            .collect();
+        for w in wx {
+            if !g.has_edge(w, y) {
+                // label y's every incoming edge compelled
+                for p in g.parents(y) {
+                    label.insert((p, y), Compelled);
+                }
+                done = true;
+                break;
+            } else {
+                label.insert((w, y), Compelled);
+            }
+        }
+        if done {
+            continue;
+        }
+        // if ∃ z → y with z ≠ x and z not a parent of x ⇒ compelled
+        let exists_z = g.parents(y).iter().any(|&z| z != x && !g.has_edge(z, x));
+        let new_label = if exists_z { Compelled } else { Reversible };
+        label.insert((x, y), new_label);
+        for p in g.parents(y) {
+            if label[&(p, y)] == Unknown {
+                label.insert((p, y), new_label);
+            }
+        }
+    }
+
+    let mut out = Pdag::new(d);
+    for (&(x, y), &l) in &label {
+        match l {
+            Compelled => out.add_directed(x, y),
+            Reversible | Unknown => out.add_undirected(x, y),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_cpdag_is_fully_undirected() {
+        // X→Y→Z has equivalence class X−Y−Z.
+        let g = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        let c = dag_to_cpdag(&g);
+        assert!(c.undirected(0, 1));
+        assert!(c.undirected(1, 2));
+        assert!(!c.adjacent(0, 2));
+    }
+
+    #[test]
+    fn collider_cpdag_keeps_v_structure() {
+        // X→Z←Y: the v-structure is compelled.
+        let g = Dag::from_edges(3, &[(0, 2), (1, 2)]);
+        let c = dag_to_cpdag(&g);
+        assert!(c.directed(0, 2));
+        assert!(c.directed(1, 2));
+        assert!(!c.adjacent(0, 1));
+    }
+
+    #[test]
+    fn collider_with_tail_compels_downstream() {
+        // X→Z←Y plus Z→W: Z→W is compelled (else new v-structure).
+        let g = Dag::from_edges(4, &[(0, 2), (1, 2), (2, 3)]);
+        let c = dag_to_cpdag(&g);
+        assert!(c.directed(2, 3));
+    }
+
+    #[test]
+    fn pdag_to_dag_roundtrip_equivalence_class() {
+        // cpdag(dag(cpdag(G))) == cpdag(G) for several graphs
+        let graphs = [
+            Dag::from_edges(4, &[(0, 1), (1, 2), (2, 3)]),
+            Dag::from_edges(4, &[(0, 2), (1, 2), (2, 3)]),
+            Dag::from_edges(5, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)]),
+        ];
+        for g in &graphs {
+            let c = dag_to_cpdag(g);
+            let g2 = c.to_dag().expect("CPDAG must have a consistent extension");
+            let c2 = dag_to_cpdag(&g2);
+            assert_eq!(c, c2, "equivalence class must round-trip");
+        }
+    }
+
+    #[test]
+    fn meek_r1_orients_chain() {
+        // a→b, b−c, a,c nonadjacent ⇒ b→c
+        let mut p = Pdag::new(3);
+        p.add_directed(0, 1);
+        p.add_undirected(1, 2);
+        p.meek_closure();
+        assert!(p.directed(1, 2));
+    }
+
+    #[test]
+    fn meek_r2_orients_shortcut() {
+        // a→c→b and a−b ⇒ a→b
+        let mut p = Pdag::new(3);
+        p.add_directed(0, 2);
+        p.add_directed(2, 1);
+        p.add_undirected(0, 1);
+        p.meek_closure();
+        assert!(p.directed(0, 1));
+    }
+
+    #[test]
+    fn semi_directed_path_blocking() {
+        let mut p = Pdag::new(4);
+        p.add_directed(0, 1);
+        p.add_undirected(1, 2);
+        p.add_directed(2, 3);
+        // path 0⇒3 exists through 1,2
+        assert!(!p.all_semi_directed_paths_blocked(0, 3, &[]));
+        assert!(p.all_semi_directed_paths_blocked(0, 3, &[1]));
+        assert!(p.all_semi_directed_paths_blocked(0, 3, &[2]));
+        // reversed: no semi-directed path 3⇒0 (edges point wrong way)
+        assert!(p.all_semi_directed_paths_blocked(3, 0, &[]));
+    }
+
+    #[test]
+    fn na_and_clique() {
+        let mut p = Pdag::new(4);
+        p.add_undirected(0, 1);
+        p.add_undirected(1, 2);
+        p.add_undirected(0, 2);
+        assert!(p.is_clique(&[0, 1, 2]));
+        p.remove_edge(0, 2);
+        assert!(!p.is_clique(&[0, 1, 2]));
+        // NA_{1,3}: neighbors of 1 adjacent to 3 — none (3 isolated)
+        assert!(p.na(1, 3).is_empty());
+    }
+}

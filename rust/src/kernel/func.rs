@@ -1,0 +1,153 @@
+//! Kernel functions and the median-distance bandwidth heuristic.
+//!
+//! The paper's experimental setup (§7.1) uses Gaussian/RBF kernels with
+//! width = 2 × median pairwise distance for the CV score family, and the
+//! plain median distance for KCI. Discrete variables use the same RBF on
+//! their (integer) encodings — which is a kernel of finite rank ≤ #values
+//! (Lemma 4.1) — or the delta kernel.
+
+use crate::linalg::Mat;
+
+/// Kernel function over row-vectors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// exp(−‖x−y‖² / (2σ²))
+    Rbf { sigma: f64 },
+    /// ⟨x, y⟩
+    Linear,
+    /// 1 if x == y else 0 (discrete delta / Kronecker).
+    Delta,
+    /// (⟨x,y⟩ + c)^d
+    Poly { c: f64, degree: i32 },
+}
+
+impl Kernel {
+    /// Evaluate k(x, y) on two equal-length slices.
+    #[inline]
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        match *self {
+            Kernel::Rbf { sigma } => {
+                let mut d2 = 0.0;
+                for i in 0..x.len() {
+                    let d = x[i] - y[i];
+                    d2 += d * d;
+                }
+                (-d2 / (2.0 * sigma * sigma)).exp()
+            }
+            Kernel::Linear => x.iter().zip(y).map(|(a, b)| a * b).sum(),
+            Kernel::Delta => {
+                if x.iter().zip(y).all(|(a, b)| a == b) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Kernel::Poly { c, degree } => {
+                let dot: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+                (dot + c).powi(degree)
+            }
+        }
+    }
+
+    /// Diagonal value k(x, x).
+    #[inline]
+    pub fn eval_diag(&self, x: &[f64]) -> f64 {
+        match *self {
+            Kernel::Rbf { .. } | Kernel::Delta => 1.0,
+            Kernel::Linear => x.iter().map(|a| a * a).sum(),
+            Kernel::Poly { c, degree } => {
+                let dot: f64 = x.iter().map(|a| a * a).sum();
+                (dot + c).powi(degree)
+            }
+        }
+    }
+}
+
+/// Median pairwise Euclidean distance over the rows of `x`, estimated on
+/// at most `max_pairs` random-ish pairs (deterministic stride sampling so
+/// the score function stays deterministic). Returns 1.0 for degenerate
+/// data. `width_factor` scales the result (the CV setting uses 2.0).
+pub fn median_heuristic(x: &Mat, width_factor: f64) -> f64 {
+    let n = x.rows;
+    if n < 2 {
+        return 1.0;
+    }
+    let max_pairs = 5000usize;
+    let total_pairs = n * (n - 1) / 2;
+    let stride = (total_pairs / max_pairs).max(1);
+    let mut dists = Vec::with_capacity(total_pairs.min(max_pairs) + 8);
+    let mut counter = 0usize;
+    'outer: for i in 0..n {
+        for j in (i + 1)..n {
+            if counter % stride == 0 {
+                let mut d2 = 0.0;
+                for c in 0..x.cols {
+                    let d = x[(i, c)] - x[(j, c)];
+                    d2 += d * d;
+                }
+                if d2 > 0.0 {
+                    dists.push(d2.sqrt());
+                }
+                if dists.len() >= max_pairs {
+                    break 'outer;
+                }
+            }
+            counter += 1;
+        }
+    }
+    if dists.is_empty() {
+        return 1.0;
+    }
+    let med = crate::util::stats::median(&dists);
+    if med <= 0.0 {
+        1.0
+    } else {
+        med * width_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_bounds_and_identity() {
+        let k = Kernel::Rbf { sigma: 1.0 };
+        assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-15);
+        let v = k.eval(&[0.0], &[3.0]);
+        assert!(v > 0.0 && v < 1.0);
+        assert!((v - (-4.5f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn delta_kernel() {
+        let k = Kernel::Delta;
+        assert_eq!(k.eval(&[1.0, 2.0], &[1.0, 2.0]), 1.0);
+        assert_eq!(k.eval(&[1.0, 2.0], &[1.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn linear_and_poly() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        let p = Kernel::Poly { c: 1.0, degree: 2 };
+        assert_eq!(p.eval(&[1.0], &[2.0]), 9.0);
+        assert_eq!(p.eval_diag(&[2.0]), 25.0);
+    }
+
+    #[test]
+    fn median_heuristic_on_grid() {
+        // points 0..10 on a line: median pairwise distance is ~3-4
+        let x = Mat::from_vec(10, 1, (0..10).map(|i| i as f64).collect());
+        let m = median_heuristic(&x, 1.0);
+        assert!(m >= 2.0 && m <= 5.0, "median {m}");
+        let m2 = median_heuristic(&x, 2.0);
+        assert!((m2 - 2.0 * m).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_heuristic_degenerate() {
+        let x = Mat::zeros(5, 2);
+        assert_eq!(median_heuristic(&x, 2.0), 1.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Gram (kernel) matrix construction and centering.
+//!
+//! These are the `O(n²)`/`O(n³)` objects the paper is trying to avoid —
+//! they back the *exact* CV score (the baseline), KCI, and the test
+//! oracles that the low-rank path is validated against.
+
+use super::func::Kernel;
+use crate::linalg::Mat;
+
+/// Full kernel matrix K with K_ij = k(x_i, x_j).
+pub fn gram(k: Kernel, x: &Mat) -> Mat {
+    let n = x.rows;
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        out[(i, i)] = k.eval_diag(x.row(i));
+        for j in (i + 1)..n {
+            let v = k.eval(x.row(i), x.row(j));
+            out[(i, j)] = v;
+            out[(j, i)] = v;
+        }
+    }
+    out
+}
+
+/// Cross kernel matrix K with K_ij = k(a_i, b_j)  (rows of a × rows of b).
+pub fn gram_cross(k: Kernel, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let mut out = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            out[(i, j)] = k.eval(a.row(i), b.row(j));
+        }
+    }
+    out
+}
+
+/// Double centering K̃ = H K H with H = I − 11ᵀ/n, computed in O(n²)
+/// without materializing H.
+pub fn center_gram(k: &Mat) -> Mat {
+    assert_eq!(k.rows, k.cols);
+    let n = k.rows;
+    let mut row_mean = vec![0.0; n];
+    let mut total = 0.0;
+    for i in 0..n {
+        let mut s = 0.0;
+        for j in 0..n {
+            s += k[(i, j)];
+        }
+        row_mean[i] = s / n as f64;
+        total += s;
+    }
+    let grand = total / (n as f64 * n as f64);
+    let mut out = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            out[(i, j)] = k[(i, j)] - row_mean[i] - row_mean[j] + grand;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn rand_mat(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(n, d);
+        for x in &mut m.data {
+            *x = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn gram_is_symmetric_unit_diag_rbf() {
+        let x = rand_mat(12, 3, 1);
+        let k = gram(Kernel::Rbf { sigma: 1.5 }, &x);
+        assert!(k.is_symmetric(1e-14));
+        for i in 0..12 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn gram_cross_consistent_with_gram() {
+        let x = rand_mat(8, 2, 2);
+        let k = Kernel::Rbf { sigma: 0.9 };
+        let full = gram(k, &x);
+        let cross = gram_cross(k, &x, &x);
+        assert!((&full - &cross).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn centering_matches_hkh() {
+        let x = rand_mat(10, 2, 3);
+        let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
+        // explicit H K H
+        let n = 10;
+        let mut h = Mat::eye(n);
+        for i in 0..n {
+            for j in 0..n {
+                h[(i, j)] -= 1.0 / n as f64;
+            }
+        }
+        let expect = h.matmul(&k).matmul(&h);
+        let got = center_gram(&k);
+        assert!((&got - &expect).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn centered_rows_sum_to_zero() {
+        let x = rand_mat(9, 1, 4);
+        let kc = center_gram(&gram(Kernel::Rbf { sigma: 2.0 }, &x));
+        for i in 0..9 {
+            let s: f64 = (0..9).map(|j| kc[(i, j)]).sum();
+            assert!(s.abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn gram_psd_via_eig() {
+        let x = rand_mat(15, 2, 5);
+        let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
+        let w = crate::linalg::sym_eig(&k).0;
+        assert!(w.iter().all(|&v| v > -1e-9), "negative eigenvalue: {:?}", w.last());
+    }
+}

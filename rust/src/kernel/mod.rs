@@ -1,0 +1,12 @@
+//! Kernel functions, bandwidth heuristics, Gram-matrix builders and
+//! centering — the substrate under both the exact CV score and the
+//! low-rank CV-LR score.
+//!
+//! A "variable" in this library is a *column block* of a sample matrix
+//! (multi-dimensional variables per paper §7.4 are blocks of width > 1).
+
+pub mod func;
+pub mod gram;
+
+pub use func::{median_heuristic, Kernel};
+pub use gram::{center_gram, gram, gram_cross};

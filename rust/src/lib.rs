@@ -1,0 +1,28 @@
+//! # cvlr — Fast Causal Discovery by Approximate Kernel-based Generalized
+//! Score Functions (KDD 2025 reproduction)
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L3 (this crate)** — the coordinator: GES search, score service with
+//!   caching/batching, all baselines, data generators, metrics, PJRT
+//!   runtime for the AOT-compiled score artifacts.
+//! * **L2 (python/compile/model.py)** — the CV-LR / exact-CV score as JAX
+//!   computation graphs, lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the Gram-product
+//!   and RBF-kernel hot spots.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt`, and the rust binary is self-contained after that.
+
+pub mod util;
+pub mod linalg;
+pub mod kernel;
+pub mod lowrank;
+pub mod score;
+pub mod graph;
+pub mod search;
+pub mod ci;
+pub mod contopt;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;

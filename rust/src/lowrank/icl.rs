@@ -1,0 +1,158 @@
+//! Algorithm 1 — kernel incomplete Cholesky decomposition (ICL) with
+//! greedy adaptive pivot selection (Bach & Jordan 2002).
+//!
+//! Produces an n×m factor Λ with ‖Λ Λᵀ − K‖ ≤ η (trace norm of the
+//! residual) or m = m₀. Runs in O(n m²) time and O(n m) space — the
+//! kernel matrix itself is never materialized; only its diagonal and the
+//! pivot columns are evaluated.
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+
+/// Incomplete Cholesky factorization of the kernel matrix of `x`'s rows.
+///
+/// * `eta` — stop once the residual trace Σ_j d_j falls below this;
+/// * `max_rank` — hard cap m₀ on the number of pivots.
+pub fn icl(k: Kernel, x: &Mat, eta: f64, max_rank: usize) -> Mat {
+    let n = x.rows;
+    let m0 = max_rank.min(n);
+    // Work in permuted coordinates: perm[i] is the original row index at
+    // permuted position i.
+    let mut perm: Vec<usize> = (0..n).collect();
+    // Residual diagonal in permuted coordinates.
+    let mut d: Vec<f64> = (0..n).map(|j| k.eval_diag(x.row(j))).collect();
+    // Λ in permuted row order, column-major growth.
+    let mut lam = Mat::zeros(n, m0);
+    let mut m = m0;
+
+    for i in 0..m0 {
+        // Stop when the residual trace is below η (line 6 of Alg. 1).
+        let resid: f64 = d[i..].iter().sum();
+        if resid < eta {
+            m = i;
+            break;
+        }
+        // Greedy pivot: argmax residual diagonal (line 7).
+        let (jstar, _) = d
+            .iter()
+            .enumerate()
+            .skip(i)
+            .fold((i, f64::NEG_INFINITY), |(bj, bv), (j, &v)| if v > bv { (j, v) } else { (bj, bv) });
+        // Permute positions i and j* (lines 8-9).
+        perm.swap(i, jstar);
+        d.swap(i, jstar);
+        for r in 0..i {
+            let t = lam[(i, r)];
+            lam[(i, r)] = lam[(jstar, r)];
+            lam[(jstar, r)] = t;
+        }
+        // Pivot column (lines 10-12).
+        let lii = d[i].max(0.0).sqrt();
+        if lii < 1e-150 {
+            m = i;
+            break;
+        }
+        lam[(i, i)] = lii;
+        let xi = x.row(perm[i]).to_vec();
+        for j in (i + 1)..n {
+            let kij = k.eval(x.row(perm[j]), &xi);
+            let mut s = kij;
+            for r in 0..i {
+                s -= lam[(j, r)] * lam[(i, r)];
+            }
+            let v = s / lii;
+            lam[(j, i)] = v;
+            d[j] -= v * v;
+        }
+        d[i] = 0.0;
+    }
+
+    // Cut columns and reverse the permutation (lines 14-15).
+    let mut out = Mat::zeros(n, m);
+    for (pos, &orig) in perm.iter().enumerate() {
+        for c in 0..m {
+            out[(orig, c)] = lam[(pos, c)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::gram;
+    use crate::util::Pcg64;
+
+    fn rand_mat(n: usize, dcols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(n, dcols);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn full_rank_reconstruction_when_m_equals_n() {
+        let x = rand_mat(12, 1, 1);
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let lam = icl(k, &x, 1e-14, 12);
+        let rec = lam.matmul_t(&lam);
+        assert!((&rec - &gram(k, &x)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_trace_bounded_by_eta() {
+        let x = rand_mat(60, 2, 2);
+        let k = Kernel::Rbf { sigma: 1.5 };
+        let eta = 1e-4;
+        let lam = icl(k, &x, eta, 60);
+        let resid = &gram(k, &x) - &lam.matmul_t(&lam);
+        // residual trace (= sum of residual diag) is what ICL bounds
+        assert!(resid.trace() < eta * 1.01, "trace {}", resid.trace());
+        // residual is PSD so entries are bounded by diag
+        assert!(resid.max_abs() < 2.0 * eta.max(resid.trace()));
+    }
+
+    #[test]
+    fn rank_cap_respected() {
+        let x = rand_mat(50, 3, 3);
+        let lam = icl(Kernel::Rbf { sigma: 0.5 }, &x, 1e-12, 10);
+        assert_eq!(lam.cols, 10);
+        assert_eq!(lam.rows, 50);
+    }
+
+    #[test]
+    fn early_exit_on_low_rank_data() {
+        // 40 samples but only 4 distinct values → rank ≤ 4 (Lemma 4.1).
+        let mut rng = Pcg64::new(4);
+        let x = Mat::from_vec(40, 1, (0..40).map(|_| rng.below(4) as f64).collect());
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let lam = icl(k, &x, 1e-9, 100);
+        assert!(lam.cols <= 4, "cols {}", lam.cols);
+        let rec = lam.matmul_t(&lam);
+        assert!((&rec - &gram(k, &x)).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn linear_kernel_rank_bounded_by_dim() {
+        let x = rand_mat(30, 2, 5);
+        let lam = icl(Kernel::Linear, &x, 1e-9, 100);
+        assert!(lam.cols <= 2, "cols {}", lam.cols);
+    }
+
+    #[test]
+    fn approximation_error_decreases_with_rank() {
+        let x = rand_mat(80, 2, 6);
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let g = gram(k, &x);
+        let mut last = f64::INFINITY;
+        for m in [2, 5, 10, 20, 40] {
+            let lam = icl(k, &x, 0.0, m);
+            let err = (&g - &lam.matmul_t(&lam)).frob_norm();
+            assert!(err <= last + 1e-9, "err {err} not decreasing at m={m}");
+            last = err;
+        }
+        assert!(last < 1e-3);
+    }
+}

@@ -1,0 +1,119 @@
+//! Low-rank kernel factorizations (paper §4): `Λ Λᵀ ≈ K`.
+//!
+//! * [`icl`] — Algorithm 1, kernel incomplete Cholesky decomposition with
+//!   greedy adaptive pivoting (Bach & Jordan 2002), for any data type;
+//! * [`discrete`] — Algorithm 2, the *exact* decomposition for discrete
+//!   variables whose pivot count is the number of distinct rows
+//!   (Lemmas 4.1/4.3);
+//! * [`factorize`] — the dispatch rule of §7.1: use Algorithm 2 when the
+//!   variable is discrete with < m distinct values, Algorithm 1 otherwise.
+
+pub mod icl;
+pub mod discrete;
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+
+pub use discrete::{discrete_decomposition, distinct_rows};
+pub use icl::icl;
+
+/// Result of a low-rank factorization.
+pub struct LowRank {
+    /// n × m factor with Λ Λᵀ ≈ K (uncentered).
+    pub lambda: Mat,
+    /// Number of pivots actually used (m = lambda.cols).
+    pub rank: usize,
+    /// Which algorithm produced it.
+    pub method: Method,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Algorithm 1 — incomplete Cholesky.
+    Icl,
+    /// Algorithm 2 — exact discrete decomposition.
+    Discrete,
+}
+
+/// Configuration for the factorization dispatch.
+#[derive(Clone, Copy, Debug)]
+pub struct LowRankConfig {
+    /// Maximal rank m₀ (paper: 100).
+    pub max_rank: usize,
+    /// ICL precision η (paper: 1e-6).
+    pub eta: f64,
+}
+
+impl Default for LowRankConfig {
+    fn default() -> Self {
+        LowRankConfig { max_rank: 100, eta: 1e-6 }
+    }
+}
+
+/// Factorize the kernel matrix of the rows of `x`: Algorithm 2 when the
+/// data is discrete with fewer than `max_rank` distinct rows, otherwise
+/// Algorithm 1 (paper §7.1 dispatch rule).
+pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> LowRank {
+    if is_discrete {
+        let distinct = distinct_rows(x);
+        if distinct.len() <= cfg.max_rank {
+            if let Some(lambda) = discrete_decomposition(k, x, &distinct) {
+                let rank = lambda.cols;
+                return LowRank { lambda, rank, method: Method::Discrete };
+            }
+            // fall through to ICL if the pivot kernel was numerically
+            // singular (can happen with a degenerate kernel choice)
+        }
+    }
+    let lambda = icl(k, x, cfg.eta, cfg.max_rank);
+    let rank = lambda.cols;
+    LowRank { lambda, rank, method: Method::Icl }
+}
+
+/// Center the factor: Λ̃ = H Λ (column-mean subtraction), so that
+/// Λ̃ Λ̃ᵀ ≈ H K H = K̃. O(nm).
+pub fn center_factor(lambda: &Mat) -> Mat {
+    lambda.center_columns()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::gram;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn dispatch_uses_discrete_for_small_cardinality() {
+        let mut rng = Pcg64::new(1);
+        let x = Mat::from_vec(50, 1, (0..50).map(|_| rng.below(3) as f64).collect());
+        let lr = factorize(Kernel::Rbf { sigma: 1.0 }, &x, true, &LowRankConfig::default());
+        assert_eq!(lr.method, Method::Discrete);
+        assert!(lr.rank <= 3);
+        let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
+        let rec = lr.lambda.matmul_t(&lr.lambda);
+        assert!((&rec - &k).max_abs() < 1e-8, "discrete decomposition must be exact");
+    }
+
+    #[test]
+    fn dispatch_uses_icl_for_continuous() {
+        let mut rng = Pcg64::new(2);
+        let x = Mat::from_vec(40, 2, (0..80).map(|_| rng.normal()).collect());
+        let lr = factorize(Kernel::Rbf { sigma: 1.0 }, &x, false, &LowRankConfig::default());
+        assert_eq!(lr.method, Method::Icl);
+        let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
+        let rec = lr.lambda.matmul_t(&lr.lambda);
+        assert!((&rec - &k).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn centered_factor_approximates_centered_gram() {
+        let mut rng = Pcg64::new(3);
+        let x = Mat::from_vec(30, 1, (0..30).map(|_| rng.normal()).collect());
+        let k = Kernel::Rbf { sigma: 1.0 };
+        let lr = factorize(k, &x, false, &LowRankConfig::default());
+        let lam_c = center_factor(&lr.lambda);
+        let kc = crate::kernel::center_gram(&gram(k, &x));
+        let rec = lam_c.matmul_t(&lam_c);
+        assert!((&rec - &kc).max_abs() < 1e-4);
+    }
+}

@@ -1,0 +1,281 @@
+//! `cvlr` — the leader entrypoint of the causal-discovery coordinator.
+//!
+//! Subcommands:
+//!
+//! * `discover` — run causal discovery on a built-in workload
+//!   (synthetic FCM data, SACHS, CHILD) with any method;
+//! * `score`    — evaluate one local score S(X | Z) and print it;
+//! * `selftest` — quick end-to-end check of all three layers
+//!   (used by `make smoke`);
+//! * `info`     — print the artifact registry and build information.
+//!
+//! Examples:
+//!
+//! ```text
+//! cvlr discover --data synth --n 500 --density 0.4 --method cv-lr
+//! cvlr discover --data sachs --n 2000 --method cv-lr --engine pjrt
+//! cvlr score --data child --n 500 --target 3 --parents 1,2
+//! cvlr selftest
+//! ```
+
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use cvlr::coordinator::{discover, DiscoveryConfig, EngineKind, Method};
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::data::{networks, Dataset};
+use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
+use cvlr::runtime::Runtime;
+use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::LocalScore;
+use cvlr::util::cli::Args;
+use cvlr::util::timing::fmt_secs;
+use cvlr::util::Stopwatch;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let res = match cmd {
+        "discover" => cmd_discover(&args),
+        "score" => cmd_score(&args),
+        "selftest" => cmd_selftest(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print_help();
+            Err(anyhow::anyhow!("unknown command"))
+        }
+    };
+    match res {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cvlr — fast causal discovery by approximate kernel-based generalized \
+         score functions (KDD'25 reproduction)\n\n\
+         USAGE: cvlr <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n\
+         \x20 discover   run causal discovery on a workload\n\
+         \x20 score      evaluate one local score S(X | Z)\n\
+         \x20 selftest   end-to-end three-layer smoke check\n\
+         \x20 info       artifact registry + build info\n\n\
+         COMMON OPTIONS:\n\
+         \x20 --data synth|sachs|child|sachs-cont   workload (default synth)\n\
+         \x20 --n N                                 sample size (default 500)\n\
+         \x20 --seed S                              RNG seed (default 0)\n\
+         \x20 --method cv-lr|cv|marg-lr|bic|bdeu|sc|pc|mm  (default cv-lr)\n\
+         \x20 --engine native|pjrt                  CV-LR backend (default native)\n\
+         \x20 --artifacts DIR                       artifacts dir (default artifacts)\n\
+         \x20 --workers W                           score-service threads (default 1)\n\n\
+         discover OPTIONS:\n\
+         \x20 --density D      synth graph density (default 0.4)\n\
+         \x20 --kind continuous|mixed|multidim      synth data kind\n\
+         \x20 --vars V         synth variable count (default 7)\n\n\
+         score OPTIONS:\n\
+         \x20 --target T       target variable index (default 0)\n\
+         \x20 --parents CSV    comma-separated parent indices (default empty)"
+    );
+}
+
+/// Build the workload named by `--data`: a dataset plus (if known) the
+/// ground-truth DAG for metric reporting.
+fn load_workload(args: &Args) -> Result<(Arc<Dataset>, Option<Dag>, String)> {
+    let n = args.usize_or("n", 500);
+    let seed = args.u64_or("seed", 0);
+    let name = args.get_or("data", "synth");
+    Ok(match name.as_str() {
+        "synth" => {
+            let kind = match args.get_or("kind", "continuous").as_str() {
+                "continuous" => DataKind::Continuous,
+                "mixed" => DataKind::Mixed,
+                "multidim" | "multi-dim" => DataKind::MultiDim,
+                k => bail!("unknown data kind `{k}`"),
+            };
+            let cfg = SynthConfig {
+                n,
+                num_vars: args.usize_or("vars", 7),
+                density: args.f64_or("density", 0.4),
+                kind,
+                seed,
+            };
+            let (ds, dag) = generate(&cfg);
+            (
+                Arc::new(ds),
+                Some(dag),
+                format!(
+                    "synth(kind={kind:?}, d={}, density={}, n={n})",
+                    cfg.num_vars, cfg.density
+                ),
+            )
+        }
+        "sachs" => {
+            let net = networks::sachs();
+            let ds = networks::forward_sample(&net, n, seed);
+            (Arc::new(ds), Some(net.dag), format!("SACHS discrete (n={n})"))
+        }
+        "child" => {
+            let net = networks::child();
+            let ds = networks::forward_sample(&net, n, seed);
+            (Arc::new(ds), Some(net.dag), format!("CHILD discrete (n={n})"))
+        }
+        "sachs-cont" => {
+            let (ds, dag) = networks::sachs_continuous(n, seed);
+            (Arc::new(ds), Some(dag), format!("SACHS continuous SEM (n={n})"))
+        }
+        other => bail!("unknown workload `{other}` (synth|sachs|child|sachs-cont)"),
+    })
+}
+
+fn discovery_config(args: &Args) -> Result<DiscoveryConfig> {
+    let method = Method::parse(&args.get_or("method", "cv-lr"))
+        .context("unknown --method (cv-lr|cv|marg-lr|bic|bdeu|sc|pc|mm)")?;
+    let engine = match args.get_or("engine", "native").as_str() {
+        "native" => EngineKind::Native,
+        "pjrt" => EngineKind::Pjrt,
+        e => bail!("unknown --engine `{e}` (native|pjrt)"),
+    };
+    Ok(DiscoveryConfig {
+        method,
+        engine,
+        workers: args.usize_or("workers", 1),
+        artifacts_dir: args.get_or("artifacts", "artifacts"),
+        ..Default::default()
+    })
+}
+
+fn cmd_discover(args: &Args) -> Result<()> {
+    let (ds, truth, desc) = load_workload(args)?;
+    let cfg = discovery_config(args)?;
+    println!("workload : {desc}");
+    println!("method   : {} ({:?} engine)", cfg.method.name(), cfg.engine);
+    let out = discover(ds, &cfg)?;
+    println!("time     : {}", fmt_secs(out.seconds));
+    println!("edges    : {}", out.cpdag.num_edges());
+    if let Some(truth) = truth {
+        println!("F1       : {:.3}", skeleton_f1(&out.cpdag, &truth));
+        println!("SHD      : {:.3}", normalized_shd(&out.cpdag, &truth));
+    }
+    if let Some(st) = out.score_stats {
+        let hit = st.cache_hits as f64 / st.requests.max(1) as f64;
+        println!(
+            "service  : {} requests, {} evals, {:.0}% cache hits, {} in scoring",
+            st.requests,
+            st.evaluations,
+            hit * 100.0,
+            fmt_secs(st.eval_seconds)
+        );
+    }
+    if let Some(ci) = out.ci_tests {
+        println!("CI tests : {ci}");
+    }
+    println!("\nlearned CPDAG (X→Y directed, X—Y undirected):");
+    let p = &out.cpdag;
+    let d = p.d;
+    for i in 0..d {
+        for j in 0..d {
+            if p.directed(i, j) {
+                println!("  {i} → {j}");
+            } else if i < j && p.undirected(i, j) {
+                println!("  {i} — {j}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_score(args: &Args) -> Result<()> {
+    let (ds, _, desc) = load_workload(args)?;
+    let target = args.usize_or("target", 0);
+    let parents: Vec<usize> = args
+        .get_or("parents", "")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().context("bad --parents"))
+        .collect::<Result<_>>()?;
+    if target >= ds.d() || parents.iter().any(|&p| p >= ds.d()) {
+        bail!("variable index out of range (d = {})", ds.d());
+    }
+    println!("workload : {desc}");
+    let sw = Stopwatch::start();
+    let score = CvLrScore::native(ds);
+    let s = score.local_score(target, &parents);
+    println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    println!("cvlr selftest — all three layers");
+
+    // 1. substrate: generator + native score + GES
+    let (ds, dag) =
+        generate(&SynthConfig { n: 200, density: 0.3, seed: 1, ..Default::default() });
+    let ds = Arc::new(ds);
+    let out = discover(ds.clone(), &DiscoveryConfig::default())?;
+    let f1 = skeleton_f1(&out.cpdag, &dag);
+    println!(
+        "  [1/3] native CV-LR GES: F1 = {f1:.2} in {} — {}",
+        fmt_secs(out.seconds),
+        if f1 > 0.3 { "ok" } else { "WEAK" }
+    );
+
+    // 2. PJRT runtime: artifacts load + one engine run agreeing with native
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::load(&artifacts)
+        .with_context(|| format!("loading artifacts from {artifacts}/"))?;
+    println!(
+        "  [2/3] artifacts: cvlr buckets {:?}, exact sizes {:?}",
+        rt.cvlr_buckets, rt.exact_sizes
+    );
+    let pjrt_out = discover(
+        ds,
+        &DiscoveryConfig {
+            engine: EngineKind::Pjrt,
+            artifacts_dir: artifacts.clone(),
+            ..Default::default()
+        },
+    )?;
+    let agree = pjrt_out.cpdag == out.cpdag;
+    println!(
+        "  [3/3] PJRT CV-LR GES: F1 = {:.2} in {} — {}",
+        skeleton_f1(&pjrt_out.cpdag, &dag),
+        fmt_secs(pjrt_out.seconds),
+        if agree { "agrees with native" } else { "DISAGREES with native" }
+    );
+    if !agree {
+        bail!("selftest failed: PJRT and native engines disagree");
+    }
+    println!("selftest passed");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("cvlr {} — three-layer rust+JAX+Pallas stack", env!("CARGO_PKG_VERSION"));
+    let artifacts = args.get_or("artifacts", "artifacts");
+    match Runtime::load(&artifacts) {
+        Ok(rt) => {
+            println!("artifacts ({artifacts}/):");
+            for b in &rt.cvlr_buckets {
+                for m in &rt.m_buckets {
+                    println!("  cvlr_cond_n{b}_m{m} / cvlr_marg_n{b}_m{m}   (factor bucket)");
+                }
+            }
+            for n in &rt.exact_sizes {
+                println!("  exact_cond_n{n} / exact_marg_n{n} (exact-CV fold)");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

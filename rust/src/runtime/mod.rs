@@ -1,0 +1,227 @@
+//! PJRT runtime — loads the AOT-compiled HLO-text score artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from the rust hot path. Python never runs here.
+//!
+//! Artifact names encode their shapes (see `python/compile/aot.py`):
+//!
+//! * `cvlr_cond_n{N}` / `cvlr_marg_n{N}` — one CV fold of the CV-LR
+//!   score at factor bucket N (train rows ≤ N, test rows ≤ N/4,
+//!   columns ≤ M=128); zero row/column padding is exact, the true
+//!   counts travel as scalars.
+//! * `exact_cond_n{n}` / `exact_marg_n{n}` — one fold of the exact
+//!   O(n³) CV score at fixed fold shape (n0 = n/10, n1 = n − n/10),
+//!   feature dims padded to DX=8 / DZ=32.
+//!
+//! Thread safety: the `xla` crate's PJRT wrappers are raw-pointer types
+//! without Send/Sync. All access is serialized behind one `Mutex`, and
+//! the `unsafe impl Send/Sync` below is sound because the mutex is the
+//! only path to the wrapped pointers.
+
+pub mod pjrt_kernel;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+
+/// Column capacity of the CV-LR factor artifacts.
+pub const M_CAP: usize = 128;
+/// Feature capacities of the exact-CV artifacts.
+pub const DX_CAP: usize = 8;
+pub const DZ_CAP: usize = 32;
+
+struct Inner {
+    client: xla::PjRtClient,
+    /// name → compiled executable (compiled lazily on first use).
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The artifact registry + PJRT executor.
+pub struct Runtime {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+    /// Available CV-LR buckets (train-row capacities), ascending.
+    pub cvlr_buckets: Vec<usize>,
+    /// Available CV-LR column (rank) buckets, ascending.
+    pub m_buckets: Vec<usize>,
+    /// Available exact-CV sample sizes, ascending.
+    pub exact_sizes: Vec<usize>,
+    /// Number of artifact executions (metrics).
+    executions: Mutex<u64>,
+}
+
+// SAFETY: every use of `client`/`exes` goes through `inner: Mutex<_>`,
+// so the non-Sync raw-pointer wrappers are never touched concurrently.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Scan an artifacts directory and create a CPU PJRT client.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut cvlr_buckets = vec![];
+        let mut m_buckets = vec![];
+        let mut exact_sizes = vec![];
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("artifacts dir {dir:?} missing — run `make artifacts`"))?
+        {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(rest) = name.strip_suffix(".hlo.txt") {
+                if let Some(nm) = rest.strip_prefix("cvlr_cond_n") {
+                    // "256_m32" → (256, 32)
+                    let (n, m) = nm
+                        .split_once("_m")
+                        .ok_or_else(|| anyhow!("bad cvlr artifact name {name}"))?;
+                    cvlr_buckets.push(n.parse()?);
+                    m_buckets.push(m.parse()?);
+                } else if let Some(n) = rest.strip_prefix("exact_cond_n") {
+                    exact_sizes.push(n.parse()?);
+                }
+            }
+        }
+        if cvlr_buckets.is_empty() {
+            bail!("no cvlr artifacts found in {dir:?} — run `make artifacts`");
+        }
+        cvlr_buckets.sort_unstable();
+        cvlr_buckets.dedup();
+        m_buckets.sort_unstable();
+        m_buckets.dedup();
+        exact_sizes.sort_unstable();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            dir,
+            inner: Mutex::new(Inner { client, exes: HashMap::new() }),
+            cvlr_buckets,
+            m_buckets,
+            exact_sizes,
+            executions: Mutex::new(0),
+        })
+    }
+
+    /// Number of artifact executions so far.
+    pub fn executions(&self) -> u64 {
+        *self.executions.lock().unwrap()
+    }
+
+    /// Smallest CV-LR bucket whose train capacity fits `n1` rows.
+    pub fn bucket_for(&self, n1: usize) -> Result<usize> {
+        self.cvlr_buckets
+            .iter()
+            .cloned()
+            .find(|&b| b >= n1 && b / 4 >= n1.div_ceil(9)) // n0 ≤ ceil(n1/9) for 10-fold
+            .ok_or_else(|| anyhow!("no CV-LR bucket fits n1={n1} (have {:?})", self.cvlr_buckets))
+    }
+
+    /// Smallest column bucket fitting `m` factor columns. The artifact
+    /// pays Gram FLOPs for every padded column, so picking the tight
+    /// bucket is the single biggest hot-path lever (§Perf iteration 1).
+    pub fn m_bucket_for(&self, m: usize) -> Result<usize> {
+        self.m_buckets
+            .iter()
+            .cloned()
+            .find(|&b| b >= m)
+            .ok_or_else(|| anyhow!("no column bucket fits m={m} (have {:?})", self.m_buckets))
+    }
+
+    /// Execute artifact `name` with the given literals; expects a
+    /// 1-tuple f64 scalar result (all score graphs return that).
+    pub fn execute_scalar(&self, name: &str, args: &[xla::Literal]) -> Result<f64> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.exes.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            inner.exes.insert(name.to_string(), exe);
+        }
+        let exe = inner.exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let v = out
+            .to_vec::<f64>()
+            .map_err(|e| anyhow!("read f64 result of {name}: {e:?}"))?;
+        *self.executions.lock().unwrap() += 1;
+        v.first().cloned().ok_or_else(|| anyhow!("empty result from {name}"))
+    }
+
+    /// Pre-compile a set of artifacts (warm-up before timing runs).
+    pub fn warm_up(&self, names: &[String]) -> Result<()> {
+        for name in names {
+            // compile by executing nothing: force-lazy-compile via a map probe
+            let mut inner = self.inner.lock().unwrap();
+            if inner.exes.contains_key(name) {
+                continue;
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            inner.exes.insert(name.clone(), exe);
+        }
+        Ok(())
+    }
+}
+
+/// Row-major `Mat` → `Literal` of shape [rows, cols], zero-padded to
+/// (rows_cap, cols_cap).
+pub fn mat_literal(m: &Mat, rows_cap: usize, cols_cap: usize) -> Result<xla::Literal> {
+    assert!(m.rows <= rows_cap && m.cols <= cols_cap, "{}x{} > {rows_cap}x{cols_cap}", m.rows, m.cols);
+    let padded = if m.rows == rows_cap && m.cols == cols_cap {
+        m.clone()
+    } else {
+        m.pad_to(rows_cap, cols_cap)
+    };
+    xla::Literal::vec1(&padded.data)
+        .reshape(&[rows_cap as i64, cols_cap as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// f64 scalar literal.
+pub fn scalar_literal(x: f64) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need artifacts live in rust/tests/
+    // integration_runtime.rs (artifacts are a build product); here we
+    // test the pure helpers.
+
+    #[test]
+    fn mat_literal_pads() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let lit = mat_literal(&m, 4, 3).unwrap();
+        let v = lit.to_vec::<f64>().unwrap();
+        assert_eq!(v.len(), 12);
+        assert_eq!(&v[0..3], &[1.0, 2.0, 0.0]);
+        assert_eq!(&v[3..6], &[3.0, 4.0, 0.0]);
+        assert!(v[6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let lit = scalar_literal(2.5);
+        assert_eq!(lit.to_vec::<f64>().unwrap(), vec![2.5]);
+    }
+}

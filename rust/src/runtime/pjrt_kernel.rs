@@ -1,0 +1,124 @@
+//! The AOT-artifact implementations of the score backends:
+//!
+//! * [`PjrtCvLrKernel`] — `score::cvlr::CvLrKernel` over the
+//!   `cvlr_cond_n*` / `cvlr_marg_n*` artifacts (the production hot
+//!   path: L1 Pallas Gram products + L2 dumbbell algebra, AOT-compiled);
+//! * [`PjrtExactScorer`] — the exact O(n³) CV fold over the
+//!   `exact_*` artifacts (the Fig. 1 baseline on the same runtime).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{mat_literal, scalar_literal, Runtime, DX_CAP, DZ_CAP};
+use crate::linalg::Mat;
+use crate::score::cvlr::CvLrKernel;
+use crate::score::folds::CvParams;
+
+/// CV-LR fold evaluation through the AOT artifacts.
+pub struct PjrtCvLrKernel {
+    pub rt: Arc<Runtime>,
+}
+
+impl PjrtCvLrKernel {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        PjrtCvLrKernel { rt }
+    }
+
+    fn run_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> Result<f64> {
+        let bucket = self.rt.bucket_for(lx1.rows)?;
+        let mcap = self.rt.m_bucket_for(lx1.cols.max(lz1.cols))?;
+        let n0_cap = bucket / 4;
+        let args = vec![
+            mat_literal(lx0, n0_cap, mcap)?,
+            mat_literal(lx1, bucket, mcap)?,
+            mat_literal(lz0, n0_cap, mcap)?,
+            mat_literal(lz1, bucket, mcap)?,
+            scalar_literal(lx0.rows as f64),
+            scalar_literal(lx1.rows as f64),
+            scalar_literal(p.lambda),
+            scalar_literal(p.gamma),
+        ];
+        self.rt.execute_scalar(&format!("cvlr_cond_n{bucket}_m{mcap}"), &args)
+    }
+
+    fn run_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> Result<f64> {
+        let bucket = self.rt.bucket_for(lx1.rows)?;
+        let mcap = self.rt.m_bucket_for(lx1.cols)?;
+        let n0_cap = bucket / 4;
+        let args = vec![
+            mat_literal(lx0, n0_cap, mcap)?,
+            mat_literal(lx1, bucket, mcap)?,
+            scalar_literal(lx0.rows as f64),
+            scalar_literal(lx1.rows as f64),
+            scalar_literal(p.lambda),
+            scalar_literal(p.gamma),
+        ];
+        self.rt.execute_scalar(&format!("cvlr_marg_n{bucket}_m{mcap}"), &args)
+    }
+}
+
+impl CvLrKernel for PjrtCvLrKernel {
+    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64 {
+        self.run_cond(lx0, lx1, lz0, lz1, p).expect("PJRT cvlr_cond execution failed")
+    }
+
+    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64 {
+        self.run_marg(lx0, lx1, p).expect("PJRT cvlr_marg execution failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Exact-CV fold evaluation through the `exact_*` artifacts. Fold
+/// shapes are static per artifact: n must be one of the compiled sizes
+/// and divisible by the fold count.
+pub struct PjrtExactScorer {
+    pub rt: Arc<Runtime>,
+}
+
+impl PjrtExactScorer {
+    pub fn new(rt: Arc<Runtime>) -> Self {
+        PjrtExactScorer { rt }
+    }
+
+    /// One conditional fold: raw data blocks (x: ≤8 cols, z: ≤32 cols).
+    pub fn fold_cond(
+        &self,
+        x0: &Mat,
+        x1: &Mat,
+        z0: &Mat,
+        z1: &Mat,
+        sigx: f64,
+        sigz: f64,
+        p: &CvParams,
+    ) -> Result<f64> {
+        let n = x0.rows + x1.rows;
+        let args = vec![
+            mat_literal(x0, x0.rows, DX_CAP)?,
+            mat_literal(x1, x1.rows, DX_CAP)?,
+            mat_literal(z0, z0.rows, DZ_CAP)?,
+            mat_literal(z1, z1.rows, DZ_CAP)?,
+            scalar_literal(sigx),
+            scalar_literal(sigz),
+            scalar_literal(p.lambda),
+            scalar_literal(p.gamma),
+        ];
+        self.rt.execute_scalar(&format!("exact_cond_n{n}"), &args)
+    }
+
+    /// One marginal fold.
+    pub fn fold_marg(&self, x0: &Mat, x1: &Mat, sigx: f64, p: &CvParams) -> Result<f64> {
+        let n = x0.rows + x1.rows;
+        let args = vec![
+            mat_literal(x0, x0.rows, DX_CAP)?,
+            mat_literal(x1, x1.rows, DX_CAP)?,
+            scalar_literal(sigx),
+            scalar_literal(p.lambda),
+            scalar_literal(p.gamma),
+        ];
+        self.rt.execute_scalar(&format!("exact_marg_n{n}"), &args)
+    }
+}

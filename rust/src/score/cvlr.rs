@@ -1,0 +1,349 @@
+//! CV-LR — the paper's contribution: the cross-validated generalized
+//! score computed from low-rank kernel factors in **O(n m²)** time and
+//! **O(n m)** space (paper §5).
+//!
+//! Every n×n object of Eq. (8) is rewritten through the dumbbell-form
+//! rules (Woodbury / multiplicative closure / trace cycling /
+//! Weinstein–Aronszajn) into products of the m×m cores
+//!
+//! ```text
+//!   P = Λ̃ₓ₁ᵀΛ̃ₓ₁   E = Λ̃_z₁ᵀΛ̃ₓ₁   F = Λ̃_z₁ᵀΛ̃_z₁      (train)
+//!   V = Λ̃ₓ₀ᵀΛ̃ₓ₀   U = Λ̃_z₀ᵀΛ̃ₓ₀   S = Λ̃_z₀ᵀΛ̃_z₀      (test)
+//! ```
+//!
+//! with `D = (n₁λI + F)⁻¹`, `T = P − 2EᵀDE + EᵀDFDE`,
+//! `Q = I + T/(n₁γ)` (whose Cholesky gives both `log|n₁βB+I| = log|Q|`
+//! and `G = Q⁻¹`), and `W = Λ̃ₓ₁ᵀCΛ̃ₓ₁ = c₁²T − n₁β c₁⁴ T G T`
+//! (`c₁ = 1/(n₁λ)`) — algebraically identical to the paper's
+//! 𝔄/𝔅/ℭ/𝔇 decomposition (Eq. 18-19) but with fewer products.
+//! The final trace is Eq. (26): `Tr[(I − n₁βW)·M₂]` with
+//! `M₂ = V − 2c₁·Eᵀ(I−DF)U + c₁²·Eᵀ(I−DF)S(I−DF)ᵀE`.
+//!
+//! The m×m core algebra sits behind [`CvLrKernel`] so that it can run
+//! either natively (this module) or through the AOT-compiled XLA
+//! artifacts (`runtime::PjrtKernel`), which also compute the O(nm²)
+//! Gram products with the L1 Pallas kernel.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::folds::{stride_folds, CvParams};
+use super::LocalScore;
+use crate::data::Dataset;
+use crate::kernel::{median_heuristic, Kernel};
+use crate::linalg::{Cholesky, Mat};
+use crate::lowrank::{factorize, LowRank, LowRankConfig};
+
+/// Backend for the per-fold CV-LR score evaluation. Factors arrive
+/// *already centered by the train mean*.
+pub trait CvLrKernel: Send + Sync {
+    /// Conditional score (Eq. 8 via §5): one fold.
+    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64;
+    /// Marginal score (Eq. 9 via §5 "|z|=0"): one fold.
+    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64;
+    /// Human-readable backend name (for bench output).
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust f64 implementation of the dumbbell-form algebra.
+pub struct NativeCvLrKernel;
+
+impl CvLrKernel for NativeCvLrKernel {
+    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64 {
+        let n1 = lx1.rows as f64;
+        let n0 = lx0.rows as f64;
+        let (lam, gam, beta) = (p.lambda, p.gamma, p.beta());
+        let c1 = 1.0 / (n1 * lam);
+
+        // m×m cores — the only O(n·m²) work.
+        let pm = lx1.t_matmul(lx1); // P
+        let e = lz1.t_matmul(lx1); // E
+        let f = lz1.t_matmul(lz1); // F
+        let v = lx0.t_matmul(lx0); // V
+        let u = lz0.t_matmul(lx0); // U
+        let s = lz0.t_matmul(lz0); // S
+
+        // D = (n₁λ I + F)⁻¹  (mz×mz)
+        let d = Cholesky::new(&f.add_diag(n1 * lam)).expect("F + n1λI SPD").inverse();
+        // T = P − 2 EᵀDE + EᵀDFDE = (n₁λ)² Λ̃ᵀA²Λ̃   (Eq. 17)
+        let de = d.matmul(&e); // mz×mx
+        let et_de = e.t_matmul(&de); // EᵀDE (mx×mx)
+        let fde = f.matmul(&de);
+        let et_dfde = de.t_matmul(&fde); // EᵀDFDE
+        let t = &(&pm - &et_de.scale(2.0)) + &et_dfde;
+
+        // Q = I + T/(n₁γ); log|Q| = log|n₁βB + I| (Eq. 20-21); G = Q⁻¹.
+        let q = t.scale(1.0 / (n1 * gam)).add_diag(1.0);
+        let chq = Cholesky::new(&q).expect("Q SPD");
+        let logdet = chq.log_det();
+        let g = chq.inverse();
+
+        // W = c₁²·T − n₁β·c₁⁴·T G T  (mx×mx)
+        let tgt = t.matmul(&g).matmul(&t);
+        let w = &t.scale(c1 * c1) - &tgt.scale(n1 * beta * c1.powi(4));
+
+        // I − DF (mz×mz) and M₂ (Eq. 26).
+        let idf = &Mat::eye(f.rows) - &d.matmul(&f);
+        let et_idf = e.t_matmul(&idf); // Eᵀ(I−DF)  (mx×mz)
+        let m2 = {
+            let second = et_idf.matmul(&u); // Eᵀ(I−DF)U (mx×mx)
+            let third = et_idf.matmul(&s).matmul_t(&et_idf); // Eᵀ(I−DF)S(I−DF)ᵀE
+            &(&v - &second.scale(2.0 * c1)) + &third.scale(c1 * c1)
+        };
+
+        // Tr[(I − n₁βW) M₂]
+        let total_trace = m2.trace() - n1 * beta * w.trace_prod(&m2);
+
+        -(n0 * n0 / 2.0) * (2.0 * std::f64::consts::PI).ln()
+            - (n0 / 2.0) * logdet
+            - (n0 * n1 / 2.0) * gam.ln()
+            - total_trace / (2.0 * gam)
+    }
+
+    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64 {
+        let n1 = lx1.rows as f64;
+        let n0 = lx0.rows as f64;
+        let (lam, gam) = (p.lambda, p.gamma);
+        let c1 = 1.0 / (n1 * lam);
+
+        let pm = lx1.t_matmul(lx1); // P
+        let v = lx0.t_matmul(lx0); // V
+
+        // Q̌ = I + c₁ P; log|Q̌| = log|I + c₁K̃ₓ¹| (Eq. 28); Ď = Q̌⁻¹.
+        let q = pm.scale(c1).add_diag(1.0);
+        let chq = Cholesky::new(&q).expect("Q̌ SPD");
+        let logdet = chq.log_det();
+        let dchk = chq.inverse();
+
+        // Tr(K̃⁰) = Tr(V); Tr(K̃⁰¹B̌K̃¹⁰) = Tr(VP) − c₁Tr(VPĎP)  (Eq. 29-30)
+        let vp = v.matmul(&pm);
+        let tr_vp = vp.trace();
+        let tr_vpdp = vp.matmul(&dchk).trace_prod(&pm);
+        let trace_total = v.trace() - (tr_vp - c1 * tr_vpdp) / (n1 * gam);
+
+        -(n0 * n0 / 2.0) * (2.0 * std::f64::consts::PI).ln()
+            - (n0 / 2.0) * logdet
+            - (n0 * n1 / 2.0) * gam.ln()
+            - trace_total / (2.0 * gam)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Split a full-data factor into (test, train) fold factors, both
+/// centered by the *train* column means (matching `cv_exact`).
+pub fn split_center(lam: &Mat, test: &[usize], train: &[usize]) -> (Mat, Mat) {
+    let m = lam.cols;
+    let mut mean = vec![0.0; m];
+    for &r in train {
+        for c in 0..m {
+            mean[c] += lam[(r, c)];
+        }
+    }
+    for mc in &mut mean {
+        *mc /= train.len() as f64;
+    }
+    let take = |rows: &[usize]| {
+        let mut out = Mat::zeros(rows.len(), m);
+        for (i, &r) in rows.iter().enumerate() {
+            for c in 0..m {
+                out[(i, c)] = lam[(r, c)] - mean[c];
+            }
+        }
+        out
+    };
+    (take(test), take(train))
+}
+
+/// The CV-LR local score with per-variable/per-parent-set factor caching.
+pub struct CvLrScore<K: CvLrKernel> {
+    pub ds: Arc<Dataset>,
+    pub params: CvParams,
+    pub lr_cfg: LowRankConfig,
+    pub backend: K,
+    /// Low-rank factors keyed by the sorted variable set.
+    factor_cache: Mutex<HashMap<Vec<usize>, Arc<Mat>>>,
+}
+
+impl CvLrScore<NativeCvLrKernel> {
+    /// CV-LR with the native rust backend and paper-default parameters.
+    pub fn native(ds: Arc<Dataset>) -> Self {
+        CvLrScore::with_backend(ds, CvParams::default(), LowRankConfig::default(), NativeCvLrKernel)
+    }
+}
+
+impl<K: CvLrKernel> CvLrScore<K> {
+    pub fn with_backend(ds: Arc<Dataset>, params: CvParams, lr_cfg: LowRankConfig, backend: K) -> Self {
+        CvLrScore { ds, params, lr_cfg, backend, factor_cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Low-rank factor of the kernel matrix of a variable set (Algorithm
+    /// 2 for small-cardinality discrete sets, Algorithm 1 otherwise).
+    pub fn factor_for(&self, vars: &[usize]) -> Arc<Mat> {
+        let mut key: Vec<usize> = vars.to_vec();
+        key.sort_unstable();
+        if let Some(f) = self.factor_cache.lock().unwrap().get(&key) {
+            return f.clone();
+        }
+        let block = self.ds.block_multi(&key);
+        let kern = Kernel::Rbf { sigma: median_heuristic(&block, self.params.width_factor) };
+        let LowRank { lambda, .. } =
+            factorize(kern, &block, self.ds.all_discrete(&key), &self.lr_cfg);
+        let arc = Arc::new(lambda);
+        self.factor_cache.lock().unwrap().insert(key, arc.clone());
+        arc
+    }
+}
+
+impl<K: CvLrKernel> LocalScore for CvLrScore<K> {
+    fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
+        let lx = self.factor_for(&[target]);
+        let folds = stride_folds(self.ds.n(), self.params.folds);
+        if parents.is_empty() {
+            let mut total = 0.0;
+            for (test, train) in &folds {
+                let (lx0, lx1) = split_center(&lx, test, train);
+                total += self.backend.score_marg(&lx0, &lx1, &self.params);
+            }
+            return total / folds.len() as f64;
+        }
+        let lz = self.factor_for(parents);
+        let mut total = 0.0;
+        for (test, train) in &folds {
+            let (lx0, lx1) = split_center(&lx, test, train);
+            let (lz0, lz1) = split_center(&lz, test, train);
+            total += self.backend.score_cond(&lx0, &lx1, &lz0, &lz1, &self.params);
+        }
+        total / folds.len() as f64
+    }
+
+    fn num_vars(&self) -> usize {
+        self.ds.d()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::cv_exact::CvExactScore;
+    use crate::util::Pcg64;
+
+    fn continuous_ds(n: usize, seed: u64) -> Arc<Dataset> {
+        let mut rng = Pcg64::new(seed);
+        let mut data = Mat::zeros(n, 3);
+        for r in 0..n {
+            let x1 = rng.normal();
+            let x2 = (x1 + 0.2 * rng.normal()).sin() + 0.2 * rng.normal();
+            let x3 = rng.normal();
+            data[(r, 0)] = x1;
+            data[(r, 1)] = x2;
+            data[(r, 2)] = x3;
+        }
+        Arc::new(Dataset::from_columns(data, &[false, false, false]))
+    }
+
+    fn discrete_ds(n: usize, seed: u64) -> Arc<Dataset> {
+        let mut rng = Pcg64::new(seed);
+        let mut data = Mat::zeros(n, 2);
+        for r in 0..n {
+            let a = rng.below(3);
+            let b = if rng.bernoulli(0.8) { a } else { rng.below(3) };
+            data[(r, 0)] = a as f64;
+            data[(r, 1)] = b as f64;
+        }
+        Arc::new(Dataset::from_columns(data, &[true, true]))
+    }
+
+    /// The Table-1 anchor: CV-LR must match exact CV to < 0.5% relative
+    /// error on continuous data with m = 100.
+    #[test]
+    fn matches_exact_cv_continuous() {
+        let ds = continuous_ds(150, 1);
+        let exact = CvExactScore::new(ds.clone(), CvParams::default());
+        let lr = CvLrScore::native(ds);
+        for (target, parents) in [(1usize, vec![0usize]), (0, vec![]), (1, vec![0, 2])] {
+            let se = exact.local_score(target, &parents);
+            let sl = lr.local_score(target, &parents);
+            let rel = ((se - sl) / se).abs();
+            assert!(rel < 5e-3, "target {target} parents {parents:?}: exact {se} lr {sl} rel {rel}");
+        }
+    }
+
+    /// Discrete data: Algorithm 2 is exact (Lemma 4.3) so CV-LR must
+    /// match exact CV to numerical precision.
+    #[test]
+    fn matches_exact_cv_discrete_exactly() {
+        let ds = discrete_ds(100, 2);
+        let exact = CvExactScore::new(ds.clone(), CvParams::default());
+        let lr = CvLrScore::native(ds);
+        for (target, parents) in [(1usize, vec![0usize]), (0, vec![]), (1, vec![])] {
+            let se = exact.local_score(target, &parents);
+            let sl = lr.local_score(target, &parents);
+            let rel = ((se - sl) / se).abs();
+            assert!(rel < 1e-9, "target {target} parents {parents:?}: exact {se} lr {sl} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn local_consistency_direction() {
+        let ds = continuous_ds(200, 3);
+        let lr = CvLrScore::native(ds);
+        let dep = lr.local_score(1, &[0]);
+        let marg = lr.local_score(1, &[]);
+        assert!(dep > marg, "dependent parent must improve the score: {dep} vs {marg}");
+        let ind_marg = lr.local_score(2, &[]);
+        let ind_spur = lr.local_score(2, &[0]);
+        assert!(ind_marg > ind_spur - 1.0, "spurious parent should not win big");
+    }
+
+    #[test]
+    fn factor_cache_reused() {
+        let ds = continuous_ds(80, 4);
+        let lr = CvLrScore::native(ds);
+        let f1 = lr.factor_for(&[0, 1]);
+        let f2 = lr.factor_for(&[1, 0]); // different order, same set
+        assert!(Arc::ptr_eq(&f1, &f2));
+    }
+
+    #[test]
+    fn split_center_zero_means_on_train() {
+        let mut rng = Pcg64::new(5);
+        let lam = Mat::from_vec(20, 3, (0..60).map(|_| rng.normal()).collect());
+        let test: Vec<usize> = (0..5).collect();
+        let train: Vec<usize> = (5..20).collect();
+        let (l0, l1) = split_center(&lam, &test, &train);
+        assert_eq!(l0.rows, 5);
+        assert_eq!(l1.rows, 15);
+        for c in 0..3 {
+            let s: f64 = (0..15).map(|r| l1[(r, c)]).sum();
+            assert!(s.abs() < 1e-10, "train column {c} mean must be 0");
+        }
+    }
+
+    /// Zero-column padding must not change the score — the invariance the
+    /// fixed-shape XLA artifacts rely on (DESIGN.md §2).
+    #[test]
+    fn padding_invariance_native() {
+        let ds = continuous_ds(100, 6);
+        let lr = CvLrScore::native(ds);
+        let lx = lr.factor_for(&[1]);
+        let lz = lr.factor_for(&[0]);
+        let folds = stride_folds(100, 10);
+        let (test, train) = &folds[0];
+        let (lx0, lx1) = split_center(&lx, test, train);
+        let (lz0, lz1) = split_center(&lz, test, train);
+        let k = NativeCvLrKernel;
+        let s_ref = k.score_cond(&lx0, &lx1, &lz0, &lz1, &CvParams::default());
+        let pad = |m: &Mat| m.pad_to(m.rows, m.cols + 7);
+        let s_pad = k.score_cond(&pad(&lx0), &pad(&lx1), &pad(&lz0), &pad(&lz1), &CvParams::default());
+        assert!(
+            ((s_ref - s_pad) / s_ref).abs() < 1e-10,
+            "column padding changed the score: {s_ref} vs {s_pad}"
+        );
+        let m_ref = k.score_marg(&lx0, &lx1, &CvParams::default());
+        let m_pad = k.score_marg(&pad(&lx0), &pad(&lx1), &CvParams::default());
+        assert!(((m_ref - m_pad) / m_ref).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,78 @@
+//! Cross-validation fold assignment shared by CV and CV-LR so that the
+//! two scores are computed on *identical* splits (Table 1 compares them
+//! pointwise).
+
+/// Deterministic Q-fold split: sample i is in the test set of fold
+/// `i mod q`. Returns, for each fold, (test_indices, train_indices).
+pub fn stride_folds(n: usize, q: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(q >= 2 && n >= 2 * q, "need n >= 2q for {q}-fold CV of {n} samples");
+    (0..q)
+        .map(|f| {
+            let mut test = Vec::with_capacity(n / q + 1);
+            let mut train = Vec::with_capacity(n - n / q);
+            for i in 0..n {
+                if i % q == f {
+                    test.push(i);
+                } else {
+                    train.push(i);
+                }
+            }
+            (test, train)
+        })
+        .collect()
+}
+
+/// The CV hyper-parameters of §7.1 / Appendix A.2.
+#[derive(Clone, Copy, Debug)]
+pub struct CvParams {
+    /// Ridge regularization λ (paper: 0.01).
+    pub lambda: f64,
+    /// Positive-definiteness jitter γ (paper: 0.01).
+    pub gamma: f64,
+    /// Number of folds Q (paper: 10).
+    pub folds: usize,
+    /// Kernel width multiplier over the median distance (paper: 2.0).
+    pub width_factor: f64,
+}
+
+impl Default for CvParams {
+    fn default() -> Self {
+        CvParams { lambda: 0.01, gamma: 0.01, folds: 10, width_factor: 2.0 }
+    }
+}
+
+impl CvParams {
+    /// β := λ²/γ (defined under Eq. 8).
+    pub fn beta(&self) -> f64 {
+        self.lambda * self.lambda / self.gamma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_partition_samples() {
+        let folds = stride_folds(53, 10);
+        assert_eq!(folds.len(), 10);
+        let mut seen = vec![0usize; 53];
+        for (test, train) in &folds {
+            assert_eq!(test.len() + train.len(), 53);
+            for &t in test {
+                seen[t] += 1;
+            }
+            // disjoint
+            for &t in test {
+                assert!(!train.contains(&t));
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "each sample tests exactly once");
+    }
+
+    #[test]
+    fn beta_definition() {
+        let p = CvParams::default();
+        assert!((p.beta() - 0.01).abs() < 1e-15);
+    }
+}

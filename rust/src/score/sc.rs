@@ -1,0 +1,131 @@
+//! SC score (Sokolova et al. 2014, as adapted in the paper's App. A.2):
+//! BIC-style Gaussian likelihood where Pearson correlation is replaced by
+//! Spearman rank correlation — capturing monotone relationships between
+//! mixed continuous/discrete variables. Unsuitable for multi-dimensional
+//! variables (the paper notes the same limitation).
+
+use std::sync::Arc;
+
+use super::LocalScore;
+use crate::data::Dataset;
+use crate::linalg::{Cholesky, Mat};
+use crate::util::stats::ranks;
+
+pub struct ScScore {
+    pub ds: Arc<Dataset>,
+    /// Rank-transformed (and standardized) single-column data per var.
+    ranked: Vec<Vec<f64>>,
+}
+
+impl ScScore {
+    pub fn new(ds: Arc<Dataset>) -> Self {
+        let n = ds.n();
+        let ranked = (0..ds.d())
+            .map(|i| {
+                let b = ds.block(i);
+                // rank the first column of the block (SC is 1-d only)
+                let col: Vec<f64> = (0..n).map(|r| b[(r, 0)]).collect();
+                let mut r = ranks(&col);
+                // standardize ranks
+                let mean = (n as f64 + 1.0) / 2.0;
+                let sd = {
+                    let v = r.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+                    v.sqrt().max(1e-12)
+                };
+                for x in &mut r {
+                    *x = (*x - mean) / sd;
+                }
+                r
+            })
+            .collect();
+        ScScore { ds, ranked }
+    }
+}
+
+impl LocalScore for ScScore {
+    fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
+        let n = self.ds.n();
+        let y = &self.ranked[target];
+        // Gaussian BIC on rank-transformed data: regress ranks on ranks.
+        let k = parents.len();
+        let mut x = Mat::zeros(n, k);
+        for (c, &p) in parents.iter().enumerate() {
+            for r in 0..n {
+                x[(r, c)] = self.ranked[p][r];
+            }
+        }
+        let rss = {
+            // normal equations without intercept (ranks are centered)
+            if k == 0 {
+                y.iter().map(|v| v * v).sum::<f64>()
+            } else {
+                let xtx = x.t_matmul(&x).add_diag(1e-9);
+                let mut xty = Mat::zeros(k, 1);
+                for r in 0..n {
+                    for c in 0..k {
+                        xty[(c, 0)] += x[(r, c)] * y[r];
+                    }
+                }
+                let beta = Cholesky::new(&xtx).expect("XtX SPD").solve(&xty);
+                let mut s = 0.0;
+                for r in 0..n {
+                    let mut pred = 0.0;
+                    for c in 0..k {
+                        pred += x[(r, c)] * beta[(c, 0)];
+                    }
+                    let e = y[r] - pred;
+                    s += e * e;
+                }
+                s
+            }
+        }
+        .max(1e-12);
+        let ll = -(n as f64 / 2.0) * (rss / n as f64).ln();
+        ll - (k as f64 + 1.0) * (n as f64).ln() / 2.0
+    }
+
+    fn num_vars(&self) -> usize {
+        self.ds.d()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn monotone_nonlinear_dependency_detected() {
+        // X2 = exp(X1) — Pearson-BIC is weak here, Spearman is perfect.
+        let mut rng = Pcg64::new(1);
+        let n = 300;
+        let mut data = Mat::zeros(n, 3);
+        for r in 0..n {
+            let x1 = rng.normal();
+            data[(r, 0)] = x1;
+            data[(r, 1)] = (2.0 * x1).exp() + 0.01 * rng.normal();
+            data[(r, 2)] = rng.normal();
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[false, false, false]));
+        let s = ScScore::new(ds);
+        assert!(s.local_score(1, &[0]) > s.local_score(1, &[]));
+        assert!(s.local_score(1, &[0]) > s.local_score(1, &[2]));
+        assert!(s.local_score(2, &[]) > s.local_score(2, &[0]));
+    }
+
+    #[test]
+    fn works_on_discrete_codes() {
+        let mut rng = Pcg64::new(2);
+        let n = 400;
+        let mut data = Mat::zeros(n, 2);
+        for r in 0..n {
+            let a = rng.below(4);
+            let b = (a + usize::from(rng.bernoulli(0.2))) % 4;
+            data[(r, 0)] = a as f64;
+            data[(r, 1)] = b as f64;
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[true, true]));
+        let s = ScScore::new(ds);
+        assert!(s.local_score(1, &[0]) > s.local_score(1, &[]));
+    }
+}

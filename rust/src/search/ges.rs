@@ -1,0 +1,337 @@
+//! Greedy equivalence search (GES, Chickering 2002) over CPDAGs with a
+//! decomposable local score — the search procedure of paper §6.
+//!
+//! Forward phase: repeatedly apply the best valid `Insert(X, Y, T)`;
+//! backward phase: repeatedly apply the best valid `Delete(X, Y, H)`.
+//! Operator validity and score deltas follow Chickering's Theorems 15-17:
+//!
+//! * Insert valid ⟺ `NA_{Y,X} ∪ T` is a clique and every semi-directed
+//!   path Y⇝X crosses `NA_{Y,X} ∪ T`;
+//!   Δ = s(Y, NA∪T∪Pa(Y)∪{X}) − s(Y, NA∪T∪Pa(Y)).
+//! * Delete valid ⟺ `NA_{Y,X} \ H` is a clique;
+//!   Δ = s(Y, (NA\H)∪Pa(Y)\{X}) − s(Y, (NA\H)∪Pa(Y)∪{X}).
+//!
+//! After each operator the PDAG is re-completed to a CPDAG via
+//! Dor–Tarsi consistent extension + Chickering edge labeling.
+
+use crate::graph::pdag::{dag_to_cpdag, Pdag};
+use crate::score::LocalScore;
+
+/// GES configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct GesConfig {
+    /// Minimum score improvement to accept an operator.
+    pub min_improvement: f64,
+    /// Cap on the size of the T/H subsets enumerated per pair (the
+    /// number of subsets is 2^|candidates|; candidates above the cap are
+    /// truncated — graphs in the paper's experiments are small enough
+    /// that the cap never binds at 12).
+    pub max_subset_vars: usize,
+    /// Optional cap on parent-set size (None = unlimited, the paper's
+    /// setting).
+    pub max_parents: Option<usize>,
+}
+
+impl Default for GesConfig {
+    fn default() -> Self {
+        GesConfig { min_improvement: 1e-9, max_subset_vars: 12, max_parents: None }
+    }
+}
+
+/// Search outcome.
+pub struct GesResult {
+    /// The learned Markov equivalence class.
+    pub cpdag: Pdag,
+    /// Number of accepted forward / backward operators.
+    pub forward_steps: usize,
+    pub backward_steps: usize,
+    /// Total local-score evaluations requested (pre-cache).
+    pub score_calls: usize,
+}
+
+fn union_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = a.iter().chain(b.iter()).cloned().collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn subsets(candidates: &[usize], cap_vars: usize) -> Vec<Vec<usize>> {
+    let c: Vec<usize> = candidates.iter().cloned().take(cap_vars).collect();
+    let k = c.len();
+    let mut out = Vec::with_capacity(1 << k);
+    for mask in 0u64..(1u64 << k) {
+        let mut s = Vec::new();
+        for (bit, &v) in c.iter().enumerate() {
+            if mask >> bit & 1 == 1 {
+                s.push(v);
+            }
+        }
+        out.push(s);
+    }
+    // smaller subsets first — cheaper scores get cached early
+    out.sort_by_key(|s| s.len());
+    out
+}
+
+/// One candidate operator.
+struct Candidate {
+    x: usize,
+    y: usize,
+    set: Vec<usize>, // T for insert, H for delete
+    delta: f64,
+}
+
+/// Run GES from the empty graph.
+pub fn ges<S: LocalScore + ?Sized>(score: &S, cfg: &GesConfig) -> GesResult {
+    let d = score.num_vars();
+    let mut state = Pdag::new(d);
+    let mut score_calls = 0usize;
+    let mut forward_steps = 0usize;
+    let mut backward_steps = 0usize;
+
+    // ---------------- forward phase ----------------
+    loop {
+        let mut best: Option<Candidate> = None;
+        for y in 0..d {
+            let pa_y = state.parents(y);
+            if let Some(maxp) = cfg.max_parents {
+                if pa_y.len() >= maxp {
+                    continue;
+                }
+            }
+            for x in 0..d {
+                if x == y || state.adjacent(x, y) {
+                    continue;
+                }
+                let na = state.na(y, x);
+                let t0: Vec<usize> = state
+                    .neighbors(y)
+                    .into_iter()
+                    .filter(|&n| n != x && !state.adjacent(n, x))
+                    .collect();
+                for t in subsets(&t0, cfg.max_subset_vars) {
+                    let nat = union_sorted(&na, &t);
+                    if !state.is_clique(&nat) {
+                        continue;
+                    }
+                    if !state.all_semi_directed_paths_blocked(y, x, &nat) {
+                        continue;
+                    }
+                    let base = union_sorted(&nat, &pa_y);
+                    if let Some(maxp) = cfg.max_parents {
+                        if base.len() + 1 > maxp {
+                            continue;
+                        }
+                    }
+                    let with_x = union_sorted(&base, &[x]);
+                    score_calls += 2;
+                    let delta = score.local_score(y, &with_x) - score.local_score(y, &base);
+                    if delta > cfg.min_improvement
+                        && best.as_ref().map(|b| delta > b.delta).unwrap_or(true)
+                    {
+                        best = Some(Candidate { x, y, set: t, delta });
+                    }
+                }
+            }
+        }
+        match best {
+            Some(c) => {
+                // apply Insert(x, y, T)
+                state.add_directed(c.x, c.y);
+                for &t in &c.set {
+                    state.orient(t, c.y);
+                }
+                state = recomplete(&state);
+                forward_steps += 1;
+            }
+            None => break,
+        }
+    }
+
+    // ---------------- backward phase ----------------
+    loop {
+        let mut best: Option<Candidate> = None;
+        for y in 0..d {
+            let pa_y = state.parents(y);
+            for x in 0..d {
+                if x == y || !(state.directed(x, y) || state.undirected(x, y)) {
+                    continue;
+                }
+                let na = state.na(y, x);
+                for h in subsets(&na, cfg.max_subset_vars) {
+                    let na_minus_h: Vec<usize> =
+                        na.iter().cloned().filter(|v| !h.contains(v)).collect();
+                    if !state.is_clique(&na_minus_h) {
+                        continue;
+                    }
+                    let pa_wo_x: Vec<usize> =
+                        pa_y.iter().cloned().filter(|&p| p != x).collect();
+                    let base = union_sorted(&na_minus_h, &pa_wo_x);
+                    let with_x = union_sorted(&base, &[x]);
+                    score_calls += 2;
+                    let delta = score.local_score(y, &base) - score.local_score(y, &with_x);
+                    if delta > cfg.min_improvement
+                        && best.as_ref().map(|b| delta > b.delta).unwrap_or(true)
+                    {
+                        best = Some(Candidate { x, y, set: h, delta });
+                    }
+                }
+            }
+        }
+        match best {
+            Some(c) => {
+                // apply Delete(x, y, H)
+                state.remove_edge(c.x, c.y);
+                for &h in &c.set {
+                    if state.undirected(c.y, h) {
+                        state.orient(c.y, h);
+                    }
+                    if state.undirected(c.x, h) {
+                        state.orient(c.x, h);
+                    }
+                }
+                state = recomplete(&state);
+                backward_steps += 1;
+            }
+            None => break,
+        }
+    }
+
+    GesResult { cpdag: state, forward_steps, backward_steps, score_calls }
+}
+
+/// Re-complete a PDAG to the CPDAG of its equivalence class
+/// (consistent-extension DAG → Chickering labeling). Falls back to Meek
+/// closure if no consistent extension exists (should not happen for
+/// valid operators).
+fn recomplete(p: &Pdag) -> Pdag {
+    match p.to_dag() {
+        Some(dag) => dag_to_cpdag(&dag),
+        None => {
+            let mut q = p.clone();
+            q.meek_closure();
+            q
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::graph::dag::Dag;
+    use crate::graph::metrics::{normalized_shd, skeleton_f1};
+    use crate::linalg::Mat;
+    use crate::score::bdeu::BdeuScore;
+    use crate::score::bic::BicScore;
+    use crate::score::CachedScore;
+    use crate::util::Pcg64;
+    use std::sync::Arc;
+
+    fn linear_chain_ds(n: usize, seed: u64) -> Arc<Dataset> {
+        // X1 → X2 → X3, plus isolated X4
+        let mut rng = Pcg64::new(seed);
+        let mut data = Mat::zeros(n, 4);
+        for r in 0..n {
+            let x1 = rng.normal();
+            let x2 = 1.2 * x1 + 0.4 * rng.normal();
+            let x3 = -0.9 * x2 + 0.4 * rng.normal();
+            let x4 = rng.normal();
+            data[(r, 0)] = x1;
+            data[(r, 1)] = x2;
+            data[(r, 2)] = x3;
+            data[(r, 3)] = x4;
+        }
+        Arc::new(Dataset::from_columns(data, &[false; 4]))
+    }
+
+    #[test]
+    fn recovers_linear_chain_with_bic() {
+        let ds = linear_chain_ds(800, 1);
+        let score = CachedScore::new(BicScore::new(ds));
+        let res = ges(&score, &GesConfig::default());
+        let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
+        assert_eq!(skeleton_f1(&res.cpdag, &truth), 1.0, "skeleton must be exact");
+        assert_eq!(normalized_shd(&res.cpdag, &truth), 0.0, "equivalence class must match");
+        assert!(res.forward_steps >= 2);
+    }
+
+    #[test]
+    fn recovers_collider_with_bic() {
+        // X1 → X3 ← X2 — compelled v-structure.
+        let mut rng = Pcg64::new(2);
+        let n = 800;
+        let mut data = Mat::zeros(n, 3);
+        for r in 0..n {
+            let x1 = rng.normal();
+            let x2 = rng.normal();
+            let x3 = x1 + x2 + 0.4 * rng.normal();
+            data[(r, 0)] = x1;
+            data[(r, 1)] = x2;
+            data[(r, 2)] = x3;
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
+        let score = CachedScore::new(BicScore::new(ds));
+        let res = ges(&score, &GesConfig::default());
+        assert!(res.cpdag.directed(0, 2), "v-structure arm 0→2");
+        assert!(res.cpdag.directed(1, 2), "v-structure arm 1→2");
+        assert!(!res.cpdag.adjacent(0, 1));
+    }
+
+    #[test]
+    fn recovers_discrete_chain_with_bdeu() {
+        let mut rng = Pcg64::new(3);
+        let n = 1500;
+        let mut data = Mat::zeros(n, 3);
+        for r in 0..n {
+            let a = rng.below(3);
+            let b = if rng.bernoulli(0.85) { a } else { rng.below(3) };
+            let c = if rng.bernoulli(0.85) { b } else { rng.below(3) };
+            data[(r, 0)] = a as f64;
+            data[(r, 1)] = b as f64;
+            data[(r, 2)] = c as f64;
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[true; 3]));
+        let score = CachedScore::new(BdeuScore::new(ds));
+        let res = ges(&score, &GesConfig::default());
+        let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+        assert_eq!(skeleton_f1(&res.cpdag, &truth), 1.0);
+    }
+
+    #[test]
+    fn empty_data_gives_empty_graph() {
+        // independent variables: GES must return the empty CPDAG
+        let mut rng = Pcg64::new(4);
+        let n = 500;
+        let mut data = Mat::zeros(n, 3);
+        for v in &mut data.data {
+            *v = rng.normal();
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
+        let score = CachedScore::new(BicScore::new(ds));
+        let res = ges(&score, &GesConfig::default());
+        assert_eq!(res.cpdag.num_edges(), 0);
+    }
+
+    #[test]
+    fn output_is_valid_cpdag() {
+        let ds = linear_chain_ds(400, 5);
+        let score = CachedScore::new(BicScore::new(ds));
+        let res = ges(&score, &GesConfig::default());
+        // a valid CPDAG has a consistent extension whose CPDAG is itself
+        let dag = res.cpdag.to_dag().expect("CPDAG must extend to a DAG");
+        assert_eq!(dag_to_cpdag(&dag), res.cpdag);
+    }
+
+    #[test]
+    fn subsets_enumeration() {
+        let s = subsets(&[1, 2], 12);
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(&vec![]));
+        assert!(s.contains(&vec![1, 2]));
+        // cap respected
+        let s = subsets(&[1, 2, 3, 4], 2);
+        assert_eq!(s.len(), 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Causal structure search algorithms.
+//!
+//! * [`ges`] — greedy equivalence search (Chickering 2002), the search
+//!   procedure the paper pairs with the CV-LR score (§6);
+//! * [`pc`] — the PC algorithm (constraint-based baseline, §7.1);
+//! * [`mmmb`] — max-min Markov-blanket search with symmetry correction
+//!   (constraint-based baseline, §7.1).
+
+pub mod ges;
+pub mod pc;
+pub mod mmmb;
+
+pub use ges::{ges, GesConfig, GesResult};

@@ -1,0 +1,223 @@
+//! The PC algorithm (Spirtes et al.) with the *stable* skeleton phase,
+//! v-structure orientation from separating sets, and Meek closure —
+//! the constraint-based baseline "PC" of §7.1 (paired with KCI).
+
+use std::collections::HashMap;
+
+use crate::ci::CiTest;
+use crate::graph::pdag::Pdag;
+
+/// PC configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PcConfig {
+    /// Significance level α (paper: 0.05).
+    pub alpha: f64,
+    /// Cap on conditioning-set size (None = up to adjacency size).
+    pub max_cond: Option<usize>,
+}
+
+impl Default for PcConfig {
+    fn default() -> Self {
+        PcConfig { alpha: 0.05, max_cond: None }
+    }
+}
+
+/// PC result: the CPDAG plus the separating sets found.
+pub struct PcResult {
+    pub cpdag: Pdag,
+    pub sepsets: HashMap<(usize, usize), Vec<usize>>,
+    pub tests_run: u64,
+}
+
+fn combinations(pool: &[usize], k: usize) -> Vec<Vec<usize>> {
+    if k == 0 {
+        return vec![vec![]];
+    }
+    if pool.len() < k {
+        return vec![];
+    }
+    let mut out = vec![];
+    let mut idx: Vec<usize> = (0..k).collect();
+    loop {
+        out.push(idx.iter().map(|&i| pool[i]).collect());
+        // next combination
+        let mut i = k;
+        loop {
+            if i == 0 {
+                return out;
+            }
+            i -= 1;
+            if idx[i] != i + pool.len() - k {
+                break;
+            }
+            if i == 0 {
+                return out;
+            }
+        }
+        idx[i] += 1;
+        for j in (i + 1)..k {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+/// Run PC-stable.
+pub fn pc<T: CiTest + ?Sized>(test: &T, cfg: &PcConfig) -> PcResult {
+    let d = test.num_vars();
+    // adjacency matrix of the working skeleton (complete graph start)
+    let mut adj = vec![true; d * d];
+    for i in 0..d {
+        adj[i * d + i] = false;
+    }
+    let mut sepsets: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+    let mut tests_run = 0u64;
+
+    let mut level = 0usize;
+    loop {
+        if let Some(mc) = cfg.max_cond {
+            if level > mc {
+                break;
+            }
+        }
+        // PC-stable: snapshot adjacencies at the start of the level
+        let snapshot = adj.clone();
+        let neighbors = |a: &Vec<bool>, i: usize| -> Vec<usize> {
+            (0..d).filter(|&j| a[i * d + j]).collect()
+        };
+        let mut any_candidate = false;
+        let mut removals: Vec<(usize, usize, Vec<usize>)> = vec![];
+        for i in 0..d {
+            for j in (i + 1)..d {
+                if !adj[i * d + j] {
+                    continue;
+                }
+                // subsets from both sides (standard PC)
+                let mut found = false;
+                for &(from, other) in &[(i, j), (j, i)] {
+                    let mut pool = neighbors(&snapshot, from);
+                    pool.retain(|&v| v != other);
+                    if pool.len() >= level {
+                        any_candidate = true;
+                    }
+                    for s in combinations(&pool, level) {
+                        tests_run += 1;
+                        if test.pvalue(i, j, &s) > cfg.alpha {
+                            removals.push((i, j, s));
+                            found = true;
+                            break;
+                        }
+                    }
+                    if found {
+                        break;
+                    }
+                }
+            }
+        }
+        for (i, j, s) in removals {
+            adj[i * d + j] = false;
+            adj[j * d + i] = false;
+            sepsets.insert((i, j), s.clone());
+            sepsets.insert((j, i), s);
+        }
+        if !any_candidate {
+            break;
+        }
+        level += 1;
+    }
+
+    // orientation: v-structures i→k←j for nonadjacent i,j with common
+    // neighbor k ∉ sepset(i,j)
+    let mut g = Pdag::new(d);
+    for i in 0..d {
+        for j in (i + 1)..d {
+            if adj[i * d + j] {
+                g.add_undirected(i, j);
+            }
+        }
+    }
+    for i in 0..d {
+        for j in (i + 1)..d {
+            if adj[i * d + j] {
+                continue;
+            }
+            let empty = vec![];
+            let sep = sepsets.get(&(i, j)).unwrap_or(&empty);
+            for k in 0..d {
+                if k != i && k != j && adj[i * d + k] && adj[j * d + k] && !sep.contains(&k) {
+                    // orient i→k and j→k (only if still undirected —
+                    // conflicting v-structures keep the first orientation)
+                    if g.undirected(i, k) {
+                        g.orient(i, k);
+                    }
+                    if g.undirected(j, k) {
+                        g.orient(j, k);
+                    }
+                }
+            }
+        }
+    }
+    g.meek_closure();
+
+    PcResult { cpdag: g, sepsets, tests_run }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ci::Kci;
+    use crate::data::Dataset;
+    use crate::graph::dag::Dag;
+    use crate::graph::metrics::skeleton_f1;
+    use crate::linalg::Mat;
+    use crate::util::Pcg64;
+    use std::sync::Arc;
+
+    #[test]
+    fn combinations_enumerate() {
+        let c = combinations(&[1, 2, 3], 2);
+        assert_eq!(c, vec![vec![1, 2], vec![1, 3], vec![2, 3]]);
+        assert_eq!(combinations(&[1, 2], 0), vec![Vec::<usize>::new()]);
+        assert!(combinations(&[1], 2).is_empty());
+    }
+
+    #[test]
+    fn recovers_collider_with_kci() {
+        let mut rng = Pcg64::new(1);
+        let n = 250;
+        let mut data = Mat::zeros(n, 3);
+        for r in 0..n {
+            let x = rng.normal();
+            let y = rng.normal();
+            let z = (x + y).tanh() + 0.2 * rng.normal();
+            data[(r, 0)] = x;
+            data[(r, 1)] = y;
+            data[(r, 2)] = z;
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
+        let kci = Kci::new(ds);
+        let res = pc(&kci, &PcConfig::default());
+        let truth = Dag::from_edges(3, &[(0, 2), (1, 2)]);
+        assert_eq!(skeleton_f1(&res.cpdag, &truth), 1.0, "skeleton exact");
+        assert!(res.cpdag.directed(0, 2) && res.cpdag.directed(1, 2), "collider oriented");
+    }
+
+    #[test]
+    fn removes_mediated_edge() {
+        let mut rng = Pcg64::new(2);
+        let n = 300;
+        let mut data = Mat::zeros(n, 3);
+        for r in 0..n {
+            let x = rng.normal();
+            let y = 1.3 * x + 0.3 * rng.normal();
+            let z = 1.3 * y + 0.3 * rng.normal();
+            data[(r, 0)] = x;
+            data[(r, 1)] = y;
+            data[(r, 2)] = z;
+        }
+        let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
+        let kci = Kci::new(ds);
+        let res = pc(&kci, &PcConfig::default());
+        assert!(!res.cpdag.adjacent(0, 2), "X−Z edge must be removed given Y");
+        assert!(res.cpdag.adjacent(0, 1) && res.cpdag.adjacent(1, 2));
+    }
+}

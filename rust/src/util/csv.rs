@@ -1,0 +1,120 @@
+//! Minimal CSV + table writers for the bench harness (`results/*.csv`)
+//! and the paper-shaped console tables.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// A CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (creating parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut file = File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, cols: header.len() })
+    }
+
+    /// Write one row; panics (in debug) if the column count mismatches.
+    pub fn row(&mut self, fields: &[String]) -> io::Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.file, "{}", fields.join(","))
+    }
+
+    /// Convenience: write a row of display-able values.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) -> io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+}
+
+/// Fixed-width console table, used to print paper-shaped tables.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.header.len());
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.chars().count();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect();
+            out.push_str("| ");
+            out.push_str(&padded.join(" | "));
+            out.push_str(" |\n");
+        };
+        line(&mut out, &self.header);
+        out.push('|');
+        for wi in &w {
+            out.push_str(&"-".repeat(wi + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let path = std::env::temp_dir().join("cvlr_csv_test.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x".into()]).unwrap();
+            w.rowd(&[&2.5, &"y"]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,x\n2.5,y\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "f1"]);
+        t.row(&["CV-LR".into(), "0.94".into()]);
+        let s = t.render();
+        assert!(s.contains("| method | f1   |") || s.contains("| method |"));
+        assert!(s.contains("CV-LR"));
+    }
+}

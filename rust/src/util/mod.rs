@@ -1,0 +1,18 @@
+//! Shared substrates: RNG, special functions, stats, CSV/JSON output,
+//! timing, CLI parsing and a miniature property-testing harness.
+//!
+//! The offline build image vendors only the `xla` crate's dependency tree,
+//! so the usual ecosystem crates (`rand`, `statrs`, `serde`, `clap`,
+//! `criterion`, `proptest`) are unavailable; these modules replace exactly
+//! the functionality the rest of the library needs.
+
+pub mod rng;
+pub mod special;
+pub mod stats;
+pub mod csv;
+pub mod timing;
+pub mod cli;
+pub mod prop;
+
+pub use rng::Pcg64;
+pub use timing::Stopwatch;

@@ -1,0 +1,172 @@
+//! Special functions: log-gamma, regularized incomplete gamma, error
+//! function, and the distribution CDFs built on them (gamma, chi-square,
+//! standard normal).
+//!
+//! Implementations follow the classic Lanczos / series / continued-fraction
+//! constructions (Numerical Recipes §6); absolute accuracy is ~1e-12 over
+//! the ranges the library uses (KCI p-values, BDeu counts, BIC penalties).
+
+use std::f64::consts::PI;
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return (PI / (PI * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma P(a, x) = γ(a,x)/Γ(a).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if a <= 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        gamma_p_series(a, x)
+    } else {
+        1.0 - gamma_q_cf(a, x)
+    }
+}
+
+/// Regularized upper incomplete gamma Q(a, x) = 1 - P(a, x).
+pub fn gamma_q(a: f64, x: f64) -> f64 {
+    1.0 - gamma_p(a, x)
+}
+
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    // Lentz's continued fraction for Q(a,x).
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// CDF of Gamma(shape k, scale θ) at x.
+pub fn gamma_cdf(x: f64, shape: f64, scale: f64) -> f64 {
+    gamma_p(shape, (x / scale).max(0.0))
+}
+
+/// Survival function of Gamma(shape, scale) at x — upper-tail p-value.
+pub fn gamma_sf(x: f64, shape: f64, scale: f64) -> f64 {
+    gamma_q(shape, (x / scale).max(0.0))
+}
+
+/// Chi-square CDF with k degrees of freedom.
+pub fn chi2_cdf(x: f64, k: f64) -> f64 {
+    gamma_cdf(x, k / 2.0, 2.0)
+}
+
+/// Error function (Abramowitz–Stegun 7.1.26-style rational approx refined
+/// via the incomplete gamma relation erf(x) = P(1/2, x²)).
+pub fn erf(x: f64) -> f64 {
+    let s = if x < 0.0 { -1.0 } else { 1.0 };
+    s * gamma_p(0.5, x * x)
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_integers() {
+        // Γ(n) = (n-1)!
+        let facts = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0];
+        for (n, f) in facts.iter().enumerate() {
+            assert!((ln_gamma(n as f64 + 1.0) - (f as &f64).ln()).abs() < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        assert!((ln_gamma(0.5) - PI.sqrt().ln()).abs() < 1e-10);
+        assert!((ln_gamma(1.5) - (PI.sqrt() / 2.0).ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn gamma_p_known_values() {
+        // P(1, x) = 1 - e^{-x}
+        for &x in &[0.1, 0.5, 1.0, 2.0, 5.0] {
+            assert!((gamma_p(1.0, x) - (1.0 - (-x as f64).exp())).abs() < 1e-12);
+        }
+        // Median of chi2_2 is 2 ln 2.
+        assert!((chi2_cdf(2.0 * 2.0f64.ln(), 2.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_cdf_symmetry_and_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-12);
+        assert!((norm_cdf(1.959_963_985) - 0.975).abs() < 1e-6);
+        for &x in &[0.3, 1.1, 2.5] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gamma_sf_complements_cdf() {
+        for &x in &[0.2, 1.0, 3.3, 10.0] {
+            let (k, th) = (2.3, 1.7);
+            assert!((gamma_cdf(x, k, th) + gamma_sf(x, k, th) - 1.0).abs() < 1e-12);
+        }
+    }
+}

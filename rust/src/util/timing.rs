@@ -1,0 +1,109 @@
+//! Wall-clock timing helpers used by the bench harness and the
+//! coordinator's metrics.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.secs())
+}
+
+/// Benchmark statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub reps: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+/// Run `f` for `reps` repetitions (after `warmup` unmeasured runs) and
+/// report timing statistics. This is the criterion replacement used by
+/// `rust/benches/*` (criterion is not available offline).
+pub fn bench_fn(warmup: usize, reps: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.secs());
+    }
+    let mean = times.iter().sum::<f64>() / reps.max(1) as f64;
+    let var = if reps > 1 {
+        times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / (reps - 1) as f64
+    } else {
+        0.0
+    };
+    BenchStats {
+        reps,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+        std_s: var.sqrt(),
+    }
+}
+
+/// Pretty seconds (ns/µs/ms/s auto-scale).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_counts_reps() {
+        let mut calls = 0;
+        let st = bench_fn(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(st.reps, 5);
+        assert!(st.min_s <= st.mean_s && st.mean_s <= st.max_s);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(3e-9).ends_with("ns"));
+        assert!(fmt_secs(3e-6).ends_with("µs"));
+        assert!(fmt_secs(3e-3).ends_with("ms"));
+        assert!(fmt_secs(3.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,329 @@
+//! Cross-cutting API-surface tests: exercises the public substrate APIs
+//! (linalg, util, kernel, data, graph) on targeted edge cases that the
+//! per-module unit tests do not reach.
+
+use std::sync::Arc;
+
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::data::Dataset;
+use cvlr::graph::pdag::dag_to_cpdag;
+use cvlr::graph::{normalized_shd, skeleton_f1, Dag, Pdag};
+use cvlr::kernel::{gram, gram_cross, median_heuristic, Kernel};
+use cvlr::linalg::{expm, sym_eig, Cholesky, Lu, Mat};
+use cvlr::score::bdeu::BdeuScore;
+use cvlr::score::bic::BicScore;
+use cvlr::score::folds::stride_folds;
+use cvlr::score::LocalScore;
+use cvlr::util::cli::Args;
+use cvlr::util::special::{chi2_cdf, erf, gamma_cdf, gamma_sf, ln_gamma, norm_cdf};
+use cvlr::util::stats::{mean, median, pearson, ranks, spearman, variance};
+use cvlr::util::Pcg64;
+
+// ---------------------------------------------------------------- linalg
+
+#[test]
+fn lu_det_and_inverse_roundtrip() {
+    let a = Mat::from_rows(&[&[4.0, 2.0, 0.6], &[2.0, 3.0, 0.4], &[0.6, 0.4, 2.0]]);
+    let lu = Lu::new(&a).expect("nonsingular");
+    // det of this SPD matrix computed by cofactor expansion
+    let d = lu.det();
+    assert!(d > 0.0);
+    let inv = lu.inverse();
+    let id = a.matmul(&inv);
+    assert!((&id - &Mat::eye(3)).max_abs() < 1e-12);
+    assert!((lu.log_abs_det() - d.ln()).abs() < 1e-12);
+}
+
+#[test]
+fn lu_detects_singularity() {
+    let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]); // rank 1
+    assert!(Lu::new(&a).is_none() || Lu::new(&a).unwrap().det().abs() < 1e-12);
+}
+
+#[test]
+fn cholesky_rejects_indefinite() {
+    let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, −1
+    assert!(Cholesky::new(&a).is_none());
+}
+
+#[test]
+fn cholesky_solve_matches_inverse() {
+    let mut rng = Pcg64::new(1);
+    let b = {
+        let mut m = Mat::zeros(5, 5);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        m.matmul_t(&m).add_diag(5.0)
+    };
+    let ch = Cholesky::new(&b).unwrap();
+    let rhs = Mat::col_vec(&[1.0, -2.0, 0.5, 3.0, -1.0]);
+    let x = ch.solve(&rhs);
+    let want = ch.inverse().matmul(&rhs);
+    assert!((&x - &want).max_abs() < 1e-10);
+}
+
+#[test]
+fn expm_of_zero_is_identity_and_nilpotent_is_exact() {
+    assert!((&expm(&Mat::zeros(3, 3)) - &Mat::eye(3)).max_abs() < 1e-14);
+    // strictly upper-triangular N (N² = 0): e^N = I + N exactly
+    let mut n = Mat::zeros(2, 2);
+    n[(0, 1)] = 3.0;
+    let want = {
+        let mut w = Mat::eye(2);
+        w[(0, 1)] = 3.0;
+        w
+    };
+    assert!((&expm(&n) - &want).max_abs() < 1e-12);
+}
+
+#[test]
+fn sym_eig_reconstructs_matrix() {
+    let a = Mat::from_rows(&[&[2.0, 1.0, 0.0], &[1.0, 3.0, 0.5], &[0.0, 0.5, 1.5]]);
+    let (w, v) = sym_eig(&a);
+    // A = V diag(w) Vᵀ
+    let mut rec = Mat::zeros(3, 3);
+    for k in 0..3 {
+        for i in 0..3 {
+            for j in 0..3 {
+                rec[(i, j)] += w[k] * v[(i, k)] * v[(j, k)];
+            }
+        }
+    }
+    assert!((&a - &rec).max_abs() < 1e-9);
+    // eigenvalues sorted descending
+    assert!(w.windows(2).all(|p| p[0] >= p[1] - 1e-12));
+}
+
+// ----------------------------------------------------------------- util
+
+#[test]
+fn special_function_anchors() {
+    // Γ(5) = 24
+    assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+    // erf(0) = 0, erf(∞) → 1
+    assert!(erf(0.0).abs() < 1e-12);
+    assert!((erf(3.0) - 1.0).abs() < 1e-4);
+    // Φ(0) = 0.5, Φ(1.96) ≈ 0.975
+    assert!((norm_cdf(0.0) - 0.5).abs() < 1e-12);
+    assert!((norm_cdf(1.959964) - 0.975).abs() < 1e-4);
+    // χ²(k=2) cdf at x=2: 1 − e^{−1}
+    assert!((chi2_cdf(2.0, 2.0) - (1.0 - (-1.0f64).exp())).abs() < 1e-8);
+    // gamma cdf + sf = 1
+    let (x, k, th) = (2.7, 1.8, 0.9);
+    assert!((gamma_cdf(x, k, th) + gamma_sf(x, k, th) - 1.0).abs() < 1e-10);
+}
+
+#[test]
+fn stats_anchors() {
+    let xs = [1.0, 2.0, 3.0, 4.0];
+    assert_eq!(mean(&xs), 2.5);
+    assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    assert_eq!(median(&xs), 2.5);
+    assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    // ranks with ties get midranks
+    let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+    assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    // perfect monotone nonlinear relation: spearman 1, pearson < 1
+    let x: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+    let y: Vec<f64> = x.iter().map(|v| v.exp()).collect();
+    assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    assert!(pearson(&x, &y) < 0.95);
+}
+
+#[test]
+fn rng_is_deterministic_and_fork_diverges() {
+    let mut a = Pcg64::new(7);
+    let mut b = Pcg64::new(7);
+    let va: Vec<u64> = (0..5).map(|_| a.next_u64()).collect();
+    let vb: Vec<u64> = (0..5).map(|_| b.next_u64()).collect();
+    assert_eq!(va, vb);
+    let mut f = a.fork();
+    assert_ne!(a.next_u64(), f.next_u64());
+}
+
+#[test]
+fn rng_distributions_are_sane() {
+    let mut rng = Pcg64::new(11);
+    let n = 20_000;
+    let m: f64 = (0..n).map(|_| rng.normal()).sum::<f64>() / n as f64;
+    assert!(m.abs() < 0.05, "normal mean {m}");
+    let p: f64 = (0..n).map(|_| rng.bernoulli(0.3) as u8 as f64).sum::<f64>() / n as f64;
+    assert!((p - 0.3).abs() < 0.02, "bernoulli {p}");
+    let probs = rng.dirichlet(4, 1.0);
+    assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    assert!(probs.iter().all(|&q| q >= 0.0));
+}
+
+#[test]
+fn cli_parse_corner_cases() {
+    let args = Args::parse(
+        ["--a=1", "--flag", "--b", "2", "pos1", "--trailing"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    assert_eq!(args.usize_or("a", 0), 1);
+    assert_eq!(args.usize_or("b", 0), 2);
+    assert!(args.flag("flag"));
+    assert!(args.flag("trailing"));
+    assert_eq!(args.positional, vec!["pos1"]);
+    assert_eq!(args.get("missing"), None);
+    // malformed numeric falls back to the default
+    let bad = Args::parse(["--n", "xyz"].iter().map(|s| s.to_string()));
+    assert_eq!(bad.usize_or("n", 42), 42);
+}
+
+// --------------------------------------------------------------- kernel
+
+#[test]
+fn rbf_kernel_basics() {
+    let k = Kernel::Rbf { sigma: 2.0 };
+    assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-12);
+    // symmetric and decaying
+    let near = k.eval(&[0.0], &[0.1]);
+    let far = k.eval(&[0.0], &[3.0]);
+    assert!(near > far && far > 0.0);
+    assert_eq!(k.eval(&[0.0], &[1.5]), k.eval(&[1.5], &[0.0]));
+}
+
+#[test]
+fn gram_cross_consistent_with_gram() {
+    let mut rng = Pcg64::new(3);
+    let mut x = Mat::zeros(8, 2);
+    for v in &mut x.data {
+        *v = rng.normal();
+    }
+    let k = Kernel::Rbf { sigma: 1.3 };
+    let g = gram(k, &x);
+    let gc = gram_cross(k, &x, &x);
+    assert!((&g - &gc).max_abs() < 1e-14);
+}
+
+#[test]
+fn median_heuristic_scales_with_width_factor() {
+    let mut rng = Pcg64::new(4);
+    let mut x = Mat::zeros(50, 1);
+    for v in &mut x.data {
+        *v = rng.normal();
+    }
+    let m1 = median_heuristic(&x, 1.0);
+    let m2 = median_heuristic(&x, 2.0);
+    assert!((m2 / m1 - 2.0).abs() < 1e-9);
+    // degenerate data falls back to a positive default
+    let z = Mat::zeros(10, 1);
+    assert!(median_heuristic(&z, 2.0) > 0.0);
+}
+
+// ----------------------------------------------------------------- data
+
+#[test]
+fn dataset_head_and_levels() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 50,
+        num_vars: 4,
+        density: 0.4,
+        kind: DataKind::Mixed,
+        seed: 9,
+    });
+    let head = ds.head(10);
+    assert_eq!(head.n(), 10);
+    assert_eq!(head.d(), ds.d());
+    // discrete flags preserved
+    for i in 0..ds.d() {
+        assert_eq!(head.vars[i].discrete, ds.vars[i].discrete);
+    }
+}
+
+#[test]
+fn multidim_dataset_blocks_have_right_width() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 40,
+        num_vars: 4,
+        density: 0.4,
+        kind: DataKind::MultiDim,
+        seed: 10,
+    });
+    let total: usize = (0..ds.d()).map(|i| ds.block(i).cols).sum();
+    assert_eq!(total, ds.data.cols, "per-variable blocks must tile the data");
+    assert!((1..=5).contains(&ds.block(0).cols));
+}
+
+// ---------------------------------------------------------------- graph
+
+#[test]
+fn meek_rule_orients_chain_tail() {
+    // a → b — c with a, c non-adjacent must orient b → c (Meek rule 1)
+    let mut p = Pdag::new(3);
+    p.add_directed(0, 1);
+    p.add_undirected(1, 2);
+    p.meek_closure();
+    assert!(p.directed(1, 2), "Meek R1 must orient 1→2");
+}
+
+#[test]
+fn cpdag_of_full_dag_keeps_v_structures_only() {
+    // collider a → c ← b: both arcs compelled; a chain a → b → c: none
+    let collider = dag_to_cpdag(&Dag::from_edges(3, &[(0, 2), (1, 2)]));
+    assert!(collider.directed(0, 2) && collider.directed(1, 2));
+    let chain = dag_to_cpdag(&Dag::from_edges(3, &[(0, 1), (1, 2)]));
+    assert!(chain.undirected(0, 1) && chain.undirected(1, 2));
+}
+
+#[test]
+fn shd_counts_reversals_less_than_misses() {
+    let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
+    // same skeleton, wrong orientation (as a fully directed PDAG)
+    let mut reversed = Pdag::new(3);
+    reversed.add_directed(1, 0);
+    reversed.add_directed(2, 1);
+    let mut empty = Pdag::new(3);
+    empty.meek_closure();
+    let shd_rev = normalized_shd(&reversed, &truth);
+    let shd_empty = normalized_shd(&empty, &truth);
+    assert!(shd_rev > 0.0);
+    assert!(shd_empty >= shd_rev, "missing edges cost at least as much: {shd_empty} vs {shd_rev}");
+    assert_eq!(skeleton_f1(&reversed, &truth), 1.0);
+}
+
+// ---------------------------------------------------------------- folds
+
+#[test]
+#[should_panic(expected = "need n >= 2q")]
+fn folds_reject_tiny_samples() {
+    let _ = stride_folds(9, 5);
+}
+
+// --------------------------------------------------------------- scores
+
+#[test]
+fn bic_penalizes_extra_parents_on_independent_data() {
+    let mut rng = Pcg64::new(12);
+    let n = 400;
+    let mut data = Mat::zeros(n, 3);
+    for v in &mut data.data {
+        *v = rng.normal();
+    }
+    let bic = BicScore::new(Arc::new(Dataset::from_columns(data, &[false; 3])));
+    let empty = bic.local_score(0, &[]);
+    let one = bic.local_score(0, &[1]);
+    let two = bic.local_score(0, &[1, 2]);
+    assert!(empty > one && one > two, "BIC must order {empty} > {one} > {two}");
+}
+
+#[test]
+fn bdeu_is_exchangeable_in_parent_order() {
+    let mut rng = Pcg64::new(13);
+    let n = 300;
+    let mut data = Mat::zeros(n, 3);
+    for r in 0..n {
+        data[(r, 0)] = rng.below(2) as f64;
+        data[(r, 1)] = rng.below(3) as f64;
+        data[(r, 2)] = ((r as u64 + rng.below(2) as u64) % 2) as f64;
+    }
+    let bdeu = BdeuScore::new(Arc::new(Dataset::from_columns(data, &[true; 3])));
+    // equal up to summation order (configurations are enumerated in
+    // parent order, so the FP reduction order differs)
+    let a = bdeu.local_score(2, &[0, 1]);
+    let b = bdeu.local_score(2, &[1, 0]);
+    assert!(((a - b) / a).abs() < 1e-12, "{a} vs {b}");
+}

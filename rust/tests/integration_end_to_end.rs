@@ -1,0 +1,204 @@
+//! End-to-end integration over all three layers: synthetic data → low-rank
+//! factorization (L3) → AOT XLA score artifacts (L2/L1 via PJRT) → GES →
+//! CPDAG, compared against the all-native path.
+//!
+//! Requires `artifacts/` (run `make artifacts` first — `make test` does).
+
+use std::sync::Arc;
+
+use cvlr::coordinator::engine::{discover, DiscoveryConfig, EngineKind, Method};
+use cvlr::coordinator::service::ScoreService;
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::data::networks;
+use cvlr::graph::skeleton_f1;
+use cvlr::runtime::pjrt_kernel::PjrtCvLrKernel;
+use cvlr::runtime::Runtime;
+use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::folds::CvParams;
+use cvlr::score::LocalScore;
+
+fn artifacts_dir() -> String {
+    std::env::var("CVLR_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")))
+}
+
+fn pjrt_config(method: Method) -> DiscoveryConfig {
+    DiscoveryConfig {
+        method,
+        engine: EngineKind::Pjrt,
+        artifacts_dir: artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+/// The three-layer hot path and the native path learn the same
+/// equivalence class on continuous synthetic data.
+#[test]
+fn pjrt_and_native_engines_agree() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 200,
+        num_vars: 5,
+        density: 0.3,
+        kind: DataKind::Continuous,
+        seed: 41,
+    });
+    let ds = Arc::new(ds);
+    let native = discover(
+        ds.clone(),
+        &DiscoveryConfig { method: Method::CvLr, ..Default::default() },
+    )
+    .unwrap();
+    let pjrt = discover(ds, &pjrt_config(Method::CvLr)).unwrap();
+    assert_eq!(
+        native.cpdag, pjrt.cpdag,
+        "native and PJRT engines must learn the same CPDAG"
+    );
+    let f1 = skeleton_f1(&pjrt.cpdag, &dag);
+    assert!(f1 >= 0.5, "PJRT CV-LR skeleton F1 too low: {f1}");
+}
+
+/// Full pipeline on a discrete benchmark network through PJRT.
+#[test]
+fn pjrt_engine_on_sachs() {
+    let net = networks::sachs();
+    let ds = Arc::new(networks::forward_sample(&net, 300, 42));
+    let out = discover(ds, &pjrt_config(Method::CvLr)).unwrap();
+    let f1 = skeleton_f1(&out.cpdag, &net.dag);
+    assert!(f1 >= 0.45, "PJRT CV-LR on SACHS F1 too low: {f1}");
+}
+
+/// The score service fans batched requests over worker threads and
+/// returns bit-identical results to sequential evaluation, with the
+/// PJRT-backed CV-LR score underneath.
+#[test]
+fn score_service_parallel_matches_sequential() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 200,
+        num_vars: 6,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 43,
+    });
+    let ds = Arc::new(ds);
+    let rt = Arc::new(Runtime::load(artifacts_dir()).expect("run `make artifacts`"));
+    let mk = || -> Arc<dyn LocalScore> {
+        Arc::new(CvLrScore::with_backend(
+            ds.clone(),
+            CvParams::default(),
+            Default::default(),
+            PjrtCvLrKernel::new(rt.clone()),
+        ))
+    };
+    let reqs: Vec<(usize, Vec<usize>)> = vec![
+        (0, vec![]),
+        (1, vec![0]),
+        (2, vec![0, 1]),
+        (3, vec![]),
+        (4, vec![3]),
+        (5, vec![0, 4]),
+    ];
+    let seq = ScoreService::new(mk(), 1).score_batch(&reqs);
+    let par = ScoreService::new(mk(), 4).score_batch(&reqs);
+    for (a, b) in seq.iter().zip(&par) {
+        assert!(
+            (a - b).abs() < 1e-12,
+            "parallel batch diverged: {a} vs {b}"
+        );
+    }
+}
+
+/// Runtime execution counter: a full GES run through PJRT performs many
+/// artifact executions, all from the rust hot path (no python).
+#[test]
+fn pjrt_run_executes_artifacts() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 4,
+        density: 0.3,
+        kind: DataKind::Continuous,
+        seed: 44,
+    });
+    let rt = Arc::new(Runtime::load(artifacts_dir()).expect("run `make artifacts`"));
+    let score = CvLrScore::with_backend(
+        Arc::new(ds),
+        CvParams::default(),
+        Default::default(),
+        PjrtCvLrKernel::new(rt.clone()),
+    );
+    let before = rt.executions();
+    let service = ScoreService::new(Arc::new(score), 1);
+    let res = cvlr::search::ges::ges(&service, &Default::default());
+    let executed = rt.executions() - before;
+    // every unique (cache-missed) local score runs one artifact
+    // execution per CV fold (10 by default)
+    let unique = service.stats().evaluations;
+    assert!(
+        executed >= 10 * unique,
+        "GES must route scores through the artifacts: {executed} execs for \
+         {unique} unique evaluations ({} requests)",
+        res.score_calls
+    );
+}
+
+/// Cache effectiveness on the end-to-end path: across a GES run the
+/// service converts a large share of requests into hits (the coordinator
+/// perf target of DESIGN.md §8).
+#[test]
+fn cache_hit_rate_on_e2e_run() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 250,
+        num_vars: 7,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 45,
+    });
+    let out = discover(
+        Arc::new(ds),
+        &DiscoveryConfig { method: Method::CvLr, ..Default::default() },
+    )
+    .unwrap();
+    let st = out.score_stats.unwrap();
+    let hit_rate = st.cache_hits as f64 / st.requests.max(1) as f64;
+    assert!(
+        hit_rate > 0.6,
+        "e2e cache hit rate should exceed 60%, got {:.2} ({} / {})",
+        hit_rate,
+        st.cache_hits,
+        st.requests
+    );
+}
+
+/// Mixed data end-to-end through PJRT (exercises Algorithm 1 and
+/// Algorithm 2 factorization paths in one run).
+#[test]
+fn pjrt_engine_on_mixed_data() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 200,
+        num_vars: 5,
+        density: 0.3,
+        kind: DataKind::Mixed,
+        seed: 46,
+    });
+    let out = discover(Arc::new(ds), &pjrt_config(Method::CvLr)).unwrap();
+    let f1 = skeleton_f1(&out.cpdag, &dag);
+    assert!(f1 >= 0.4, "PJRT mixed-data F1 too low: {f1}");
+}
+
+/// Bad artifacts directory surfaces as an error, not a panic.
+#[test]
+fn missing_artifacts_is_an_error() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 100,
+        num_vars: 3,
+        density: 0.3,
+        kind: DataKind::Continuous,
+        seed: 47,
+    });
+    let cfg = DiscoveryConfig {
+        method: Method::CvLr,
+        engine: EngineKind::Pjrt,
+        artifacts_dir: "/nonexistent/artifacts".into(),
+        ..Default::default()
+    };
+    assert!(discover(Arc::new(ds), &cfg).is_err());
+}

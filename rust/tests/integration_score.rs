@@ -1,0 +1,304 @@
+//! Score-layer integration: the CV-LR score against the exact CV score
+//! (the Table-1 anchor), on every data type of §7.4, plus consistency
+//! checks across all five score functions on shared datasets.
+
+use std::sync::Arc;
+
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::data::{networks, Dataset};
+use cvlr::linalg::Mat;
+use cvlr::lowrank::LowRankConfig;
+use cvlr::score::bdeu::BdeuScore;
+use cvlr::score::bic::BicScore;
+use cvlr::score::cv_exact::CvExactScore;
+use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
+use cvlr::score::folds::CvParams;
+use cvlr::score::sc::ScScore;
+use cvlr::score::{graph_score, CachedScore, LocalScore};
+use cvlr::util::Pcg64;
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    ((a - b) / a).abs()
+}
+
+/// Table 1, continuous rows: CV-LR vs CV with m=100 must stay within
+/// 0.5% relative error, both with |Z| = 0 and a nonempty conditional set.
+#[test]
+fn table1_continuous_rel_error() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 200,
+        num_vars: 7,
+        density: 0.5,
+        kind: DataKind::Continuous,
+        seed: 11,
+    });
+    let ds = Arc::new(ds);
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let lr = CvLrScore::native(ds);
+    for (target, parents) in [
+        (0usize, vec![]),
+        (0, vec![1, 2]),
+        (3, vec![0, 1, 2, 4, 5, 6]), // |Z| = 6, the paper's hard setting
+    ] {
+        let se = exact.local_score(target, &parents);
+        let sl = lr.local_score(target, &parents);
+        assert!(
+            rel_err(se, sl) < 5e-3,
+            "target {target} |Z|={}: exact {se} vs lr {sl}",
+            parents.len()
+        );
+    }
+}
+
+/// Table 1, discrete rows: Algorithm 2 is exact (Lemma 4.3), so the
+/// scores must agree to floating-point precision.
+#[test]
+fn table1_discrete_exact_agreement() {
+    let net = networks::sachs();
+    let ds = Arc::new(networks::forward_sample(&net, 200, 7));
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let lr = CvLrScore::native(ds);
+    for (target, parents) in [(0usize, vec![]), (8, vec![2, 7]), (1, vec![0, 8])] {
+        let se = exact.local_score(target, &parents);
+        let sl = lr.local_score(target, &parents);
+        assert!(
+            rel_err(se, sl) < 1e-8,
+            "discrete target {target}: exact {se} vs lr {sl}"
+        );
+    }
+}
+
+/// Mixed continuous/discrete data (§7.4 middle panels).
+#[test]
+fn cvlr_matches_cv_on_mixed_data() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 7,
+        density: 0.4,
+        kind: DataKind::Mixed,
+        seed: 3,
+    });
+    let ds = Arc::new(ds);
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let lr = CvLrScore::native(ds);
+    for (target, parents) in [(0usize, vec![]), (1, vec![0]), (4, vec![2, 3])] {
+        let se = exact.local_score(target, &parents);
+        let sl = lr.local_score(target, &parents);
+        assert!(rel_err(se, sl) < 1e-2, "mixed: exact {se} vs lr {sl}");
+    }
+}
+
+/// Multi-dimensional variables (§7.4 right panels): variables span
+/// several columns; scores must still agree.
+#[test]
+fn cvlr_matches_cv_on_multidim_data() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 5,
+        density: 0.4,
+        kind: DataKind::MultiDim,
+        seed: 4,
+    });
+    let ds = Arc::new(ds);
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let lr = CvLrScore::native(ds);
+    for (target, parents) in [(0usize, vec![]), (2, vec![0, 1])] {
+        let se = exact.local_score(target, &parents);
+        let sl = lr.local_score(target, &parents);
+        assert!(rel_err(se, sl) < 1e-2, "multidim: exact {se} vs lr {sl}");
+    }
+}
+
+/// §7.2 m-sweep: raising the rank cap must not make the approximation
+/// worse on continuous data (monotone-ish; we assert the m=100 error is
+/// no worse than the m=10 error).
+#[test]
+fn rank_cap_improves_approximation() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 200,
+        num_vars: 7,
+        density: 0.5,
+        kind: DataKind::Continuous,
+        seed: 5,
+    });
+    let ds = Arc::new(ds);
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let se = exact.local_score(3, &[0, 1, 2, 4, 5, 6]);
+    let err_at = |m: usize| {
+        let lr = CvLrScore::with_backend(
+            ds.clone(),
+            CvParams::default(),
+            LowRankConfig { max_rank: m, eta: 1e-6 },
+            NativeCvLrKernel,
+        );
+        rel_err(se, lr.local_score(3, &[0, 1, 2, 4, 5, 6]))
+    };
+    let e10 = err_at(10);
+    let e100 = err_at(100);
+    assert!(
+        e100 <= e10 + 1e-12,
+        "m=100 must not be worse than m=10: {e100} vs {e10}"
+    );
+    assert!(e100 < 5e-3, "m=100 must satisfy the paper's 0.5% bound: {e100}");
+}
+
+/// Local consistency (Definition 6.1) holds for both CV and CV-LR on a
+/// strongly-dependent pair: the true parent improves the score, and the
+/// direction of the inequality agrees between the two scores.
+#[test]
+fn local_consistency_cv_and_cvlr_agree() {
+    let mut rng = Pcg64::new(9);
+    let n = 300;
+    let mut data = Mat::zeros(n, 3);
+    for r in 0..n {
+        let x = rng.normal();
+        let y = (1.5 * x).tanh() + 0.3 * rng.normal();
+        let w = rng.normal();
+        data[(r, 0)] = x;
+        data[(r, 1)] = y;
+        data[(r, 2)] = w;
+    }
+    let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let lr = CvLrScore::native(ds);
+    for score in [&exact as &dyn LocalScore, &lr as &dyn LocalScore] {
+        let with_parent = score.local_score(1, &[0]);
+        let marginal = score.local_score(1, &[]);
+        assert!(
+            with_parent > marginal,
+            "dependent parent must raise the score: {with_parent} vs {marginal}"
+        );
+    }
+}
+
+/// graph_score decomposability: the DAG score is the sum of local
+/// scores for every score function (Eq. 31).
+#[test]
+fn graph_score_decomposes_for_all_scores() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 5,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 6,
+    });
+    let ds = Arc::new(ds);
+    let parents = dag.parent_list();
+    let scores: Vec<Box<dyn LocalScore>> = vec![
+        Box::new(CvLrScore::native(ds.clone())),
+        Box::new(BicScore::new(ds.clone())),
+        Box::new(ScScore::new(ds.clone())),
+    ];
+    for s in &scores {
+        let total = graph_score(s.as_ref(), &parents);
+        let manual: f64 = parents
+            .iter()
+            .enumerate()
+            .map(|(i, pa)| {
+                let mut p = pa.clone();
+                p.sort_unstable();
+                s.local_score(i, &p)
+            })
+            .sum();
+        assert!(
+            (total - manual).abs() < 1e-9,
+            "decomposability violated: {total} vs {manual}"
+        );
+    }
+}
+
+/// BDeu on discrete network data prefers the true parents over the
+/// empty set for a high-signal child.
+#[test]
+fn bdeu_prefers_true_parents() {
+    let net = networks::child();
+    let ds = Arc::new(networks::forward_sample(&net, 800, 13));
+    let bdeu = BdeuScore::new(ds);
+    // find a node with parents in the true network
+    let truth = &net.dag;
+    let mut checked = 0;
+    for v in 0..truth.parent_list().len() {
+        let pa = truth.parents(v);
+        if pa.is_empty() {
+            continue;
+        }
+        let mut pa_sorted = pa.clone();
+        pa_sorted.sort_unstable();
+        let with = bdeu.local_score(v, &pa_sorted);
+        let without = bdeu.local_score(v, &[]);
+        if with > without {
+            checked += 1;
+        }
+    }
+    assert!(
+        checked >= 15,
+        "BDeu should prefer true parents for most CHILD nodes, got {checked}"
+    );
+}
+
+/// The cached wrapper returns bit-identical values and actually avoids
+/// re-evaluation of the expensive CV-LR score.
+#[test]
+fn cached_cvlr_identical_and_hits() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 5,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 8,
+    });
+    let cached = CachedScore::new(CvLrScore::native(Arc::new(ds)));
+    let a = cached.local_score(2, &[0, 1]);
+    let b = cached.local_score(2, &[1, 0]);
+    assert_eq!(a, b, "cache must canonicalize the parent order");
+    let (hits, misses) = cached.stats();
+    assert_eq!((hits, misses), (1, 1));
+}
+
+/// Score is invariant to permuting the samples (both CV folds use
+/// strided assignment, so a global permutation changes fold membership;
+/// instead we check invariance of the underlying factor Gram products
+/// by scoring two datasets with identical rows in the same order twice).
+#[test]
+fn score_is_deterministic() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 5,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 10,
+    });
+    let ds = Arc::new(ds);
+    let s1 = CvLrScore::native(ds.clone());
+    let s2 = CvLrScore::native(ds);
+    let a = s1.local_score(1, &[0, 3]);
+    let b = s2.local_score(1, &[0, 3]);
+    assert_eq!(a, b, "same data, same params → bit-identical score");
+}
+
+/// Larger conditioning sets reduce the residual trace but pay a
+/// complexity penalty: a fully-spurious 4-parent set should not beat the
+/// true single parent on strongly-coupled data.
+#[test]
+fn spurious_parents_do_not_dominate() {
+    let mut rng = Pcg64::new(12);
+    let n = 300;
+    let mut data = Mat::zeros(n, 6);
+    for r in 0..n {
+        let x = rng.normal();
+        let y = (2.0 * x).sin() + 0.2 * rng.normal();
+        data[(r, 0)] = x;
+        data[(r, 1)] = y;
+        for c in 2..6 {
+            data[(r, c)] = rng.normal();
+        }
+    }
+    let ds = Arc::new(Dataset::from_columns(data, &[false; 6]));
+    let lr = CvLrScore::native(ds);
+    let true_parent = lr.local_score(1, &[0]);
+    let spurious = lr.local_score(1, &[2, 3, 4, 5]);
+    assert!(
+        true_parent > spurious,
+        "true parent {true_parent} must beat 4 spurious parents {spurious}"
+    );
+}

@@ -1,0 +1,238 @@
+//! Search-layer integration: GES with each score, the constraint-based
+//! baselines (PC/KCI, MM-MB/KCI), and the unified discovery engine, on
+//! synthetic FCM data and the discrete benchmark networks.
+
+use std::sync::Arc;
+
+use cvlr::ci::Kci;
+use cvlr::coordinator::engine::{discover, DiscoveryConfig, Method};
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::data::networks;
+use cvlr::graph::pdag::dag_to_cpdag;
+use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
+use cvlr::score::bic::BicScore;
+use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::CachedScore;
+use cvlr::search::ges::{ges, GesConfig};
+use cvlr::search::mmmb::{mmmb, MmConfig};
+use cvlr::search::pc::{pc, PcConfig};
+
+/// GES + CV-LR recovers most of a sparse nonlinear 7-node graph
+/// (the Fig. 2-4 setting, smoke scale).
+#[test]
+fn ges_cvlr_recovers_synthetic_graph() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 300,
+        num_vars: 7,
+        density: 0.25,
+        kind: DataKind::Continuous,
+        seed: 21,
+    });
+    let score = CachedScore::new(CvLrScore::native(Arc::new(ds)));
+    let res = ges(&score, &GesConfig::default());
+    let f1 = skeleton_f1(&res.cpdag, &dag);
+    assert!(f1 >= 0.6, "CV-LR skeleton F1 too low: {f1}");
+    let shd = normalized_shd(&res.cpdag, &dag);
+    assert!(shd <= 0.4, "CV-LR normalized SHD too high: {shd}");
+}
+
+/// GES output is always a valid CPDAG (a DAG-extendable PDAG whose
+/// re-completion is itself) regardless of the score.
+#[test]
+fn ges_output_is_cpdag_across_scores() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 250,
+        num_vars: 6,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 22,
+    });
+    let ds = Arc::new(ds);
+    for res in [
+        ges(&CachedScore::new(BicScore::new(ds.clone())), &GesConfig::default()),
+        ges(&CachedScore::new(CvLrScore::native(ds.clone())), &GesConfig::default()),
+    ] {
+        let dag = res.cpdag.to_dag().expect("GES output must extend to a DAG");
+        assert_eq!(
+            dag_to_cpdag(&dag),
+            res.cpdag,
+            "GES output must be a completed PDAG"
+        );
+    }
+}
+
+/// CV and CV-LR drive GES to (near-)identical equivalence classes —
+/// the headline accuracy claim, checked structurally instead of via
+/// score values. Small n keeps the O(n³) exact CV affordable.
+#[test]
+fn ges_cv_and_cvlr_agree_structurally() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 150,
+        num_vars: 5,
+        density: 0.3,
+        kind: DataKind::Continuous,
+        seed: 23,
+    });
+    let ds = Arc::new(ds);
+    let out_lr = discover(
+        ds.clone(),
+        &DiscoveryConfig { method: Method::CvLr, ..Default::default() },
+    )
+    .unwrap();
+    let out_cv = discover(
+        ds,
+        &DiscoveryConfig { method: Method::Cv, ..Default::default() },
+    )
+    .unwrap();
+    let f1_lr = skeleton_f1(&out_lr.cpdag, &dag);
+    let f1_cv = skeleton_f1(&out_cv.cpdag, &dag);
+    assert!(
+        (f1_lr - f1_cv).abs() <= 0.35,
+        "CV-LR ({f1_lr}) and CV ({f1_cv}) should be comparable"
+    );
+}
+
+/// PC with KCI finds the skeleton of an easy sparse graph.
+#[test]
+fn pc_kci_finds_sparse_skeleton() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 250,
+        num_vars: 5,
+        density: 0.2,
+        kind: DataKind::Continuous,
+        seed: 24,
+    });
+    let kci = Kci::new(Arc::new(ds));
+    let res = pc(&kci, &PcConfig { alpha: 0.05, max_cond: None });
+    let f1 = skeleton_f1(&res.cpdag, &dag);
+    assert!(f1 >= 0.5, "PC skeleton F1 too low: {f1}");
+    assert!(kci.calls() > 0, "PC must run CI tests");
+}
+
+/// MM-MB with KCI produces a sane graph on the same data.
+#[test]
+fn mmmb_kci_runs_and_is_sane() {
+    let (ds, dag) = generate(&SynthConfig {
+        n: 250,
+        num_vars: 5,
+        density: 0.2,
+        kind: DataKind::Continuous,
+        seed: 25,
+    });
+    let kci = Kci::new(Arc::new(ds));
+    let res = mmmb(&kci, &MmConfig { alpha: 0.05, max_cond: 3 });
+    let f1 = skeleton_f1(&res.cpdag, &dag);
+    assert!(f1 >= 0.4, "MM skeleton F1 too low: {f1}");
+}
+
+/// The engine runs every method end-to-end on the same small dataset
+/// without error and reports coherent statistics.
+#[test]
+fn engine_all_methods_run() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 120,
+        num_vars: 4,
+        density: 0.3,
+        kind: DataKind::Continuous,
+        seed: 26,
+    });
+    let ds = Arc::new(ds);
+    for method in [Method::CvLr, Method::Bic, Method::Sc, Method::Pc, Method::Mm] {
+        let out = discover(ds.clone(), &DiscoveryConfig { method, ..Default::default() })
+            .unwrap_or_else(|e| panic!("{method:?} failed: {e}"));
+        assert!(out.seconds >= 0.0);
+        match method {
+            Method::Pc | Method::Mm => {
+                assert!(out.ci_tests.unwrap() > 0, "{method:?} must test CIs")
+            }
+            _ => assert!(
+                out.score_stats.as_ref().unwrap().evaluations > 0,
+                "{method:?} must evaluate scores"
+            ),
+        }
+    }
+}
+
+/// GES + BDeu on forward-sampled SACHS recovers a good share of the
+/// skeleton (Fig. 5 setting, smoke scale).
+#[test]
+fn ges_bdeu_on_sachs() {
+    let net = networks::sachs();
+    let ds = Arc::new(networks::forward_sample(&net, 600, 31));
+    let out = discover(ds, &DiscoveryConfig { method: Method::Bdeu, ..Default::default() })
+        .unwrap();
+    let f1 = skeleton_f1(&out.cpdag, &net.dag);
+    assert!(f1 >= 0.5, "BDeu on SACHS F1 too low: {f1}");
+}
+
+/// GES + CV-LR on forward-sampled SACHS — the paper's headline
+/// real-world configuration (Fig. 5), smoke scale.
+#[test]
+fn ges_cvlr_on_sachs() {
+    let net = networks::sachs();
+    let ds = Arc::new(networks::forward_sample(&net, 400, 32));
+    let out = discover(ds, &DiscoveryConfig { method: Method::CvLr, ..Default::default() })
+        .unwrap();
+    let f1 = skeleton_f1(&out.cpdag, &net.dag);
+    assert!(f1 >= 0.5, "CV-LR on SACHS F1 too low: {f1}");
+    let stats = out.score_stats.unwrap();
+    let hit_rate = stats.cache_hits as f64 / stats.requests.max(1) as f64;
+    assert!(
+        hit_rate > 0.5,
+        "GES should hit the score cache heavily, got {hit_rate:.2}"
+    );
+}
+
+/// Increasing sample size does not degrade CHILD skeleton recovery
+/// (Fig. 5 trend, coarse two-point check).
+#[test]
+fn child_f1_improves_with_n() {
+    let net = networks::child();
+    let f1_at = |n: usize| {
+        let ds = Arc::new(networks::forward_sample(&net, n, 33));
+        let out = discover(ds, &DiscoveryConfig { method: Method::Bdeu, ..Default::default() })
+            .unwrap();
+        skeleton_f1(&out.cpdag, &net.dag)
+    };
+    let small = f1_at(150);
+    let large = f1_at(900);
+    assert!(
+        large >= small - 0.05,
+        "CHILD F1 should not degrade with n: {small} -> {large}"
+    );
+}
+
+/// Metrics sanity on hand-built graphs: perfect recovery gives F1 = 1,
+/// SHD = 0; the empty graph gives F1 = 0 against a non-empty truth.
+#[test]
+fn metrics_ground_truth_anchors() {
+    let truth = Dag::from_edges(4, &[(0, 1), (1, 2), (0, 3)]);
+    let perfect = dag_to_cpdag(&truth);
+    assert_eq!(skeleton_f1(&perfect, &truth), 1.0);
+    assert_eq!(normalized_shd(&perfect, &truth), 0.0);
+    let empty = cvlr::graph::Pdag::new(4);
+    assert_eq!(skeleton_f1(&empty, &truth), 0.0);
+    assert!(normalized_shd(&empty, &truth) > 0.0);
+}
+
+/// max_parents cap is respected by GES.
+#[test]
+fn ges_respects_parent_cap() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 300,
+        num_vars: 6,
+        density: 0.7,
+        kind: DataKind::Continuous,
+        seed: 27,
+    });
+    let score = CachedScore::new(BicScore::new(Arc::new(ds)));
+    let cfg = GesConfig { max_parents: Some(2), ..Default::default() };
+    let res = ges(&score, &cfg);
+    let dag = res.cpdag.to_dag().expect("valid CPDAG");
+    for v in 0..6 {
+        assert!(
+            dag.parents(v).len() <= 2 + 2, // CPDAG extension may orient undirected edges inward
+            "node {v} has too many parents"
+        );
+    }
+}
