@@ -1,5 +1,6 @@
 //! Quickstart: discover the causal structure of a small nonlinear
-//! system with the CV-LR score in a few lines.
+//! system with the CV-LR score in a few lines, through the
+//! `Discovery` builder façade.
 //!
 //! ```text
 //! cargo run --release --example quickstart
@@ -7,7 +8,7 @@
 
 use std::sync::Arc;
 
-use cvlr::coordinator::{discover, DiscoveryConfig};
+use cvlr::coordinator::{Discovery, EngineKind};
 use cvlr::data::Dataset;
 use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
 use cvlr::linalg::Mat;
@@ -33,10 +34,15 @@ fn main() -> anyhow::Result<()> {
     }
     let ds = Arc::new(Dataset::from_columns(data, &[false; 5]));
 
-    // 2. Run GES with the CV-LR score (the paper's method). The default
-    //    config uses the native rust backend; switch `engine` to
-    //    `EngineKind::Pjrt` to run the AOT XLA artifacts instead.
-    let out = discover(ds, &DiscoveryConfig::default())?;
+    // 2. Run batched GES with the CV-LR score (the paper's method).
+    //    The builder picks methods by registry name; `.engine(
+    //    EngineKind::Pjrt)` switches the CV-LR fold kernels to the AOT
+    //    XLA artifacts, `.workers(w)` sizes the score-service pool.
+    let out = Discovery::builder(ds)
+        .method("cv-lr")
+        .engine(EngineKind::Native)
+        .workers(2)
+        .run()?;
 
     // 3. Inspect the learned equivalence class.
     println!("learned CPDAG in {:.2}s:", out.seconds);
@@ -56,8 +62,11 @@ fn main() -> anyhow::Result<()> {
     println!("normalized SHD : {:.3}", normalized_shd(&out.cpdag, &truth));
     let stats = out.score_stats.expect("score-based method");
     println!(
-        "score service  : {} requests, {} unique evaluations ({:.0}% cache hits)",
+        "score service  : {} requests in {} batches (max {}), {} unique \
+         evaluations ({:.0}% cache hits)",
         stats.requests,
+        stats.batches,
+        stats.max_batch,
         stats.evaluations,
         100.0 * stats.cache_hits as f64 / stats.requests.max(1) as f64
     );

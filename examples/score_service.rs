@@ -1,7 +1,9 @@
-//! The score service as a standalone component: batched local-score
-//! requests routed through dedup, cache and a worker pool, with the
-//! CV-LR score running on the AOT XLA artifacts — the serving-style
-//! view of the coordinator (DESIGN.md §2, L3).
+//! The score service as a standalone component: batched
+//! [`ScoreRequest`] streams routed through intra-batch dedup, the
+//! single `ScoreCache` and a worker pool, with the batch-aware CV-LR
+//! score underneath — on the AOT XLA artifacts when available, else the
+//! native kernel. The serving-style view of the coordinator
+//! (DESIGN.md §2, L3).
 //!
 //! Prints per-batch latency/throughput and the final service metrics.
 //!
@@ -17,7 +19,7 @@ use cvlr::runtime::pjrt_kernel::PjrtCvLrKernel;
 use cvlr::runtime::Runtime;
 use cvlr::score::cvlr::CvLrScore;
 use cvlr::score::folds::CvParams;
-use cvlr::score::LocalScore;
+use cvlr::score::{ScoreBackend, ScoreRequest};
 use cvlr::util::cli::Args;
 use cvlr::util::timing::fmt_secs;
 use cvlr::util::{Pcg64, Stopwatch};
@@ -41,7 +43,9 @@ fn main() -> anyhow::Result<()> {
     let ds = Arc::new(ds);
 
     // Backend: PJRT artifacts when available, else the native kernel.
-    let backend: Arc<dyn LocalScore> = match Runtime::load(&artifacts) {
+    // CvLrScore implements ScoreBackend directly — one batch shares
+    // factor construction and fold splits across all its candidates.
+    let backend: Arc<dyn ScoreBackend> = match Runtime::load(&artifacts) {
         Ok(rt) => {
             println!("backend: PJRT artifacts ({} buckets)", rt.cvlr_buckets.len());
             Arc::new(CvLrScore::with_backend(
@@ -63,11 +67,11 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Pcg64::new(99);
     println!("\n{batches} batches x {batch_size} requests, {workers} workers:");
     for b in 0..batches {
-        let reqs: Vec<(usize, Vec<usize>)> = (0..batch_size)
+        let reqs: Vec<ScoreRequest> = (0..batch_size)
             .map(|_| {
                 let t = rng.below(d);
                 let k = rng.below(3);
-                let mut pa: Vec<usize> = (0..k)
+                let pa: Vec<usize> = (0..k)
                     .map(|_| {
                         let mut v = rng.below(d);
                         while v == t {
@@ -76,9 +80,8 @@ fn main() -> anyhow::Result<()> {
                         v
                     })
                     .collect();
-                pa.sort_unstable();
-                pa.dedup();
-                (t, pa)
+                // ScoreRequest::new canonicalizes (sorts + dedups)
+                ScoreRequest::new(t, &pa)
             })
             .collect();
         let sw = Stopwatch::start();
@@ -94,11 +97,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     let st = service.stats();
+    assert!(st.consistent(), "stats identity must hold: {st:?}");
     println!("\nservice metrics:");
     println!("  requests     : {}", st.requests);
     println!("  cache hits   : {} ({:.0}%)", st.cache_hits, 100.0 * st.cache_hits as f64 / st.requests.max(1) as f64);
     println!("  evaluations  : {}", st.evaluations);
-    println!("  batches      : {}", st.batches);
+    println!("  dedup skips  : {}", st.dedup_skips);
+    println!("  batches      : {} (max size {})", st.batches, st.max_batch);
     println!("  scoring time : {}", fmt_secs(st.eval_seconds));
     Ok(())
 }

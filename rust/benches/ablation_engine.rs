@@ -26,7 +26,7 @@ use cvlr::runtime::pjrt_kernel::PjrtCvLrKernel;
 use cvlr::runtime::Runtime;
 use cvlr::score::cvlr::CvLrScore;
 use cvlr::score::folds::CvParams;
-use cvlr::score::LocalScore;
+use cvlr::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
 use cvlr::search::ges::{ges, GesConfig};
 use cvlr::util::timing::{bench_fn, fmt_secs};
 use cvlr::util::Stopwatch;
@@ -173,14 +173,16 @@ fn ablation_cache(cfg: &BenchConfig) {
             self.0.local_score(t, p)
         }
         fn num_vars(&self) -> usize {
-            self.0.num_vars()
+            // qualified: CvLrScore implements both LocalScore and
+            // ScoreBackend, and both traits are in scope here
+            LocalScore::num_vars(&self.0)
         }
     }
-    let raw = Uncached(CvLrScore::native(ds), std::sync::atomic::AtomicU64::new(0));
+    let raw = ScalarBackend(Uncached(CvLrScore::native(ds), std::sync::atomic::AtomicU64::new(0)));
     let sw = Stopwatch::start();
     let _ = ges(&raw, &GesConfig::default());
     let raw_secs = sw.secs();
-    let evals = raw.1.load(std::sync::atomic::Ordering::Relaxed);
+    let evals = raw.0 .1.load(std::sync::atomic::Ordering::Relaxed);
     println!("cache=off  evals={:<6} {}  ({:.1}x slower)", evals, fmt_secs(raw_secs), raw_secs / cached_secs.max(1e-12));
     rep.row(&["off".into(), evals.to_string(), format!("{raw_secs:.4}")]);
     rep.finish("Ablation 3 — coordinator dedup cache");
@@ -198,8 +200,10 @@ fn ablation_workers(cfg: &BenchConfig) {
     });
     let ds = Arc::new(ds);
     // a GES-step-like batch: one insert-candidate scan
-    let reqs: Vec<(usize, Vec<usize>)> = (0..10usize)
-        .flat_map(|y| (0..10usize).filter(move |&x| x != y).map(move |x| (y, vec![x])))
+    let reqs: Vec<ScoreRequest> = (0..10usize)
+        .flat_map(|y| {
+            (0..10usize).filter(move |&x| x != y).map(move |x| ScoreRequest::new(y, &[x]))
+        })
         .collect();
     for workers in [1usize, 2, 4, 8] {
         let svc = ScoreService::new(Arc::new(CvLrScore::native(ds.clone())), workers);

@@ -1,10 +1,33 @@
-//! The discovery engine: one entry point that runs any of the paper's
-//! methods (CV-LR, CV, BIC, BDeu, SC, PC, MM) on a dataset and returns
-//! the learned equivalence class + run statistics.
+//! The discovery engine: a **registry** of discovery methods plus the
+//! [`Discovery`] builder façade.
+//!
+//! A method is either *score-based* (a factory producing a
+//! [`ScoreBackend`]; the engine wraps it in a [`ScoreService`] and runs
+//! batched GES) or *search-based* (a closure running its own algorithm,
+//! e.g. PC/KCI). The paper's methods are pre-registered; downstream
+//! crates add their own with [`register_score_method`] /
+//! [`register_search_method`] — no engine edits required:
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use cvlr::coordinator::{Discovery, DiscoveryOutcome, EngineKind};
+//! # fn run(ds: Arc<cvlr::data::Dataset>) -> anyhow::Result<DiscoveryOutcome> {
+//! let out = Discovery::builder(ds)
+//!     .method("cv-lr")
+//!     .engine(EngineKind::Pjrt)
+//!     .workers(8)
+//!     .run()?;
+//! # Ok(out)
+//! # }
+//! ```
+//!
+//! The legacy [`discover`]`(ds, &DiscoveryConfig)` entry point routes
+//! through the same registry.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::service::{ScoreService, ServiceStats};
 use crate::ci::Kci;
@@ -17,16 +40,18 @@ use crate::score::bdeu::BdeuScore;
 use crate::score::bic::BicScore;
 use crate::score::cv_exact::CvExactScore;
 use crate::score::cvlr::{CvLrScore, NativeCvLrKernel};
-use crate::score::marginal::MargLrScore;
 use crate::score::folds::CvParams;
+use crate::score::marginal::MargLrScore;
 use crate::score::sc::ScScore;
-use crate::score::LocalScore;
+use crate::score::{ScalarBackend, ScoreBackend};
 use crate::search::ges::{ges, GesConfig};
 use crate::search::mmmb::{mmmb, MmConfig};
 use crate::search::pc::{pc, PcConfig};
 use crate::util::Stopwatch;
 
-/// Which scoring/search method to run.
+/// Which scoring/search method to run (the paper's built-in set).
+/// Custom methods registered at runtime are addressed by name through
+/// [`Discovery::builder`] and have no enum variant.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// GES + CV-LR (the paper's method).
@@ -62,6 +87,20 @@ impl Method {
         }
     }
 
+    /// Canonical registry key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::CvLr => "cv-lr",
+            Method::Cv => "cv",
+            Method::MargLr => "marg-lr",
+            Method::Bic => "bic",
+            Method::Bdeu => "bdeu",
+            Method::Sc => "sc",
+            Method::Pc => "pc",
+            Method::Mm => "mm",
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().as_str() {
             "cv-lr" | "cvlr" => Some(Method::CvLr),
@@ -89,6 +128,11 @@ pub enum EngineKind {
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct DiscoveryConfig {
+    /// Method for the legacy [`discover`] entry point. Registry
+    /// factories must NOT branch on this field — when a run is started
+    /// by name through [`Discovery::builder`] (possibly a custom
+    /// method with no enum variant), it keeps its default and only the
+    /// registry name identifies the method.
     pub method: Method,
     pub engine: EngineKind,
     pub params: CvParams,
@@ -121,83 +165,297 @@ impl Default for DiscoveryConfig {
 pub struct DiscoveryOutcome {
     pub cpdag: Pdag,
     pub seconds: f64,
-    pub method: Method,
+    /// Canonical name of the method that ran (registry key).
+    pub method: String,
     /// Score-service statistics (score-based methods only).
     pub score_stats: Option<ServiceStats>,
     /// CI-test count (constraint-based methods only).
     pub ci_tests: Option<u64>,
 }
 
-/// Build the local score for a score-based method.
-fn make_score(ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<Arc<dyn LocalScore>> {
-    Ok(match cfg.method {
-        Method::CvLr => match cfg.engine {
-            EngineKind::Native => Arc::new(CvLrScore::with_backend(
-                ds,
-                cfg.params,
-                cfg.lowrank,
-                NativeCvLrKernel,
-            )),
-            EngineKind::Pjrt => {
-                let rt = Arc::new(
-                    Runtime::load(&cfg.artifacts_dir)
-                        .context("loading PJRT artifacts for the CV-LR engine")?,
-                );
-                Arc::new(CvLrScore::with_backend(
-                    ds,
-                    cfg.params,
-                    cfg.lowrank,
-                    PjrtCvLrKernel::new(rt),
-                ))
-            }
-        },
-        Method::Cv => Arc::new(CvExactScore::new(ds, cfg.params)),
-        Method::MargLr => Arc::new(MargLrScore::new(ds)),
-        Method::Bic => Arc::new(BicScore::new(ds)),
-        Method::Bdeu => Arc::new(BdeuScore::new(ds)),
-        Method::Sc => Arc::new(ScScore::new(ds)),
-        Method::Pc | Method::Mm => unreachable!("constraint-based"),
-    })
+/// Factory producing the score backend of a score-based method.
+pub type BackendFactory =
+    Arc<dyn Fn(Arc<Dataset>, &DiscoveryConfig) -> Result<Arc<dyn ScoreBackend>> + Send + Sync>;
+
+/// Runner for a search-based (non-GES) method.
+pub type SearchRunner =
+    Arc<dyn Fn(Arc<Dataset>, &DiscoveryConfig) -> Result<DiscoveryOutcome> + Send + Sync>;
+
+#[derive(Clone)]
+enum MethodEntry {
+    Score(BackendFactory),
+    Search(SearchRunner),
 }
 
-/// Run causal discovery with the configured method.
-pub fn discover(ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<DiscoveryOutcome> {
-    let sw = Stopwatch::start();
-    match cfg.method {
-        Method::Pc => {
-            let kci = Kci::new(ds);
-            let res = pc(&kci, &PcConfig { alpha: cfg.alpha, max_cond: None });
-            Ok(DiscoveryOutcome {
-                cpdag: res.cpdag,
-                seconds: sw.secs(),
-                method: cfg.method,
-                score_stats: None,
-                ci_tests: Some(kci.calls()),
-            })
+struct Registry {
+    /// canonical name → entry
+    methods: HashMap<String, MethodEntry>,
+    /// alias → canonical name
+    aliases: HashMap<String, String>,
+}
+
+impl Registry {
+    fn insert(&mut self, name: &str, aliases: &[&str], entry: MethodEntry) {
+        // names are matched case-insensitively: store lowercased so
+        // custom registrations with uppercase letters stay reachable
+        let name = name.to_ascii_lowercase();
+        self.methods.insert(name.clone(), entry);
+        for a in aliases {
+            self.aliases.insert(a.to_ascii_lowercase(), name.clone());
         }
-        Method::Mm => {
-            let kci = Kci::new(ds);
-            let res = mmmb(&kci, &MmConfig { alpha: cfg.alpha, max_cond: 3 });
-            Ok(DiscoveryOutcome {
-                cpdag: res.cpdag,
-                seconds: sw.secs(),
-                method: cfg.method,
-                score_stats: None,
-                ci_tests: Some(kci.calls()),
-            })
-        }
-        _ => {
-            let score = make_score(ds, cfg)?;
-            let service = ScoreService::new(score, cfg.workers);
+    }
+
+    fn resolve(&self, name: &str) -> Option<(String, MethodEntry)> {
+        let lower = name.to_ascii_lowercase();
+        let canon = if self.methods.contains_key(&lower) {
+            lower
+        } else {
+            self.aliases.get(&lower)?.clone()
+        };
+        let entry = self.methods.get(&canon)?.clone();
+        Some((canon, entry))
+    }
+
+    fn with_builtins() -> Registry {
+        let mut reg =
+            Registry { methods: HashMap::new(), aliases: HashMap::new() };
+        reg.insert(
+            "cv-lr",
+            &["cvlr"],
+            MethodEntry::Score(Arc::new(|ds, cfg| {
+                Ok(match cfg.engine {
+                    EngineKind::Native => Arc::new(CvLrScore::with_backend(
+                        ds,
+                        cfg.params,
+                        cfg.lowrank,
+                        NativeCvLrKernel,
+                    )) as Arc<dyn ScoreBackend>,
+                    EngineKind::Pjrt => {
+                        let rt = Arc::new(
+                            Runtime::load(&cfg.artifacts_dir)
+                                .context("loading PJRT artifacts for the CV-LR engine")?,
+                        );
+                        Arc::new(CvLrScore::with_backend(
+                            ds,
+                            cfg.params,
+                            cfg.lowrank,
+                            PjrtCvLrKernel::new(rt),
+                        ))
+                    }
+                })
+            })),
+        );
+        reg.insert(
+            "cv",
+            &[],
+            MethodEntry::Score(Arc::new(|ds, cfg| {
+                Ok(Arc::new(ScalarBackend(CvExactScore::new(ds, cfg.params))))
+            })),
+        );
+        reg.insert(
+            "marg-lr",
+            &["marglr", "marg"],
+            MethodEntry::Score(Arc::new(|ds, _| Ok(Arc::new(ScalarBackend(MargLrScore::new(ds)))))),
+        );
+        reg.insert(
+            "bic",
+            &[],
+            MethodEntry::Score(Arc::new(|ds, _| Ok(Arc::new(ScalarBackend(BicScore::new(ds)))))),
+        );
+        reg.insert(
+            "bdeu",
+            &[],
+            MethodEntry::Score(Arc::new(|ds, _| Ok(Arc::new(ScalarBackend(BdeuScore::new(ds)))))),
+        );
+        reg.insert(
+            "sc",
+            &[],
+            MethodEntry::Score(Arc::new(|ds, _| Ok(Arc::new(ScalarBackend(ScScore::new(ds)))))),
+        );
+        reg.insert(
+            "pc",
+            &[],
+            MethodEntry::Search(Arc::new(|ds, cfg| {
+                let sw = Stopwatch::start();
+                let kci = Kci::new(ds);
+                let res = pc(&kci, &PcConfig { alpha: cfg.alpha, max_cond: None });
+                Ok(DiscoveryOutcome {
+                    cpdag: res.cpdag,
+                    seconds: sw.secs(),
+                    method: "pc".to_string(),
+                    score_stats: None,
+                    ci_tests: Some(kci.calls()),
+                })
+            })),
+        );
+        reg.insert(
+            "mm",
+            &["mm-mb", "mmmb"],
+            MethodEntry::Search(Arc::new(|ds, cfg| {
+                let sw = Stopwatch::start();
+                let kci = Kci::new(ds);
+                let res = mmmb(&kci, &MmConfig { alpha: cfg.alpha, max_cond: 3 });
+                Ok(DiscoveryOutcome {
+                    cpdag: res.cpdag,
+                    seconds: sw.secs(),
+                    method: "mm".to_string(),
+                    score_stats: None,
+                    ci_tests: Some(kci.calls()),
+                })
+            })),
+        );
+        reg
+    }
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::with_builtins()))
+}
+
+/// Register (or replace) a score-based method: the factory's backend is
+/// wrapped in a `ScoreService` and driven by batched GES.
+pub fn register_score_method<F>(name: &str, aliases: &[&str], factory: F)
+where
+    F: Fn(Arc<Dataset>, &DiscoveryConfig) -> Result<Arc<dyn ScoreBackend>> + Send + Sync + 'static,
+{
+    registry().lock().unwrap().insert(name, aliases, MethodEntry::Score(Arc::new(factory)));
+}
+
+/// Register (or replace) a search-based method that runs its own
+/// algorithm end to end.
+pub fn register_search_method<F>(name: &str, aliases: &[&str], runner: F)
+where
+    F: Fn(Arc<Dataset>, &DiscoveryConfig) -> Result<DiscoveryOutcome> + Send + Sync + 'static,
+{
+    registry().lock().unwrap().insert(name, aliases, MethodEntry::Search(Arc::new(runner)));
+}
+
+/// Canonical names of every registered method, sorted.
+pub fn registered_methods() -> Vec<String> {
+    let mut names: Vec<String> = registry().lock().unwrap().methods.keys().cloned().collect();
+    names.sort();
+    names
+}
+
+/// Run the named method: build the backend, wrap it in the batching
+/// score service, drive batched GES (score methods) or delegate to the
+/// search runner.
+fn run_method(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<DiscoveryOutcome> {
+    // resolve under its own statement so the registry lock is released
+    // before the error path (or a factory) takes it again
+    let resolved = registry().lock().unwrap().resolve(name);
+    let (canon, entry) = match resolved {
+        Some(r) => r,
+        None => bail!(
+            "unknown method `{name}` (registered: {})",
+            registered_methods().join(", ")
+        ),
+    };
+    match entry {
+        MethodEntry::Score(factory) => {
+            let sw = Stopwatch::start();
+            let backend = factory(ds, cfg)?;
+            let service = ScoreService::new(backend, cfg.workers);
             let res = ges(&service, &cfg.ges);
             Ok(DiscoveryOutcome {
                 cpdag: res.cpdag,
                 seconds: sw.secs(),
-                method: cfg.method,
+                method: canon,
                 score_stats: Some(service.stats()),
                 ci_tests: None,
             })
         }
+        MethodEntry::Search(runner) => {
+            let mut out = runner(ds, cfg)?;
+            out.method = canon;
+            Ok(out)
+        }
+    }
+}
+
+/// Run causal discovery with the configured method (legacy entry point;
+/// routes through the method registry).
+pub fn discover(ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<DiscoveryOutcome> {
+    run_method(cfg.method.key(), ds, cfg)
+}
+
+/// Entry point of the builder façade.
+pub struct Discovery;
+
+impl Discovery {
+    /// Start configuring a discovery run on `ds`. Defaults mirror
+    /// [`DiscoveryConfig::default`] (CV-LR, native engine, 1 worker).
+    pub fn builder(ds: Arc<Dataset>) -> DiscoveryBuilder {
+        DiscoveryBuilder { ds, method: "cv-lr".to_string(), cfg: DiscoveryConfig::default() }
+    }
+}
+
+/// Builder-style discovery session: pick a method by registry name,
+/// tune the knobs, `run()`.
+pub struct DiscoveryBuilder {
+    ds: Arc<Dataset>,
+    method: String,
+    cfg: DiscoveryConfig,
+}
+
+impl DiscoveryBuilder {
+    /// Method by registry name (e.g. `"cv-lr"`, `"bic"`, `"pc"`, or any
+    /// custom name added with [`register_score_method`]). Unknown names
+    /// surface as an error from [`run`](Self::run).
+    pub fn method(mut self, name: impl Into<String>) -> Self {
+        self.method = name.into();
+        if let Some(m) = Method::parse(&self.method) {
+            self.cfg.method = m;
+        }
+        self
+    }
+
+    /// CV-LR fold-kernel engine (native rust or PJRT artifacts).
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    /// Worker threads for the score service.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// CV hyper-parameters (λ, γ, folds, kernel width).
+    pub fn params(mut self, params: CvParams) -> Self {
+        self.cfg.params = params;
+        self
+    }
+
+    /// Low-rank factorization configuration.
+    pub fn lowrank(mut self, lowrank: LowRankConfig) -> Self {
+        self.cfg.lowrank = lowrank;
+        self
+    }
+
+    /// GES search configuration.
+    pub fn ges(mut self, ges: GesConfig) -> Self {
+        self.cfg.ges = ges;
+        self
+    }
+
+    /// Significance level for constraint-based methods.
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.cfg.alpha = alpha;
+        self
+    }
+
+    /// Artifacts directory for the PJRT engine.
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Run discovery and return the learned equivalence class.
+    pub fn run(self) -> Result<DiscoveryOutcome> {
+        run_method(&self.method, self.ds, &self.cfg)
     }
 }
 
@@ -211,6 +469,7 @@ mod tests {
     fn method_parse_roundtrip() {
         for m in [Method::CvLr, Method::Cv, Method::MargLr, Method::Bic, Method::Bdeu, Method::Sc, Method::Pc, Method::Mm] {
             assert_eq!(Method::parse(m.name()), Some(m));
+            assert_eq!(Method::parse(m.key()), Some(m));
         }
         assert_eq!(Method::parse("nope"), None);
     }
@@ -221,9 +480,13 @@ mod tests {
         let cfg = DiscoveryConfig { method: Method::Bic, ..Default::default() };
         let out = discover(Arc::new(ds), &cfg).unwrap();
         assert!(out.seconds >= 0.0);
+        assert_eq!(out.method, "bic");
         let f1 = skeleton_f1(&out.cpdag, &dag);
         assert!(f1 > 0.3, "BIC should find some structure: f1={f1}");
-        assert!(out.score_stats.unwrap().evaluations > 0);
+        let st = out.score_stats.unwrap();
+        assert!(st.evaluations > 0);
+        assert!(st.batches > 0, "GES must drive the service batch-first");
+        assert!(st.consistent(), "{st:?}");
     }
 
     #[test]
@@ -235,5 +498,33 @@ mod tests {
         assert!(f1 > 0.3, "CV-LR should find structure: f1={f1}");
         let st = out.score_stats.unwrap();
         assert!(st.cache_hits > 0, "GES must hit the score cache");
+        assert!(st.max_batch > 1, "sweeps must batch many candidates");
+    }
+
+    #[test]
+    fn builder_runs_named_method() {
+        let (ds, _) = generate(&SynthConfig { n: 200, density: 0.3, seed: 3, ..Default::default() });
+        let out = Discovery::builder(Arc::new(ds)).method("bic").workers(2).run().unwrap();
+        assert_eq!(out.method, "bic");
+        assert!(out.score_stats.unwrap().batches > 0);
+    }
+
+    #[test]
+    fn builder_rejects_unknown_method() {
+        let (ds, _) = generate(&SynthConfig { n: 100, density: 0.3, seed: 4, ..Default::default() });
+        let err = Discovery::builder(Arc::new(ds)).method("definitely-not-a-method").run();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn custom_registered_method_is_discoverable() {
+        // a registry extension: BIC under a custom name, no engine edits
+        register_score_method("unit-test-bic", &["utb"], |ds, _| {
+            Ok(Arc::new(ScalarBackend(BicScore::new(ds))))
+        });
+        assert!(registered_methods().contains(&"unit-test-bic".to_string()));
+        let (ds, _) = generate(&SynthConfig { n: 150, density: 0.3, seed: 5, ..Default::default() });
+        let out = Discovery::builder(Arc::new(ds)).method("utb").run().unwrap();
+        assert_eq!(out.method, "unit-test-bic");
     }
 }

@@ -1,9 +1,14 @@
-//! L3 coordinator: the score service (request routing, dedup caching,
-//! batch dispatch over a worker pool) and the discovery engine that
-//! glues datasets, scores, searches and the PJRT runtime together.
+//! L3 coordinator: the batching score service (request dedup, the
+//! single `ScoreCache` memo layer, worker-pool fan-out of
+//! `ScoreBackend::score_batch` sub-batches) and the discovery engine —
+//! a method registry plus the `Discovery` builder façade that glues
+//! datasets, score backends, searches and the PJRT runtime together.
 
 pub mod service;
 pub mod engine;
 
-pub use engine::{discover, DiscoveryConfig, DiscoveryOutcome, EngineKind, Method};
-pub use service::ScoreService;
+pub use engine::{
+    discover, register_score_method, register_search_method, registered_methods, Discovery,
+    DiscoveryBuilder, DiscoveryConfig, DiscoveryOutcome, EngineKind, Method,
+};
+pub use service::{ScoreCache, ScoreService, ServiceStats};

@@ -1,153 +1,361 @@
-//! The score service: routes local-score requests from the search to
-//! the scoring backend with request deduplication, a shared memo cache
-//! and a worker pool for batch evaluation.
+//! The score service: the memoizing, batching façade between the
+//! search and any [`ScoreBackend`].
 //!
-//! GES evaluates hundreds of (target, parent-set) candidates per step,
-//! with heavy overlap between steps — the service's cache turns that
-//! overlap into hits, and `score_batch` fans independent misses out
-//! over `workers` threads (each backend is `Sync`; the PJRT backend
-//! serializes device access internally, so threads help exactly when
-//! the native backend or factor construction dominates).
+//! GES submits each sweep as one wide batch of (target, parent-set)
+//! requests with heavy overlap between sweeps. The service owns the
+//! **single** memo layer ([`ScoreCache`]) — scores are cached nowhere
+//! else — deduplicates the batch, fans the unique misses over a worker
+//! pool (each worker submits its chunk to the backend as a sub-batch,
+//! so batch-aware backends still amortize shared work), and returns
+//! scores in request order.
+//!
+//! Concurrency: the cache uses entry-based fill. A miss is *claimed*
+//! (marked in-flight) under the same lock span that classified it, so
+//! two concurrent batches can never evaluate the same key twice; the
+//! loser blocks on the winner's result instead. The accounting identity
+//! `requests == cache_hits + evaluations + dedup_skips` holds exactly
+//! (see [`ServiceStats::consistent`]).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
-use crate::score::LocalScore;
+use crate::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
 
-/// Service metrics.
+type Key = (usize, Vec<usize>);
+
+enum Slot {
+    /// Claimed by some batch; the value is being computed.
+    Pending,
+    Ready(f64),
+}
+
+/// Outcome of classifying one unique key under the cache lock.
+enum Claim {
+    /// Value already cached.
+    Hit(f64),
+    /// Another thread is computing it; wait for the fill.
+    InFlight,
+    /// This caller claimed it and must evaluate + fill.
+    Owned,
+}
+
+/// The single score memo layer, owned by [`ScoreService`].
+///
+/// Keys are canonical (target, sorted parent-set) pairs. Entries go
+/// through a claim → fill protocol so that concurrent batches dedup
+/// in-flight work instead of racing: `claim` marks unseen keys Pending
+/// under the same lock span that reports hits, and `fill` publishes
+/// results and wakes waiters.
+pub struct ScoreCache {
+    map: Mutex<HashMap<Key, Slot>>,
+    ready: Condvar,
+}
+
+impl ScoreCache {
+    pub fn new() -> ScoreCache {
+        ScoreCache { map: Mutex::new(HashMap::new()), ready: Condvar::new() }
+    }
+
+    /// Number of entries (including in-flight claims).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Classify every key in ONE lock span, claiming unseen keys for
+    /// the caller. `keys` must be unique within the call.
+    fn claim(&self, keys: &[Key]) -> Vec<Claim> {
+        let mut map = self.map.lock().unwrap();
+        keys.iter()
+            .map(|k| match map.get(k) {
+                Some(Slot::Ready(v)) => Claim::Hit(*v),
+                Some(Slot::Pending) => Claim::InFlight,
+                None => {
+                    map.insert(k.clone(), Slot::Pending);
+                    Claim::Owned
+                }
+            })
+            .collect()
+    }
+
+    /// Publish results for keys claimed by this caller and wake waiters.
+    fn fill(&self, entries: impl IntoIterator<Item = (Key, f64)>) {
+        let mut map = self.map.lock().unwrap();
+        for (k, v) in entries {
+            map.insert(k, Slot::Ready(v));
+        }
+        self.ready.notify_all();
+    }
+
+    /// Abandon claims that were never filled (the evaluator panicked):
+    /// remove the Pending slots and wake waiters so they fail loudly
+    /// instead of blocking forever.
+    fn abandon(&self, keys: &[Key]) {
+        let mut map = self.map.lock().unwrap();
+        for k in keys {
+            if let Some(Slot::Pending) = map.get(k) {
+                map.remove(k);
+            }
+        }
+        self.ready.notify_all();
+    }
+
+    /// Block until another thread fills `key`. Panics if the owning
+    /// thread abandoned the claim (its evaluation panicked) — a missing
+    /// entry here can only mean the in-flight owner died.
+    fn wait(&self, key: &Key) -> f64 {
+        let mut map = self.map.lock().unwrap();
+        loop {
+            match map.get(key) {
+                Some(Slot::Ready(v)) => return *v,
+                Some(Slot::Pending) => map = self.ready.wait(map).unwrap(),
+                None => panic!("score evaluation abandoned for {key:?} (evaluator panicked)"),
+            }
+        }
+    }
+}
+
+/// Unwinding-safety for claimed cache slots: if the owner does not
+/// `disarm()` (evaluation panicked before `fill`), the drop abandons
+/// the claims so concurrent waiters are not deadlocked.
+struct ClaimGuard<'a> {
+    cache: &'a ScoreCache,
+    keys: Vec<Key>,
+    armed: bool,
+}
+
+impl<'a> ClaimGuard<'a> {
+    fn new(cache: &'a ScoreCache, keys: Vec<Key>) -> ClaimGuard<'a> {
+        ClaimGuard { cache, keys, armed: true }
+    }
+
+    fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cache.abandon(&self.keys);
+        }
+    }
+}
+
+impl Default for ScoreCache {
+    fn default() -> Self {
+        ScoreCache::new()
+    }
+}
+
+/// Service metrics. The counters satisfy the accounting identity
+/// `requests == cache_hits + evaluations + dedup_skips`: every request
+/// is exactly one of a cache hit (including waits on in-flight work), a
+/// backend evaluation, or an intra-batch duplicate.
 #[derive(Default, Debug, Clone)]
 pub struct ServiceStats {
     pub requests: u64,
     pub cache_hits: u64,
     pub evaluations: u64,
+    /// Intra-batch duplicates folded into one evaluation.
+    pub dedup_skips: u64,
+    /// Batches submitted through `score_batch`.
     pub batches: u64,
+    /// Largest batch (request count) seen so far.
+    pub max_batch: u64,
     pub eval_seconds: f64,
 }
 
-/// Memoizing, batching façade over any `LocalScore`.
+impl ServiceStats {
+    /// The accounting identity; violated only by a bookkeeping bug.
+    pub fn consistent(&self) -> bool {
+        self.requests == self.cache_hits + self.evaluations + self.dedup_skips
+    }
+}
+
+/// Memoizing, batching façade over any [`ScoreBackend`]. Implements
+/// `ScoreBackend` itself, so the search is handed the service and never
+/// talks to a raw backend.
 pub struct ScoreService {
-    backend: Arc<dyn LocalScore>,
+    backend: Arc<dyn ScoreBackend>,
     workers: usize,
-    cache: Mutex<HashMap<(usize, Vec<usize>), f64>>,
+    cache: ScoreCache,
     requests: AtomicU64,
     hits: AtomicU64,
     evals: AtomicU64,
+    dedups: AtomicU64,
     batches: AtomicU64,
+    max_batch: AtomicU64,
     eval_secs: Mutex<f64>,
 }
 
 impl ScoreService {
-    pub fn new(backend: Arc<dyn LocalScore>, workers: usize) -> ScoreService {
+    pub fn new(backend: Arc<dyn ScoreBackend>, workers: usize) -> ScoreService {
         ScoreService {
             backend,
             workers: workers.max(1),
-            cache: Mutex::new(HashMap::new()),
+            cache: ScoreCache::new(),
             requests: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             evals: AtomicU64::new(0),
+            dedups: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
             eval_secs: Mutex::new(0.0),
         }
     }
 
+    /// Service over a scalar [`LocalScore`] via [`ScalarBackend`].
+    pub fn scalar<S: LocalScore + 'static>(score: S, workers: usize) -> ScoreService {
+        ScoreService::new(Arc::new(ScalarBackend(score)), workers)
+    }
+
+    /// Snapshot of the counters. The [`ServiceStats::consistent`]
+    /// identity holds at quiescence; a snapshot taken while another
+    /// thread is mid-batch can transiently observe `requests` ahead of
+    /// its matching hit/eval/dedup increments.
     pub fn stats(&self) -> ServiceStats {
         ServiceStats {
             requests: self.requests.load(Ordering::Relaxed),
             cache_hits: self.hits.load(Ordering::Relaxed),
             evaluations: self.evals.load(Ordering::Relaxed),
+            dedup_skips: self.dedups.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
     }
 
-    fn key(target: usize, parents: &[usize]) -> (usize, Vec<usize>) {
-        let mut p = parents.to_vec();
-        p.sort_unstable();
-        (target, p)
+    /// Evaluate the unique misses through the backend, split across the
+    /// worker pool. Each worker submits its chunk as one sub-batch, so
+    /// batch-aware backends amortize shared work within a chunk.
+    fn evaluate(&self, misses: &[ScoreRequest]) -> Vec<f64> {
+        if self.workers <= 1 || misses.len() <= 1 {
+            return self.backend.score_batch(misses);
+        }
+        let chunk = misses.len().div_ceil(self.workers);
+        let backend = &self.backend;
+        let mut out = vec![0.0; misses.len()];
+        std::thread::scope(|scope| {
+            let mut handles = vec![];
+            for (ci, batch) in misses.chunks(chunk).enumerate() {
+                let backend = backend.clone();
+                handles.push((ci, scope.spawn(move || backend.score_batch(batch))));
+            }
+            for (ci, h) in handles {
+                let vals = h.join().expect("score worker panicked");
+                out[ci * chunk..ci * chunk + vals.len()].copy_from_slice(&vals);
+            }
+        });
+        out
     }
+}
 
-    /// Evaluate a batch of requests: dedup, split misses across the
-    /// worker pool, fill the cache, return scores in request order.
-    pub fn score_batch(&self, reqs: &[(usize, Vec<usize>)]) -> Vec<f64> {
+impl ScoreBackend for ScoreService {
+    /// Dedup + cache + fan out one batch; scores return in request
+    /// order, bit-identical to scalar evaluation.
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        if reqs.is_empty() {
+            return vec![];
+        }
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.requests.fetch_add(reqs.len() as u64, Ordering::Relaxed);
-        let keys: Vec<(usize, Vec<usize>)> =
-            reqs.iter().map(|(t, p)| Self::key(*t, p)).collect();
+        self.max_batch.fetch_max(reqs.len() as u64, Ordering::Relaxed);
 
-        // collect unique misses
-        let mut misses: Vec<(usize, Vec<usize>)> = vec![];
-        {
-            let cache = self.cache.lock().unwrap();
-            let mut seen: HashMap<&(usize, Vec<usize>), ()> = HashMap::new();
-            for k in &keys {
-                if cache.contains_key(k) {
-                    self.hits.fetch_add(1, Ordering::Relaxed);
-                } else if seen.insert(k, ()).is_none() {
-                    misses.push(k.clone());
-                }
-            }
+        // Canonical keys; unique keys in first-appearance order.
+        let keys: Vec<Key> = reqs
+            .iter()
+            .map(|r| {
+                let canon = ScoreRequest::new(r.target, &r.parents);
+                (canon.target, canon.parents)
+            })
+            .collect();
+        let mut slot_of: HashMap<&Key, usize> = HashMap::with_capacity(keys.len());
+        let mut uniq: Vec<Key> = Vec::with_capacity(keys.len());
+        let mut req_slot: Vec<usize> = Vec::with_capacity(keys.len());
+        for k in &keys {
+            let idx = *slot_of.entry(k).or_insert_with(|| {
+                uniq.push(k.clone());
+                uniq.len() - 1
+            });
+            req_slot.push(idx);
         }
+        self.dedups.fetch_add((reqs.len() - uniq.len()) as u64, Ordering::Relaxed);
 
-        if !misses.is_empty() {
+        // One lock span: hits resolved and misses claimed atomically.
+        let claims = self.cache.claim(&uniq);
+        let owned: Vec<usize> =
+            (0..uniq.len()).filter(|&i| matches!(claims[i], Claim::Owned)).collect();
+        self.hits.fetch_add((uniq.len() - owned.len()) as u64, Ordering::Relaxed);
+        self.evals.fetch_add(owned.len() as u64, Ordering::Relaxed);
+
+        // Evaluate claimed misses and publish them. The guard abandons
+        // the claims if the backend panics, so waiters fail instead of
+        // hanging.
+        let mut owned_val: Vec<Option<f64>> = vec![None; uniq.len()];
+        if !owned.is_empty() {
+            let guard =
+                ClaimGuard::new(&self.cache, owned.iter().map(|&i| uniq[i].clone()).collect());
             let sw = crate::util::Stopwatch::start();
-            let results: Vec<f64> = if self.workers <= 1 || misses.len() <= 1 {
-                misses
-                    .iter()
-                    .map(|(t, p)| self.backend.local_score(*t, p))
-                    .collect()
-            } else {
-                let chunk = misses.len().div_ceil(self.workers);
-                let backend = &self.backend;
-                let mut out = vec![0.0; misses.len()];
-                std::thread::scope(|scope| {
-                    let mut handles = vec![];
-                    for (ci, batch) in misses.chunks(chunk).enumerate() {
-                        let backend = backend.clone();
-                        handles.push((
-                            ci,
-                            scope.spawn(move || {
-                                batch
-                                    .iter()
-                                    .map(|(t, p)| backend.local_score(*t, p))
-                                    .collect::<Vec<f64>>()
-                            }),
-                        ));
-                    }
-                    for (ci, h) in handles {
-                        let vals = h.join().expect("score worker panicked");
-                        out[ci * chunk..ci * chunk + vals.len()].copy_from_slice(&vals);
-                    }
-                });
-                out
-            };
-            self.evals.fetch_add(misses.len() as u64, Ordering::Relaxed);
+            let miss_reqs: Vec<ScoreRequest> = owned
+                .iter()
+                .map(|&i| ScoreRequest { target: uniq[i].0, parents: uniq[i].1.clone() })
+                .collect();
+            let vals = self.evaluate(&miss_reqs);
             *self.eval_secs.lock().unwrap() += sw.secs();
-            let mut cache = self.cache.lock().unwrap();
-            for (k, v) in misses.into_iter().zip(results) {
-                cache.insert(k, v);
+            self.cache.fill(owned.iter().zip(&vals).map(|(&i, &v)| (uniq[i].clone(), v)));
+            guard.disarm();
+            for (&i, &v) in owned.iter().zip(&vals) {
+                owned_val[i] = Some(v);
             }
         }
 
-        let cache = self.cache.lock().unwrap();
-        keys.iter().map(|k| cache[k]).collect()
+        req_slot
+            .iter()
+            .map(|&ui| match claims[ui] {
+                Claim::Hit(v) => v,
+                Claim::Owned => owned_val[ui].expect("owned slot filled above"),
+                Claim::InFlight => self.cache.wait(&uniq[ui]),
+            })
+            .collect()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.backend.num_vars()
     }
 }
 
 impl LocalScore for ScoreService {
+    /// Scalar path for legacy callers — same cache, same protocol, as a
+    /// one-request batch without the batch counters.
     fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let key = Self::key(target, parents);
-        if let Some(&v) = self.cache.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return v;
+        let req = ScoreRequest::new(target, parents);
+        let key = req.key();
+        match &self.cache.claim(std::slice::from_ref(&key))[0] {
+            Claim::Hit(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                *v
+            }
+            Claim::InFlight => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.cache.wait(&key)
+            }
+            Claim::Owned => {
+                self.evals.fetch_add(1, Ordering::Relaxed);
+                let guard = ClaimGuard::new(&self.cache, vec![key.clone()]);
+                let sw = crate::util::Stopwatch::start();
+                let v = self.backend.score_batch(std::slice::from_ref(&req))[0];
+                *self.eval_secs.lock().unwrap() += sw.secs();
+                self.cache.fill([(key, v)]);
+                guard.disarm();
+                v
+            }
         }
-        let sw = crate::util::Stopwatch::start();
-        let v = self.backend.local_score(target, &key.1);
-        self.evals.fetch_add(1, Ordering::Relaxed);
-        *self.eval_secs.lock().unwrap() += sw.secs();
-        self.cache.lock().unwrap().insert(key, v);
-        v
     }
 
     fn num_vars(&self) -> usize {
@@ -167,6 +375,9 @@ mod tests {
     impl LocalScore for SlowScore {
         fn local_score(&self, t: usize, p: &[usize]) -> f64 {
             self.calls.fetch_add(1, Ordering::SeqCst);
+            // actually slow, so concurrent batches reliably overlap and
+            // the in-flight dedup below is genuinely exercised
+            std::thread::sleep(std::time::Duration::from_millis(2));
             t as f64 + p.len() as f64 * 0.1
         }
         fn num_vars(&self) -> usize {
@@ -174,42 +385,87 @@ mod tests {
         }
     }
 
+    fn reqs_of(pairs: &[(usize, &[usize])]) -> Vec<ScoreRequest> {
+        pairs.iter().map(|(t, p)| ScoreRequest::new(*t, p)).collect()
+    }
+
     #[test]
     fn batch_dedups_and_caches() {
-        let svc = ScoreService::new(Arc::new(SlowScore { calls: AtomicUsize::new(0) }), 2);
-        let reqs = vec![
-            (0usize, vec![1usize]),
-            (0, vec![1]),     // duplicate
-            (1, vec![0, 2]),
-            (1, vec![2, 0]),  // same set, different order
-        ];
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 2);
+        let reqs = reqs_of(&[
+            (0, &[1]),
+            (0, &[1]),    // duplicate
+            (1, &[0, 2]),
+            (1, &[2, 0]), // same set, different order
+        ]);
         let out = svc.score_batch(&reqs);
         assert_eq!(out[0], out[1]);
         assert_eq!(out[2], out[3]);
         let st = svc.stats();
         assert_eq!(st.evaluations, 2, "only two unique evaluations");
-        // second batch: all hits
+        assert_eq!(st.dedup_skips, 2, "two intra-batch duplicates");
+        assert_eq!(st.max_batch, 4);
+        assert!(st.consistent(), "{st:?}");
+        // second batch: all unique keys hit
         let out2 = svc.score_batch(&reqs);
         assert_eq!(out, out2);
-        assert_eq!(svc.stats().evaluations, 2);
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 2);
+        assert_eq!(st.cache_hits, 2, "second batch: 2 unique hits (dups are dedup_skips)");
+        assert_eq!(st.dedup_skips, 4);
+        assert!(st.consistent(), "{st:?}");
     }
 
     #[test]
     fn single_requests_cached() {
-        let svc = ScoreService::new(Arc::new(SlowScore { calls: AtomicUsize::new(0) }), 1);
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1);
         let a = svc.local_score(2, &[4, 3]);
         let b = svc.local_score(2, &[3, 4]);
         assert_eq!(a, b);
         let st = svc.stats();
         assert_eq!(st.evaluations, 1);
         assert_eq!(st.cache_hits, 1);
+        assert_eq!(st.batches, 0, "scalar path is not a batch");
+        assert!(st.consistent(), "{st:?}");
     }
 
     #[test]
     fn parallel_batch_order_preserved() {
-        let svc = ScoreService::new(Arc::new(SlowScore { calls: AtomicUsize::new(0) }), 4);
-        let reqs: Vec<(usize, Vec<usize>)> = (0..5).map(|t| (t, vec![])).collect();
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 4);
+        let reqs: Vec<ScoreRequest> = (0..5).map(|t| ScoreRequest::new(t, &[])).collect();
         let out = svc.score_batch(&reqs);
         assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn concurrent_batches_evaluate_each_key_once() {
+        let svc = Arc::new(ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1));
+        let reqs: Vec<ScoreRequest> = (0..4).map(|t| ScoreRequest::new(t, &[4])).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let svc = svc.clone();
+                let reqs = reqs.clone();
+                scope.spawn(move || {
+                    let out = svc.score_batch(&reqs);
+                    assert_eq!(out, vec![0.1, 1.1, 2.1, 3.1]);
+                });
+            }
+        });
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 4, "in-flight dedup must prevent double evaluation");
+        assert_eq!(st.requests, 16);
+        assert!(st.consistent(), "{st:?}");
+    }
+
+    #[test]
+    fn mixed_scalar_and_batch_share_the_cache() {
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1);
+        let a = svc.local_score(3, &[1]);
+        let out = svc.score_batch(&reqs_of(&[(3, &[1]), (2, &[])]));
+        assert_eq!(a, out[0]);
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 2);
+        assert_eq!(st.cache_hits, 1);
+        assert!(st.consistent(), "{st:?}");
     }
 }

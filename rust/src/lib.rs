@@ -1,10 +1,48 @@
 //! # cvlr — Fast Causal Discovery by Approximate Kernel-based Generalized
 //! Score Functions (KDD 2025 reproduction)
 //!
-//! Three-layer architecture (see `DESIGN.md`):
-//! * **L3 (this crate)** — the coordinator: GES search, score service with
-//!   caching/batching, all baselines, data generators, metrics, PJRT
-//!   runtime for the AOT-compiled score artifacts.
+//! ## The batch-first scoring API
+//!
+//! Every score consumer in this crate speaks
+//! [`score::ScoreBackend::score_batch`]: the search gathers all valid
+//! candidate (target, parent-set) pairs of a GES sweep and submits them
+//! as **one wide batch** of [`score::ScoreRequest`]s, so the backend can
+//! amortize factor construction, fold splitting and device dispatch
+//! across hundreds of candidates — the interface the paper's O(n m²)
+//! local score needs to pay off end to end.
+//!
+//! * [`score::ScoreBackend`] — the primary trait; batch in, scores out,
+//!   request order preserved, bit-identical to scalar evaluation.
+//! * [`score::LocalScore`] — the scalar trait a score implementation
+//!   provides; [`score::ScalarBackend`] adapts any of them to the batch
+//!   interface. The CV-LR score implements `ScoreBackend` natively and
+//!   shares per-batch work across candidates.
+//! * [`coordinator::ScoreService`] — the memoizing façade: the single
+//!   `ScoreCache`, intra-batch dedup, in-flight dedup across threads,
+//!   and a worker pool fanning sub-batches to the backend.
+//! * [`coordinator::Discovery`] — the builder session API:
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use cvlr::coordinator::{Discovery, DiscoveryOutcome, EngineKind};
+//! # fn run(ds: Arc<cvlr::data::Dataset>) -> anyhow::Result<DiscoveryOutcome> {
+//! let out = Discovery::builder(ds)
+//!     .method("cv-lr")
+//!     .engine(EngineKind::Native)
+//!     .workers(8)
+//!     .run()?;
+//! # Ok(out)
+//! # }
+//! ```
+//!
+//! New methods plug in through the coordinator's registry
+//! ([`coordinator::register_score_method`]) without touching the engine.
+//!
+//! ## Three-layer architecture (see `DESIGN.md`)
+//!
+//! * **L3 (this crate)** — the coordinator: batched GES search, score
+//!   service with caching/batching, all baselines, data generators,
+//!   metrics, PJRT runtime for the AOT-compiled score artifacts.
 //! * **L2 (python/compile/model.py)** — the CV-LR / exact-CV score as JAX
 //!   computation graphs, lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the Gram-product

@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use cvlr::coordinator::{discover, DiscoveryConfig, EngineKind, Method};
+use cvlr::coordinator::{discover, Discovery, DiscoveryConfig, EngineKind};
 use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::{networks, Dataset};
 use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
@@ -138,29 +138,22 @@ fn load_workload(args: &Args) -> Result<(Arc<Dataset>, Option<Dag>, String)> {
     })
 }
 
-fn discovery_config(args: &Args) -> Result<DiscoveryConfig> {
-    let method = Method::parse(&args.get_or("method", "cv-lr"))
-        .context("unknown --method (cv-lr|cv|marg-lr|bic|bdeu|sc|pc|mm)")?;
+fn cmd_discover(args: &Args) -> Result<()> {
+    let (ds, truth, desc) = load_workload(args)?;
     let engine = match args.get_or("engine", "native").as_str() {
         "native" => EngineKind::Native,
         "pjrt" => EngineKind::Pjrt,
         e => bail!("unknown --engine `{e}` (native|pjrt)"),
     };
-    Ok(DiscoveryConfig {
-        method,
-        engine,
-        workers: args.usize_or("workers", 1),
-        artifacts_dir: args.get_or("artifacts", "artifacts"),
-        ..Default::default()
-    })
-}
-
-fn cmd_discover(args: &Args) -> Result<()> {
-    let (ds, truth, desc) = load_workload(args)?;
-    let cfg = discovery_config(args)?;
     println!("workload : {desc}");
-    println!("method   : {} ({:?} engine)", cfg.method.name(), cfg.engine);
-    let out = discover(ds, &cfg)?;
+    // the builder façade: method by registry name, knobs, run
+    let out = Discovery::builder(ds)
+        .method(args.get_or("method", "cv-lr"))
+        .engine(engine)
+        .workers(args.usize_or("workers", 1))
+        .artifacts_dir(args.get_or("artifacts", "artifacts"))
+        .run()?;
+    println!("method   : {} ({engine:?} engine)", out.method);
     println!("time     : {}", fmt_secs(out.seconds));
     println!("edges    : {}", out.cpdag.num_edges());
     if let Some(truth) = truth {
@@ -170,10 +163,14 @@ fn cmd_discover(args: &Args) -> Result<()> {
     if let Some(st) = out.score_stats {
         let hit = st.cache_hits as f64 / st.requests.max(1) as f64;
         println!(
-            "service  : {} requests, {} evals, {:.0}% cache hits, {} in scoring",
+            "service  : {} requests in {} batches (max {}), {} evals, \
+             {:.0}% cache hits, {} dups, {} in scoring",
             st.requests,
+            st.batches,
+            st.max_batch,
             st.evaluations,
             hit * 100.0,
+            st.dedup_skips,
             fmt_secs(st.eval_seconds)
         );
     }

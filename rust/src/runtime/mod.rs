@@ -18,6 +18,9 @@
 //! only path to the wrapped pointers.
 
 pub mod pjrt_kernel;
+// The `xla` binding: an in-tree API-compatible shim by default (see its
+// module docs); swap this line for the real crate to enable PJRT.
+pub mod xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -126,24 +129,28 @@ impl Runtime {
             .ok_or_else(|| anyhow!("no column bucket fits m={m} (have {:?})", self.m_buckets))
     }
 
-    /// Execute artifact `name` with the given literals; expects a
-    /// 1-tuple f64 scalar result (all score graphs return that).
-    pub fn execute_scalar(&self, name: &str, args: &[xla::Literal]) -> Result<f64> {
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.exes.contains_key(name) {
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            inner.exes.insert(name.to_string(), exe);
+    /// Compile `name` into `inner.exes` if it is not there yet.
+    fn compile_if_needed(&self, inner: &mut Inner, name: &str) -> Result<()> {
+        if inner.exes.contains_key(name) {
+            return Ok(());
         }
-        let exe = inner.exes.get(name).unwrap();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        inner.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// One execution of an already-compiled artifact; expects a 1-tuple
+    /// f64 scalar result (all score graphs return that).
+    fn run_one(exe: &xla::PjRtLoadedExecutable, name: &str, args: &[xla::Literal]) -> Result<f64> {
         let result = exe
             .execute::<xla::Literal>(args)
             .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
@@ -153,29 +160,41 @@ impl Runtime {
         let v = out
             .to_vec::<f64>()
             .map_err(|e| anyhow!("read f64 result of {name}: {e:?}"))?;
-        *self.executions.lock().unwrap() += 1;
         v.first().cloned().ok_or_else(|| anyhow!("empty result from {name}"))
+    }
+
+    /// Execute artifact `name` with the given literals.
+    pub fn execute_scalar(&self, name: &str, args: &[xla::Literal]) -> Result<f64> {
+        let mut inner = self.inner.lock().unwrap();
+        self.compile_if_needed(&mut inner, name)?;
+        let exe = inner.exes.get(name).unwrap();
+        let v = Self::run_one(exe, name, args)?;
+        *self.executions.lock().unwrap() += 1;
+        Ok(v)
+    }
+
+    /// Batched invocation: execute artifact `name` once per argument
+    /// set, holding the executor for the whole batch. Amortizes the
+    /// per-call lock acquisition and compile-cache probe across the
+    /// batch and keeps the device queue warm — the entry point the
+    /// batch-aware CV-LR backend submits whole fold batches through.
+    pub fn execute_scalar_many(&self, name: &str, calls: &[Vec<xla::Literal>]) -> Result<Vec<f64>> {
+        let mut inner = self.inner.lock().unwrap();
+        self.compile_if_needed(&mut inner, name)?;
+        let exe = inner.exes.get(name).unwrap();
+        let mut out = Vec::with_capacity(calls.len());
+        for args in calls {
+            out.push(Self::run_one(exe, name, args)?);
+        }
+        *self.executions.lock().unwrap() += calls.len() as u64;
+        Ok(out)
     }
 
     /// Pre-compile a set of artifacts (warm-up before timing runs).
     pub fn warm_up(&self, names: &[String]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
         for name in names {
-            // compile by executing nothing: force-lazy-compile via a map probe
-            let mut inner = self.inner.lock().unwrap();
-            if inner.exes.contains_key(name) {
-                continue;
-            }
-            let path = self.dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = inner
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            inner.exes.insert(name.clone(), exe);
+            self.compile_if_needed(&mut inner, name)?;
         }
         Ok(())
     }

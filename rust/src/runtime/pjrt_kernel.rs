@@ -6,16 +6,24 @@
 //! * [`PjrtExactScorer`] — the exact O(n³) CV fold over the
 //!   `exact_*` artifacts (the Fig. 1 baseline on the same runtime).
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::{mat_literal, scalar_literal, Runtime, DX_CAP, DZ_CAP};
+use super::{mat_literal, scalar_literal, xla, Runtime, DX_CAP, DZ_CAP};
 use crate::linalg::Mat;
-use crate::score::cvlr::CvLrKernel;
+use crate::score::cvlr::{CondFold, CvLrKernel, MargFold};
 use crate::score::folds::CvParams;
 
 /// CV-LR fold evaluation through the AOT artifacts.
+///
+/// The per-fold entry points pay one runtime dispatch each; the fold
+/// *batch* entry points group folds by (row bucket, column bucket) —
+/// i.e. by artifact — and submit each group through
+/// [`Runtime::execute_scalar_many`], so a whole candidate's folds (and,
+/// upstream, a whole GES batch) ride one executor acquisition per
+/// artifact instead of one per score.
 pub struct PjrtCvLrKernel {
     pub rt: Arc<Runtime>,
 }
@@ -25,11 +33,23 @@ impl PjrtCvLrKernel {
         PjrtCvLrKernel { rt }
     }
 
-    fn run_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> Result<f64> {
-        let bucket = self.rt.bucket_for(lx1.rows)?;
-        let mcap = self.rt.m_bucket_for(lx1.cols.max(lz1.cols))?;
+    /// (bucket, mcap) shape keys for a conditional fold.
+    fn cond_shape(&self, lx1: &Mat, lz1: &Mat) -> Result<(usize, usize)> {
+        Ok((self.rt.bucket_for(lx1.rows)?, self.rt.m_bucket_for(lx1.cols.max(lz1.cols))?))
+    }
+
+    fn cond_args(
+        &self,
+        bucket: usize,
+        mcap: usize,
+        lx0: &Mat,
+        lx1: &Mat,
+        lz0: &Mat,
+        lz1: &Mat,
+        p: &CvParams,
+    ) -> Result<Vec<xla::Literal>> {
         let n0_cap = bucket / 4;
-        let args = vec![
+        Ok(vec![
             mat_literal(lx0, n0_cap, mcap)?,
             mat_literal(lx1, bucket, mcap)?,
             mat_literal(lz0, n0_cap, mcap)?,
@@ -38,23 +58,87 @@ impl PjrtCvLrKernel {
             scalar_literal(lx1.rows as f64),
             scalar_literal(p.lambda),
             scalar_literal(p.gamma),
-        ];
-        self.rt.execute_scalar(&format!("cvlr_cond_n{bucket}_m{mcap}"), &args)
+        ])
     }
 
-    fn run_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> Result<f64> {
-        let bucket = self.rt.bucket_for(lx1.rows)?;
-        let mcap = self.rt.m_bucket_for(lx1.cols)?;
+    fn marg_args(
+        &self,
+        bucket: usize,
+        mcap: usize,
+        lx0: &Mat,
+        lx1: &Mat,
+        p: &CvParams,
+    ) -> Result<Vec<xla::Literal>> {
         let n0_cap = bucket / 4;
-        let args = vec![
+        Ok(vec![
             mat_literal(lx0, n0_cap, mcap)?,
             mat_literal(lx1, bucket, mcap)?,
             scalar_literal(lx0.rows as f64),
             scalar_literal(lx1.rows as f64),
             scalar_literal(p.lambda),
             scalar_literal(p.gamma),
-        ];
+        ])
+    }
+
+    fn run_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> Result<f64> {
+        let (bucket, mcap) = self.cond_shape(lx1, lz1)?;
+        let args = self.cond_args(bucket, mcap, lx0, lx1, lz0, lz1, p)?;
+        self.rt.execute_scalar(&format!("cvlr_cond_n{bucket}_m{mcap}"), &args)
+    }
+
+    fn run_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> Result<f64> {
+        let bucket = self.rt.bucket_for(lx1.rows)?;
+        let mcap = self.rt.m_bucket_for(lx1.cols)?;
+        let args = self.marg_args(bucket, mcap, lx0, lx1, p)?;
         self.rt.execute_scalar(&format!("cvlr_marg_n{bucket}_m{mcap}"), &args)
+    }
+
+    fn run_cond_batch(&self, folds: &[CondFold<'_>], p: &CvParams) -> Result<Vec<f64>> {
+        let mut out = vec![0.0; folds.len()];
+        // group folds by artifact shape so each group is one submission
+        let mut groups: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for (i, f) in folds.iter().enumerate() {
+            groups.entry(self.cond_shape(f.lx1, f.lz1)?).or_default().push(i);
+        }
+        for ((bucket, mcap), idxs) in groups {
+            let calls: Vec<Vec<xla::Literal>> = idxs
+                .iter()
+                .map(|&i| {
+                    let f = &folds[i];
+                    self.cond_args(bucket, mcap, f.lx0, f.lx1, f.lz0, f.lz1, p)
+                })
+                .collect::<Result<_>>()?;
+            let vals =
+                self.rt.execute_scalar_many(&format!("cvlr_cond_n{bucket}_m{mcap}"), &calls)?;
+            for (&i, v) in idxs.iter().zip(vals) {
+                out[i] = v;
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_marg_batch(&self, folds: &[MargFold<'_>], p: &CvParams) -> Result<Vec<f64>> {
+        let mut out = vec![0.0; folds.len()];
+        let mut groups: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for (i, f) in folds.iter().enumerate() {
+            let key = (self.rt.bucket_for(f.lx1.rows)?, self.rt.m_bucket_for(f.lx1.cols)?);
+            groups.entry(key).or_default().push(i);
+        }
+        for ((bucket, mcap), idxs) in groups {
+            let calls: Vec<Vec<xla::Literal>> = idxs
+                .iter()
+                .map(|&i| {
+                    let f = &folds[i];
+                    self.marg_args(bucket, mcap, f.lx0, f.lx1, p)
+                })
+                .collect::<Result<_>>()?;
+            let vals =
+                self.rt.execute_scalar_many(&format!("cvlr_marg_n{bucket}_m{mcap}"), &calls)?;
+            for (&i, v) in idxs.iter().zip(vals) {
+                out[i] = v;
+            }
+        }
+        Ok(out)
     }
 }
 
@@ -65,6 +149,14 @@ impl CvLrKernel for PjrtCvLrKernel {
 
     fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64 {
         self.run_marg(lx0, lx1, p).expect("PJRT cvlr_marg execution failed")
+    }
+
+    fn score_cond_batch(&self, folds: &[CondFold<'_>], p: &CvParams) -> Vec<f64> {
+        self.run_cond_batch(folds, p).expect("PJRT cvlr_cond batch execution failed")
+    }
+
+    fn score_marg_batch(&self, folds: &[MargFold<'_>], p: &CvParams) -> Vec<f64> {
+        self.run_marg_batch(folds, p).expect("PJRT cvlr_marg batch execution failed")
     }
 
     fn name(&self) -> &'static str {

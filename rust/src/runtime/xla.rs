@@ -1,0 +1,157 @@
+//! In-tree shim for the `xla` PJRT binding.
+//!
+//! The production runtime links a real `xla` crate (PJRT CPU client +
+//! HLO compilation); that binding is not on crates.io, so the default
+//! build compiles against this API-compatible shim instead. The pure
+//! data types ([`Literal`]) are fully functional — literal packing,
+//! padding and the `mat_literal`/`scalar_literal` helpers behave
+//! exactly as with the real binding — while the device types
+//! ([`PjRtClient`]) report PJRT as unavailable at construction, so
+//! `Runtime::load` fails with a clear message and callers fall back to
+//! the native engine. Swapping the real binding back in is a one-line
+//! change in `runtime/mod.rs`; no call site mentions the shim.
+
+use std::fmt;
+
+/// Shim error: carries the message the call sites render with `{:?}`.
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Marker for element types a [`Literal`] can be read back as.
+pub trait NativeElem: Copy {
+    fn from_f64(v: f64) -> Self;
+}
+
+impl NativeElem for f64 {
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+}
+
+/// A host-side typed array: shape + row-major f64 payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    shape: Vec<i64>,
+    data: Vec<f64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f64]) -> Literal {
+        Literal { shape: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar(x: f64) -> Literal {
+        Literal { shape: vec![], data: vec![x] }
+    }
+
+    /// Reinterpret under a new shape with the same element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count {} != {want}",
+                self.shape,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { shape: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Unwrap a 1-tuple result literal.
+    pub fn to_tuple1(self) -> Result<Literal, Error> {
+        Err(Error("tuple literals require the real xla binding".to_string()))
+    }
+
+    /// Read the payload back as a typed vector.
+    pub fn to_vec<T: NativeElem>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f64(v)).collect())
+    }
+}
+
+/// Parsed HLO module (opaque in the shim).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error(unavailable("HloModuleProto::from_text_file")))
+    }
+}
+
+/// An XLA computation handle (opaque in the shim).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT CPU client. Unconstructible in the shim: `cpu()` errors, so
+/// everything downstream of it is unreachable but type-checks.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(unavailable("PjRtClient::cpu")))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(unavailable("PjRtClient::compile")))
+    }
+}
+
+/// A compiled executable (opaque in the shim).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(unavailable("PjRtLoadedExecutable::execute")))
+    }
+}
+
+/// A device buffer (opaque in the shim).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(unavailable("PjRtBuffer::to_literal_sync")))
+    }
+}
+
+fn unavailable(what: &str) -> String {
+    format!(
+        "{what}: PJRT is unavailable — this build uses the in-tree xla shim; \
+         link the real `xla` binding to run the AOT artifacts (native engine \
+         remains fully functional)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err(), "element-count mismatch must fail");
+        assert_eq!(Literal::scalar(2.5).to_vec::<f64>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().err().expect("shim client must not construct");
+        assert!(format!("{e:?}").contains("shim"));
+    }
+}

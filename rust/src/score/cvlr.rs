@@ -28,11 +28,26 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use super::folds::{stride_folds, CvParams};
-use super::LocalScore;
+use super::{LocalScore, ScoreBackend, ScoreRequest};
 use crate::data::Dataset;
 use crate::kernel::{median_heuristic, Kernel};
 use crate::linalg::{Cholesky, Mat};
 use crate::lowrank::{factorize, LowRank, LowRankConfig};
+
+/// One centered CV fold of conditional-score factors (borrowed views
+/// into the per-batch split cache).
+pub struct CondFold<'a> {
+    pub lx0: &'a Mat,
+    pub lx1: &'a Mat,
+    pub lz0: &'a Mat,
+    pub lz1: &'a Mat,
+}
+
+/// One centered CV fold of marginal-score factors.
+pub struct MargFold<'a> {
+    pub lx0: &'a Mat,
+    pub lx1: &'a Mat,
+}
 
 /// Backend for the per-fold CV-LR score evaluation. Factors arrive
 /// *already centered by the train mean*.
@@ -41,6 +56,20 @@ pub trait CvLrKernel: Send + Sync {
     fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64;
     /// Marginal score (Eq. 9 via §5 "|z|=0"): one fold.
     fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64;
+
+    /// All folds of one conditional score in a single submission.
+    /// Backends that pay a per-invocation dispatch cost (PJRT) override
+    /// this to amortize it; the default evaluates fold by fold, so the
+    /// batched and scalar paths are bit-identical by construction.
+    fn score_cond_batch(&self, folds: &[CondFold<'_>], p: &CvParams) -> Vec<f64> {
+        folds.iter().map(|f| self.score_cond(f.lx0, f.lx1, f.lz0, f.lz1, p)).collect()
+    }
+
+    /// All folds of one marginal score in a single submission.
+    fn score_marg_batch(&self, folds: &[MargFold<'_>], p: &CvParams) -> Vec<f64> {
+        folds.iter().map(|f| self.score_marg(f.lx0, f.lx1, p)).collect()
+    }
+
     /// Human-readable backend name (for bench output).
     fn name(&self) -> &'static str;
 }
@@ -197,26 +226,89 @@ impl<K: CvLrKernel> CvLrScore<K> {
     }
 }
 
+impl<K: CvLrKernel> CvLrScore<K> {
+    /// One batch segment with fully shared per-set work (see
+    /// `ScoreBackend::score_batch` below for the segmenting wrapper).
+    fn score_segment(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        let folds = stride_folds(self.ds.n(), self.params.folds);
+
+        // Unique variable sets referenced by the batch: every target
+        // singleton plus every non-empty parent set.
+        let mut sets: Vec<Vec<usize>> = Vec::with_capacity(2 * reqs.len());
+        for r in reqs {
+            sets.push(vec![r.target]);
+            if !r.parents.is_empty() {
+                sets.push(r.parents.clone());
+            }
+        }
+        sets.sort_unstable();
+        sets.dedup();
+
+        // One centered (test, train) split per set per fold, shared by
+        // all candidates below.
+        let mut splits: HashMap<Vec<usize>, Vec<(Mat, Mat)>> = HashMap::with_capacity(sets.len());
+        for set in sets {
+            let lam = self.factor_for(&set);
+            let per_fold: Vec<(Mat, Mat)> =
+                folds.iter().map(|(test, train)| split_center(&lam, test, train)).collect();
+            splits.insert(set, per_fold);
+        }
+
+        let nfolds = folds.len() as f64;
+        reqs.iter()
+            .map(|r| {
+                let lx = &splits[&[r.target][..]];
+                if r.parents.is_empty() {
+                    let fs: Vec<MargFold<'_>> =
+                        lx.iter().map(|(l0, l1)| MargFold { lx0: l0, lx1: l1 }).collect();
+                    self.backend.score_marg_batch(&fs, &self.params).iter().sum::<f64>() / nfolds
+                } else {
+                    let lz = &splits[&r.parents[..]];
+                    let fs: Vec<CondFold<'_>> = lx
+                        .iter()
+                        .zip(lz)
+                        .map(|((x0, x1), (z0, z1))| CondFold { lx0: x0, lx1: x1, lz0: z0, lz1: z1 })
+                        .collect();
+                    self.backend.score_cond_batch(&fs, &self.params).iter().sum::<f64>() / nfolds
+                }
+            })
+            .collect()
+    }
+}
+
+impl<K: CvLrKernel> ScoreBackend for CvLrScore<K> {
+    /// Batch-aware evaluation: the expensive per-variable-set work —
+    /// low-rank factorization and per-fold train-mean centering — is
+    /// done **once per unique set in a segment** and shared across
+    /// every candidate that references it. A GES sweep scoring hundreds
+    /// of parent-set variations of the same target pays for the target
+    /// factor splits once per segment; the per-candidate cost collapses
+    /// to the m×m core algebra, submitted to the fold kernel as one
+    /// [`CvLrKernel::score_cond_batch`] call per candidate.
+    ///
+    /// Sweep-sized batches are processed in fixed segments so the
+    /// transient centered-split storage stays bounded (at most ~2 ×
+    /// segment variable sets live at once) no matter how wide the
+    /// search batches get; per-request values are independent of the
+    /// segmentation, so results stay bit-identical.
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        const SEGMENT: usize = 64;
+        if reqs.len() <= SEGMENT {
+            return self.score_segment(reqs);
+        }
+        reqs.chunks(SEGMENT).flat_map(|seg| self.score_segment(seg)).collect()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.ds.d()
+    }
+}
+
 impl<K: CvLrKernel> LocalScore for CvLrScore<K> {
     fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
-        let lx = self.factor_for(&[target]);
-        let folds = stride_folds(self.ds.n(), self.params.folds);
-        if parents.is_empty() {
-            let mut total = 0.0;
-            for (test, train) in &folds {
-                let (lx0, lx1) = split_center(&lx, test, train);
-                total += self.backend.score_marg(&lx0, &lx1, &self.params);
-            }
-            return total / folds.len() as f64;
-        }
-        let lz = self.factor_for(parents);
-        let mut total = 0.0;
-        for (test, train) in &folds {
-            let (lx0, lx1) = split_center(&lx, test, train);
-            let (lz0, lz1) = split_center(&lz, test, train);
-            total += self.backend.score_cond(&lx0, &lx1, &lz0, &lz1, &self.params);
-        }
-        total / folds.len() as f64
+        // A one-request batch: keeps the scalar and batched paths on
+        // the same code, so they are bit-identical by construction.
+        self.score_batch(&[ScoreRequest::new(target, parents)])[0]
     }
 
     fn num_vars(&self) -> usize {

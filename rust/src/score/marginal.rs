@@ -256,7 +256,7 @@ mod tests {
             data[(r, 2)] = c;
         }
         let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
-        let score = crate::score::CachedScore::new(MargLrScore::new(ds));
+        let score = crate::coordinator::ScoreService::scalar(MargLrScore::new(ds), 1);
         let res = ges(&score, &GesConfig::default());
         let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
         let f1 = skeleton_f1(&res.cpdag, &truth);

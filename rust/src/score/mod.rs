@@ -1,4 +1,27 @@
-//! Score functions for causal discovery.
+//! Score functions for causal discovery, behind a **batch-first** API.
+//!
+//! The paper's contribution is making each local score S(X|Z) cheap
+//! (O(n m²) CV-LR via the low-rank dumbbell rules of §5); this module's
+//! job is making sure the search layer can *exploit* that: every score
+//! consumer speaks [`ScoreBackend::score_batch`], so a whole GES sweep
+//! arrives at the backend as one wide request batch that can amortize
+//! factor construction, fold splitting and device dispatch across
+//! candidates.
+//!
+//! The two traits:
+//!
+//! * [`ScoreBackend`] — the primary interface: evaluate a slice of
+//!   [`ScoreRequest`]s and return the scores in request order. The
+//!   search (`search::ges`) and the coordinator's `ScoreService` both
+//!   speak this trait and nothing else on the hot path.
+//! * [`LocalScore`] — the scalar interface a score *implementation*
+//!   provides: one decomposable local score `S(X_i | Pa_i)`. Any
+//!   `LocalScore` becomes a (serial) `ScoreBackend` through the
+//!   [`ScalarBackend`] adapter; batch-aware scores such as
+//!   [`cvlr::CvLrScore`] implement `ScoreBackend` directly and share
+//!   per-batch work across candidates.
+//!
+//! The score implementations:
 //!
 //! * [`cv_exact`] — the O(n³) cross-validated generalized score of Huang
 //!   et al. (Eq. 8/9 of the paper) — the baseline "CV";
@@ -7,9 +30,13 @@
 //!   ("CV-LR"). The m×m core algebra is expressed behind the
 //!   [`cvlr::CvLrKernel`] trait so it can run natively (rust f64) or on
 //!   the AOT-compiled XLA artifacts (see `runtime`);
-//! * [`bic`], [`bdeu`], [`sc`] — the baseline scores of §7.1;
-//! * [`LocalScore`] — the common trait: a *decomposable* local score
-//!   `S(X_i, Pa_i)`, summed over variables by [`graph_score`].
+//! * [`marginal`] — the low-rank marginal-likelihood score;
+//! * [`bic`], [`bdeu`], [`sc`] — the baseline scores of §7.1.
+//!
+//! Memoization lives in exactly one place: the coordinator's
+//! `ScoreService` owns the single `ScoreCache`. Score implementations
+//! stay cache-free (CV-LR's *factor* cache is not a score memo — it
+//! caches per-variable-set kernel factors, a different key space).
 
 pub mod folds;
 pub mod cv_exact;
@@ -19,17 +46,109 @@ pub mod bic;
 pub mod bdeu;
 pub mod sc;
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+/// One local-score request: S(target | parents).
+///
+/// Construction through [`ScoreRequest::new`] canonicalizes the parent
+/// set (sorted ascending, duplicates removed), so two requests for the
+/// same (target, parent-set) compare equal and hash identically no
+/// matter how the caller ordered the parents.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ScoreRequest {
+    pub target: usize,
+    /// Sorted, deduplicated parent indices.
+    pub parents: Vec<usize>,
+}
+
+impl ScoreRequest {
+    /// Build a request with a canonicalized parent set.
+    pub fn new(target: usize, parents: &[usize]) -> ScoreRequest {
+        let mut p = parents.to_vec();
+        p.sort_unstable();
+        p.dedup();
+        ScoreRequest { target, parents: p }
+    }
+
+    /// The memo-cache key for this request.
+    pub fn key(&self) -> (usize, Vec<usize>) {
+        (self.target, self.parents.clone())
+    }
+}
+
+impl From<(usize, Vec<usize>)> for ScoreRequest {
+    fn from((target, parents): (usize, Vec<usize>)) -> ScoreRequest {
+        ScoreRequest::new(target, &parents)
+    }
+}
 
 /// A decomposable local score: higher is better.
 pub trait LocalScore: Send + Sync {
-    /// S(X_target | parents). `parents` must be sorted ascending (callers
-    /// go through [`CachedScore`] which normalizes).
+    /// S(X_target | parents). `parents` must be sorted ascending
+    /// (callers go through [`ScoreRequest`] / the coordinator's
+    /// `ScoreService`, both of which canonicalize).
     fn local_score(&self, target: usize, parents: &[usize]) -> f64;
 
     /// Number of variables.
     fn num_vars(&self) -> usize;
+}
+
+/// The batch-first scoring interface — the primary API of the crate.
+///
+/// `score_batch` evaluates every request and returns the scores in
+/// request order. Implementations are free to reorder, deduplicate or
+/// fan out the *work* internally, but the result vector must line up
+/// with `reqs` element-for-element and each score must be bit-identical
+/// to what a one-request batch would return (the batch/scalar
+/// equivalence invariant pinned by `tests/batch_equivalence.rs`).
+pub trait ScoreBackend: Send + Sync {
+    /// Evaluate a batch of local-score requests.
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64>;
+
+    /// Number of variables.
+    fn num_vars(&self) -> usize;
+
+    /// Convenience scalar entry point: a one-request batch.
+    fn score_one(&self, target: usize, parents: &[usize]) -> f64 {
+        self.score_batch(&[ScoreRequest::new(target, parents)])[0]
+    }
+}
+
+/// Adapter turning any scalar [`LocalScore`] into a (serial)
+/// [`ScoreBackend`]: the batch is evaluated one request at a time.
+///
+/// This is the compatibility bridge for score implementations with no
+/// cross-candidate structure to share (BIC, BDeu, SC, exact CV);
+/// batch-aware scores like [`cvlr::CvLrScore`] implement `ScoreBackend`
+/// themselves instead.
+pub struct ScalarBackend<S>(pub S);
+
+impl<S: LocalScore> ScoreBackend for ScalarBackend<S> {
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        reqs.iter().map(|r| self.0.local_score(r.target, &r.parents)).collect()
+    }
+
+    fn num_vars(&self) -> usize {
+        self.0.num_vars()
+    }
+}
+
+impl<S: LocalScore> LocalScore for ScalarBackend<S> {
+    fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
+        self.0.local_score(target, parents)
+    }
+
+    fn num_vars(&self) -> usize {
+        self.0.num_vars()
+    }
+}
+
+impl<S: LocalScore + ?Sized> LocalScore for &S {
+    fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
+        (**self).local_score(target, parents)
+    }
+
+    fn num_vars(&self) -> usize {
+        (**self).num_vars()
+    }
 }
 
 /// Total score of a DAG given as a parent list (paper Eq. 31).
@@ -45,54 +164,10 @@ pub fn graph_score<S: LocalScore + ?Sized>(score: &S, parents: &[Vec<usize>]) ->
         .sum()
 }
 
-/// Memoizing wrapper — the dedup cache used by GES, which re-evaluates
-/// the same (target, parent-set) local score many times across
-/// insert/delete candidates.
-pub struct CachedScore<S> {
-    pub inner: S,
-    cache: Mutex<HashMap<(usize, Vec<usize>), f64>>,
-    hits: Mutex<u64>,
-    misses: Mutex<u64>,
-}
-
-impl<S: LocalScore> CachedScore<S> {
-    pub fn new(inner: S) -> Self {
-        CachedScore {
-            inner,
-            cache: Mutex::new(HashMap::new()),
-            hits: Mutex::new(0),
-            misses: Mutex::new(0),
-        }
-    }
-
-    /// (hits, misses) counters — coordinator metrics.
-    pub fn stats(&self) -> (u64, u64) {
-        (*self.hits.lock().unwrap(), *self.misses.lock().unwrap())
-    }
-}
-
-impl<S: LocalScore> LocalScore for CachedScore<S> {
-    fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
-        let mut key: Vec<usize> = parents.to_vec();
-        key.sort_unstable();
-        if let Some(&v) = self.cache.lock().unwrap().get(&(target, key.clone())) {
-            *self.hits.lock().unwrap() += 1;
-            return v;
-        }
-        let v = self.inner.local_score(target, &key);
-        *self.misses.lock().unwrap() += 1;
-        self.cache.lock().unwrap().insert((target, key), v);
-        v
-    }
-
-    fn num_vars(&self) -> usize {
-        self.inner.num_vars()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     struct CountingScore {
         calls: Mutex<usize>,
@@ -109,14 +184,25 @@ mod tests {
     }
 
     #[test]
-    fn cache_deduplicates() {
-        let s = CachedScore::new(CountingScore { calls: Mutex::new(0) });
-        let a = s.local_score(1, &[0, 2]);
-        let b = s.local_score(1, &[2, 0]); // unsorted — same set
+    fn request_canonicalizes_parents() {
+        let a = ScoreRequest::new(1, &[2, 0, 2]);
+        let b = ScoreRequest::new(1, &[0, 2]);
         assert_eq!(a, b);
-        assert_eq!(*s.inner.calls.lock().unwrap(), 1);
-        let (h, m) = s.stats();
-        assert_eq!((h, m), (1, 1));
+        assert_eq!(a.key(), (1, vec![0, 2]));
+    }
+
+    #[test]
+    fn scalar_backend_preserves_order_and_values() {
+        let s = ScalarBackend(CountingScore { calls: Mutex::new(0) });
+        let reqs = vec![
+            ScoreRequest::new(2, &[0, 1]),
+            ScoreRequest::new(0, &[]),
+            ScoreRequest::new(1, &[2, 0]),
+        ];
+        let out = s.score_batch(&reqs);
+        assert_eq!(out, vec![-4.0, 0.0, -3.0]);
+        assert_eq!(s.score_one(2, &[1, 0]), -4.0);
+        assert_eq!(*s.0.calls.lock().unwrap(), 4);
     }
 
     #[test]

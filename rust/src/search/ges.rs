@@ -1,5 +1,6 @@
 //! Greedy equivalence search (GES, Chickering 2002) over CPDAGs with a
-//! decomposable local score — the search procedure of paper §6.
+//! decomposable local score — the search procedure of paper §6 — driven
+//! **batch-first** through [`ScoreBackend`].
 //!
 //! Forward phase: repeatedly apply the best valid `Insert(X, Y, T)`;
 //! backward phase: repeatedly apply the best valid `Delete(X, Y, H)`.
@@ -11,11 +12,20 @@
 //! * Delete valid ⟺ `NA_{Y,X} \ H` is a clique;
 //!   Δ = s(Y, (NA\H)∪Pa(Y)\{X}) − s(Y, (NA\H)∪Pa(Y)∪{X}).
 //!
+//! Each sweep is a **collect-then-submit** loop: operator validity is
+//! purely graphical, so all candidate (target, parent-set) pairs of a
+//! sweep are gathered first and submitted to the backend as one wide
+//! [`ScoreBackend::score_batch`] — hundreds of serial scalar calls per
+//! step become a handful of batches the backend can deduplicate, cache
+//! and fan out. Candidate order and the strictly-greater best-delta
+//! rule are identical to the historical serial sweep, so the learned
+//! CPDAG is unchanged (pinned by `tests/batch_equivalence.rs`).
+//!
 //! After each operator the PDAG is re-completed to a CPDAG via
 //! Dor–Tarsi consistent extension + Chickering edge labeling.
 
 use crate::graph::pdag::{dag_to_cpdag, Pdag};
-use crate::score::LocalScore;
+use crate::score::{ScoreBackend, ScoreRequest};
 
 /// GES configuration.
 #[derive(Clone, Copy, Debug)]
@@ -47,6 +57,8 @@ pub struct GesResult {
     pub backward_steps: usize,
     /// Total local-score evaluations requested (pre-cache).
     pub score_calls: usize,
+    /// Score batches submitted to the backend (one per sweep).
+    pub batches: usize,
 }
 
 fn union_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
@@ -69,30 +81,66 @@ fn subsets(candidates: &[usize], cap_vars: usize) -> Vec<Vec<usize>> {
         }
         out.push(s);
     }
-    // smaller subsets first — cheaper scores get cached early
+    // smaller subsets first — cheaper scores land earlier in the batch
     out.sort_by_key(|s| s.len());
     out
 }
 
-/// One candidate operator.
+/// One candidate operator: the graphical move plus the two parent sets
+/// whose score difference is its Δ.
 struct Candidate {
     x: usize,
     y: usize,
     set: Vec<usize>, // T for insert, H for delete
-    delta: f64,
+    /// Parent set *without* x.
+    base: Vec<usize>,
+    /// Parent set *with* x.
+    with_x: Vec<usize>,
 }
 
-/// Run GES from the empty graph.
-pub fn ges<S: LocalScore + ?Sized>(score: &S, cfg: &GesConfig) -> GesResult {
-    let d = score.num_vars();
+/// Score a sweep's candidates in one batch and pick the first best
+/// operator whose Δ clears `min_improvement` (strictly-greater best,
+/// matching the serial sweep's tie-breaking). `forward` flips the Δ
+/// orientation: Insert improves by s(with_x) − s(base), Delete by
+/// s(base) − s(with_x).
+fn best_candidate<B: ScoreBackend + ?Sized>(
+    backend: &B,
+    cands: &[Candidate],
+    forward: bool,
+    min_improvement: f64,
+) -> Option<usize> {
+    let mut reqs = Vec::with_capacity(2 * cands.len());
+    for c in cands {
+        reqs.push(ScoreRequest::new(c.y, &c.with_x));
+        reqs.push(ScoreRequest::new(c.y, &c.base));
+    }
+    let scores = backend.score_batch(&reqs);
+    let mut best: Option<(usize, f64)> = None;
+    for i in 0..cands.len() {
+        let (s_with, s_base) = (scores[2 * i], scores[2 * i + 1]);
+        let delta = if forward { s_with - s_base } else { s_base - s_with };
+        if delta > min_improvement && best.map(|(_, bd)| delta > bd).unwrap_or(true) {
+            best = Some((i, delta));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Run GES from the empty graph. The backend is typically the
+/// coordinator's `ScoreService` (memoized, worker-pooled); any
+/// [`ScoreBackend`] works, including `ScalarBackend`-wrapped scores.
+pub fn ges<B: ScoreBackend + ?Sized>(backend: &B, cfg: &GesConfig) -> GesResult {
+    let d = backend.num_vars();
     let mut state = Pdag::new(d);
     let mut score_calls = 0usize;
+    let mut batches = 0usize;
     let mut forward_steps = 0usize;
     let mut backward_steps = 0usize;
 
     // ---------------- forward phase ----------------
     loop {
-        let mut best: Option<Candidate> = None;
+        // collect every valid Insert(x, y, T) of this sweep
+        let mut cands: Vec<Candidate> = vec![];
         for y in 0..d {
             let pa_y = state.parents(y);
             if let Some(maxp) = cfg.max_parents {
@@ -125,19 +173,20 @@ pub fn ges<S: LocalScore + ?Sized>(score: &S, cfg: &GesConfig) -> GesResult {
                         }
                     }
                     let with_x = union_sorted(&base, &[x]);
-                    score_calls += 2;
-                    let delta = score.local_score(y, &with_x) - score.local_score(y, &base);
-                    if delta > cfg.min_improvement
-                        && best.as_ref().map(|b| delta > b.delta).unwrap_or(true)
-                    {
-                        best = Some(Candidate { x, y, set: t, delta });
-                    }
+                    cands.push(Candidate { x, y, set: t, base, with_x });
                 }
             }
         }
-        match best {
-            Some(c) => {
+        if cands.is_empty() {
+            break;
+        }
+        // one wide batch per sweep
+        score_calls += 2 * cands.len();
+        batches += 1;
+        match best_candidate(backend, &cands, true, cfg.min_improvement) {
+            Some(i) => {
                 // apply Insert(x, y, T)
+                let c = &cands[i];
                 state.add_directed(c.x, c.y);
                 for &t in &c.set {
                     state.orient(t, c.y);
@@ -151,7 +200,7 @@ pub fn ges<S: LocalScore + ?Sized>(score: &S, cfg: &GesConfig) -> GesResult {
 
     // ---------------- backward phase ----------------
     loop {
-        let mut best: Option<Candidate> = None;
+        let mut cands: Vec<Candidate> = vec![];
         for y in 0..d {
             let pa_y = state.parents(y);
             for x in 0..d {
@@ -169,19 +218,19 @@ pub fn ges<S: LocalScore + ?Sized>(score: &S, cfg: &GesConfig) -> GesResult {
                         pa_y.iter().cloned().filter(|&p| p != x).collect();
                     let base = union_sorted(&na_minus_h, &pa_wo_x);
                     let with_x = union_sorted(&base, &[x]);
-                    score_calls += 2;
-                    let delta = score.local_score(y, &base) - score.local_score(y, &with_x);
-                    if delta > cfg.min_improvement
-                        && best.as_ref().map(|b| delta > b.delta).unwrap_or(true)
-                    {
-                        best = Some(Candidate { x, y, set: h, delta });
-                    }
+                    cands.push(Candidate { x, y, set: h, base, with_x });
                 }
             }
         }
-        match best {
-            Some(c) => {
+        if cands.is_empty() {
+            break;
+        }
+        score_calls += 2 * cands.len();
+        batches += 1;
+        match best_candidate(backend, &cands, false, cfg.min_improvement) {
+            Some(i) => {
                 // apply Delete(x, y, H)
+                let c = &cands[i];
                 state.remove_edge(c.x, c.y);
                 for &h in &c.set {
                     if state.undirected(c.y, h) {
@@ -198,7 +247,7 @@ pub fn ges<S: LocalScore + ?Sized>(score: &S, cfg: &GesConfig) -> GesResult {
         }
     }
 
-    GesResult { cpdag: state, forward_steps, backward_steps, score_calls }
+    GesResult { cpdag: state, forward_steps, backward_steps, score_calls, batches }
 }
 
 /// Re-complete a PDAG to the CPDAG of its equivalence class
@@ -225,7 +274,7 @@ mod tests {
     use crate::linalg::Mat;
     use crate::score::bdeu::BdeuScore;
     use crate::score::bic::BicScore;
-    use crate::score::CachedScore;
+    use crate::score::ScalarBackend;
     use crate::util::Pcg64;
     use std::sync::Arc;
 
@@ -249,12 +298,13 @@ mod tests {
     #[test]
     fn recovers_linear_chain_with_bic() {
         let ds = linear_chain_ds(800, 1);
-        let score = CachedScore::new(BicScore::new(ds));
+        let score = ScalarBackend(BicScore::new(ds));
         let res = ges(&score, &GesConfig::default());
         let truth = Dag::from_edges(4, &[(0, 1), (1, 2)]);
         assert_eq!(skeleton_f1(&res.cpdag, &truth), 1.0, "skeleton must be exact");
         assert_eq!(normalized_shd(&res.cpdag, &truth), 0.0, "equivalence class must match");
         assert!(res.forward_steps >= 2);
+        assert!(res.batches >= res.forward_steps, "one batch per sweep");
     }
 
     #[test]
@@ -272,7 +322,7 @@ mod tests {
             data[(r, 2)] = x3;
         }
         let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
-        let score = CachedScore::new(BicScore::new(ds));
+        let score = ScalarBackend(BicScore::new(ds));
         let res = ges(&score, &GesConfig::default());
         assert!(res.cpdag.directed(0, 2), "v-structure arm 0→2");
         assert!(res.cpdag.directed(1, 2), "v-structure arm 1→2");
@@ -293,7 +343,7 @@ mod tests {
             data[(r, 2)] = c as f64;
         }
         let ds = Arc::new(Dataset::from_columns(data, &[true; 3]));
-        let score = CachedScore::new(BdeuScore::new(ds));
+        let score = ScalarBackend(BdeuScore::new(ds));
         let res = ges(&score, &GesConfig::default());
         let truth = Dag::from_edges(3, &[(0, 1), (1, 2)]);
         assert_eq!(skeleton_f1(&res.cpdag, &truth), 1.0);
@@ -309,7 +359,7 @@ mod tests {
             *v = rng.normal();
         }
         let ds = Arc::new(Dataset::from_columns(data, &[false; 3]));
-        let score = CachedScore::new(BicScore::new(ds));
+        let score = ScalarBackend(BicScore::new(ds));
         let res = ges(&score, &GesConfig::default());
         assert_eq!(res.cpdag.num_edges(), 0);
     }
@@ -317,7 +367,7 @@ mod tests {
     #[test]
     fn output_is_valid_cpdag() {
         let ds = linear_chain_ds(400, 5);
-        let score = CachedScore::new(BicScore::new(ds));
+        let score = ScalarBackend(BicScore::new(ds));
         let res = ges(&score, &GesConfig::default());
         // a valid CPDAG has a consistent extension whose CPDAG is itself
         let dag = res.cpdag.to_dag().expect("CPDAG must extend to a DAG");

@@ -1,7 +1,9 @@
 //! Causal structure search algorithms.
 //!
 //! * [`ges`] — greedy equivalence search (Chickering 2002), the search
-//!   procedure the paper pairs with the CV-LR score (§6);
+//!   procedure the paper pairs with the CV-LR score (§6). Batch-first:
+//!   each sweep's candidates are scored through one
+//!   `ScoreBackend::score_batch` submission;
 //! * [`pc`] — the PC algorithm (constraint-based baseline, §7.1);
 //! * [`mmmb`] — max-min Markov-blanket search with symmetry correction
 //!   (constraint-based baseline, §7.1).

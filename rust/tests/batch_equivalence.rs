@@ -1,0 +1,229 @@
+//! Batch/scalar equivalence invariants (mini-prop harness, see
+//! `cvlr::util::prop`):
+//!
+//! * `score_batch(reqs)[i]` is **bit-for-bit** equal to
+//!   `local_score(reqs[i])` across every backend — CV-LR native, exact
+//!   CV, BIC, BDeu, SC — on permuted/duplicated parent-set inputs,
+//!   with and without the service's cache/worker layers on top;
+//! * batched GES (service-routed, collect-then-submit) returns the
+//!   same CPDAG as the serial scalar-scored search on fixed synthetic
+//!   seeds — the regression pin for the batch-first search rework;
+//! * the `ServiceStats` accounting identity holds end to end and GES
+//!   actually drives wide batches (`batches > 0`, `max_batch > 1`).
+
+use std::sync::Arc;
+
+use cvlr::coordinator::ScoreService;
+use cvlr::data::synth::{generate, DataKind, SynthConfig};
+use cvlr::prop_assert;
+use cvlr::score::bdeu::BdeuScore;
+use cvlr::score::bic::BicScore;
+use cvlr::score::cv_exact::CvExactScore;
+use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::folds::CvParams;
+use cvlr::score::sc::ScScore;
+use cvlr::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
+use cvlr::search::ges::{ges, GesConfig};
+use cvlr::util::prop::check;
+use cvlr::util::Pcg64;
+
+/// A random GES-like batch: small parent sets in random order, with
+/// duplicated entries and duplicated whole requests.
+fn random_batch(rng: &mut Pcg64, d: usize, len: usize) -> Vec<ScoreRequest> {
+    let mut reqs = Vec::with_capacity(len);
+    for _ in 0..len {
+        if !reqs.is_empty() && rng.bernoulli(0.2) {
+            // duplicate an earlier request verbatim
+            let i = rng.below(reqs.len());
+            let dup = reqs[i].clone();
+            reqs.push(dup);
+            continue;
+        }
+        let t = rng.below(d);
+        let k = rng.below(3);
+        // sampled with replacement: duplicates and arbitrary order
+        let pa: Vec<usize> = (0..k)
+            .map(|_| {
+                let mut v = rng.below(d);
+                while v == t {
+                    v = rng.below(d);
+                }
+                v
+            })
+            .collect();
+        reqs.push(ScoreRequest::new(t, &pa));
+    }
+    reqs
+}
+
+/// Assert `backend.score_batch == scalar local_score`, bit for bit, for
+/// the raw backend and for the service-wrapped backend at 1 and 3
+/// workers.
+fn assert_batch_scalar_equal<B, S>(
+    backend: &B,
+    scalar: &S,
+    reqs: &[ScoreRequest],
+    label: &str,
+) -> Result<(), String>
+where
+    B: ScoreBackend,
+    S: LocalScore,
+{
+    let batch = backend.score_batch(reqs);
+    for (i, r) in reqs.iter().enumerate() {
+        let want = scalar.local_score(r.target, &r.parents);
+        prop_assert!(
+            batch[i] == want,
+            "{label}: batch[{i}] = {} != scalar {} for ({}, {:?})",
+            batch[i],
+            want,
+            r.target,
+            r.parents
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_batch_matches_scalar_continuous_backends() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 60,
+        num_vars: 5,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 77,
+    });
+    let ds = Arc::new(ds);
+    let cvlr = CvLrScore::native(ds.clone());
+    let exact = CvExactScore::new(ds.clone(), CvParams::default());
+    let bic = BicScore::new(ds.clone());
+    let sc = ScScore::new(ds.clone());
+    check("batch_scalar_continuous", 8, |rng| {
+        let reqs = random_batch(rng, 5, 12);
+        // CV-LR implements ScoreBackend natively (shared fold splits)
+        assert_batch_scalar_equal(&cvlr, &cvlr, &reqs, "cv-lr native")?;
+        assert_batch_scalar_equal(&ScalarBackend(&exact), &exact, &reqs, "cv exact")?;
+        assert_batch_scalar_equal(&ScalarBackend(&bic), &bic, &reqs, "bic")?;
+        assert_batch_scalar_equal(&ScalarBackend(&sc), &sc, &reqs, "sc")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_matches_scalar_discrete_backends() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 80,
+        num_vars: 4,
+        density: 0.4,
+        kind: DataKind::Mixed,
+        seed: 78,
+    });
+    let ds = Arc::new(ds);
+    let cvlr = CvLrScore::native(ds.clone());
+    check("batch_scalar_mixed_cvlr", 6, |rng| {
+        let reqs = random_batch(rng, 4, 10);
+        assert_batch_scalar_equal(&cvlr, &cvlr, &reqs, "cv-lr mixed")?;
+        Ok(())
+    });
+
+    // fully-discrete data for BDeu
+    let mut rng = Pcg64::new(5);
+    let n = 200;
+    let mut data = cvlr::linalg::Mat::zeros(n, 4);
+    for r in 0..n {
+        for c in 0..4 {
+            data[(r, c)] = rng.below(3) as f64;
+        }
+    }
+    let dds = Arc::new(cvlr::data::Dataset::from_columns(data, &[true; 4]));
+    let bdeu = BdeuScore::new(dds);
+    check("batch_scalar_bdeu", 8, |rng| {
+        let reqs = random_batch(rng, 4, 10);
+        assert_batch_scalar_equal(&ScalarBackend(&bdeu), &bdeu, &reqs, "bdeu")?;
+        Ok(())
+    });
+}
+
+/// The service layers (cache, intra-batch dedup, worker pool) must not
+/// change a single bit of any score.
+#[test]
+fn prop_service_layers_preserve_values() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 80,
+        num_vars: 5,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 79,
+    });
+    let ds = Arc::new(ds);
+    let raw = CvLrScore::native(ds.clone());
+    check("service_preserves_values", 5, |rng| {
+        let reqs = random_batch(rng, 5, 16);
+        let want = raw.score_batch(&reqs);
+        for workers in [1usize, 3] {
+            let svc = ScoreService::new(Arc::new(CvLrScore::native(ds.clone())), workers);
+            let got = svc.score_batch(&reqs);
+            prop_assert!(got == want, "service(workers={workers}) diverged from raw backend");
+            // and again: the fully-cached pass must be identical too
+            let again = svc.score_batch(&reqs);
+            prop_assert!(again == want, "cached re-batch diverged (workers={workers})");
+            let st = svc.stats();
+            prop_assert!(st.consistent(), "stats identity violated: {st:?}");
+        }
+        Ok(())
+    });
+}
+
+/// Regression pin for the batch-first GES rework: the batched,
+/// service-routed search learns exactly the same CPDAG as the serial
+/// scalar-scored search on fixed seeds, while actually driving wide
+/// batches through the service.
+#[test]
+fn ges_batched_matches_serial_cpdag() {
+    for seed in [1u64, 7, 23] {
+        let (ds, _) = generate(&SynthConfig {
+            n: 300,
+            num_vars: 6,
+            density: 0.4,
+            kind: DataKind::Continuous,
+            seed,
+        });
+        let ds = Arc::new(ds);
+        // serial reference: scalar adapter, no cache, no batching wins
+        let serial = ges(&ScalarBackend(BicScore::new(ds.clone())), &GesConfig::default());
+        // batched: the production path (service + worker pool)
+        let svc = ScoreService::scalar(BicScore::new(ds.clone()), 4);
+        let batched = ges(&svc, &GesConfig::default());
+        assert_eq!(
+            serial.cpdag, batched.cpdag,
+            "batched GES must learn the serial CPDAG (seed {seed})"
+        );
+        assert_eq!(serial.forward_steps, batched.forward_steps);
+        assert_eq!(serial.backward_steps, batched.backward_steps);
+        let st = svc.stats();
+        assert!(st.batches > 0, "GES must submit batches (seed {seed})");
+        assert!(st.max_batch > 1, "sweep batches must be wide (seed {seed})");
+        assert!(st.consistent(), "stats identity violated: {st:?}");
+    }
+}
+
+/// Same pin for the paper's score: CV-LR through the batched service
+/// equals CV-LR scored serially, on a small fixed instance.
+#[test]
+fn ges_batched_matches_serial_cpdag_cvlr() {
+    let (ds, _) = generate(&SynthConfig {
+        n: 120,
+        num_vars: 4,
+        density: 0.4,
+        kind: DataKind::Continuous,
+        seed: 11,
+    });
+    let ds = Arc::new(ds);
+    let serial = ges(&CvLrScore::native(ds.clone()), &GesConfig::default());
+    let svc = ScoreService::new(Arc::new(CvLrScore::native(ds)), 2);
+    let batched = ges(&svc, &GesConfig::default());
+    assert_eq!(serial.cpdag, batched.cpdag, "CV-LR batched GES must match serial");
+    let st = svc.stats();
+    assert!(st.batches > 0 && st.max_batch > 1);
+    assert!(st.consistent(), "{st:?}");
+}

@@ -15,7 +15,7 @@ use cvlr::runtime::pjrt_kernel::PjrtCvLrKernel;
 use cvlr::runtime::Runtime;
 use cvlr::score::cvlr::CvLrScore;
 use cvlr::score::folds::CvParams;
-use cvlr::score::LocalScore;
+use cvlr::score::{ScoreBackend, ScoreRequest};
 
 fn artifacts_dir() -> String {
     std::env::var("CVLR_ARTIFACTS")
@@ -81,7 +81,7 @@ fn score_service_parallel_matches_sequential() {
     });
     let ds = Arc::new(ds);
     let rt = Arc::new(Runtime::load(artifacts_dir()).expect("run `make artifacts`"));
-    let mk = || -> Arc<dyn LocalScore> {
+    let mk = || -> Arc<dyn ScoreBackend> {
         Arc::new(CvLrScore::with_backend(
             ds.clone(),
             CvParams::default(),
@@ -89,13 +89,13 @@ fn score_service_parallel_matches_sequential() {
             PjrtCvLrKernel::new(rt.clone()),
         ))
     };
-    let reqs: Vec<(usize, Vec<usize>)> = vec![
-        (0, vec![]),
-        (1, vec![0]),
-        (2, vec![0, 1]),
-        (3, vec![]),
-        (4, vec![3]),
-        (5, vec![0, 4]),
+    let reqs: Vec<ScoreRequest> = vec![
+        ScoreRequest::new(0, &[]),
+        ScoreRequest::new(1, &[0]),
+        ScoreRequest::new(2, &[0, 1]),
+        ScoreRequest::new(3, &[]),
+        ScoreRequest::new(4, &[3]),
+        ScoreRequest::new(5, &[0, 4]),
     ];
     let seq = ScoreService::new(mk(), 1).score_batch(&reqs);
     let par = ScoreService::new(mk(), 4).score_batch(&reqs);
@@ -166,6 +166,11 @@ fn cache_hit_rate_on_e2e_run() {
         st.cache_hits,
         st.requests
     );
+    // the hot path is batch-first: GES submits wide sweeps, never
+    // per-candidate scalar calls
+    assert!(st.batches > 0, "GES must route through score_batch");
+    assert!(st.max_batch > 1, "sweep batches must contain many candidates");
+    assert!(st.consistent(), "stats identity must hold: {st:?}");
 }
 
 /// Mixed data end-to-end through PJRT (exercises Algorithm 1 and

@@ -14,7 +14,8 @@ use cvlr::score::cv_exact::CvExactScore;
 use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
 use cvlr::score::folds::CvParams;
 use cvlr::score::sc::ScScore;
-use cvlr::score::{graph_score, CachedScore, LocalScore};
+use cvlr::coordinator::ScoreService;
+use cvlr::score::{graph_score, LocalScore};
 use cvlr::util::Pcg64;
 
 fn rel_err(a: f64, b: f64) -> f64 {
@@ -236,8 +237,8 @@ fn bdeu_prefers_true_parents() {
     );
 }
 
-/// The cached wrapper returns bit-identical values and actually avoids
-/// re-evaluation of the expensive CV-LR score.
+/// The service's memo cache returns bit-identical values and actually
+/// avoids re-evaluation of the expensive CV-LR score.
 #[test]
 fn cached_cvlr_identical_and_hits() {
     let (ds, _) = generate(&SynthConfig {
@@ -247,12 +248,13 @@ fn cached_cvlr_identical_and_hits() {
         kind: DataKind::Continuous,
         seed: 8,
     });
-    let cached = CachedScore::new(CvLrScore::native(Arc::new(ds)));
+    let cached = ScoreService::new(Arc::new(CvLrScore::native(Arc::new(ds))), 1);
     let a = cached.local_score(2, &[0, 1]);
     let b = cached.local_score(2, &[1, 0]);
     assert_eq!(a, b, "cache must canonicalize the parent order");
-    let (hits, misses) = cached.stats();
-    assert_eq!((hits, misses), (1, 1));
+    let st = cached.stats();
+    assert_eq!((st.cache_hits, st.evaluations), (1, 1));
+    assert!(st.consistent(), "{st:?}");
 }
 
 /// Score is invariant to permuting the samples (both CV folds use

@@ -6,13 +6,13 @@ use std::sync::Arc;
 
 use cvlr::ci::Kci;
 use cvlr::coordinator::engine::{discover, DiscoveryConfig, Method};
+use cvlr::coordinator::ScoreService;
 use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::networks;
 use cvlr::graph::pdag::dag_to_cpdag;
 use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
 use cvlr::score::bic::BicScore;
 use cvlr::score::cvlr::CvLrScore;
-use cvlr::score::CachedScore;
 use cvlr::search::ges::{ges, GesConfig};
 use cvlr::search::mmmb::{mmmb, MmConfig};
 use cvlr::search::pc::{pc, PcConfig};
@@ -28,8 +28,9 @@ fn ges_cvlr_recovers_synthetic_graph() {
         kind: DataKind::Continuous,
         seed: 21,
     });
-    let score = CachedScore::new(CvLrScore::native(Arc::new(ds)));
+    let score = ScoreService::new(Arc::new(CvLrScore::native(Arc::new(ds))), 1);
     let res = ges(&score, &GesConfig::default());
+    assert!(res.batches > 0, "GES must submit batches");
     let f1 = skeleton_f1(&res.cpdag, &dag);
     assert!(f1 >= 0.6, "CV-LR skeleton F1 too low: {f1}");
     let shd = normalized_shd(&res.cpdag, &dag);
@@ -49,8 +50,8 @@ fn ges_output_is_cpdag_across_scores() {
     });
     let ds = Arc::new(ds);
     for res in [
-        ges(&CachedScore::new(BicScore::new(ds.clone())), &GesConfig::default()),
-        ges(&CachedScore::new(CvLrScore::native(ds.clone())), &GesConfig::default()),
+        ges(&ScoreService::scalar(BicScore::new(ds.clone()), 1), &GesConfig::default()),
+        ges(&ScoreService::new(Arc::new(CvLrScore::native(ds.clone())), 1), &GesConfig::default()),
     ] {
         let dag = res.cpdag.to_dag().expect("GES output must extend to a DAG");
         assert_eq!(
@@ -225,7 +226,7 @@ fn ges_respects_parent_cap() {
         kind: DataKind::Continuous,
         seed: 27,
     });
-    let score = CachedScore::new(BicScore::new(Arc::new(ds)));
+    let score = ScoreService::scalar(BicScore::new(Arc::new(ds)), 1);
     let cfg = GesConfig { max_parents: Some(2), ..Default::default() };
     let res = ges(&score, &cfg);
     let dag = res.cpdag.to_dag().expect("valid CPDAG");
