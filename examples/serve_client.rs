@@ -1,0 +1,101 @@
+//! End-to-end client of the discovery server: starts a server on an
+//! ephemeral port in-process, registers a dataset, submits a job, polls
+//! it to completion, prints the learned edges, and shuts the server
+//! down gracefully — the same HTTP/JSON protocol curl speaks from the
+//! shell (see the `server` module docs for the endpoint table).
+//!
+//! ```text
+//! cargo run --release --example serve_client
+//! ```
+
+use std::time::{Duration, Instant};
+
+use cvlr::server::http::request;
+use cvlr::server::json::Json;
+use cvlr::server::{Server, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let server = Server::start(ServerConfig { port: 0, builtin_n: 200, ..Default::default() })?;
+    let addr = server.addr();
+    println!("server on http://{addr}");
+
+    // 1. register a parameterized built-in dataset
+    //    (uploads work the same way with {"name", "csv"} instead)
+    let (st, resp) = request(
+        addr,
+        "POST",
+        "/v1/datasets",
+        Some(&Json::obj(vec![
+            ("name", Json::str("demo")),
+            ("builtin", Json::str("synth")),
+            ("n", Json::Num(300.0)),
+            ("seed", Json::Num(1.0)),
+        ])),
+    )?;
+    anyhow::ensure!(st == 201, "dataset registration failed: {resp:?}");
+    println!(
+        "registered `demo`: n={} d={}",
+        resp.get("n").and_then(Json::as_u64).unwrap_or(0),
+        resp.get("d").and_then(Json::as_u64).unwrap_or(0),
+    );
+
+    // 2. submit a discovery job
+    let (st, resp) = request(
+        addr,
+        "POST",
+        "/v1/jobs",
+        Some(&Json::obj(vec![("dataset", Json::str("demo")), ("method", Json::str("cv-lr"))])),
+    )?;
+    anyhow::ensure!(st == 202, "submit failed: {resp:?}");
+    let id = resp.get("id").and_then(Json::as_u64).expect("job id");
+    println!("submitted job {id}");
+
+    // 3. poll state + progress until terminal
+    let t0 = Instant::now();
+    let job = loop {
+        let (_, job) = request(addr, "GET", &format!("/v1/jobs/{id}"), None)?;
+        let state = job.get("state").and_then(Json::as_str).unwrap_or("?").to_string();
+        let p = job.get("progress");
+        println!(
+            "  {state}: {} sweeps, {} candidates, hit rate {:.0}%",
+            p.and_then(|p| p.get("sweeps")).and_then(Json::as_u64).unwrap_or(0),
+            p.and_then(|p| p.get("candidates")).and_then(Json::as_u64).unwrap_or(0),
+            p.and_then(|p| p.get("cache_hit_rate")).and_then(Json::as_f64).unwrap_or(0.0) * 100.0,
+        );
+        if state == "done" || state == "failed" || state == "cancelled" {
+            break job;
+        }
+        anyhow::ensure!(t0.elapsed() < Duration::from_secs(600), "job timed out");
+        std::thread::sleep(Duration::from_millis(200));
+    };
+
+    // 4. read the result: edge list, SHD-ready adjacency, cache stats
+    if let Some(result) = job.get("result") {
+        println!(
+            "learned CPDAG in {:.2}s ({} edges):",
+            result.get("seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            result.get("num_edges").and_then(Json::as_u64).unwrap_or(0),
+        );
+        for e in result.get("edges").and_then(Json::as_arr).unwrap_or(&[]) {
+            let from = e.get("from").and_then(Json::as_u64).unwrap_or(0);
+            let to = e.get("to").and_then(Json::as_u64).unwrap_or(0);
+            let arrow =
+                if e.get("directed").and_then(Json::as_bool) == Some(true) { "→" } else { "—" };
+            println!("  X{from} {arrow} X{to}");
+        }
+        if let Some(stats) = result.get("stats") {
+            println!("service stats: {}", stats.encode());
+        }
+    } else if let Some(err) = job.get("error") {
+        println!("job failed: {err:?}");
+    }
+
+    // 5. server-wide stats, then graceful shutdown over the wire
+    let (_, stats) = request(addr, "GET", "/v1/stats", None)?;
+    println!("server stats: {}", stats.encode());
+    let (st, _) = request(addr, "POST", "/v1/shutdown", Some(&Json::obj(vec![])))?;
+    anyhow::ensure!(st == 200, "shutdown failed");
+    server.wait();
+    println!("server drained and stopped");
+    Ok(())
+}

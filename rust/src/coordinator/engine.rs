@@ -142,6 +142,10 @@ pub struct DiscoveryConfig {
     pub alpha: f64,
     /// Worker threads for the score service.
     pub workers: usize,
+    /// Score-cache capacity (None = unbounded, the one-shot CLI
+    /// default). Long-lived processes (the discovery server) must set a
+    /// bound; see [`ScoreService::with_cache_capacity`].
+    pub cache_capacity: Option<usize>,
     /// Artifacts directory for the PJRT engine.
     pub artifacts_dir: String,
 }
@@ -156,6 +160,7 @@ impl Default for DiscoveryConfig {
             ges: GesConfig::default(),
             alpha: 0.05,
             workers: 1,
+            cache_capacity: None,
             artifacts_dir: "artifacts".to_string(),
         }
     }
@@ -338,6 +343,58 @@ pub fn registered_methods() -> Vec<String> {
     names
 }
 
+/// Kind of a registered discovery method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    /// A [`BackendFactory`]: wrapped in a `ScoreService`, driven by GES.
+    Score,
+    /// A [`SearchRunner`]: runs its own algorithm end to end.
+    Search,
+}
+
+/// Resolve a method name (or alias) to its canonical registry key and
+/// kind, without building anything. Used by callers that manage their
+/// own `ScoreService` lifetimes (the discovery server's job manager).
+pub fn resolve_method(name: &str) -> Option<(String, MethodKind)> {
+    let resolved = registry().lock().unwrap().resolve(name);
+    resolved.map(|(canon, entry)| {
+        let kind = match entry {
+            MethodEntry::Score(_) => MethodKind::Score,
+            MethodEntry::Search(_) => MethodKind::Search,
+        };
+        (canon, kind)
+    })
+}
+
+/// Build the raw score backend of a score-based method (`Ok(None)` for
+/// search-based methods). The caller owns wrapping it in a
+/// [`ScoreService`] — this is how the server shares one memoized
+/// service across jobs on the same (dataset, method).
+pub fn score_backend_for(
+    name: &str,
+    ds: Arc<Dataset>,
+    cfg: &DiscoveryConfig,
+) -> Result<(String, Option<Arc<dyn ScoreBackend>>)> {
+    let resolved = registry().lock().unwrap().resolve(name);
+    match resolved {
+        Some((canon, MethodEntry::Score(factory))) => {
+            let backend = factory(ds, cfg)?;
+            Ok((canon, Some(backend)))
+        }
+        Some((canon, MethodEntry::Search(_))) => Ok((canon, None)),
+        None => bail!(
+            "unknown method `{name}` (registered: {})",
+            registered_methods().join(", ")
+        ),
+    }
+}
+
+/// Run the method registered under `name` (public twin of the builder's
+/// `run()` for callers that already hold a config).
+pub fn run_named(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<DiscoveryOutcome> {
+    run_method(name, ds, cfg)
+}
+
 /// Run the named method: build the backend, wrap it in the batching
 /// score service, drive batched GES (score methods) or delegate to the
 /// search runner.
@@ -356,7 +413,8 @@ fn run_method(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<Dis
         MethodEntry::Score(factory) => {
             let sw = Stopwatch::start();
             let backend = factory(ds, cfg)?;
-            let service = ScoreService::new(backend, cfg.workers);
+            let service =
+                ScoreService::with_cache_capacity(backend, cfg.workers, cfg.cache_capacity);
             let res = ges(&service, &cfg.ges);
             Ok(DiscoveryOutcome {
                 cpdag: res.cpdag,
@@ -420,6 +478,13 @@ impl DiscoveryBuilder {
     /// Worker threads for the score service.
     pub fn workers(mut self, workers: usize) -> Self {
         self.cfg.workers = workers;
+        self
+    }
+
+    /// Bound the score cache to at most `capacity` entries (second-chance
+    /// eviction; see [`ServiceStats::evictions`]). Unbounded by default.
+    pub fn cache_capacity(mut self, capacity: usize) -> Self {
+        self.cfg.cache_capacity = Some(capacity);
         self
     }
 
@@ -514,6 +579,23 @@ mod tests {
         let (ds, _) = generate(&SynthConfig { n: 100, density: 0.3, seed: 4, ..Default::default() });
         let err = Discovery::builder(Arc::new(ds)).method("definitely-not-a-method").run();
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn builder_cache_capacity_bounds_the_service() {
+        let (ds, _) = generate(&SynthConfig { n: 200, density: 0.3, seed: 6, ..Default::default() });
+        let out = Discovery::builder(Arc::new(ds)).method("bic").cache_capacity(8).run().unwrap();
+        let st = out.score_stats.unwrap();
+        assert!(st.cache_entries <= 8, "{st:?}");
+        assert!(st.evictions > 0, "a tiny cap must evict during GES: {st:?}");
+        assert!(st.consistent(), "identity must survive evictions: {st:?}");
+    }
+
+    #[test]
+    fn resolve_method_reports_kind() {
+        assert_eq!(resolve_method("cvlr"), Some(("cv-lr".to_string(), MethodKind::Score)));
+        assert_eq!(resolve_method("pc"), Some(("pc".to_string(), MethodKind::Search)));
+        assert_eq!(resolve_method("definitely-not-a-method"), None);
     }
 
     #[test]

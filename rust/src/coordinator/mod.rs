@@ -8,7 +8,8 @@ pub mod service;
 pub mod engine;
 
 pub use engine::{
-    discover, register_score_method, register_search_method, registered_methods, Discovery,
-    DiscoveryBuilder, DiscoveryConfig, DiscoveryOutcome, EngineKind, Method,
+    discover, register_score_method, register_search_method, registered_methods, resolve_method,
+    run_named, score_backend_for, Discovery, DiscoveryBuilder, DiscoveryConfig, DiscoveryOutcome,
+    EngineKind, Method, MethodKind,
 };
 pub use service::{ScoreCache, ScoreService, ServiceStats};

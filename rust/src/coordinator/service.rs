@@ -15,8 +15,17 @@
 //! loser blocks on the winner's result instead. The accounting identity
 //! `requests == cache_hits + evaluations + dedup_skips` holds exactly
 //! (see [`ServiceStats::consistent`]).
+//!
+//! Long-run hygiene: the cache can be bounded
+//! ([`ScoreCache::with_capacity`]); a full cache evicts with a
+//! second-chance (clock) sweep — each resident entry carries a
+//! referenced bit set on every hit, and the sweep skips referenced
+//! entries once before reclaiming them. Evictions are counted in
+//! [`ServiceStats::evictions`], *outside* the request identity: an
+//! eviction turns a future request into a re-evaluation but is never
+//! itself a request.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -25,9 +34,13 @@ use crate::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
 type Key = (usize, Vec<usize>);
 
 enum Slot {
-    /// Claimed by some batch; the value is being computed.
-    Pending,
-    Ready(f64),
+    /// Claimed by some batch; the value is being computed. `waiters`
+    /// counts threads blocked in [`ScoreCache::wait`] on this key.
+    Pending { waiters: usize },
+    /// Computed value. `referenced` is the second-chance (clock) bit,
+    /// set on every hit; entries with waiters still draining are
+    /// pinned and never evicted.
+    Ready { val: f64, referenced: bool, waiters: usize },
 }
 
 /// Outcome of classifying one unique key under the cache lock.
@@ -40,6 +53,17 @@ enum Claim {
     Owned,
 }
 
+/// Mutable cache state, guarded by one mutex.
+struct CacheInner {
+    map: HashMap<Key, Slot>,
+    /// Second-chance (clock) queue over resident `Ready` keys, oldest
+    /// first. Pending claims are never enqueued; fills enqueue exactly
+    /// one slot per key and evictions pop it, so the queue holds each
+    /// resident key at most once.
+    ring: VecDeque<Key>,
+    evictions: u64,
+}
+
 /// The single score memo layer, owned by [`ScoreService`].
 ///
 /// Keys are canonical (target, sorted parent-set) pairs. Entries go
@@ -47,35 +71,75 @@ enum Claim {
 /// in-flight work instead of racing: `claim` marks unseen keys Pending
 /// under the same lock span that reports hits, and `fill` publishes
 /// results and wakes waiters.
+///
+/// With a capacity set, `fill` runs a second-chance eviction sweep, so
+/// a long-lived process (the discovery server) holds at most `capacity`
+/// memoized scores per service instead of growing without bound.
 pub struct ScoreCache {
-    map: Mutex<HashMap<Key, Slot>>,
+    inner: Mutex<CacheInner>,
+    /// Maximum resident entries (None = unbounded).
+    capacity: Option<usize>,
     ready: Condvar,
 }
 
 impl ScoreCache {
+    /// Unbounded cache (the one-shot CLI default).
     pub fn new() -> ScoreCache {
-        ScoreCache { map: Mutex::new(HashMap::new()), ready: Condvar::new() }
+        ScoreCache::with_capacity(None)
+    }
+
+    /// Cache holding at most `capacity` entries (None = unbounded).
+    pub fn with_capacity(capacity: Option<usize>) -> ScoreCache {
+        ScoreCache {
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                ring: VecDeque::new(),
+                evictions: 0,
+            }),
+            capacity,
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
     }
 
     /// Number of entries (including in-flight claims).
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Entries reclaimed by the second-chance sweep so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
     /// Classify every key in ONE lock span, claiming unseen keys for
     /// the caller. `keys` must be unique within the call.
+    ///
+    /// An `InFlight` result registers the caller as a waiter under the
+    /// same lock, which pins the entry against eviction until the
+    /// matching [`ScoreCache::wait`] drains it — so every `InFlight`
+    /// claim MUST be followed by exactly one `wait` on that key.
     fn claim(&self, keys: &[Key]) -> Vec<Claim> {
-        let mut map = self.map.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         keys.iter()
-            .map(|k| match map.get(k) {
-                Some(Slot::Ready(v)) => Claim::Hit(*v),
-                Some(Slot::Pending) => Claim::InFlight,
+            .map(|k| match inner.map.get_mut(k) {
+                Some(Slot::Ready { val, referenced, .. }) => {
+                    *referenced = true;
+                    Claim::Hit(*val)
+                }
+                Some(Slot::Pending { waiters }) => {
+                    *waiters += 1;
+                    Claim::InFlight
+                }
                 None => {
-                    map.insert(k.clone(), Slot::Pending);
+                    inner.map.insert(k.clone(), Slot::Pending { waiters: 0 });
                     Claim::Owned
                 }
             })
@@ -83,36 +147,82 @@ impl ScoreCache {
     }
 
     /// Publish results for keys claimed by this caller and wake waiters.
+    /// Enforces the capacity bound afterwards.
     fn fill(&self, entries: impl IntoIterator<Item = (Key, f64)>) {
-        let mut map = self.map.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         for (k, v) in entries {
-            map.insert(k, Slot::Ready(v));
+            // carry the waiter count from the Pending slot so the sweep
+            // cannot evict a value between fill and the waiters' wakeup
+            let waiters = match inner.map.get(&k) {
+                Some(Slot::Pending { waiters }) => *waiters,
+                _ => 0,
+            };
+            inner.map.insert(k.clone(), Slot::Ready { val: v, referenced: false, waiters });
+            inner.ring.push_back(k);
+        }
+        if let Some(cap) = self.capacity {
+            Self::enforce_capacity(&mut inner, cap);
         }
         self.ready.notify_all();
+    }
+
+    /// Second-chance sweep: pop the oldest resident entry; referenced
+    /// entries spend their bit and requeue, unreferenced unpinned ones
+    /// are reclaimed. The sweep is budgeted so it terminates (allowing
+    /// temporary over-capacity) when everything is pinned by waiters.
+    fn enforce_capacity(inner: &mut CacheInner, cap: usize) {
+        let mut budget = 2 * inner.ring.len();
+        while inner.map.len() > cap && budget > 0 {
+            budget -= 1;
+            let k = match inner.ring.pop_front() {
+                Some(k) => k,
+                None => break,
+            };
+            // non-Ready slots under a ring key are stale (defensive):
+            // dropping the ring slot is the right cleanup
+            if let Some(Slot::Ready { referenced, waiters, .. }) = inner.map.get_mut(&k) {
+                if *waiters > 0 {
+                    // pinned: a waiter has not drained the value yet
+                    inner.ring.push_back(k);
+                } else if *referenced {
+                    *referenced = false;
+                    inner.ring.push_back(k);
+                } else {
+                    inner.map.remove(&k);
+                    inner.evictions += 1;
+                }
+            }
+        }
     }
 
     /// Abandon claims that were never filled (the evaluator panicked):
     /// remove the Pending slots and wake waiters so they fail loudly
     /// instead of blocking forever.
     fn abandon(&self, keys: &[Key]) {
-        let mut map = self.map.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         for k in keys {
-            if let Some(Slot::Pending) = map.get(k) {
-                map.remove(k);
+            if let Some(Slot::Pending { .. }) = inner.map.get(k) {
+                inner.map.remove(k);
             }
         }
         self.ready.notify_all();
     }
 
-    /// Block until another thread fills `key`. Panics if the owning
-    /// thread abandoned the claim (its evaluation panicked) — a missing
-    /// entry here can only mean the in-flight owner died.
+    /// Block until another thread fills `key`, consuming the waiter
+    /// registration made by the `InFlight` claim (which pins the entry
+    /// against eviction until every registered waiter drained it).
+    /// Panics if the owning thread abandoned the claim (its evaluation
+    /// panicked) — a missing entry here can only mean the owner died.
     fn wait(&self, key: &Key) -> f64 {
-        let mut map = self.map.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
         loop {
-            match map.get(key) {
-                Some(Slot::Ready(v)) => return *v,
-                Some(Slot::Pending) => map = self.ready.wait(map).unwrap(),
+            match inner.map.get_mut(key) {
+                Some(Slot::Ready { val, referenced, waiters }) => {
+                    *referenced = true;
+                    *waiters -= 1;
+                    return *val;
+                }
+                Some(Slot::Pending { .. }) => inner = self.ready.wait(inner).unwrap(),
                 None => panic!("score evaluation abandoned for {key:?} (evaluator panicked)"),
             }
         }
@@ -167,6 +277,12 @@ pub struct ServiceStats {
     pub batches: u64,
     /// Largest batch (request count) seen so far.
     pub max_batch: u64,
+    /// Entries reclaimed from a bounded cache (0 when unbounded).
+    /// Outside the request identity: an eviction turns a future request
+    /// into a re-evaluation but is never itself a request.
+    pub evictions: u64,
+    /// Resident cache entries at snapshot time.
+    pub cache_entries: u64,
     pub eval_seconds: f64,
 }
 
@@ -195,10 +311,21 @@ pub struct ScoreService {
 
 impl ScoreService {
     pub fn new(backend: Arc<dyn ScoreBackend>, workers: usize) -> ScoreService {
+        ScoreService::with_cache_capacity(backend, workers, None)
+    }
+
+    /// Service with a bounded score cache (None = unbounded). Long-lived
+    /// processes (the discovery server) must bound the cache: an
+    /// unbounded memo map is a memory leak across jobs.
+    pub fn with_cache_capacity(
+        backend: Arc<dyn ScoreBackend>,
+        workers: usize,
+        cache_capacity: Option<usize>,
+    ) -> ScoreService {
         ScoreService {
             backend,
             workers: workers.max(1),
-            cache: ScoreCache::new(),
+            cache: ScoreCache::with_capacity(cache_capacity),
             requests: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             evals: AtomicU64::new(0),
@@ -214,6 +341,11 @@ impl ScoreService {
         ScoreService::new(Arc::new(ScalarBackend(score)), workers)
     }
 
+    /// Resident entries in the score cache (including in-flight claims).
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
     /// Snapshot of the counters. The [`ServiceStats::consistent`]
     /// identity holds at quiescence; a snapshot taken while another
     /// thread is mid-batch can transiently observe `requests` ahead of
@@ -226,6 +358,8 @@ impl ScoreService {
             dedup_skips: self.dedups.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
+            evictions: self.cache.evictions(),
+            cache_entries: self.cache.len() as u64,
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
     }
@@ -314,14 +448,19 @@ impl ScoreBackend for ScoreService {
             }
         }
 
-        req_slot
+        // Resolve each UNIQUE key exactly once: an InFlight claim
+        // registered exactly one waiter, so `wait` must run once per
+        // unique key, not once per duplicate occurrence.
+        let resolved: Vec<f64> = claims
             .iter()
-            .map(|&ui| match claims[ui] {
-                Claim::Hit(v) => v,
+            .enumerate()
+            .map(|(ui, claim)| match claim {
+                Claim::Hit(v) => *v,
                 Claim::Owned => owned_val[ui].expect("owned slot filled above"),
                 Claim::InFlight => self.cache.wait(&uniq[ui]),
             })
-            .collect()
+            .collect();
+        req_slot.iter().map(|&ui| resolved[ui]).collect()
     }
 
     fn num_vars(&self) -> usize {
@@ -438,6 +577,35 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_requests_on_inflight_key_wait_once() {
+        // regression: a batch containing the same key several times
+        // while another thread has it in flight must consume exactly
+        // the one waiter registration its claim made (no underflow)
+        let svc = Arc::new(ScoreService::with_cache_capacity(
+            Arc::new(ScalarBackend(SlowScore { calls: AtomicUsize::new(0) })),
+            1,
+            Some(4),
+        ));
+        std::thread::scope(|scope| {
+            let a = svc.clone();
+            scope.spawn(move || {
+                a.score_batch(&reqs_of(&[(0, &[1])]));
+            });
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            let out = svc.score_batch(&reqs_of(&[(0, &[1]), (0, &[1]), (0, &[1])]));
+            assert!(out.iter().all(|&v| v == out[0]), "{out:?}");
+        });
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 1, "{st:?}");
+        assert!(st.consistent(), "{st:?}");
+        // the entry must be evictable again (waiter count drained to 0)
+        for t in 1..5 {
+            svc.local_score(t, &[]);
+        }
+        assert!(svc.cache_len() <= 4, "pinned entry leaked a waiter");
+    }
+
+    #[test]
     fn concurrent_batches_evaluate_each_key_once() {
         let svc = Arc::new(ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1));
         let reqs: Vec<ScoreRequest> = (0..4).map(|t| ScoreRequest::new(t, &[4])).collect();
@@ -455,6 +623,65 @@ mod tests {
         assert_eq!(st.evaluations, 4, "in-flight dedup must prevent double evaluation");
         assert_eq!(st.requests, 16);
         assert!(st.consistent(), "{st:?}");
+    }
+
+    #[test]
+    fn bounded_cache_evicts_oldest_unreferenced() {
+        let svc = ScoreService::with_cache_capacity(
+            Arc::new(ScalarBackend(SlowScore { calls: AtomicUsize::new(0) })),
+            1,
+            Some(2),
+        );
+        // fill keys 0, 1, 2 → capacity 2 forces one eviction (key 0:
+        // oldest, never re-referenced)
+        for t in 0..3 {
+            svc.local_score(t, &[]);
+        }
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 3);
+        assert_eq!(st.evictions, 1, "{st:?}");
+        assert!(svc.cache_len() <= 2);
+        // evicted key re-evaluates; resident key hits
+        svc.local_score(0, &[]);
+        svc.local_score(2, &[]);
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 4, "key 0 was evicted and re-evaluated");
+        assert_eq!(st.cache_hits, 1, "key 2 stayed resident");
+        assert!(st.consistent(), "{st:?}");
+    }
+
+    #[test]
+    fn second_chance_spares_referenced_entries() {
+        let svc = ScoreService::with_cache_capacity(
+            Arc::new(ScalarBackend(SlowScore { calls: AtomicUsize::new(0) })),
+            1,
+            Some(2),
+        );
+        svc.local_score(0, &[]); // A
+        svc.local_score(1, &[]); // B
+        svc.local_score(0, &[]); // hit A → referenced bit set
+        svc.local_score(2, &[]); // C: sweep spares A (second chance), evicts B
+        let st = svc.stats();
+        assert_eq!(st.evictions, 1, "{st:?}");
+        svc.local_score(0, &[]); // A must still be resident
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 3, "A survived the sweep: {st:?}");
+        assert_eq!(st.cache_hits, 2);
+        svc.local_score(1, &[]); // B was the victim
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 4, "B was evicted: {st:?}");
+        assert!(st.consistent(), "{st:?}");
+    }
+
+    #[test]
+    fn unbounded_cache_reports_zero_evictions() {
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1);
+        for t in 0..5 {
+            svc.local_score(t, &[]);
+        }
+        let st = svc.stats();
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.cache_entries, 5);
     }
 
     #[test]

@@ -38,6 +38,30 @@
 //! New methods plug in through the coordinator's registry
 //! ([`coordinator::register_score_method`]) without touching the engine.
 //!
+//! ## The discovery server
+//!
+//! The [`server`] module turns the library into a long-running serving
+//! system (`cvlr serve --port 7878`): an HTTP/JSON API (std-only,
+//! hand-rolled wire layer) over an async job queue. Datasets are
+//! registered once — built-ins or CSV uploads with continuous/discrete
+//! type inference ([`server::registry`]) — and jobs move through
+//! `queued → running → done | failed | cancelled` with mid-sweep
+//! cancellation ([`server::jobs`]). One [`coordinator::ScoreService`]
+//! is pooled per (dataset, method, engine), so the score cache
+//! persists **across** jobs; long-run memory is bounded by the
+//! second-chance eviction cache
+//! ([`coordinator::ScoreCache::with_capacity`], surfaced as
+//! `Discovery::builder(ds).cache_capacity(..)` and reported through
+//! [`coordinator::ServiceStats::evictions`]).
+//!
+//! ```text
+//! curl -X POST localhost:7878/v1/jobs -d '{"dataset":"synth","method":"cv-lr"}'
+//! curl localhost:7878/v1/jobs/1
+//! ```
+//!
+//! See `server`'s module docs for the endpoint table and
+//! `examples/serve_client.rs` for an end-to-end client.
+//!
 //! ## Three-layer architecture (see `DESIGN.md`)
 //!
 //! * **L3 (this crate)** — the coordinator: batched GES search, score
@@ -63,4 +87,5 @@ pub mod contopt;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod server;
 pub mod bench;

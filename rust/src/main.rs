@@ -2,9 +2,11 @@
 //!
 //! Subcommands:
 //!
-//! * `discover` — run causal discovery on a built-in workload
-//!   (synthetic FCM data, SACHS, CHILD) with any method;
+//! * `discover` — run causal discovery on a workload (synthetic FCM
+//!   data, SACHS, CHILD, or a CSV file) with any method;
 //! * `score`    — evaluate one local score S(X | Z) and print it;
+//! * `serve`    — run the long-lived discovery server (HTTP/JSON job
+//!   API over the batch-first score service; see `server`);
 //! * `selftest` — quick end-to-end check of all three layers
 //!   (used by `make smoke`);
 //! * `info`     — print the artifact registry and build information.
@@ -14,7 +16,9 @@
 //! ```text
 //! cvlr discover --data synth --n 500 --density 0.4 --method cv-lr
 //! cvlr discover --data sachs --n 2000 --method cv-lr --engine pjrt
+//! cvlr discover --data experiments/run1.csv --method bic
 //! cvlr score --data child --n 500 --target 3 --parents 1,2
+//! cvlr serve --port 7878 --job-workers 2 --cache-cap 1048576
 //! cvlr selftest
 //! ```
 
@@ -30,6 +34,7 @@ use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
 use cvlr::runtime::Runtime;
 use cvlr::score::cvlr::CvLrScore;
 use cvlr::score::LocalScore;
+use cvlr::server::{registry, Server, ServerConfig};
 use cvlr::util::cli::Args;
 use cvlr::util::timing::fmt_secs;
 use cvlr::util::Stopwatch;
@@ -40,6 +45,7 @@ fn main() -> ExitCode {
     let res = match cmd {
         "discover" => cmd_discover(&args),
         "score" => cmd_score(&args),
+        "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -69,10 +75,11 @@ fn print_help() {
          COMMANDS:\n\
          \x20 discover   run causal discovery on a workload\n\
          \x20 score      evaluate one local score S(X | Z)\n\
+         \x20 serve      run the HTTP/JSON discovery server\n\
          \x20 selftest   end-to-end three-layer smoke check\n\
          \x20 info       artifact registry + build info\n\n\
          COMMON OPTIONS:\n\
-         \x20 --data synth|sachs|child|sachs-cont   workload (default synth)\n\
+         \x20 --data synth|sachs|child|sachs-cont|FILE.csv  workload (default synth)\n\
          \x20 --n N                                 sample size (default 500)\n\
          \x20 --seed S                              RNG seed (default 0)\n\
          \x20 --method cv-lr|cv|marg-lr|bic|bdeu|sc|pc|mm  (default cv-lr)\n\
@@ -82,10 +89,17 @@ fn print_help() {
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
-         \x20 --vars V         synth variable count (default 7)\n\n\
+         \x20 --vars V         synth variable count (default 7)\n\
+         \x20 --csv-header true|false               force/suppress CSV header row\n\
+         \x20 --cache-cap C    bound the score cache (0 = unbounded)\n\n\
          score OPTIONS:\n\
          \x20 --target T       target variable index (default 0)\n\
-         \x20 --parents CSV    comma-separated parent indices (default empty)"
+         \x20 --parents CSV    comma-separated parent indices (default empty)\n\n\
+         serve OPTIONS:\n\
+         \x20 --port P         listen port on localhost (default 7878)\n\
+         \x20 --job-workers J  concurrent discovery jobs (default 2)\n\
+         \x20 --cache-cap C    per-service score-cache bound (default 2^20, 0 = unbounded)\n\
+         \x20 --n N --seed S   sampling of the built-in datasets"
     );
 }
 
@@ -134,7 +148,20 @@ fn load_workload(args: &Args) -> Result<(Arc<Dataset>, Option<Dag>, String)> {
             let (ds, dag) = networks::sachs_continuous(n, seed);
             (Arc::new(ds), Some(dag), format!("SACHS continuous SEM (n={n})"))
         }
-        other => bail!("unknown workload `{other}` (synth|sachs|child|sachs-cont)"),
+        // CSV files go through the same ingestion/type-inference path
+        // as server uploads (server::registry); no ground truth, so
+        // discover prints no F1/SHD
+        other if other.ends_with(".csv") || std::path::Path::new(other).is_file() => {
+            let header = args.get("csv-header").and_then(|v| match v {
+                "true" | "yes" => Some(true),
+                "false" | "no" => Some(false),
+                _ => None,
+            });
+            let ds = registry::dataset_from_csv_file(other, header)?;
+            let desc = format!("csv {other} (n={}, d={})", ds.n(), ds.d());
+            (Arc::new(ds), None, desc)
+        }
+        other => bail!("unknown workload `{other}` (synth|sachs|child|sachs-cont|FILE.csv)"),
     })
 }
 
@@ -147,12 +174,16 @@ fn cmd_discover(args: &Args) -> Result<()> {
     };
     println!("workload : {desc}");
     // the builder façade: method by registry name, knobs, run
-    let out = Discovery::builder(ds)
+    let mut builder = Discovery::builder(ds)
         .method(args.get_or("method", "cv-lr"))
         .engine(engine)
         .workers(args.usize_or("workers", 1))
-        .artifacts_dir(args.get_or("artifacts", "artifacts"))
-        .run()?;
+        .artifacts_dir(args.get_or("artifacts", "artifacts"));
+    let cache_cap = args.usize_or("cache-cap", 0);
+    if cache_cap > 0 {
+        builder = builder.cache_capacity(cache_cap);
+    }
+    let out = builder.run()?;
     println!("method   : {} ({engine:?} engine)", out.method);
     println!("time     : {}", fmt_secs(out.seconds));
     println!("edges    : {}", out.cpdag.num_edges());
@@ -164,13 +195,14 @@ fn cmd_discover(args: &Args) -> Result<()> {
         let hit = st.cache_hits as f64 / st.requests.max(1) as f64;
         println!(
             "service  : {} requests in {} batches (max {}), {} evals, \
-             {:.0}% cache hits, {} dups, {} in scoring",
+             {:.0}% cache hits, {} dups, {} evictions, {} in scoring",
             st.requests,
             st.batches,
             st.max_batch,
             st.evaluations,
             hit * 100.0,
             st.dedup_skips,
+            st.evictions,
             fmt_secs(st.eval_seconds)
         );
     }
@@ -209,6 +241,39 @@ fn cmd_score(args: &Args) -> Result<()> {
     let score = CvLrScore::native(ds);
     let s = score.local_score(target, &parents);
     println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port = args.usize_or("port", 7878);
+    if port > u16::MAX as usize {
+        bail!("--port {port} out of range (max {})", u16::MAX);
+    }
+    let cfg = ServerConfig {
+        port: port as u16,
+        job_workers: args.usize_or("job-workers", 2),
+        score_workers: args.usize_or("workers", 1),
+        cache_capacity: match args.usize_or("cache-cap", 1 << 20) {
+            0 => None,
+            c => Some(c),
+        },
+        builtin_n: args.usize_or("n", 500),
+        seed: args.u64_or("seed", 0),
+        artifacts_dir: args.get_or("artifacts", "artifacts"),
+    };
+    let server = Server::start(cfg)?;
+    println!("cvlr discovery server listening on http://{}", server.addr());
+    println!("  POST   /v1/datasets    register a CSV upload or built-in");
+    println!("  GET    /v1/datasets    list datasets");
+    println!("  POST   /v1/jobs        submit a discovery job");
+    println!("  GET    /v1/jobs/<id>   poll state / progress / result");
+    println!("  DELETE /v1/jobs/<id>   cancel");
+    println!("  GET    /v1/stats       job + score-cache statistics");
+    println!("  POST   /v1/shutdown    graceful shutdown");
+    // graceful shutdown is driven by the shutdown endpoint: the accept
+    // loop drains connections, then the job manager cancels + joins
+    server.wait();
+    println!("server stopped");
     Ok(())
 }
 

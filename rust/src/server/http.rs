@@ -1,0 +1,288 @@
+//! Minimal HTTP/1.1 wire layer on `std::net` — enough protocol for a
+//! JSON API server (and nothing more): one request per connection
+//! (`Connection: close`), `Content-Length` bodies, thread per
+//! connection, a non-blocking accept loop polling a shutdown flag, and
+//! connection drain on the way out.
+//!
+//! Also hosts the matching blocking [`request`] client used by the
+//! integration tests, `examples/serve_client.rs`, and anyone scripting
+//! the server without curl.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::{self, Json};
+
+/// Upper bound on request head (request line + headers).
+const MAX_HEAD: usize = 16 * 1024;
+/// Upper bound on request bodies (CSV uploads are the big ones).
+const MAX_BODY: usize = 64 * 1024 * 1024;
+/// Per-connection socket timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// How long shutdown waits for in-flight connections to drain.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// One parsed request.
+pub struct Request {
+    pub method: String,
+    /// Path without query string.
+    pub path: String,
+    headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as one strict JSON document.
+    pub fn json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("body is not UTF-8")?;
+        json::parse(text)
+    }
+
+    /// Path split on `/`, empty segments dropped.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// A JSON response (every endpoint speaks JSON, including errors).
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response { status, body: body.encode() }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// The route table: a request in, a response out.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A bound listener; `run` is the accept loop.
+pub struct HttpServer {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+/// Decrements the active-connection count even if the handler panics,
+/// so shutdown drain never waits on a dead connection.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl HttpServer {
+    /// Bind localhost:`port` (0 picks an ephemeral port).
+    pub fn bind(port: u16) -> Result<HttpServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        // non-blocking accept so the loop can poll the shutdown flag
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        Ok(HttpServer { listener, addr })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept connections until `shutdown` is set, then drain in-flight
+    /// connections (bounded by [`DRAIN_TIMEOUT`]) and return.
+    pub fn run(&self, handler: Handler, shutdown: &AtomicBool) {
+        let active = Arc::new(AtomicUsize::new(0));
+        while !shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    active.fetch_add(1, Ordering::SeqCst);
+                    let guard = ActiveGuard(active.clone());
+                    let handler = handler.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("cvlr-http-conn".to_string())
+                        .spawn(move || {
+                            let _guard = guard;
+                            let _ = handle_connection(stream, &handler);
+                        });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        let t0 = Instant::now();
+        while active.load(Ordering::SeqCst) > 0 && t0.elapsed() < DRAIN_TIMEOUT {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handler: &Handler) -> Result<()> {
+    // some platforms hand accepted sockets the listener's non-blocking
+    // mode; connection I/O below wants blocking reads with timeouts
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let resp = match read_request(&mut stream) {
+        Ok(req) => handler(&req),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    };
+    write_response(&mut stream, &resp)
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    // read until the blank line separating head from body
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("request head larger than {MAX_HEAD} bytes");
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).context("reading request head")?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or_default().to_string();
+    let target = parts.next().unwrap_or_default();
+    let version = parts.next().unwrap_or_default();
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        bail!("malformed request line `{request_line}`");
+    }
+    let path = target.split('?').next().unwrap_or_default().to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line.split_once(':').context("malformed header line")?;
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    let req = Request { method, path, headers, body: Vec::new() };
+    let content_length: usize = match req.header("content-length") {
+        Some(v) => v.trim().parse().context("bad content-length")?,
+        None => 0,
+    };
+    if content_length > MAX_BODY {
+        bail!("body larger than {MAX_BODY} bytes");
+    }
+    // curl sends `Expect: 100-continue` for bodies over 1 KB and waits
+    // ~1 s for the go-ahead before uploading — answer it so CSV uploads
+    // don't stall
+    if let Some(expect) = req.header("expect") {
+        if expect.to_ascii_lowercase().contains("100-continue") {
+            stream
+                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .context("writing 100 Continue")?;
+            stream.flush().context("flushing 100 Continue")?;
+        }
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 8192];
+        let n = stream.read(&mut chunk).context("reading request body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Request { body, ..req })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes()).context("writing response head")?;
+    stream.write_all(resp.body.as_bytes()).context("writing response body")?;
+    stream.flush().context("flushing response")?;
+    Ok(())
+}
+
+/// Blocking one-shot client: send `body` as JSON, return (status,
+/// parsed body). An empty response body parses as `Json::Null`.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> Result<(u16, Json)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let payload = body.map(|b| b.encode()).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes()).context("writing request")?;
+    stream.write_all(payload.as_bytes()).context("writing request body")?;
+    stream.flush().context("flushing request")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    let head_end = find_head_end(&raw).context("no response head terminator")?;
+    let head = std::str::from_utf8(&raw[..head_end]).context("response head not UTF-8")?;
+    let status_line = head.split("\r\n").next().unwrap_or_default();
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line `{status_line}`"))?;
+    let body_text = std::str::from_utf8(&raw[head_end + 4..]).context("response body not UTF-8")?;
+    let value = if body_text.trim().is_empty() { Json::Null } else { json::parse(body_text)? };
+    Ok((status, value))
+}

@@ -1,0 +1,731 @@
+//! The async job subsystem: a submit/poll/cancel queue over the
+//! discovery engine, drained by a worker pool.
+//!
+//! Jobs move `Queued → Running → Done | Failed | Cancelled`. Score-based
+//! jobs run batched GES against a [`ScoreService`] drawn from a pool
+//! keyed by (dataset, method, engine) — the score cache therefore
+//! persists *across* jobs, so a repeated or overlapping workload is
+//! served from memo hits instead of re-evaluation (`/v1/stats` exposes
+//! the per-service counters, including evictions from the bounded
+//! cache). Search-based methods (PC / MM-MB) run through the engine's
+//! registry end to end.
+//!
+//! Cancellation is cooperative and honored mid-sweep: the service is
+//! wrapped per job in a [`CancelBackend`] that submits the sweep as a
+//! few wide sub-batches (wide, so batch amortization survives) and
+//! stops between them once the flag is set. The
+//! padded sweep may let GES apply one bogus operator, but the following
+//! sweep scores as an all-zero surface and terminates the search; the
+//! partial result is then discarded and the job reports `Cancelled`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{
+    resolve_method, run_named, score_backend_for, DiscoveryConfig, MethodKind, ScoreService,
+    ServiceStats,
+};
+use crate::graph::Pdag;
+use crate::score::{ScoreBackend, ScoreRequest};
+use crate::search::ges::ges;
+use crate::util::Stopwatch;
+
+use super::registry::DatasetRegistry;
+
+/// The cancel-aware wrapper splits a sweep into at most this many
+/// sub-batches, checking the cancel flag between them. Few, wide chunks
+/// keep the batch amortization (shared factors, device dispatch) the
+/// batch-first API exists for; the cancel latency bound is one chunk.
+const CANCEL_CHECKS_PER_SWEEP: usize = 8;
+
+/// Sweeps below this size are never split — chunking tiny batches
+/// costs amortization and buys no meaningful cancel latency.
+const MIN_CANCEL_CHUNK: usize = 32;
+
+/// Terminal jobs retained for polling; beyond this the oldest
+/// done/failed/cancelled jobs are dropped (queued/running jobs are
+/// never pruned). Bounds manager memory in a long-lived server the
+/// same way the score cache bound does.
+const MAX_RETAINED_TERMINAL_JOBS: usize = 1024;
+
+/// Pooled score services kept warm; creating one beyond this evicts
+/// the least-recently-used entry (running jobs keep their own `Arc`,
+/// only the shared cache handle is dropped). Together with the
+/// per-cache capacity this bounds server memory by
+/// `MAX_POOLED_SERVICES × cache_capacity` entries.
+const MAX_POOLED_SERVICES: usize = 32;
+
+/// Lifecycle of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire name (lower-case).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// What to run: a registered dataset, a registered method, and the
+/// engine knobs.
+#[derive(Clone)]
+pub struct JobSpec {
+    pub dataset: String,
+    pub method: String,
+    pub cfg: DiscoveryConfig,
+}
+
+/// Monotonic per-job progress, written by the score path mid-run.
+#[derive(Default)]
+struct JobProgress {
+    /// Sweeps (score batches) completed.
+    sweeps: AtomicU64,
+    /// Candidate operators scored (GES submits two requests per
+    /// candidate: parent set with and without x).
+    candidates: AtomicU64,
+}
+
+/// Final output of a finished job.
+#[derive(Clone)]
+pub struct JobResult {
+    pub cpdag: Pdag,
+    pub seconds: f64,
+    /// Canonical method key that ran.
+    pub method: String,
+    /// Stats of the shared service at completion (score methods only);
+    /// cumulative across every job that used the service.
+    pub stats: Option<ServiceStats>,
+    pub ci_tests: Option<u64>,
+}
+
+struct Job {
+    id: u64,
+    spec: JobSpec,
+    /// Canonical method key (resolved at submit).
+    canon_method: String,
+    state: Mutex<JobState>,
+    cancel: AtomicBool,
+    progress: JobProgress,
+    /// Shared-service counters at job start — polls report this job's
+    /// activity as the delta against the live (or final) counters.
+    stats_at_start: Mutex<Option<ServiceStats>>,
+    /// The pooled service while the job runs (for live progress).
+    service: Mutex<Option<Arc<ScoreService>>>,
+    result: Mutex<Option<JobResult>>,
+    error: Mutex<Option<String>>,
+}
+
+/// Poll-time view of a job.
+#[derive(Clone)]
+pub struct JobSnapshot {
+    pub id: u64,
+    pub dataset: String,
+    pub method: String,
+    pub state: JobState,
+    /// Sweeps (score batches) completed so far.
+    pub sweeps: u64,
+    /// Candidate operators scored so far.
+    pub candidates: u64,
+    /// Score requests this job issued against the shared service
+    /// (counter delta since job start; approximate while other jobs
+    /// run concurrently on the same service).
+    pub requests: u64,
+    /// How many of those were served from the shared cache.
+    pub cache_hits: u64,
+    /// Fresh backend evaluations this job triggered.
+    pub evaluations: u64,
+    pub result: Option<JobResult>,
+    pub error: Option<String>,
+}
+
+impl JobSnapshot {
+    /// Fraction of this job's requests served from the shared cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache_hits as f64 / self.requests.max(1) as f64
+    }
+}
+
+// (dataset name, dataset version, method, engine). The version comes
+// from the registry and is bumped on replacement, so re-uploading a
+// dataset under the same name can never hit a stale service/cache.
+type ServiceKey = (String, u64, String, String);
+
+/// A pooled service plus its LRU stamp (monotonic use counter).
+struct PoolEntry {
+    service: Arc<ScoreService>,
+    last_use: u64,
+}
+
+/// The job manager: queue, worker pool, and the per-(dataset, method,
+/// engine) pool of memoizing score services.
+pub struct JobManager {
+    registry: Arc<DatasetRegistry>,
+    jobs: Mutex<HashMap<u64, Arc<Job>>>,
+    queue: Mutex<VecDeque<u64>>,
+    queue_cv: Condvar,
+    next_id: AtomicU64,
+    services: Mutex<HashMap<ServiceKey, PoolEntry>>,
+    /// Monotonic counter stamping pool hits for LRU eviction.
+    pool_clock: AtomicU64,
+    shutdown: AtomicBool,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Cache bound applied when a job spec leaves `cache_capacity`
+    /// unset — a long-lived server must not grow memo maps unboundedly.
+    default_cache_capacity: Option<usize>,
+}
+
+impl JobManager {
+    /// Spawn a manager draining the queue with `workers` threads.
+    pub fn start(
+        registry: Arc<DatasetRegistry>,
+        workers: usize,
+        default_cache_capacity: Option<usize>,
+    ) -> Arc<JobManager> {
+        let mgr = Arc::new(JobManager {
+            registry,
+            jobs: Mutex::new(HashMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            next_id: AtomicU64::new(0),
+            services: Mutex::new(HashMap::new()),
+            pool_clock: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            workers: Mutex::new(Vec::new()),
+            default_cache_capacity,
+        });
+        let mut handles = Vec::new();
+        for i in 0..workers.max(1) {
+            let m = mgr.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("cvlr-job-{i}"))
+                .spawn(move || m.worker_loop())
+                .expect("spawn job worker");
+            handles.push(h);
+        }
+        *mgr.workers.lock().unwrap() = handles;
+        mgr
+    }
+
+    /// Enqueue a job. Validates the dataset and method names up front so
+    /// misspellings fail at submit, not minutes later in a worker.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            bail!("server is shutting down");
+        }
+        if self.registry.get(&spec.dataset).is_none() {
+            bail!(
+                "unknown dataset `{}` (registered: {})",
+                spec.dataset,
+                self.registry.names().join(", ")
+            );
+        }
+        let (canon, _) = resolve_method(&spec.method)
+            .ok_or_else(|| anyhow!("unknown method `{}`", spec.method))?;
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let job = Arc::new(Job {
+            id,
+            spec,
+            canon_method: canon,
+            state: Mutex::new(JobState::Queued),
+            cancel: AtomicBool::new(false),
+            progress: JobProgress::default(),
+            stats_at_start: Mutex::new(None),
+            service: Mutex::new(None),
+            result: Mutex::new(None),
+            error: Mutex::new(None),
+        });
+        self.jobs.lock().unwrap().insert(id, job);
+        self.queue.lock().unwrap().push_back(id);
+        self.queue_cv.notify_one();
+        Ok(id)
+    }
+
+    /// Request cancellation; returns the state right after the request
+    /// (a queued job cancels immediately, a running one cooperatively).
+    pub fn cancel(&self, id: u64) -> Option<JobState> {
+        let job = self.jobs.lock().unwrap().get(&id).cloned()?;
+        job.cancel.store(true, Ordering::SeqCst);
+        let mut st = job.state.lock().unwrap();
+        if *st == JobState::Queued {
+            *st = JobState::Cancelled;
+        }
+        Some(*st)
+    }
+
+    /// Current view of a job (None for unknown ids).
+    pub fn snapshot(&self, id: u64) -> Option<JobSnapshot> {
+        let job = self.jobs.lock().unwrap().get(&id).cloned()?;
+        let state = *job.state.lock().unwrap();
+        let result = job.result.lock().unwrap().clone();
+        let error = job.error.lock().unwrap().clone();
+        let start = job.stats_at_start.lock().unwrap().clone();
+        let now = match (&result, &*job.service.lock().unwrap()) {
+            (Some(r), _) if r.stats.is_some() => r.stats.clone(),
+            (_, Some(svc)) => Some(svc.stats()),
+            _ => None,
+        };
+        let (requests, cache_hits, evaluations) = match (start, now) {
+            (Some(s0), Some(s1)) => (
+                s1.requests.saturating_sub(s0.requests),
+                s1.cache_hits.saturating_sub(s0.cache_hits),
+                s1.evaluations.saturating_sub(s0.evaluations),
+            ),
+            _ => (0, 0, 0),
+        };
+        Some(JobSnapshot {
+            id: job.id,
+            dataset: job.spec.dataset.clone(),
+            method: job.canon_method.clone(),
+            state,
+            sweeps: job.progress.sweeps.load(Ordering::Relaxed),
+            candidates: job.progress.candidates.load(Ordering::Relaxed),
+            requests,
+            cache_hits,
+            evaluations,
+            result,
+            error,
+        })
+    }
+
+    /// All job ids, ascending (submission order).
+    pub fn job_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.jobs.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Job counts per state, in lifecycle order.
+    pub fn state_counts(&self) -> Vec<(JobState, u64)> {
+        let jobs = self.jobs.lock().unwrap();
+        let states = [
+            JobState::Queued,
+            JobState::Running,
+            JobState::Done,
+            JobState::Failed,
+            JobState::Cancelled,
+        ];
+        let mut counts: HashMap<JobState, u64> = HashMap::new();
+        for job in jobs.values() {
+            *counts.entry(*job.state.lock().unwrap()).or_insert(0) += 1;
+        }
+        states.iter().map(|s| (*s, counts.get(s).copied().unwrap_or(0))).collect()
+    }
+
+    /// Per-service counters of the pool: ((dataset, dataset version,
+    /// method, engine), stats), sorted by key.
+    pub fn service_stats(&self) -> Vec<(ServiceKey, ServiceStats)> {
+        let services = self.services.lock().unwrap();
+        let mut out: Vec<(ServiceKey, ServiceStats)> =
+            services.iter().map(|(k, e)| (k.clone(), e.service.stats())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Drop every pooled service of `dataset` (called when the dataset
+    /// is deleted from the registry). Running jobs keep their own Arc.
+    pub fn drop_dataset_services(&self, dataset: &str) {
+        self.services.lock().unwrap().retain(|k, _| k.0 != dataset);
+    }
+
+    /// Stop accepting jobs, cancel everything in flight, and join the
+    /// workers. Idempotent.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for job in self.jobs.lock().unwrap().values() {
+            job.cancel.store(true, Ordering::SeqCst);
+            let mut st = job.state.lock().unwrap();
+            if *st == JobState::Queued {
+                *st = JobState::Cancelled;
+            }
+        }
+        self.queue_cv.notify_all();
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let id = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(id) = q.pop_front() {
+                        break id;
+                    }
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = self.queue_cv.wait(q).unwrap();
+                }
+            };
+            let job = match self.jobs.lock().unwrap().get(&id).cloned() {
+                Some(j) => j,
+                None => continue,
+            };
+            self.run_job(&job);
+        }
+    }
+
+    fn run_job(&self, job: &Job) {
+        {
+            let mut st = job.state.lock().unwrap();
+            if *st != JobState::Queued {
+                return; // cancelled while queued
+            }
+            if job.cancel.load(Ordering::SeqCst) {
+                *st = JobState::Cancelled;
+                return;
+            }
+            *st = JobState::Running;
+        }
+        let outcome = self.execute(job);
+        // drop the live-service handle before publishing the terminal
+        // state so late polls go through the result snapshot
+        *job.service.lock().unwrap() = None;
+        {
+            let mut st = job.state.lock().unwrap();
+            match outcome {
+                Ok(Some(result)) => {
+                    *job.result.lock().unwrap() = Some(result);
+                    *st = JobState::Done;
+                }
+                Ok(None) => *st = JobState::Cancelled,
+                Err(e) => {
+                    *job.error.lock().unwrap() = Some(format!("{e:#}"));
+                    *st = JobState::Failed;
+                }
+            }
+        }
+        self.prune_terminal_jobs();
+    }
+
+    /// Bound manager memory: drop the oldest terminal jobs beyond
+    /// [`MAX_RETAINED_TERMINAL_JOBS`] (their results become 404s).
+    /// Queued/running jobs are never pruned.
+    fn prune_terminal_jobs(&self) {
+        let mut jobs = self.jobs.lock().unwrap();
+        let mut terminal: Vec<u64> = jobs
+            .iter()
+            .filter(|(_, j)| j.state.lock().unwrap().is_terminal())
+            .map(|(id, _)| *id)
+            .collect();
+        if terminal.len() <= MAX_RETAINED_TERMINAL_JOBS {
+            return;
+        }
+        terminal.sort_unstable();
+        let excess = terminal.len() - MAX_RETAINED_TERMINAL_JOBS;
+        for id in terminal.into_iter().take(excess) {
+            jobs.remove(&id);
+        }
+    }
+
+    /// Run the job to completion; `Ok(None)` means it observed its
+    /// cancel flag.
+    fn execute(&self, job: &Job) -> Result<Option<JobResult>> {
+        let spec = &job.spec;
+        let (ds, ds_version) = self
+            .registry
+            .entry(&spec.dataset)
+            .ok_or_else(|| anyhow!("dataset `{}` was removed", spec.dataset))?;
+        let canon = job.canon_method.clone();
+        let kind = resolve_method(&canon)
+            .map(|(_, k)| k)
+            .ok_or_else(|| anyhow!("method `{canon}` was unregistered"))?;
+        match kind {
+            MethodKind::Score => {
+                // NOTE: `workers` and `cache_capacity` of a job spec
+                // only take effect for the job that *creates* the
+                // pooled service; later jobs share the existing one.
+                let service = {
+                    let key: ServiceKey = (
+                        spec.dataset.clone(),
+                        ds_version,
+                        canon.clone(),
+                        format!("{:?}", spec.cfg.engine),
+                    );
+                    let stamp = || self.pool_clock.fetch_add(1, Ordering::Relaxed) + 1;
+                    let cached = {
+                        let mut services = self.services.lock().unwrap();
+                        services.get_mut(&key).map(|e| {
+                            e.last_use = stamp();
+                            e.service.clone()
+                        })
+                    };
+                    match cached {
+                        Some(svc) => svc,
+                        None => {
+                            // build outside the pool lock: a factory may
+                            // load PJRT artifacts from disk
+                            let (_, backend) = score_backend_for(&canon, ds, &spec.cfg)?;
+                            let backend =
+                                backend.ok_or_else(|| anyhow!("`{canon}` is not score-based"))?;
+                            let cap = spec.cfg.cache_capacity.or(self.default_cache_capacity);
+                            let svc = Arc::new(ScoreService::with_cache_capacity(
+                                backend,
+                                spec.cfg.workers,
+                                cap,
+                            ));
+                            let mut services = self.services.lock().unwrap();
+                            // a replaced dataset's services are now
+                            // unreachable (stale version): drop them
+                            services.retain(|k, _| k.0 != spec.dataset || k.1 >= ds_version);
+                            // LRU-bound the pool: running jobs keep
+                            // their own Arc, only the warm cache goes
+                            while services.len() >= MAX_POOLED_SERVICES {
+                                let lru = services
+                                    .iter()
+                                    .min_by_key(|(_, e)| e.last_use)
+                                    .map(|(k, _)| k.clone());
+                                match lru {
+                                    Some(k) => {
+                                        services.remove(&k);
+                                    }
+                                    None => break,
+                                }
+                            }
+                            // racing builders: first insert wins so all
+                            // jobs share one cache
+                            services
+                                .entry(key)
+                                .or_insert_with(|| PoolEntry { service: svc, last_use: stamp() })
+                                .service
+                                .clone()
+                        }
+                    }
+                };
+                *job.stats_at_start.lock().unwrap() = Some(service.stats());
+                *job.service.lock().unwrap() = Some(service.clone());
+                let backend = CancelBackend {
+                    inner: service.clone(),
+                    cancel: &job.cancel,
+                    progress: &job.progress,
+                };
+                let sw = Stopwatch::start();
+                let res = ges(&backend, &spec.cfg.ges);
+                if job.cancel.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                Ok(Some(JobResult {
+                    cpdag: res.cpdag,
+                    seconds: sw.secs(),
+                    method: canon,
+                    stats: Some(service.stats()),
+                    ci_tests: None,
+                }))
+            }
+            MethodKind::Search => {
+                if job.cancel.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                // constraint-based searches run end to end through the
+                // registry; cancellation lands before/after, not inside
+                let out = run_named(&canon, ds, &spec.cfg)?;
+                if job.cancel.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                Ok(Some(JobResult {
+                    cpdag: out.cpdag,
+                    seconds: out.seconds,
+                    method: out.method,
+                    stats: out.score_stats,
+                    ci_tests: out.ci_tests,
+                }))
+            }
+        }
+    }
+}
+
+/// Per-job wrapper over the pooled service: submits each sweep in a few
+/// wide chunks, stops between chunks once the cancel flag is set
+/// (padding the remainder with zeros — the job runner discards the
+/// result), and counts sweeps/candidates for progress reporting.
+struct CancelBackend<'a> {
+    inner: Arc<ScoreService>,
+    cancel: &'a AtomicBool,
+    progress: &'a JobProgress,
+}
+
+impl ScoreBackend for CancelBackend<'_> {
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        // few, wide sub-batches: amortization stays, cancels land within
+        // ~1/CANCEL_CHECKS_PER_SWEEP of a sweep
+        let chunk_len =
+            MIN_CANCEL_CHUNK.max(reqs.len().div_ceil(CANCEL_CHECKS_PER_SWEEP));
+        let mut out: Vec<f64> = Vec::with_capacity(reqs.len());
+        for sub in reqs.chunks(chunk_len) {
+            if self.cancel.load(Ordering::SeqCst) {
+                break;
+            }
+            out.extend(self.inner.score_batch(sub));
+        }
+        out.resize(reqs.len(), 0.0);
+        self.progress.sweeps.fetch_add(1, Ordering::Relaxed);
+        self.progress.candidates.fetch_add((reqs.len() / 2) as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn num_vars(&self) -> usize {
+        ScoreBackend::num_vars(&*self.inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::register_score_method;
+    use crate::score::{LocalScore, ScalarBackend};
+    use std::time::{Duration, Instant};
+
+    fn test_registry() -> Arc<DatasetRegistry> {
+        let reg = Arc::new(DatasetRegistry::new());
+        let ds = super::super::registry::builtin_dataset("synth", 150, 7).unwrap();
+        reg.insert("synth", Arc::new(ds)).unwrap();
+        reg
+    }
+
+    fn wait_terminal(mgr: &JobManager, id: u64, timeout: Duration) -> JobSnapshot {
+        let t0 = Instant::now();
+        loop {
+            let snap = mgr.snapshot(id).expect("job exists");
+            if snap.state.is_terminal() {
+                return snap;
+            }
+            assert!(t0.elapsed() < timeout, "job {id} stuck in {:?}", snap.state);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    fn spec(method: &str) -> JobSpec {
+        JobSpec {
+            dataset: "synth".to_string(),
+            method: method.to_string(),
+            cfg: DiscoveryConfig::default(),
+        }
+    }
+
+    #[test]
+    fn submit_rejects_unknown_names() {
+        let mgr = JobManager::start(test_registry(), 1, None);
+        assert!(mgr.submit(spec("not-a-method")).is_err());
+        let mut bad = spec("bic");
+        bad.dataset = "not-a-dataset".to_string();
+        assert!(mgr.submit(bad).is_err());
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn job_runs_to_done_and_second_job_hits_shared_cache() {
+        let mgr = JobManager::start(test_registry(), 2, Some(1 << 16));
+        let a = mgr.submit(spec("bic")).unwrap();
+        let snap_a = wait_terminal(&mgr, a, Duration::from_secs(60));
+        assert_eq!(snap_a.state, JobState::Done, "{:?}", snap_a.error);
+        let res = snap_a.result.as_ref().unwrap();
+        assert!(res.cpdag.num_edges() > 0, "synthetic data has structure");
+        assert!(res.stats.as_ref().unwrap().consistent());
+        assert!(snap_a.sweeps > 0 && snap_a.candidates > 0);
+
+        // identical job: the pooled service must serve it from cache
+        let b = mgr.submit(spec("bic")).unwrap();
+        let snap_b = wait_terminal(&mgr, b, Duration::from_secs(60));
+        assert_eq!(snap_b.state, JobState::Done);
+        assert!(snap_b.requests > 0);
+        assert_eq!(
+            snap_b.evaluations, 0,
+            "an identical job re-scores nothing: {} requests, {} hits",
+            snap_b.requests, snap_b.cache_hits
+        );
+        assert!(snap_b.cache_hits > 0, "cross-job cache hits must be observed");
+        let services = mgr.service_stats();
+        assert_eq!(services.len(), 1, "both jobs share one (dataset, method, engine) service");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn cancel_lands_mid_run_on_a_slow_method() {
+        // a deliberately slow registered score: each evaluation sleeps,
+        // so the cancel reliably lands mid-sweep
+        register_score_method("jobs-test-slow", &[], |ds, _| {
+            struct Slow(Arc<crate::data::Dataset>);
+            impl LocalScore for Slow {
+                fn local_score(&self, t: usize, p: &[usize]) -> f64 {
+                    std::thread::sleep(Duration::from_millis(5));
+                    // rewards every insert, so GES keeps sweeping until
+                    // the graph is complete — plenty of time to cancel
+                    t as f64 * 0.01 + p.len() as f64
+                }
+                fn num_vars(&self) -> usize {
+                    self.0.d()
+                }
+            }
+            Ok(Arc::new(ScalarBackend(Slow(ds))))
+        });
+        let mgr = JobManager::start(test_registry(), 1, None);
+        let id = mgr.submit(spec("jobs-test-slow")).unwrap();
+        // let it get going, then cancel
+        let t0 = Instant::now();
+        loop {
+            let snap = mgr.snapshot(id).unwrap();
+            if snap.state == JobState::Running && snap.candidates > 0 {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(30), "job never started");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        mgr.cancel(id).unwrap();
+        let snap = wait_terminal(&mgr, id, Duration::from_secs(30));
+        assert_eq!(snap.state, JobState::Cancelled);
+        assert!(snap.result.is_none(), "cancelled jobs publish no result");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn cancel_while_queued_never_runs() {
+        let mgr = JobManager::start(test_registry(), 1, None);
+        // saturate the single worker with a slow-ish job, then queue one
+        // more and cancel it before it starts
+        let blocker = mgr.submit(spec("cv-lr")).unwrap();
+        let victim = mgr.submit(spec("bic")).unwrap();
+        assert_eq!(mgr.cancel(victim), Some(JobState::Cancelled));
+        let snap = wait_terminal(&mgr, victim, Duration::from_secs(10));
+        assert_eq!(snap.state, JobState::Cancelled);
+        assert_eq!(snap.sweeps, 0, "a queue-cancelled job never swept");
+        let _ = mgr.cancel(blocker);
+        wait_terminal(&mgr, blocker, Duration::from_secs(60));
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_quickly() {
+        let mgr = JobManager::start(test_registry(), 2, None);
+        for _ in 0..4 {
+            mgr.submit(spec("bic")).unwrap();
+        }
+        mgr.shutdown();
+        assert!(mgr.submit(spec("bic")).is_err(), "no submissions after shutdown");
+        for id in mgr.job_ids() {
+            let snap = mgr.snapshot(id).unwrap();
+            assert!(snap.state.is_terminal(), "job {id} left in {:?}", snap.state);
+        }
+    }
+}

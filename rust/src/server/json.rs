@@ -1,0 +1,476 @@
+//! Hand-rolled, strictly-validating JSON for the wire layer (serde is
+//! unavailable offline; see `util`'s module docs).
+//!
+//! The parser is a recursive-descent reader over bytes with a depth
+//! limit; it enforces the RFC 8259 grammar — strict number syntax (no
+//! leading zeros, no bare `.5`/`1.`), `\uXXXX` escapes with surrogate
+//! pairing, unescaped control characters rejected, exactly one value
+//! per document (trailing garbage is an error). The encoder emits keys
+//! in insertion order, so responses are deterministic and `encode ∘
+//! parse ∘ encode` is the identity (f64 `Display` prints the shortest
+//! decimal that round-trips, pinned by `tests/prop_json.rs`).
+
+use anyhow::{bail, Result};
+
+/// Maximum nesting depth accepted by the parser.
+const MAX_DEPTH: usize = 64;
+
+/// A JSON value. Objects preserve insertion order (the wire layer wants
+/// deterministic responses, and duplicate keys are rejected at parse).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Always finite; the encoder writes non-finite values as `null`.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience string constructor.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Convenience object constructor from (key, value) pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as a non-negative integer (None if fractional,
+    /// negative, or too large for exact f64 representation).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= 2f64.powi(53) => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Serialize (compact, deterministic field order).
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // f64 Display prints the shortest decimal that
+                    // parses back to the same bits
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_string(s, out),
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse exactly one JSON document (leading/trailing whitespace
+/// allowed, anything else after the value is an error).
+pub fn parse(text: &str) -> Result<Json> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("json: trailing garbage at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("json: expected `{}` at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("json: invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("json: nesting deeper than {MAX_DEPTH}");
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => bail!("json: unexpected byte `{}` at {}", c as char, self.pos),
+            None => bail!("json: unexpected end of input"),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => bail!("json: expected `,` or `]` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut kvs: Vec<(String, Json)> = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            if kvs.iter().any(|(existing, _)| *existing == k) {
+                bail!("json: duplicate key `{k}`");
+            }
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value(depth + 1)?;
+            kvs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kvs));
+                }
+                _ => bail!("json: expected `,` or `}}` at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let b = match self.peek() {
+                Some(b) => b,
+                None => bail!("json: unterminated string"),
+            };
+            self.pos += 1;
+            match b {
+                b'"' => break,
+                b'\\' => {
+                    let esc = match self.peek() {
+                        Some(e) => e,
+                        None => bail!("json: unterminated escape"),
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'b' => out.push(0x08),
+                        b'f' => out.push(0x0c),
+                        b'n' => out.push(b'\n'),
+                        b'r' => out.push(b'\r'),
+                        b't' => out.push(b'\t'),
+                        b'u' => {
+                            let c = self.unicode_escape()?;
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(c.encode_utf8(&mut buf).as_bytes());
+                        }
+                        _ => bail!("json: invalid escape `\\{}` at byte {}", esc as char, self.pos),
+                    }
+                }
+                c if c < 0x20 => {
+                    bail!("json: unescaped control character at byte {}", self.pos - 1)
+                }
+                c => out.push(c),
+            }
+        }
+        // the input is &str, splits happen only at ASCII delimiters and
+        // decoded escapes are written as UTF-8, so this cannot fail
+        Ok(String::from_utf8(out).expect("utf-8 preserved"))
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.bytes.len() {
+            bail!("json: truncated \\u escape");
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .ok()
+            .filter(|s| s.chars().all(|c| c.is_ascii_hexdigit()));
+        let s = match s {
+            Some(s) => s,
+            None => bail!("json: invalid \\u escape at byte {}", self.pos),
+        };
+        self.pos += 4;
+        Ok(u32::from_str_radix(s, 16).expect("validated hex"))
+    }
+
+    fn unicode_escape(&mut self) -> Result<char> {
+        let hi = self.hex4()?;
+        if (0xD800..0xDC00).contains(&hi) {
+            // high surrogate: require a paired \uDC00..DFFF low half
+            if self.peek() != Some(b'\\') {
+                bail!("json: lone high surrogate at byte {}", self.pos);
+            }
+            self.pos += 1;
+            if self.peek() != Some(b'u') {
+                bail!("json: lone high surrogate at byte {}", self.pos);
+            }
+            self.pos += 1;
+            let lo = self.hex4()?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                bail!("json: invalid low surrogate at byte {}", self.pos);
+            }
+            let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            char::from_u32(cp).ok_or_else(|| anyhow::anyhow!("json: invalid surrogate pair"))
+        } else if (0xDC00..0xE000).contains(&hi) {
+            bail!("json: lone low surrogate at byte {}", self.pos)
+        } else {
+            char::from_u32(hi).ok_or_else(|| anyhow::anyhow!("json: invalid code point"))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // integer part: `0` or [1-9][0-9]* (strict: no leading zeros)
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            _ => bail!("json: invalid number at byte {start}"),
+        }
+        if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            bail!("json: leading zero in number at byte {start}");
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                bail!("json: digits required after `.` at byte {}", self.pos);
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                bail!("json: digits required in exponent at byte {}", self.pos);
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number");
+        let x: f64 = text.parse().map_err(|_| anyhow::anyhow!("json: bad number `{text}`"))?;
+        if !x.is_finite() {
+            bail!("json: number out of range `{text}`");
+        }
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: &Json) {
+        let enc = v.encode();
+        let back = parse(&enc).unwrap_or_else(|e| panic!("parse of {enc:?} failed: {e}"));
+        assert_eq!(&back, v, "roundtrip of {enc:?}");
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        for v in [
+            Json::Null,
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::Num(0.0),
+            Json::Num(-1.5),
+            Json::Num(1e-9),
+            Json::Num(123456789.25),
+            Json::str(""),
+            Json::str("hello \"world\"\n\t\\ ünïcode ✓"),
+            Json::str("\u{0}\u{1f}"),
+        ] {
+            roundtrip(&v);
+        }
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        let v = Json::obj(vec![
+            ("id", Json::Num(3.0)),
+            ("tags", Json::Arr(vec![Json::str("a"), Json::Null, Json::Bool(false)])),
+            ("nested", Json::obj(vec![("x", Json::Arr(vec![]))])),
+        ]);
+        roundtrip(&v);
+        assert_eq!(v.get("id").and_then(Json::as_u64), Some(3));
+        assert_eq!(v.get("nested").and_then(|n| n.get("x")).and_then(Json::as_arr), Some(&[][..]));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn parses_whitespace_and_escapes() {
+        let v = parse(" { \"a\" : [ 1 , \"\\u0041\\ud83d\\ude00\" ] } \n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].as_str(), Some("A😀"));
+    }
+
+    #[test]
+    fn strict_rejections() {
+        for bad in [
+            "", "{", "[1,", "01", "1.", ".5", "+1", "--1", "1e", "nul", "tru", "[1 2]",
+            "{\"a\" 1}", "{\"a\":1,}", "[1,]", "\"\\x\"", "\"unterminated", "\"\u{1}\"",
+            "{\"a\":1}x", "1 2", "\"\\ud800\"", "\"\\udc00\"", "\"\\ud800\\u0041\"", "1e999",
+            "{\"a\":1,\"a\":2}", "{1:2}",
+        ] {
+            assert!(parse(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_is_bounded() {
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(parse(&deep).is_err());
+        let ok = "[".repeat(30) + &"]".repeat(30);
+        assert!(parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn trailing_whitespace_ok() {
+        assert_eq!(parse("  42 \t").unwrap(), Json::Num(42.0));
+    }
+}

@@ -1,0 +1,510 @@
+//! The discovery server: a long-running process serving causal
+//! discovery as an HTTP/JSON API (`cvlr serve --port <p>`).
+//!
+//! Four parts, all std-only:
+//!
+//! * [`registry`] — named datasets: the paper's built-ins plus CSV
+//!   uploads with per-column continuous/discrete type inference;
+//! * [`jobs`] — the async job manager: submit/poll/cancel over a worker
+//!   pool, one memoizing [`coordinator::ScoreService`] per (dataset,
+//!   method, engine) so the score cache persists across jobs;
+//! * [`json`] — a strict, hand-rolled JSON encoder/parser;
+//! * [`http`] — a minimal HTTP/1.1 listener with graceful shutdown
+//!   (shutdown flag + connection drain) and a matching test client.
+//!
+//! [`coordinator::ScoreService`]: crate::coordinator::ScoreService
+//!
+//! ## Endpoints
+//!
+//! | Route | Meaning |
+//! |---|---|
+//! | `POST /v1/datasets` | register a CSV upload (`{"name", "csv", "header"?}`) or a parameterized built-in (`{"name", "builtin", "n"?, "seed"?}`) |
+//! | `GET /v1/datasets` | list registered datasets |
+//! | `DELETE /v1/datasets/{name}` | remove a dataset and retire its pooled services |
+//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "cache_capacity"?}` → `202 {"id", "state"}` (`workers`/`cache_capacity` configure the pooled service and only apply to the job that creates it) |
+//! | `GET /v1/jobs` | list job snapshots (without results) |
+//! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
+//! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
+//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions), datasets |
+//! | `POST /v1/shutdown` | graceful shutdown: stop accepting, drain, cancel jobs |
+//!
+//! Job states: `queued → running → done | failed | cancelled`.
+
+pub mod http;
+pub mod jobs;
+pub mod json;
+pub mod registry;
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{DiscoveryConfig, EngineKind};
+
+use self::http::{Handler, HttpServer, Request, Response};
+use self::jobs::{JobManager, JobResult, JobSnapshot, JobSpec};
+use self::json::Json;
+use self::registry::DatasetRegistry;
+
+/// Server configuration (`cvlr serve` flags map 1:1 onto this).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Port to bind on localhost (0 = ephemeral, for tests).
+    pub port: u16,
+    /// Job-manager worker threads (concurrent jobs).
+    pub job_workers: usize,
+    /// Default score-service worker threads per job.
+    pub score_workers: usize,
+    /// Default per-service score-cache bound. `None` disables the bound
+    /// — do that only for short-lived test servers.
+    pub cache_capacity: Option<usize>,
+    /// Sample count for the pre-registered built-in datasets.
+    pub builtin_n: usize,
+    /// Seed for the pre-registered built-in datasets.
+    pub seed: u64,
+    /// Artifacts directory handed to PJRT-engine jobs.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            port: 7878,
+            job_workers: 2,
+            score_workers: 1,
+            cache_capacity: Some(1 << 20),
+            builtin_n: 500,
+            seed: 0,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+/// A running discovery server. Dropping it (or [`Server::stop`])
+/// initiates shutdown; [`Server::wait`] blocks until a client asks for
+/// shutdown via `POST /v1/shutdown`.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    manager: Arc<JobManager>,
+    registry: Arc<DatasetRegistry>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, pre-register the built-ins, spawn the job workers and the
+    /// accept loop, and return immediately.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let registry = Arc::new(DatasetRegistry::with_builtins(cfg.builtin_n, cfg.seed));
+        let manager = JobManager::start(registry.clone(), cfg.job_workers, cfg.cache_capacity);
+        let listener = HttpServer::bind(cfg.port)?;
+        let addr = listener.addr();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handler = build_handler(manager.clone(), registry.clone(), shutdown.clone(), cfg);
+        let flag = shutdown.clone();
+        let accept = std::thread::Builder::new()
+            .name("cvlr-http".to_string())
+            .spawn(move || listener.run(handler, &flag))
+            .context("spawning accept loop")?;
+        Ok(Server { addr, shutdown, manager, registry, accept: Some(accept) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn manager(&self) -> &Arc<JobManager> {
+        &self.manager
+    }
+
+    pub fn registry(&self) -> &Arc<DatasetRegistry> {
+        &self.registry
+    }
+
+    /// Block until a client requests shutdown (`POST /v1/shutdown`),
+    /// then drain connections and stop the job workers.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.manager.shutdown();
+    }
+
+    /// Programmatic shutdown: stop accepting, drain, cancel jobs.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.manager.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.manager.shutdown();
+    }
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+/// Reject unknown object keys — typos fail loudly instead of being
+/// silently ignored.
+fn check_keys(body: &Json, allowed: &[&str]) -> Result<(), Response> {
+    if let Json::Obj(kvs) = body {
+        for (k, _) in kvs {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Response::error(
+                    400,
+                    &format!("unknown field `{k}` (allowed: {})", allowed.join(", ")),
+                ));
+            }
+        }
+        Ok(())
+    } else {
+        Err(Response::error(400, "body must be a JSON object"))
+    }
+}
+
+fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
+    Json::obj(vec![
+        ("requests", num(st.requests)),
+        ("cache_hits", num(st.cache_hits)),
+        ("evaluations", num(st.evaluations)),
+        ("dedup_skips", num(st.dedup_skips)),
+        ("batches", num(st.batches)),
+        ("max_batch", num(st.max_batch)),
+        ("evictions", num(st.evictions)),
+        ("cache_entries", num(st.cache_entries)),
+        ("eval_seconds", Json::Num(st.eval_seconds)),
+        ("consistent", Json::Bool(st.consistent())),
+    ])
+}
+
+fn result_json(res: &JobResult) -> Json {
+    let p = &res.cpdag;
+    let d = p.d;
+    let mut edges = Vec::new();
+    let mut adjacency = Vec::with_capacity(d);
+    for i in 0..d {
+        let mut row = Vec::with_capacity(d);
+        for j in 0..d {
+            // SHD-ready adjacency: directed i→j sets [i][j] only,
+            // undirected i—j sets both directions
+            let bit = p.directed(i, j) || p.undirected(i, j);
+            row.push(Json::Num(if bit { 1.0 } else { 0.0 }));
+            if p.directed(i, j) {
+                edges.push(Json::obj(vec![
+                    ("from", num(i as u64)),
+                    ("to", num(j as u64)),
+                    ("directed", Json::Bool(true)),
+                ]));
+            } else if i < j && p.undirected(i, j) {
+                edges.push(Json::obj(vec![
+                    ("from", num(i as u64)),
+                    ("to", num(j as u64)),
+                    ("directed", Json::Bool(false)),
+                ]));
+            }
+        }
+        adjacency.push(Json::Arr(row));
+    }
+    let mut fields = vec![
+        ("method", Json::str(res.method.clone())),
+        ("seconds", Json::Num(res.seconds)),
+        ("num_vars", num(d as u64)),
+        ("num_edges", num(res.cpdag.num_edges() as u64)),
+        ("edges", Json::Arr(edges)),
+        ("adjacency", Json::Arr(adjacency)),
+    ];
+    if let Some(st) = &res.stats {
+        fields.push(("stats", stats_json(st)));
+    }
+    if let Some(ci) = res.ci_tests {
+        fields.push(("ci_tests", num(ci)));
+    }
+    Json::obj(fields)
+}
+
+/// Job snapshot as wire JSON; `with_result` is false in list views.
+fn job_json(snap: &JobSnapshot, with_result: bool) -> Json {
+    let mut fields = vec![
+        ("id", num(snap.id)),
+        ("dataset", Json::str(snap.dataset.clone())),
+        ("method", Json::str(snap.method.clone())),
+        ("state", Json::str(snap.state.name())),
+        (
+            "progress",
+            Json::obj(vec![
+                ("sweeps", num(snap.sweeps)),
+                ("candidates", num(snap.candidates)),
+                ("requests", num(snap.requests)),
+                ("cache_hits", num(snap.cache_hits)),
+                ("evaluations", num(snap.evaluations)),
+                ("cache_hit_rate", Json::Num(snap.cache_hit_rate())),
+            ]),
+        ),
+    ];
+    if let Some(err) = &snap.error {
+        fields.push(("error", Json::str(err.clone())));
+    }
+    if with_result {
+        if let Some(res) = &snap.result {
+            fields.push(("result", result_json(res)));
+        }
+    }
+    Json::obj(fields)
+}
+
+fn post_dataset(registry: &DatasetRegistry, cfg: &ServerConfig, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(resp) = check_keys(&body, &["name", "csv", "header", "builtin", "n", "seed"]) {
+        return resp;
+    }
+    let name = match body.get("name").and_then(Json::as_str) {
+        Some(n) => n.to_string(),
+        None => return Response::error(400, "`name` (string) is required"),
+    };
+    let csv = body.get("csv").and_then(Json::as_str);
+    let builtin = body.get("builtin").and_then(Json::as_str);
+    let ds = match (csv, builtin) {
+        (Some(_), Some(_)) => {
+            return Response::error(400, "give either `csv` or `builtin`, not both")
+        }
+        (Some(text), None) => {
+            let header = body.get("header").and_then(Json::as_bool);
+            match registry::dataset_from_csv(text, header) {
+                Ok(ds) => ds,
+                Err(e) => return Response::error(400, &format!("{e:#}")),
+            }
+        }
+        (None, Some(b)) => {
+            let n = body.get("n").and_then(Json::as_u64).map(|v| v as usize);
+            let seed = body.get("seed").and_then(Json::as_u64);
+            match registry::builtin_dataset(
+                b,
+                n.unwrap_or(cfg.builtin_n),
+                seed.unwrap_or(cfg.seed),
+            ) {
+                Some(ds) => ds,
+                None => {
+                    return Response::error(
+                        400,
+                        &format!(
+                            "unknown builtin `{b}` (available: {})",
+                            registry::BUILTIN_NAMES.join(", ")
+                        ),
+                    )
+                }
+            }
+        }
+        (None, None) => return Response::error(400, "`csv` or `builtin` is required"),
+    };
+    let ds = Arc::new(ds);
+    let replaced = match registry.insert(&name, ds.clone()) {
+        Ok(r) => r,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let vars: Vec<Json> = ds
+        .vars
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("name", Json::str(v.name.clone())),
+                ("discrete", Json::Bool(v.discrete)),
+                ("cardinality", num(v.cardinality as u64)),
+            ])
+        })
+        .collect();
+    Response::json(
+        201,
+        &Json::obj(vec![
+            ("name", Json::str(name)),
+            ("n", num(ds.n() as u64)),
+            ("d", num(ds.d() as u64)),
+            ("replaced", Json::Bool(replaced)),
+            ("vars", Json::Arr(vars)),
+        ]),
+    )
+}
+
+fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(resp) =
+        check_keys(&body, &["dataset", "method", "engine", "workers", "cache_capacity"])
+    {
+        return resp;
+    }
+    let dataset = match body.get("dataset").and_then(Json::as_str) {
+        Some(d) => d.to_string(),
+        None => return Response::error(400, "`dataset` (string) is required"),
+    };
+    let method = match body.get("method").and_then(Json::as_str) {
+        Some(m) => m.to_string(),
+        None => return Response::error(400, "`method` (string) is required"),
+    };
+    let engine = match body.get("engine").and_then(Json::as_str) {
+        None | Some("native") => EngineKind::Native,
+        Some("pjrt") => EngineKind::Pjrt,
+        Some(e) => return Response::error(400, &format!("unknown engine `{e}` (native|pjrt)")),
+    };
+    let mut dcfg = DiscoveryConfig {
+        engine,
+        workers: cfg.score_workers,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        ..Default::default()
+    };
+    if let Some(w) = body.get("workers").and_then(Json::as_u64) {
+        dcfg.workers = w as usize;
+    }
+    if let Some(c) = body.get("cache_capacity").and_then(Json::as_u64) {
+        dcfg.cache_capacity = Some(c as usize);
+    }
+    match manager.submit(JobSpec { dataset, method, cfg: dcfg }) {
+        Ok(id) => Response::json(
+            202,
+            &Json::obj(vec![("id", num(id)), ("state", Json::str("queued"))]),
+        ),
+        Err(e) => Response::error(400, &format!("{e:#}")),
+    }
+}
+
+fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
+    let jobs = Json::Obj(
+        manager
+            .state_counts()
+            .into_iter()
+            .map(|(s, c)| (s.name().to_string(), num(c)))
+            .collect(),
+    );
+    let services: Vec<Json> = manager
+        .service_stats()
+        .into_iter()
+        .map(|((dataset, version, method, engine), st)| {
+            Json::obj(vec![
+                ("dataset", Json::str(dataset)),
+                ("dataset_version", num(version)),
+                ("method", Json::str(method)),
+                ("engine", Json::str(engine)),
+                ("stats", stats_json(&st)),
+            ])
+        })
+        .collect();
+    let datasets: Vec<Json> = registry
+        .summaries()
+        .into_iter()
+        .map(|(name, n, d)| {
+            Json::obj(vec![("name", Json::str(name)), ("n", num(n as u64)), ("d", num(d as u64))])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("jobs", jobs),
+            ("services", Json::Arr(services)),
+            ("datasets", Json::Arr(datasets)),
+        ]),
+    )
+}
+
+/// Build the route table over the job manager + dataset registry.
+fn build_handler(
+    manager: Arc<JobManager>,
+    registry: Arc<DatasetRegistry>,
+    shutdown: Arc<AtomicBool>,
+    cfg: ServerConfig,
+) -> Handler {
+    Arc::new(move |req: &Request| -> Response {
+        let segs = req.segments();
+        match (req.method.as_str(), segs.as_slice()) {
+            ("POST", ["v1", "datasets"]) => post_dataset(&registry, &cfg, req),
+            ("GET", ["v1", "datasets"]) => {
+                let list: Vec<Json> = registry
+                    .summaries()
+                    .into_iter()
+                    .map(|(name, n, d)| {
+                        Json::obj(vec![
+                            ("name", Json::str(name)),
+                            ("n", num(n as u64)),
+                            ("d", num(d as u64)),
+                        ])
+                    })
+                    .collect();
+                Response::json(200, &Json::obj(vec![("datasets", Json::Arr(list))]))
+            }
+            ("DELETE", ["v1", "datasets", name]) => {
+                if registry.remove(name) {
+                    // retire the dataset's pooled services with it
+                    manager.drop_dataset_services(name);
+                    Response::json(
+                        200,
+                        &Json::obj(vec![
+                            ("name", Json::str(*name)),
+                            ("deleted", Json::Bool(true)),
+                        ]),
+                    )
+                } else {
+                    Response::error(404, &format!("no dataset `{name}`"))
+                }
+            }
+            ("POST", ["v1", "jobs"]) => post_job(&manager, &cfg, req),
+            ("GET", ["v1", "jobs"]) => {
+                let list: Vec<Json> = manager
+                    .job_ids()
+                    .into_iter()
+                    .filter_map(|id| manager.snapshot(id))
+                    .map(|s| job_json(&s, false))
+                    .collect();
+                Response::json(200, &Json::obj(vec![("jobs", Json::Arr(list))]))
+            }
+            ("GET", ["v1", "jobs", id]) => match id.parse::<u64>().ok() {
+                Some(id) => match manager.snapshot(id) {
+                    Some(snap) => Response::json(200, &job_json(&snap, true)),
+                    None => Response::error(404, &format!("no job {id}")),
+                },
+                None => Response::error(400, "job id must be an integer"),
+            },
+            ("DELETE", ["v1", "jobs", id]) => match id.parse::<u64>().ok() {
+                Some(id) => match manager.cancel(id) {
+                    Some(state) => Response::json(
+                        200,
+                        &Json::obj(vec![("id", num(id)), ("state", Json::str(state.name()))]),
+                    ),
+                    None => Response::error(404, &format!("no job {id}")),
+                },
+                None => Response::error(400, "job id must be an integer"),
+            },
+            ("GET", ["v1", "stats"]) => get_stats(&manager, &registry),
+            ("POST", ["v1", "shutdown"]) => {
+                shutdown.store(true, Ordering::SeqCst);
+                Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            }
+            ("GET", []) | ("GET", ["v1"]) => Response::json(
+                200,
+                &Json::obj(vec![
+                    ("service", Json::str("cvlr discovery server")),
+                    ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+                ]),
+            ),
+            (_, ["v1", "datasets"]) | (_, ["v1", "datasets", _]) | (_, ["v1", "jobs"])
+            | (_, ["v1", "jobs", _]) => Response::error(405, "method not allowed"),
+            _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
+        }
+    })
+}

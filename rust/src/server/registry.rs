@@ -1,0 +1,356 @@
+//! The dataset registry: named datasets a long-running server can
+//! score against — the paper's built-in workloads (synth / SACHS /
+//! CHILD / continuous-SACHS) plus CSV uploads ingested with per-column
+//! continuous/discrete type inference.
+//!
+//! The same ingestion path backs the CLI (`cvlr discover --data
+//! file.csv`), so file workloads behave identically with and without
+//! the server.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::synth::{generate, SynthConfig};
+use crate::data::{networks, Dataset};
+use crate::linalg::Mat;
+use crate::util::csv::parse_csv;
+
+/// Discrete-column inference cap: an all-integer column with more
+/// distinct levels than this is treated as continuous (an ID-like
+/// column is not a categorical variable).
+const MAX_INFERRED_LEVELS: usize = 20;
+
+/// Cap on distinct string levels for a categorical (non-numeric)
+/// column; beyond this the upload is rejected as ill-typed.
+const MAX_STRING_LEVELS: usize = 64;
+
+/// Materialize one of the paper's built-in workloads by name.
+pub fn builtin_dataset(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    match name {
+        "synth" => Some(generate(&SynthConfig { n, seed, ..Default::default() }).0),
+        "sachs" => {
+            let net = networks::sachs();
+            Some(networks::forward_sample(&net, n, seed))
+        }
+        "child" => {
+            let net = networks::child();
+            Some(networks::forward_sample(&net, n, seed))
+        }
+        "sachs-cont" => Some(networks::sachs_continuous(n, seed).0),
+        _ => None,
+    }
+}
+
+/// Names `builtin_dataset` understands.
+pub const BUILTIN_NAMES: [&str; 4] = ["synth", "sachs", "child", "sachs-cont"];
+
+/// Ingest CSV text into a [`Dataset`] with per-column type inference.
+///
+/// * `header`: `Some(true)`/`Some(false)` force the first row to be a
+///   header / data; `None` auto-detects (the first row is a header when
+///   some column is numeric in every body row but not in row one).
+/// * A column is **continuous** when every field parses as `f64`;
+///   it is **discrete** when additionally every value is a non-negative
+///   integer with at most [`MAX_INFERRED_LEVELS`] distinct levels.
+///   Non-numeric columns are categorical (discrete) with string levels.
+/// * Discrete levels are recoded to contiguous `0..k` codes (sorted by
+///   original value, so the coding is deterministic); continuous
+///   columns are z-score standardized, which stabilizes kernel widths
+///   (see [`Dataset::standardize`]).
+/// * Empty fields are rejected — there is no missing-data handling.
+pub fn dataset_from_csv(text: &str, header: Option<bool>) -> Result<Dataset> {
+    let rows = parse_csv(text)?;
+    if rows.is_empty() {
+        bail!("csv: no rows");
+    }
+    let arity = rows[0].len();
+    for (i, r) in rows.iter().enumerate() {
+        for (j, f) in r.iter().enumerate() {
+            if f.trim().is_empty() {
+                bail!(
+                    "csv: empty field at row {}, column {} (missing data is not supported)",
+                    i + 1,
+                    j + 1
+                );
+            }
+        }
+    }
+    let numeric = |s: &str| s.trim().parse::<f64>().ok().filter(|v| v.is_finite());
+
+    let has_header = match header {
+        Some(h) => h,
+        None => {
+            // header iff some column is numeric in every body row but
+            // not in the first row (needs at least one body row)
+            rows.len() > 1
+                && (0..arity).any(|j| {
+                    numeric(&rows[0][j]).is_none()
+                        && rows[1..].iter().all(|r| numeric(&r[j]).is_some())
+                })
+        }
+    };
+    let (names, body): (Vec<String>, &[Vec<String>]) = if has_header {
+        (rows[0].clone(), &rows[1..])
+    } else {
+        ((0..arity).map(|j| format!("X{}", j + 1)).collect(), &rows[..])
+    };
+    if body.is_empty() {
+        bail!("csv: header but no data rows");
+    }
+    let n = body.len();
+
+    let mut data = Mat::zeros(n, arity);
+    let mut discrete = vec![false; arity];
+    for j in 0..arity {
+        let parsed: Option<Vec<f64>> = body.iter().map(|r| numeric(&r[j])).collect();
+        // discrete iff every field is *formatted* as a non-negative
+        // integer ("1.0" reads as continuous, "1" as a level) with few
+        // distinct levels
+        let ints: Option<Vec<i64>> = body
+            .iter()
+            .map(|r| r[j].trim().parse::<i64>().ok().filter(|v| *v >= 0))
+            .collect();
+        let levels_of = |iv: &[i64]| {
+            let mut distinct = iv.to_vec();
+            distinct.sort_unstable();
+            distinct.dedup();
+            distinct
+        };
+        match (parsed, ints) {
+            (_, Some(iv)) if levels_of(&iv).len() <= MAX_INFERRED_LEVELS => {
+                let distinct = levels_of(&iv);
+                discrete[j] = true;
+                for (r, v) in iv.iter().enumerate() {
+                    // recode to contiguous 0..k (sorted by value)
+                    data[(r, j)] = distinct.binary_search(v).unwrap() as f64;
+                }
+            }
+            (Some(vals), _) => {
+                for (r, v) in vals.iter().enumerate() {
+                    data[(r, j)] = *v;
+                }
+            }
+            (None, _) => {
+                // categorical column: sorted distinct strings → codes
+                let mut levels: Vec<&str> = body.iter().map(|r| r[j].trim()).collect();
+                levels.sort_unstable();
+                levels.dedup();
+                if levels.len() > MAX_STRING_LEVELS {
+                    bail!(
+                        "csv: column `{}` has {} distinct string levels (max {MAX_STRING_LEVELS})",
+                        names[j],
+                        levels.len()
+                    );
+                }
+                discrete[j] = true;
+                for (r, row) in body.iter().enumerate() {
+                    let code = levels.binary_search(&row[j].trim()).unwrap();
+                    data[(r, j)] = code as f64;
+                }
+            }
+        }
+    }
+
+    let mut ds = Dataset::from_columns(data, &discrete);
+    for (v, name) in ds.vars.iter_mut().zip(names) {
+        v.name = name;
+    }
+    ds.standardize();
+    Ok(ds)
+}
+
+/// Read and ingest a CSV file from disk (the CLI `--data file.csv`
+/// path; same inference as server uploads).
+pub fn dataset_from_csv_file(path: &str, header: Option<bool>) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    dataset_from_csv(&text, header).map_err(|e| e.context(format!("ingesting {path}")))
+}
+
+/// Named datasets shared by every job of a server process. Each entry
+/// carries a registry-wide monotonic **version**, bumped on every
+/// insert/replace — consumers that cache per-dataset state (the job
+/// manager's score-service pool) key on (name, version) so a replaced
+/// dataset never serves stale caches.
+pub struct DatasetRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+struct RegistryInner {
+    datasets: HashMap<String, (Arc<Dataset>, u64)>,
+    next_version: u64,
+}
+
+impl DatasetRegistry {
+    /// Empty registry.
+    pub fn new() -> DatasetRegistry {
+        DatasetRegistry {
+            inner: Mutex::new(RegistryInner { datasets: HashMap::new(), next_version: 0 }),
+        }
+    }
+
+    /// Registry pre-loaded with the built-in workloads, each sampled at
+    /// `n` rows with `seed`.
+    pub fn with_builtins(n: usize, seed: u64) -> DatasetRegistry {
+        let reg = DatasetRegistry::new();
+        for name in BUILTIN_NAMES {
+            let ds = builtin_dataset(name, n, seed).expect("builtin");
+            reg.insert(name, Arc::new(ds)).expect("valid builtin name");
+        }
+        reg
+    }
+
+    /// Register (or replace) a dataset under `name`. Returns `true` when
+    /// an existing dataset was replaced. Names are restricted to
+    /// `[A-Za-z0-9._-]` so they embed cleanly in URLs and logs.
+    pub fn insert(&self, name: &str, ds: Arc<Dataset>) -> Result<bool> {
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || "._-".contains(c))
+        {
+            bail!("invalid dataset name `{name}` (use [A-Za-z0-9._-])");
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let version = inner.next_version;
+        inner.next_version += 1;
+        Ok(inner.datasets.insert(name.to_string(), (ds, version)).is_some())
+    }
+
+    /// Ingest CSV text and register it under `name`.
+    pub fn register_csv(
+        &self,
+        name: &str,
+        csv_text: &str,
+        header: Option<bool>,
+    ) -> Result<Arc<Dataset>> {
+        let ds = Arc::new(dataset_from_csv(csv_text, header)?);
+        self.insert(name, ds.clone())?;
+        Ok(ds)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<Dataset>> {
+        self.entry(name).map(|(ds, _)| ds)
+    }
+
+    /// Remove `name`; returns whether it existed. Running jobs keep
+    /// their own `Arc<Dataset>`; queued jobs on the name fail cleanly.
+    pub fn remove(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().datasets.remove(name).is_some()
+    }
+
+    /// The dataset plus its registration version (bumped on replace).
+    pub fn entry(&self, name: &str) -> Option<(Arc<Dataset>, u64)> {
+        self.inner.lock().unwrap().datasets.get(name).cloned()
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.inner.lock().unwrap().datasets.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// (name, samples, variables) summaries, sorted by name.
+    pub fn summaries(&self) -> Vec<(String, usize, usize)> {
+        let mut out: Vec<(String, usize, usize)> = self
+            .inner
+            .lock()
+            .unwrap()
+            .datasets
+            .iter()
+            .map(|(name, (ds, _))| (name.clone(), ds.n(), ds.d()))
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+impl Default for DatasetRegistry {
+    fn default() -> Self {
+        DatasetRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_with_header_types_and_names() {
+        let text = "height,group,label\n1.5,0,yes\n2.5,1,no\n3.5,0,yes\n";
+        let ds = dataset_from_csv(text, None).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.vars[0].name, "height");
+        assert!(!ds.vars[0].discrete, "floats are continuous");
+        assert!(ds.vars[1].discrete, "small-cardinality integers are discrete");
+        assert_eq!(ds.vars[1].cardinality, 2);
+        assert!(ds.vars[2].discrete, "strings are categorical");
+        assert_eq!(ds.vars[2].cardinality, 2);
+        // "no" < "yes" in sorted order → no=0, yes=1
+        assert_eq!(ds.block(2).data, vec![1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn csv_without_header_autodetects() {
+        let text = "1.0,2.0\n3.0,4.0\n";
+        let ds = dataset_from_csv(text, None).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.vars[0].name, "X1");
+    }
+
+    #[test]
+    fn discrete_levels_recode_contiguously() {
+        // levels {2, 5, 9} must become codes {0, 1, 2}
+        let text = "5\n2\n9\n2\n";
+        let ds = dataset_from_csv(text, Some(false)).unwrap();
+        assert!(ds.vars[0].discrete);
+        assert_eq!(ds.vars[0].cardinality, 3);
+        assert_eq!(ds.block(0).data, vec![1.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn high_cardinality_integers_are_continuous() {
+        let rows: Vec<String> = (0..40).map(|i| i.to_string()).collect();
+        let ds = dataset_from_csv(&rows.join("\n"), Some(false)).unwrap();
+        assert!(!ds.vars[0].discrete, "40 distinct integers is not categorical");
+    }
+
+    #[test]
+    fn empty_fields_rejected() {
+        assert!(dataset_from_csv("a,b\n1,\n", None).is_err());
+    }
+
+    #[test]
+    fn registry_roundtrip_and_validation() {
+        let reg = DatasetRegistry::new();
+        let ds = reg.register_csv("t1", "1.0,2.0\n3.0,4.0\n", Some(false)).unwrap();
+        assert_eq!(ds.d(), 2);
+        assert!(reg.get("t1").is_some());
+        assert!(reg.get("missing").is_none());
+        assert_eq!(reg.names(), vec!["t1"]);
+        assert!(reg.insert("bad name", ds).is_err());
+        assert_eq!(reg.summaries(), vec![("t1".to_string(), 2, 2)]);
+    }
+
+    #[test]
+    fn replacing_a_dataset_bumps_its_version() {
+        let reg = DatasetRegistry::new();
+        reg.register_csv("v", "1.0\n2.0\n", Some(false)).unwrap();
+        let (_, v1) = reg.entry("v").unwrap();
+        reg.register_csv("v", "3.0\n4.0\n", Some(false)).unwrap();
+        let (_, v2) = reg.entry("v").unwrap();
+        assert!(v2 > v1, "replacement must bump the version ({v1} → {v2})");
+    }
+
+    #[test]
+    fn builtins_materialize() {
+        let reg = DatasetRegistry::with_builtins(60, 0);
+        for name in BUILTIN_NAMES {
+            let ds = reg.get(name).unwrap();
+            assert_eq!(ds.n(), 60, "{name}");
+            assert!(ds.d() > 1, "{name}");
+        }
+    }
+}

@@ -1,9 +1,82 @@
-//! Minimal CSV + table writers for the bench harness (`results/*.csv`)
-//! and the paper-shaped console tables.
+//! Minimal CSV readers + writers: the bench harness (`results/*.csv`),
+//! the paper-shaped console tables, and the parser behind CSV dataset
+//! ingestion (`server::registry`, `cvlr discover --data file.csv`).
 
 use std::fs::{self, File};
 use std::io::{self, Write};
 use std::path::Path;
+
+use anyhow::bail;
+
+/// Parse CSV text into rows of string fields.
+///
+/// RFC-4180-lite: comma separator, `"`-quoted fields with `""` escapes
+/// (quoted fields may contain commas and newlines), `\n` or `\r\n` row
+/// endings. Blank lines are skipped; every remaining row must have the
+/// same arity. Errors on unterminated quotes or ragged rows.
+pub fn parse_csv(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut line_has_content = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                field.push(c);
+            }
+            continue;
+        }
+        match c {
+            '"' if field.is_empty() => {
+                in_quotes = true;
+                line_has_content = true;
+            }
+            ',' => {
+                row.push(std::mem::take(&mut field));
+                line_has_content = true;
+            }
+            '\r' | '\n' => {
+                if c == '\r' && chars.peek() == Some(&'\n') {
+                    chars.next();
+                }
+                if line_has_content || !field.is_empty() {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                line_has_content = false;
+            }
+            _ => {
+                field.push(c);
+                line_has_content = true;
+            }
+        }
+    }
+    if in_quotes {
+        bail!("csv: unterminated quoted field");
+    }
+    if line_has_content || !field.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    if let Some(first) = rows.first() {
+        let arity = first.len();
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != arity {
+                bail!("csv: row {} has {} fields, expected {arity}", i + 1, r.len());
+            }
+        }
+    }
+    Ok(rows)
+}
 
 /// A CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -107,6 +180,40 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,x\n2.5,y\n");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn parse_csv_basic() {
+        let rows = parse_csv("a,b\n1,2\n3,4\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["1", "2"], vec!["3", "4"]]);
+    }
+
+    #[test]
+    fn parse_csv_quotes_crlf_and_blank_lines() {
+        let rows = parse_csv("x,\"he said \"\"hi\"\"\"\r\n\r\n\"a,b\",2").unwrap();
+        assert_eq!(rows, vec![vec!["x", "he said \"hi\""], vec!["a,b", "2"]]);
+    }
+
+    #[test]
+    fn parse_csv_quoted_newline_inside_field() {
+        let rows = parse_csv("\"l1\nl2\",z\n").unwrap();
+        assert_eq!(rows, vec![vec!["l1\nl2", "z"]]);
+    }
+
+    #[test]
+    fn parse_csv_rejects_ragged_rows() {
+        assert!(parse_csv("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn parse_csv_rejects_unterminated_quote() {
+        assert!(parse_csv("\"oops\n").is_err());
+    }
+
+    #[test]
+    fn parse_csv_empty_text_is_empty() {
+        assert!(parse_csv("").unwrap().is_empty());
+        assert!(parse_csv("\n\n").unwrap().is_empty());
     }
 
     #[test]

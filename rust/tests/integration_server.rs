@@ -1,0 +1,354 @@
+//! Integration tests of the discovery server over real TCP: the full
+//! lifecycle (register CSV dataset → submit → poll progress → fetch
+//! result → cancel a second job mid-run → shutdown) plus a
+//! concurrent-client stress test asserting no deadlock and cross-job
+//! cache hits.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use cvlr::coordinator::register_score_method;
+use cvlr::score::{LocalScore, ScalarBackend};
+use cvlr::server::http::request;
+use cvlr::server::json::Json;
+use cvlr::server::{Server, ServerConfig};
+use cvlr::util::Pcg64;
+
+fn start_server(job_workers: usize) -> Server {
+    Server::start(ServerConfig {
+        port: 0, // ephemeral
+        job_workers,
+        builtin_n: 120,
+        cache_capacity: Some(1 << 18),
+        ..Default::default()
+    })
+    .expect("server starts")
+}
+
+/// A CSV chain a→b→c (continuous) plus an independent discrete column.
+fn chain_csv(n: usize) -> String {
+    let mut rng = Pcg64::new(7);
+    let mut s = String::from("a,b,c,grp\n");
+    for _ in 0..n {
+        let a = rng.normal();
+        let b = 1.3 * a + 0.3 * rng.normal();
+        let c = -1.1 * b + 0.3 * rng.normal();
+        let g = rng.below(3);
+        s.push_str(&format!("{a:.6},{b:.6},{c:.6},{g}\n"));
+    }
+    s
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
+    request(addr, "GET", path, None).expect("GET")
+}
+
+fn post(addr: SocketAddr, path: &str, body: Json) -> (u16, Json) {
+    request(addr, "POST", path, Some(&body)).expect("POST")
+}
+
+fn state_of(job: &Json) -> String {
+    job.get("state").and_then(Json::as_str).expect("state").to_string()
+}
+
+/// Poll until the job is terminal; panics on timeout.
+fn poll_until_terminal(addr: SocketAddr, id: u64, timeout: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (status, job) = get(addr, &format!("/v1/jobs/{id}"));
+        assert_eq!(status, 200, "{job:?}");
+        let state = state_of(&job);
+        if state == "done" || state == "failed" || state == "cancelled" {
+            return job;
+        }
+        assert!(t0.elapsed() < timeout, "job {id} stuck in `{state}`: {job:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn submit_job(addr: SocketAddr, dataset: &str, method: &str) -> u64 {
+    let (status, resp) = post(
+        addr,
+        "/v1/jobs",
+        Json::obj(vec![("dataset", Json::str(dataset)), ("method", Json::str(method))]),
+    );
+    assert_eq!(status, 202, "{resp:?}");
+    assert_eq!(resp.get("state").and_then(Json::as_str), Some("queued"));
+    resp.get("id").and_then(Json::as_u64).expect("job id")
+}
+
+#[test]
+fn full_lifecycle_over_tcp() {
+    // a deliberately slow score so cancellation reliably lands mid-run;
+    // rewards inserts so GES sweeps many times
+    register_score_method("it-slow", &[], |ds, _| {
+        struct Slow(std::sync::Arc<cvlr::data::Dataset>);
+        impl LocalScore for Slow {
+            fn local_score(&self, t: usize, p: &[usize]) -> f64 {
+                std::thread::sleep(Duration::from_millis(10));
+                t as f64 * 0.01 + p.len() as f64
+            }
+            fn num_vars(&self) -> usize {
+                self.0.d()
+            }
+        }
+        Ok(std::sync::Arc::new(ScalarBackend(Slow(ds))))
+    });
+
+    let server = start_server(2);
+    let addr = server.addr();
+
+    // --- register a CSV dataset, types inferred per column
+    let (status, reg) = post(
+        addr,
+        "/v1/datasets",
+        Json::obj(vec![("name", Json::str("chain")), ("csv", Json::str(chain_csv(400)))]),
+    );
+    assert_eq!(status, 201, "{reg:?}");
+    assert_eq!(reg.get("n").and_then(Json::as_u64), Some(400));
+    assert_eq!(reg.get("d").and_then(Json::as_u64), Some(4));
+    let vars = reg.get("vars").and_then(Json::as_arr).expect("vars");
+    assert_eq!(vars[0].get("name").and_then(Json::as_str), Some("a"));
+    assert_eq!(vars[0].get("discrete").and_then(Json::as_bool), Some(false));
+    assert_eq!(vars[3].get("discrete").and_then(Json::as_bool), Some(true));
+    assert_eq!(vars[3].get("cardinality").and_then(Json::as_u64), Some(3));
+
+    // --- submit a discovery job and poll it to completion
+    let id = submit_job(addr, "chain", "bic");
+    let job = poll_until_terminal(addr, id, Duration::from_secs(120));
+    assert_eq!(state_of(&job), "done", "{job:?}");
+    let progress = job.get("progress").expect("progress");
+    assert!(progress.get("sweeps").and_then(Json::as_u64).unwrap() > 0);
+    assert!(progress.get("candidates").and_then(Json::as_u64).unwrap() > 0);
+    let result = job.get("result").expect("done job carries a result");
+    let edges = result.get("edges").and_then(Json::as_arr).expect("edges");
+    assert!(!edges.is_empty(), "the chain has structure: {result:?}");
+    // SHD-ready adjacency: d×d 0/1 matrix; the a—b and b—c links exist
+    let adj = result.get("adjacency").and_then(Json::as_arr).expect("adjacency");
+    assert_eq!(adj.len(), 4);
+    let at = |i: usize, j: usize| adj[i].as_arr().unwrap()[j].as_f64().unwrap();
+    assert!(at(0, 1) + at(1, 0) > 0.0, "a—b missing: {result:?}");
+    assert!(at(1, 2) + at(2, 1) > 0.0, "b—c missing: {result:?}");
+    // service stats travel with the result, including eviction counters
+    let stats = result.get("stats").expect("score job carries stats");
+    assert_eq!(stats.get("consistent").and_then(Json::as_bool), Some(true));
+    assert!(stats.get("evictions").and_then(Json::as_f64).is_some());
+    assert!(stats.get("evaluations").and_then(Json::as_u64).unwrap() > 0);
+
+    // --- an identical job is served from the shared score cache
+    let id2 = submit_job(addr, "chain", "bic");
+    let job2 = poll_until_terminal(addr, id2, Duration::from_secs(120));
+    assert_eq!(state_of(&job2), "done");
+    let p2 = job2.get("progress").expect("progress");
+    assert_eq!(
+        p2.get("evaluations").and_then(Json::as_u64),
+        Some(0),
+        "identical job must re-evaluate nothing: {job2:?}"
+    );
+    assert!(p2.get("cache_hits").and_then(Json::as_u64).unwrap() > 0, "{job2:?}");
+
+    // --- cancel a slow job mid-run
+    let slow = submit_job(addr, "chain", "it-slow");
+    let t0 = Instant::now();
+    loop {
+        let (_, j) = get(addr, &format!("/v1/jobs/{slow}"));
+        let started = state_of(&j) == "running"
+            && j.get("progress").and_then(|p| p.get("candidates")).and_then(Json::as_u64).unwrap()
+                > 0;
+        if started {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "slow job never started: {j:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (status, cancel) =
+        request(addr, "DELETE", &format!("/v1/jobs/{slow}"), None).expect("DELETE");
+    assert_eq!(status, 200, "{cancel:?}");
+    let cancelled = poll_until_terminal(addr, slow, Duration::from_secs(60));
+    assert_eq!(state_of(&cancelled), "cancelled", "{cancelled:?}");
+    assert!(cancelled.get("result").is_none(), "cancelled job publishes no result");
+
+    // --- server-wide stats: jobs by state + per-service cache counters
+    let (status, stats) = get(addr, "/v1/stats");
+    assert_eq!(status, 200);
+    let jobs = stats.get("jobs").expect("job counts");
+    assert_eq!(jobs.get("done").and_then(Json::as_u64), Some(2));
+    assert_eq!(jobs.get("cancelled").and_then(Json::as_u64), Some(1));
+    let services = stats.get("services").and_then(Json::as_arr).expect("services");
+    let bic = services
+        .iter()
+        .find(|s| s.get("method").and_then(Json::as_str) == Some("bic"))
+        .expect("bic service pooled");
+    let st = bic.get("stats").expect("stats");
+    assert!(
+        st.get("cache_hits").and_then(Json::as_u64).unwrap() > 0,
+        "cross-job cache hits must show up in /v1/stats: {st:?}"
+    );
+    assert_eq!(st.get("consistent").and_then(Json::as_bool), Some(true));
+
+    // --- strict validation and routing errors
+    let (status, _) = get(addr, "/nope");
+    assert_eq!(status, 404);
+    let (status, e) = post(
+        addr,
+        "/v1/jobs",
+        Json::obj(vec![("dataset", Json::str("chain")), ("method", Json::str("nope"))]),
+    );
+    assert_eq!(status, 400, "{e:?}");
+    let (status, e) = post(
+        addr,
+        "/v1/jobs",
+        Json::obj(vec![
+            ("dataset", Json::str("chain")),
+            ("method", Json::str("bic")),
+            ("typo_field", Json::Bool(true)),
+        ]),
+    );
+    assert_eq!(status, 400, "unknown fields must be rejected: {e:?}");
+    let (status, _) =
+        request(addr, "DELETE", "/v1/jobs/999999", None).expect("DELETE unknown");
+    assert_eq!(status, 404);
+
+    // --- deleting a dataset retires it and its pooled services
+    let (status, del) =
+        request(addr, "DELETE", "/v1/datasets/chain", None).expect("DELETE dataset");
+    assert_eq!(status, 200, "{del:?}");
+    let (_, list) = get(addr, "/v1/datasets");
+    let names: Vec<&str> = list
+        .get("datasets")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|d| d.get("name").and_then(Json::as_str))
+        .collect();
+    assert!(!names.contains(&"chain"), "{list:?}");
+    let (status, e) = post(
+        addr,
+        "/v1/jobs",
+        Json::obj(vec![("dataset", Json::str("chain")), ("method", Json::str("bic"))]),
+    );
+    assert_eq!(status, 400, "jobs on a deleted dataset must fail at submit: {e:?}");
+    let (_, stats2) = get(addr, "/v1/stats");
+    let services2 = stats2.get("services").and_then(Json::as_arr).unwrap();
+    assert!(
+        services2.iter().all(|s| s.get("dataset").and_then(Json::as_str) != Some("chain")),
+        "pooled services must be retired with the dataset: {stats2:?}"
+    );
+    let (status, _) =
+        request(addr, "DELETE", "/v1/datasets/chain", None).expect("DELETE again");
+    assert_eq!(status, 404, "double delete is a 404");
+
+    // --- graceful shutdown over the wire
+    let (status, bye) = post(addr, "/v1/shutdown", Json::obj(vec![]));
+    assert_eq!(status, 200, "{bye:?}");
+    server.wait(); // returns once the accept loop drained and jobs stopped
+}
+
+#[test]
+fn concurrent_clients_stress() {
+    // slow method for the cancelling clients (same shape as `it-slow`,
+    // registered here so this test is self-contained)
+    register_score_method("stress-slow", &[], |ds, _| {
+        struct Slow(std::sync::Arc<cvlr::data::Dataset>);
+        impl LocalScore for Slow {
+            fn local_score(&self, t: usize, p: &[usize]) -> f64 {
+                std::thread::sleep(Duration::from_millis(4));
+                t as f64 * 0.01 + p.len() as f64
+            }
+            fn num_vars(&self) -> usize {
+                self.0.d()
+            }
+        }
+        Ok(std::sync::Arc::new(ScalarBackend(Slow(ds))))
+    });
+
+    let server = start_server(3);
+    let addr = server.addr();
+    let clients = 8;
+    let t0 = Instant::now();
+    let ids: Vec<u64> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            handles.push(scope.spawn(move || {
+                // overlapping workloads: everyone hammers the same
+                // (dataset, method) pair; even clients run a second
+                // method, odd clients cancel a slow job mid-run
+                let id = submit_job(addr, "synth", "bic");
+                if c % 2 == 0 {
+                    let id2 = submit_job(addr, "synth", "sc");
+                    let job2 = poll_until_terminal(addr, id2, Duration::from_secs(180));
+                    assert_eq!(state_of(&job2), "done", "client {c}: {job2:?}");
+                } else {
+                    // a private dataset per cancelling client keeps its
+                    // slow job's cache cold, so the cancel always lands
+                    // while work is still in flight
+                    let ds_name = format!("synth-c{c}");
+                    let (status, resp) = post(
+                        addr,
+                        "/v1/datasets",
+                        Json::obj(vec![
+                            ("name", Json::str(ds_name.clone())),
+                            ("builtin", Json::str("synth")),
+                            ("n", Json::Num(150.0)),
+                            ("seed", Json::Num(c as f64)),
+                        ]),
+                    );
+                    assert_eq!(status, 201, "client {c}: {resp:?}");
+                    let slow = submit_job(addr, &ds_name, "stress-slow");
+                    let t0 = Instant::now();
+                    loop {
+                        let (_, j) = get(addr, &format!("/v1/jobs/{slow}"));
+                        let candidates = j
+                            .get("progress")
+                            .and_then(|p| p.get("candidates"))
+                            .and_then(Json::as_u64)
+                            .unwrap();
+                        if state_of(&j) == "running" && candidates > 0 {
+                            break;
+                        }
+                        assert!(
+                            t0.elapsed() < Duration::from_secs(120),
+                            "client {c}: slow job never started: {j:?}"
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    let (status, _) = request(addr, "DELETE", &format!("/v1/jobs/{slow}"), None)
+                        .expect("DELETE");
+                    assert_eq!(status, 200);
+                    let jc = poll_until_terminal(addr, slow, Duration::from_secs(120));
+                    assert_eq!(state_of(&jc), "cancelled", "client {c}: {jc:?}");
+                }
+                let job = poll_until_terminal(addr, id, Duration::from_secs(180));
+                assert_eq!(state_of(&job), "done", "client {c}: {job:?}");
+                id
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    assert_eq!(ids.len(), clients);
+    assert!(t0.elapsed() < Duration::from_secs(300), "no deadlock under concurrency");
+
+    let (status, stats) = get(addr, "/v1/stats");
+    assert_eq!(status, 200);
+    let jobs = stats.get("jobs").expect("jobs");
+    let done = jobs.get("done").and_then(Json::as_u64).unwrap();
+    let cancelled = jobs.get("cancelled").and_then(Json::as_u64).unwrap();
+    assert_eq!(done as usize, clients + clients / 2, "{stats:?}");
+    assert_eq!(cancelled as usize, clients / 2, "{stats:?}");
+    // overlapping jobs on one pooled service ⇒ cross-job cache hits,
+    // and the stats identity survives concurrency
+    let services = stats.get("services").and_then(Json::as_arr).expect("services");
+    assert!(!services.is_empty());
+    for svc in services {
+        let st = svc.get("stats").expect("stats");
+        assert_eq!(st.get("consistent").and_then(Json::as_bool), Some(true), "{svc:?}");
+    }
+    let bic = services
+        .iter()
+        .find(|s| s.get("method").and_then(Json::as_str) == Some("bic"))
+        .expect("pooled bic service");
+    let hits = bic.get("stats").and_then(|s| s.get("cache_hits")).and_then(Json::as_u64).unwrap();
+    assert!(hits > 0, "8 identical jobs must share the cache: {bic:?}");
+
+    server.stop();
+}
