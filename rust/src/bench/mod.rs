@@ -12,6 +12,7 @@
 //! * rows go to stdout as a fixed-width table *and* to
 //!   `results/<bench>.csv` for plotting.
 
+use crate::server::json::Json;
 use crate::util::cli::Args;
 use crate::util::csv::{CsvWriter, Table};
 
@@ -54,15 +55,25 @@ impl BenchConfig {
     }
 }
 
-/// Accumulates rows for stdout rendering and CSV output simultaneously.
+/// Accumulates rows for stdout rendering, CSV output, and the
+/// machine-readable `BENCH_<name>.json` trajectory artifact (what CI
+/// uploads per run, so bench results accumulate over the repo's
+/// history instead of evaporating with the job log).
 pub struct Report {
     table: Table,
     csv: CsvWriter,
+    name: String,
+    out_dir: String,
 }
 
 impl Report {
     pub fn new(cfg: &BenchConfig, name: &str, header: &[&str]) -> Report {
-        Report { table: Table::new(header), csv: cfg.csv(name, header) }
+        Report {
+            table: Table::new(header),
+            csv: cfg.csv(name, header),
+            name: name.to_string(),
+            out_dir: cfg.out_dir.clone(),
+        }
     }
 
     pub fn row(&mut self, fields: &[String]) {
@@ -70,10 +81,35 @@ impl Report {
         self.csv.row(fields).expect("csv write");
     }
 
-    /// Render the table to stdout.
+    /// Render the table to stdout and write the JSON twin.
     pub fn finish(self, title: &str) {
         println!("\n== {title} ==");
         println!("{}", self.table.render());
+        let path = format!("{}/BENCH_{}.json", self.out_dir, self.name);
+        if let Err(e) = std::fs::write(&path, self.to_json()) {
+            eprintln!("warn: could not write {path}: {e}");
+        } else {
+            println!("trajectory: {path}");
+        }
+    }
+
+    /// `{"bench": ..., "header": [...], "rows": [[...], ...]}`,
+    /// serialized through the server's strict JSON codec (one encoder
+    /// in the crate, property-tested in `tests/prop_json.rs`) straight
+    /// from the table's own storage.
+    fn to_json(&self) -> String {
+        let strs = |cells: &[String]| {
+            Json::Arr(cells.iter().map(|c| Json::str(c.clone())).collect())
+        };
+        let rows: Vec<Json> = self.table.data_rows().iter().map(|r| strs(r)).collect();
+        let mut out = Json::obj(vec![
+            ("bench", Json::str(self.name.clone())),
+            ("header", strs(self.table.header())),
+            ("rows", Json::Arr(rows)),
+        ])
+        .encode();
+        out.push('\n');
+        out
     }
 }
 
@@ -117,5 +153,10 @@ mod tests {
         rep.finish("unit");
         let body = std::fs::read_to_string(dir.join("unit.csv")).unwrap();
         assert_eq!(body.trim(), "a,b\n1,2");
+        let json = std::fs::read_to_string(dir.join("BENCH_unit.json")).unwrap();
+        assert_eq!(
+            json.trim(),
+            r#"{"bench":"unit","header":["a","b"],"rows":[["1","2"]]}"#
+        );
     }
 }

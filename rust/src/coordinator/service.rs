@@ -27,8 +27,9 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
+use crate::graph::Pdag;
 use crate::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
 
 type Key = (usize, Vec<usize>);
@@ -62,6 +63,9 @@ struct CacheInner {
     /// resident key at most once.
     ring: VecDeque<Key>,
     evictions: u64,
+    /// Entries removed by targeted invalidation (dataset appends) —
+    /// outside the request identity, like evictions.
+    invalidations: u64,
 }
 
 /// The single score memo layer, owned by [`ScoreService`].
@@ -95,6 +99,7 @@ impl ScoreCache {
                 map: HashMap::new(),
                 ring: VecDeque::new(),
                 evictions: 0,
+                invalidations: 0,
             }),
             capacity,
             ready: Condvar::new(),
@@ -117,6 +122,35 @@ impl ScoreCache {
     /// Entries reclaimed by the second-chance sweep so far.
     pub fn evictions(&self) -> u64 {
         self.inner.lock().unwrap().evictions
+    }
+
+    /// Entries removed by targeted invalidation so far.
+    pub fn invalidations(&self) -> u64 {
+        self.inner.lock().unwrap().invalidations
+    }
+
+    /// Targeted invalidation: drop every resident `Ready` entry that no
+    /// waiter is pinned to (the append path — every memoized score
+    /// depends on every sample row, so an append stales them all).
+    /// In-flight `Pending` claims are left alone: their owners fill and
+    /// wake waiters normally, they just describe the pre-append
+    /// snapshot — callers that need a hard barrier (the server) refuse
+    /// appends while jobs are running. Returns the number of entries
+    /// removed (also accumulated in [`ScoreCache::invalidations`]).
+    pub fn invalidate_all(&self) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        let mut removed = 0u64;
+        inner.map.retain(|_, slot| match slot {
+            Slot::Ready { waiters: 0, .. } => {
+                removed += 1;
+                false
+            }
+            _ => true,
+        });
+        let CacheInner { map, ring, .. } = &mut *inner;
+        ring.retain(|k| map.contains_key(k));
+        inner.invalidations += removed;
+        removed
     }
 
     /// Classify every key in ONE lock span, claiming unseen keys for
@@ -281,6 +315,12 @@ pub struct ServiceStats {
     /// Outside the request identity: an eviction turns a future request
     /// into a re-evaluation but is never itself a request.
     pub evictions: u64,
+    /// Entries dropped by targeted invalidation (dataset appends).
+    /// Outside the request identity, like evictions.
+    pub invalidations: u64,
+    /// Runs that warm-started from a stored CPDAG
+    /// ([`ScoreService::warm_start`] returning `Some`).
+    pub warm_start_hits: u64,
     /// Resident cache entries at snapshot time.
     pub cache_entries: u64,
     pub eval_seconds: f64,
@@ -297,9 +337,16 @@ impl ServiceStats {
 /// `ScoreBackend` itself, so the search is handed the service and never
 /// talks to a raw backend.
 pub struct ScoreService {
-    backend: Arc<dyn ScoreBackend>,
+    /// Swappable so a long-lived service can follow its dataset across
+    /// appends ([`ScoreService::replace_backend`]) without losing its
+    /// cache object, counters, or warm-start state.
+    backend: RwLock<Arc<dyn ScoreBackend>>,
     workers: usize,
     cache: ScoreCache,
+    /// Last discovered CPDAG, for warm-started re-discovery
+    /// ([`ScoreService::set_warm_start`] / [`ScoreService::warm_start`]).
+    warm: Mutex<Option<Pdag>>,
+    warm_hits: AtomicU64,
     requests: AtomicU64,
     hits: AtomicU64,
     evals: AtomicU64,
@@ -323,9 +370,11 @@ impl ScoreService {
         cache_capacity: Option<usize>,
     ) -> ScoreService {
         ScoreService {
-            backend,
+            backend: RwLock::new(backend),
             workers: workers.max(1),
             cache: ScoreCache::with_capacity(cache_capacity),
+            warm: Mutex::new(None),
+            warm_hits: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             evals: AtomicU64::new(0),
@@ -346,6 +395,39 @@ impl ScoreService {
         self.cache.len()
     }
 
+    /// Targeted invalidation of the memo layer (see
+    /// [`ScoreCache::invalidate_all`]): drops every unpinned cached
+    /// score, returns how many. Called after a dataset append, when
+    /// every memoized value is stale; counted in
+    /// [`ServiceStats::invalidations`].
+    pub fn invalidate_all(&self) -> u64 {
+        self.cache.invalidate_all()
+    }
+
+    /// Swap the backing score implementation (the appended-dataset
+    /// snapshot) while keeping the cache object, counters, and
+    /// warm-start state. The caller is responsible for invalidating
+    /// stale entries ([`ScoreService::invalidate_all`]).
+    pub fn replace_backend(&self, backend: Arc<dyn ScoreBackend>) {
+        *self.backend.write().unwrap() = backend;
+    }
+
+    /// Store the CPDAG a completed run produced, to warm-start the next
+    /// re-discovery on this service.
+    pub fn set_warm_start(&self, cpdag: Pdag) {
+        *self.warm.lock().unwrap() = Some(cpdag);
+    }
+
+    /// The stored warm-start CPDAG, if any. A `Some` return counts as a
+    /// warm-start hit in [`ServiceStats::warm_start_hits`].
+    pub fn warm_start(&self) -> Option<Pdag> {
+        let warm = self.warm.lock().unwrap().clone();
+        if warm.is_some() {
+            self.warm_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        warm
+    }
+
     /// Snapshot of the counters. The [`ServiceStats::consistent`]
     /// identity holds at quiescence; a snapshot taken while another
     /// thread is mid-batch can transiently observe `requests` ahead of
@@ -359,6 +441,8 @@ impl ScoreService {
             batches: self.batches.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
             evictions: self.cache.evictions(),
+            invalidations: self.cache.invalidations(),
+            warm_start_hits: self.warm_hits.load(Ordering::Relaxed),
             cache_entries: self.cache.len() as u64,
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
@@ -368,11 +452,11 @@ impl ScoreService {
     /// worker pool. Each worker submits its chunk as one sub-batch, so
     /// batch-aware backends amortize shared work within a chunk.
     fn evaluate(&self, misses: &[ScoreRequest]) -> Vec<f64> {
+        let backend = self.backend.read().unwrap().clone();
         if self.workers <= 1 || misses.len() <= 1 {
-            return self.backend.score_batch(misses);
+            return backend.score_batch(misses);
         }
         let chunk = misses.len().div_ceil(self.workers);
-        let backend = &self.backend;
         let mut out = vec![0.0; misses.len()];
         std::thread::scope(|scope| {
             let mut handles = vec![];
@@ -464,7 +548,7 @@ impl ScoreBackend for ScoreService {
     }
 
     fn num_vars(&self) -> usize {
-        self.backend.num_vars()
+        self.backend.read().unwrap().num_vars()
     }
 }
 
@@ -488,7 +572,8 @@ impl LocalScore for ScoreService {
                 self.evals.fetch_add(1, Ordering::Relaxed);
                 let guard = ClaimGuard::new(&self.cache, vec![key.clone()]);
                 let sw = crate::util::Stopwatch::start();
-                let v = self.backend.score_batch(std::slice::from_ref(&req))[0];
+                let backend = self.backend.read().unwrap().clone();
+                let v = backend.score_batch(std::slice::from_ref(&req))[0];
                 *self.eval_secs.lock().unwrap() += sw.secs();
                 self.cache.fill([(key, v)]);
                 guard.disarm();
@@ -498,7 +583,7 @@ impl LocalScore for ScoreService {
     }
 
     fn num_vars(&self) -> usize {
-        self.backend.num_vars()
+        self.backend.read().unwrap().num_vars()
     }
 }
 
@@ -670,6 +755,60 @@ mod tests {
         svc.local_score(1, &[]); // B was the victim
         let st = svc.stats();
         assert_eq!(st.evaluations, 4, "B was evicted: {st:?}");
+        assert!(st.consistent(), "{st:?}");
+    }
+
+    #[test]
+    fn invalidate_all_forces_reevaluation_and_counts() {
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1);
+        for t in 0..3 {
+            svc.local_score(t, &[]);
+        }
+        assert_eq!(svc.invalidate_all(), 3);
+        assert_eq!(svc.cache_len(), 0);
+        // same keys: all re-evaluated, none served stale
+        for t in 0..3 {
+            svc.local_score(t, &[]);
+        }
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 6, "{st:?}");
+        assert_eq!(st.invalidations, 3, "{st:?}");
+        assert!(st.consistent(), "identity must survive invalidation: {st:?}");
+    }
+
+    #[test]
+    fn warm_start_roundtrip_counts_hits() {
+        let svc = ScoreService::scalar(SlowScore { calls: AtomicUsize::new(0) }, 1);
+        assert!(svc.warm_start().is_none(), "no warm state initially");
+        assert_eq!(svc.stats().warm_start_hits, 0, "a miss is not a hit");
+        let mut p = crate::graph::Pdag::new(3);
+        p.add_directed(0, 1);
+        svc.set_warm_start(p.clone());
+        assert_eq!(svc.warm_start(), Some(p));
+        assert_eq!(svc.stats().warm_start_hits, 1);
+    }
+
+    #[test]
+    fn replace_backend_keeps_counters_and_serves_new_values() {
+        struct Fixed(f64);
+        impl LocalScore for Fixed {
+            fn local_score(&self, _: usize, _: &[usize]) -> f64 {
+                self.0
+            }
+            fn num_vars(&self) -> usize {
+                3
+            }
+        }
+        let svc = ScoreService::scalar(Fixed(1.0), 1);
+        assert_eq!(svc.local_score(0, &[]), 1.0);
+        svc.replace_backend(Arc::new(ScalarBackend(Fixed(2.0))));
+        // stale entry still cached until invalidated
+        assert_eq!(svc.local_score(0, &[]), 1.0);
+        svc.invalidate_all();
+        assert_eq!(svc.local_score(0, &[]), 2.0, "post-invalidate scores come from the new backend");
+        let st = svc.stats();
+        assert_eq!(st.evaluations, 2);
+        assert_eq!(st.cache_hits, 1);
         assert!(st.consistent(), "{st:?}");
     }
 

@@ -1,4 +1,12 @@
 //! The `Dataset` type shared by every score function and search algorithm.
+//!
+//! Datasets are **appendable**: [`Dataset::append_rows`] validates and
+//! folds new sample rows in place and bumps a monotonic row
+//! [`Dataset::version`], which is what lets factor and score caches
+//! detect staleness (see the `stream` module and the server's
+//! `POST /v1/datasets/{name}/rows`).
+
+use anyhow::bail;
 
 use crate::linalg::Mat;
 
@@ -22,9 +30,18 @@ pub struct Variable {
 pub struct Dataset {
     pub data: Mat,
     pub vars: Vec<Variable>,
+    /// Monotonic row version: 0 at construction, bumped by every
+    /// [`Dataset::append_rows`].
+    version: u64,
 }
 
 impl Dataset {
+    /// Build from an explicit sample matrix and variable layout
+    /// (`vars` block offsets must tile the columns of `data`).
+    pub fn new(data: Mat, vars: Vec<Variable>) -> Dataset {
+        Dataset { data, vars, version: 0 }
+    }
+
     /// Build from a matrix where each variable is a single column, with
     /// `discrete[i]` marking discrete columns.
     pub fn from_columns(data: Mat, discrete: &[bool]) -> Dataset {
@@ -50,12 +67,19 @@ impl Dataset {
                 }
             })
             .collect();
-        Dataset { data, vars }
+        Dataset::new(data, vars)
     }
 
     /// Number of samples.
     pub fn n(&self) -> usize {
         self.data.rows
+    }
+
+    /// Monotonic row version: bumped by every [`Dataset::append_rows`],
+    /// so factor/score caches built over a snapshot can detect
+    /// staleness.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Number of variables.
@@ -103,13 +127,108 @@ impl Dataset {
     }
 
     /// Restrict to the first `n` samples (for sample-size sweeps).
+    /// Keeps the full variable schema (names, discreteness,
+    /// cardinalities), so a head used to seed a streaming session never
+    /// re-codes levels when the remaining rows arrive.
     pub fn head(&self, n: usize) -> Dataset {
         assert!(n <= self.n());
         let mut data = Mat::zeros(n, self.data.cols);
         for r in 0..n {
             data.row_mut(r).copy_from_slice(self.data.row(r));
         }
-        Dataset { data, vars: self.vars.clone() }
+        Dataset::new(data, self.vars.clone())
+    }
+
+    /// Append sample rows in place (the streaming ingestion primitive).
+    ///
+    /// Validates before mutating anything: the column count must match,
+    /// every value must be finite, and discrete variables only accept
+    /// **contiguous** level codes — an existing code `0..k`, or exactly
+    /// `k` to introduce the next new level (which grows the
+    /// cardinality). Skipping codes is rejected: phantom states would
+    /// silently skew count-based scores like BDeu. Bumps
+    /// [`Dataset::version`] and returns the number of rows appended.
+    pub fn append_rows(&mut self, rows: &Mat) -> anyhow::Result<usize> {
+        if rows.cols != self.data.cols {
+            bail!(
+                "append: rows have {} columns, dataset has {}",
+                rows.cols,
+                self.data.cols
+            );
+        }
+        // validate against a working copy of the cardinalities so a
+        // chunk introducing several new levels stays contiguous row by
+        // row, and a failed append mutates nothing
+        let mut cards: Vec<usize> = self.vars.iter().map(|v| v.cardinality).collect();
+        for r in 0..rows.rows {
+            for (vi, v) in self.vars.iter().enumerate() {
+                for c in v.col_start..v.col_start + v.dim {
+                    let x = rows[(r, c)];
+                    if !x.is_finite() {
+                        bail!(
+                            "append: non-finite value `{x}` at row {}, column {} (`{}`)",
+                            r + 1,
+                            c + 1,
+                            v.name
+                        );
+                    }
+                    if !v.discrete {
+                        continue;
+                    }
+                    if x < 0.0 || x.fract() != 0.0 {
+                        bail!(
+                            "append: discrete variable `{}` needs a non-negative \
+                             integer level code, got `{x}` at row {}",
+                            v.name,
+                            r + 1
+                        );
+                    }
+                    let code = x as usize;
+                    if code > cards[vi] {
+                        bail!(
+                            "append: discrete variable `{}` got level code {code} at \
+                             row {} but has {} levels (codes are contiguous 0..k; \
+                             the next new level must be {})",
+                            v.name,
+                            r + 1,
+                            cards[vi],
+                            cards[vi]
+                        );
+                    }
+                    if code == cards[vi] {
+                        cards[vi] += 1;
+                    }
+                }
+            }
+        }
+        for (v, card) in self.vars.iter_mut().zip(cards) {
+            if v.discrete {
+                v.cardinality = card;
+            }
+        }
+        self.data.append_rows(rows);
+        self.version += 1;
+        Ok(rows.rows)
+    }
+
+    /// Extract the concatenated variable block (same column layout as
+    /// [`Dataset::block_multi`]) from an *external* row matrix laid out
+    /// like `self.data` — used to restrict an appended chunk to one
+    /// variable set without touching the stored samples.
+    pub fn rows_block_multi(&self, rows: &Mat, idxs: &[usize]) -> Mat {
+        assert_eq!(rows.cols, self.data.cols, "row layout mismatch");
+        let total: usize = idxs.iter().map(|&i| self.vars[i].dim).sum();
+        let mut out = Mat::zeros(rows.rows, total);
+        let mut c0 = 0;
+        for &i in idxs {
+            let v = &self.vars[i];
+            for r in 0..rows.rows {
+                out.row_mut(r)[c0..c0 + v.dim]
+                    .copy_from_slice(&rows.row(r)[v.col_start..v.col_start + v.dim]);
+            }
+            c0 += v.dim;
+        }
+        out
     }
 
     /// Z-score standardize continuous columns (in place); leaves discrete
@@ -183,6 +302,49 @@ mod tests {
         let h = ds.head(2);
         assert_eq!(h.n(), 2);
         assert_eq!(h.d(), 2);
+    }
+
+    #[test]
+    fn append_rows_validates_and_bumps_version() {
+        let mut ds = toy();
+        assert_eq!(ds.version(), 0);
+        let ok = Mat::from_rows(&[&[3.5, 2.0]]);
+        assert_eq!(ds.append_rows(&ok).unwrap(), 1);
+        assert_eq!(ds.n(), 4);
+        assert_eq!(ds.version(), 1);
+        // new top level 2 grows cardinality 2 → 3
+        assert_eq!(ds.vars[1].cardinality, 3);
+
+        // wrong arity
+        assert!(ds.append_rows(&Mat::from_rows(&[&[1.0]])).is_err());
+        // non-finite
+        assert!(ds.append_rows(&Mat::from_rows(&[&[f64::NAN, 0.0]])).is_err());
+        // fractional level code for a discrete variable
+        assert!(ds.append_rows(&Mat::from_rows(&[&[1.0, 0.5]])).is_err());
+        // negative level code
+        assert!(ds.append_rows(&Mat::from_rows(&[&[1.0, -1.0]])).is_err());
+        // non-contiguous level code (next new level must be 3, not 9)
+        assert!(ds.append_rows(&Mat::from_rows(&[&[1.0, 9.0]])).is_err());
+        // failed appends mutate nothing
+        assert_eq!(ds.n(), 4);
+        assert_eq!(ds.version(), 1);
+        assert_eq!(ds.vars[1].cardinality, 3);
+        // two new levels in one chunk stay contiguous (3 then 4)
+        assert_eq!(
+            ds.append_rows(&Mat::from_rows(&[&[0.0, 3.0], &[0.0, 4.0]])).unwrap(),
+            2
+        );
+        assert_eq!(ds.vars[1].cardinality, 5);
+    }
+
+    #[test]
+    fn rows_block_multi_matches_block_multi_layout() {
+        let ds = toy();
+        let ext = Mat::from_rows(&[&[9.0, 1.0], &[8.0, 0.0]]);
+        let b = ds.rows_block_multi(&ext, &[1, 0]);
+        assert_eq!(b.cols, 2);
+        assert_eq!(b.row(0), &[1.0, 9.0]);
+        assert_eq!(b.row(1), &[0.0, 8.0]);
     }
 
     #[test]

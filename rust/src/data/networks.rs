@@ -158,7 +158,7 @@ pub fn forward_sample(net: &DiscreteNetwork, n: usize, seed: u64) -> Dataset {
             cardinality: net.cards[i],
         })
         .collect();
-    Dataset { data, vars }
+    Dataset::new(data, vars)
 }
 
 /// Continuous SACHS substitute (App. B.3): nonlinear SEM over the SACHS

@@ -205,7 +205,7 @@ pub fn generate(cfg: &SynthConfig) -> (Dataset, Dag) {
             cardinality: card,
         });
     }
-    let mut ds = Dataset { data, vars };
+    let mut ds = Dataset::new(data, vars);
     ds.standardize();
     (ds, dag)
 }

@@ -62,6 +62,16 @@
 //! See `server`'s module docs for the endpoint table and
 //! `examples/serve_client.rs` for an end-to-end client.
 //!
+//! ## Streaming discovery
+//!
+//! The [`stream`] module opens the online workload: datasets append
+//! ([`data::Dataset::append_rows`]), low-rank factors extend
+//! incrementally in O(m²) per row instead of refactorizing
+//! ([`stream::FactorState`]), appends invalidate the memoized scores
+//! they stale, and re-discovery warm-starts from the previous CPDAG
+//! ([`stream::StreamingDiscovery`], `cvlr stream`, and the server's
+//! `POST /v1/datasets/{name}/rows` + `warm_start` job option).
+//!
 //! ## Three-layer architecture (see `DESIGN.md`)
 //!
 //! * **L3 (this crate)** — the coordinator: batched GES search, score
@@ -82,6 +92,7 @@ pub mod lowrank;
 pub mod score;
 pub mod graph;
 pub mod search;
+pub mod stream;
 pub mod ci;
 pub mod contopt;
 pub mod data;

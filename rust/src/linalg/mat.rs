@@ -231,6 +231,16 @@ impl Mat {
         out
     }
 
+    /// Append the rows of `other` in place (column counts must match).
+    /// Amortized O(rows · cols) of the appended block — the backing
+    /// storage grows like a `Vec`, which is what makes row streaming
+    /// cheap.
+    pub fn append_rows(&mut self, other: &Mat) {
+        assert_eq!(self.cols, other.cols, "append_rows: column count mismatch");
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
     /// Horizontal concatenation.
     pub fn hcat(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows);

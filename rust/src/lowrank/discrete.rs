@@ -31,6 +31,19 @@ pub fn distinct_rows(x: &Mat) -> Vec<usize> {
 /// pivot kernel matrix is singular to precision (then the caller should
 /// fall back to ICL).
 pub fn discrete_decomposition(k: Kernel, x: &Mat, pivots: &[usize]) -> Option<Mat> {
+    discrete_decomposition_detailed(k, x, pivots).map(|(lam, _)| lam)
+}
+
+/// [`discrete_decomposition`] plus the lower-triangular pivot factor L
+/// (`K_{X'} = L Lᵀ`) that the streaming layer retains: a new sample row
+/// folds into Λ by one forward substitution against L (O(m²)), and a
+/// new distinct value extends L by one row (O(m²)) — see
+/// `stream::append`.
+pub fn discrete_decomposition_detailed(
+    k: Kernel,
+    x: &Mat,
+    pivots: &[usize],
+) -> Option<(Mat, Mat)> {
     let xp = x.select_rows(pivots);
     // K_{X'} = L Lᵀ  (line 4) with a tiny jitter for numeric safety.
     let kp = gram(k, &xp);
@@ -39,7 +52,7 @@ pub fn discrete_decomposition(k: Kernel, x: &Mat, pivots: &[usize]) -> Option<Ma
     // i.e. Λᵀ = L⁻¹ K_{X'X}; forward-substitute L against K_{X'X}.
     let kxp = gram_cross(k, x, &xp); // n × m
     let lam_t = ch.forward_sub(&kxp.transpose()); // m × n  = L⁻¹ K_{X'X}
-    Some(lam_t.transpose())
+    Some((lam_t.transpose(), ch.l))
 }
 
 #[cfg(test)]

@@ -9,11 +9,34 @@
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 
+/// Detailed ICL output retaining what incremental row appends need
+/// (see `stream::append`): the pivot set in selection order and the
+/// terminal residual, alongside the factor itself. The pivot rows of
+/// `lambda` form a lower-triangular m×m block (in pivot order), which
+/// is exactly the back-substitution operator that folds a new sample
+/// into Λ in O(m²).
+pub struct IclFactor {
+    /// n × m factor in original row order.
+    pub lambda: Mat,
+    /// Original row indices of the pivots, in selection order.
+    pub pivots: Vec<usize>,
+    /// Residual trace Σ_j d_j at termination.
+    pub residual: f64,
+    /// True when the rank cap m₀ stopped the factorization before the
+    /// residual trace fell below η.
+    pub capped: bool,
+}
+
 /// Incomplete Cholesky factorization of the kernel matrix of `x`'s rows.
 ///
 /// * `eta` — stop once the residual trace Σ_j d_j falls below this;
 /// * `max_rank` — hard cap m₀ on the number of pivots.
 pub fn icl(k: Kernel, x: &Mat, eta: f64, max_rank: usize) -> Mat {
+    icl_detailed(k, x, eta, max_rank).lambda
+}
+
+/// [`icl`] plus the retained pivot/residual state (see [`IclFactor`]).
+pub fn icl_detailed(k: Kernel, x: &Mat, eta: f64, max_rank: usize) -> IclFactor {
     let n = x.rows;
     let m0 = max_rank.min(n);
     // Work in permuted coordinates: perm[i] is the original row index at
@@ -74,7 +97,13 @@ pub fn icl(k: Kernel, x: &Mat, eta: f64, max_rank: usize) -> Mat {
             out[(orig, c)] = lam[(pos, c)];
         }
     }
-    out
+    let residual: f64 = d[m..].iter().sum();
+    IclFactor {
+        lambda: out,
+        pivots: perm[..m].to_vec(),
+        residual,
+        capped: m == max_rank.min(n) && residual >= eta,
+    }
 }
 
 #[cfg(test)]

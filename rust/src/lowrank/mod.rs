@@ -14,8 +14,8 @@ pub mod discrete;
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 
-pub use discrete::{discrete_decomposition, distinct_rows};
-pub use icl::icl;
+pub use discrete::{discrete_decomposition, discrete_decomposition_detailed, distinct_rows};
+pub use icl::{icl, icl_detailed, IclFactor};
 
 /// Result of a low-rank factorization.
 pub struct LowRank {
@@ -25,6 +25,15 @@ pub struct LowRank {
     pub rank: usize,
     /// Which algorithm produced it.
     pub method: Method,
+    /// Row indices of the pivots in selection order (distinct rows for
+    /// Algorithm 2, greedy picks for Algorithm 1) — retained so the
+    /// factorization can be extended row by row (see `stream::append`).
+    pub pivots: Vec<usize>,
+    /// Residual trace ‖K − ΛΛᵀ‖ at termination (0 for Algorithm 2,
+    /// which is exact).
+    pub residual: f64,
+    /// True when ICL stopped at the rank cap with residual ≥ η.
+    pub capped: bool,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,15 +68,29 @@ pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> 
         if distinct.len() <= cfg.max_rank {
             if let Some(lambda) = discrete_decomposition(k, x, &distinct) {
                 let rank = lambda.cols;
-                return LowRank { lambda, rank, method: Method::Discrete };
+                return LowRank {
+                    lambda,
+                    rank,
+                    method: Method::Discrete,
+                    pivots: distinct,
+                    residual: 0.0,
+                    capped: false,
+                };
             }
             // fall through to ICL if the pivot kernel was numerically
             // singular (can happen with a degenerate kernel choice)
         }
     }
-    let lambda = icl(k, x, cfg.eta, cfg.max_rank);
-    let rank = lambda.cols;
-    LowRank { lambda, rank, method: Method::Icl }
+    let f = icl_detailed(k, x, cfg.eta, cfg.max_rank);
+    let rank = f.lambda.cols;
+    LowRank {
+        lambda: f.lambda,
+        rank,
+        method: Method::Icl,
+        pivots: f.pivots,
+        residual: f.residual,
+        capped: f.capped,
+    }
 }
 
 /// Center the factor: Λ̃ = H Λ (column-mean subtraction), so that

@@ -226,53 +226,73 @@ impl<K: CvLrKernel> CvLrScore<K> {
     }
 }
 
+/// Score one batch segment given an external factor source — the
+/// machinery shared by [`CvLrScore`] (whose factors come from its
+/// per-variable-set cache) and the streaming backend
+/// (`stream::StreamBackend`, whose factors come from incrementally
+/// maintained `FactorState`s). One centered (test, train) split per
+/// unique variable set per fold, shared by every candidate in the
+/// segment; per-request values are independent of how the caller
+/// segments its batches.
+pub fn score_segment_with<K: CvLrKernel>(
+    n: usize,
+    params: &CvParams,
+    backend: &K,
+    reqs: &[ScoreRequest],
+    factor_for: &mut dyn FnMut(&[usize]) -> Arc<Mat>,
+) -> Vec<f64> {
+    let folds = stride_folds(n, params.folds);
+
+    // Unique variable sets referenced by the batch: every target
+    // singleton plus every non-empty parent set.
+    let mut sets: Vec<Vec<usize>> = Vec::with_capacity(2 * reqs.len());
+    for r in reqs {
+        sets.push(vec![r.target]);
+        if !r.parents.is_empty() {
+            sets.push(r.parents.clone());
+        }
+    }
+    sets.sort_unstable();
+    sets.dedup();
+
+    // One centered (test, train) split per set per fold, shared by
+    // all candidates below.
+    let mut splits: HashMap<Vec<usize>, Vec<(Mat, Mat)>> = HashMap::with_capacity(sets.len());
+    for set in sets {
+        let lam = factor_for(&set);
+        let per_fold: Vec<(Mat, Mat)> =
+            folds.iter().map(|(test, train)| split_center(&lam, test, train)).collect();
+        splits.insert(set, per_fold);
+    }
+
+    let nfolds = folds.len() as f64;
+    reqs.iter()
+        .map(|r| {
+            let lx = &splits[&[r.target][..]];
+            if r.parents.is_empty() {
+                let fs: Vec<MargFold<'_>> =
+                    lx.iter().map(|(l0, l1)| MargFold { lx0: l0, lx1: l1 }).collect();
+                backend.score_marg_batch(&fs, params).iter().sum::<f64>() / nfolds
+            } else {
+                let lz = &splits[&r.parents[..]];
+                let fs: Vec<CondFold<'_>> = lx
+                    .iter()
+                    .zip(lz)
+                    .map(|((x0, x1), (z0, z1))| CondFold { lx0: x0, lx1: x1, lz0: z0, lz1: z1 })
+                    .collect();
+                backend.score_cond_batch(&fs, params).iter().sum::<f64>() / nfolds
+            }
+        })
+        .collect()
+}
+
 impl<K: CvLrKernel> CvLrScore<K> {
     /// One batch segment with fully shared per-set work (see
     /// `ScoreBackend::score_batch` below for the segmenting wrapper).
     fn score_segment(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
-        let folds = stride_folds(self.ds.n(), self.params.folds);
-
-        // Unique variable sets referenced by the batch: every target
-        // singleton plus every non-empty parent set.
-        let mut sets: Vec<Vec<usize>> = Vec::with_capacity(2 * reqs.len());
-        for r in reqs {
-            sets.push(vec![r.target]);
-            if !r.parents.is_empty() {
-                sets.push(r.parents.clone());
-            }
-        }
-        sets.sort_unstable();
-        sets.dedup();
-
-        // One centered (test, train) split per set per fold, shared by
-        // all candidates below.
-        let mut splits: HashMap<Vec<usize>, Vec<(Mat, Mat)>> = HashMap::with_capacity(sets.len());
-        for set in sets {
-            let lam = self.factor_for(&set);
-            let per_fold: Vec<(Mat, Mat)> =
-                folds.iter().map(|(test, train)| split_center(&lam, test, train)).collect();
-            splits.insert(set, per_fold);
-        }
-
-        let nfolds = folds.len() as f64;
-        reqs.iter()
-            .map(|r| {
-                let lx = &splits[&[r.target][..]];
-                if r.parents.is_empty() {
-                    let fs: Vec<MargFold<'_>> =
-                        lx.iter().map(|(l0, l1)| MargFold { lx0: l0, lx1: l1 }).collect();
-                    self.backend.score_marg_batch(&fs, &self.params).iter().sum::<f64>() / nfolds
-                } else {
-                    let lz = &splits[&r.parents[..]];
-                    let fs: Vec<CondFold<'_>> = lx
-                        .iter()
-                        .zip(lz)
-                        .map(|((x0, x1), (z0, z1))| CondFold { lx0: x0, lx1: x1, lz0: z0, lz1: z1 })
-                        .collect();
-                    self.backend.score_cond_batch(&fs, &self.params).iter().sum::<f64>() / nfolds
-                }
-            })
-            .collect()
+        score_segment_with(self.ds.n(), &self.params, &self.backend, reqs, &mut |set: &[usize]| {
+            self.factor_for(set)
+        })
     }
 }
 

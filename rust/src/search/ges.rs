@@ -130,14 +130,69 @@ fn best_candidate<B: ScoreBackend + ?Sized>(
 /// coordinator's `ScoreService` (memoized, worker-pooled); any
 /// [`ScoreBackend`] works, including `ScalarBackend`-wrapped scores.
 pub fn ges<B: ScoreBackend + ?Sized>(backend: &B, cfg: &GesConfig) -> GesResult {
+    ges_from(backend, cfg, None)
+}
+
+/// Run GES warm-started from `init` — the previous equivalence class of
+/// a streaming session or a server re-discovery after a dataset append.
+///
+/// * `init = None` (or a CPDAG with the wrong variable count) is
+///   exactly the historical cold run: one forward phase to convergence,
+///   then one backward phase.
+/// * With a warm start, the two phases **alternate until a full round
+///   applies no operator** (bounded by [`MAX_WARM_ROUNDS`]): shifted
+///   data may require deletes before new inserts become valid, which
+///   the single forward-then-backward pass of the cold run cannot
+///   express.
+pub fn ges_from<B: ScoreBackend + ?Sized>(
+    backend: &B,
+    cfg: &GesConfig,
+    init: Option<&Pdag>,
+) -> GesResult {
     let d = backend.num_vars();
-    let mut state = Pdag::new(d);
+    let warm = matches!(init, Some(p) if p.d == d);
+    let mut state = if warm { init.unwrap().clone() } else { Pdag::new(d) };
     let mut score_calls = 0usize;
     let mut batches = 0usize;
     let mut forward_steps = 0usize;
     let mut backward_steps = 0usize;
 
-    // ---------------- forward phase ----------------
+    let mut rounds = 0usize;
+    loop {
+        let f = forward_phase(backend, cfg, &mut state, &mut score_calls, &mut batches);
+        let b = backward_phase(backend, cfg, &mut state, &mut score_calls, &mut batches);
+        forward_steps += f;
+        backward_steps += b;
+        rounds += 1;
+        if !warm || (f == 0 && b == 0) || rounds >= MAX_WARM_ROUNDS {
+            break;
+        }
+    }
+
+    GesResult { cpdag: state, forward_steps, backward_steps, score_calls, batches }
+}
+
+/// Cap on warm-start forward/backward rounds. For a perfectly
+/// score-equivalent score each accepted operator strictly improves the
+/// total and the alternation terminates on its own; approximate scores
+/// (CV-LR local deltas after recompletion are not exactly
+/// equivalence-consistent) could in principle oscillate between two
+/// classes, so the rounds are bounded — the result at the cap is still
+/// a valid CPDAG, just not a local optimum of the alternation.
+const MAX_WARM_ROUNDS: usize = 8;
+
+/// Forward phase: repeatedly apply the best valid Insert until no
+/// operator clears `min_improvement`. Returns the number of operators
+/// applied.
+fn forward_phase<B: ScoreBackend + ?Sized>(
+    backend: &B,
+    cfg: &GesConfig,
+    state: &mut Pdag,
+    score_calls: &mut usize,
+    batches: &mut usize,
+) -> usize {
+    let d = state.d;
+    let mut steps = 0usize;
     loop {
         // collect every valid Insert(x, y, T) of this sweep
         let mut cands: Vec<Candidate> = vec![];
@@ -181,8 +236,8 @@ pub fn ges<B: ScoreBackend + ?Sized>(backend: &B, cfg: &GesConfig) -> GesResult 
             break;
         }
         // one wide batch per sweep
-        score_calls += 2 * cands.len();
-        batches += 1;
+        *score_calls += 2 * cands.len();
+        *batches += 1;
         match best_candidate(backend, &cands, true, cfg.min_improvement) {
             Some(i) => {
                 // apply Insert(x, y, T)
@@ -191,14 +246,27 @@ pub fn ges<B: ScoreBackend + ?Sized>(backend: &B, cfg: &GesConfig) -> GesResult 
                 for &t in &c.set {
                     state.orient(t, c.y);
                 }
-                state = recomplete(&state);
-                forward_steps += 1;
+                *state = recomplete(state);
+                steps += 1;
             }
             None => break,
         }
     }
+    steps
+}
 
-    // ---------------- backward phase ----------------
+/// Backward phase: repeatedly apply the best valid Delete until no
+/// operator clears `min_improvement`. Returns the number of operators
+/// applied.
+fn backward_phase<B: ScoreBackend + ?Sized>(
+    backend: &B,
+    cfg: &GesConfig,
+    state: &mut Pdag,
+    score_calls: &mut usize,
+    batches: &mut usize,
+) -> usize {
+    let d = state.d;
+    let mut steps = 0usize;
     loop {
         let mut cands: Vec<Candidate> = vec![];
         for y in 0..d {
@@ -225,8 +293,8 @@ pub fn ges<B: ScoreBackend + ?Sized>(backend: &B, cfg: &GesConfig) -> GesResult 
         if cands.is_empty() {
             break;
         }
-        score_calls += 2 * cands.len();
-        batches += 1;
+        *score_calls += 2 * cands.len();
+        *batches += 1;
         match best_candidate(backend, &cands, false, cfg.min_improvement) {
             Some(i) => {
                 // apply Delete(x, y, H)
@@ -240,14 +308,13 @@ pub fn ges<B: ScoreBackend + ?Sized>(backend: &B, cfg: &GesConfig) -> GesResult 
                         state.orient(c.x, h);
                     }
                 }
-                state = recomplete(&state);
-                backward_steps += 1;
+                *state = recomplete(state);
+                steps += 1;
             }
             None => break,
         }
     }
-
-    GesResult { cpdag: state, forward_steps, backward_steps, score_calls, batches }
+    steps
 }
 
 /// Re-complete a PDAG to the CPDAG of its equivalence class
@@ -372,6 +439,49 @@ mod tests {
         // a valid CPDAG has a consistent extension whose CPDAG is itself
         let dag = res.cpdag.to_dag().expect("CPDAG must extend to a DAG");
         assert_eq!(dag_to_cpdag(&dag), res.cpdag);
+    }
+
+    #[test]
+    fn warm_start_from_own_result_is_a_fixed_point() {
+        let ds = linear_chain_ds(800, 1);
+        let score = ScalarBackend(BicScore::new(ds));
+        let cold = ges(&score, &GesConfig::default());
+        let warm = ges_from(&score, &GesConfig::default(), Some(&cold.cpdag));
+        assert_eq!(warm.cpdag, cold.cpdag, "re-running from the optimum must not move");
+        assert_eq!(warm.forward_steps, 0);
+        assert_eq!(warm.backward_steps, 0);
+        assert!(
+            warm.score_calls < cold.score_calls,
+            "a warm fixed-point run sweeps less than the cold search \
+             ({} vs {})",
+            warm.score_calls,
+            cold.score_calls
+        );
+    }
+
+    #[test]
+    fn warm_start_with_wrong_dimension_falls_back_to_cold() {
+        let ds = linear_chain_ds(600, 7);
+        let score = ScalarBackend(BicScore::new(ds));
+        let cold = ges(&score, &GesConfig::default());
+        let stale = Pdag::new(9); // wrong variable count
+        let warm = ges_from(&score, &GesConfig::default(), Some(&stale));
+        assert_eq!(warm.cpdag, cold.cpdag);
+        assert_eq!(warm.forward_steps, cold.forward_steps);
+    }
+
+    #[test]
+    fn warm_start_repairs_a_stale_edge() {
+        // start from a graph wrongly claiming X4 depends on X1: the
+        // warm run must delete it and still find the chain
+        let ds = linear_chain_ds(800, 3);
+        let score = ScalarBackend(BicScore::new(ds));
+        let cold = ges(&score, &GesConfig::default());
+        let mut stale = cold.cpdag.clone();
+        stale.add_directed(0, 3);
+        let warm = ges_from(&score, &GesConfig::default(), Some(&stale));
+        assert_eq!(warm.cpdag, cold.cpdag, "warm start must repair the spurious edge");
+        assert!(warm.backward_steps >= 1, "the spurious edge is removed by a Delete");
     }
 
     #[test]

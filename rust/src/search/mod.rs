@@ -7,9 +7,49 @@
 //! * [`pc`] — the PC algorithm (constraint-based baseline, §7.1);
 //! * [`mmmb`] — max-min Markov-blanket search with symmetry correction
 //!   (constraint-based baseline, §7.1).
+//!
+//! Score-based searches are pluggable through [`SearchMethod`], whose
+//! [`SearchMethod::run_from`] hook is the **warm-start** entry point:
+//! streaming sessions and server re-discoveries start at the previous
+//! equivalence class instead of the empty graph.
 
 pub mod ges;
 pub mod pc;
 pub mod mmmb;
 
-pub use ges::{ges, GesConfig, GesResult};
+use crate::graph::Pdag;
+use crate::score::ScoreBackend;
+
+pub use ges::{ges, ges_from, GesConfig, GesResult};
+
+/// A pluggable score-based structure search.
+pub trait SearchMethod: Send + Sync {
+    /// Cold run from the empty graph.
+    fn run(&self, backend: &dyn ScoreBackend, cfg: &GesConfig) -> GesResult {
+        self.run_from(backend, cfg, None)
+    }
+
+    /// Run warm-started from `init` when given (implementations fall
+    /// back to a cold run when `init` is absent or its variable count
+    /// does not match the backend).
+    fn run_from(
+        &self,
+        backend: &dyn ScoreBackend,
+        cfg: &GesConfig,
+        init: Option<&Pdag>,
+    ) -> GesResult;
+}
+
+/// Batched GES as a [`SearchMethod`].
+pub struct GesSearch;
+
+impl SearchMethod for GesSearch {
+    fn run_from(
+        &self,
+        backend: &dyn ScoreBackend,
+        cfg: &GesConfig,
+        init: Option<&Pdag>,
+    ) -> GesResult {
+        ges_from(backend, cfg, init)
+    }
+}

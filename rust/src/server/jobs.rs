@@ -18,7 +18,7 @@
 //! sweep scores as an all-zero surface and terminates the search; the
 //! partial result is then discarded and the job reports `Cancelled`.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -29,9 +29,10 @@ use crate::coordinator::{
     resolve_method, run_named, score_backend_for, DiscoveryConfig, MethodKind, ScoreService,
     ServiceStats,
 };
+use crate::data::Dataset;
 use crate::graph::Pdag;
 use crate::score::{ScoreBackend, ScoreRequest};
-use crate::search::ges::ges;
+use crate::search::ges::ges_from;
 use crate::util::Stopwatch;
 
 use super::registry::DatasetRegistry;
@@ -93,6 +94,12 @@ pub struct JobSpec {
     pub dataset: String,
     pub method: String,
     pub cfg: DiscoveryConfig,
+    /// Start GES from the pooled service's last discovered CPDAG
+    /// (stored by every completed score job) instead of the empty
+    /// graph — the cheap re-discovery path after a dataset append.
+    /// Ignored by search-based methods; a cold run when no prior CPDAG
+    /// exists.
+    pub warm_start: bool,
 }
 
 /// Monotonic per-job progress, written by the score path mid-run.
@@ -170,10 +177,14 @@ impl JobSnapshot {
 // dataset under the same name can never hit a stale service/cache.
 type ServiceKey = (String, u64, String, String);
 
-/// A pooled service plus its LRU stamp (monotonic use counter).
+/// A pooled service plus its LRU stamp (monotonic use counter) and the
+/// config that built its backend (needed to rebuild the backend over an
+/// appended dataset snapshot — see
+/// [`JobManager::refresh_dataset_services`]).
 struct PoolEntry {
     service: Arc<ScoreService>,
     last_use: u64,
+    cfg: DiscoveryConfig,
 }
 
 /// The job manager: queue, worker pool, and the per-(dataset, method,
@@ -185,6 +196,12 @@ pub struct JobManager {
     queue_cv: Condvar,
     next_id: AtomicU64,
     services: Mutex<HashMap<ServiceKey, PoolEntry>>,
+    /// Datasets with an append in flight ([`JobManager::begin_append`]):
+    /// submissions against them are refused until the guard drops.
+    /// Lock order: `appending` before `jobs` — `submit` holds it across
+    /// the job-map insert, which is what makes the no-active-jobs check
+    /// and the append marker atomic with respect to each other.
+    appending: Mutex<HashSet<String>>,
     /// Monotonic counter stamping pool hits for LRU eviction.
     pool_clock: AtomicU64,
     shutdown: AtomicBool,
@@ -208,6 +225,7 @@ impl JobManager {
             queue_cv: Condvar::new(),
             next_id: AtomicU64::new(0),
             services: Mutex::new(HashMap::new()),
+            appending: Mutex::new(HashSet::new()),
             pool_clock: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             workers: Mutex::new(Vec::new()),
@@ -254,7 +272,20 @@ impl JobManager {
             result: Mutex::new(None),
             error: Mutex::new(None),
         });
-        self.jobs.lock().unwrap().insert(id, job);
+        {
+            // hold the append marker lock across the job-map insert so
+            // an append can never begin between this check and the job
+            // becoming visible to `has_active_jobs`
+            let appending = self.appending.lock().unwrap();
+            if appending.contains(&job.spec.dataset) {
+                return Err(super::TransientConflict(format!(
+                    "dataset `{}` has an append in progress; retry shortly",
+                    job.spec.dataset
+                ))
+                .into());
+            }
+            self.jobs.lock().unwrap().insert(id, job);
+        }
         self.queue.lock().unwrap().push_back(id);
         self.queue_cv.notify_one();
         Ok(id)
@@ -345,6 +376,80 @@ impl JobManager {
     /// is deleted from the registry). Running jobs keep their own Arc.
     pub fn drop_dataset_services(&self, dataset: &str) {
         self.services.lock().unwrap().retain(|k, _| k.0 != dataset);
+    }
+
+    /// Any queued or running job targeting `dataset`? Appends are
+    /// refused while this holds — swapping a service's backend mid-run
+    /// would mix row versions inside one sweep. Use
+    /// [`JobManager::begin_append`] for the race-free check.
+    pub fn has_active_jobs(&self, dataset: &str) -> bool {
+        self.jobs
+            .lock()
+            .unwrap()
+            .values()
+            .any(|j| j.spec.dataset == dataset && !j.state.lock().unwrap().is_terminal())
+    }
+
+    /// Atomically begin an append on `dataset`: fails while jobs on it
+    /// are queued/running, and marks the dataset so new submissions
+    /// (and concurrent appends) are refused until the returned guard
+    /// drops. Holding the marker lock across the active-jobs check —
+    /// the same lock `submit` holds across its job-map insert — closes
+    /// the check-then-swap race in both directions.
+    pub fn begin_append(&self, dataset: &str) -> Result<AppendGuard<'_>> {
+        let mut appending = self.appending.lock().unwrap();
+        if self.has_active_jobs(dataset) {
+            bail!("dataset `{dataset}` has queued/running jobs; wait before appending");
+        }
+        if !appending.insert(dataset.to_string()) {
+            bail!("dataset `{dataset}` already has an append in progress");
+        }
+        Ok(AppendGuard { mgr: self, dataset: dataset.to_string() })
+    }
+
+    /// Re-point every pooled service of `dataset` at an appended
+    /// snapshot: rebuild each backend over `ds` with the config that
+    /// created it, swap it in, and invalidate the now-stale memo
+    /// entries (counted in `ServiceStats::invalidations`). The service
+    /// objects — their counters **and their warm-start CPDAGs** —
+    /// survive, which is exactly what `warm_start` re-discovery jobs
+    /// reuse.
+    ///
+    /// Best-effort by design: a service whose backend cannot be rebuilt
+    /// (e.g. a PJRT entry with its artifacts gone) is **retired** from
+    /// the pool — the append has already committed, so keeping a stale
+    /// n-row backend reachable would silently serve pre-append results.
+    /// Returns the total number of invalidated entries.
+    pub fn refresh_dataset_services(&self, dataset: &str, ds: &Arc<Dataset>) -> u64 {
+        // collect matching entries first: backend factories may do real
+        // work (e.g. load PJRT artifacts) and must not run under the
+        // pool lock
+        let targets: Vec<(ServiceKey, DiscoveryConfig, Arc<ScoreService>)> = {
+            let services = self.services.lock().unwrap();
+            services
+                .iter()
+                .filter(|(k, _)| k.0 == dataset)
+                .map(|(k, e)| (k.clone(), e.cfg.clone(), e.service.clone()))
+                .collect()
+        };
+        let mut invalidated = 0u64;
+        for (key, cfg, svc) in targets {
+            match score_backend_for(&key.2, ds.clone(), &cfg) {
+                Ok((_, Some(backend))) => {
+                    svc.replace_backend(backend);
+                    invalidated += svc.invalidate_all();
+                }
+                // no rebuilt backend (factory failed, or the method was
+                // re-registered as search-based since the entry was
+                // pooled): the entry can only serve stale pre-append
+                // results — invalidate and retire it
+                Ok((_, None)) | Err(_) => {
+                    invalidated += svc.invalidate_all();
+                    self.services.lock().unwrap().remove(&key);
+                }
+            }
+        }
+        invalidated
     }
 
     /// Stop accepting jobs, cancel everything in flight, and join the
@@ -508,7 +613,11 @@ impl JobManager {
                             // jobs share one cache
                             services
                                 .entry(key)
-                                .or_insert_with(|| PoolEntry { service: svc, last_use: stamp() })
+                                .or_insert_with(|| PoolEntry {
+                                    service: svc,
+                                    last_use: stamp(),
+                                    cfg: spec.cfg.clone(),
+                                })
                                 .service
                                 .clone()
                         }
@@ -521,11 +630,15 @@ impl JobManager {
                     cancel: &job.cancel,
                     progress: &job.progress,
                 };
+                // warm start: resume from the service's last CPDAG (set
+                // by every completed score job on this pool entry)
+                let init = if spec.warm_start { service.warm_start() } else { None };
                 let sw = Stopwatch::start();
-                let res = ges(&backend, &spec.cfg.ges);
+                let res = ges_from(&backend, &spec.cfg.ges, init.as_ref());
                 if job.cancel.load(Ordering::SeqCst) {
                     return Ok(None);
                 }
+                service.set_warm_start(res.cpdag.clone());
                 Ok(Some(JobResult {
                     cpdag: res.cpdag,
                     seconds: sw.secs(),
@@ -553,6 +666,20 @@ impl JobManager {
                 }))
             }
         }
+    }
+}
+
+/// RAII marker for an in-flight dataset append
+/// ([`JobManager::begin_append`]): while alive, job submissions on the
+/// dataset are refused; dropping it re-opens the dataset.
+pub struct AppendGuard<'a> {
+    mgr: &'a JobManager,
+    dataset: String,
+}
+
+impl Drop for AppendGuard<'_> {
+    fn drop(&mut self) {
+        self.mgr.appending.lock().unwrap().remove(&self.dataset);
     }
 }
 
@@ -621,6 +748,7 @@ mod tests {
             dataset: "synth".to_string(),
             method: method.to_string(),
             cfg: DiscoveryConfig::default(),
+            warm_start: false,
         }
     }
 
@@ -712,6 +840,56 @@ mod tests {
         assert_eq!(snap.sweeps, 0, "a queue-cancelled job never swept");
         let _ = mgr.cancel(blocker);
         wait_terminal(&mgr, blocker, Duration::from_secs(60));
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn append_refresh_invalidates_and_warm_start_resumes() {
+        let reg = test_registry();
+        let mgr = JobManager::start(reg.clone(), 1, Some(1 << 16));
+        // cold job populates the pooled service's cache + warm CPDAG
+        let a = mgr.submit(spec("bic")).unwrap();
+        let snap_a = wait_terminal(&mgr, a, Duration::from_secs(60));
+        assert_eq!(snap_a.state, JobState::Done, "{:?}", snap_a.error);
+        assert!(!mgr.has_active_jobs("synth"), "terminal jobs are not active");
+
+        // append one row (internal coordinates) and refresh the pool
+        let ds0 = reg.get("synth").unwrap();
+        let row = crate::linalg::Mat::zeros(1, ds0.data.cols);
+        let (ds1, row_version) = {
+            // the race-free protocol: mark the append, mutate, refresh
+            let _guard = mgr.begin_append("synth").unwrap();
+            assert!(
+                mgr.submit(spec("bic")).is_err(),
+                "submissions must be refused while an append is in flight"
+            );
+            reg.append_rows("synth", &row).unwrap()
+        };
+        assert_eq!(row_version, 1);
+        let invalidated = mgr.refresh_dataset_services("synth", &ds1);
+        assert!(invalidated > 0, "the cold job's cache entries must be invalidated");
+
+        // warm_start re-discovery on the appended data: runs to done,
+        // re-evaluates (nothing stale served), and the service reports
+        // both counters
+        let mut warm = spec("bic");
+        warm.warm_start = true;
+        let b = mgr.submit(warm).unwrap();
+        let snap_b = wait_terminal(&mgr, b, Duration::from_secs(60));
+        assert_eq!(snap_b.state, JobState::Done, "{:?}", snap_b.error);
+        assert!(snap_b.evaluations > 0, "post-append scores must be re-evaluated");
+        let res = snap_b.result.as_ref().unwrap();
+        assert_eq!(
+            res.cpdag.num_edges(),
+            snap_a.result.as_ref().unwrap().cpdag.num_edges(),
+            "one appended row must not change the learned structure"
+        );
+        let services = mgr.service_stats();
+        assert_eq!(services.len(), 1, "the pool entry survived the append");
+        let st = &services[0].1;
+        assert!(st.invalidations > 0, "{st:?}");
+        assert!(st.warm_start_hits >= 1, "{st:?}");
+        assert!(st.consistent(), "{st:?}");
         mgr.shutdown();
     }
 

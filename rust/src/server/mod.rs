@@ -20,8 +20,9 @@
 //! |---|---|
 //! | `POST /v1/datasets` | register a CSV upload (`{"name", "csv", "header"?}`) or a parameterized built-in (`{"name", "builtin", "n"?, "seed"?}`) |
 //! | `GET /v1/datasets` | list registered datasets |
+//! | `POST /v1/datasets/{name}/rows` | append header-less CSV rows (`{"csv"}`) in the dataset's internal coordinates; refreshes (not retires) the pooled services, invalidating their stale score entries; `409` while jobs on the dataset are active |
 //! | `DELETE /v1/datasets/{name}` | remove a dataset and retire its pooled services |
-//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "cache_capacity"?}` → `202 {"id", "state"}` (`workers`/`cache_capacity` configure the pooled service and only apply to the job that creates it) |
+//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "cache_capacity"?, "warm_start"?}` → `202 {"id", "state"}` (`workers`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
 //! | `GET /v1/jobs` | list job snapshots (without results) |
 //! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
 //! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
@@ -158,6 +159,30 @@ fn num(x: u64) -> Json {
     Json::Num(x as f64)
 }
 
+/// Typed marker for transient conflicts (an append in flight, a CAS
+/// losing to a concurrent replace): the wire layer downcasts to map
+/// them to `409 Conflict` instead of `400 Bad Request`, so retry-aware
+/// clients behave correctly without fragile message matching.
+#[derive(Debug)]
+pub struct TransientConflict(pub String);
+
+impl std::fmt::Display for TransientConflict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for TransientConflict {}
+
+/// 409 for transient conflicts, `fallback` otherwise.
+fn conflict_status(e: &anyhow::Error, fallback: u16) -> u16 {
+    if e.is::<TransientConflict>() {
+        409
+    } else {
+        fallback
+    }
+}
+
 /// Reject unknown object keys — typos fail loudly instead of being
 /// silently ignored.
 fn check_keys(body: &Json, allowed: &[&str]) -> Result<(), Response> {
@@ -185,6 +210,8 @@ fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
         ("batches", num(st.batches)),
         ("max_batch", num(st.max_batch)),
         ("evictions", num(st.evictions)),
+        ("invalidations", num(st.invalidations)),
+        ("warm_start_hits", num(st.warm_start_hits)),
         ("cache_entries", num(st.cache_entries)),
         ("eval_seconds", Json::Num(st.eval_seconds)),
         ("consistent", Json::Bool(st.consistent())),
@@ -341,14 +368,72 @@ fn post_dataset(registry: &DatasetRegistry, cfg: &ServerConfig, req: &Request) -
     )
 }
 
+/// `POST /v1/datasets/{name}/rows` — append header-less CSV rows to a
+/// registered dataset. Values are interpreted in the dataset's internal
+/// coordinates (continuous columns in the registered/z-scored scale,
+/// discrete columns as 0-based level codes). Pooled services follow the
+/// appended snapshot in place: backends are swapped, stale score
+/// entries invalidated (`invalidations` in `/v1/stats`), and warm-start
+/// CPDAGs survive for `warm_start` re-discovery jobs. Refused with
+/// `409` while jobs on the dataset are queued/running — a mid-sweep
+/// backend swap would mix row versions.
+fn post_rows(
+    manager: &JobManager,
+    registry: &DatasetRegistry,
+    name: &str,
+    req: &Request,
+) -> Response {
+    let body = match req.json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(resp) = check_keys(&body, &["csv"]) {
+        return resp;
+    }
+    let csv = match body.get("csv").and_then(Json::as_str) {
+        Some(c) => c,
+        None => return Response::error(400, "`csv` (string) is required"),
+    };
+    let ds0 = match registry.get(name) {
+        Some(d) => d,
+        None => return Response::error(404, &format!("no dataset `{name}`")),
+    };
+    // atomic: refuses while jobs are active AND blocks new submissions
+    // (and concurrent appends) until the guard drops at return
+    let _guard = match manager.begin_append(name) {
+        Ok(g) => g,
+        Err(e) => return Response::error(409, &format!("{e:#}")),
+    };
+    let rows = match registry::rows_from_csv(&ds0, csv) {
+        Ok(r) => r,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let (ds, row_version) = match registry.append_rows(name, &rows) {
+        Ok(r) => r,
+        Err(e) => return Response::error(conflict_status(&e, 400), &format!("{e:#}")),
+    };
+    let invalidated = manager.refresh_dataset_services(name, &ds);
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("name", Json::str(name)),
+            ("appended", num(rows.rows as u64)),
+            ("n", num(ds.n() as u64)),
+            ("row_version", num(row_version)),
+            ("invalidated", num(invalidated)),
+        ]),
+    )
+}
+
 fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response {
     let body = match req.json() {
         Ok(b) => b,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
-    if let Err(resp) =
-        check_keys(&body, &["dataset", "method", "engine", "workers", "cache_capacity"])
-    {
+    if let Err(resp) = check_keys(
+        &body,
+        &["dataset", "method", "engine", "workers", "cache_capacity", "warm_start"],
+    ) {
         return resp;
     }
     let dataset = match body.get("dataset").and_then(Json::as_str) {
@@ -376,12 +461,13 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
     if let Some(c) = body.get("cache_capacity").and_then(Json::as_u64) {
         dcfg.cache_capacity = Some(c as usize);
     }
-    match manager.submit(JobSpec { dataset, method, cfg: dcfg }) {
+    let warm_start = body.get("warm_start").and_then(Json::as_bool).unwrap_or(false);
+    match manager.submit(JobSpec { dataset, method, cfg: dcfg, warm_start }) {
         Ok(id) => Response::json(
             202,
             &Json::obj(vec![("id", num(id)), ("state", Json::str("queued"))]),
         ),
-        Err(e) => Response::error(400, &format!("{e:#}")),
+        Err(e) => Response::error(conflict_status(&e, 400), &format!("{e:#}")),
     }
 }
 
@@ -448,6 +534,9 @@ fn build_handler(
                     .collect();
                 Response::json(200, &Json::obj(vec![("datasets", Json::Arr(list))]))
             }
+            ("POST", ["v1", "datasets", name, "rows"]) => {
+                post_rows(&manager, &registry, name, req)
+            }
             ("DELETE", ["v1", "datasets", name]) => {
                 if registry.remove(name) {
                     // retire the dataset's pooled services with it
@@ -502,7 +591,8 @@ fn build_handler(
                     ("version", Json::str(env!("CARGO_PKG_VERSION"))),
                 ]),
             ),
-            (_, ["v1", "datasets"]) | (_, ["v1", "datasets", _]) | (_, ["v1", "jobs"])
+            (_, ["v1", "datasets"]) | (_, ["v1", "datasets", _])
+            | (_, ["v1", "datasets", _, "rows"]) | (_, ["v1", "jobs"])
             | (_, ["v1", "jobs", _]) => Response::error(405, "method not allowed"),
             _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
         }

@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::synth::{generate, SynthConfig};
 use crate::data::{networks, Dataset};
@@ -74,6 +74,19 @@ pub fn dataset_from_csv(text: &str, header: Option<bool>) -> Result<Dataset> {
                     i + 1,
                     j + 1
                 );
+            }
+            // reject NaN/±inf loudly: treating them as a string level
+            // would silently corrupt kernel evaluations downstream
+            if let Ok(v) = f.trim().parse::<f64>() {
+                if !v.is_finite() {
+                    bail!(
+                        "csv: non-finite value `{}` at row {}, column {} \
+                         (NaN/±inf cannot enter kernel evaluations)",
+                        f.trim(),
+                        i + 1,
+                        j + 1
+                    );
+                }
             }
         }
     }
@@ -168,6 +181,47 @@ pub fn dataset_from_csv_file(path: &str, header: Option<bool>) -> Result<Dataset
     dataset_from_csv(&text, header).map_err(|e| e.context(format!("ingesting {path}")))
 }
 
+/// Parse header-less CSV rows in an existing dataset's column layout
+/// (the `POST /v1/datasets/{name}/rows` append body): arity must match,
+/// every field must be numeric and finite. Values are interpreted in
+/// the dataset's **internal coordinates** — continuous columns in the
+/// registered (z-scored) scale, discrete columns as 0-based level codes
+/// — and the level-code / finiteness validation itself happens in
+/// [`Dataset::append_rows`].
+pub fn rows_from_csv(ds: &Dataset, text: &str) -> Result<Mat> {
+    let rows = parse_csv(text)?;
+    if rows.is_empty() {
+        bail!("csv: no rows to append");
+    }
+    let arity = ds.data.cols;
+    if rows[0].len() != arity {
+        bail!(
+            "csv: append rows have {} fields, dataset has {} columns",
+            rows[0].len(),
+            arity
+        );
+    }
+    let mut m = Mat::zeros(rows.len(), arity);
+    for (i, r) in rows.iter().enumerate() {
+        for (j, f) in r.iter().enumerate() {
+            let v: f64 = f
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("append row {}: field `{}` is not numeric", i + 1, f.trim()))?;
+            if !v.is_finite() {
+                bail!(
+                    "append row {}: non-finite value `{}` in column {}",
+                    i + 1,
+                    f.trim(),
+                    j + 1
+                );
+            }
+            m[(i, j)] = v;
+        }
+    }
+    Ok(m)
+}
+
 /// Named datasets shared by every job of a server process. Each entry
 /// carries a registry-wide monotonic **version**, bumped on every
 /// insert/replace — consumers that cache per-dataset state (the job
@@ -236,6 +290,37 @@ impl DatasetRegistry {
     /// their own `Arc<Dataset>`; queued jobs on the name fail cleanly.
     pub fn remove(&self, name: &str) -> bool {
         self.inner.lock().unwrap().datasets.remove(name).is_some()
+    }
+
+    /// Append validated rows to `name` **in place**: the registry
+    /// version is kept (pooled services are refreshed against the new
+    /// snapshot, not retired like on a replace), while the dataset's
+    /// own row [`Dataset::version`] is bumped. Returns the updated
+    /// snapshot and its row version.
+    ///
+    /// The appended snapshot is built *outside* the registry lock —
+    /// cloning a large sample matrix must not block unrelated lookups —
+    /// and swapped in compare-and-set style: if the entry was replaced,
+    /// removed, or appended-to concurrently in the meantime, the append
+    /// fails with a retry error instead of silently dropping rows.
+    pub fn append_rows(&self, name: &str, rows: &Mat) -> Result<(Arc<Dataset>, u64)> {
+        let (ds, version) =
+            self.entry(name).ok_or_else(|| anyhow!("no dataset `{name}`"))?;
+        let mut updated = (*ds).clone();
+        updated.append_rows(rows)?;
+        let row_version = updated.version();
+        let arc = Arc::new(updated);
+        let mut inner = self.inner.lock().unwrap();
+        match inner.datasets.get(name) {
+            Some((cur, v)) if *v == version && Arc::ptr_eq(cur, &ds) => {
+                inner.datasets.insert(name.to_string(), (arc.clone(), version));
+                Ok((arc, row_version))
+            }
+            _ => Err(super::TransientConflict(format!(
+                "dataset `{name}` changed during the append; retry"
+            ))
+            .into()),
+        }
     }
 
     /// The dataset plus its registration version (bumped on replace).
@@ -320,6 +405,35 @@ mod tests {
     #[test]
     fn empty_fields_rejected() {
         assert!(dataset_from_csv("a,b\n1,\n", None).is_err());
+    }
+
+    #[test]
+    fn non_finite_values_rejected_with_position() {
+        for bad in ["NaN", "nan", "inf", "-inf", "Infinity"] {
+            let text = format!("a,b\n1.0,2.0\n{bad},4.0\n");
+            let err = dataset_from_csv(&text, None).unwrap_err().to_string();
+            assert!(err.contains("non-finite"), "`{bad}`: {err}");
+            assert!(err.contains("row 3"), "`{bad}` must report its row: {err}");
+        }
+    }
+
+    #[test]
+    fn append_rows_roundtrip_keeps_registry_version() {
+        let reg = DatasetRegistry::new();
+        reg.register_csv("s", "0\n1\n0\n1\n", Some(false)).unwrap();
+        let (ds0, v0) = reg.entry("s").unwrap();
+        assert_eq!(ds0.n(), 4);
+        let rows = rows_from_csv(&ds0, "1\n0\n").unwrap();
+        let (ds1, row_version) = reg.append_rows("s", &rows).unwrap();
+        assert_eq!(ds1.n(), 6);
+        assert_eq!(row_version, 1);
+        let (_, v1) = reg.entry("s").unwrap();
+        assert_eq!(v0, v1, "appends must not bump the registry version");
+        // malformed append bodies are rejected
+        assert!(rows_from_csv(&ds1, "1,2\n").is_err(), "arity mismatch");
+        assert!(rows_from_csv(&ds1, "oops\n").is_err(), "non-numeric");
+        assert!(rows_from_csv(&ds1, "inf\n").is_err(), "non-finite");
+        assert!(reg.append_rows("missing", &rows).is_err());
     }
 
     #[test]

@@ -1,0 +1,33 @@
+//! Streaming discovery: appendable datasets, incremental low-rank
+//! factor updates, and warm-started search.
+//!
+//! The paper's O(n) scoring rests on low-rank factors whose structure
+//! is inherently incremental: with the pivot set retained, a new sample
+//! row folds into Λ with one O(m²) forward substitution ([`append`]),
+//! so arriving data never forces the O(n·m²) from-scratch
+//! factorization the batch pipeline would pay. On top of that,
+//! [`session`] keeps discovery itself warm: appends invalidate exactly
+//! the memoized scores they stale (counted in
+//! `ServiceStats::invalidations`), and the next GES pass starts from
+//! the previous CPDAG (`SearchMethod::run_from`) instead of the empty
+//! graph.
+//!
+//! Entry points:
+//!
+//! * [`StreamingDiscovery`] — the session façade (`append` →
+//!   `discover`, warm-started);
+//! * [`StreamBackend`] — the appendable batch-aware CV-LR
+//!   [`crate::score::ScoreBackend`] behind it;
+//! * [`FactorState`] — one incrementally maintained factor (public for
+//!   direct use and property tests).
+//!
+//! The CLI front end is `cvlr stream --data f.csv --chunk N`, which
+//! replays a workload as a row stream and reports per-chunk append and
+//! discovery latency; the server front end is
+//! `POST /v1/datasets/{name}/rows` plus the `warm_start` job option.
+
+pub mod append;
+pub mod session;
+
+pub use append::{AppendOutcome, FactorState};
+pub use session::{AppendStats, StreamBackend, StreamConfig, StreamOutcome, StreamingDiscovery};

@@ -13,13 +13,21 @@ use anyhow::bail;
 /// RFC-4180-lite: comma separator, `"`-quoted fields with `""` escapes
 /// (quoted fields may contain commas and newlines), `\n` or `\r\n` row
 /// endings. Blank lines are skipped; every remaining row must have the
-/// same arity. Errors on unterminated quotes or ragged rows.
+/// same arity. Errors on unterminated quotes and ragged rows carry the
+/// **source line number**, so a malformed upload (far more likely once
+/// rows arrive as a stream) points at the offending input line instead
+/// of a logical row index.
 pub fn parse_csv(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
     let mut rows: Vec<Vec<String>> = Vec::new();
+    // 1-based source line each parsed row started on
+    let mut row_lines: Vec<usize> = Vec::new();
     let mut row: Vec<String> = Vec::new();
     let mut field = String::new();
     let mut in_quotes = false;
+    let mut quote_line = 0usize;
     let mut line_has_content = false;
+    let mut line = 1usize;
+    let mut row_line = 1usize;
     let mut chars = text.chars().peekable();
     while let Some(c) = chars.next() {
         if in_quotes {
@@ -31,6 +39,9 @@ pub fn parse_csv(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
                     in_quotes = false;
                 }
             } else {
+                if c == '\n' {
+                    line += 1;
+                }
                 field.push(c);
             }
             continue;
@@ -38,6 +49,7 @@ pub fn parse_csv(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
         match c {
             '"' if field.is_empty() => {
                 in_quotes = true;
+                quote_line = line;
                 line_has_content = true;
             }
             ',' => {
@@ -51,8 +63,11 @@ pub fn parse_csv(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
                 if line_has_content || !field.is_empty() {
                     row.push(std::mem::take(&mut field));
                     rows.push(std::mem::take(&mut row));
+                    row_lines.push(row_line);
                 }
                 line_has_content = false;
+                line += 1;
+                row_line = line;
             }
             _ => {
                 field.push(c);
@@ -61,17 +76,23 @@ pub fn parse_csv(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
         }
     }
     if in_quotes {
-        bail!("csv: unterminated quoted field");
+        bail!("csv: unterminated quoted field starting on line {quote_line}");
     }
     if line_has_content || !field.is_empty() {
         row.push(field);
         rows.push(row);
+        row_lines.push(row_line);
     }
     if let Some(first) = rows.first() {
         let arity = first.len();
         for (i, r) in rows.iter().enumerate() {
             if r.len() != arity {
-                bail!("csv: row {} has {} fields, expected {arity}", i + 1, r.len());
+                bail!(
+                    "csv: line {} has {} fields, expected {arity} (set by line {})",
+                    row_lines[i],
+                    r.len(),
+                    row_lines[0]
+                );
             }
         }
     }
@@ -122,6 +143,16 @@ impl Table {
     pub fn row(&mut self, fields: &[String]) {
         assert_eq!(fields.len(), self.header.len());
         self.rows.push(fields.to_vec());
+    }
+
+    /// The header row.
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// The data rows pushed so far.
+    pub fn data_rows(&self) -> &[Vec<String>] {
+        &self.rows
     }
 
     /// Render with per-column widths.
@@ -206,8 +237,23 @@ mod tests {
     }
 
     #[test]
+    fn ragged_row_error_reports_source_line() {
+        // blank line offsets the physical line from the logical row
+        let err = parse_csv("a,b\n1,2\n\n3\n").unwrap_err().to_string();
+        assert!(err.contains("line 4"), "{err}");
+        assert!(err.contains("expected 2"), "{err}");
+        assert!(err.contains("line 1"), "must name the arity-setting line: {err}");
+    }
+
+    #[test]
     fn parse_csv_rejects_unterminated_quote() {
         assert!(parse_csv("\"oops\n").is_err());
+    }
+
+    #[test]
+    fn unterminated_quote_error_reports_opening_line() {
+        let err = parse_csv("a,b\n1,\"oops\n2,3\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
     }
 
     #[test]

@@ -352,3 +352,91 @@ fn concurrent_clients_stress() {
 
     server.stop();
 }
+
+#[test]
+fn streaming_append_and_warm_start_over_tcp() {
+    let server = start_server(2);
+    let addr = server.addr();
+
+    // register a CSV dataset and run a cold job to populate the pooled
+    // service (cache + warm-start CPDAG)
+    let (status, resp) = post(
+        addr,
+        "/v1/datasets",
+        Json::obj(vec![("name", Json::str("streamed")), ("csv", Json::str(chain_csv(150)))]),
+    );
+    assert_eq!(status, 201, "{resp:?}");
+    let cold_id = submit_job(addr, "streamed", "bic");
+    let cold = poll_until_terminal(addr, cold_id, Duration::from_secs(120));
+    assert_eq!(state_of(&cold), "done", "{cold:?}");
+    let cold_edges = cold
+        .get("result")
+        .and_then(|r| r.get("num_edges"))
+        .and_then(Json::as_u64)
+        .expect("num_edges");
+
+    // append rows in internal coordinates: continuous columns are
+    // z-scored at ingestion, so 0 = column mean; `grp` levels are codes
+    let (status, resp) = post(
+        addr,
+        "/v1/datasets/streamed/rows",
+        Json::obj(vec![("csv", Json::str("0.0,0.0,0.0,1\n0.1,0.1,-0.1,0\n"))]),
+    );
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("appended").and_then(Json::as_u64), Some(2), "{resp:?}");
+    assert_eq!(resp.get("n").and_then(Json::as_u64), Some(152), "{resp:?}");
+    assert_eq!(resp.get("row_version").and_then(Json::as_u64), Some(1), "{resp:?}");
+    let invalidated = resp.get("invalidated").and_then(Json::as_u64).unwrap();
+    assert!(invalidated > 0, "the cold job's cached scores must be invalidated: {resp:?}");
+
+    // malformed appends are rejected with a clear error
+    for bad in ["1,2\n", "a,b,c,d\n", "0.0,inf,0.0,1\n", "0.0,0.0,0.0,0.5\n"] {
+        let (status, err) = post(
+            addr,
+            "/v1/datasets/streamed/rows",
+            Json::obj(vec![("csv", Json::str(bad))]),
+        );
+        assert_eq!(status, 400, "`{bad}` must be rejected: {err:?}");
+    }
+    let (status, err) = post(
+        addr,
+        "/v1/datasets/nope/rows",
+        Json::obj(vec![("csv", Json::str("1\n"))]),
+    );
+    assert_eq!(status, 404, "{err:?}");
+
+    // warm_start re-discovery on the appended dataset
+    let (status, resp) = post(
+        addr,
+        "/v1/jobs",
+        Json::obj(vec![
+            ("dataset", Json::str("streamed")),
+            ("method", Json::str("bic")),
+            ("warm_start", Json::Bool(true)),
+        ]),
+    );
+    assert_eq!(status, 202, "{resp:?}");
+    let warm_id = resp.get("id").and_then(Json::as_u64).unwrap();
+    let warm = poll_until_terminal(addr, warm_id, Duration::from_secs(120));
+    assert_eq!(state_of(&warm), "done", "{warm:?}");
+    let warm_edges = warm
+        .get("result")
+        .and_then(|r| r.get("num_edges"))
+        .and_then(Json::as_u64)
+        .expect("num_edges");
+    assert_eq!(warm_edges, cold_edges, "two near-mean rows must not change the structure");
+
+    // the pool entry survived the append and reports both counters
+    let (_, stats) = get(addr, "/v1/stats");
+    let services = stats.get("services").and_then(Json::as_arr).expect("services");
+    let svc = services
+        .iter()
+        .find(|s| s.get("dataset").and_then(Json::as_str) == Some("streamed"))
+        .expect("pooled service for `streamed`");
+    let st = svc.get("stats").expect("stats");
+    assert!(st.get("invalidations").and_then(Json::as_u64).unwrap() > 0, "{svc:?}");
+    assert!(st.get("warm_start_hits").and_then(Json::as_u64).unwrap() >= 1, "{svc:?}");
+    assert_eq!(st.get("consistent").and_then(Json::as_bool), Some(true), "{svc:?}");
+
+    server.stop();
+}

@@ -1,0 +1,224 @@
+//! Streaming discovery end-to-end: a dataset replayed in chunks must
+//! land on the same answer as a cold full-batch run — the factor-level
+//! incremental correctness, the session-level CPDAG agreement, and the
+//! observability counters that make cache reuse visible.
+
+use std::sync::Arc;
+
+use cvlr::coordinator::{discover, DiscoveryConfig, Method};
+use cvlr::data::Dataset;
+use cvlr::kernel::{median_heuristic, Kernel};
+use cvlr::linalg::Mat;
+use cvlr::lowrank::LowRankConfig;
+use cvlr::score::cvlr::{split_center, CvLrKernel, NativeCvLrKernel};
+use cvlr::score::folds::{stride_folds, CvParams};
+use cvlr::stream::{FactorState, StreamBackend, StreamingDiscovery};
+use cvlr::util::Pcg64;
+
+/// Strongly identified chain X1 → X2 → X3 plus isolated X4, as raw
+/// rows for chunk replay.
+fn chain_rows(n: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut data = Mat::zeros(n, 4);
+    for r in 0..n {
+        let x1 = rng.normal();
+        let x2 = 1.2 * x1 + 0.4 * rng.normal();
+        let x3 = -0.9 * x2 + 0.4 * rng.normal();
+        let x4 = rng.normal();
+        data[(r, 0)] = x1;
+        data[(r, 1)] = x2;
+        data[(r, 2)] = x3;
+        data[(r, 3)] = x4;
+    }
+    data
+}
+
+fn rows_range(m: &Mat, lo: usize, hi: usize) -> Mat {
+    m.select_rows(&(lo..hi).collect::<Vec<_>>())
+}
+
+/// CV-LR score of one fold configuration straight from a factor — the
+/// factor-level oracle the append/refactorize comparison uses.
+fn score_from_factor(lx: &Mat, lz: &Mat, p: &CvParams) -> f64 {
+    let folds = stride_folds(lx.rows, p.folds);
+    let k = NativeCvLrKernel;
+    folds
+        .iter()
+        .map(|(test, train)| {
+            let (lx0, lx1) = split_center(lx, test, train);
+            let (lz0, lz1) = split_center(lz, test, train);
+            k.score_cond(&lx0, &lx1, &lz0, &lz1, p)
+        })
+        .sum::<f64>()
+        / folds.len() as f64
+}
+
+/// Incremental correctness at the factor level: streamed in k chunks
+/// vs refactorized from scratch with the same pinned kernel, the CV-LR
+/// scores agree within 1e-6 (continuous/ICL path).
+#[test]
+fn streamed_factors_score_like_refactorized_continuous() {
+    let data = chain_rows(240, 1);
+    let p = CvParams::default();
+    // tight η: both factors then approximate K to 1e-9, so the 1e-6
+    // score agreement has headroom regardless of which pivots the
+    // streamed vs cold greedy selections landed on
+    let cfg = LowRankConfig { max_rank: 100, eta: 1e-9 };
+    let bx = data.select_rows(&(0..data.rows).collect::<Vec<_>>());
+    let x_col = |lo: usize, hi: usize, c: usize| {
+        Mat::from_vec(hi - lo, 1, (lo..hi).map(|r| bx[(r, c)]).collect())
+    };
+    for (xc, zc) in [(1usize, 0usize), (2, 1)] {
+        let full_x = x_col(0, 240, xc);
+        let full_z = x_col(0, 240, zc);
+        let kx = Kernel::Rbf { sigma: median_heuristic(&x_col(0, 80, xc), p.width_factor) };
+        let kz = Kernel::Rbf { sigma: median_heuristic(&x_col(0, 80, zc), p.width_factor) };
+
+        let mut sx = FactorState::new(kx, &x_col(0, 80, xc), false, &cfg);
+        let mut sz = FactorState::new(kz, &x_col(0, 80, zc), false, &cfg);
+        for (lo, hi) in [(80, 160), (160, 240)] {
+            let part_x = x_col(0, hi, xc);
+            let part_z = x_col(0, hi, zc);
+            sx.append(&x_col(lo, hi, xc), &|| part_x.clone());
+            sz.append(&x_col(lo, hi, zc), &|| part_z.clone());
+        }
+        assert_eq!(sx.lambda().rows, 240);
+
+        let cold_x = FactorState::new(kx, &full_x, false, &cfg);
+        let cold_z = FactorState::new(kz, &full_z, false, &cfg);
+
+        let streamed = score_from_factor(&sx.lambda(), &sz.lambda(), &p);
+        let cold = score_from_factor(&cold_x.lambda(), &cold_z.lambda(), &p);
+        let rel = ((streamed - cold) / cold).abs();
+        assert!(
+            rel < 1e-6,
+            "X{xc}|X{zc}: streamed {streamed} vs refactorized {cold} (rel {rel})"
+        );
+    }
+}
+
+/// The discrete path is exact: streamed scores match the cold run
+/// bit-for-bit when no re-pivot fires (same pivots in first-appearance
+/// order, same forward substitutions).
+#[test]
+fn streamed_factors_exact_discrete() {
+    let mut rng = Pcg64::new(2);
+    let n = 180;
+    let mut col = Mat::zeros(n, 1);
+    for r in 0..n {
+        col[(r, 0)] = rng.below(4) as f64;
+    }
+    let kern = Kernel::Rbf { sigma: 1.0 };
+    let cfg = LowRankConfig::default();
+    let mut st = FactorState::new(kern, &rows_range(&col, 0, 60), true, &cfg);
+    for (lo, hi) in [(60, 120), (120, 180)] {
+        let part = rows_range(&col, 0, hi);
+        let out = st.append(&rows_range(&col, lo, hi), &|| part.clone());
+        assert!(!out.repivoted, "discrete appends must not re-pivot");
+    }
+    let cold = FactorState::new(kern, &col, true, &cfg);
+    // Pivot order is first-appearance for both paths. Basis growth can
+    // make the streamed factor *wider* only if the head missed a level;
+    // either way the factors must agree bit-for-bit when the head saw
+    // every level (overwhelmingly likely at 60 draws of 4 levels).
+    if st.rank() == cold.rank() {
+        assert_eq!(
+            st.lambda().data,
+            cold.lambda().data,
+            "discrete streamed factor must equal the cold factorization bit-for-bit"
+        );
+    }
+    let err = (&st.lambda().matmul_t(&st.lambda())
+        - &cold.lambda().matmul_t(&cold.lambda()))
+        .max_abs();
+    assert!(err < 1e-9, "ΛΛᵀ must agree exactly: {err}");
+}
+
+/// Session-level acceptance: a 3-chunk stream ends on the same CPDAG
+/// as a cold full-batch CV-LR discovery of the full data, with the
+/// invalidation/warm-start counters live and the factors exact.
+#[test]
+fn streamed_session_matches_cold_discovery() {
+    let data = chain_rows(240, 3);
+    let full = Dataset::from_columns(data.clone(), &[false; 4]);
+
+    // cold full-batch run (native CV-LR through the engine)
+    let cold = discover(
+        Arc::new(full.clone()),
+        &DiscoveryConfig { method: Method::CvLr, ..Default::default() },
+    )
+    .unwrap();
+
+    // streamed: seed with 80 rows, two appends of 80
+    let mut sess = StreamingDiscovery::new(full.head(80));
+    let first = sess.discover();
+    assert!(!first.warm_started);
+    let mut last = first.clone();
+    for (lo, hi) in [(80, 160), (160, 240)] {
+        let ast = sess.append(&rows_range(&data, lo, hi)).unwrap();
+        assert_eq!(ast.rows, 80);
+        assert!(ast.invalidated > 0, "appends must invalidate cached scores");
+        last = sess.discover();
+        assert!(last.warm_started, "re-discovery must warm-start");
+    }
+    assert_eq!(sess.n(), 240);
+    assert_eq!(
+        last.cpdag, cold.cpdag,
+        "streamed discovery must land on the cold full-batch CPDAG"
+    );
+
+    let st = sess.stats();
+    assert!(st.invalidations > 0, "{st:?}");
+    assert_eq!(st.warm_start_hits, 2, "{st:?}");
+    assert!(st.consistent(), "{st:?}");
+    // exactness was maintained (or repaired by re-pivots) across
+    // appends — the bound is the factorization's own cold-run quality
+    // (rank-capped ICL states keep their residual), not stream drift
+    assert!(
+        sess.backend().max_reconstruction_error() < 1e-2,
+        "factor reconstruction drifted: {}",
+        sess.backend().max_reconstruction_error()
+    );
+}
+
+/// The forced re-pivot path: with a zero appended-residual budget every
+/// chunk refactorizes, and the session still converges to the cold
+/// answer (re-pivot = cold factorization by construction).
+#[test]
+fn forced_repivots_repair_exactness() {
+    let data = chain_rows(160, 4);
+    let full = Dataset::from_columns(data.clone(), &[false; 4]);
+    let backend = StreamBackend::new(
+        full.head(80),
+        CvParams::default(),
+        LowRankConfig { max_rank: 100, eta: 0.0 },
+    );
+    use cvlr::score::{ScoreBackend, ScoreRequest};
+    let reqs = [ScoreRequest::new(1, &[0]), ScoreRequest::new(2, &[1])];
+    let _ = backend.score_batch(&reqs); // materialize factor states
+    let ast = backend.append(&rows_range(&data, 80, 160)).unwrap();
+    assert!(ast.repivots > 0, "η = 0 must force re-pivots: {ast:?}");
+    assert!(backend.total_repivots() > 0);
+    // re-pivot = cold factorization over all rows: exactness repaired
+    assert!(
+        backend.max_reconstruction_error() < 1e-6,
+        "re-pivot must repair exactness: {}",
+        backend.max_reconstruction_error()
+    );
+
+    // post-re-pivot scores equal a cold backend over the full data with
+    // the same per-state kernels — which the re-pivot reproduces
+    // exactly, so the comparison is at full precision, not 1e-6: the
+    // kernels were pinned on the *head*, so pin the cold ones the same
+    // way by seeding it with the head and appending before scoring
+    let cold = StreamBackend::new(
+        full.head(80),
+        CvParams::default(),
+        LowRankConfig { max_rank: 100, eta: 0.0 },
+    );
+    let _ = cold.score_batch(&reqs);
+    cold.append(&rows_range(&data, 80, 160)).unwrap();
+    let a = backend.score_batch(&reqs);
+    let b = cold.score_batch(&reqs);
+    assert_eq!(a, b, "re-pivoted scores must be bit-for-bit reproducible");
+}

@@ -13,6 +13,7 @@ use cvlr::lowrank::{center_factor, factorize, LowRankConfig, Method};
 use cvlr::prop_assert;
 use cvlr::score::cvlr::{split_center, CvLrKernel, NativeCvLrKernel};
 use cvlr::score::folds::{stride_folds, CvParams};
+use cvlr::stream::FactorState;
 use cvlr::util::prop::check;
 use cvlr::util::Pcg64;
 
@@ -162,6 +163,90 @@ fn prop_zero_row_padding_invariance() {
         };
         prop_assert!(cores_match, "zero rows changed a Gram core");
         let _ = a;
+        Ok(())
+    });
+}
+
+/// Streaming appends (the `stream` subsystem invariant): across random
+/// chunk splits, append-then-score equals refactorize-then-score within
+/// 1e-6 for both continuous (ICL) and discrete (Algorithm 2) variables
+/// — and when the appended-residual budget forces a re-pivot, the
+/// factor is bit-for-bit the cold refactorization.
+#[test]
+fn prop_stream_append_matches_refactorize() {
+    check("stream_append_vs_refactorize", 16, |rng| {
+        let n = 60 + rng.below(80);
+        let discrete = rng.below(2) == 1;
+        let x = if discrete {
+            let levels = 2 + rng.below(5);
+            let mut m = Mat::zeros(n, 1);
+            for r in 0..n {
+                m[(r, 0)] = rng.below(levels) as f64;
+            }
+            m
+        } else {
+            random_mat(rng, n, 1)
+        };
+        let kern = if discrete {
+            Kernel::Rbf { sigma: 1.0 }
+        } else {
+            Kernel::Rbf { sigma: median_heuristic(&x, 2.0) }
+        };
+        // tight η keeps both factorizations within 1e-9 of K, so the
+        // 1e-6 score comparison has headroom whichever pivots greedy
+        // selection lands on
+        let cfg = LowRankConfig { max_rank: n, eta: 1e-9 };
+
+        // random 3-way chunk split
+        let c1 = n / 3 + rng.below(n / 4);
+        let c2 = c1 + 1 + rng.below(n - c1 - 1);
+        let head = x.select_rows(&(0..c1).collect::<Vec<_>>());
+        let mid = x.select_rows(&(c1..c2).collect::<Vec<_>>());
+        let tail = x.select_rows(&(c2..n).collect::<Vec<_>>());
+
+        let mut st = FactorState::new(kern, &head, discrete, &cfg);
+        let part = x.select_rows(&(0..c2).collect::<Vec<_>>());
+        let out1 = st.append(&mid, &|| part.clone());
+        let out2 = st.append(&tail, &|| x.clone());
+        prop_assert!(st.lambda().rows == n, "all rows folded in");
+
+        let cold = FactorState::new(kern, &x, discrete, &cfg);
+        if out2.repivoted {
+            // a re-pivot on the final chunk IS the cold factorization
+            prop_assert!(
+                st.lambda().data == cold.lambda().data,
+                "re-pivoted factor must equal the cold one bit-for-bit"
+            );
+        }
+
+        // score comparison through one CV fold of the conditional score
+        // (X | X lagged by using the same factor for x and z is
+        // degenerate, so score X against an independent random factor)
+        let folds = stride_folds(n, 5);
+        let (test, train) = &folds[0];
+        let lz = random_mat(rng, n, 2);
+        let p = CvParams::default();
+        let k = NativeCvLrKernel;
+        let (lz0, lz1) = split_center(&lz, test, train);
+        let streamed_lam = st.lambda();
+        let (sx0, sx1) = split_center(&streamed_lam, test, train);
+        let cold_lam = cold.lambda();
+        let (cx0, cx1) = split_center(&cold_lam, test, train);
+        let s_stream = k.score_cond(&sx0, &sx1, &lz0, &lz1, &p);
+        let s_cold = k.score_cond(&cx0, &cx1, &lz0, &lz1, &p);
+        let rel = ((s_stream - s_cold) / s_cold).abs();
+        prop_assert!(
+            rel < 1e-6,
+            "append-then-score {s_stream} vs refactorize-then-score {s_cold} \
+             (rel {rel}, discrete={discrete}, repivoted={})",
+            out1.repivoted || out2.repivoted
+        );
+
+        if discrete && !out1.repivoted && !out2.repivoted {
+            // Algorithm 2 stays exact across appends
+            let err = (&st.lambda().matmul_t(&st.lambda()) - &gram(kern, &x)).max_abs();
+            prop_assert!(err < 1e-9, "discrete append lost exactness: {err}");
+        }
         Ok(())
     });
 }
