@@ -1,0 +1,271 @@
+#!/usr/bin/env python3
+"""Render the bench trajectory across commits from accumulated
+``BENCH_<name>.json`` artifacts (the JSON twins the rust benches write,
+uploaded per CI run — see ``rust/src/bench/mod.rs``).
+
+Usage:
+
+    python3 plot_bench.py RUN_DIR [RUN_DIR ...] [--metric COL] [--out DIR]
+
+Each RUN_DIR is either one run's ``results/`` directory (its name labels
+the commit/run), or a directory of such run directories (e.g. unpacked
+CI artifacts, one subdirectory per commit, sorted by name).
+
+Output:
+
+* a plain-text trajectory table per bench on stdout — always (this is
+  the table view; it needs nothing beyond the standard library);
+* ``<out>/<bench>_trajectory.png`` line charts when matplotlib is
+  importable (CI runners without it just keep the text view).
+
+Chart conventions follow the repo's viz ground rules: one metric per
+axis (never dual axes), small multiples per setting, at most 8 series
+per panel (the rest are noted and live in the table view), a fixed
+categorical color order, thin lines with visible markers, recessive
+grid, and a legend whenever more than one series is shown.
+"""
+
+import argparse
+import json
+import os
+import sys
+from collections import OrderedDict
+
+# Validated categorical palette (fixed slot order, light surface).
+PALETTE = [
+    "#2a78d6",  # blue
+    "#eb6834",  # orange
+    "#1baf7a",  # aqua
+    "#eda100",  # yellow
+    "#e87ba4",  # magenta
+    "#008300",  # green
+    "#4a3aa7",  # violet
+    "#e34948",  # red
+]
+INK = "#1a1a19"
+INK_MUTED = "#6b6a62"
+GRID = "#e5e4dd"
+MAX_SERIES = 8
+
+# Default metric column per bench (others via --metric).
+DEFAULT_METRIC = {
+    "fig1_runtime": "cvlr_seconds",
+    "fig2_4_synthetic": "f1_mean",
+    "tab1_accuracy": "rel_error_pct",
+    "tab1_sweep_m": "rel_error_pct",
+}
+
+
+def is_number(s):
+    try:
+        float(s)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+def load_run(path):
+    """All BENCH_*.json files directly inside `path` → {bench: (header, rows)}."""
+    out = {}
+    for fname in sorted(os.listdir(path)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        with open(os.path.join(path, fname)) as fh:
+            doc = json.load(fh)
+        out[doc["bench"]] = (doc["header"], doc["rows"])
+    return out
+
+
+def discover_runs(paths):
+    """[(label, {bench: (header, rows)})] in label order."""
+    runs = []
+    for p in paths:
+        p = p.rstrip("/")
+        if not os.path.isdir(p):
+            sys.exit(f"error: {p} is not a directory")
+        direct = load_run(p)
+        if direct:
+            runs.append((os.path.basename(p) or p, direct))
+            continue
+        subs = sorted(
+            d for d in os.listdir(p) if os.path.isdir(os.path.join(p, d))
+        )
+        found = False
+        for d in subs:
+            sub = load_run(os.path.join(p, d))
+            if sub:
+                runs.append((d, sub))
+                found = True
+        if not found:
+            print(f"warning: no BENCH_*.json under {p}", file=sys.stderr)
+    return runs
+
+
+def series_of(header, rows, metric):
+    """OrderedDict {(facet, series_label): value} for one run's table.
+
+    The first non-numeric column facets the panels; the remaining
+    non-metric columns label the series inside a panel.
+    """
+    if metric not in header:
+        return None
+    mi = header.index(metric)
+    # facet column: first column that is non-numeric in some row
+    facet_i = None
+    for ci, _ in enumerate(header):
+        if ci != mi and any(not is_number(r[ci]) for r in rows if len(r) > ci):
+            facet_i = ci
+            break
+    out = OrderedDict()
+    for r in rows:
+        if len(r) <= mi or not is_number(r[mi]):
+            continue
+        facet = r[facet_i] if facet_i is not None else ""
+        key_cells = [
+            f"{header[ci]}={r[ci]}"
+            for ci, _ in enumerate(header)
+            if ci not in (mi, facet_i) and not header[ci].endswith(("_std",))
+            and not is_metric_like(header[ci], metric)
+        ]
+        out[(facet, ", ".join(key_cells) or metric)] = float(r[mi])
+    return out
+
+
+def is_metric_like(col, metric):
+    """Other measure columns are not identity: drop them from series keys."""
+    measure_suffixes = ("_seconds", "_mean", "_std", "_pct", "seconds", "speedup", "_score")
+    return col != metric and (col.endswith(measure_suffixes) or col in ("rank_used",))
+
+
+def text_view(bench, metric, labels, table):
+    """Plain-text trajectory table: one row per series, one column per run."""
+    keys = list(table.keys())
+    name_w = max([len(f"{f} | {s}") for (f, s) in keys] + [len("series")])
+    col_w = max([len(l) for l in labels] + [12])
+    print(f"\n== {bench} — {metric} across {len(labels)} run(s) ==")
+    head = "series".ljust(name_w) + "".join(l.rjust(col_w + 2) for l in labels)
+    print(head)
+    print("-" * len(head))
+    for key in keys:
+        facet, series = key
+        cells = []
+        for label in labels:
+            v = table[key].get(label)
+            cells.append(("-" if v is None else f"{v:.6g}").rjust(col_w + 2))
+        print(f"{facet} | {series}".ljust(name_w) + "".join(cells))
+
+
+def png_view(bench, metric, labels, table, out_dir):
+    try:
+        import matplotlib
+
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        return None
+    facets = list(OrderedDict.fromkeys(f for (f, _) in table))
+    ncols = min(len(facets), 2)
+    nrows = (len(facets) + ncols - 1) // ncols
+    fig, axes = plt.subplots(
+        nrows, ncols, figsize=(7.0 * ncols, 4.2 * nrows), squeeze=False
+    )
+    fig.patch.set_facecolor("white")
+    x = list(range(len(labels)))
+    for pi, facet in enumerate(facets):
+        ax = axes[pi // ncols][pi % ncols]
+        keys = [k for k in table if k[0] == facet]
+        dropped = 0
+        if len(keys) > MAX_SERIES:
+            # keep the series largest in the latest run; the rest stay
+            # in the table view
+            keys.sort(key=lambda k: -(table[k].get(labels[-1]) or 0.0))
+            dropped = len(keys) - MAX_SERIES
+            keys = keys[:MAX_SERIES]
+        for si, key in enumerate(keys):
+            ys = [table[key].get(l) for l in labels]
+            ax.plot(
+                x,
+                ys,
+                color=PALETTE[si % len(PALETTE)],
+                linewidth=2,
+                marker="o",
+                markersize=6,
+                label=key[1],
+            )
+        title = str(facet) if facet else bench
+        if dropped:
+            title += f"  (+{dropped} more series in the table view)"
+        ax.set_title(title, color=INK, fontsize=11, loc="left")
+        ax.set_ylabel(metric, color=INK_MUTED, fontsize=9)
+        ax.set_xticks(x)
+        ax.set_xticklabels(labels, rotation=30, ha="right", color=INK_MUTED, fontsize=8)
+        ax.tick_params(colors=INK_MUTED)
+        ax.grid(True, color=GRID, linewidth=0.8)
+        ax.set_axisbelow(True)
+        for spine in ("top", "right"):
+            ax.spines[spine].set_visible(False)
+        for spine in ("left", "bottom"):
+            ax.spines[spine].set_color(GRID)
+        if len(keys) > 1:
+            ax.legend(fontsize=8, frameon=False, labelcolor=INK)
+    for pi in range(len(facets), nrows * ncols):
+        axes[pi // ncols][pi % ncols].set_visible(False)
+    fig.suptitle(f"{bench} — {metric}", color=INK, fontsize=13, x=0.01, ha="left")
+    fig.tight_layout(rect=(0, 0, 1, 0.96))
+    path = os.path.join(out_dir, f"{bench}_trajectory.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("runs", nargs="+", help="run directory (or directory of run dirs)")
+    ap.add_argument("--metric", help="metric column (default: per-bench)")
+    ap.add_argument("--out", help="chart output directory (default: first run dir)")
+    args = ap.parse_args()
+
+    runs = discover_runs(args.runs)
+    if not runs:
+        sys.exit("error: no bench artifacts found")
+    labels = [label for (label, _) in runs]
+    out_dir = args.out or args.runs[0]
+
+    benches = OrderedDict()
+    for label, by_bench in runs:
+        for bench in by_bench:
+            benches.setdefault(bench, None)
+
+    for bench in benches:
+        metric = args.metric or DEFAULT_METRIC.get(bench)
+        if metric is None:
+            # fall back to the last numeric column of the first run
+            header, rows = next(b[bench] for (_, b) in runs if bench in b)
+            numeric = [c for ci, c in enumerate(header) if all(
+                is_number(r[ci]) for r in rows if len(r) > ci)]
+            if not numeric:
+                continue
+            metric = numeric[-1]
+        # {(facet, series): {label: value}}
+        table = OrderedDict()
+        for label, by_bench in runs:
+            if bench not in by_bench:
+                continue
+            header, rows = by_bench[bench]
+            points = series_of(header, rows, metric)
+            if points is None:
+                continue
+            for key, v in points.items():
+                table.setdefault(key, {})[label] = v
+        if not table:
+            continue
+        text_view(bench, metric, labels, table)
+        png = png_view(bench, metric, labels, table, out_dir)
+        if png:
+            print(f"chart: {png}")
+        else:
+            print("(matplotlib unavailable — table view only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -59,6 +59,8 @@ fn main() {
     let sizes: [usize; 5] = [200, 500, 1000, 2000, 4000];
     // exact CV cost cap on the smoke scale
     let cv_cap = if cfg.full { usize::MAX } else { 1000 };
+    // Gram-product threads of the fold-core builds (--parallelism P)
+    let parallelism = cfg.args.usize_or("parallelism", 1);
 
     let mut rep = Report::new(
         &cfg,
@@ -73,9 +75,9 @@ fn main() {
             let parents: Vec<usize> = (1..=s.cond).collect();
 
             // CV-LR (the paper's method) — fresh score each rep so the
-            // factor cache does not amortize across reps.
+            // factor and fold-core caches do not amortize across reps.
             let lr_stats = bench_fn(1, cfg.reps, || {
-                let lr = CvLrScore::native(ds.clone());
+                let lr = CvLrScore::native(ds.clone()).with_parallelism(parallelism);
                 let _ = lr.local_score(target, &parents);
             });
 

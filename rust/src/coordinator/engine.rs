@@ -142,6 +142,10 @@ pub struct DiscoveryConfig {
     pub alpha: f64,
     /// Worker threads for the score service.
     pub workers: usize,
+    /// Gram-product threads inside the CV-LR fold-core builds (the
+    /// `std::thread::scope` row-partitioned path of `score::cores`;
+    /// orthogonal to `workers`, which parallelizes across candidates).
+    pub parallelism: usize,
     /// Score-cache capacity (None = unbounded, the one-shot CLI
     /// default). Long-lived processes (the discovery server) must set a
     /// bound; see [`ScoreService::with_cache_capacity`].
@@ -160,6 +164,7 @@ impl Default for DiscoveryConfig {
             ges: GesConfig::default(),
             alpha: 0.05,
             workers: 1,
+            parallelism: 1,
             cache_capacity: None,
             artifacts_dir: "artifacts".to_string(),
         }
@@ -229,23 +234,24 @@ impl Registry {
             &["cvlr"],
             MethodEntry::Score(Arc::new(|ds, cfg| {
                 Ok(match cfg.engine {
-                    EngineKind::Native => Arc::new(CvLrScore::with_backend(
-                        ds,
-                        cfg.params,
-                        cfg.lowrank,
-                        NativeCvLrKernel,
-                    )) as Arc<dyn ScoreBackend>,
+                    EngineKind::Native => Arc::new(
+                        CvLrScore::with_backend(ds, cfg.params, cfg.lowrank, NativeCvLrKernel)
+                            .with_parallelism(cfg.parallelism),
+                    ) as Arc<dyn ScoreBackend>,
                     EngineKind::Pjrt => {
                         let rt = Arc::new(
                             Runtime::load(&cfg.artifacts_dir)
                                 .context("loading PJRT artifacts for the CV-LR engine")?,
                         );
-                        Arc::new(CvLrScore::with_backend(
-                            ds,
-                            cfg.params,
-                            cfg.lowrank,
-                            PjrtCvLrKernel::new(rt),
-                        ))
+                        Arc::new(
+                            CvLrScore::with_backend(
+                                ds,
+                                cfg.params,
+                                cfg.lowrank,
+                                PjrtCvLrKernel::new(rt),
+                            )
+                            .with_parallelism(cfg.parallelism),
+                        )
                     }
                 })
             })),
@@ -415,6 +421,7 @@ fn run_method(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<Dis
             let backend = factory(ds, cfg)?;
             let service =
                 ScoreService::with_cache_capacity(backend, cfg.workers, cfg.cache_capacity);
+            service.set_gram_threads(cfg.parallelism.max(1) as u64);
             let res = ges(&service, &cfg.ges);
             Ok(DiscoveryOutcome {
                 cpdag: res.cpdag,
@@ -478,6 +485,13 @@ impl DiscoveryBuilder {
     /// Worker threads for the score service.
     pub fn workers(mut self, workers: usize) -> Self {
         self.cfg.workers = workers;
+        self
+    }
+
+    /// Gram-product threads inside the CV-LR fold-core builds (see
+    /// [`DiscoveryConfig::parallelism`]).
+    pub fn parallelism(mut self, threads: usize) -> Self {
+        self.cfg.parallelism = threads.max(1);
         self
     }
 

@@ -323,6 +323,10 @@ pub struct ServiceStats {
     pub warm_start_hits: u64,
     /// Resident cache entries at snapshot time.
     pub cache_entries: u64,
+    /// Gram-product threads of the backing backend
+    /// (`DiscoveryConfig::parallelism`) — a gauge, not a counter, so
+    /// the server can expose what each pooled service is using.
+    pub gram_threads: u64,
     pub eval_seconds: f64,
 }
 
@@ -347,6 +351,9 @@ pub struct ScoreService {
     /// ([`ScoreService::set_warm_start`] / [`ScoreService::warm_start`]).
     warm: Mutex<Option<Pdag>>,
     warm_hits: AtomicU64,
+    /// Gram-product threads of the backing backend (reported through
+    /// [`ServiceStats::gram_threads`]).
+    gram_threads: AtomicU64,
     requests: AtomicU64,
     hits: AtomicU64,
     evals: AtomicU64,
@@ -375,6 +382,7 @@ impl ScoreService {
             cache: ScoreCache::with_capacity(cache_capacity),
             warm: Mutex::new(None),
             warm_hits: AtomicU64::new(0),
+            gram_threads: AtomicU64::new(1),
             requests: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             evals: AtomicU64::new(0),
@@ -418,6 +426,14 @@ impl ScoreService {
         *self.warm.lock().unwrap() = Some(cpdag);
     }
 
+    /// Record the Gram-product thread count the backing backend was
+    /// built with (`DiscoveryConfig::parallelism`), so it shows up in
+    /// [`ServiceStats::gram_threads`] — set by whoever wires the
+    /// backend (engine, server job manager, streaming session).
+    pub fn set_gram_threads(&self, threads: u64) {
+        self.gram_threads.store(threads.max(1), Ordering::Relaxed);
+    }
+
     /// The stored warm-start CPDAG, if any. A `Some` return counts as a
     /// warm-start hit in [`ServiceStats::warm_start_hits`].
     pub fn warm_start(&self) -> Option<Pdag> {
@@ -444,6 +460,7 @@ impl ScoreService {
             invalidations: self.cache.invalidations(),
             warm_start_hits: self.warm_hits.load(Ordering::Relaxed),
             cache_entries: self.cache.len() as u64,
+            gram_threads: self.gram_threads.load(Ordering::Relaxed),
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
     }

@@ -117,6 +117,67 @@ pub fn spd_log_det(a: &Mat) -> f64 {
     Cholesky::new(a).expect("matrix not SPD in spd_log_det").log_det()
 }
 
+/// Pivoted semidefinite Cholesky: a symmetric **PSD** matrix `a`
+/// (possibly singular) → an n×r factor `L` with `L·Lᵀ ≈ a`, where `r`
+/// is the numerical rank at pivot threshold `tol · max(diag(a), 1)`.
+/// Greedy diagonal pivoting — the same scheme ICL applies to implicit
+/// kernel matrices, here run on a precomputed matrix — so the result is
+/// deterministic and rounding-stable for PSD inputs where plain
+/// [`Cholesky`] would reject a zero pivot. O(n²·r).
+///
+/// Used to synthesize low-row surrogate factors from m×m Gram cores
+/// (`runtime::pjrt_kernel`): `Lᵀ` is an r×n matrix whose Gram is `a`.
+pub fn psd_factor(a: &Mat, tol: f64) -> Mat {
+    assert_eq!(a.rows, a.cols, "psd_factor needs square input");
+    let n = a.rows;
+    let mut d: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+    let scale = d.iter().fold(1.0f64, |m, &x| m.max(x));
+    let thresh = tol * scale;
+    let mut l = Mat::zeros(n, n);
+    let mut used = vec![false; n];
+    let mut rank = 0usize;
+    for k in 0..n {
+        // largest remaining residual diagonal above the threshold
+        let mut p = usize::MAX;
+        let mut best = thresh;
+        for (i, &di) in d.iter().enumerate() {
+            if !used[i] && di > best {
+                best = di;
+                p = i;
+            }
+        }
+        if p == usize::MAX {
+            break;
+        }
+        used[p] = true;
+        let root = d[p].sqrt();
+        l[(p, k)] = root;
+        for i in 0..n {
+            if used[i] {
+                continue;
+            }
+            let mut s = a[(i, p)];
+            for j in 0..k {
+                s -= l[(i, j)] * l[(p, j)];
+            }
+            let v = s / root;
+            l[(i, k)] = v;
+            d[i] -= v * v;
+        }
+        rank = k + 1;
+    }
+    if rank == 0 {
+        // numerically zero input: one zero column keeps downstream
+        // shapes non-degenerate (L·Lᵀ = 0 = a)
+        return Mat::zeros(n, 1);
+    }
+    let mut out = Mat::zeros(n, rank);
+    for i in 0..n {
+        out.row_mut(i).copy_from_slice(&l.row(i)[..rank]);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +232,32 @@ mod tests {
     fn non_spd_rejected() {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // indefinite
         assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn psd_factor_reconstructs_full_rank() {
+        let a = spd(7, 5);
+        let l = psd_factor(&a, 1e-12);
+        assert_eq!(l.cols, 7, "SPD input is full rank");
+        assert!((&l.matmul_t(&l) - &a).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn psd_factor_handles_singular_and_zero() {
+        // rank-2 PSD: B·Bᵀ with B 6×2
+        let mut rng = crate::util::Pcg64::new(9);
+        let mut b = Mat::zeros(6, 2);
+        for x in &mut b.data {
+            *x = rng.normal();
+        }
+        let a = b.matmul_t(&b);
+        let l = psd_factor(&a, 1e-10);
+        assert!(l.cols <= 2, "rank must not exceed 2 (got {})", l.cols);
+        assert!((&l.matmul_t(&l) - &a).max_abs() < 1e-8);
+        // zero matrix: a single zero column, exact reconstruction
+        let z = psd_factor(&Mat::zeros(4, 4), 1e-10);
+        assert_eq!((z.rows, z.cols), (4, 1));
+        assert!(z.max_abs() == 0.0);
     }
 
     #[test]

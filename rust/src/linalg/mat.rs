@@ -4,9 +4,27 @@
 //! single-core bench box this is within ~2-3x of an optimized BLAS for the
 //! sizes the library touches (n ≤ 4096, m ≤ 128), and the hot path of the
 //! system goes through the AOT XLA artifacts anyway.
+//!
+//! Gram products (the O(n·m²) inner loop of the fold-core provider,
+//! `score::cores`) get two dedicated upgrades:
+//!
+//! * [`Mat::syrk`] — selfᵀ·self at **half** the flops of
+//!   `t_matmul(self)`: only the upper triangle is accumulated (then
+//!   mirrored), streaming 4-row panels so each output row is touched
+//!   once per panel instead of once per sample row;
+//! * [`Mat::par_syrk`] / [`Mat::par_t_matmul`] — the row-partitioned
+//!   parallel path: rows are split into contiguous chunks evaluated
+//!   under `std::thread::scope`, partial Grams summed in chunk order
+//!   (deterministic for a fixed thread count). Gated on the
+//!   `parallelism` knob threaded through `DiscoveryConfig`; `threads
+//!   <= 1` (or too few rows) falls back to the serial kernels.
 
 use std::fmt;
 use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Minimum rows per worker before the parallel Gram paths split: below
+/// this, thread spawn/join overhead beats the arithmetic saved.
+const PAR_MIN_ROWS: usize = 128;
 
 /// Dense row-major f64 matrix.
 #[derive(Clone, PartialEq)]
@@ -115,9 +133,17 @@ impl Mat {
     /// computed without materializing the transpose.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
-        let (n, ma, mb) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(ma, mb);
-        for r in 0..n {
+        let mut out = Mat::zeros(self.cols, other.cols);
+        self.t_matmul_range_into(other, 0, self.rows, &mut out);
+        out
+    }
+
+    /// Accumulate selfᵀ·other over the row range `lo..hi` into `out`
+    /// (the chunk kernel shared by [`Mat::t_matmul`] and
+    /// [`Mat::par_t_matmul`]).
+    fn t_matmul_range_into(&self, other: &Mat, lo: usize, hi: usize, out: &mut Mat) {
+        let mb = other.cols;
+        for r in lo..hi {
             let arow = self.row(r);
             let brow = other.row(r);
             for (i, &a) in arow.iter().enumerate() {
@@ -128,6 +154,145 @@ impl Mat {
                 for j in 0..mb {
                     orow[j] += a * brow[j];
                 }
+            }
+        }
+    }
+
+    /// selfᵀ·self — the symmetric Gram (rank-k update) at half the
+    /// flops of `t_matmul(self)`: only the upper triangle is
+    /// accumulated, streaming blocked 4-row panels of `self` (each
+    /// output row loaded once per panel, 4 products per accumulate),
+    /// then mirrored.
+    pub fn syrk(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.cols);
+        self.syrk_range_upper(0, self.rows, &mut out);
+        out.mirror_upper();
+        out
+    }
+
+    /// Accumulate the upper triangle of selfᵀ·self over rows `lo..hi`
+    /// into `out` (the chunk kernel shared by [`Mat::syrk`] and
+    /// [`Mat::par_syrk`]). Caller mirrors once at the end.
+    fn syrk_range_upper(&self, lo: usize, hi: usize, out: &mut Mat) {
+        let m = self.cols;
+        let mut r = lo;
+        while r + 4 <= hi {
+            let (a0, a1) = (self.row(r), self.row(r + 1));
+            let (a2, a3) = (self.row(r + 2), self.row(r + 3));
+            for i in 0..m {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                for j in i..m {
+                    orow[j] += x0 * a0[j] + x1 * a1[j] + x2 * a2[j] + x3 * a3[j];
+                }
+            }
+            r += 4;
+        }
+        while r < hi {
+            let a = self.row(r);
+            for i in 0..m {
+                let x = a[i];
+                if x == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                for j in i..m {
+                    orow[j] += x * a[j];
+                }
+            }
+            r += 1;
+        }
+    }
+
+    /// Copy the upper triangle onto the lower (square matrices whose
+    /// upper half was accumulated by a `*_range_upper` kernel, or
+    /// rank-one-corrected cores assembled triangle-first so they stay
+    /// exactly symmetric — see `score::cores`).
+    pub(crate) fn mirror_upper(&mut self) {
+        let n = self.cols;
+        for i in 0..self.rows {
+            for j in (i + 1)..n {
+                self.data[j * n + i] = self.data[i * n + j];
+            }
+        }
+    }
+
+    /// How many workers a parallel Gram over `rows` rows should use.
+    fn par_workers(rows: usize, threads: usize) -> usize {
+        threads.min(rows / PAR_MIN_ROWS).max(1)
+    }
+
+    /// Row-partitioned parallel selfᵀ·self: rows split into `threads`
+    /// contiguous chunks evaluated under `std::thread::scope`, partial
+    /// upper-triangle Grams summed in chunk order (deterministic for a
+    /// fixed thread count). `threads <= 1` — or too few rows to
+    /// amortize a spawn — is exactly [`Mat::syrk`].
+    pub fn par_syrk(&self, threads: usize) -> Mat {
+        let workers = Self::par_workers(self.rows, threads);
+        if workers <= 1 {
+            return self.syrk();
+        }
+        let m = self.cols;
+        let chunk = self.rows.div_ceil(workers);
+        let parts: Vec<Mat> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let lo = w * chunk;
+                        let hi = ((w + 1) * chunk).min(self.rows);
+                        let mut part = Mat::zeros(m, m);
+                        if lo < hi {
+                            self.syrk_range_upper(lo, hi, &mut part);
+                        }
+                        part
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gram worker panicked")).collect()
+        });
+        let mut out = Mat::zeros(m, m);
+        for part in &parts {
+            for (o, p) in out.data.iter_mut().zip(&part.data) {
+                *o += p;
+            }
+        }
+        out.mirror_upper();
+        out
+    }
+
+    /// Row-partitioned parallel selfᵀ·other (same contract as
+    /// [`Mat::par_syrk`]: chunk-order summation, serial fallback).
+    pub fn par_t_matmul(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.rows, other.rows, "par_t_matmul shape mismatch");
+        let workers = Self::par_workers(self.rows, threads);
+        if workers <= 1 {
+            return self.t_matmul(other);
+        }
+        let (ma, mb) = (self.cols, other.cols);
+        let chunk = self.rows.div_ceil(workers);
+        let parts: Vec<Mat> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let lo = w * chunk;
+                        let hi = ((w + 1) * chunk).min(self.rows);
+                        let mut part = Mat::zeros(ma, mb);
+                        if lo < hi {
+                            self.t_matmul_range_into(other, lo, hi, &mut part);
+                        }
+                        part
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gram worker panicked")).collect()
+        });
+        let mut out = Mat::zeros(ma, mb);
+        for part in &parts {
+            for (o, p) in out.data.iter_mut().zip(&part.data) {
+                *o += p;
             }
         }
         out
@@ -345,6 +510,59 @@ mod tests {
         let fast = a.t_matmul(&b);
         let slow = a.transpose().matmul(&b);
         assert!((&fast - &slow).max_abs() < 1e-14);
+    }
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = crate::util::Pcg64::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn syrk_matches_t_matmul() {
+        // sizes straddling the 4-row panel boundary and the zero fast path
+        for (n, m, seed) in [(1usize, 3usize, 1u64), (4, 5, 2), (7, 6, 3), (33, 9, 4)] {
+            let mut a = random_mat(n, m, seed);
+            a[(0, 0)] = 0.0; // exercise the skip-zero branch
+            let fast = a.syrk();
+            let slow = a.t_matmul(&a);
+            assert!((&fast - &slow).max_abs() < 1e-12, "n={n} m={m}");
+            assert!(fast.is_symmetric(0.0), "syrk output must be exactly symmetric");
+        }
+    }
+
+    #[test]
+    fn par_syrk_matches_serial() {
+        // above the PAR_MIN_ROWS gate so chunks really run in parallel
+        let a = random_mat(700, 11, 5);
+        let serial = a.syrk();
+        for threads in [1usize, 2, 3, 8] {
+            let par = a.par_syrk(threads);
+            assert!(
+                (&par - &serial).max_abs() < 1e-10,
+                "threads={threads} diverged from serial"
+            );
+        }
+        // tiny inputs fall back to the serial kernel bit-for-bit
+        let small = random_mat(20, 4, 6);
+        assert_eq!(small.par_syrk(8).data, small.syrk().data);
+    }
+
+    #[test]
+    fn par_t_matmul_matches_serial() {
+        let a = random_mat(700, 7, 7);
+        let b = random_mat(700, 5, 8);
+        let serial = a.t_matmul(&b);
+        for threads in [2usize, 4] {
+            let par = a.par_t_matmul(&b, threads);
+            assert!((&par - &serial).max_abs() < 1e-10, "threads={threads}");
+        }
+        let small = random_mat(30, 3, 9);
+        let sb = random_mat(30, 2, 10);
+        assert_eq!(small.par_t_matmul(&sb, 8).data, small.t_matmul(&sb).data);
     }
 
     #[test]

@@ -16,7 +16,7 @@ pub mod lu;
 pub mod eig;
 pub mod expm;
 
-pub use chol::Cholesky;
+pub use chol::{psd_factor, Cholesky};
 pub use eig::{sym_eig, sym_eigvals};
 pub use expm::expm;
 pub use lu::Lu;

@@ -95,7 +95,9 @@ fn print_help() {
          \x20 --method cv-lr|cv|marg-lr|bic|bdeu|sc|pc|mm  (default cv-lr)\n\
          \x20 --engine native|pjrt                  CV-LR backend (default native)\n\
          \x20 --artifacts DIR                       artifacts dir (default artifacts)\n\
-         \x20 --workers W                           score-service threads (default 1)\n\n\
+         \x20 --workers W                           score-service threads (default 1)\n\
+         \x20 --parallelism P                       Gram-product threads in the CV-LR\n\
+         \x20                                       fold-core builds (default 1)\n\n\
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
@@ -192,6 +194,7 @@ fn cmd_discover(args: &Args) -> Result<()> {
         .method(args.get_or("method", "cv-lr"))
         .engine(engine)
         .workers(args.usize_or("workers", 1))
+        .parallelism(args.usize_or("parallelism", 1))
         .artifacts_dir(args.get_or("artifacts", "artifacts"));
     let cache_cap = args.usize_or("cache-cap", 0);
     if cache_cap > 0 {
@@ -258,6 +261,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
 
     let cfg = StreamConfig {
         workers: args.usize_or("workers", 1),
+        parallelism: args.usize_or("parallelism", 1),
         cache_capacity: match args.usize_or("cache-cap", 0) {
             0 => None,
             c => Some(c),
@@ -360,7 +364,7 @@ fn cmd_score(args: &Args) -> Result<()> {
     }
     println!("workload : {desc}");
     let sw = Stopwatch::start();
-    let score = CvLrScore::native(ds);
+    let score = CvLrScore::native(ds).with_parallelism(args.usize_or("parallelism", 1));
     let s = score.local_score(target, &parents);
     println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
     Ok(())
@@ -375,6 +379,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         port: port as u16,
         job_workers: args.usize_or("job-workers", 2),
         score_workers: args.usize_or("workers", 1),
+        parallelism: args.usize_or("parallelism", 1),
         cache_capacity: match args.usize_or("cache-cap", 1 << 20) {
             0 => None,
             c => Some(c),

@@ -5,18 +5,94 @@
 //!   path: L1 Pallas Gram products + L2 dumbbell algebra, AOT-compiled);
 //! * [`PjrtExactScorer`] — the exact O(n³) CV fold over the
 //!   `exact_*` artifacts (the Fig. 1 baseline on the same runtime).
+//!
+//! ## Core-fed surrogate factors
+//!
+//! The artifacts consume *factor matrices* (they start by computing the
+//! six Gram cores on device), but the fold-core provider
+//! (`score::cores`) hands this kernel precomputed m×m cores. The two
+//! meet through **surrogate factors**: the score depends on the factors
+//! only through their Gram cores (the rotation-invariance property), so
+//! any matrices reproducing the cores give the identical score. For a
+//! conditional fold, stack the train cores into the PSD matrix
+//!
+//! ```text
+//!   M₁ = [[F, E], [Eᵀ, P]]           ((mz+mx) × (mz+mx))
+//! ```
+//!
+//! factor `M₁ = L·Lᵀ` with the pivoted semidefinite Cholesky
+//! (`linalg::psd_factor`), and split `W = Lᵀ` by columns into
+//! `Λ̃_z₁' | Λ̃ₓ₁'` — r ≤ mz+mx rows whose on-device Gram products are
+//! exactly F, E, P (same for the test side from `[[S, U], [Uᵀ, V]]`).
+//! The true n₀/n₁ travel as scalars (as they always did), and zero
+//! row-padding is exact, so the artifact's algebra is unchanged while
+//! the per-fold transfer shrinks from O(n·m) factor literals to O(m²)
+//! surrogates — the device never sees the sample dimension at all.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::{mat_literal, scalar_literal, xla, Runtime, DX_CAP, DZ_CAP};
-use crate::linalg::Mat;
-use crate::score::cvlr::{CondFold, CvLrKernel, MargFold};
+use crate::linalg::{psd_factor, Mat};
+use crate::score::cvlr::{CondCores, CvLrKernel, MargCores};
 use crate::score::folds::CvParams;
 
-/// CV-LR fold evaluation through the AOT artifacts.
+/// Pivot threshold of the surrogate factorization: relative to the
+/// largest core diagonal, far below the 1e-9 agreement the runtime
+/// integration tests pin, far above rounding dust.
+const SURROGATE_TOL: f64 = 1e-14;
+
+/// Columns `lo..hi` of a matrix.
+fn cols_range(m: &Mat, lo: usize, hi: usize) -> Mat {
+    let mut out = Mat::zeros(m.rows, hi - lo);
+    for r in 0..m.rows {
+        out.row_mut(r).copy_from_slice(&m.row(r)[lo..hi]);
+    }
+    out
+}
+
+/// Stack self/cross cores into the PSD block matrix [[zz, zx], [zxᵀ, xx]].
+fn stack_cores(zz: &Mat, zx: &Mat, xx: &Mat) -> Mat {
+    let (mz, mx) = (zz.rows, xx.rows);
+    debug_assert_eq!((zx.rows, zx.cols), (mz, mx));
+    let t = mz + mx;
+    let mut out = Mat::zeros(t, t);
+    for i in 0..mz {
+        for j in 0..mz {
+            out[(i, j)] = zz[(i, j)];
+        }
+        for j in 0..mx {
+            out[(i, mz + j)] = zx[(i, j)];
+            out[(mz + j, i)] = zx[(i, j)];
+        }
+    }
+    for i in 0..mx {
+        for j in 0..mx {
+            out[(mz + i, mz + j)] = xx[(i, j)];
+        }
+    }
+    out
+}
+
+/// Surrogate factor pair (z', x') reproducing (zz, zx, xx) as Gram
+/// cores: r ≤ mz+mx rows each.
+fn surrogate_pair(zz: &Mat, zx: &Mat, xx: &Mat) -> (Mat, Mat) {
+    let mz = zz.rows;
+    let stacked = stack_cores(zz, zx, xx);
+    let l = psd_factor(&stacked, SURROGATE_TOL);
+    let w = l.transpose(); // r×(mz+mx), WᵀW = stacked
+    (cols_range(&w, 0, mz), cols_range(&w, mz, w.cols))
+}
+
+/// Surrogate factor reproducing one self-core: r ≤ m rows.
+fn surrogate_self(core: &Mat) -> Mat {
+    psd_factor(core, SURROGATE_TOL).transpose()
+}
+
+/// CV-LR fold evaluation through the AOT artifacts, fed by the
+/// fold-core provider (see the module docs for the surrogate scheme).
 ///
 /// The per-fold entry points pay one runtime dispatch each; the fold
 /// *batch* entry points group folds by (row bucket, column bucket) —
@@ -33,11 +109,23 @@ impl PjrtCvLrKernel {
         PjrtCvLrKernel { rt }
     }
 
-    /// (bucket, mcap) shape keys for a conditional fold.
-    fn cond_shape(&self, lx1: &Mat, lz1: &Mat) -> Result<(usize, usize)> {
-        Ok((self.rt.bucket_for(lx1.rows)?, self.rt.m_bucket_for(lx1.cols.max(lz1.cols))?))
+    /// Smallest artifact bucket whose train capacity fits `r1` surrogate
+    /// rows and whose test capacity (bucket/4) fits `r0`.
+    fn bucket_for_rows(&self, r1: usize, r0: usize) -> Result<usize> {
+        self.rt
+            .cvlr_buckets
+            .iter()
+            .cloned()
+            .find(|&b| b >= r1 && b / 4 >= r0)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no CV-LR bucket fits surrogate rows (train {r1}, test {r0}; have {:?})",
+                    self.rt.cvlr_buckets
+                )
+            })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn cond_args(
         &self,
         bucket: usize,
@@ -46,6 +134,8 @@ impl PjrtCvLrKernel {
         lx1: &Mat,
         lz0: &Mat,
         lz1: &Mat,
+        n0: f64,
+        n1: f64,
         p: &CvParams,
     ) -> Result<Vec<xla::Literal>> {
         let n0_cap = bucket / 4;
@@ -54,62 +144,102 @@ impl PjrtCvLrKernel {
             mat_literal(lx1, bucket, mcap)?,
             mat_literal(lz0, n0_cap, mcap)?,
             mat_literal(lz1, bucket, mcap)?,
-            scalar_literal(lx0.rows as f64),
-            scalar_literal(lx1.rows as f64),
+            scalar_literal(n0),
+            scalar_literal(n1),
             scalar_literal(p.lambda),
             scalar_literal(p.gamma),
         ])
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn marg_args(
         &self,
         bucket: usize,
         mcap: usize,
         lx0: &Mat,
         lx1: &Mat,
+        n0: f64,
+        n1: f64,
         p: &CvParams,
     ) -> Result<Vec<xla::Literal>> {
         let n0_cap = bucket / 4;
         Ok(vec![
             mat_literal(lx0, n0_cap, mcap)?,
             mat_literal(lx1, bucket, mcap)?,
-            scalar_literal(lx0.rows as f64),
-            scalar_literal(lx1.rows as f64),
+            scalar_literal(n0),
+            scalar_literal(n1),
             scalar_literal(p.lambda),
             scalar_literal(p.gamma),
         ])
     }
 
-    fn run_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> Result<f64> {
-        let (bucket, mcap) = self.cond_shape(lx1, lz1)?;
-        let args = self.cond_args(bucket, mcap, lx0, lx1, lz0, lz1, p)?;
-        self.rt.execute_scalar(&format!("cvlr_cond_n{bucket}_m{mcap}"), &args)
+    /// Surrogates + shape of one conditional fold.
+    fn cond_call(&self, c: &CondCores<'_>) -> Result<CondCall> {
+        let (lz1, lx1) = surrogate_pair(c.f, c.e, c.p);
+        let (lz0, lx0) = surrogate_pair(c.s, c.u, c.v);
+        let bucket = self.bucket_for_rows(lx1.rows.max(1), lx0.rows.max(1))?;
+        let mcap = self.rt.m_bucket_for(lx1.cols.max(lz1.cols))?;
+        Ok(CondCall { lx0, lx1, lz0, lz1, bucket, mcap, n0: c.n0 as f64, n1: c.n1 as f64 })
     }
 
-    fn run_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> Result<f64> {
-        let bucket = self.rt.bucket_for(lx1.rows)?;
+    /// Surrogates + shape of one marginal fold.
+    fn marg_call(&self, c: &MargCores<'_>) -> Result<MargCall> {
+        let lx1 = surrogate_self(c.p);
+        let lx0 = surrogate_self(c.v);
+        let bucket = self.bucket_for_rows(lx1.rows.max(1), lx0.rows.max(1))?;
         let mcap = self.rt.m_bucket_for(lx1.cols)?;
-        let args = self.marg_args(bucket, mcap, lx0, lx1, p)?;
-        self.rt.execute_scalar(&format!("cvlr_marg_n{bucket}_m{mcap}"), &args)
+        Ok(MargCall { lx0, lx1, bucket, mcap, n0: c.n0 as f64, n1: c.n1 as f64 })
     }
 
-    fn run_cond_batch(&self, folds: &[CondFold<'_>], p: &CvParams) -> Result<Vec<f64>> {
+    fn run_cond_cores(&self, c: &CondCores<'_>, p: &CvParams) -> Result<f64> {
+        let call = self.cond_call(c)?;
+        let args = self.cond_args(
+            call.bucket,
+            call.mcap,
+            &call.lx0,
+            &call.lx1,
+            &call.lz0,
+            &call.lz1,
+            call.n0,
+            call.n1,
+            p,
+        )?;
+        self.rt.execute_scalar(&format!("cvlr_cond_n{}_m{}", call.bucket, call.mcap), &args)
+    }
+
+    fn run_marg_cores(&self, c: &MargCores<'_>, p: &CvParams) -> Result<f64> {
+        let call = self.marg_call(c)?;
+        let args = self.marg_args(
+            call.bucket,
+            call.mcap,
+            &call.lx0,
+            &call.lx1,
+            call.n0,
+            call.n1,
+            p,
+        )?;
+        self.rt.execute_scalar(&format!("cvlr_marg_n{}_m{}", call.bucket, call.mcap), &args)
+    }
+
+    fn run_cond_batch(&self, folds: &[CondCores<'_>], p: &CvParams) -> Result<Vec<f64>> {
         let mut out = vec![0.0; folds.len()];
-        // group folds by artifact shape so each group is one submission
+        // surrogates first, then group by artifact shape so each group
+        // is one submission
+        let calls: Vec<CondCall> =
+            folds.iter().map(|c| self.cond_call(c)).collect::<Result<_>>()?;
         let mut groups: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
-        for (i, f) in folds.iter().enumerate() {
-            groups.entry(self.cond_shape(f.lx1, f.lz1)?).or_default().push(i);
+        for (i, call) in calls.iter().enumerate() {
+            groups.entry((call.bucket, call.mcap)).or_default().push(i);
         }
         for ((bucket, mcap), idxs) in groups {
-            let calls: Vec<Vec<xla::Literal>> = idxs
+            let args: Vec<Vec<xla::Literal>> = idxs
                 .iter()
                 .map(|&i| {
-                    let f = &folds[i];
-                    self.cond_args(bucket, mcap, f.lx0, f.lx1, f.lz0, f.lz1, p)
+                    let c = &calls[i];
+                    self.cond_args(bucket, mcap, &c.lx0, &c.lx1, &c.lz0, &c.lz1, c.n0, c.n1, p)
                 })
                 .collect::<Result<_>>()?;
-            let vals =
-                self.rt.execute_scalar_many(&format!("cvlr_cond_n{bucket}_m{mcap}"), &calls)?;
+            let vals = self.rt.execute_scalar_many(&format!("cvlr_cond_n{bucket}_m{mcap}"), &args)?;
             for (&i, v) in idxs.iter().zip(vals) {
                 out[i] = v;
             }
@@ -117,23 +247,23 @@ impl PjrtCvLrKernel {
         Ok(out)
     }
 
-    fn run_marg_batch(&self, folds: &[MargFold<'_>], p: &CvParams) -> Result<Vec<f64>> {
+    fn run_marg_batch(&self, folds: &[MargCores<'_>], p: &CvParams) -> Result<Vec<f64>> {
         let mut out = vec![0.0; folds.len()];
+        let calls: Vec<MargCall> =
+            folds.iter().map(|c| self.marg_call(c)).collect::<Result<_>>()?;
         let mut groups: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
-        for (i, f) in folds.iter().enumerate() {
-            let key = (self.rt.bucket_for(f.lx1.rows)?, self.rt.m_bucket_for(f.lx1.cols)?);
-            groups.entry(key).or_default().push(i);
+        for (i, call) in calls.iter().enumerate() {
+            groups.entry((call.bucket, call.mcap)).or_default().push(i);
         }
         for ((bucket, mcap), idxs) in groups {
-            let calls: Vec<Vec<xla::Literal>> = idxs
+            let args: Vec<Vec<xla::Literal>> = idxs
                 .iter()
                 .map(|&i| {
-                    let f = &folds[i];
-                    self.marg_args(bucket, mcap, f.lx0, f.lx1, p)
+                    let c = &calls[i];
+                    self.marg_args(bucket, mcap, &c.lx0, &c.lx1, c.n0, c.n1, p)
                 })
                 .collect::<Result<_>>()?;
-            let vals =
-                self.rt.execute_scalar_many(&format!("cvlr_marg_n{bucket}_m{mcap}"), &calls)?;
+            let vals = self.rt.execute_scalar_many(&format!("cvlr_marg_n{bucket}_m{mcap}"), &args)?;
             for (&i, v) in idxs.iter().zip(vals) {
                 out[i] = v;
             }
@@ -142,20 +272,42 @@ impl PjrtCvLrKernel {
     }
 }
 
+/// One prepared conditional artifact call (surrogate factors + shape).
+struct CondCall {
+    lx0: Mat,
+    lx1: Mat,
+    lz0: Mat,
+    lz1: Mat,
+    bucket: usize,
+    mcap: usize,
+    n0: f64,
+    n1: f64,
+}
+
+/// One prepared marginal artifact call.
+struct MargCall {
+    lx0: Mat,
+    lx1: Mat,
+    bucket: usize,
+    mcap: usize,
+    n0: f64,
+    n1: f64,
+}
+
 impl CvLrKernel for PjrtCvLrKernel {
-    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64 {
-        self.run_cond(lx0, lx1, lz0, lz1, p).expect("PJRT cvlr_cond execution failed")
+    fn score_cond_cores(&self, c: &CondCores<'_>, p: &CvParams) -> f64 {
+        self.run_cond_cores(c, p).expect("PJRT cvlr_cond execution failed")
     }
 
-    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64 {
-        self.run_marg(lx0, lx1, p).expect("PJRT cvlr_marg execution failed")
+    fn score_marg_cores(&self, c: &MargCores<'_>, p: &CvParams) -> f64 {
+        self.run_marg_cores(c, p).expect("PJRT cvlr_marg execution failed")
     }
 
-    fn score_cond_batch(&self, folds: &[CondFold<'_>], p: &CvParams) -> Vec<f64> {
+    fn score_cond_batch(&self, folds: &[CondCores<'_>], p: &CvParams) -> Vec<f64> {
         self.run_cond_batch(folds, p).expect("PJRT cvlr_cond batch execution failed")
     }
 
-    fn score_marg_batch(&self, folds: &[MargFold<'_>], p: &CvParams) -> Vec<f64> {
+    fn score_marg_batch(&self, folds: &[MargCores<'_>], p: &CvParams) -> Vec<f64> {
         self.run_marg_batch(folds, p).expect("PJRT cvlr_marg batch execution failed")
     }
 
@@ -177,6 +329,7 @@ impl PjrtExactScorer {
     }
 
     /// One conditional fold: raw data blocks (x: ≤8 cols, z: ≤32 cols).
+    #[allow(clippy::too_many_arguments)]
     pub fn fold_cond(
         &self,
         x0: &Mat,
@@ -212,5 +365,52 @@ impl PjrtExactScorer {
             scalar_literal(p.gamma),
         ];
         self.rt.execute_scalar(&format!("exact_marg_n{n}"), &args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_factor(n: usize, m: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut f = Mat::zeros(n, m);
+        for v in &mut f.data {
+            *v = rng.normal();
+        }
+        f
+    }
+
+    /// Surrogate factors reproduce the stacked cores exactly — the
+    /// invariant the artifact path rests on (device Gram of surrogates
+    /// == host cores). Pure host-side; needs no artifacts.
+    #[test]
+    fn surrogates_reproduce_cores() {
+        let lz = random_factor(60, 3, 1);
+        let lx = random_factor(60, 5, 2);
+        let f = lz.t_matmul(&lz);
+        let e = lz.t_matmul(&lx);
+        let p = lx.t_matmul(&lx);
+        let (sz, sx) = surrogate_pair(&f, &e, &p);
+        assert!(sz.rows <= 8, "surrogate rows bounded by mz+mx (got {})", sz.rows);
+        assert_eq!(sz.rows, sx.rows);
+        assert!((&sz.t_matmul(&sz) - &f).max_abs() < 1e-8, "F not reproduced");
+        assert!((&sz.t_matmul(&sx) - &e).max_abs() < 1e-8, "E not reproduced");
+        assert!((&sx.t_matmul(&sx) - &p).max_abs() < 1e-8, "P not reproduced");
+        let s = surrogate_self(&p);
+        assert!((&s.t_matmul(&s) - &p).max_abs() < 1e-8, "self core not reproduced");
+    }
+
+    /// Rank-deficient cores (more columns than samples backing them)
+    /// still factor: the pivoted scheme drops the null space.
+    #[test]
+    fn surrogates_handle_rank_deficiency() {
+        let lx = random_factor(4, 9, 3); // rank ≤ 4 core of size 9×9
+        let p = lx.t_matmul(&lx);
+        let s = surrogate_self(&p);
+        // 4 in exact arithmetic; leave one pivot of slack for rounding
+        assert!(s.rows <= 5, "rank-deficient core must yield few rows (got {})", s.rows);
+        assert!((&s.t_matmul(&s) - &p).max_abs() < 1e-8);
     }
 }

@@ -34,7 +34,7 @@ fn rss(y: &[f64], x: &Mat) -> f64 {
             d[(r, c + 1)] = x[(r, c)];
         }
     }
-    let dtd = d.t_matmul(&d).add_diag(1e-9);
+    let dtd = d.syrk().add_diag(1e-9);
     let mut dty = Mat::zeros(k + 1, 1);
     for r in 0..n {
         for c in 0..=k {

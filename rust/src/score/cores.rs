@@ -1,0 +1,569 @@
+//! The fold-core provider: every centered m×m core of the CV-LR score,
+//! derived by **downdating** instead of per-fold recomputation.
+//!
+//! The old inner loop paid O(Q·n·m²) per candidate pair: for each of
+//! the Q CV folds it materialized centered train/test factor copies
+//! (`split_center`) and recomputed the six Gram cores (P, E, F, V, U,
+//! S) from the n×m factors. But the fold test blocks *partition* the
+//! rows of Λ, so
+//!
+//! ```text
+//!   G_full = ΛᵀΛ = Σ_f Λ_fᵀΛ_f          (one pass over the data)
+//!   G_train^f = G_full − Λ_fᵀΛ_f         (downdate, O(m²) per fold)
+//! ```
+//!
+//! and train-mean centering is a rank-one correction of the uncentered
+//! cores (with s = column sums, μ = s_train/n₁):
+//!
+//! ```text
+//!   P^f = G_train^f − s_train s_trainᵀ / n₁
+//!   V^f = G_test^f − s_test μᵀ − μ s_testᵀ + n₀ μμᵀ
+//! ```
+//!
+//! (identically for the cross cores E/U of a (z, x) pair). The whole
+//! per-pair cost collapses to **O(n·mz·mx) once** — the per-fold test
+//! cross products, whose sum is the full cross Gram — plus O(Q·m²)
+//! corrections; the per-set self cores are built once and cached
+//! ([`FoldCoreCache`]) across every candidate, segment and sweep that
+//! references the set, so a GES run scoring hundreds of parent-set
+//! variations of one target pays for P/V exactly once.
+//!
+//! Parallelism: the per-fold Gram jobs (a row partition of Λ) are
+//! distributed over a `std::thread::scope` pool gated on the
+//! `parallelism` knob (`DiscoveryConfig::parallelism`); when threads
+//! exceed the fold count, each job row-partitions its own block through
+//! [`Mat::par_syrk`]/[`Mat::par_t_matmul`]. For `parallelism ≤ Q` the
+//! results are bit-identical to the serial build (per-fold work is
+//! serial and fold sums are accumulated in fold order).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::Mat;
+
+/// One conditional fold of centered cores, borrowed from the provider
+/// caches: the complete input of the dumbbell-form score algebra
+/// (`CvLrKernel::score_cond_cores`). Row counts travel explicitly —
+/// cores carry no sample dimension.
+pub struct CondCores<'a> {
+    /// Train self-core of the target factor: P = Λ̃ₓ₁ᵀΛ̃ₓ₁ (mx×mx).
+    pub p: &'a Mat,
+    /// Train cross-core: E = Λ̃_z₁ᵀΛ̃ₓ₁ (mz×mx).
+    pub e: &'a Mat,
+    /// Train self-core of the parent factor: F = Λ̃_z₁ᵀΛ̃_z₁ (mz×mz).
+    pub f: &'a Mat,
+    /// Test self-core of the target factor: V = Λ̃ₓ₀ᵀΛ̃ₓ₀ (mx×mx).
+    pub v: &'a Mat,
+    /// Test cross-core: U = Λ̃_z₀ᵀΛ̃ₓ₀ (mz×mx).
+    pub u: &'a Mat,
+    /// Test self-core of the parent factor: S = Λ̃_z₀ᵀΛ̃_z₀ (mz×mz).
+    pub s: &'a Mat,
+    /// Test rows n₀ of the fold.
+    pub n0: usize,
+    /// Train rows n₁ of the fold.
+    pub n1: usize,
+}
+
+/// One marginal fold of centered cores (`|z| = 0`).
+pub struct MargCores<'a> {
+    pub p: &'a Mat,
+    pub v: &'a Mat,
+    pub n0: usize,
+    pub n1: usize,
+}
+
+/// Owned conditional cores — the straight-line reference path (centered
+/// fold factors → direct `t_matmul` cores), kept for tests, the
+/// factor-level `CvLrKernel` entry points, and cross-engine validation.
+pub struct CondCoresBuf {
+    pub p: Mat,
+    pub e: Mat,
+    pub f: Mat,
+    pub v: Mat,
+    pub u: Mat,
+    pub s: Mat,
+    pub n0: usize,
+    pub n1: usize,
+}
+
+impl CondCoresBuf {
+    /// Direct cores from factors already centered by the train mean
+    /// (`split_center` output) — no downdating, the pre-provider path.
+    pub fn from_centered_factors(lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat) -> CondCoresBuf {
+        CondCoresBuf {
+            p: lx1.t_matmul(lx1),
+            e: lz1.t_matmul(lx1),
+            f: lz1.t_matmul(lz1),
+            v: lx0.t_matmul(lx0),
+            u: lz0.t_matmul(lx0),
+            s: lz0.t_matmul(lz0),
+            n0: lx0.rows,
+            n1: lx1.rows,
+        }
+    }
+
+    pub fn view(&self) -> CondCores<'_> {
+        CondCores {
+            p: &self.p,
+            e: &self.e,
+            f: &self.f,
+            v: &self.v,
+            u: &self.u,
+            s: &self.s,
+            n0: self.n0,
+            n1: self.n1,
+        }
+    }
+}
+
+/// Owned marginal cores (see [`CondCoresBuf`]).
+pub struct MargCoresBuf {
+    pub p: Mat,
+    pub v: Mat,
+    pub n0: usize,
+    pub n1: usize,
+}
+
+impl MargCoresBuf {
+    pub fn from_centered_factors(lx0: &Mat, lx1: &Mat) -> MargCoresBuf {
+        MargCoresBuf {
+            p: lx1.t_matmul(lx1),
+            v: lx0.t_matmul(lx0),
+            n0: lx0.rows,
+            n1: lx1.rows,
+        }
+    }
+
+    pub fn view(&self) -> MargCores<'_> {
+        MargCores { p: &self.p, v: &self.v, n0: self.n0, n1: self.n1 }
+    }
+}
+
+/// Everything the provider precomputes for ONE variable set: the fold
+/// partition of its factor, the per-fold test Grams and column sums,
+/// the full-data Gram (their sum), and the derived centered self-cores
+/// P^f / V^f per fold. Built once per set by [`SetCores::build`] in
+/// O(n·m²), cached by [`FoldCoreCache`].
+pub struct SetCores {
+    /// Per-fold uncentered test row blocks of the factor (the fold
+    /// partition of Λ's rows) — retained for cross-core products.
+    pub test_blocks: Vec<Mat>,
+    /// Per-fold test-block column sums.
+    pub test_colsum: Vec<Vec<f64>>,
+    /// Full-data column sums (Σ over fold test blocks).
+    pub colsum: Vec<f64>,
+    /// Full-data Gram ΛᵀΛ (Σ over per-fold test Grams).
+    pub gram: Mat,
+    /// Per-fold test Grams Λ_fᵀΛ_f.
+    pub test_gram: Vec<Mat>,
+    /// Per-fold centered train self-cores P^f.
+    pub train_self: Vec<Mat>,
+    /// Per-fold centered test self-cores V^f (centered by the train
+    /// mean, matching `split_center`).
+    pub test_self: Vec<Mat>,
+    /// Per-fold train means μ^f.
+    pub train_mean: Vec<Vec<f64>>,
+    /// Per-fold (n₀, n₁).
+    pub sizes: Vec<(usize, usize)>,
+}
+
+/// Column sums of a matrix.
+fn colsum(m: &Mat) -> Vec<f64> {
+    let mut s = vec![0.0; m.cols];
+    for r in 0..m.rows {
+        for (acc, v) in s.iter_mut().zip(m.row(r)) {
+            *acc += v;
+        }
+    }
+    s
+}
+
+/// Evaluate `f(0..n_items)` on a scoped worker pool (`workers <= 1` is
+/// a plain serial map). Items are claimed through an atomic counter;
+/// results land in item order, so the output is independent of worker
+/// interleaving.
+fn par_map<T, F>(n_items: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let w = workers.min(n_items).max(1);
+    if w <= 1 {
+        return (0..n_items).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n_items);
+    out.resize_with(n_items, || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..w)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n_items {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, v) in h.join().expect("fold-core worker panicked") {
+                out[i] = Some(v);
+            }
+        }
+    });
+    out.into_iter().map(|s| s.expect("every fold job completed")).collect()
+}
+
+impl SetCores {
+    /// Build the self-cores of one variable set from its (uncentered)
+    /// full-data factor and the CV fold assignment. O(n·m²) total: the
+    /// per-fold test Grams (computed on the scoped pool, `threads`
+    /// gated) sum to the full Gram, and every centered core is an
+    /// O(m²) downdate + rank-one correction of them.
+    pub fn build(lam: &Mat, folds: &[(Vec<usize>, Vec<usize>)], threads: usize) -> SetCores {
+        let m = lam.cols;
+        let q = folds.len();
+        assert!(q >= 2, "need at least 2 folds");
+        let test_blocks: Vec<Mat> = folds.iter().map(|(test, _)| lam.select_rows(test)).collect();
+        // fold jobs on the pool; intra-fold row partition only when
+        // threads exceed the fold count
+        let per_job = (threads / q).max(1);
+        let grams: Vec<(Mat, Vec<f64>)> = par_map(q, threads, |fi| {
+            let block = &test_blocks[fi];
+            (block.par_syrk(per_job), colsum(block))
+        });
+        let mut gram = Mat::zeros(m, m);
+        let mut colsum_full = vec![0.0; m];
+        for (g, s) in &grams {
+            for (a, b) in gram.data.iter_mut().zip(&g.data) {
+                *a += b;
+            }
+            for (a, b) in colsum_full.iter_mut().zip(s) {
+                *a += b;
+            }
+        }
+        let mut test_gram = Vec::with_capacity(q);
+        let mut test_colsum = Vec::with_capacity(q);
+        for (g, s) in grams {
+            test_gram.push(g);
+            test_colsum.push(s);
+        }
+
+        let mut train_self = Vec::with_capacity(q);
+        let mut test_self = Vec::with_capacity(q);
+        let mut train_mean = Vec::with_capacity(q);
+        let mut sizes = Vec::with_capacity(q);
+        for f in 0..q {
+            let n0 = folds[f].0.len();
+            let n1 = folds[f].1.len();
+            assert!(n1 > 0, "fold {f} has an empty train split");
+            let n1f = n1 as f64;
+            let n0f = n0 as f64;
+            let g_te = &test_gram[f];
+            let s_te = &test_colsum[f];
+            let s_tr: Vec<f64> = colsum_full.iter().zip(s_te).map(|(a, b)| a - b).collect();
+            let mu: Vec<f64> = s_tr.iter().map(|v| v / n1f).collect();
+            // triangle-first so both cores are exactly symmetric
+            let mut p = Mat::zeros(m, m);
+            let mut v = Mat::zeros(m, m);
+            for i in 0..m {
+                for j in i..m {
+                    p[(i, j)] = (gram[(i, j)] - g_te[(i, j)]) - s_tr[i] * s_tr[j] / n1f;
+                    v[(i, j)] =
+                        g_te[(i, j)] - s_te[i] * mu[j] - mu[i] * s_te[j] + n0f * mu[i] * mu[j];
+                }
+            }
+            p.mirror_upper();
+            v.mirror_upper();
+            train_self.push(p);
+            test_self.push(v);
+            train_mean.push(mu);
+            sizes.push((n0, n1));
+        }
+        SetCores {
+            test_blocks,
+            test_colsum,
+            colsum: colsum_full,
+            gram,
+            test_gram,
+            train_self,
+            test_self,
+            train_mean,
+            sizes,
+        }
+    }
+
+    /// Number of CV folds.
+    pub fn num_folds(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Factor columns m.
+    pub fn cols(&self) -> usize {
+        self.gram.rows
+    }
+
+    /// The marginal core view of fold `f`.
+    pub fn marg_fold(&self, f: usize) -> MargCores<'_> {
+        MargCores {
+            p: &self.train_self[f],
+            v: &self.test_self[f],
+            n0: self.sizes[f].0,
+            n1: self.sizes[f].1,
+        }
+    }
+}
+
+/// The centered cross-cores E^f / U^f of one (parent-set z, target x)
+/// pair — the only per-pair full-data work left: O(n·mz·mx) of per-fold
+/// test cross products (whose sum is the full cross Gram) plus O(Q·mz·mx)
+/// corrections.
+pub struct PairCores {
+    /// Per-fold centered train cross-cores E^f (mz×mx).
+    pub train_cross: Vec<Mat>,
+    /// Per-fold centered test cross-cores U^f (mz×mx).
+    pub test_cross: Vec<Mat>,
+}
+
+/// Build the cross-cores of a (z, x) pair from their self-core caches.
+/// Both must have been built over the same fold assignment (the
+/// provider guarantees it — folds are a function of (n, Q) only).
+pub fn pair_cores(z: &SetCores, x: &SetCores, threads: usize) -> PairCores {
+    let q = z.num_folds();
+    assert_eq!(q, x.num_folds(), "pair_cores needs matching fold counts");
+    let (mz, mx) = (z.cols(), x.cols());
+    let per_job = (threads / q).max(1);
+    let c_test: Vec<Mat> =
+        par_map(q, threads, |f| z.test_blocks[f].par_t_matmul(&x.test_blocks[f], per_job));
+    let mut c_full = Mat::zeros(mz, mx);
+    for c in &c_test {
+        for (a, b) in c_full.data.iter_mut().zip(&c.data) {
+            *a += b;
+        }
+    }
+    let mut train_cross = Vec::with_capacity(q);
+    let mut test_cross = Vec::with_capacity(q);
+    for f in 0..q {
+        let (n0, n1) = z.sizes[f];
+        debug_assert_eq!((n0, n1), x.sizes[f], "fold assignments diverged");
+        let n1f = n1 as f64;
+        let n0f = n0 as f64;
+        let sz_tr: Vec<f64> =
+            z.colsum.iter().zip(&z.test_colsum[f]).map(|(a, b)| a - b).collect();
+        let sx_tr: Vec<f64> =
+            x.colsum.iter().zip(&x.test_colsum[f]).map(|(a, b)| a - b).collect();
+        let (mu_z, mu_x) = (&z.train_mean[f], &x.train_mean[f]);
+        let (sz_te, sx_te) = (&z.test_colsum[f], &x.test_colsum[f]);
+        let ct = &c_test[f];
+        let mut e = Mat::zeros(mz, mx);
+        let mut u = Mat::zeros(mz, mx);
+        for i in 0..mz {
+            for j in 0..mx {
+                e[(i, j)] = (c_full[(i, j)] - ct[(i, j)]) - sz_tr[i] * sx_tr[j] / n1f;
+                u[(i, j)] =
+                    ct[(i, j)] - sz_te[i] * mu_x[j] - mu_z[i] * sx_te[j] + n0f * mu_z[i] * mu_x[j];
+            }
+        }
+        train_cross.push(e);
+        test_cross.push(u);
+    }
+    PairCores { train_cross, test_cross }
+}
+
+/// The conditional core view of fold `f` for a (z, x) pair.
+pub fn cond_fold<'a>(
+    x: &'a SetCores,
+    z: &'a SetCores,
+    pair: &'a PairCores,
+    f: usize,
+) -> CondCores<'a> {
+    CondCores {
+        p: &x.train_self[f],
+        e: &pair.train_cross[f],
+        f: &z.train_self[f],
+        v: &x.test_self[f],
+        u: &pair.test_cross[f],
+        s: &z.test_self[f],
+        n0: x.sizes[f].0,
+        n1: x.sizes[f].1,
+    }
+}
+
+/// Per-variable-set self-core cache, keyed by the sorted variable set.
+/// One [`SetCores::build`] per set per dataset version: `CvLrScore`
+/// keeps it for the life of the score, the streaming backend clears it
+/// on every append (every core depends on every row).
+#[derive(Default)]
+pub struct FoldCoreCache {
+    inner: Mutex<HashMap<Vec<usize>, Arc<SetCores>>>,
+}
+
+impl FoldCoreCache {
+    pub fn new() -> FoldCoreCache {
+        FoldCoreCache::default()
+    }
+
+    /// Cached self-cores for `key` (must be sorted), if resident — the
+    /// fast path for callers that want to skip assembling build inputs
+    /// (fold vectors) on a hit.
+    pub fn get(&self, key: &[usize]) -> Option<Arc<SetCores>> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    /// Cached self-cores for `key` (must be sorted), building from the
+    /// factor on a miss. The build runs OUTSIDE the lock — the O(n·m²)
+    /// work must not serialize concurrent score workers; racing
+    /// builders of the same set: first insert wins.
+    pub fn get_or_build(
+        &self,
+        key: &[usize],
+        folds: &[(Vec<usize>, Vec<usize>)],
+        threads: usize,
+        factor: &mut dyn FnMut() -> Arc<Mat>,
+    ) -> Arc<SetCores> {
+        if let Some(c) = self.inner.lock().unwrap().get(key) {
+            return c.clone();
+        }
+        let lam = factor();
+        let cores = Arc::new(SetCores::build(&lam, folds, threads));
+        self.inner.lock().unwrap().entry(key.to_vec()).or_insert(cores).clone()
+    }
+
+    /// Drop every cached entry (dataset rows changed); returns how many
+    /// were resident.
+    pub fn clear(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.len();
+        inner.clear();
+        n
+    }
+
+    /// Resident variable sets.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::cvlr::split_center;
+    use crate::score::folds::stride_folds;
+    use crate::util::Pcg64;
+
+    fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    /// Downdated self-cores equal the split_center reference cores.
+    #[test]
+    fn set_cores_match_split_center_reference() {
+        let lam = random_mat(53, 4, 1);
+        let folds = stride_folds(53, 5);
+        let cores = SetCores::build(&lam, &folds, 1);
+        assert_eq!(cores.num_folds(), 5);
+        for (f, (test, train)) in folds.iter().enumerate() {
+            let (l0, l1) = split_center(&lam, test, train);
+            let p_ref = l1.t_matmul(&l1);
+            let v_ref = l0.t_matmul(&l0);
+            assert!(
+                (&cores.train_self[f] - &p_ref).max_abs() < 1e-10,
+                "P mismatch on fold {f}"
+            );
+            assert!(
+                (&cores.test_self[f] - &v_ref).max_abs() < 1e-10,
+                "V mismatch on fold {f}"
+            );
+            assert_eq!(cores.sizes[f], (test.len(), train.len()));
+        }
+        // the fold test Grams sum to the full Gram
+        let full = lam.t_matmul(&lam);
+        assert!((&cores.gram - &full).max_abs() < 1e-10);
+    }
+
+    /// Downdated cross-cores equal the split_center reference cores.
+    #[test]
+    fn pair_cores_match_split_center_reference() {
+        let lz = random_mat(47, 3, 2);
+        let lx = random_mat(47, 5, 3);
+        let folds = stride_folds(47, 4);
+        let z = SetCores::build(&lz, &folds, 1);
+        let x = SetCores::build(&lx, &folds, 1);
+        let pair = pair_cores(&z, &x, 1);
+        for (f, (test, train)) in folds.iter().enumerate() {
+            let (lz0, lz1) = split_center(&lz, test, train);
+            let (lx0, lx1) = split_center(&lx, test, train);
+            let e_ref = lz1.t_matmul(&lx1);
+            let u_ref = lz0.t_matmul(&lx0);
+            assert!(
+                (&pair.train_cross[f] - &e_ref).max_abs() < 1e-10,
+                "E mismatch on fold {f}"
+            );
+            assert!(
+                (&pair.test_cross[f] - &u_ref).max_abs() < 1e-10,
+                "U mismatch on fold {f}"
+            );
+        }
+    }
+
+    /// For parallelism ≤ Q the build is bit-identical to serial (per-
+    /// fold work stays serial, fold sums accumulate in fold order).
+    #[test]
+    fn build_is_deterministic_across_thread_counts() {
+        let lam = random_mat(80, 6, 4);
+        let folds = stride_folds(80, 5);
+        let serial = SetCores::build(&lam, &folds, 1);
+        for threads in [2usize, 4, 5] {
+            let par = SetCores::build(&lam, &folds, threads);
+            assert_eq!(par.gram.data, serial.gram.data, "threads={threads}");
+            for f in 0..5 {
+                assert_eq!(par.train_self[f].data, serial.train_self[f].data);
+                assert_eq!(par.test_self[f].data, serial.test_self[f].data);
+            }
+        }
+        let lx = random_mat(80, 3, 5);
+        let x1 = SetCores::build(&lx, &folds, 1);
+        let p1 = pair_cores(&serial, &x1, 1);
+        let p4 = pair_cores(&serial, &x1, 4);
+        for f in 0..5 {
+            assert_eq!(p1.train_cross[f].data, p4.train_cross[f].data);
+            assert_eq!(p1.test_cross[f].data, p4.test_cross[f].data);
+        }
+    }
+
+    #[test]
+    fn fold_core_cache_builds_once_and_clears() {
+        let lam = Arc::new(random_mat(40, 3, 6));
+        let folds = stride_folds(40, 4);
+        let cache = FoldCoreCache::new();
+        let builds = std::cell::Cell::new(0usize);
+        let mut factor = || {
+            builds.set(builds.get() + 1);
+            lam.clone()
+        };
+        let a = cache.get_or_build(&[0, 2], &folds, 1, &mut factor);
+        let b = cache.get_or_build(&[0, 2], &folds, 1, &mut factor);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert_eq!(builds.get(), 1, "the factor is pulled once per set");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.clear(), 1);
+        assert!(cache.is_empty());
+        let _ = cache.get_or_build(&[0, 2], &folds, 1, &mut factor);
+        assert_eq!(builds.get(), 2, "cleared entries rebuild");
+    }
+}

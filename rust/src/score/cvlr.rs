@@ -13,20 +13,32 @@
 //!
 //! with `D = (n₁λI + F)⁻¹`, `T = P − 2EᵀDE + EᵀDFDE`,
 //! `Q = I + T/(n₁γ)` (whose Cholesky gives both `log|n₁βB+I| = log|Q|`
-//! and `G = Q⁻¹`), and `W = Λ̃ₓ₁ᵀCΛ̃ₓ₁ = c₁²T − n₁β c₁⁴ T G T`
+//! and the `Q⁻¹·` solves), and `W = Λ̃ₓ₁ᵀCΛ̃ₓ₁ = c₁²T − n₁β c₁⁴ T Q⁻¹ T`
 //! (`c₁ = 1/(n₁λ)`) — algebraically identical to the paper's
-//! 𝔄/𝔅/ℭ/𝔇 decomposition (Eq. 18-19) but with fewer products.
-//! The final trace is Eq. (26): `Tr[(I − n₁βW)·M₂]` with
+//! 𝔄/𝔅/ℭ/𝔇 decomposition (Eq. 18-19) but with fewer products. `D` and
+//! `Q⁻¹` are never formed: every appearance is a triangular solve
+//! against the corresponding Cholesky factor. The final trace is
+//! Eq. (26): `Tr[(I − n₁βW)·M₂]` with
 //! `M₂ = V − 2c₁·Eᵀ(I−DF)U + c₁²·Eᵀ(I−DF)S(I−DF)ᵀE`.
 //!
-//! The m×m core algebra sits behind [`CvLrKernel`] so that it can run
-//! either natively (this module) or through the AOT-compiled XLA
-//! artifacts (`runtime::PjrtKernel`), which also compute the O(nm²)
-//! Gram products with the L1 Pallas kernel.
+//! **Core-provider architecture** (see [`super::cores`]): the per-fold
+//! centered cores are *not* recomputed from n×m factors per candidate.
+//! A [`FoldCoreCache`] holds, per variable set, the downdated self-core
+//! bundle ([`SetCores`]: one O(n·m²) pass, P/V per fold by `G_train =
+//! G_full − G_test` + rank-one mean corrections), shared by every
+//! candidate, segment and GES sweep; per unique (parents → target) pair
+//! a segment computes the cross-cores ([`PairCores`], the only
+//! remaining O(n·mz·mx) per-pair work) once. The [`CvLrKernel`] backends
+//! consume the assembled [`CondCores`]/[`MargCores`] views — natively
+//! (this module) or through the AOT-compiled XLA artifacts
+//! (`runtime::PjrtKernel`), which synthesize m-row surrogate factors
+//! from the cores so the device never sees the n×m factors at all.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use super::cores::{cond_fold, pair_cores, FoldCoreCache, PairCores, SetCores};
+pub use super::cores::{CondCores, CondCoresBuf, MargCores, MargCoresBuf};
 use super::folds::{stride_folds, CvParams};
 use super::{LocalScore, ScoreBackend, ScoreRequest};
 use crate::data::Dataset;
@@ -34,40 +46,42 @@ use crate::kernel::{median_heuristic, Kernel};
 use crate::linalg::{Cholesky, Mat};
 use crate::lowrank::{factorize, LowRank, LowRankConfig};
 
-/// One centered CV fold of conditional-score factors (borrowed views
-/// into the per-batch split cache).
-pub struct CondFold<'a> {
-    pub lx0: &'a Mat,
-    pub lx1: &'a Mat,
-    pub lz0: &'a Mat,
-    pub lz1: &'a Mat,
-}
-
-/// One centered CV fold of marginal-score factors.
-pub struct MargFold<'a> {
-    pub lx0: &'a Mat,
-    pub lx1: &'a Mat,
-}
-
-/// Backend for the per-fold CV-LR score evaluation. Factors arrive
-/// *already centered by the train mean*.
+/// Backend for the per-fold CV-LR score evaluation, consuming
+/// precomputed centered cores (the provider output of
+/// [`super::cores`]).
 pub trait CvLrKernel: Send + Sync {
-    /// Conditional score (Eq. 8 via §5): one fold.
-    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64;
-    /// Marginal score (Eq. 9 via §5 "|z|=0"): one fold.
-    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64;
+    /// Conditional score (Eq. 8 via §5): one fold, from cores.
+    fn score_cond_cores(&self, c: &CondCores<'_>, p: &CvParams) -> f64;
+    /// Marginal score (Eq. 9 via §5 "|z|=0"): one fold, from cores.
+    fn score_marg_cores(&self, c: &MargCores<'_>, p: &CvParams) -> f64;
 
     /// All folds of one conditional score in a single submission.
     /// Backends that pay a per-invocation dispatch cost (PJRT) override
     /// this to amortize it; the default evaluates fold by fold, so the
     /// batched and scalar paths are bit-identical by construction.
-    fn score_cond_batch(&self, folds: &[CondFold<'_>], p: &CvParams) -> Vec<f64> {
-        folds.iter().map(|f| self.score_cond(f.lx0, f.lx1, f.lz0, f.lz1, p)).collect()
+    fn score_cond_batch(&self, folds: &[CondCores<'_>], p: &CvParams) -> Vec<f64> {
+        folds.iter().map(|c| self.score_cond_cores(c, p)).collect()
     }
 
     /// All folds of one marginal score in a single submission.
-    fn score_marg_batch(&self, folds: &[MargFold<'_>], p: &CvParams) -> Vec<f64> {
-        folds.iter().map(|f| self.score_marg(f.lx0, f.lx1, p)).collect()
+    fn score_marg_batch(&self, folds: &[MargCores<'_>], p: &CvParams) -> Vec<f64> {
+        folds.iter().map(|c| self.score_marg_cores(c, p)).collect()
+    }
+
+    /// Straight-line factor entry point (the pre-downdating reference,
+    /// kept for tests and cross-engine validation): factors already
+    /// centered by the train mean → direct `t_matmul` cores → the core
+    /// algebra.
+    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64 {
+        let buf = CondCoresBuf::from_centered_factors(lx0, lx1, lz0, lz1);
+        self.score_cond_cores(&buf.view(), p)
+    }
+
+    /// Factor entry point of the marginal score (see
+    /// [`CvLrKernel::score_cond`]).
+    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64 {
+        let buf = MargCoresBuf::from_centered_factors(lx0, lx1);
+        self.score_marg_cores(&buf.view(), p)
     }
 
     /// Human-readable backend name (for bench output).
@@ -78,46 +92,42 @@ pub trait CvLrKernel: Send + Sync {
 pub struct NativeCvLrKernel;
 
 impl CvLrKernel for NativeCvLrKernel {
-    fn score_cond(&self, lx0: &Mat, lx1: &Mat, lz0: &Mat, lz1: &Mat, p: &CvParams) -> f64 {
-        let n1 = lx1.rows as f64;
-        let n0 = lx0.rows as f64;
+    fn score_cond_cores(&self, c: &CondCores<'_>, p: &CvParams) -> f64 {
+        let n1 = c.n1 as f64;
+        let n0 = c.n0 as f64;
         let (lam, gam, beta) = (p.lambda, p.gamma, p.beta());
         let c1 = 1.0 / (n1 * lam);
 
-        // m×m cores — the only O(n·m²) work.
-        let pm = lx1.t_matmul(lx1); // P
-        let e = lz1.t_matmul(lx1); // E
-        let f = lz1.t_matmul(lz1); // F
-        let v = lx0.t_matmul(lx0); // V
-        let u = lz0.t_matmul(lx0); // U
-        let s = lz0.t_matmul(lz0); // S
-
-        // D = (n₁λ I + F)⁻¹  (mz×mz)
-        let d = Cholesky::new(&f.add_diag(n1 * lam)).expect("F + n1λI SPD").inverse();
+        // D = (n₁λ I + F)⁻¹ enters only through D·E and D·F: two
+        // triangular solves against one Cholesky factorization — no
+        // m³ inverse is ever formed.
+        let chd = Cholesky::new(&c.f.add_diag(n1 * lam)).expect("F + n1λI SPD");
+        let de = chd.solve(c.e); // D·E (mz×mx)
+        let df = chd.solve(c.f); // D·F (mz×mz)
         // T = P − 2 EᵀDE + EᵀDFDE = (n₁λ)² Λ̃ᵀA²Λ̃   (Eq. 17)
-        let de = d.matmul(&e); // mz×mx
-        let et_de = e.t_matmul(&de); // EᵀDE (mx×mx)
-        let fde = f.matmul(&de);
+        let et_de = c.e.t_matmul(&de); // EᵀDE (mx×mx)
+        let fde = c.f.matmul(&de);
         let et_dfde = de.t_matmul(&fde); // EᵀDFDE
-        let t = &(&pm - &et_de.scale(2.0)) + &et_dfde;
+        let t = &(c.p - &et_de.scale(2.0)) + &et_dfde;
 
-        // Q = I + T/(n₁γ); log|Q| = log|n₁βB + I| (Eq. 20-21); G = Q⁻¹.
+        // Q = I + T/(n₁γ); log|Q| = log|n₁βB + I| (Eq. 20-21); Q⁻¹T by
+        // solve against the same factorization.
         let q = t.scale(1.0 / (n1 * gam)).add_diag(1.0);
         let chq = Cholesky::new(&q).expect("Q SPD");
         let logdet = chq.log_det();
-        let g = chq.inverse();
 
-        // W = c₁²·T − n₁β·c₁⁴·T G T  (mx×mx)
-        let tgt = t.matmul(&g).matmul(&t);
+        // W = c₁²·T − n₁β·c₁⁴·T(Q⁻¹T)  (mx×mx)
+        let qt = chq.solve(&t);
+        let tgt = t.matmul(&qt);
         let w = &t.scale(c1 * c1) - &tgt.scale(n1 * beta * c1.powi(4));
 
         // I − DF (mz×mz) and M₂ (Eq. 26).
-        let idf = &Mat::eye(f.rows) - &d.matmul(&f);
-        let et_idf = e.t_matmul(&idf); // Eᵀ(I−DF)  (mx×mz)
+        let idf = &Mat::eye(c.f.rows) - &df;
+        let et_idf = c.e.t_matmul(&idf); // Eᵀ(I−DF)  (mx×mz)
         let m2 = {
-            let second = et_idf.matmul(&u); // Eᵀ(I−DF)U (mx×mx)
-            let third = et_idf.matmul(&s).matmul_t(&et_idf); // Eᵀ(I−DF)S(I−DF)ᵀE
-            &(&v - &second.scale(2.0 * c1)) + &third.scale(c1 * c1)
+            let second = et_idf.matmul(c.u); // Eᵀ(I−DF)U (mx×mx)
+            let third = et_idf.matmul(c.s).matmul_t(&et_idf); // Eᵀ(I−DF)S(I−DF)ᵀE
+            &(c.v - &second.scale(2.0 * c1)) + &third.scale(c1 * c1)
         };
 
         // Tr[(I − n₁βW) M₂]
@@ -129,26 +139,23 @@ impl CvLrKernel for NativeCvLrKernel {
             - total_trace / (2.0 * gam)
     }
 
-    fn score_marg(&self, lx0: &Mat, lx1: &Mat, p: &CvParams) -> f64 {
-        let n1 = lx1.rows as f64;
-        let n0 = lx0.rows as f64;
+    fn score_marg_cores(&self, c: &MargCores<'_>, p: &CvParams) -> f64 {
+        let n1 = c.n1 as f64;
+        let n0 = c.n0 as f64;
         let (lam, gam) = (p.lambda, p.gamma);
         let c1 = 1.0 / (n1 * lam);
 
-        let pm = lx1.t_matmul(lx1); // P
-        let v = lx0.t_matmul(lx0); // V
-
-        // Q̌ = I + c₁ P; log|Q̌| = log|I + c₁K̃ₓ¹| (Eq. 28); Ď = Q̌⁻¹.
-        let q = pm.scale(c1).add_diag(1.0);
+        // Q̌ = I + c₁ P; log|Q̌| = log|I + c₁K̃ₓ¹| (Eq. 28); Ď·P by solve.
+        let q = c.p.scale(c1).add_diag(1.0);
         let chq = Cholesky::new(&q).expect("Q̌ SPD");
         let logdet = chq.log_det();
-        let dchk = chq.inverse();
 
-        // Tr(K̃⁰) = Tr(V); Tr(K̃⁰¹B̌K̃¹⁰) = Tr(VP) − c₁Tr(VPĎP)  (Eq. 29-30)
-        let vp = v.matmul(&pm);
+        // Tr(K̃⁰) = Tr(V); Tr(K̃⁰¹B̌K̃¹⁰) = Tr(VP) − c₁Tr((VP)(ĎP))  (Eq. 29-30)
+        let vp = c.v.matmul(c.p);
         let tr_vp = vp.trace();
-        let tr_vpdp = vp.matmul(&dchk).trace_prod(&pm);
-        let trace_total = v.trace() - (tr_vp - c1 * tr_vpdp) / (n1 * gam);
+        let dp = chq.solve(c.p);
+        let tr_vpdp = vp.trace_prod(&dp);
+        let trace_total = c.v.trace() - (tr_vp - c1 * tr_vpdp) / (n1 * gam);
 
         -(n0 * n0 / 2.0) * (2.0 * std::f64::consts::PI).ln()
             - (n0 / 2.0) * logdet
@@ -162,7 +169,10 @@ impl CvLrKernel for NativeCvLrKernel {
 }
 
 /// Split a full-data factor into (test, train) fold factors, both
-/// centered by the *train* column means (matching `cv_exact`).
+/// centered by the *train* column means (matching `cv_exact`). No
+/// longer on the hot path — the provider ([`super::cores`]) derives the
+/// same cores by downdating — but kept as the straight-line reference
+/// the property tests compare against.
 pub fn split_center(lam: &Mat, test: &[usize], train: &[usize]) -> (Mat, Mat) {
     let m = lam.cols;
     let mut mean = vec![0.0; m];
@@ -186,14 +196,20 @@ pub fn split_center(lam: &Mat, test: &[usize], train: &[usize]) -> (Mat, Mat) {
     (take(test), take(train))
 }
 
-/// The CV-LR local score with per-variable/per-parent-set factor caching.
+/// The CV-LR local score with per-variable-set factor *and* fold-core
+/// caching.
 pub struct CvLrScore<K: CvLrKernel> {
     pub ds: Arc<Dataset>,
     pub params: CvParams,
     pub lr_cfg: LowRankConfig,
     pub backend: K,
+    /// Gram-product threads (`DiscoveryConfig::parallelism`).
+    parallelism: usize,
     /// Low-rank factors keyed by the sorted variable set.
     factor_cache: Mutex<HashMap<Vec<usize>, Arc<Mat>>>,
+    /// Downdated per-(set, fold) self-cores, built once per set for the
+    /// life of the score and shared by every candidate and sweep.
+    fold_cores: FoldCoreCache,
 }
 
 impl CvLrScore<NativeCvLrKernel> {
@@ -205,7 +221,22 @@ impl CvLrScore<NativeCvLrKernel> {
 
 impl<K: CvLrKernel> CvLrScore<K> {
     pub fn with_backend(ds: Arc<Dataset>, params: CvParams, lr_cfg: LowRankConfig, backend: K) -> Self {
-        CvLrScore { ds, params, lr_cfg, backend, factor_cache: Mutex::new(HashMap::new()) }
+        CvLrScore {
+            ds,
+            params,
+            lr_cfg,
+            backend,
+            parallelism: 1,
+            factor_cache: Mutex::new(HashMap::new()),
+            fold_cores: FoldCoreCache::new(),
+        }
+    }
+
+    /// Gram-product threads for the fold-core builds (default 1; see
+    /// `score::cores` for the partitioning contract).
+    pub fn with_parallelism(mut self, threads: usize) -> Self {
+        self.parallelism = threads.max(1);
+        self
     }
 
     /// Low-rank factor of the kernel matrix of a variable set (Algorithm
@@ -224,25 +255,40 @@ impl<K: CvLrKernel> CvLrScore<K> {
         self.factor_cache.lock().unwrap().insert(key, arc.clone());
         arc
     }
+
+    /// Cached downdated self-cores of a variable set (built from the
+    /// cached factor on first use).
+    pub fn cores_for(&self, vars: &[usize]) -> Arc<SetCores> {
+        let mut key: Vec<usize> = vars.to_vec();
+        key.sort_unstable();
+        if let Some(c) = self.fold_cores.get(&key) {
+            return c;
+        }
+        let folds = stride_folds(self.ds.n(), self.params.folds);
+        self.fold_cores.get_or_build(&key, &folds, self.parallelism, &mut || {
+            self.factor_for(&key)
+        })
+    }
 }
 
-/// Score one batch segment given an external factor source — the
-/// machinery shared by [`CvLrScore`] (whose factors come from its
-/// per-variable-set cache) and the streaming backend
-/// (`stream::StreamBackend`, whose factors come from incrementally
-/// maintained `FactorState`s). One centered (test, train) split per
-/// unique variable set per fold, shared by every candidate in the
-/// segment; per-request values are independent of how the caller
-/// segments its batches.
+/// Score one batch segment given an external self-core source — the
+/// machinery shared by [`CvLrScore`] (whose cores come from its
+/// per-variable-set [`FoldCoreCache`]) and the streaming backend
+/// (`stream::StreamBackend`, whose cores are rebuilt over incrementally
+/// maintained `FactorState`s after every append). Per unique variable
+/// set the provider hands back the cached downdated P/V bundle; per
+/// unique (parents → target) pair the segment computes the E/U
+/// cross-cores once — the only per-pair O(n·mz·mx) work — and every
+/// candidate's fold scores are assembled from O(m²) core views.
+/// Per-request values are independent of how the caller segments its
+/// batches.
 pub fn score_segment_with<K: CvLrKernel>(
-    n: usize,
     params: &CvParams,
     backend: &K,
     reqs: &[ScoreRequest],
-    factor_for: &mut dyn FnMut(&[usize]) -> Arc<Mat>,
+    cores_for: &mut dyn FnMut(&[usize]) -> Arc<SetCores>,
+    parallelism: usize,
 ) -> Vec<f64> {
-    let folds = stride_folds(n, params.folds);
-
     // Unique variable sets referenced by the batch: every target
     // singleton plus every non-empty parent set.
     let mut sets: Vec<Vec<usize>> = Vec::with_capacity(2 * reqs.len());
@@ -255,33 +301,45 @@ pub fn score_segment_with<K: CvLrKernel>(
     sets.sort_unstable();
     sets.dedup();
 
-    // One centered (test, train) split per set per fold, shared by
-    // all candidates below.
-    let mut splits: HashMap<Vec<usize>, Vec<(Mat, Mat)>> = HashMap::with_capacity(sets.len());
+    // Self-cores per set, shared by all candidates below (and across
+    // segments/sweeps through the caller's cache).
+    let mut self_cores: HashMap<Vec<usize>, Arc<SetCores>> = HashMap::with_capacity(sets.len());
     for set in sets {
-        let lam = factor_for(&set);
-        let per_fold: Vec<(Mat, Mat)> =
-            folds.iter().map(|(test, train)| split_center(&lam, test, train)).collect();
-        splits.insert(set, per_fold);
+        let cores = cores_for(&set);
+        self_cores.insert(set, cores);
     }
 
-    let nfolds = folds.len() as f64;
+    // Cross-cores per unique (parents → target) pair in the segment.
+    let mut cross: HashMap<(usize, Vec<usize>), PairCores> = HashMap::new();
+    for r in reqs {
+        if r.parents.is_empty() {
+            continue;
+        }
+        let key = (r.target, r.parents.clone());
+        if cross.contains_key(&key) {
+            continue;
+        }
+        let z = &self_cores[&r.parents[..]];
+        let x = &self_cores[&[r.target][..]];
+        let pc = pair_cores(z, x, parallelism);
+        cross.insert(key, pc);
+    }
+
     reqs.iter()
         .map(|r| {
-            let lx = &splits[&[r.target][..]];
-            if r.parents.is_empty() {
-                let fs: Vec<MargFold<'_>> =
-                    lx.iter().map(|(l0, l1)| MargFold { lx0: l0, lx1: l1 }).collect();
-                backend.score_marg_batch(&fs, params).iter().sum::<f64>() / nfolds
+            let x = &self_cores[&[r.target][..]];
+            let nf = x.num_folds();
+            let per_fold = if r.parents.is_empty() {
+                let folds: Vec<MargCores<'_>> = (0..nf).map(|f| x.marg_fold(f)).collect();
+                backend.score_marg_batch(&folds, params)
             } else {
-                let lz = &splits[&r.parents[..]];
-                let fs: Vec<CondFold<'_>> = lx
-                    .iter()
-                    .zip(lz)
-                    .map(|((x0, x1), (z0, z1))| CondFold { lx0: x0, lx1: x1, lz0: z0, lz1: z1 })
-                    .collect();
-                backend.score_cond_batch(&fs, params).iter().sum::<f64>() / nfolds
-            }
+                let z = &self_cores[&r.parents[..]];
+                let pc = &cross[&(r.target, r.parents.clone())];
+                let folds: Vec<CondCores<'_>> =
+                    (0..nf).map(|f| cond_fold(x, z, pc, f)).collect();
+                backend.score_cond_batch(&folds, params)
+            };
+            per_fold.iter().sum::<f64>() / nf as f64
         })
         .collect()
 }
@@ -290,27 +348,32 @@ impl<K: CvLrKernel> CvLrScore<K> {
     /// One batch segment with fully shared per-set work (see
     /// `ScoreBackend::score_batch` below for the segmenting wrapper).
     fn score_segment(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
-        score_segment_with(self.ds.n(), &self.params, &self.backend, reqs, &mut |set: &[usize]| {
-            self.factor_for(set)
-        })
+        score_segment_with(
+            &self.params,
+            &self.backend,
+            reqs,
+            &mut |set: &[usize]| self.cores_for(set),
+            self.parallelism,
+        )
     }
 }
 
 impl<K: CvLrKernel> ScoreBackend for CvLrScore<K> {
     /// Batch-aware evaluation: the expensive per-variable-set work —
-    /// low-rank factorization and per-fold train-mean centering — is
-    /// done **once per unique set in a segment** and shared across
-    /// every candidate that references it. A GES sweep scoring hundreds
-    /// of parent-set variations of the same target pays for the target
-    /// factor splits once per segment; the per-candidate cost collapses
-    /// to the m×m core algebra, submitted to the fold kernel as one
-    /// [`CvLrKernel::score_cond_batch`] call per candidate.
+    /// low-rank factorization and the downdated fold-core build — is
+    /// done **once per unique set** (cached for the life of the score,
+    /// not just a segment) and shared across every candidate that
+    /// references it. A GES sweep scoring hundreds of parent-set
+    /// variations of the same target pays for the target's P/V cores
+    /// exactly once; the per-candidate cost collapses to one E/U
+    /// cross-core pass plus the m×m core algebra, submitted to the fold
+    /// kernel as one [`CvLrKernel::score_cond_batch`] call per
+    /// candidate.
     ///
     /// Sweep-sized batches are processed in fixed segments so the
-    /// transient centered-split storage stays bounded (at most ~2 ×
-    /// segment variable sets live at once) no matter how wide the
-    /// search batches get; per-request values are independent of the
-    /// segmentation, so results stay bit-identical.
+    /// transient cross-core storage stays bounded no matter how wide
+    /// the search batches get; per-request values are independent of
+    /// the segmentation, so results stay bit-identical.
     fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
         const SEGMENT: usize = 64;
         if reqs.len() <= SEGMENT {
@@ -384,7 +447,8 @@ mod tests {
     }
 
     /// Discrete data: Algorithm 2 is exact (Lemma 4.3) so CV-LR must
-    /// match exact CV to numerical precision.
+    /// match exact CV to numerical precision — through the downdated
+    /// core path.
     #[test]
     fn matches_exact_cv_discrete_exactly() {
         let ds = discrete_ds(100, 2);
@@ -417,6 +481,48 @@ mod tests {
         let f1 = lr.factor_for(&[0, 1]);
         let f2 = lr.factor_for(&[1, 0]); // different order, same set
         assert!(Arc::ptr_eq(&f1, &f2));
+        let c1 = lr.cores_for(&[0, 1]);
+        let c2 = lr.cores_for(&[1, 0]);
+        assert!(Arc::ptr_eq(&c1, &c2), "fold cores share the sorted-set key");
+    }
+
+    /// The downdated core path and the straight-line split_center
+    /// reference must agree on full local scores.
+    #[test]
+    fn provider_path_matches_reference_scores() {
+        let ds = continuous_ds(90, 7);
+        let lr = CvLrScore::native(ds.clone());
+        let got = lr.local_score(1, &[0, 2]);
+        // reference: split_center factors, factor-level kernel entry
+        let lx = lr.factor_for(&[1]);
+        let lz = lr.factor_for(&[0, 2]);
+        let folds = stride_folds(ds.n(), lr.params.folds);
+        let k = NativeCvLrKernel;
+        let want = folds
+            .iter()
+            .map(|(test, train)| {
+                let (lx0, lx1) = split_center(&lx, test, train);
+                let (lz0, lz1) = split_center(&lz, test, train);
+                k.score_cond(&lx0, &lx1, &lz0, &lz1, &lr.params)
+            })
+            .sum::<f64>()
+            / folds.len() as f64;
+        let rel = ((got - want) / want).abs();
+        assert!(rel < 1e-9, "provider {got} vs reference {want} (rel {rel})");
+    }
+
+    #[test]
+    fn parallelism_matches_serial_scores() {
+        let ds = continuous_ds(120, 9);
+        let serial = CvLrScore::native(ds.clone());
+        let par = CvLrScore::native(ds).with_parallelism(4);
+        for (t, pa) in [(1usize, vec![0usize]), (0, vec![]), (2, vec![0, 1])] {
+            let a = serial.local_score(t, &pa);
+            let b = par.local_score(t, &pa);
+            // parallelism ≤ Q keeps the summation grouping, so the
+            // scores are bit-identical (see score::cores)
+            assert_eq!(a, b, "target {t} parents {pa:?}");
+        }
     }
 
     #[test]

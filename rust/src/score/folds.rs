@@ -1,6 +1,14 @@
 //! Cross-validation fold assignment shared by CV and CV-LR so that the
 //! two scores are computed on *identical* splits (Table 1 compares them
 //! pointwise).
+//!
+//! The fold assignment is a pure function of (n, Q), which is what lets
+//! the fold-core provider (`score::cores`) treat the Q test blocks as a
+//! fixed row partition of every factor: per-fold test Grams are
+//! computed once per variable set, their sum is the full-data Gram, and
+//! every centered train core is a downdate (`G_train = G_full −
+//! G_test`) plus a rank-one mean correction — never a fresh O(n·m²)
+//! pass per fold.
 
 /// Deterministic Q-fold split: sample i is in the test set of fold
 /// `i mod q`. Returns, for each fold, (test_indices, train_indices).

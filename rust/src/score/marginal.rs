@@ -99,8 +99,9 @@ impl MargLrScore {
         f: &Mat,
     ) -> Option<f64> {
         let d = Cholesky::new(&f.add_diag(sigma2))?; // σ²I + F
-        // Tr(Λ̃ₓᵀ A Λ̃ₓ) = (Tr P − Tr(Eᵀ D E)) / σ²
-        let de = d.inverse().matmul(e);
+        // Tr(Λ̃ₓᵀ A Λ̃ₓ) = (Tr P − Tr(Eᵀ D E)) / σ²; D·E by triangular
+        // solves, no inverse
+        let de = d.solve(e);
         let tr_ede = e.frob_dot(&de); // Tr(Eᵀ (σ²I+F)⁻¹ E)
         let quad = (p_tr - tr_ede) / sigma2;
         // log|K̃_z + σ²I| = (n − m_z) log σ² + log|σ²I + F|
@@ -113,7 +114,7 @@ impl LocalScore for MargLrScore {
     fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
         let lx = self.factor_for(&[target]);
         let n = self.ds.n() as f64;
-        let p = lx.t_matmul(&lx);
+        let p = lx.syrk();
         let p_tr = p.trace();
         let mx = lx.cols as f64;
 
@@ -128,7 +129,7 @@ impl LocalScore for MargLrScore {
 
         let lz = self.factor_for(parents);
         let e = lz.t_matmul(&lx); // mz×mx
-        let f = lz.t_matmul(&lz); // mz×mz
+        let f = lz.syrk(); // mz×mz (half-flop symmetric Gram)
 
         // the GP noise grid is scaled by the per-output signal level so
         // the search covers the same relative range on any data

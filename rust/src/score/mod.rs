@@ -29,7 +29,9 @@
 //!   low-rank factors in O(n m²) via the dumbbell-form rules of §5
 //!   ("CV-LR"). The m×m core algebra is expressed behind the
 //!   [`cvlr::CvLrKernel`] trait so it can run natively (rust f64) or on
-//!   the AOT-compiled XLA artifacts (see `runtime`);
+//!   the AOT-compiled XLA artifacts (see `runtime`); its per-fold
+//!   centered cores come from the [`cores`] provider, which downdates
+//!   them from one full-data Gram pass instead of recomputing per fold;
 //! * [`marginal`] — the low-rank marginal-likelihood score;
 //! * [`bic`], [`bdeu`], [`sc`] — the baseline scores of §7.1.
 //!
@@ -39,6 +41,7 @@
 //! caches per-variable-set kernel factors, a different key space).
 
 pub mod folds;
+pub mod cores;
 pub mod cv_exact;
 pub mod cvlr;
 pub mod marginal;

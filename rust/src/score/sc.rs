@@ -59,7 +59,7 @@ impl LocalScore for ScScore {
             if k == 0 {
                 y.iter().map(|v| v * v).sum::<f64>()
             } else {
-                let xtx = x.t_matmul(&x).add_diag(1e-9);
+                let xtx = x.syrk().add_diag(1e-9);
                 let mut xty = Mat::zeros(k, 1);
                 for r in 0..n {
                     for c in 0..k {

@@ -591,6 +591,7 @@ impl JobManager {
                                 spec.cfg.workers,
                                 cap,
                             ));
+                            svc.set_gram_threads(spec.cfg.parallelism.max(1) as u64);
                             let mut services = self.services.lock().unwrap();
                             // a replaced dataset's services are now
                             // unreachable (stale version): drop them

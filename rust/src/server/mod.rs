@@ -22,7 +22,7 @@
 //! | `GET /v1/datasets` | list registered datasets |
 //! | `POST /v1/datasets/{name}/rows` | append header-less CSV rows (`{"csv"}`) in the dataset's internal coordinates; refreshes (not retires) the pooled services, invalidating their stale score entries; `409` while jobs on the dataset are active |
 //! | `DELETE /v1/datasets/{name}` | remove a dataset and retire its pooled services |
-//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "cache_capacity"?, "warm_start"?}` → `202 {"id", "state"}` (`workers`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
+//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "parallelism"?, "cache_capacity"?, "warm_start"?}` → `202 {"id", "state"}` (`workers`/`parallelism`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `parallelism` = Gram-product threads of the fold-core builds, exposed as `gram_threads` in `/v1/stats`; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
 //! | `GET /v1/jobs` | list job snapshots (without results) |
 //! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
 //! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
@@ -59,6 +59,9 @@ pub struct ServerConfig {
     pub job_workers: usize,
     /// Default score-service worker threads per job.
     pub score_workers: usize,
+    /// Default Gram-product threads for CV-LR fold-core builds
+    /// (`DiscoveryConfig::parallelism`; overridable per job).
+    pub parallelism: usize,
     /// Default per-service score-cache bound. `None` disables the bound
     /// — do that only for short-lived test servers.
     pub cache_capacity: Option<usize>,
@@ -76,6 +79,7 @@ impl Default for ServerConfig {
             port: 7878,
             job_workers: 2,
             score_workers: 1,
+            parallelism: 1,
             cache_capacity: Some(1 << 20),
             builtin_n: 500,
             seed: 0,
@@ -213,6 +217,7 @@ fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
         ("invalidations", num(st.invalidations)),
         ("warm_start_hits", num(st.warm_start_hits)),
         ("cache_entries", num(st.cache_entries)),
+        ("gram_threads", num(st.gram_threads)),
         ("eval_seconds", Json::Num(st.eval_seconds)),
         ("consistent", Json::Bool(st.consistent())),
     ])
@@ -432,7 +437,7 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
     };
     if let Err(resp) = check_keys(
         &body,
-        &["dataset", "method", "engine", "workers", "cache_capacity", "warm_start"],
+        &["dataset", "method", "engine", "workers", "parallelism", "cache_capacity", "warm_start"],
     ) {
         return resp;
     }
@@ -452,11 +457,15 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
     let mut dcfg = DiscoveryConfig {
         engine,
         workers: cfg.score_workers,
+        parallelism: cfg.parallelism,
         artifacts_dir: cfg.artifacts_dir.clone(),
         ..Default::default()
     };
     if let Some(w) = body.get("workers").and_then(Json::as_u64) {
         dcfg.workers = w as usize;
+    }
+    if let Some(t) = body.get("parallelism").and_then(Json::as_u64) {
+        dcfg.parallelism = (t as usize).max(1);
     }
     if let Some(c) = body.get("cache_capacity").and_then(Json::as_u64) {
         dcfg.cache_capacity = Some(c as usize);

@@ -28,8 +28,9 @@ use crate::graph::Pdag;
 use crate::kernel::{gram, median_heuristic, Kernel};
 use crate::linalg::Mat;
 use crate::lowrank::LowRankConfig;
+use crate::score::cores::FoldCoreCache;
 use crate::score::cvlr::{score_segment_with, NativeCvLrKernel};
-use crate::score::folds::CvParams;
+use crate::score::folds::{stride_folds, CvParams};
 use crate::score::{ScoreBackend, ScoreRequest};
 use crate::search::ges::GesConfig;
 use crate::search::{GesSearch, SearchMethod};
@@ -83,6 +84,9 @@ pub struct StreamConfig {
     pub workers: usize,
     /// Score-cache bound (None = unbounded).
     pub cache_capacity: Option<usize>,
+    /// Gram-product threads for the fold-core builds
+    /// (`DiscoveryConfig::parallelism` twin).
+    pub parallelism: usize,
 }
 
 impl Default for StreamConfig {
@@ -93,6 +97,7 @@ impl Default for StreamConfig {
             ges: GesConfig::default(),
             workers: 1,
             cache_capacity: None,
+            parallelism: 1,
         }
     }
 }
@@ -109,7 +114,14 @@ pub struct StreamBackend {
     params: CvParams,
     lr_cfg: LowRankConfig,
     kernel: NativeCvLrKernel,
+    /// Gram-product threads for the fold-core builds.
+    parallelism: usize,
     states: Mutex<HashMap<Vec<usize>, FactorState>>,
+    /// Downdated per-(set, fold) self-cores over the live factor
+    /// states; cleared wholesale on every append (every core depends on
+    /// every row), rebuilt lazily from the incrementally maintained
+    /// factors on the next score.
+    cores: FoldCoreCache,
 }
 
 impl StreamBackend {
@@ -119,8 +131,16 @@ impl StreamBackend {
             params,
             lr_cfg,
             kernel: NativeCvLrKernel,
+            parallelism: 1,
             states: Mutex::new(HashMap::new()),
+            cores: FoldCoreCache::new(),
         }
+    }
+
+    /// Gram-product threads for the fold-core builds (default 1).
+    pub fn with_parallelism(mut self, threads: usize) -> StreamBackend {
+        self.parallelism = threads.max(1);
+        self
     }
 
     /// Current number of samples.
@@ -160,6 +180,9 @@ impl StreamBackend {
             stats.basis_grown += out.basis_grown;
             stats.repivots += out.repivoted as usize;
         }
+        // every fold core depends on every row: drop them all while the
+        // data write lock still excludes concurrent scorers
+        self.cores.clear();
         stats.seconds = sw.secs();
         Ok(stats)
     }
@@ -208,18 +231,25 @@ impl StreamBackend {
 
 impl ScoreBackend for StreamBackend {
     /// Same segmenting discipline as `CvLrScore::score_batch`: bounded
-    /// transient split storage, bit-identical to per-request scoring.
+    /// transient cross-core storage, bit-identical to per-request
+    /// scoring. Self-cores come from the fold-core cache (rebuilt from
+    /// the incremental factor states after each append invalidates it).
     fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
         const SEGMENT: usize = 64;
         let ds = self.data.read().unwrap();
+        let folds = stride_folds(ds.n(), self.params.folds);
         let mut out = Vec::with_capacity(reqs.len());
         for seg in reqs.chunks(SEGMENT) {
             out.extend(score_segment_with(
-                ds.n(),
                 &self.params,
                 &self.kernel,
                 seg,
-                &mut |set: &[usize]| self.factor_for(set, &ds),
+                &mut |set: &[usize]| {
+                    self.cores.get_or_build(set, &folds, self.parallelism, &mut || {
+                        self.factor_for(set, &ds)
+                    })
+                },
+                self.parallelism,
             ));
         }
         out
@@ -259,13 +289,17 @@ impl StreamingDiscovery {
     }
 
     pub fn with_config(initial: Dataset, cfg: StreamConfig) -> StreamingDiscovery {
-        let backend = Arc::new(StreamBackend::new(initial, cfg.params, cfg.lowrank));
+        let backend = Arc::new(
+            StreamBackend::new(initial, cfg.params, cfg.lowrank)
+                .with_parallelism(cfg.parallelism),
+        );
         let dyn_backend: Arc<dyn ScoreBackend> = backend.clone();
         let service = Arc::new(ScoreService::with_cache_capacity(
             dyn_backend,
             cfg.workers,
             cfg.cache_capacity,
         ));
+        service.set_gram_threads(cfg.parallelism.max(1) as u64);
         StreamingDiscovery { backend, service, ges: cfg.ges, chunks: 0 }
     }
 

@@ -181,6 +181,52 @@ fn streamed_session_matches_cold_discovery() {
     );
 }
 
+/// Regression for the fold-core cache: scoring populates the downdated
+/// core cache, an append must invalidate it (scores depend on every
+/// row), and the re-score must match a refactorized cold backend. Run
+/// on discrete data where Algorithm 2 is exact and the pinned kernel
+/// width is split-stable, so the agreement is tight.
+#[test]
+fn append_rescore_matches_refactorize_through_core_cache() {
+    let mut rng = Pcg64::new(11);
+    let n = 140;
+    let mut data = Mat::zeros(n, 3);
+    for r in 0..n {
+        let a = rng.below(3);
+        let b = if rng.bernoulli(0.8) { a } else { rng.below(3) };
+        let c = rng.below(2);
+        data[(r, 0)] = a as f64;
+        data[(r, 1)] = b as f64;
+        data[(r, 2)] = c as f64;
+    }
+    let full = Dataset::from_columns(data.clone(), &[true, true, true]);
+    use cvlr::score::{ScoreBackend, ScoreRequest};
+    let reqs = [
+        ScoreRequest::new(1, &[0]),
+        ScoreRequest::new(1, &[0, 2]),
+        ScoreRequest::new(0, &[]),
+    ];
+
+    let streamed = StreamBackend::new(full.head(90), CvParams::default(), LowRankConfig::default());
+    let before = streamed.score_batch(&reqs); // factors + fold cores cached
+    let again = streamed.score_batch(&reqs);
+    assert_eq!(before, again, "cached cores must reproduce scores bit-for-bit");
+
+    streamed.append(&rows_range(&data, 90, n)).unwrap();
+    let after = streamed.score_batch(&reqs);
+    assert_ne!(before, after, "append must invalidate the fold-core cache");
+
+    let cold = StreamBackend::new(full, CvParams::default(), LowRankConfig::default());
+    let want = cold.score_batch(&reqs);
+    for (g, w) in after.iter().zip(&want) {
+        let rel = ((g - w) / w).abs();
+        assert!(
+            rel < 1e-9,
+            "append + re-score {g} vs refactorize {w} must agree (rel {rel})"
+        );
+    }
+}
+
 /// The forced re-pivot path: with a zero appended-residual budget every
 /// chunk refactorizes, and the session still converges to the cold
 /// answer (re-pivot = cold factorization by construction).

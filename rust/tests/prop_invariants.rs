@@ -11,6 +11,7 @@ use cvlr::kernel::{center_gram, gram, median_heuristic, Kernel};
 use cvlr::linalg::Mat;
 use cvlr::lowrank::{center_factor, factorize, LowRankConfig, Method};
 use cvlr::prop_assert;
+use cvlr::score::cores::{cond_fold, pair_cores, SetCores};
 use cvlr::score::cvlr::{split_center, CvLrKernel, NativeCvLrKernel};
 use cvlr::score::folds::{stride_folds, CvParams};
 use cvlr::stream::FactorState;
@@ -163,6 +164,94 @@ fn prop_zero_row_padding_invariance() {
         };
         prop_assert!(cores_match, "zero rows changed a Gram core");
         let _ = a;
+        Ok(())
+    });
+}
+
+/// The fold-core engine invariant: for every fold, the downdated
+/// provider cores (`score::cores` — one full-data Gram pass, per-fold
+/// test-block downdates, rank-one mean corrections) must give the same
+/// CV-LR scores as the retained straight-line reference (`split_center`
+/// + direct `t_matmul` cores), across continuous / discrete / mixed
+/// data, rank-capped factors, thread counts, and Q ∈ {2, 5, 10}.
+/// Tolerance 1e-9 relative; 1e-12 on the all-discrete path (Algorithm 2
+/// factors, where the paper's Lemma 4.3 exactness must survive the
+/// downdating arithmetic).
+#[test]
+fn prop_fold_cores_match_reference() {
+    check("fold_cores_vs_reference", 18, |rng| {
+        let q = [2usize, 5, 10][rng.below(3)];
+        let n = 2 * q + 30 + rng.below(80);
+        // 0 = continuous, 1 = discrete, 2 = mixed (cont + level codes)
+        let kind = rng.below(3);
+        let discrete = kind == 1;
+        let block = |rng: &mut Pcg64| -> Mat {
+            match kind {
+                0 => random_mat(rng, n, 1 + rng.below(2)),
+                1 => {
+                    let levels = 2 + rng.below(4);
+                    let mut m = Mat::zeros(n, 1);
+                    for r in 0..n {
+                        m[(r, 0)] = rng.below(levels) as f64;
+                    }
+                    m
+                }
+                _ => {
+                    let cont = random_mat(rng, n, 1);
+                    let levels = 2 + rng.below(3);
+                    let mut disc = Mat::zeros(n, 1);
+                    for r in 0..n {
+                        disc[(r, 0)] = rng.below(levels) as f64;
+                    }
+                    cont.hcat(&disc)
+                }
+            }
+        };
+        let xb = block(rng);
+        let zb = block(rng);
+        // rank-capped factors half the time: the provider must agree
+        // with the reference whatever factor the cap produced
+        let cap = if rng.below(2) == 1 { 6 + rng.below(10) } else { n };
+        let cfg = LowRankConfig { max_rank: cap, eta: 1e-9 };
+        let kern = |b: &Mat| {
+            if discrete {
+                Kernel::Rbf { sigma: 1.0 }
+            } else {
+                Kernel::Rbf { sigma: median_heuristic(b, 2.0) }
+            }
+        };
+        let lx = factorize(kern(&xb), &xb, discrete, &cfg).lambda;
+        let lz = factorize(kern(&zb), &zb, discrete, &cfg).lambda;
+
+        let folds = stride_folds(n, q);
+        let threads = 1 + rng.below(4);
+        let x_cores = SetCores::build(&lx, &folds, threads);
+        let z_cores = SetCores::build(&lz, &folds, threads);
+        let pc = pair_cores(&z_cores, &x_cores, threads);
+
+        let p = CvParams::default();
+        let k = NativeCvLrKernel;
+        let tol = if discrete { 1e-12 } else { 1e-9 };
+        for (f, (test, train)) in folds.iter().enumerate() {
+            let (lx0, lx1) = split_center(&lx, test, train);
+            let (lz0, lz1) = split_center(&lz, test, train);
+            let cond_ref = k.score_cond(&lx0, &lx1, &lz0, &lz1, &p);
+            let cond_got = k.score_cond_cores(&cond_fold(&x_cores, &z_cores, &pc, f), &p);
+            let rel = ((cond_got - cond_ref) / cond_ref).abs();
+            prop_assert!(
+                rel < tol,
+                "cond fold {f} (q={q}, kind={kind}, cap={cap}): downdated {cond_got} \
+                 vs reference {cond_ref} (rel {rel})"
+            );
+            let marg_ref = k.score_marg(&lx0, &lx1, &p);
+            let marg_got = k.score_marg_cores(&x_cores.marg_fold(f), &p);
+            let relm = ((marg_got - marg_ref) / marg_ref).abs();
+            prop_assert!(
+                relm < tol,
+                "marg fold {f} (q={q}, kind={kind}, cap={cap}): downdated {marg_got} \
+                 vs reference {marg_ref} (rel {relm})"
+            );
+        }
         Ok(())
     });
 }
