@@ -23,6 +23,11 @@ axis (never dual axes), small multiples per setting, at most 8 series
 per panel (the rest are noted and live in the table view), a fixed
 categorical color order, thin lines with visible markers, recessive
 grid, and a legend whenever more than one series is shown.
+
+Benches that carry a low-rank factorization axis (a ``lowrank`` column:
+``icl`` / ``rff`` / ``-``) render one series per method with a shared
+convention: ``rff`` series are dashed, everything else solid, so the
+ICL-vs-RFF pairs of one setting read as one visual family.
 """
 
 import argparse
@@ -176,18 +181,53 @@ def png_view(bench, metric, labels, table, out_dir):
         keys = [k for k in table if k[0] == facet]
         dropped = 0
         if len(keys) > MAX_SERIES:
-            # keep the series largest in the latest run; the rest stay
-            # in the table view
-            keys.sort(key=lambda k: -(table[k].get(labels[-1]) or 0.0))
-            dropped = len(keys) - MAX_SERIES
-            keys = keys[:MAX_SERIES]
-        for si, key in enumerate(keys):
+            # trim whole lowrank families (series with the lowrank cell
+            # stripped) ranked by their largest latest-run value, so a
+            # dashed rff line never loses its color-matched icl twin;
+            # the rest stay in the table view
+            def base_of(key):
+                return ", ".join(
+                    c for c in key[1].split(", ") if not c.startswith("lowrank=")
+                )
+
+            groups = OrderedDict()
+            for k in keys:
+                groups.setdefault(base_of(k), []).append(k)
+            ranked = sorted(
+                groups.values(),
+                key=lambda ks: -max(table[k].get(labels[-1]) or 0.0 for k in ks),
+            )
+            kept = []
+            for ks in ranked:
+                if len(kept) + len(ks) > MAX_SERIES:
+                    break
+                kept.extend(ks)
+            if not kept:  # one family alone exceeds the cap: fall back
+                keys.sort(key=lambda k: -(table[k].get(labels[-1]) or 0.0))
+                kept = keys[:MAX_SERIES]
+            dropped = len(keys) - len(kept)
+            keys = kept
+        # color by the series identity *without* the lowrank cell, so an
+        # ICL/RFF pair shares a color and differs only by line style
+        color_of = {}
+        for key in keys:
+            base = ", ".join(
+                c for c in key[1].split(", ") if not c.startswith("lowrank=")
+            )
+            if base not in color_of:
+                color_of[base] = PALETTE[len(color_of) % len(PALETTE)]
+        for key in keys:
             ys = [table[key].get(l) for l in labels]
+            base = ", ".join(
+                c for c in key[1].split(", ") if not c.startswith("lowrank=")
+            )
+            # the per-factorization convention: rff dashed, others solid
             ax.plot(
                 x,
                 ys,
-                color=PALETTE[si % len(PALETTE)],
+                color=color_of[base],
                 linewidth=2,
+                linestyle="--" if "lowrank=rff" in key[1] else "-",
                 marker="o",
                 markersize=6,
                 label=key[1],

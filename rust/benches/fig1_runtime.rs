@@ -1,24 +1,33 @@
 //! Fig. 1 — runtime of a single CV vs CV-LR local-score evaluation,
-//! continuous & discrete data, |Z| ∈ {0, 6}, across sample sizes.
+//! continuous & discrete data, |Z| ∈ {0, 6}, across sample sizes —
+//! with CV-LR measured per low-rank factorization (ICL adaptive pivots
+//! vs data-independent RFF), so the accuracy/speed trade between the
+//! two is *recorded*, not asserted.
 //!
 //! Paper shape to reproduce: CV grows ~n³ while CV-LR stays ~linear;
 //! the speedup ratio explodes with n, largest for discrete |Z|=0
 //! (10,000x at n=4000 in the paper) and smallest for continuous |Z|=6.
+//! On discrete data both factorization settings route through
+//! Algorithm 2 (exact, and independent of the `--lowrank` knob), so
+//! their rows should coincide; the continuous rows carry the ICL-vs-RFF
+//! comparison.
 //!
 //! ```text
-//! cargo bench --bench fig1_runtime [-- --full]
+//! cargo bench --bench fig1_runtime [-- --full] [--lowrank icl,rff]
 //! ```
 //! Smoke scale caps the exact CV at n ≤ 1000 (it is the O(n³) baseline;
 //! an n = 4000 exact score takes minutes); `--full` runs the paper's
-//! n ∈ {200, 500, 1000, 2000, 4000} everywhere.
+//! n ∈ {200, 500, 1000, 2000, 4000} everywhere. `--lowrank` restricts
+//! the factorization axis (default: both).
 
 use std::sync::Arc;
 
 use cvlr::bench::{BenchConfig, Report};
 use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::{networks, Dataset};
+use cvlr::lowrank::{FactorMethod, LowRankConfig};
 use cvlr::score::cv_exact::CvExactScore;
-use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
 use cvlr::score::folds::CvParams;
 use cvlr::score::LocalScore;
 use cvlr::util::timing::{bench_fn, fmt_secs};
@@ -61,11 +70,21 @@ fn main() {
     let cv_cap = if cfg.full { usize::MAX } else { 1000 };
     // Gram-product threads of the fold-core builds (--parallelism P)
     let parallelism = cfg.args.usize_or("parallelism", 1);
+    // the ICL-vs-RFF axis: `--lowrank icl,rff` (default both)
+    let lowrank: Vec<FactorMethod> = cfg
+        .args
+        .get_or("lowrank", "icl,rff")
+        .split(',')
+        .map(|s| {
+            FactorMethod::parse(s.trim())
+                .unwrap_or_else(|| panic!("unknown --lowrank `{s}` (icl|rff)"))
+        })
+        .collect();
 
     let mut rep = Report::new(
         &cfg,
         "fig1_runtime",
-        &["setting", "n", "cv_seconds", "cvlr_seconds", "speedup"],
+        &["setting", "lowrank", "n", "cv_seconds", "cvlr_seconds", "speedup"],
     );
 
     for s in &SETTINGS {
@@ -74,14 +93,8 @@ fn main() {
             let target = 0usize;
             let parents: Vec<usize> = (1..=s.cond).collect();
 
-            // CV-LR (the paper's method) — fresh score each rep so the
-            // factor and fold-core caches do not amortize across reps.
-            let lr_stats = bench_fn(1, cfg.reps, || {
-                let lr = CvLrScore::native(ds.clone()).with_parallelism(parallelism);
-                let _ = lr.local_score(target, &parents);
-            });
-
-            // exact CV — O(n³); skipped above the smoke cap.
+            // exact CV — O(n³), the shared baseline for every
+            // factorization row; skipped above the smoke cap.
             let cv_mean = if n <= cv_cap {
                 let st = bench_fn(0, if cfg.full { cfg.reps } else { 1 }, || {
                     let cv = CvExactScore::new(ds.clone(), CvParams::default());
@@ -92,27 +105,46 @@ fn main() {
                 None
             };
 
-            let speedup = cv_mean.map(|c| c / lr_stats.mean_s);
-            println!(
-                "{:<18} n={:<5} CV={:<10} CV-LR={:<10} speedup={}",
-                s.name,
-                n,
-                cv_mean.map(fmt_secs).unwrap_or_else(|| "-".into()),
-                fmt_secs(lr_stats.mean_s),
-                speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into())
-            );
-            rep.row(&[
-                s.name.trim().to_string(),
-                n.to_string(),
-                cv_mean.map(|x| format!("{x:.6}")).unwrap_or_default(),
-                format!("{:.6}", lr_stats.mean_s),
-                speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
-            ]);
+            for &lm in &lowrank {
+                // CV-LR (the paper's method) — fresh score each rep so
+                // the factor and fold-core caches do not amortize
+                // across reps.
+                let lr_stats = bench_fn(1, cfg.reps, || {
+                    let lr = CvLrScore::with_backend(
+                        ds.clone(),
+                        CvParams::default(),
+                        LowRankConfig::with_method(lm),
+                        NativeCvLrKernel,
+                    )
+                    .with_parallelism(parallelism);
+                    let _ = lr.local_score(target, &parents);
+                });
+
+                let speedup = cv_mean.map(|c| c / lr_stats.mean_s);
+                println!(
+                    "{:<18} {:<4} n={:<5} CV={:<10} CV-LR={:<10} speedup={}",
+                    s.name,
+                    lm.name(),
+                    n,
+                    cv_mean.map(fmt_secs).unwrap_or_else(|| "-".into()),
+                    fmt_secs(lr_stats.mean_s),
+                    speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into())
+                );
+                rep.row(&[
+                    s.name.trim().to_string(),
+                    lm.name().to_string(),
+                    n.to_string(),
+                    cv_mean.map(|x| format!("{x:.6}")).unwrap_or_default(),
+                    format!("{:.6}", lr_stats.mean_s),
+                    speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
+                ]);
+            }
         }
     }
-    rep.finish("Fig. 1 — single-score runtime, CV vs CV-LR");
+    rep.finish("Fig. 1 — single-score runtime, CV vs CV-LR (per factorization)");
     println!(
         "expected shape: CV ~ n³, CV-LR ~ n; largest ratios for discrete |Z|=0\n\
-         (paper: 150x at n=4000 |Z|=6; 2,000x continuous / 10,000x discrete |Z|=0)"
+         (paper: 150x at n=4000 |Z|=6; 2,000x continuous / 10,000x discrete |Z|=0);\n\
+         rff rows trade the adaptive-pivot error bound for data independence"
     );
 }

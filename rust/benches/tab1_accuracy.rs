@@ -100,7 +100,7 @@ fn sweep_m(cfg: &BenchConfig) {
             let lr = CvLrScore::with_backend(
                 ds.clone(),
                 CvParams::default(),
-                LowRankConfig { max_rank: m, eta: 1e-6 },
+                LowRankConfig { max_rank: m, eta: 1e-6, ..Default::default() },
                 NativeCvLrKernel,
             );
             let s_lr = lr.local_score(0, &parents);

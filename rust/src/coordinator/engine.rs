@@ -33,7 +33,7 @@ use super::service::{ScoreService, ServiceStats};
 use crate::ci::Kci;
 use crate::data::Dataset;
 use crate::graph::Pdag;
-use crate::lowrank::LowRankConfig;
+use crate::lowrank::{FactorMethod, LowRankConfig};
 use crate::runtime::pjrt_kernel::PjrtCvLrKernel;
 use crate::runtime::Runtime;
 use crate::score::bdeu::BdeuScore;
@@ -145,6 +145,10 @@ pub struct DiscoveryConfig {
     /// Gram-product threads inside the CV-LR fold-core builds (the
     /// `std::thread::scope` row-partitioned path of `score::cores`;
     /// orthogonal to `workers`, which parallelizes across candidates).
+    /// `0` means **auto**: detect with
+    /// `std::thread::available_parallelism()`, capped at the fold count
+    /// Q (`score::cores::resolve_parallelism`); the resolved value is
+    /// reported as `ServiceStats::gram_threads`.
     pub parallelism: usize,
     /// Score-cache capacity (None = unbounded, the one-shot CLI
     /// default). Long-lived processes (the discovery server) must set a
@@ -236,7 +240,8 @@ impl Registry {
                 Ok(match cfg.engine {
                     EngineKind::Native => Arc::new(
                         CvLrScore::with_backend(ds, cfg.params, cfg.lowrank, NativeCvLrKernel)
-                            .with_parallelism(cfg.parallelism),
+                            .with_parallelism(cfg.parallelism)
+                            .with_core_capacity(cfg.cache_capacity),
                     ) as Arc<dyn ScoreBackend>,
                     EngineKind::Pjrt => {
                         let rt = Arc::new(
@@ -250,7 +255,8 @@ impl Registry {
                                 cfg.lowrank,
                                 PjrtCvLrKernel::new(rt),
                             )
-                            .with_parallelism(cfg.parallelism),
+                            .with_parallelism(cfg.parallelism)
+                            .with_core_capacity(cfg.cache_capacity),
                         )
                     }
                 })
@@ -421,7 +427,10 @@ fn run_method(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<Dis
             let backend = factory(ds, cfg)?;
             let service =
                 ScoreService::with_cache_capacity(backend, cfg.workers, cfg.cache_capacity);
-            service.set_gram_threads(cfg.parallelism.max(1) as u64);
+            service.set_gram_threads(crate::score::cores::resolve_parallelism(
+                cfg.parallelism,
+                cfg.params.folds,
+            ) as u64);
             let res = ges(&service, &cfg.ges);
             Ok(DiscoveryOutcome {
                 cpdag: res.cpdag,
@@ -488,10 +497,10 @@ impl DiscoveryBuilder {
         self
     }
 
-    /// Gram-product threads inside the CV-LR fold-core builds (see
-    /// [`DiscoveryConfig::parallelism`]).
+    /// Gram-product threads inside the CV-LR fold-core builds; `0` =
+    /// auto (see [`DiscoveryConfig::parallelism`]).
     pub fn parallelism(mut self, threads: usize) -> Self {
-        self.cfg.parallelism = threads.max(1);
+        self.cfg.parallelism = threads;
         self
     }
 
@@ -511,6 +520,15 @@ impl DiscoveryBuilder {
     /// Low-rank factorization configuration.
     pub fn lowrank(mut self, lowrank: LowRankConfig) -> Self {
         self.cfg.lowrank = lowrank;
+        self
+    }
+
+    /// Continuous-path factorization of the CV-LR score: ICL (the
+    /// adaptive-pivot default) or RFF (data-independent random Fourier
+    /// features) — the `--lowrank {icl,rff}` knob, without replacing
+    /// the rest of the low-rank configuration.
+    pub fn lowrank_method(mut self, method: FactorMethod) -> Self {
+        self.cfg.lowrank.method = method;
         self
     }
 
@@ -603,6 +621,25 @@ mod tests {
         assert!(st.cache_entries <= 8, "{st:?}");
         assert!(st.evictions > 0, "a tiny cap must evict during GES: {st:?}");
         assert!(st.consistent(), "identity must survive evictions: {st:?}");
+    }
+
+    #[test]
+    fn builder_rff_lowrank_and_auto_parallelism_run() {
+        let (ds, _) =
+            generate(&SynthConfig { n: 150, density: 0.3, seed: 7, ..Default::default() });
+        let out = Discovery::builder(Arc::new(ds))
+            .method("cv-lr")
+            .lowrank_method(FactorMethod::Rff)
+            .parallelism(0) // auto: resolved and reported, never 0
+            .run()
+            .unwrap();
+        let st = out.score_stats.unwrap();
+        assert!(
+            (1..=CvParams::default().folds as u64).contains(&st.gram_threads),
+            "auto parallelism must resolve into [1, Q]: {st:?}"
+        );
+        assert!(st.core_cache_entries > 0, "CV-LR populates the fold-core cache: {st:?}");
+        assert!(st.consistent(), "{st:?}");
     }
 
     #[test]

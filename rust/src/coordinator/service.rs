@@ -323,6 +323,14 @@ pub struct ServiceStats {
     pub warm_start_hits: u64,
     /// Resident cache entries at snapshot time.
     pub cache_entries: u64,
+    /// Resident fold-core bundles in the backend's `FoldCoreCache`
+    /// (CV-LR backends only; 0 otherwise). Each bundle retains a
+    /// variable set's per-fold blocks — ~2× the factor-cache footprint
+    /// per set — so wide pooled-server sweeps need the bound visible.
+    pub core_cache_entries: u64,
+    /// Fold-core bundles reclaimed by the bounded cache's second-chance
+    /// sweep. Outside the request identity, like `evictions`.
+    pub core_cache_evictions: u64,
     /// Gram-product threads of the backing backend
     /// (`DiscoveryConfig::parallelism`) — a gauge, not a counter, so
     /// the server can expose what each pooled service is using.
@@ -449,6 +457,12 @@ impl ScoreService {
     /// thread is mid-batch can transiently observe `requests` ahead of
     /// its matching hit/eval/dedup increments.
     pub fn stats(&self) -> ServiceStats {
+        let (core_entries, core_evictions) = self
+            .backend
+            .read()
+            .unwrap()
+            .core_cache_stats()
+            .unwrap_or((0, 0));
         ServiceStats {
             requests: self.requests.load(Ordering::Relaxed),
             cache_hits: self.hits.load(Ordering::Relaxed),
@@ -460,6 +474,8 @@ impl ScoreService {
             invalidations: self.cache.invalidations(),
             warm_start_hits: self.warm_hits.load(Ordering::Relaxed),
             cache_entries: self.cache.len() as u64,
+            core_cache_entries: core_entries,
+            core_cache_evictions: core_evictions,
             gram_threads: self.gram_threads.load(Ordering::Relaxed),
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
@@ -566,6 +582,13 @@ impl ScoreBackend for ScoreService {
 
     fn num_vars(&self) -> usize {
         self.backend.read().unwrap().num_vars()
+    }
+
+    /// Delegated to the wrapped backend, so per-job wrappers around the
+    /// service (the server's `CancelBackend`) and the service itself
+    /// report the same fold-core counters.
+    fn core_cache_stats(&self) -> Option<(u64, u64)> {
+        self.backend.read().unwrap().core_cache_stats()
     }
 }
 

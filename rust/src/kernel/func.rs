@@ -170,4 +170,74 @@ mod tests {
         let x = Mat::zeros(5, 2);
         assert_eq!(median_heuristic(&x, 2.0), 1.0);
     }
+
+    /// Brute-force oracle: median of ALL nonzero pairwise distances.
+    fn brute_median(x: &Mat) -> Option<f64> {
+        let mut dists = Vec::new();
+        for i in 0..x.rows {
+            for j in (i + 1)..x.rows {
+                let d2: f64 =
+                    (0..x.cols).map(|c| (x[(i, c)] - x[(j, c)]).powi(2)).sum();
+                if d2 > 0.0 {
+                    dists.push(d2.sqrt());
+                }
+            }
+        }
+        if dists.is_empty() {
+            None
+        } else {
+            Some(crate::util::stats::median(&dists))
+        }
+    }
+
+    /// When total_pairs < max_pairs the stride is 1 and the walk must
+    /// visit every pair exactly once — the result IS the exact median.
+    #[test]
+    fn median_heuristic_small_n_visits_every_pair() {
+        for n in [2usize, 3, 5, 17] {
+            let mut x = Mat::zeros(n, 2);
+            for i in 0..n {
+                x[(i, 0)] = (i * i) as f64 * 0.37;
+                x[(i, 1)] = -(i as f64) * 0.11;
+            }
+            let want = brute_median(&x).unwrap();
+            let got = median_heuristic(&x, 1.0);
+            assert!(
+                (got - want).abs() < 1e-12,
+                "n={n}: stride walk {got} != exhaustive median {want}"
+            );
+        }
+    }
+
+    /// All-constant columns mixed with one varying column: the constant
+    /// columns contribute nothing, duplicate values in the varying
+    /// column produce zero-distance pairs the walk must skip — the
+    /// result is the median over the *nonzero* distances only.
+    #[test]
+    fn median_heuristic_constant_columns_with_one_varying() {
+        let n = 12;
+        let mut x = Mat::zeros(n, 4);
+        for i in 0..n {
+            x[(i, 0)] = 3.5; // constant
+            x[(i, 1)] = -1.0; // constant
+            x[(i, 2)] = (i % 3) as f64; // varying with duplicates
+            x[(i, 3)] = 0.0; // constant
+        }
+        let want = brute_median(&x).unwrap();
+        let got = median_heuristic(&x, 1.0);
+        assert!(
+            (got - want).abs() < 1e-12,
+            "constant-column mix: {got} != {want}"
+        );
+        // distances here are only 1 or 2 (|i%3 − j%3|): the median must
+        // be one of them, never polluted by the constant columns
+        assert!(got == 1.0 || got == 2.0, "implausible median {got}");
+    }
+
+    /// n = 2 with identical rows has one pair, distance zero: degenerate.
+    #[test]
+    fn median_heuristic_two_identical_rows() {
+        let x = Mat::from_vec(2, 2, vec![1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(median_heuristic(&x, 2.0), 1.0);
+    }
 }

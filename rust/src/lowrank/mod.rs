@@ -5,64 +5,142 @@
 //! * [`discrete`] — Algorithm 2, the *exact* decomposition for discrete
 //!   variables whose pivot count is the number of distinct rows
 //!   (Lemmas 4.1/4.3);
+//! * [`rff`] — random Fourier features (Rahimi & Recht 2007), the
+//!   **data-independent** alternative to ICL: frequencies drawn from the
+//!   RBF spectral density, O(1/√m) Monte-Carlo error, O(m)-per-row
+//!   streaming appends with no re-pivot path;
 //! * [`factorize`] — the dispatch rule of §7.1: use Algorithm 2 when the
-//!   variable is discrete with < m distinct values, Algorithm 1 otherwise.
+//!   variable is discrete with **at most `max_rank` (m₀) distinct
+//!   rows** (the code tests `distinct.len() <= cfg.max_rank`; Algorithm
+//!   2 is exact whenever its pivot count fits the rank budget),
+//!   otherwise the configured continuous method — Algorithm 1 by
+//!   default, RFF when [`LowRankConfig::method`] selects it. A discrete
+//!   set whose pivot kernel is numerically singular falls through to
+//!   the continuous method; the fall-through is recorded in
+//!   [`LowRank::fell_back`] so callers and tests can see it.
 
 pub mod icl;
 pub mod discrete;
+pub mod rff;
 
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 
 pub use discrete::{discrete_decomposition, discrete_decomposition_detailed, distinct_rows};
 pub use icl::{icl, icl_detailed, IclFactor};
+pub use rff::{rff_factorize, RffMap};
 
 /// Result of a low-rank factorization.
 pub struct LowRank {
     /// n × m factor with Λ Λᵀ ≈ K (uncentered).
     pub lambda: Mat,
-    /// Number of pivots actually used (m = lambda.cols).
+    /// Number of pivots/features actually used (m = lambda.cols).
     pub rank: usize,
     /// Which algorithm produced it.
     pub method: Method,
     /// Row indices of the pivots in selection order (distinct rows for
     /// Algorithm 2, greedy picks for Algorithm 1) — retained so the
     /// factorization can be extended row by row (see `stream::append`).
+    /// Empty for RFF, whose features reference no data rows at all.
     pub pivots: Vec<usize>,
     /// Residual trace ‖K − ΛΛᵀ‖ at termination (0 for Algorithm 2,
-    /// which is exact).
+    /// which is exact; the |diagonal| sum for RFF, whose residual is
+    /// not PSD).
     pub residual: f64,
     /// True when ICL stopped at the rank cap with residual ≥ η.
     pub capped: bool,
+    /// True when the dispatch could not run its preferred algorithm
+    /// and fell through to the configured continuous method: a
+    /// singular discrete pivot kernel falls through to ICL or RFF
+    /// (whichever `LowRankConfig::method` selects), and an RFF request
+    /// on a kernel with no Gaussian spectral form falls through to
+    /// ICL. Previously this fall-through was silent; callers can now
+    /// observe it.
+    pub fell_back: bool,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     /// Algorithm 1 — incomplete Cholesky.
     Icl,
     /// Algorithm 2 — exact discrete decomposition.
     Discrete,
+    /// Random Fourier features — data-independent Monte-Carlo factor.
+    Rff,
+}
+
+/// Which factorization the continuous (non-Algorithm-2) path uses —
+/// the `--lowrank {icl,rff}` knob, threaded through
+/// [`LowRankConfig::method`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FactorMethod {
+    /// Algorithm 1: adaptive pivots, residual trace ≤ η or the rank
+    /// cap. The accuracy default.
+    #[default]
+    Icl,
+    /// Random Fourier features: data-independent draws, flat O(1/√m)
+    /// error, exact O(m)-per-row streaming appends (no re-pivots).
+    Rff,
+}
+
+impl FactorMethod {
+    /// Canonical lower-case name (CLI/wire value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FactorMethod::Icl => "icl",
+            FactorMethod::Rff => "rff",
+        }
+    }
+
+    /// Parse a CLI/wire value (case-insensitive).
+    pub fn parse(s: &str) -> Option<FactorMethod> {
+        match s.to_ascii_lowercase().as_str() {
+            "icl" => Some(FactorMethod::Icl),
+            "rff" => Some(FactorMethod::Rff),
+            _ => None,
+        }
+    }
 }
 
 /// Configuration for the factorization dispatch.
 #[derive(Clone, Copy, Debug)]
 pub struct LowRankConfig {
-    /// Maximal rank m₀ (paper: 100).
+    /// Maximal rank m₀ (paper: 100). Also the RFF feature count.
     pub max_rank: usize,
     /// ICL precision η (paper: 1e-6).
     pub eta: f64,
+    /// Continuous-path factorization (Algorithm 2 still takes
+    /// precedence for small-cardinality discrete sets — it is exact
+    /// either way).
+    pub method: FactorMethod,
+    /// Base seed mixed into the RFF frequency draws. The draws are a
+    /// pure function of (kernel width, dim, m, this seed) — never the
+    /// data — so streaming appends reproduce a cold factorization bit
+    /// for bit.
+    pub rff_seed: u64,
 }
 
 impl Default for LowRankConfig {
     fn default() -> Self {
-        LowRankConfig { max_rank: 100, eta: 1e-6 }
+        LowRankConfig { max_rank: 100, eta: 1e-6, method: FactorMethod::Icl, rff_seed: 0 }
+    }
+}
+
+impl LowRankConfig {
+    /// Default configuration with the given continuous-path method.
+    pub fn with_method(method: FactorMethod) -> LowRankConfig {
+        LowRankConfig { method, ..Default::default() }
     }
 }
 
 /// Factorize the kernel matrix of the rows of `x`: Algorithm 2 when the
-/// data is discrete with fewer than `max_rank` distinct rows, otherwise
-/// Algorithm 1 (paper §7.1 dispatch rule).
+/// data is discrete with at most `max_rank` distinct rows, otherwise the
+/// configured continuous method (Algorithm 1, or RFF under
+/// [`FactorMethod::Rff`]). A singular discrete pivot kernel — or an RFF
+/// request on a kernel without a Gaussian spectral form — falls through
+/// to ICL with [`LowRank::fell_back`] set.
 pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> LowRank {
+    let mut fell_back = false;
     if is_discrete {
         let distinct = distinct_rows(x);
         if distinct.len() <= cfg.max_rank {
@@ -75,11 +153,30 @@ pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> 
                     pivots: distinct,
                     residual: 0.0,
                     capped: false,
+                    fell_back: false,
                 };
             }
-            // fall through to ICL if the pivot kernel was numerically
-            // singular (can happen with a degenerate kernel choice)
+            // the pivot kernel was numerically singular (can happen
+            // with a degenerate kernel choice): fall through to the
+            // continuous method, recording the fall-back
+            fell_back = true;
         }
+    }
+    if cfg.method == FactorMethod::Rff {
+        if let Some((_, lambda, residual)) = rff_factorize(k, x, cfg.max_rank, cfg.rff_seed) {
+            let rank = lambda.cols;
+            return LowRank {
+                lambda,
+                rank,
+                method: Method::Rff,
+                pivots: Vec::new(),
+                residual,
+                capped: false,
+                fell_back,
+            };
+        }
+        // no Gaussian spectral form for this kernel: ICL fallback
+        fell_back = true;
     }
     let f = icl_detailed(k, x, cfg.eta, cfg.max_rank);
     let rank = f.lambda.cols;
@@ -90,6 +187,7 @@ pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> 
         pivots: f.pivots,
         residual: f.residual,
         capped: f.capped,
+        fell_back,
     }
 }
 
@@ -111,6 +209,7 @@ mod tests {
         let x = Mat::from_vec(50, 1, (0..50).map(|_| rng.below(3) as f64).collect());
         let lr = factorize(Kernel::Rbf { sigma: 1.0 }, &x, true, &LowRankConfig::default());
         assert_eq!(lr.method, Method::Discrete);
+        assert!(!lr.fell_back);
         assert!(lr.rank <= 3);
         let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
         let rec = lr.lambda.matmul_t(&lr.lambda);
@@ -123,9 +222,56 @@ mod tests {
         let x = Mat::from_vec(40, 2, (0..80).map(|_| rng.normal()).collect());
         let lr = factorize(Kernel::Rbf { sigma: 1.0 }, &x, false, &LowRankConfig::default());
         assert_eq!(lr.method, Method::Icl);
+        assert!(!lr.fell_back);
         let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
         let rec = lr.lambda.matmul_t(&lr.lambda);
         assert!((&rec - &k).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn dispatch_uses_rff_when_selected() {
+        let mut rng = Pcg64::new(4);
+        let x = Mat::from_vec(60, 2, (0..120).map(|_| rng.normal()).collect());
+        let cfg = LowRankConfig { max_rank: 400, method: FactorMethod::Rff, ..Default::default() };
+        let lr = factorize(Kernel::Rbf { sigma: 1.0 }, &x, false, &cfg);
+        assert_eq!(lr.method, Method::Rff);
+        assert_eq!(lr.rank, 400, "RFF always uses the full feature budget");
+        assert!(lr.pivots.is_empty(), "RFF references no data rows");
+        assert!(!lr.capped && !lr.fell_back);
+        let k = gram(Kernel::Rbf { sigma: 1.0 }, &x);
+        let err = (&lr.lambda.matmul_t(&lr.lambda) - &k).max_abs();
+        assert!(err < 0.25, "Monte-Carlo reconstruction too loose: {err}");
+    }
+
+    #[test]
+    fn rff_still_defers_to_discrete_decomposition() {
+        // Algorithm 2 is exact and takes precedence over the configured
+        // continuous method for small-cardinality discrete sets
+        let mut rng = Pcg64::new(5);
+        let x = Mat::from_vec(50, 1, (0..50).map(|_| rng.below(4) as f64).collect());
+        let cfg = LowRankConfig::with_method(FactorMethod::Rff);
+        let lr = factorize(Kernel::Rbf { sigma: 1.0 }, &x, true, &cfg);
+        assert_eq!(lr.method, Method::Discrete);
+        assert!(!lr.fell_back);
+    }
+
+    #[test]
+    fn rff_on_non_rbf_kernel_falls_back_to_icl_and_records_it() {
+        let mut rng = Pcg64::new(6);
+        let x = Mat::from_vec(30, 2, (0..60).map(|_| rng.normal()).collect());
+        let cfg = LowRankConfig::with_method(FactorMethod::Rff);
+        let lr = factorize(Kernel::Linear, &x, false, &cfg);
+        assert_eq!(lr.method, Method::Icl);
+        assert!(lr.fell_back, "the ICL fall-back must be recorded, not silent");
+    }
+
+    #[test]
+    fn factor_method_parse_roundtrip() {
+        for m in [FactorMethod::Icl, FactorMethod::Rff] {
+            assert_eq!(FactorMethod::parse(m.name()), Some(m));
+        }
+        assert_eq!(FactorMethod::parse("RFF"), Some(FactorMethod::Rff));
+        assert_eq!(FactorMethod::parse("nope"), None);
     }
 
     #[test]

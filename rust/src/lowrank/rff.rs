@@ -1,0 +1,211 @@
+//! Random Fourier features (Rahimi & Recht 2007) — the
+//! **data-independent** low-rank factorization, selected with
+//! [`FactorMethod::Rff`](super::FactorMethod).
+//!
+//! Bochner's theorem writes the RBF kernel as the expectation of a
+//! random cosine feature: with ω ~ N(0, σ⁻²I) and b ~ U[0, 2π),
+//!
+//! ```text
+//!   k(x, y) = E[ 2·cos(ωᵀx + b)·cos(ωᵀy + b) ]
+//! ```
+//!
+//! so the Monte-Carlo factor `Λ_ij = √(2/m)·cos(ωⱼᵀxᵢ + bⱼ)` satisfies
+//! `E[Λ Λᵀ] = K` with entrywise error O(1/√m) (Hoeffding: each entry is
+//! the mean of m terms bounded in [−2, 2], so
+//! `P(|K_ij − (ΛΛᵀ)_ij| > t) ≤ 2·exp(−m t²/8)`).
+//!
+//! The feature map is a pure function of the **kernel** (width σ), the
+//! data dimension, the feature count m and the configured base seed —
+//! never of the sample rows. That is the whole point for the streaming
+//! layer (`stream::append`): appending a row costs one O(m·dim) feature
+//! evaluation, extends Λ by exactly the row a cold refactorization over
+//! the full data would have produced (bit for bit — the same draws, the
+//! same FP sequence per row), and can never trigger a re-pivot, because
+//! there are no pivots. The trade against ICL is the error bound:
+//! ICL's greedy pivots adapt to the spectrum (residual trace ≤ η or the
+//! rank cap), RFF's error is the flat Monte-Carlo O(1/√m) regardless of
+//! how fast the spectrum decays.
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::util::Pcg64;
+
+/// The retained feature map: frequencies, phases and the √(2/m) scale.
+/// This is all the state an incremental append needs — no pivot data,
+/// no pivot factor, no residual budget.
+#[derive(Clone, Debug)]
+pub struct RffMap {
+    /// Frequencies ω, one **column block of `dim` values per feature**:
+    /// m × dim, so `omega.row(j)` is ωⱼ.
+    pub omega: Mat,
+    /// Phases b ∈ [0, 2π), one per feature.
+    pub phases: Vec<f64>,
+    /// √(2/m).
+    pub scale: f64,
+}
+
+/// Deterministic seed for the frequency draws: a pure function of the
+/// pinned kernel width, the data dimension, the feature count and the
+/// configured base seed. Two calls with the same pinned kernel (e.g. a
+/// streaming state and its cold-refactorize oracle) draw identical
+/// features; the data rows never enter.
+fn derive_seed(sigma: f64, dim: usize, m: usize, base: u64) -> u64 {
+    // SplitMix-style finalizer over the mixed inputs.
+    let mut z = base
+        ^ sigma.to_bits()
+        ^ (dim as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (m as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl RffMap {
+    /// Draw the feature map for an RBF kernel of width `sigma` over
+    /// `dim`-column rows. Returns `None` for non-RBF kernels — the
+    /// spectral sampling below is the Gaussian's; callers fall back to
+    /// ICL (`LowRank::fell_back` records it).
+    pub fn draw(kernel: Kernel, dim: usize, m: usize, base_seed: u64) -> Option<RffMap> {
+        let sigma = match kernel {
+            Kernel::Rbf { sigma } => sigma,
+            _ => return None,
+        };
+        let mut rng = Pcg64::new(derive_seed(sigma, dim, m, base_seed));
+        // per feature j: dim frequency draws, then the phase — a fixed
+        // draw order, so the map is reproducible from the seed alone
+        let mut omega = Mat::zeros(m, dim);
+        let mut phases = Vec::with_capacity(m);
+        for j in 0..m {
+            for c in 0..dim {
+                omega[(j, c)] = rng.normal() / sigma;
+            }
+            phases.push(rng.uniform() * 2.0 * std::f64::consts::PI);
+        }
+        Some(RffMap { omega, phases, scale: (2.0 / m as f64).sqrt() })
+    }
+
+    /// Number of features m (columns of Λ).
+    pub fn num_features(&self) -> usize {
+        self.omega.rows
+    }
+
+    /// One Λ row for sample `x`: √(2/m)·cos(ωⱼᵀx + bⱼ), O(m·dim).
+    /// Every caller — cold factorization and streaming append alike —
+    /// goes through this function, so the per-row FP sequence is
+    /// identical no matter when the row arrives.
+    pub fn feature_row(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.omega.cols);
+        let m = self.omega.rows;
+        let mut row = Vec::with_capacity(m);
+        for j in 0..m {
+            let mut dot = self.phases[j];
+            for (w, v) in self.omega.row(j).iter().zip(x) {
+                dot += w * v;
+            }
+            row.push(self.scale * dot.cos());
+        }
+        row
+    }
+
+    /// The full n × m factor of `x`'s rows.
+    pub fn features(&self, x: &Mat) -> Mat {
+        let m = self.omega.rows;
+        let mut lam = Mat::zeros(x.rows, m);
+        for i in 0..x.rows {
+            lam.row_mut(i).copy_from_slice(&self.feature_row(x.row(i)));
+        }
+        lam
+    }
+}
+
+/// Per-row diagnostic residual `|k(x,x) − ‖λ‖²|` — the RFF analogue of
+/// ICL's residual-diagonal entries (not PSD, hence the absolute value).
+/// Shared by the cold factorization and the streaming append so the
+/// two observables are computed identically.
+pub fn row_residual(kernel: Kernel, x: &[f64], lam_row: &[f64]) -> f64 {
+    let norm2: f64 = lam_row.iter().map(|v| v * v).sum();
+    (kernel.eval_diag(x) - norm2).abs()
+}
+
+/// Factorize through random Fourier features: Λ = √(2/m)·cos(Xωᵀ + b)
+/// with m = `max_rank` features, plus the diagnostic diagonal residual
+/// `Σᵢ |k(xᵢ,xᵢ) − ‖λᵢ‖²|` (the analogue of ICL's residual trace; RFF's
+/// residual is not PSD, hence the absolute values). `None` when the
+/// kernel has no Gaussian spectral form (caller falls back to ICL).
+pub fn rff_factorize(
+    kernel: Kernel,
+    x: &Mat,
+    max_rank: usize,
+    base_seed: u64,
+) -> Option<(RffMap, Mat, f64)> {
+    let map = RffMap::draw(kernel, x.cols, max_rank, base_seed)?;
+    let lam = map.features(x);
+    let residual: f64 = (0..x.rows).map(|i| row_residual(kernel, x.row(i), lam.row(i))).sum();
+    Some((map, lam, residual))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::gram;
+
+    fn normals(n: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(n, cols);
+        for v in &mut m.data {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn reconstruction_error_shrinks_with_m() {
+        let x = normals(40, 2, 1);
+        let k = Kernel::Rbf { sigma: 1.5 };
+        let g = gram(k, &x);
+        let mut errs = Vec::new();
+        for m in [50usize, 200, 800] {
+            let (_, lam, _) = rff_factorize(k, &x, m, 0).unwrap();
+            errs.push((&lam.matmul_t(&lam) - &g).max_abs());
+        }
+        // O(1/√m): quadrupling m should roughly halve the error; allow
+        // generous slack for Monte-Carlo noise at fixed seeds
+        assert!(errs[2] < errs[0], "error must shrink with m: {errs:?}");
+        assert!(errs[2] < 0.2, "800 features must reconstruct coarsely: {errs:?}");
+    }
+
+    #[test]
+    fn map_is_a_pure_function_of_the_kernel() {
+        let k = Kernel::Rbf { sigma: 0.7 };
+        let a = RffMap::draw(k, 3, 64, 9).unwrap();
+        let b = RffMap::draw(k, 3, 64, 9).unwrap();
+        assert_eq!(a.omega.data, b.omega.data, "same kernel → same frequencies");
+        assert_eq!(a.phases, b.phases);
+        // the data never enters: feature rows for the same point agree
+        // no matter which factorization produced the map
+        let x = [0.3, -1.2, 0.8];
+        assert_eq!(a.feature_row(&x), b.feature_row(&x));
+        // different width → different draws
+        let c = RffMap::draw(Kernel::Rbf { sigma: 0.8 }, 3, 64, 9).unwrap();
+        assert_ne!(a.omega.data, c.omega.data);
+    }
+
+    #[test]
+    fn non_rbf_kernels_are_refused() {
+        assert!(RffMap::draw(Kernel::Linear, 2, 32, 0).is_none());
+        assert!(RffMap::draw(Kernel::Delta, 2, 32, 0).is_none());
+        assert!(rff_factorize(Kernel::Poly { c: 1.0, degree: 2 }, &normals(10, 2, 2), 32, 0)
+            .is_none());
+    }
+
+    #[test]
+    fn features_match_row_evaluation() {
+        let x = normals(15, 2, 3);
+        let map = RffMap::draw(Kernel::Rbf { sigma: 1.0 }, 2, 40, 0).unwrap();
+        let lam = map.features(&x);
+        for i in 0..x.rows {
+            assert_eq!(lam.row(i), &map.feature_row(x.row(i))[..], "row {i}");
+        }
+        assert_eq!(map.num_features(), 40);
+    }
+}

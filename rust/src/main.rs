@@ -36,8 +36,10 @@ use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::{networks, Dataset};
 use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
 use cvlr::linalg::Mat;
+use cvlr::lowrank::{FactorMethod, LowRankConfig};
 use cvlr::runtime::Runtime;
-use cvlr::score::cvlr::CvLrScore;
+use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
+use cvlr::score::folds::CvParams;
 use cvlr::score::LocalScore;
 use cvlr::server::{registry, Server, ServerConfig};
 use cvlr::stream::{StreamConfig, StreamingDiscovery};
@@ -97,7 +99,11 @@ fn print_help() {
          \x20 --artifacts DIR                       artifacts dir (default artifacts)\n\
          \x20 --workers W                           score-service threads (default 1)\n\
          \x20 --parallelism P                       Gram-product threads in the CV-LR\n\
-         \x20                                       fold-core builds (default 1)\n\n\
+         \x20                                       fold-core builds (default 1; 0 = auto:\n\
+         \x20                                       available cores capped at the fold count)\n\
+         \x20 --lowrank icl|rff                     CV-LR factorization (default icl;\n\
+         \x20                                       rff = data-independent Fourier features,\n\
+         \x20                                       O(m) streaming appends, no re-pivots)\n\n\
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
@@ -117,6 +123,13 @@ fn print_help() {
          \x20 --cache-cap C    per-service score-cache bound (default 2^20, 0 = unbounded)\n\
          \x20 --n N --seed S   sampling of the built-in datasets"
     );
+}
+
+/// Parse `--lowrank {icl,rff}` (the CV-LR factorization; default icl).
+fn lowrank_arg(args: &Args) -> Result<FactorMethod> {
+    let name = args.get_or("lowrank", "icl");
+    FactorMethod::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --lowrank `{name}` (icl|rff)"))
 }
 
 /// Build the workload named by `--data`: a dataset plus (if known) the
@@ -195,6 +208,7 @@ fn cmd_discover(args: &Args) -> Result<()> {
         .engine(engine)
         .workers(args.usize_or("workers", 1))
         .parallelism(args.usize_or("parallelism", 1))
+        .lowrank_method(lowrank_arg(args)?)
         .artifacts_dir(args.get_or("artifacts", "artifacts"));
     let cache_cap = args.usize_or("cache-cap", 0);
     if cache_cap > 0 {
@@ -256,12 +270,17 @@ fn cmd_stream(args: &Args) -> Result<()> {
     if n <= chunk {
         bail!("workload has {n} rows — need more than one chunk of {chunk} (lower --chunk or raise --n)");
     }
+    let lowrank = lowrank_arg(args)?;
     println!("workload : {desc}");
-    println!("streaming: chunks of {chunk} rows, CV-LR (native engine)\n");
+    println!(
+        "streaming: chunks of {chunk} rows, CV-LR (native engine, {} factors)\n",
+        lowrank.name()
+    );
 
     let cfg = StreamConfig {
         workers: args.usize_or("workers", 1),
         parallelism: args.usize_or("parallelism", 1),
+        lowrank: LowRankConfig::with_method(lowrank),
         cache_capacity: match args.usize_or("cache-cap", 0) {
             0 => None,
             c => Some(c),
@@ -364,7 +383,13 @@ fn cmd_score(args: &Args) -> Result<()> {
     }
     println!("workload : {desc}");
     let sw = Stopwatch::start();
-    let score = CvLrScore::native(ds).with_parallelism(args.usize_or("parallelism", 1));
+    let score = CvLrScore::with_backend(
+        ds,
+        CvParams::default(),
+        LowRankConfig::with_method(lowrank_arg(args)?),
+        NativeCvLrKernel,
+    )
+    .with_parallelism(args.usize_or("parallelism", 1));
     let s = score.local_score(target, &parents);
     println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
     Ok(())
@@ -380,6 +405,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         job_workers: args.usize_or("job-workers", 2),
         score_workers: args.usize_or("workers", 1),
         parallelism: args.usize_or("parallelism", 1),
+        lowrank: lowrank_arg(args)?,
         cache_capacity: match args.usize_or("cache-cap", 1 << 20) {
             0 => None,
             c => Some(c),

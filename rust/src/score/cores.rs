@@ -36,11 +36,28 @@
 //! results are bit-identical to the serial build (per-fold work is
 //! serial and fold sums are accumulated in fold order).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::linalg::Mat;
+
+/// Resolve the `parallelism` knob shared by every layer
+/// (`DiscoveryConfig`/`StreamConfig`/`ServerConfig`/CLI/`POST
+/// /v1/jobs`): `0` means **auto** — the machine's available
+/// parallelism, capped at the fold count `q` (threads beyond Q only
+/// help through the intra-fold row partition, which auto mode does not
+/// assume is profitable). Any other value passes through unchanged.
+pub fn resolve_parallelism(requested: usize, q: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(q.max(1))
+    } else {
+        requested
+    }
+}
 
 /// One conditional fold of centered cores, borrowed from the provider
 /// caches: the complete input of the dumbbell-form score algebra
@@ -395,31 +412,79 @@ pub fn cond_fold<'a>(
     }
 }
 
+/// One resident fold-core bundle plus its second-chance (clock) bit,
+/// set on every hit. Values are `Arc`-shared, so eviction only drops
+/// the cache's reference — in-flight scorers keep theirs.
+struct CoreSlot {
+    cores: Arc<SetCores>,
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct CoreCacheInner {
+    map: HashMap<Vec<usize>, CoreSlot>,
+    /// Clock queue over resident keys, oldest first; each resident key
+    /// appears at most once (inserts enqueue, evictions pop).
+    ring: VecDeque<Vec<usize>>,
+    evictions: u64,
+}
+
 /// Per-variable-set self-core cache, keyed by the sorted variable set.
 /// One [`SetCores::build`] per set per dataset version: `CvLrScore`
 /// keeps it for the life of the score, the streaming backend clears it
 /// on every append (every core depends on every row).
+///
+/// The cache can be **bounded** ([`FoldCoreCache::with_capacity`]),
+/// mirroring the score memo layer's second-chance eviction
+/// (`ScoreCache::with_capacity`): each `SetCores` retains the fold
+/// blocks — roughly 2× the factor-cache footprint per set — which is
+/// fine for one run but grows without limit across wide pooled-server
+/// sweeps. Entry and eviction counts are surfaced through
+/// `ScoreBackend::core_cache_stats` into `ServiceStats` / `/v1/stats`;
+/// the server defaults the bound from its `cache_capacity`.
 #[derive(Default)]
 pub struct FoldCoreCache {
-    inner: Mutex<HashMap<Vec<usize>, Arc<SetCores>>>,
+    inner: Mutex<CoreCacheInner>,
+    /// Maximum resident entries (None = unbounded).
+    capacity: Option<usize>,
 }
 
 impl FoldCoreCache {
+    /// Unbounded cache (the one-shot CLI default).
     pub fn new() -> FoldCoreCache {
         FoldCoreCache::default()
     }
 
+    /// Cache holding at most `capacity` entries (None = unbounded).
+    pub fn with_capacity(capacity: Option<usize>) -> FoldCoreCache {
+        FoldCoreCache { inner: Mutex::new(CoreCacheInner::default()), capacity }
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Entries reclaimed by the second-chance sweep so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
     /// Cached self-cores for `key` (must be sorted), if resident — the
     /// fast path for callers that want to skip assembling build inputs
-    /// (fold vectors) on a hit.
+    /// (fold vectors) on a hit. Sets the entry's second-chance bit.
     pub fn get(&self, key: &[usize]) -> Option<Arc<SetCores>> {
-        self.inner.lock().unwrap().get(key).cloned()
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.get_mut(key).map(|slot| {
+            slot.referenced = true;
+            slot.cores.clone()
+        })
     }
 
     /// Cached self-cores for `key` (must be sorted), building from the
     /// factor on a miss. The build runs OUTSIDE the lock — the O(n·m²)
     /// work must not serialize concurrent score workers; racing
-    /// builders of the same set: first insert wins.
+    /// builders of the same set: first insert wins. A bounded cache
+    /// sweeps after the insert.
     pub fn get_or_build(
         &self,
         key: &[usize],
@@ -427,26 +492,73 @@ impl FoldCoreCache {
         threads: usize,
         factor: &mut dyn FnMut() -> Arc<Mat>,
     ) -> Arc<SetCores> {
-        if let Some(c) = self.inner.lock().unwrap().get(key) {
-            return c.clone();
+        if let Some(c) = self.get(key) {
+            return c;
         }
         let lam = factor();
         let cores = Arc::new(SetCores::build(&lam, folds, threads));
-        self.inner.lock().unwrap().entry(key.to_vec()).or_insert(cores).clone()
+        let mut inner = self.inner.lock().unwrap();
+        let out = match inner.map.get_mut(key) {
+            // racing builder won: serve its entry, drop ours
+            Some(slot) => {
+                slot.referenced = true;
+                slot.cores.clone()
+            }
+            None => {
+                inner
+                    .map
+                    .insert(key.to_vec(), CoreSlot { cores: cores.clone(), referenced: false });
+                inner.ring.push_back(key.to_vec());
+                cores
+            }
+        };
+        if let Some(cap) = self.capacity {
+            Self::enforce_capacity(&mut inner, cap);
+        }
+        out
+    }
+
+    /// Second-chance sweep: pop the oldest resident entry; referenced
+    /// entries spend their bit and requeue, unreferenced ones are
+    /// reclaimed (outstanding `Arc`s stay valid — only the cache's
+    /// reference is dropped). Budgeted so it always terminates.
+    fn enforce_capacity(inner: &mut CoreCacheInner, cap: usize) {
+        let mut budget = 2 * inner.ring.len();
+        while inner.map.len() > cap && budget > 0 {
+            budget -= 1;
+            let k = match inner.ring.pop_front() {
+                Some(k) => k,
+                None => break,
+            };
+            match inner.map.get_mut(&k) {
+                Some(slot) if slot.referenced => {
+                    slot.referenced = false;
+                    inner.ring.push_back(k);
+                }
+                Some(_) => {
+                    inner.map.remove(&k);
+                    inner.evictions += 1;
+                }
+                // stale ring key (cleared between enqueue and sweep)
+                None => {}
+            }
+        }
     }
 
     /// Drop every cached entry (dataset rows changed); returns how many
-    /// were resident.
+    /// were resident. Cleared entries are not counted as evictions —
+    /// invalidation is not capacity pressure.
     pub fn clear(&self) -> usize {
         let mut inner = self.inner.lock().unwrap();
-        let n = inner.len();
-        inner.clear();
+        let n = inner.map.len();
+        inner.map.clear();
+        inner.ring.clear();
         n
     }
 
     /// Resident variable sets.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().unwrap().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -565,5 +677,59 @@ mod tests {
         assert!(cache.is_empty());
         let _ = cache.get_or_build(&[0, 2], &folds, 1, &mut factor);
         assert_eq!(builds.get(), 2, "cleared entries rebuild");
+    }
+
+    #[test]
+    fn bounded_core_cache_evicts_second_chance() {
+        let lam = Arc::new(random_mat(40, 3, 7));
+        let folds = stride_folds(40, 4);
+        let cache = FoldCoreCache::with_capacity(Some(2));
+        assert_eq!(cache.capacity(), Some(2));
+        let mut factor = || lam.clone();
+        cache.get_or_build(&[0], &folds, 1, &mut factor); // A
+        cache.get_or_build(&[1], &folds, 1, &mut factor); // B
+        assert!(cache.get(&[0]).is_some()); // hit A → referenced
+        cache.get_or_build(&[2], &folds, 1, &mut factor); // sweep: spares A, evicts B
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&[0]).is_some(), "referenced entry survived the sweep");
+        assert!(cache.get(&[1]).is_none(), "B was the victim");
+        // an evicted set rebuilds on demand
+        let builds = std::cell::Cell::new(0usize);
+        let mut counting = || {
+            builds.set(builds.get() + 1);
+            lam.clone()
+        };
+        cache.get_or_build(&[1], &folds, 1, &mut counting);
+        assert_eq!(builds.get(), 1, "evicted entries rebuild");
+        // clears are invalidations, not evictions
+        cache.clear();
+        assert_eq!(cache.evictions(), 2, "the rebuild of [1] evicted one more entry");
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn unbounded_core_cache_never_evicts() {
+        let lam = Arc::new(random_mat(30, 2, 8));
+        let folds = stride_folds(30, 3);
+        let cache = FoldCoreCache::new();
+        let mut factor = || lam.clone();
+        for k in 0..10usize {
+            cache.get_or_build(&[k], &folds, 1, &mut factor);
+        }
+        assert_eq!(cache.len(), 10);
+        assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn resolve_parallelism_auto_and_passthrough() {
+        // explicit values pass through untouched
+        assert_eq!(resolve_parallelism(1, 10), 1);
+        assert_eq!(resolve_parallelism(7, 10), 7);
+        assert_eq!(resolve_parallelism(64, 10), 64, "explicit values are not capped");
+        // auto: at least 1, at most Q
+        let auto = resolve_parallelism(0, 10);
+        assert!((1..=10).contains(&auto), "auto resolved to {auto}");
+        assert_eq!(resolve_parallelism(0, 1), 1, "Q caps the auto value");
     }
 }

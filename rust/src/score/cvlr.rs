@@ -232,10 +232,26 @@ impl<K: CvLrKernel> CvLrScore<K> {
         }
     }
 
-    /// Gram-product threads for the fold-core builds (default 1; see
+    /// Gram-product threads for the fold-core builds (default 1; `0` =
+    /// auto — available cores capped at the fold count; see
     /// `score::cores` for the partitioning contract).
     pub fn with_parallelism(mut self, threads: usize) -> Self {
-        self.parallelism = threads.max(1);
+        self.parallelism = super::cores::resolve_parallelism(threads, self.params.folds);
+        self
+    }
+
+    /// The resolved Gram-product thread count (`0` inputs already
+    /// resolved to the auto value).
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Bound the fold-core cache to at most `capacity` variable sets
+    /// (second-chance eviction, mirroring `ScoreCache::with_capacity`).
+    /// Unbounded by default; long-lived servers default this from their
+    /// score-cache capacity.
+    pub fn with_core_capacity(mut self, capacity: Option<usize>) -> Self {
+        self.fold_cores = FoldCoreCache::with_capacity(capacity);
         self
     }
 
@@ -384,6 +400,10 @@ impl<K: CvLrKernel> ScoreBackend for CvLrScore<K> {
 
     fn num_vars(&self) -> usize {
         self.ds.d()
+    }
+
+    fn core_cache_stats(&self) -> Option<(u64, u64)> {
+        Some((self.fold_cores.len() as u64, self.fold_cores.evictions()))
     }
 }
 

@@ -113,6 +113,16 @@ pub trait ScoreBackend: Send + Sync {
     fn score_one(&self, target: usize, parents: &[usize]) -> f64 {
         self.score_batch(&[ScoreRequest::new(target, parents)])[0]
     }
+
+    /// `(resident entries, evictions)` of the backend's fold-core cache
+    /// ([`cores::FoldCoreCache`]), `None` for backends without one.
+    /// Surfaced through `ServiceStats::core_cache_entries` /
+    /// `::core_cache_evictions` and `/v1/stats`, so the footprint of
+    /// the per-set core bundles (~2× the factor cache per set) is
+    /// observable in long-lived servers.
+    fn core_cache_stats(&self) -> Option<(u64, u64)> {
+        None
+    }
 }
 
 /// Adapter turning any scalar [`LocalScore`] into a (serial)

@@ -172,10 +172,18 @@ impl JobSnapshot {
     }
 }
 
-// (dataset name, dataset version, method, engine). The version comes
-// from the registry and is bumped on replacement, so re-uploading a
-// dataset under the same name can never hit a stale service/cache.
-type ServiceKey = (String, u64, String, String);
+// (dataset name, dataset version, method, engine, lowrank method). The
+// version comes from the registry and is bumped on replacement, so
+// re-uploading a dataset under the same name can never hit a stale
+// service/cache; the lowrank component keeps `icl` and `rff` jobs on
+// separate pools — their factors (and therefore every memoized score)
+// differ. Deliberately keyed for EVERY method, not just cv-lr: the
+// registry accepts custom score factories that may also read
+// `cfg.lowrank`, and for lowrank-agnostic methods (bic, ...) the only
+// cost of a spurious `lowrank` option is a duplicate (LRU-bounded) pool
+// entry — far cheaper than sharing a cache between backends whose
+// scores actually differ.
+type ServiceKey = (String, u64, String, String, String);
 
 /// A pooled service plus its LRU stamp (monotonic use counter) and the
 /// config that built its backend (needed to rebuild the backend over an
@@ -363,7 +371,7 @@ impl JobManager {
     }
 
     /// Per-service counters of the pool: ((dataset, dataset version,
-    /// method, engine), stats), sorted by key.
+    /// method, engine, lowrank), stats), sorted by key.
     pub fn service_stats(&self) -> Vec<(ServiceKey, ServiceStats)> {
         let services = self.services.lock().unwrap();
         let mut out: Vec<(ServiceKey, ServiceStats)> =
@@ -568,6 +576,7 @@ impl JobManager {
                         ds_version,
                         canon.clone(),
                         format!("{:?}", spec.cfg.engine),
+                        spec.cfg.lowrank.method.name().to_string(),
                     );
                     let stamp = || self.pool_clock.fetch_add(1, Ordering::Relaxed) + 1;
                     let cached = {
@@ -580,18 +589,29 @@ impl JobManager {
                     match cached {
                         Some(svc) => svc,
                         None => {
+                            // the server default cache bound applies to the
+                            // score memo AND (through the factory) the
+                            // backend's fold-core cache; resolve it before
+                            // the build so both see the same bound
+                            let cap = spec.cfg.cache_capacity.or(self.default_cache_capacity);
+                            let mut bcfg = spec.cfg.clone();
+                            bcfg.cache_capacity = cap;
                             // build outside the pool lock: a factory may
                             // load PJRT artifacts from disk
-                            let (_, backend) = score_backend_for(&canon, ds, &spec.cfg)?;
+                            let (_, backend) = score_backend_for(&canon, ds, &bcfg)?;
                             let backend =
                                 backend.ok_or_else(|| anyhow!("`{canon}` is not score-based"))?;
-                            let cap = spec.cfg.cache_capacity.or(self.default_cache_capacity);
                             let svc = Arc::new(ScoreService::with_cache_capacity(
                                 backend,
                                 spec.cfg.workers,
                                 cap,
                             ));
-                            svc.set_gram_threads(spec.cfg.parallelism.max(1) as u64);
+                            svc.set_gram_threads(
+                                crate::score::cores::resolve_parallelism(
+                                    spec.cfg.parallelism,
+                                    spec.cfg.params.folds,
+                                ) as u64,
+                            );
                             let mut services = self.services.lock().unwrap();
                             // a replaced dataset's services are now
                             // unreachable (stale version): drop them
@@ -612,12 +632,14 @@ impl JobManager {
                             }
                             // racing builders: first insert wins so all
                             // jobs share one cache
+                            // retain the resolved config so refresh-time
+                            // rebuilds reproduce the same cache bounds
                             services
                                 .entry(key)
                                 .or_insert_with(|| PoolEntry {
                                     service: svc,
                                     last_use: stamp(),
-                                    cfg: spec.cfg.clone(),
+                                    cfg: bcfg,
                                 })
                                 .service
                                 .clone()

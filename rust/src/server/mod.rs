@@ -22,7 +22,7 @@
 //! | `GET /v1/datasets` | list registered datasets |
 //! | `POST /v1/datasets/{name}/rows` | append header-less CSV rows (`{"csv"}`) in the dataset's internal coordinates; refreshes (not retires) the pooled services, invalidating their stale score entries; `409` while jobs on the dataset are active |
 //! | `DELETE /v1/datasets/{name}` | remove a dataset and retire its pooled services |
-//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "parallelism"?, "cache_capacity"?, "warm_start"?}` → `202 {"id", "state"}` (`workers`/`parallelism`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `parallelism` = Gram-product threads of the fold-core builds, exposed as `gram_threads` in `/v1/stats`; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
+//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "parallelism"?, "lowrank"?, "cache_capacity"?, "warm_start"?}` → `202 {"id", "state"}` (`workers`/`parallelism`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `parallelism` = Gram-product threads of the fold-core builds, `0` = auto, exposed resolved as `gram_threads` in `/v1/stats`; `lowrank` = `"icl"` or `"rff"` — the CV-LR factorization, part of the service-pool key; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
 //! | `GET /v1/jobs` | list job snapshots (without results) |
 //! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
 //! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
@@ -44,6 +44,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{DiscoveryConfig, EngineKind};
+use crate::lowrank::FactorMethod;
 
 use self::http::{Handler, HttpServer, Request, Response};
 use self::jobs::{JobManager, JobResult, JobSnapshot, JobSpec};
@@ -60,8 +61,14 @@ pub struct ServerConfig {
     /// Default score-service worker threads per job.
     pub score_workers: usize,
     /// Default Gram-product threads for CV-LR fold-core builds
-    /// (`DiscoveryConfig::parallelism`; overridable per job).
+    /// (`DiscoveryConfig::parallelism`; overridable per job; `0` =
+    /// auto — available cores capped at the fold count, reported
+    /// resolved as `gram_threads`).
     pub parallelism: usize,
+    /// Default low-rank factorization for CV-LR jobs (`icl` adaptive
+    /// pivots or `rff` data-independent Fourier features; overridable
+    /// per job with the `lowrank` option).
+    pub lowrank: FactorMethod,
     /// Default per-service score-cache bound. `None` disables the bound
     /// — do that only for short-lived test servers.
     pub cache_capacity: Option<usize>,
@@ -80,6 +87,7 @@ impl Default for ServerConfig {
             job_workers: 2,
             score_workers: 1,
             parallelism: 1,
+            lowrank: FactorMethod::Icl,
             cache_capacity: Some(1 << 20),
             builtin_n: 500,
             seed: 0,
@@ -217,6 +225,8 @@ fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
         ("invalidations", num(st.invalidations)),
         ("warm_start_hits", num(st.warm_start_hits)),
         ("cache_entries", num(st.cache_entries)),
+        ("core_cache_entries", num(st.core_cache_entries)),
+        ("core_cache_evictions", num(st.core_cache_evictions)),
         ("gram_threads", num(st.gram_threads)),
         ("eval_seconds", Json::Num(st.eval_seconds)),
         ("consistent", Json::Bool(st.consistent())),
@@ -437,7 +447,16 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
     };
     if let Err(resp) = check_keys(
         &body,
-        &["dataset", "method", "engine", "workers", "parallelism", "cache_capacity", "warm_start"],
+        &[
+            "dataset",
+            "method",
+            "engine",
+            "workers",
+            "parallelism",
+            "lowrank",
+            "cache_capacity",
+            "warm_start",
+        ],
     ) {
         return resp;
     }
@@ -461,11 +480,21 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
         artifacts_dir: cfg.artifacts_dir.clone(),
         ..Default::default()
     };
+    dcfg.lowrank.method = cfg.lowrank;
     if let Some(w) = body.get("workers").and_then(Json::as_u64) {
         dcfg.workers = w as usize;
     }
+    // 0 = auto (available cores capped at the fold count)
     if let Some(t) = body.get("parallelism").and_then(Json::as_u64) {
-        dcfg.parallelism = (t as usize).max(1);
+        dcfg.parallelism = t as usize;
+    }
+    if let Some(l) = body.get("lowrank").and_then(Json::as_str) {
+        match FactorMethod::parse(l) {
+            Some(m) => dcfg.lowrank.method = m,
+            None => {
+                return Response::error(400, &format!("unknown lowrank method `{l}` (icl|rff)"))
+            }
+        }
     }
     if let Some(c) = body.get("cache_capacity").and_then(Json::as_u64) {
         dcfg.cache_capacity = Some(c as usize);
@@ -491,12 +520,13 @@ fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
     let services: Vec<Json> = manager
         .service_stats()
         .into_iter()
-        .map(|((dataset, version, method, engine), st)| {
+        .map(|((dataset, version, method, engine, lowrank), st)| {
             Json::obj(vec![
                 ("dataset", Json::str(dataset)),
                 ("dataset_version", num(version)),
                 ("method", Json::str(method)),
                 ("engine", Json::str(engine)),
+                ("lowrank", Json::str(lowrank)),
                 ("stats", stats_json(&st)),
             ])
         })

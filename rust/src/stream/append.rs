@@ -23,13 +23,23 @@
 //! **re-pivots** — a full refactorization over all rows with the same
 //! (pinned) kernel, identical to what a cold factorization of the full
 //! data would produce.
+//!
+//! **Random Fourier features** (`FactorMethod::Rff`) sidestep all of
+//! the above: the feature map is a pure function of the pinned kernel
+//! — no pivot rows, no pivot factor — so a new sample folds in with one
+//! **O(m·dim)** feature evaluation that is *bit-for-bit* the row a cold
+//! refactorization over the full data would produce. There is no
+//! residual budget and no re-pivot path; the appended-residual counter
+//! is still maintained (the |diagonal| Monte-Carlo residual) purely as
+//! an observable.
 
 use std::sync::Arc;
 
 use crate::kernel::Kernel;
 use crate::linalg::Mat;
 use crate::lowrank::{
-    discrete_decomposition_detailed, distinct_rows, icl_detailed, LowRankConfig, Method,
+    discrete_decomposition_detailed, distinct_rows, icl_detailed, rff_factorize, FactorMethod,
+    LowRankConfig, Method, RffMap,
 };
 
 /// What happened to one factor state during a chunk append.
@@ -64,6 +74,9 @@ pub struct FactorState {
     method: Method,
     is_discrete: bool,
     cfg: LowRankConfig,
+    /// The data-independent feature map when the state is RFF-backed
+    /// (`xp`/`lp` are then empty — there are no pivots to retain).
+    rff: Option<RffMap>,
     /// Residual trace at (re-)factorization time.
     base_residual: f64,
     /// Residual mass contributed by rows appended since.
@@ -119,6 +132,7 @@ impl FactorState {
                         method: Method::Discrete,
                         is_discrete,
                         cfg: *cfg,
+                        rff: None,
                         base_residual: 0.0,
                         appended_residual: 0.0,
                         capped: false,
@@ -126,6 +140,29 @@ impl FactorState {
                     };
                 }
             }
+        }
+        if cfg.method == FactorMethod::Rff {
+            // the one shared factorization routine (`rff_factorize`),
+            // so the factor is bit-identical to `lowrank::factorize`
+            if let Some((map, lambda, residual)) =
+                rff_factorize(kernel, block, cfg.max_rank, cfg.rff_seed)
+            {
+                return FactorState {
+                    kernel,
+                    lambda: Arc::new(lambda),
+                    xp: Mat::zeros(0, block.cols),
+                    lp: Mat::zeros(0, 0),
+                    method: Method::Rff,
+                    is_discrete,
+                    cfg: *cfg,
+                    rff: Some(map),
+                    base_residual: residual,
+                    appended_residual: 0.0,
+                    capped: false,
+                    repivots: 0,
+                };
+            }
+            // non-RBF kernel: fall through to ICL, like `factorize`
         }
         let f = icl_detailed(kernel, block, cfg.eta, cfg.max_rank);
         let m = f.pivots.len();
@@ -143,6 +180,7 @@ impl FactorState {
             method: Method::Icl,
             is_discrete,
             cfg: *cfg,
+            rff: None,
             base_residual: f.residual,
             appended_residual: 0.0,
             capped: f.capped,
@@ -201,6 +239,24 @@ impl FactorState {
     /// all rows: discrete basis growth and re-pivot.
     pub fn append(&mut self, chunk: &Mat, full: &dyn Fn() -> Mat) -> AppendOutcome {
         let mut out = AppendOutcome::default();
+        if self.method == Method::Rff {
+            // exact-by-construction appends: each row is the same
+            // O(m·dim) feature evaluation a cold refactorization would
+            // perform, so there is no drift to track and no re-pivot
+            // path — `full` is never invoked
+            let map = self.rff.as_ref().expect("RFF state retains its feature map");
+            let rows = map.features(chunk);
+            let mut resid = 0.0;
+            for r in 0..chunk.rows {
+                resid += crate::lowrank::rff::row_residual(self.kernel, chunk.row(r), rows.row(r));
+            }
+            Arc::make_mut(&mut self.lambda).append_rows(&rows);
+            // observability only: the Monte-Carlo |diagonal| residual
+            // accumulates but never triggers a re-pivot
+            self.appended_residual += resid;
+            out.appended = chunk.rows;
+            return out;
+        }
         for r in 0..chunk.rows {
             let x: Vec<f64> = chunk.row(r).to_vec();
             if self.method == Method::Discrete && self.basis_index(&x).is_none() {
@@ -411,7 +467,7 @@ mod tests {
         let kern = Kernel::Rbf { sigma: median_heuristic(&x, 2.0) };
         // η = 0 leaves no appended-residual budget: the first genuinely
         // novel row forces a re-pivot
-        let cfg = LowRankConfig { max_rank: 60, eta: 0.0 };
+        let cfg = LowRankConfig { max_rank: 60, eta: 0.0, ..Default::default() };
         let mut st = FactorState::new(kern, &head(&x, 40), false, &cfg);
         let out = st.append(&tail(&x, 40), &|| x.clone());
         assert!(out.repivoted, "zero budget must force a re-pivot");
@@ -422,6 +478,42 @@ mod tests {
             cold.lambda().data,
             "re-pivot must be bit-for-bit the cold factorization"
         );
+    }
+
+    #[test]
+    fn rff_state_matches_cold_factorize_at_construction() {
+        let x = normals(50, 2, 7);
+        let kern = Kernel::Rbf { sigma: median_heuristic(&x, 2.0) };
+        let cfg = LowRankConfig::with_method(FactorMethod::Rff);
+        let st = FactorState::new(kern, &x, false, &cfg);
+        assert_eq!(st.method(), Method::Rff);
+        let cold = crate::lowrank::factorize(kern, &x, false, &cfg);
+        assert_eq!(st.lambda().data, cold.lambda.data, "bit-for-bit vs factorize");
+        assert_eq!(st.method(), cold.method);
+    }
+
+    #[test]
+    fn rff_append_is_bit_for_bit_and_never_repivots() {
+        let x = normals(90, 2, 8);
+        let kern = Kernel::Rbf { sigma: median_heuristic(&x, 2.0) };
+        // η = 0 (zero residual budget) would force an ICL state to
+        // re-pivot on the first novel row; RFF has no budget at all
+        let cfg = LowRankConfig { eta: 0.0, method: FactorMethod::Rff, ..Default::default() };
+        let mut st = FactorState::new(kern, &head(&x, 40), false, &cfg);
+        let panic_on_full: &dyn Fn() -> Mat =
+            &|| panic!("RFF appends must never materialize the full block");
+        let out1 = st.append(&x.select_rows(&(40..70).collect::<Vec<_>>()), panic_on_full);
+        let out2 = st.append(&tail(&x, 70), panic_on_full);
+        assert!(!out1.repivoted && !out2.repivoted);
+        assert_eq!(out1.appended + out2.appended, 50);
+        assert_eq!(st.repivots(), 0, "RFF has no re-pivot path");
+        let cold = FactorState::new(kern, &x, false, &cfg);
+        assert_eq!(
+            st.lambda().data,
+            cold.lambda().data,
+            "data-independent features: append == cold refactorize bit-for-bit"
+        );
+        assert!(st.residual() > 0.0, "the Monte-Carlo residual observable accumulates");
     }
 
     #[test]

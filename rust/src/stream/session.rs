@@ -137,9 +137,22 @@ impl StreamBackend {
         }
     }
 
-    /// Gram-product threads for the fold-core builds (default 1).
+    /// Gram-product threads for the fold-core builds (default 1; `0` =
+    /// auto — available cores capped at the fold count).
     pub fn with_parallelism(mut self, threads: usize) -> StreamBackend {
-        self.parallelism = threads.max(1);
+        self.parallelism = crate::score::cores::resolve_parallelism(threads, self.params.folds);
+        self
+    }
+
+    /// The resolved Gram-product thread count.
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Bound the fold-core cache (see `FoldCoreCache::with_capacity`);
+    /// sessions default this from their score-cache capacity.
+    pub fn with_core_capacity(mut self, capacity: Option<usize>) -> StreamBackend {
+        self.cores = FoldCoreCache::with_capacity(capacity);
         self
     }
 
@@ -258,6 +271,10 @@ impl ScoreBackend for StreamBackend {
     fn num_vars(&self) -> usize {
         self.data.read().unwrap().d()
     }
+
+    fn core_cache_stats(&self) -> Option<(u64, u64)> {
+        Some((self.cores.len() as u64, self.cores.evictions()))
+    }
 }
 
 /// The streaming discovery session: append row chunks, re-discover
@@ -291,7 +308,10 @@ impl StreamingDiscovery {
     pub fn with_config(initial: Dataset, cfg: StreamConfig) -> StreamingDiscovery {
         let backend = Arc::new(
             StreamBackend::new(initial, cfg.params, cfg.lowrank)
-                .with_parallelism(cfg.parallelism),
+                .with_parallelism(cfg.parallelism)
+                // the fold-core bound rides the score-cache bound: both
+                // exist for the same long-lived-process reason
+                .with_core_capacity(cfg.cache_capacity),
         );
         let dyn_backend: Arc<dyn ScoreBackend> = backend.clone();
         let service = Arc::new(ScoreService::with_cache_capacity(
@@ -299,7 +319,7 @@ impl StreamingDiscovery {
             cfg.workers,
             cfg.cache_capacity,
         ));
-        service.set_gram_threads(cfg.parallelism.max(1) as u64);
+        service.set_gram_threads(backend.parallelism() as u64);
         StreamingDiscovery { backend, service, ges: cfg.ges, chunks: 0 }
     }
 

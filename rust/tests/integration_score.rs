@@ -129,7 +129,7 @@ fn rank_cap_improves_approximation() {
         let lr = CvLrScore::with_backend(
             ds.clone(),
             CvParams::default(),
-            LowRankConfig { max_rank: m, eta: 1e-6 },
+            LowRankConfig { max_rank: m, eta: 1e-6, ..Default::default() },
             NativeCvLrKernel,
         );
         rel_err(se, lr.local_score(3, &[0, 1, 2, 4, 5, 6]))

@@ -440,3 +440,64 @@ fn streaming_append_and_warm_start_over_tcp() {
 
     server.stop();
 }
+
+#[test]
+fn lowrank_job_option_pools_separate_services() {
+    let server = start_server(2);
+    let addr = server.addr();
+
+    // cv-lr with the default (icl) and the rff factorization: both run
+    // to done, and land on SEPARATE pooled services — their factors
+    // (and therefore every memoized score) differ
+    for lowrank in ["icl", "rff"] {
+        let (status, resp) = post(
+            addr,
+            "/v1/jobs",
+            Json::obj(vec![
+                ("dataset", Json::str("synth")),
+                ("method", Json::str("cv-lr")),
+                ("lowrank", Json::str(lowrank)),
+            ]),
+        );
+        assert_eq!(status, 202, "{resp:?}");
+        let id = resp.get("id").and_then(Json::as_u64).unwrap();
+        let job = poll_until_terminal(addr, id, Duration::from_secs(300));
+        assert_eq!(state_of(&job), "done", "lowrank={lowrank}: {job:?}");
+    }
+
+    let (_, stats) = get(addr, "/v1/stats");
+    let services = stats.get("services").and_then(Json::as_arr).expect("services");
+    let mut methods: Vec<String> = services
+        .iter()
+        .filter(|s| s.get("method").and_then(Json::as_str) == Some("cv-lr"))
+        .map(|s| s.get("lowrank").and_then(Json::as_str).expect("lowrank key").to_string())
+        .collect();
+    methods.sort();
+    assert_eq!(methods, vec!["icl", "rff"], "one pooled service per factorization");
+    for svc in services.iter() {
+        if svc.get("method").and_then(Json::as_str) != Some("cv-lr") {
+            continue;
+        }
+        let st = svc.get("stats").expect("stats");
+        // the fold-core cache counters are live for CV-LR services
+        assert!(
+            st.get("core_cache_entries").and_then(Json::as_u64).unwrap() > 0,
+            "{svc:?}"
+        );
+        assert_eq!(st.get("consistent").and_then(Json::as_bool), Some(true), "{svc:?}");
+    }
+
+    // unknown factorizations fail loudly at submit
+    let (status, err) = post(
+        addr,
+        "/v1/jobs",
+        Json::obj(vec![
+            ("dataset", Json::str("synth")),
+            ("method", Json::str("cv-lr")),
+            ("lowrank", Json::str("nope")),
+        ]),
+    );
+    assert_eq!(status, 400, "{err:?}");
+
+    server.stop();
+}

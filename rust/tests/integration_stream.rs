@@ -9,10 +9,10 @@ use cvlr::coordinator::{discover, DiscoveryConfig, Method};
 use cvlr::data::Dataset;
 use cvlr::kernel::{median_heuristic, Kernel};
 use cvlr::linalg::Mat;
-use cvlr::lowrank::LowRankConfig;
+use cvlr::lowrank::{factorize, FactorMethod, LowRankConfig};
 use cvlr::score::cvlr::{split_center, CvLrKernel, NativeCvLrKernel};
 use cvlr::score::folds::{stride_folds, CvParams};
-use cvlr::stream::{FactorState, StreamBackend, StreamingDiscovery};
+use cvlr::stream::{FactorState, StreamBackend, StreamConfig, StreamingDiscovery};
 use cvlr::util::Pcg64;
 
 /// Strongly identified chain X1 → X2 → X3 plus isolated X4, as raw
@@ -63,7 +63,7 @@ fn streamed_factors_score_like_refactorized_continuous() {
     // tight η: both factors then approximate K to 1e-9, so the 1e-6
     // score agreement has headroom regardless of which pivots the
     // streamed vs cold greedy selections landed on
-    let cfg = LowRankConfig { max_rank: 100, eta: 1e-9 };
+    let cfg = LowRankConfig { max_rank: 100, eta: 1e-9, ..Default::default() };
     let bx = data.select_rows(&(0..data.rows).collect::<Vec<_>>());
     let x_col = |lo: usize, hi: usize, c: usize| {
         Mat::from_vec(hi - lo, 1, (lo..hi).map(|r| bx[(r, c)]).collect())
@@ -227,6 +227,81 @@ fn append_rescore_matches_refactorize_through_core_cache() {
     }
 }
 
+/// The RFF invariant (the data-independent twin of
+/// `prop_stream_append_matches_refactorize`): streamed RFF factors
+/// equal a cold refactorization over the full data **bit for bit** —
+/// no tolerance, because the feature map is a pure function of the
+/// pinned kernel — and the re-pivot counter stays pinned at 0.
+#[test]
+fn streamed_rff_append_matches_refactorize_bit_for_bit() {
+    let data = chain_rows(240, 9);
+    let cfg = LowRankConfig::with_method(FactorMethod::Rff);
+    for c in 0..4usize {
+        let col = |lo: usize, hi: usize| {
+            Mat::from_vec(hi - lo, 1, (lo..hi).map(|r| data[(r, c)]).collect())
+        };
+        let kern =
+            Kernel::Rbf { sigma: median_heuristic(&col(0, 80), CvParams::default().width_factor) };
+        let mut st = FactorState::new(kern, &col(0, 80), false, &cfg);
+        for (lo, hi) in [(80, 150), (150, 240)] {
+            let out = st.append(&col(lo, hi), &|| {
+                panic!("RFF appends must never materialize the full block")
+            });
+            assert!(!out.repivoted);
+        }
+        assert_eq!(st.repivots(), 0, "RFF has no re-pivot path");
+        assert_eq!(st.lambda().rows, 240);
+        let cold = factorize(kern, &col(0, 240), false, &cfg);
+        assert_eq!(
+            st.lambda().data,
+            cold.lambda.data,
+            "column {c}: streamed RFF factor must equal the cold refactorization bit-for-bit"
+        );
+    }
+}
+
+/// Session-level RFF streaming: appends fold in at O(m) per row with
+/// zero re-pivots, the score cache invalidates, re-discovery
+/// warm-starts, and streamed scores match a cold RFF backend whose
+/// kernels were pinned the same way.
+#[test]
+fn rff_session_streams_without_repivots() {
+    let data = chain_rows(240, 10);
+    let full = Dataset::from_columns(data.clone(), &[false; 4]);
+    let cfg = StreamConfig {
+        lowrank: LowRankConfig::with_method(FactorMethod::Rff),
+        ..Default::default()
+    };
+    let mut sess = StreamingDiscovery::with_config(full.head(80), cfg);
+    let first = sess.discover();
+    assert!(!first.warm_started);
+    for (lo, hi) in [(80, 160), (160, 240)] {
+        let ast = sess.append(&rows_range(&data, lo, hi)).unwrap();
+        assert_eq!(ast.repivots, 0, "RFF appends never re-pivot: {ast:?}");
+        assert!(ast.invalidated > 0, "appends must invalidate cached scores");
+        let next = sess.discover();
+        assert!(next.warm_started);
+    }
+    assert_eq!(sess.backend().total_repivots(), 0);
+    assert_eq!(sess.n(), 240);
+
+    // streamed scores == cold backend scores bit-for-bit when the cold
+    // backend pins its kernels on the same head rows (the feature maps
+    // are then identical by construction)
+    use cvlr::score::{ScoreBackend, ScoreRequest};
+    let reqs = [ScoreRequest::new(1, &[0]), ScoreRequest::new(2, &[1]), ScoreRequest::new(3, &[])];
+    let cold = StreamBackend::new(
+        full.head(80),
+        CvParams::default(),
+        LowRankConfig::with_method(FactorMethod::Rff),
+    );
+    let _ = cold.score_batch(&reqs); // pin kernels on the head rows
+    cold.append(&rows_range(&data, 80, 240)).unwrap();
+    let want = cold.score_batch(&reqs);
+    let got = sess.backend().score_batch(&reqs);
+    assert_eq!(got, want, "streamed RFF scores must be bit-for-bit reproducible");
+}
+
 /// The forced re-pivot path: with a zero appended-residual budget every
 /// chunk refactorizes, and the session still converges to the cold
 /// answer (re-pivot = cold factorization by construction).
@@ -237,7 +312,7 @@ fn forced_repivots_repair_exactness() {
     let backend = StreamBackend::new(
         full.head(80),
         CvParams::default(),
-        LowRankConfig { max_rank: 100, eta: 0.0 },
+        LowRankConfig { max_rank: 100, eta: 0.0, ..Default::default() },
     );
     use cvlr::score::{ScoreBackend, ScoreRequest};
     let reqs = [ScoreRequest::new(1, &[0]), ScoreRequest::new(2, &[1])];
@@ -260,7 +335,7 @@ fn forced_repivots_repair_exactness() {
     let cold = StreamBackend::new(
         full.head(80),
         CvParams::default(),
-        LowRankConfig { max_rank: 100, eta: 0.0 },
+        LowRankConfig { max_rank: 100, eta: 0.0, ..Default::default() },
     );
     let _ = cold.score_batch(&reqs);
     cold.append(&rows_range(&data, 80, 160)).unwrap();

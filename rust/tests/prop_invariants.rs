@@ -9,7 +9,7 @@ use cvlr::graph::pdag::dag_to_cpdag;
 use cvlr::graph::{normalized_shd, skeleton_f1};
 use cvlr::kernel::{center_gram, gram, median_heuristic, Kernel};
 use cvlr::linalg::Mat;
-use cvlr::lowrank::{center_factor, factorize, LowRankConfig, Method};
+use cvlr::lowrank::{center_factor, factorize, FactorMethod, LowRankConfig, Method};
 use cvlr::prop_assert;
 use cvlr::score::cores::{cond_fold, pair_cores, SetCores};
 use cvlr::score::cvlr::{split_center, CvLrKernel, NativeCvLrKernel};
@@ -36,7 +36,7 @@ fn prop_icl_error_bound() {
         let x = random_mat(rng, n, dim);
         let sigma = median_heuristic(&x, 2.0);
         let kern = Kernel::Rbf { sigma };
-        let cfg = LowRankConfig { max_rank: n, eta: 1e-6 };
+        let cfg = LowRankConfig { max_rank: n, eta: 1e-6, ..Default::default() };
         let lr = factorize(kern, &x, false, &cfg);
         let k = gram(kern, &x);
         let approx = lr.lambda.matmul_t(&lr.lambda);
@@ -83,7 +83,8 @@ fn prop_center_factor_matches_centered_gram() {
         let n = 15 + rng.below(50);
         let x = random_mat(rng, n, 2);
         let kern = Kernel::Rbf { sigma: median_heuristic(&x, 2.0) };
-        let lr = factorize(kern, &x, false, &LowRankConfig { max_rank: n, eta: 1e-8 });
+        let cfg = LowRankConfig { max_rank: n, eta: 1e-8, ..Default::default() };
+        let lr = factorize(kern, &x, false, &cfg);
         let lam_c = center_factor(&lr.lambda);
         let want = center_gram(&gram(kern, &x));
         let got = lam_c.matmul_t(&lam_c);
@@ -212,7 +213,7 @@ fn prop_fold_cores_match_reference() {
         // rank-capped factors half the time: the provider must agree
         // with the reference whatever factor the cap produced
         let cap = if rng.below(2) == 1 { 6 + rng.below(10) } else { n };
-        let cfg = LowRankConfig { max_rank: cap, eta: 1e-9 };
+        let cfg = LowRankConfig { max_rank: cap, eta: 1e-9, ..Default::default() };
         let kern = |b: &Mat| {
             if discrete {
                 Kernel::Rbf { sigma: 1.0 }
@@ -284,7 +285,7 @@ fn prop_stream_append_matches_refactorize() {
         // tight η keeps both factorizations within 1e-9 of K, so the
         // 1e-6 score comparison has headroom whichever pivots greedy
         // selection lands on
-        let cfg = LowRankConfig { max_rank: n, eta: 1e-9 };
+        let cfg = LowRankConfig { max_rank: n, eta: 1e-9, ..Default::default() };
 
         // random 3-way chunk split
         let c1 = n / 3 + rng.below(n / 4);
@@ -336,6 +337,52 @@ fn prop_stream_append_matches_refactorize() {
             let err = (&st.lambda().matmul_t(&st.lambda()) - &gram(kern, &x)).max_abs();
             prop_assert!(err < 1e-9, "discrete append lost exactness: {err}");
         }
+        Ok(())
+    });
+}
+
+/// RFF reconstruction error stays inside the Hoeffding Monte-Carlo
+/// bound across the feature-count ladder m ∈ {50, 100, 200}: each
+/// (ΛΛᵀ)_ij is the mean of m terms 2·cos·cos ∈ [−2, 2], so
+/// `P(|K_ij − (ΛΛᵀ)_ij| > t) ≤ 2·exp(−m·t²/8)`; a union bound over the
+/// n(n+1)/2 distinct entries at failure mass δ = 1e-6 gives
+/// `t = √(8·ln(2·pairs/δ)/m)`. The bound is loose (it assumes nothing
+/// about the kernel), which is exactly why it must never be violated.
+#[test]
+fn prop_rff_reconstruction_within_mc_bound() {
+    check("rff_mc_bound", 10, |rng| {
+        let n = 30 + rng.below(30);
+        let dim = 1 + rng.below(2);
+        let x = random_mat(rng, n, dim);
+        let kern = Kernel::Rbf { sigma: median_heuristic(&x, 2.0) };
+        let k = gram(kern, &x);
+        let pairs = (n * (n + 1) / 2) as f64;
+        let mut errs = Vec::new();
+        for m in [50usize, 100, 200] {
+            let cfg = LowRankConfig {
+                max_rank: m,
+                method: FactorMethod::Rff,
+                rff_seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let lr = factorize(kern, &x, false, &cfg);
+            prop_assert!(lr.method == Method::Rff, "dispatch must pick RFF at m={m}");
+            prop_assert!(lr.rank == m, "RFF uses the full feature budget");
+            prop_assert!(!lr.fell_back, "RBF kernels never fall back");
+            let err = (&k - &lr.lambda.matmul_t(&lr.lambda)).max_abs();
+            let bound = (8.0 * (2.0 * pairs / 1e-6).ln() / m as f64).sqrt();
+            prop_assert!(
+                err < bound,
+                "m={m}: max entry error {err} exceeds the Monte-Carlo bound {bound}"
+            );
+            errs.push(err);
+        }
+        // the O(1/√m) trend: quadrupling m must not grow the error by
+        // more than the Monte-Carlo noise allows (generous 1.5× slack)
+        prop_assert!(
+            errs[2] < 1.5 * errs[0],
+            "error failed to shrink along m ∈ {{50,100,200}}: {errs:?}"
+        );
         Ok(())
     });
 }
