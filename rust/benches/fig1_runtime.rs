@@ -13,23 +13,32 @@
 //! comparison.
 //!
 //! ```text
-//! cargo bench --bench fig1_runtime [-- --full] [--lowrank icl,rff]
+//! cargo bench --bench fig1_runtime [-- --full] [--lowrank icl,rff] [--shards 0,2]
 //! ```
 //! Smoke scale caps the exact CV at n ≤ 1000 (it is the O(n³) baseline;
 //! an n = 4000 exact score takes minutes); `--full` runs the paper's
 //! n ∈ {200, 500, 1000, 2000, 4000} everywhere. `--lowrank` restricts
 //! the factorization axis (default: both).
+//!
+//! The `shards` axis records distributed scoring next to local:
+//! `shards=0` rows time one fresh local score per rep, a `shards=k` row
+//! times one wide batch of distinct candidates fanned out over an
+//! in-process k-follower fleet (`ShardScoreBackend` over real TCP to
+//! follower servers), reported per score — so the wire + partition
+//! overhead of the fleet is *recorded* against the local baseline.
 
 use std::sync::Arc;
 
 use cvlr::bench::{BenchConfig, Report};
 use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::{networks, Dataset};
+use cvlr::distrib::{PoolConfig, ShardScoreBackend};
 use cvlr::lowrank::{FactorMethod, LowRankConfig};
 use cvlr::score::cv_exact::CvExactScore;
 use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
 use cvlr::score::folds::CvParams;
-use cvlr::score::LocalScore;
+use cvlr::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
+use cvlr::server::{Server, ServerConfig};
 use cvlr::util::timing::{bench_fn, fmt_secs};
 
 /// The four panels of Fig. 1.
@@ -80,11 +89,22 @@ fn main() {
                 .unwrap_or_else(|| panic!("unknown --lowrank `{s}` (icl|rff)"))
         })
         .collect();
+    // the distributed axis: `--shards 0,2` (fleet sizes; 0 = local)
+    let shard_axis: Vec<usize> = cfg
+        .args
+        .get_or("shards", "0,2")
+        .split(',')
+        .map(|s| {
+            s.trim().parse().unwrap_or_else(|_| panic!("non-integer --shards value `{s}`"))
+        })
+        .collect();
+    // in-process follower fleet, grown lazily to the largest axis value
+    let mut fleet: Vec<Server> = Vec::new();
 
     let mut rep = Report::new(
         &cfg,
         "fig1_runtime",
-        &["setting", "lowrank", "n", "cv_seconds", "cvlr_seconds", "speedup"],
+        &["setting", "lowrank", "shards", "n", "cv_seconds", "cvlr_seconds", "speedup"],
     );
 
     for s in &SETTINGS {
@@ -106,40 +126,110 @@ fn main() {
             };
 
             for &lm in &lowrank {
-                // CV-LR (the paper's method) — fresh score each rep so
-                // the factor and fold-core caches do not amortize
-                // across reps.
-                let lr_stats = bench_fn(1, cfg.reps, || {
-                    let lr = CvLrScore::with_backend(
-                        ds.clone(),
-                        CvParams::default(),
-                        LowRankConfig::with_method(lm),
-                        NativeCvLrKernel,
-                    )
-                    .with_parallelism(parallelism);
-                    let _ = lr.local_score(target, &parents);
-                });
+                for &k in &shard_axis {
+                    // CV-LR per-score seconds. `shards=0`: a fresh local
+                    // score per rep so the factor and fold-core caches
+                    // do not amortize across reps. `shards=k`: one wide
+                    // batch of distinct candidates through a k-follower
+                    // fleet, per score — registration and the follower
+                    // service build stay outside the timed region (they
+                    // amortize over a sweep in real use).
+                    let lr_mean = if k == 0 {
+                        bench_fn(1, cfg.reps, || {
+                            let lr = CvLrScore::with_backend(
+                                ds.clone(),
+                                CvParams::default(),
+                                LowRankConfig::with_method(lm),
+                                NativeCvLrKernel,
+                            )
+                            .with_parallelism(parallelism);
+                            let _ = lr.local_score(target, &parents);
+                        })
+                        .mean_s
+                    } else {
+                        while fleet.len() < k {
+                            fleet.push(
+                                Server::start(ServerConfig {
+                                    port: 0,
+                                    job_workers: 1,
+                                    builtin_n: 40,
+                                    ..Default::default()
+                                })
+                                .expect("follower starts"),
+                            );
+                        }
+                        let addrs: Vec<String> =
+                            fleet[..k].iter().map(|f| f.addr().to_string()).collect();
+                        let lr = CvLrScore::with_backend(
+                            ds.clone(),
+                            CvParams::default(),
+                            LowRankConfig::with_method(lm),
+                            NativeCvLrKernel,
+                        )
+                        .with_parallelism(parallelism);
+                        let local: Arc<dyn ScoreBackend> = Arc::new(ScalarBackend(lr));
+                        let name = format!(
+                            "fig1-{}-z{}-{}-{}",
+                            if s.discrete { "disc" } else { "cont" },
+                            s.cond,
+                            lm.name(),
+                            n
+                        );
+                        let backend = ShardScoreBackend::new(
+                            local,
+                            &ds,
+                            &name,
+                            "cv-lr",
+                            "native",
+                            lm.name(),
+                            &addrs,
+                            PoolConfig { min_remote: 1, ..Default::default() },
+                        );
+                        // dataset push + follower service build happen on
+                        // first contact; keep them out of the timed batch
+                        let _ = backend.score_batch(&[ScoreRequest::new(target, &parents)]);
+                        let d = ds.d();
+                        let reqs: Vec<ScoreRequest> = (1..d)
+                            .map(|t| {
+                                let ps: Vec<usize> =
+                                    (1..=s.cond).map(|j| (t + j) % d).collect();
+                                ScoreRequest::new(t, &ps)
+                            })
+                            .collect();
+                        // one rep: the follower-side score memo would turn
+                        // a second rep into a cache-hit measurement
+                        let st = bench_fn(0, 1, || {
+                            let _ = backend.score_batch(&reqs);
+                        });
+                        st.mean_s / reqs.len() as f64
+                    };
 
-                let speedup = cv_mean.map(|c| c / lr_stats.mean_s);
-                println!(
-                    "{:<18} {:<4} n={:<5} CV={:<10} CV-LR={:<10} speedup={}",
-                    s.name,
-                    lm.name(),
-                    n,
-                    cv_mean.map(fmt_secs).unwrap_or_else(|| "-".into()),
-                    fmt_secs(lr_stats.mean_s),
-                    speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into())
-                );
-                rep.row(&[
-                    s.name.trim().to_string(),
-                    lm.name().to_string(),
-                    n.to_string(),
-                    cv_mean.map(|x| format!("{x:.6}")).unwrap_or_default(),
-                    format!("{:.6}", lr_stats.mean_s),
-                    speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
-                ]);
+                    let speedup = cv_mean.map(|c| c / lr_mean);
+                    println!(
+                        "{:<18} {:<4} shards={} n={:<5} CV={:<10} CV-LR={:<10} speedup={}",
+                        s.name,
+                        lm.name(),
+                        k,
+                        n,
+                        cv_mean.map(fmt_secs).unwrap_or_else(|| "-".into()),
+                        fmt_secs(lr_mean),
+                        speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into())
+                    );
+                    rep.row(&[
+                        s.name.trim().to_string(),
+                        lm.name().to_string(),
+                        k.to_string(),
+                        n.to_string(),
+                        cv_mean.map(|x| format!("{x:.6}")).unwrap_or_default(),
+                        format!("{lr_mean:.6}"),
+                        speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
+                    ]);
+                }
             }
         }
+    }
+    for f in fleet {
+        f.stop();
     }
     rep.finish("Fig. 1 — single-score runtime, CV vs CV-LR (per factorization)");
     println!(

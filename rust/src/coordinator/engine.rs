@@ -156,6 +156,16 @@ pub struct DiscoveryConfig {
     pub cache_capacity: Option<usize>,
     /// Artifacts directory for the PJRT engine.
     pub artifacts_dir: String,
+    /// Follower `cvlr serve` addresses (`host:port`) to shard score
+    /// batches across. Empty (the default) scores locally. Score-based
+    /// methods get wrapped in a `distrib::ShardScoreBackend`; results
+    /// stay bit-identical to local scoring (followers run the same fold
+    /// algebra on a bit-exact pushed dataset), only wall-clock changes.
+    pub shards: Vec<String>,
+    /// Registry name the dataset is pushed under on followers
+    /// (auto-registration). Empty picks a generic name; the CLI sets it
+    /// from `--data`, the server from the job's dataset name.
+    pub shard_dataset: String,
 }
 
 impl Default for DiscoveryConfig {
@@ -171,6 +181,8 @@ impl Default for DiscoveryConfig {
             parallelism: 1,
             cache_capacity: None,
             artifacts_dir: "artifacts".to_string(),
+            shards: Vec::new(),
+            shard_dataset: String::new(),
         }
     }
 }
@@ -378,10 +390,44 @@ pub fn resolve_method(name: &str) -> Option<(String, MethodKind)> {
     })
 }
 
+/// Wrap a freshly built local backend in a
+/// [`crate::distrib::ShardScoreBackend`] when `cfg.shards` names a
+/// follower fleet; a no-op otherwise. The wrapped backend keeps the
+/// local one as its degradation fallback, so a dead fleet still scores.
+fn shard_wrap(
+    canon: &str,
+    ds: &Arc<Dataset>,
+    cfg: &DiscoveryConfig,
+    backend: Arc<dyn ScoreBackend>,
+) -> Arc<dyn ScoreBackend> {
+    if cfg.shards.is_empty() {
+        return backend;
+    }
+    let engine = match cfg.engine {
+        EngineKind::Native => "native",
+        EngineKind::Pjrt => "pjrt",
+    };
+    let dataset =
+        if cfg.shard_dataset.is_empty() { "coordinator" } else { cfg.shard_dataset.as_str() };
+    Arc::new(crate::distrib::ShardScoreBackend::new(
+        backend,
+        ds,
+        dataset,
+        canon,
+        engine,
+        cfg.lowrank.method.name(),
+        &cfg.shards,
+        crate::distrib::PoolConfig::default(),
+    ))
+}
+
 /// Build the raw score backend of a score-based method (`Ok(None)` for
 /// search-based methods). The caller owns wrapping it in a
 /// [`ScoreService`] — this is how the server shares one memoized
-/// service across jobs on the same (dataset, method).
+/// service across jobs on the same (dataset, method). When
+/// `cfg.shards` is non-empty the backend is shard-wrapped here, so
+/// every server path (job pool, dataset-append refresh) inherits
+/// distribution without its own plumbing.
 pub fn score_backend_for(
     name: &str,
     ds: Arc<Dataset>,
@@ -390,7 +436,8 @@ pub fn score_backend_for(
     let resolved = registry().lock().unwrap().resolve(name);
     match resolved {
         Some((canon, MethodEntry::Score(factory))) => {
-            let backend = factory(ds, cfg)?;
+            let backend = factory(ds.clone(), cfg)?;
+            let backend = shard_wrap(&canon, &ds, cfg, backend);
             Ok((canon, Some(backend)))
         }
         Some((canon, MethodEntry::Search(_))) => Ok((canon, None)),
@@ -424,7 +471,8 @@ fn run_method(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<Dis
     match entry {
         MethodEntry::Score(factory) => {
             let sw = Stopwatch::start();
-            let backend = factory(ds, cfg)?;
+            let backend = factory(ds.clone(), cfg)?;
+            let backend = shard_wrap(&canon, &ds, cfg, backend);
             let service =
                 ScoreService::with_cache_capacity(backend, cfg.workers, cfg.cache_capacity);
             service.set_gram_threads(crate::score::cores::resolve_parallelism(
@@ -547,6 +595,21 @@ impl DiscoveryBuilder {
     /// Artifacts directory for the PJRT engine.
     pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
         self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Shard score batches across follower `cvlr serve` processes
+    /// (`host:port` each). Results stay bit-identical to a local run;
+    /// a slow or dead follower degrades to local scoring.
+    pub fn shards(mut self, addrs: impl IntoIterator<Item = impl Into<String>>) -> Self {
+        self.cfg.shards = addrs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Registry name the dataset is pushed under on followers (see
+    /// [`DiscoveryConfig::shard_dataset`]).
+    pub fn shard_dataset(mut self, name: impl Into<String>) -> Self {
+        self.cfg.shard_dataset = name.into();
         self
     }
 

@@ -30,7 +30,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::graph::Pdag;
-use crate::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
+use crate::score::{
+    FollowerStat, LocalScore, ScalarBackend, ScoreBackend, ScoreRequest, ShardCounters,
+};
 
 type Key = (usize, Vec<usize>);
 
@@ -335,6 +337,19 @@ pub struct ServiceStats {
     /// (`DiscoveryConfig::parallelism`) — a gauge, not a counter, so
     /// the server can expose what each pooled service is using.
     pub gram_threads: u64,
+    /// Sub-batches dispatched to shard followers (sharding backends
+    /// only; all four shard counters stay 0 for local scoring).
+    pub shard_dispatches: u64,
+    /// Shard sub-batch re-dispatches after failures.
+    pub shard_retries: u64,
+    /// Hedged re-dispatches of straggler shard sub-batches.
+    pub shard_hedges: u64,
+    /// Shard sub-batches (or whole batches) that fell back to local
+    /// scoring. Degradation affects latency only — never scores.
+    pub shard_degraded: u64,
+    /// Per-follower health/latency snapshots of a sharding backend;
+    /// empty for local backends.
+    pub followers: Vec<FollowerStat>,
     pub eval_seconds: f64,
 }
 
@@ -457,12 +472,11 @@ impl ScoreService {
     /// thread is mid-batch can transiently observe `requests` ahead of
     /// its matching hit/eval/dedup increments.
     pub fn stats(&self) -> ServiceStats {
-        let (core_entries, core_evictions) = self
-            .backend
-            .read()
-            .unwrap()
-            .core_cache_stats()
-            .unwrap_or((0, 0));
+        let backend = self.backend.read().unwrap();
+        let (core_entries, core_evictions) = backend.core_cache_stats().unwrap_or((0, 0));
+        let shard = backend.shard_counters().unwrap_or_default();
+        let followers = backend.follower_stats();
+        drop(backend);
         ServiceStats {
             requests: self.requests.load(Ordering::Relaxed),
             cache_hits: self.hits.load(Ordering::Relaxed),
@@ -477,6 +491,11 @@ impl ScoreService {
             core_cache_entries: core_entries,
             core_cache_evictions: core_evictions,
             gram_threads: self.gram_threads.load(Ordering::Relaxed),
+            shard_dispatches: shard.dispatches,
+            shard_retries: shard.retries,
+            shard_hedges: shard.hedges,
+            shard_degraded: shard.degraded,
+            followers,
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
     }
@@ -589,6 +608,14 @@ impl ScoreBackend for ScoreService {
     /// report the same fold-core counters.
     fn core_cache_stats(&self) -> Option<(u64, u64)> {
         self.backend.read().unwrap().core_cache_stats()
+    }
+
+    fn shard_counters(&self) -> Option<ShardCounters> {
+        self.backend.read().unwrap().shard_counters()
+    }
+
+    fn follower_stats(&self) -> Vec<FollowerStat> {
+        self.backend.read().unwrap().follower_stats()
     }
 }
 

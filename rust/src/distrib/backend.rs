@@ -1,0 +1,385 @@
+//! [`ShardScoreBackend`]: a [`ScoreBackend`] that partitions each score
+//! batch across the follower fleet.
+//!
+//! The shape of one `score_batch` call:
+//!
+//! 1. Batches below `min_remote`, or with no follower available, score
+//!    **locally** on the wrapped backend — same bits, no wire.
+//! 2. Otherwise the batch splits into contiguous sub-batches, one per
+//!    available follower, and a detached *controller* thread drives
+//!    each: a primary lane posts the sub-batch; if nothing lands within
+//!    the follower's hedge delay, a **hedge lane** re-dispatches the
+//!    same sub-batch to another healthy follower (first reply wins);
+//!    failed lanes retry with jittered backoff, hopping followers.
+//! 3. A controller whose lanes all die **degrades**: it scores its
+//!    sub-batch on the local backend. Every path produces scores, so
+//!    one slow or dead follower can never stall a sweep — and every
+//!    path computes the identical CV fold algebra on the identical
+//!    sample matrix (the raw dataset push is bit-exact, the JSON codec
+//!    transports f64 bit-exact), so the result is byte-for-byte the
+//!    scores a local run yields.
+//!
+//! Lane threads are never joined — a lane wedged in a socket read
+//! (bounded by the socket timeout anyway) cannot hold the sweep
+//! hostage. The controller waits on a channel with deadlines instead.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::score::{FollowerStat, ScoreBackend, ScoreRequest, ShardCounters};
+use crate::server::json::Json;
+
+use super::pool::{Follower, FollowerPool, PoolConfig};
+use super::wire::{self, ShardSpec};
+
+/// Contiguous partition of `n` items into `k` parts whose sizes differ
+/// by at most one: the lengths of the parts, in order.
+pub fn partition(n: usize, k: usize) -> Vec<usize> {
+    assert!(k >= 1, "partition needs at least one part");
+    let base = n / k;
+    let rem = n % k;
+    (0..k).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Shared state of one sharding backend: the local fallback, the
+/// follower pool, the spec stamped on every request, and the prebuilt
+/// raw dataset push for auto-registration.
+struct ShardInner {
+    local: Arc<dyn ScoreBackend>,
+    pool: FollowerPool,
+    spec: ShardSpec,
+    /// `POST /v1/datasets` body (raw mode) pushing the coordinator's
+    /// dataset to a follower that does not have it yet.
+    push: Json,
+}
+
+/// The coordinator-side sharding backend. Cheap to clone (all state is
+/// behind one `Arc`), so the `ScoreService` and job pool can share it.
+pub struct ShardScoreBackend {
+    inner: Arc<ShardInner>,
+}
+
+impl ShardScoreBackend {
+    /// Wrap `local`, sharding batches across `shards` (host:port). The
+    /// spec names what followers must resolve: the dataset (pushed on
+    /// demand in raw coordinates) and the method/engine/lowrank triple.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        local: Arc<dyn ScoreBackend>,
+        ds: &Dataset,
+        dataset: &str,
+        method: &str,
+        engine: &str,
+        lowrank: &str,
+        shards: &[String],
+        cfg: PoolConfig,
+    ) -> ShardScoreBackend {
+        let spec = ShardSpec {
+            dataset: dataset.to_string(),
+            method: method.to_string(),
+            engine: engine.to_string(),
+            lowrank: lowrank.to_string(),
+        };
+        let push = wire::dataset_body(dataset, ds);
+        let pool = FollowerPool::new(shards, cfg);
+        ShardScoreBackend { inner: Arc::new(ShardInner { local, pool, spec, push }) }
+    }
+}
+
+impl ScoreBackend for ShardScoreBackend {
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        let inner = &self.inner;
+        let avail = inner.pool.available();
+        if reqs.len() < inner.pool.cfg.min_remote || avail.is_empty() {
+            if avail.is_empty() && !inner.pool.is_empty() && !reqs.is_empty() {
+                inner.pool.unattributed_degraded.fetch_add(1, Ordering::Relaxed);
+            }
+            return inner.local.score_batch(reqs);
+        }
+        let k = avail.len().min(reqs.len());
+        let parts = partition(reqs.len(), k);
+        let (tx, rx) = mpsc::channel::<(usize, Vec<f64>)>();
+        let mut offset = 0usize;
+        for (i, &len) in parts.iter().enumerate() {
+            let sub: Arc<Vec<ScoreRequest>> = Arc::new(reqs[offset..offset + len].to_vec());
+            offset += len;
+            let follower = avail[i].clone();
+            let inner = self.inner.clone();
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name("cvlr-shard-ctl".to_string())
+                .spawn(move || {
+                    let scores = run_shard(&inner, follower, sub);
+                    let _ = tx.send((i, scores));
+                })
+                .expect("spawning shard controller");
+        }
+        drop(tx);
+        let mut out: Vec<Option<Vec<f64>>> = (0..k).map(|_| None).collect();
+        while let Ok((i, scores)) = rx.recv() {
+            out[i] = Some(scores);
+        }
+        // a controller that panicked never sent: fill its part locally
+        // (belt and braces — run_shard itself degrades on lane failure)
+        let mut result = Vec::with_capacity(reqs.len());
+        let mut offset = 0usize;
+        for (i, &len) in parts.iter().enumerate() {
+            match out[i].take() {
+                Some(s) => result.extend(s),
+                None => {
+                    inner.pool.unattributed_degraded.fetch_add(1, Ordering::Relaxed);
+                    result.extend(inner.local.score_batch(&reqs[offset..offset + len]));
+                }
+            }
+            offset += len;
+        }
+        result
+    }
+
+    fn num_vars(&self) -> usize {
+        self.inner.local.num_vars()
+    }
+
+    fn core_cache_stats(&self) -> Option<(u64, u64)> {
+        self.inner.local.core_cache_stats()
+    }
+
+    fn shard_counters(&self) -> Option<ShardCounters> {
+        Some(self.inner.pool.counters())
+    }
+
+    fn follower_stats(&self) -> Vec<FollowerStat> {
+        self.inner.pool.snapshots()
+    }
+}
+
+/// Drive one sub-batch to completion: primary lane, hedge lane on
+/// straggle, local fallback when every lane dies. Always returns
+/// scores.
+fn run_shard(
+    inner: &Arc<ShardInner>,
+    assigned: Arc<Follower>,
+    reqs: Arc<Vec<ScoreRequest>>,
+) -> Vec<f64> {
+    let cfg = &inner.pool.cfg;
+    // every lane is bounded: ≤ max_retries+1 attempts, each ≤ roughly
+    // 3 socket timeouts (connect/write/read) + one capped backoff
+    let lane_budget = (cfg.timeout * 3 + cfg.backoff_cap) * (cfg.max_retries + 1);
+    let deadline = Instant::now() + lane_budget;
+    let (tx, rx) = mpsc::channel::<Option<Vec<f64>>>();
+    spawn_lane(inner, assigned.clone(), reqs.clone(), tx.clone());
+    let mut lanes = 1usize;
+    let mut finished = 0usize;
+    let mut hedged = false;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let wait = if hedged { remaining } else { inner.pool.hedge_delay(&assigned).min(remaining) };
+        match rx.recv_timeout(wait) {
+            Ok(Some(scores)) => return scores,
+            Ok(None) => {
+                finished += 1;
+                if finished == lanes {
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) if !hedged => {
+                // the primary is straggling: re-dispatch the same
+                // sub-batch to another healthy follower, first wins
+                hedged = true;
+                assigned.hedges.fetch_add(1, Ordering::Relaxed);
+                if let Some(other) = inner.pool.pick_other(assigned.addr()) {
+                    spawn_lane(inner, other, reqs.clone(), tx.clone());
+                    lanes += 1;
+                }
+            }
+            Err(_) => break, // overall deadline or all senders gone
+        }
+    }
+    assigned.degraded.fetch_add(1, Ordering::Relaxed);
+    inner.local.score_batch(&reqs)
+}
+
+/// Detached dispatch lane: up to `max_retries` re-attempts with
+/// jittered backoff, hopping to another healthy follower when one is
+/// free. Sends `Some(scores)` on success, `None` when exhausted.
+fn spawn_lane(
+    inner: &Arc<ShardInner>,
+    follower: Arc<Follower>,
+    reqs: Arc<Vec<ScoreRequest>>,
+    tx: mpsc::Sender<Option<Vec<f64>>>,
+) {
+    let inner = inner.clone();
+    let _ = std::thread::Builder::new().name("cvlr-shard-lane".to_string()).spawn(move || {
+        let mut f = follower;
+        for attempt in 0..=inner.pool.cfg.max_retries {
+            if attempt > 0 {
+                f.retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(inner.pool.backoff(attempt));
+                if let Some(other) = inner.pool.pick_other(f.addr()) {
+                    f = other;
+                }
+            }
+            match score_on(&inner, &f, &reqs) {
+                Ok(scores) => {
+                    let _ = tx.send(Some(scores));
+                    return;
+                }
+                Err(_) => inner.pool.failure(&f),
+            }
+        }
+        let _ = tx.send(None);
+    });
+}
+
+/// One scoring attempt against one follower: auto-register the dataset
+/// when this follower has no pinned version, post the sub-batch, and on
+/// a 404/409 (dataset unknown / version drift after a follower restart)
+/// re-push and retry once.
+fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<Vec<f64>> {
+    f.dispatches.fetch_add(1, Ordering::Relaxed);
+    let pinned = *f.version.lock().unwrap();
+    let version = match pinned {
+        Some(v) => v,
+        None => register(inner, f)?,
+    };
+    let body = wire::score_batch_body(&inner.spec, Some(version), reqs);
+    let t0 = Instant::now();
+    let (status, resp) = f.client.post("/v1/score_batch", &body)?;
+    let (status, resp, t0) = if status == 404 || status == 409 {
+        let v = register(inner, f)?;
+        let body = wire::score_batch_body(&inner.spec, Some(v), reqs);
+        let t1 = Instant::now();
+        let (s, r) = f.client.post("/v1/score_batch", &body)?;
+        (s, r, t1)
+    } else {
+        (status, resp, t0)
+    };
+    if status != 200 {
+        let msg = resp.get("error").and_then(Json::as_str).unwrap_or("").to_string();
+        bail!("follower {} answered {status} {msg}", f.addr());
+    }
+    let scores = wire::parse_scores(&resp, reqs.len())
+        .with_context(|| format!("bad scores from {}", f.addr()))?;
+    inner.pool.success(f, t0.elapsed());
+    Ok(scores)
+}
+
+/// Push the coordinator's dataset (raw coordinates) to `f` and pin the
+/// registry version the follower assigned.
+fn register(inner: &ShardInner, f: &Follower) -> Result<u64> {
+    let (status, resp) = f.client.post("/v1/datasets", &inner.push)?;
+    if status != 200 && status != 201 {
+        let msg = resp.get("error").and_then(Json::as_str).unwrap_or("").to_string();
+        bail!("follower {} rejected dataset push: {status} {msg}", f.addr());
+    }
+    let v = resp
+        .get("version")
+        .and_then(Json::as_u64)
+        .with_context(|| format!("follower {} returned no dataset version", f.addr()))?;
+    *f.version.lock().unwrap() = Some(v);
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::{LocalScore, ScalarBackend};
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        assert_eq!(partition(10, 3), vec![4, 3, 3]);
+        assert_eq!(partition(9, 3), vec![3, 3, 3]);
+        assert_eq!(partition(2, 3), vec![1, 1, 0]);
+        assert_eq!(partition(0, 2), vec![0, 0]);
+        for n in 0..40usize {
+            for k in 1..8usize {
+                let parts = partition(n, k);
+                assert_eq!(parts.len(), k);
+                assert_eq!(parts.iter().sum::<usize>(), n);
+                let lo = parts.iter().min().unwrap();
+                let hi = parts.iter().max().unwrap();
+                assert!(hi - lo <= 1, "n={n} k={k}: sizes differ by more than one");
+            }
+        }
+    }
+
+    struct Toy;
+    impl LocalScore for Toy {
+        fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
+            -(target as f64) - 0.25 * parents.len() as f64
+        }
+        fn num_vars(&self) -> usize {
+            6
+        }
+    }
+
+    /// Followers that do not exist: every dispatch fails fast
+    /// (connection refused), every sub-batch degrades to local, and the
+    /// result is bit-identical to the wrapped backend.
+    #[test]
+    fn degrades_to_local_when_followers_are_dead() {
+        let (ds, _) = crate::data::synth::generate(&crate::data::synth::SynthConfig {
+            n: 10,
+            seed: 3,
+            ..Default::default()
+        });
+        let local: Arc<dyn ScoreBackend> = Arc::new(ScalarBackend(Toy));
+        let cfg = PoolConfig {
+            timeout: Duration::from_millis(200),
+            max_retries: 1,
+            backoff: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(2),
+            hedge_floor: Duration::from_millis(50),
+            min_remote: 1,
+            trip_failures: 2,
+            ..Default::default()
+        };
+        // port 9 (discard) on localhost is closed: connect is refused
+        let shards = vec!["127.0.0.1:9".to_string(), "127.0.0.1:9".to_string()];
+        let backend =
+            ShardScoreBackend::new(local.clone(), &ds, "toy", "cv-lr", "native", "icl", &shards, cfg);
+        let reqs: Vec<ScoreRequest> =
+            (0..6).map(|t| ScoreRequest::new(t, &[(t + 1) % 6])).collect();
+        let want = local.score_batch(&reqs);
+        let got = backend.score_batch(&reqs);
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits(), "degraded scores must be bit-identical");
+        }
+        let c = backend.shard_counters().unwrap();
+        assert!(c.degraded > 0, "dead followers must register as degradation");
+        assert!(c.dispatches > 0, "the fleet was tried before degrading");
+        // once tripped, later batches go straight to local
+        let got2 = backend.score_batch(&reqs);
+        for (a, b) in want.iter().zip(&got2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(!backend.follower_stats().iter().any(|f| f.healthy), "both should be tripped");
+    }
+
+    /// Tiny batches never touch the wire.
+    #[test]
+    fn small_batches_score_locally() {
+        let (ds, _) = crate::data::synth::generate(&crate::data::synth::SynthConfig {
+            n: 10,
+            seed: 3,
+            ..Default::default()
+        });
+        let local: Arc<dyn ScoreBackend> = Arc::new(ScalarBackend(Toy));
+        let cfg = PoolConfig { min_remote: 8, ..Default::default() };
+        let shards = vec!["127.0.0.1:9".to_string()];
+        let backend =
+            ShardScoreBackend::new(local, &ds, "toy", "cv-lr", "native", "icl", &shards, cfg);
+        let reqs = vec![ScoreRequest::new(1, &[0])];
+        let got = backend.score_batch(&reqs);
+        assert_eq!(got, vec![-1.25]);
+        let c = backend.shard_counters().unwrap();
+        assert_eq!(c.dispatches, 0, "below min_remote nothing is dispatched");
+        assert_eq!(c.degraded, 0, "local-by-policy is not degradation");
+    }
+}

@@ -1,0 +1,167 @@
+//! Persistent HTTP/1.1 client for the shard protocol.
+//!
+//! One [`ShardClient`] per follower holds one pooled keep-alive
+//! connection behind a mutex: a sweep's sub-batches reuse the TCP
+//! stream instead of paying a handshake per dispatch (the server side
+//! keeps connections open since the keep-alive rework of
+//! `server::http`). Responses are read **bounded by `Content-Length`**
+//! — unlike the one-shot test client in `server::http`, this never
+//! waits for the peer to close.
+//!
+//! Scoring requests are pure reads, so a request that dies on a stale
+//! pooled connection (the server restarted, an idle timeout fired) is
+//! transparently resent once on a fresh connection. Real failures —
+//! refused connections, timeouts, malformed replies — surface as
+//! errors for the pool's health tracking.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::server::json::{self, Json};
+
+/// Upper bound on response heads (mirrors the server's request bound).
+const MAX_HEAD: usize = 16 * 1024;
+/// Upper bound on response bodies.
+const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// A blocking JSON-over-HTTP client bound to one follower address,
+/// pooling a single keep-alive connection.
+pub struct ShardClient {
+    addr: String,
+    timeout: Duration,
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl ShardClient {
+    /// Client for `addr` (`host:port`); `timeout` bounds connect, read
+    /// and write individually.
+    pub fn new(addr: impl Into<String>, timeout: Duration) -> ShardClient {
+        ShardClient { addr: addr.into(), timeout, conn: Mutex::new(None) }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let sa = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving `{}`", self.addr))?
+            .next()
+            .with_context(|| format!("`{}` resolved to no address", self.addr))?;
+        let stream = TcpStream::connect_timeout(&sa, self.timeout)
+            .with_context(|| format!("connecting to {}", self.addr))?;
+        let _ = stream.set_read_timeout(Some(self.timeout));
+        let _ = stream.set_write_timeout(Some(self.timeout));
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// POST `body` to `path`; returns (status, parsed body). Holds the
+    /// connection lock for the duration — callers dispatch to
+    /// *different* followers concurrently, never to one.
+    pub fn post(&self, path: &str, body: &Json) -> Result<(u16, Json)> {
+        let mut guard = self.conn.lock().unwrap();
+        let reused = guard.is_some();
+        let mut stream = match guard.take() {
+            Some(s) => s,
+            None => self.connect()?,
+        };
+        let payload = body.encode();
+        match roundtrip(&mut stream, &self.addr, path, &payload) {
+            Ok((status, value, keep)) => {
+                if keep {
+                    *guard = Some(stream);
+                }
+                Ok((status, value))
+            }
+            // a pooled connection can die between requests (server
+            // restart, idle close); requests are idempotent reads, so
+            // resend exactly once on a fresh connection
+            Err(_) if reused => {
+                let mut fresh = self.connect()?;
+                let (status, value, keep) = roundtrip(&mut fresh, &self.addr, path, &payload)?;
+                if keep {
+                    *guard = Some(fresh);
+                }
+                Ok((status, value))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+fn roundtrip(
+    stream: &mut TcpStream,
+    addr: &str,
+    path: &str,
+    payload: &str,
+) -> Result<(u16, Json, bool)> {
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        payload.len()
+    );
+    stream.write_all(head.as_bytes()).context("writing request head")?;
+    stream.write_all(payload.as_bytes()).context("writing request body")?;
+    stream.flush().context("flushing request")?;
+
+    // read the response head
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("response head larger than {MAX_HEAD} bytes");
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).context("reading response head")?;
+        if n == 0 {
+            bail!("connection closed mid-response");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head_text = std::str::from_utf8(&buf[..head_end]).context("response head not UTF-8")?;
+    let mut lines = head_text.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line `{status_line}`"))?;
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = true;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let (k, v) = (k.trim(), v.trim());
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = Some(v.parse().context("bad content-length")?);
+            } else if k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            }
+        }
+    }
+    // bounded body read: never depends on the peer closing
+    let content_length = content_length.context("response has no content-length")?;
+    if content_length > MAX_BODY {
+        bail!("response body larger than {MAX_BODY} bytes");
+    }
+    let mut body = buf.split_off(head_end + 4);
+    while body.len() < content_length {
+        let mut chunk = [0u8; 8192];
+        let n = stream.read(&mut chunk).context("reading response body")?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let text = std::str::from_utf8(&body).context("response body not UTF-8")?;
+    let value = if text.trim().is_empty() { Json::Null } else { json::parse(text)? };
+    Ok((status, value, keep_alive))
+}

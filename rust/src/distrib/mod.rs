@@ -1,0 +1,47 @@
+//! Distributed sharded scoring: a coordinator/follower fleet over the
+//! batch API.
+//!
+//! The batch-first design of [`crate::score::ScoreBackend`] means a GES
+//! sweep reaches the backend as one wide, deduplicated batch of local
+//! scores — an embarrassingly parallel unit of work. This module fans
+//! that batch out across *follower* `cvlr serve` processes:
+//!
+//! ```text
+//!   GES sweep ──► ScoreService (memo/dedup)
+//!                     │  misses, one wide batch
+//!                     ▼
+//!              ShardScoreBackend ──────────────┐ degrade
+//!                     │ partition              ▼
+//!        ┌────────────┼────────────┐     local backend
+//!        ▼            ▼            ▼     (bit-identical)
+//!   follower A   follower B   follower C
+//!   POST /v1/score_batch  (keep-alive HTTP/1.1)
+//! ```
+//!
+//! * [`wire`] — the JSON schema: `score_batch` requests/replies and the
+//!   raw (bit-exact) dataset push used for auto-registration.
+//! * [`client`] — one pooled keep-alive HTTP/1.1 connection per
+//!   follower, `Content-Length`-bounded reads.
+//! * [`pool`] — per-follower health: EWMA latency, consecutive-failure
+//!   trip wire, periodic half-open re-probe, jittered backoff.
+//! * [`backend`] — [`ShardScoreBackend`]: partitioning, bounded retry,
+//!   hedged re-dispatch of stragglers, graceful degradation to local
+//!   scoring.
+//!
+//! The invariant everything here defends: **sharded results are
+//! bit-identical to local scoring**. Followers run the same fold
+//! algebra on the same sample matrix (pushed in raw internal
+//! coordinates, no re-ingestion), scores cross the wire through the
+//! shortest-round-trip f64 codec, and every failure path lands on the
+//! wrapped local backend. A dead or slow follower costs latency, never
+//! correctness.
+
+pub mod backend;
+pub mod client;
+pub mod pool;
+pub mod wire;
+
+pub use backend::{partition, ShardScoreBackend};
+pub use client::ShardClient;
+pub use pool::{Follower, FollowerPool, PoolConfig};
+pub use wire::ShardSpec;

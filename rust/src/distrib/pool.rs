@@ -1,0 +1,399 @@
+//! The follower pool: per-follower health and latency tracking.
+//!
+//! Each follower carries a tiny circuit breaker driven by three
+//! signals:
+//!
+//! * **EWMA latency** — an exponentially-weighted moving average of
+//!   successful request latency (α = 0.2). It feeds the hedge delay:
+//!   a sub-batch still in flight after `hedge_mult ×` the follower's
+//!   EWMA (floored at `hedge_floor`) is re-dispatched elsewhere.
+//! * **Consecutive-failure trip wire** — `trip_failures` failures in a
+//!   row take the follower out of rotation.
+//! * **Periodic re-probe** — after `reprobe_after`, a tripped follower
+//!   is handed exactly one half-open probe; success rejoins it,
+//!   failure re-arms the trip timer.
+//!
+//! Retries back off exponentially with multiplicative jitter drawn
+//! from the crate's own seeded [`Pcg64`] — deterministic per pool,
+//! no dependency on wall-clock entropy.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::score::{FollowerStat, ShardCounters};
+use crate::util::Pcg64;
+
+use super::client::ShardClient;
+
+/// EWMA smoothing factor for latency samples.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Knobs of the shard dispatch layer. The defaults suit LAN followers;
+/// tests shrink the timeouts to keep failure paths fast.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Per-request socket timeout (connect, read, write each).
+    pub timeout: Duration,
+    /// Re-dispatch attempts after the first failure of a sub-batch.
+    pub max_retries: u32,
+    /// Base of the exponential retry backoff.
+    pub backoff: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+    /// Minimum time before a straggler sub-batch is hedged.
+    pub hedge_floor: Duration,
+    /// Hedge a sub-batch once it exceeds this multiple of the
+    /// follower's EWMA latency (subject to `hedge_floor`).
+    pub hedge_mult: f64,
+    /// Consecutive failures that trip a follower unhealthy.
+    pub trip_failures: u32,
+    /// How long a tripped follower sits out before a half-open probe.
+    pub reprobe_after: Duration,
+    /// Batches smaller than this score locally — the wire overhead
+    /// beats the fan-out win.
+    pub min_remote: usize,
+    /// Seed of the jitter generator (deterministic backoff schedule).
+    pub seed: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            timeout: Duration::from_secs(10),
+            max_retries: 2,
+            backoff: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(1),
+            hedge_floor: Duration::from_millis(300),
+            hedge_mult: 4.0,
+            trip_failures: 3,
+            reprobe_after: Duration::from_secs(2),
+            min_remote: 8,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// The health half of a follower, as a pure state machine (time is
+/// injected, so the trip wire and re-probe logic are unit-testable
+/// without sleeping).
+#[derive(Debug)]
+pub(crate) struct Health {
+    ewma_ms: f64,
+    consecutive_failures: u32,
+    /// When the trip wire fired; `None` while healthy.
+    tripped_at: Option<Instant>,
+    /// A half-open probe is in flight; no further traffic until it
+    /// resolves.
+    probing: bool,
+}
+
+impl Health {
+    fn new() -> Health {
+        Health { ewma_ms: 0.0, consecutive_failures: 0, tripped_at: None, probing: false }
+    }
+
+    pub(crate) fn on_success(&mut self, ms: f64) {
+        self.ewma_ms =
+            if self.ewma_ms == 0.0 { ms } else { (1.0 - EWMA_ALPHA) * self.ewma_ms + EWMA_ALPHA * ms };
+        self.consecutive_failures = 0;
+        self.tripped_at = None;
+        self.probing = false;
+    }
+
+    /// Returns true when this failure tripped the wire.
+    pub(crate) fn on_failure(&mut self, trip_failures: u32, now: Instant) -> bool {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        if self.probing {
+            // failed half-open probe: re-arm the full sit-out
+            self.probing = false;
+            self.tripped_at = Some(now);
+            return false;
+        }
+        if self.tripped_at.is_none() && self.consecutive_failures >= trip_failures {
+            self.tripped_at = Some(now);
+            return true;
+        }
+        false
+    }
+
+    /// May this follower take traffic at `now`? Grants exactly one
+    /// half-open probe per `reprobe_after` while tripped.
+    pub(crate) fn available(&mut self, reprobe_after: Duration, now: Instant) -> bool {
+        match self.tripped_at {
+            None => true,
+            Some(t) if !self.probing && now.duration_since(t) >= reprobe_after => {
+                self.probing = true;
+                true
+            }
+            Some(_) => false,
+        }
+    }
+
+    pub(crate) fn healthy(&self) -> bool {
+        self.tripped_at.is_none()
+    }
+
+    pub(crate) fn ewma_ms(&self) -> f64 {
+        self.ewma_ms
+    }
+}
+
+/// One follower `cvlr serve` process: its persistent client, health
+/// state, counters, and the pinned registry version of the pushed
+/// dataset.
+pub struct Follower {
+    pub client: ShardClient,
+    pub(crate) health: Mutex<Health>,
+    /// Follower-side registry version of the coordinator's dataset,
+    /// set by auto-registration; `None` until the first push.
+    pub version: Mutex<Option<u64>>,
+    pub dispatches: AtomicU64,
+    pub successes: AtomicU64,
+    pub failures: AtomicU64,
+    pub retries: AtomicU64,
+    pub hedges: AtomicU64,
+    pub degraded: AtomicU64,
+}
+
+impl Follower {
+    fn new(addr: &str, timeout: Duration) -> Follower {
+        Follower {
+            client: ShardClient::new(addr, timeout),
+            health: Mutex::new(Health::new()),
+            version: Mutex::new(None),
+            dispatches: AtomicU64::new(0),
+            successes: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        self.client.addr()
+    }
+
+    fn stat(&self) -> FollowerStat {
+        let h = self.health.lock().unwrap();
+        FollowerStat {
+            addr: self.addr().to_string(),
+            healthy: h.healthy(),
+            ewma_ms: h.ewma_ms(),
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            successes: self.successes.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            hedges: self.hedges.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The follower fleet of one sharding backend.
+pub struct FollowerPool {
+    followers: Vec<Arc<Follower>>,
+    pub cfg: PoolConfig,
+    rng: Mutex<Pcg64>,
+    /// Local fallbacks not attributable to one follower (whole batches
+    /// degraded because no follower was available).
+    pub unattributed_degraded: AtomicU64,
+}
+
+impl FollowerPool {
+    pub fn new(addrs: &[String], cfg: PoolConfig) -> FollowerPool {
+        let followers = addrs.iter().map(|a| Arc::new(Follower::new(a, cfg.timeout))).collect();
+        let rng = Mutex::new(Pcg64::new(cfg.seed));
+        FollowerPool { followers, cfg, rng, unattributed_degraded: AtomicU64::new(0) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.followers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.followers.is_empty()
+    }
+
+    /// Followers allowed to take traffic now: the healthy ones plus at
+    /// most one half-open probe per tripped follower.
+    pub fn available(&self) -> Vec<Arc<Follower>> {
+        let now = Instant::now();
+        self.followers
+            .iter()
+            .filter(|f| f.health.lock().unwrap().available(self.cfg.reprobe_after, now))
+            .cloned()
+            .collect()
+    }
+
+    /// A healthy follower other than `not` (for retries and hedges).
+    /// Deliberately skips half-open probes: a retry landing on a
+    /// follower that just tripped would likely fail again.
+    pub fn pick_other(&self, not: &str) -> Option<Arc<Follower>> {
+        self.followers
+            .iter()
+            .find(|f| f.addr() != not && f.health.lock().unwrap().healthy())
+            .cloned()
+    }
+
+    /// Record a successful request and its latency.
+    pub fn success(&self, f: &Follower, elapsed: Duration) {
+        f.successes.fetch_add(1, Ordering::Relaxed);
+        f.health.lock().unwrap().on_success(elapsed.as_secs_f64() * 1e3);
+    }
+
+    /// Record a failed request; trips the wire after
+    /// `trip_failures` consecutive failures.
+    pub fn failure(&self, f: &Follower) {
+        f.failures.fetch_add(1, Ordering::Relaxed);
+        f.health.lock().unwrap().on_failure(self.cfg.trip_failures, Instant::now());
+    }
+
+    /// Jittered exponential backoff before retry `attempt` (1-based):
+    /// `backoff × 2^(attempt−1)`, capped, scaled by a uniform factor in
+    /// [0.5, 1). Jitter comes from the pool's seeded generator.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let base = self.cfg.backoff.as_secs_f64() * 2f64.powi(attempt.saturating_sub(1) as i32);
+        let capped = base.min(self.cfg.backoff_cap.as_secs_f64());
+        let jitter = 0.5 + 0.5 * self.rng.lock().unwrap().uniform();
+        Duration::from_secs_f64(capped * jitter)
+    }
+
+    /// How long to wait on `f` before hedging a sub-batch elsewhere.
+    pub fn hedge_delay(&self, f: &Follower) -> Duration {
+        let ewma = f.health.lock().unwrap().ewma_ms();
+        let by_latency = Duration::from_secs_f64(self.cfg.hedge_mult * ewma / 1e3);
+        by_latency.max(self.cfg.hedge_floor)
+    }
+
+    /// Aggregate dispatch counters across the fleet.
+    pub fn counters(&self) -> ShardCounters {
+        let mut c = ShardCounters {
+            degraded: self.unattributed_degraded.load(Ordering::Relaxed),
+            ..ShardCounters::default()
+        };
+        for f in &self.followers {
+            c.dispatches += f.dispatches.load(Ordering::Relaxed);
+            c.retries += f.retries.load(Ordering::Relaxed);
+            c.hedges += f.hedges.load(Ordering::Relaxed);
+            c.degraded += f.degraded.load(Ordering::Relaxed);
+        }
+        c
+    }
+
+    /// Per-follower snapshots for `/v1/stats`.
+    pub fn snapshots(&self) -> Vec<FollowerStat> {
+        self.followers.iter().map(|f| f.stat()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(base: Instant, ms: u64) -> Instant {
+        base + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn trip_wire_fires_after_consecutive_failures() {
+        let base = Instant::now();
+        let mut h = Health::new();
+        assert!(!h.on_failure(3, t(base, 0)));
+        assert!(!h.on_failure(3, t(base, 1)));
+        assert!(h.healthy());
+        assert!(h.on_failure(3, t(base, 2)), "third consecutive failure trips");
+        assert!(!h.healthy());
+        // a success anywhere in between resets the count
+        let mut h = Health::new();
+        assert!(!h.on_failure(3, t(base, 0)));
+        assert!(!h.on_failure(3, t(base, 1)));
+        h.on_success(5.0);
+        assert!(!h.on_failure(3, t(base, 2)));
+        assert!(h.healthy(), "success resets the consecutive count");
+    }
+
+    #[test]
+    fn tripped_follower_reprobes_half_open() {
+        let base = Instant::now();
+        let reprobe = Duration::from_millis(100);
+        let mut h = Health::new();
+        for i in 0..3 {
+            h.on_failure(3, t(base, i));
+        }
+        assert!(!h.available(reprobe, t(base, 50)), "sits out before reprobe_after");
+        assert!(h.available(reprobe, t(base, 150)), "half-open probe granted");
+        assert!(!h.available(reprobe, t(base, 151)), "only ONE probe until it resolves");
+        // failed probe re-arms the sit-out from the failure time
+        h.on_failure(3, t(base, 160));
+        assert!(!h.available(reprobe, t(base, 200)));
+        assert!(h.available(reprobe, t(base, 270)), "probe granted again after re-arm");
+        // successful probe fully rejoins
+        h.on_success(7.0);
+        assert!(h.healthy());
+        assert!(h.available(reprobe, t(base, 271)));
+        assert!(h.available(reprobe, t(base, 272)), "healthy follower has no probe budget");
+    }
+
+    #[test]
+    fn ewma_tracks_latency() {
+        let mut h = Health::new();
+        h.on_success(100.0);
+        assert_eq!(h.ewma_ms(), 100.0, "first sample seeds the average");
+        h.on_success(50.0);
+        assert!((h.ewma_ms() - 90.0).abs() < 1e-12, "0.8·100 + 0.2·50");
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_grows() {
+        let pool = FollowerPool::new(
+            &["127.0.0.1:1".to_string()],
+            PoolConfig {
+                backoff: Duration::from_millis(50),
+                backoff_cap: Duration::from_millis(400),
+                ..Default::default()
+            },
+        );
+        for attempt in 1..=8u32 {
+            let nominal = Duration::from_millis(50 * (1 << (attempt - 1).min(10)) as u64)
+                .min(Duration::from_millis(400));
+            for _ in 0..32 {
+                let d = pool.backoff(attempt);
+                assert!(d >= nominal / 2, "attempt {attempt}: {d:?} below jitter floor");
+                assert!(d <= nominal, "attempt {attempt}: {d:?} above cap");
+            }
+        }
+    }
+
+    #[test]
+    fn hedge_delay_follows_ewma_with_floor() {
+        let pool = FollowerPool::new(
+            &["127.0.0.1:1".to_string()],
+            PoolConfig {
+                hedge_floor: Duration::from_millis(300),
+                hedge_mult: 4.0,
+                ..Default::default()
+            },
+        );
+        let avail = pool.available();
+        let f = &avail[0];
+        assert_eq!(pool.hedge_delay(f), Duration::from_millis(300), "no sample: floor");
+        pool.success(f, Duration::from_millis(200));
+        assert_eq!(pool.hedge_delay(f), Duration::from_millis(800), "4 × 200ms EWMA");
+    }
+
+    #[test]
+    fn pick_other_skips_unhealthy_and_self() {
+        let pool = FollowerPool::new(
+            &["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            PoolConfig { trip_failures: 1, ..Default::default() },
+        );
+        let avail = pool.available();
+        let (a, b) = (avail[0].clone(), avail[1].clone());
+        assert_eq!(pool.pick_other(a.addr()).unwrap().addr(), b.addr());
+        pool.failure(&b); // trips at 1
+        assert!(pool.pick_other(a.addr()).is_none(), "tripped follower is skipped");
+        assert_eq!(pool.pick_other(b.addr()).unwrap().addr(), a.addr());
+    }
+}

@@ -1,0 +1,295 @@
+//! Wire schema of the shard protocol, over the crate's own JSON codec.
+//!
+//! Two message families, both stateless:
+//!
+//! * **`POST /v1/score_batch`** — a scoring sub-batch: dataset name (+
+//!   a pinned follower-side registry version), method/engine/lowrank,
+//!   and the request list. The reply is `{"scores": [...], "version"}`
+//!   in request order. The codec's f64 `Display` prints the shortest
+//!   round-trip decimal, so scores cross the wire **bit-identical** —
+//!   the whole distributed design leans on that.
+//! * **raw dataset push** — the coordinator serializes its dataset in
+//!   *internal coordinates* (the already-z-scored/recoded sample matrix
+//!   plus the variable layout) and registers it on a follower through
+//!   the `raw` mode of `POST /v1/datasets`. Re-ingesting CSV text would
+//!   z-score a second time; the raw mode reconstructs the exact matrix,
+//!   so follower fold algebra runs on the same bits as the coordinator.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Dataset, Variable};
+use crate::linalg::Mat;
+use crate::score::ScoreRequest;
+use crate::server::json::Json;
+
+/// What a follower needs to resolve (or build) the right pooled score
+/// service: the named dataset plus the method/engine/lowrank triple the
+/// coordinator is running. Serialized into every `score_batch` request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Registry name of the dataset on the follower.
+    pub dataset: String,
+    /// Canonical method key (e.g. `"cv-lr"`).
+    pub method: String,
+    /// `"native"` or `"pjrt"`.
+    pub engine: String,
+    /// `"icl"` or `"rff"`.
+    pub lowrank: String,
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+/// Body of a `POST /v1/score_batch` request. `version`, when known,
+/// pins the follower's registry version of the dataset so a concurrent
+/// re-registration can never serve scores from different bits — the
+/// follower answers `409` on a mismatch and the coordinator re-pushes.
+pub fn score_batch_body(spec: &ShardSpec, version: Option<u64>, reqs: &[ScoreRequest]) -> Json {
+    let requests: Vec<Json> = reqs
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("target", num(r.target as u64)),
+                ("parents", Json::Arr(r.parents.iter().map(|&p| num(p as u64)).collect())),
+            ])
+        })
+        .collect();
+    let mut fields = vec![("dataset", Json::str(spec.dataset.clone()))];
+    if let Some(v) = version {
+        fields.push(("version", num(v)));
+    }
+    fields.push(("method", Json::str(spec.method.clone())));
+    fields.push(("engine", Json::str(spec.engine.clone())));
+    fields.push(("lowrank", Json::str(spec.lowrank.clone())));
+    fields.push(("requests", Json::Arr(requests)));
+    Json::obj(fields)
+}
+
+/// Follower-side decode of a `score_batch` body.
+pub fn parse_score_batch(body: &Json) -> Result<(ShardSpec, Option<u64>, Vec<ScoreRequest>)> {
+    let dataset = body
+        .get("dataset")
+        .and_then(Json::as_str)
+        .context("`dataset` (string) is required")?
+        .to_string();
+    let method = body
+        .get("method")
+        .and_then(Json::as_str)
+        .context("`method` (string) is required")?
+        .to_string();
+    let engine = body
+        .get("engine")
+        .and_then(Json::as_str)
+        .unwrap_or("native")
+        .to_string();
+    let lowrank = body
+        .get("lowrank")
+        .and_then(Json::as_str)
+        .unwrap_or("icl")
+        .to_string();
+    let version = match body.get("version") {
+        Some(v) => Some(v.as_u64().context("`version` must be a non-negative integer")?),
+        None => None,
+    };
+    let raw = body
+        .get("requests")
+        .and_then(Json::as_arr)
+        .context("`requests` (array) is required")?;
+    let mut reqs = Vec::with_capacity(raw.len());
+    for (i, r) in raw.iter().enumerate() {
+        let target = r
+            .get("target")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("request {i}: `target` must be a non-negative integer"))?
+            as usize;
+        let parents = r
+            .get("parents")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("request {i}: `parents` (array) is required"))?;
+        let mut p = Vec::with_capacity(parents.len());
+        for v in parents {
+            p.push(
+                v.as_u64()
+                    .with_context(|| format!("request {i}: parents must be integers"))?
+                    as usize,
+            );
+        }
+        reqs.push(ScoreRequest::new(target, &p));
+    }
+    Ok((ShardSpec { dataset, method, engine, lowrank }, version, reqs))
+}
+
+/// Coordinator-side decode of a `score_batch` reply; `expect` guards
+/// against truncated/reordered replies.
+pub fn parse_scores(body: &Json, expect: usize) -> Result<Vec<f64>> {
+    let arr = body
+        .get("scores")
+        .and_then(Json::as_arr)
+        .context("reply has no `scores` array")?;
+    if arr.len() != expect {
+        bail!("reply has {} scores, expected {expect}", arr.len());
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| v.as_f64().with_context(|| format!("score {i} is not a finite number")))
+        .collect()
+}
+
+/// `POST /v1/datasets` body registering `ds` on a follower in raw
+/// internal coordinates (no CSV re-ingestion, bit-exact round trip).
+pub fn dataset_body(name: &str, ds: &Dataset) -> Json {
+    let vars: Vec<Json> = ds
+        .vars
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("name", Json::str(v.name.clone())),
+                ("col_start", num(v.col_start as u64)),
+                ("dim", num(v.dim as u64)),
+                ("discrete", Json::Bool(v.discrete)),
+                ("cardinality", num(v.cardinality as u64)),
+            ])
+        })
+        .collect();
+    let raw = Json::obj(vec![
+        ("rows", num(ds.data.rows as u64)),
+        ("cols", num(ds.data.cols as u64)),
+        ("data", Json::Arr(ds.data.data.iter().map(|&x| Json::Num(x)).collect())),
+        ("vars", Json::Arr(vars)),
+    ]);
+    Json::obj(vec![("name", Json::str(name)), ("raw", raw)])
+}
+
+/// Follower-side decode of the `raw` dataset mode: reconstruct the
+/// sample matrix and variable layout exactly as serialized.
+pub fn parse_raw_dataset(raw: &Json) -> Result<Dataset> {
+    let rows = raw.get("rows").and_then(Json::as_u64).context("`raw.rows` is required")? as usize;
+    let cols = raw.get("cols").and_then(Json::as_u64).context("`raw.cols` is required")? as usize;
+    let data = raw.get("data").and_then(Json::as_arr).context("`raw.data` is required")?;
+    if data.len() != rows * cols {
+        bail!("`raw.data` has {} values, expected {rows}×{cols}", data.len());
+    }
+    let mut flat = Vec::with_capacity(data.len());
+    for (i, v) in data.iter().enumerate() {
+        flat.push(v.as_f64().with_context(|| format!("raw.data[{i}] is not a finite number"))?);
+    }
+    let raw_vars = raw.get("vars").and_then(Json::as_arr).context("`raw.vars` is required")?;
+    let mut vars = Vec::with_capacity(raw_vars.len());
+    for (i, v) in raw_vars.iter().enumerate() {
+        let ctx = |f: &str| format!("raw.vars[{i}]: `{f}` is required");
+        vars.push(Variable {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| ctx("name"))?
+                .to_string(),
+            col_start: v.get("col_start").and_then(Json::as_u64).with_context(|| ctx("col_start"))?
+                as usize,
+            dim: v.get("dim").and_then(Json::as_u64).with_context(|| ctx("dim"))? as usize,
+            discrete: v.get("discrete").and_then(Json::as_bool).with_context(|| ctx("discrete"))?,
+            cardinality: v
+                .get("cardinality")
+                .and_then(Json::as_u64)
+                .with_context(|| ctx("cardinality"))? as usize,
+        });
+    }
+    // the variable blocks must tile the columns
+    let mut seen = 0usize;
+    for v in &vars {
+        if v.dim == 0 || v.col_start != seen {
+            bail!("raw.vars do not tile the columns (at `{}`)", v.name);
+        }
+        seen += v.dim;
+    }
+    if seen != cols {
+        bail!("raw.vars cover {seen} columns, matrix has {cols}");
+    }
+    Ok(Dataset::new(Mat::from_vec(rows, cols, flat), vars))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json;
+
+    #[test]
+    fn score_batch_roundtrips() {
+        let spec = ShardSpec {
+            dataset: "synth".into(),
+            method: "cv-lr".into(),
+            engine: "native".into(),
+            lowrank: "rff".into(),
+        };
+        let reqs = vec![ScoreRequest::new(2, &[0, 1]), ScoreRequest::new(0, &[])];
+        let body = score_batch_body(&spec, Some(3), &reqs);
+        let parsed = json::parse(&body.encode()).unwrap();
+        let (spec2, version, reqs2) = parse_score_batch(&parsed).unwrap();
+        assert_eq!(spec2, spec);
+        assert_eq!(version, Some(3));
+        assert_eq!(reqs2, reqs);
+    }
+
+    #[test]
+    fn scores_roundtrip_bit_identical() {
+        // adversarial f64s: shortest round-trip Display must preserve bits
+        let scores = [-1234.567890123456789, 1e-300, -0.0, f64::MIN_POSITIVE, 2.0 / 3.0];
+        let body = Json::obj(vec![(
+            "scores",
+            Json::Arr(scores.iter().map(|&s| Json::Num(s)).collect()),
+        )]);
+        let parsed = json::parse(&body.encode()).unwrap();
+        let back = parse_scores(&parsed, scores.len()).unwrap();
+        for (a, b) in scores.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(parse_scores(&parsed, 4).is_err(), "length mismatch must fail");
+    }
+
+    #[test]
+    fn raw_dataset_roundtrips_exactly() {
+        let (ds, _) = crate::data::synth::generate(&crate::data::synth::SynthConfig {
+            n: 40,
+            seed: 11,
+            ..Default::default()
+        });
+        let body = dataset_body("synth", &ds);
+        let parsed = json::parse(&body.encode()).unwrap();
+        let back = parse_raw_dataset(parsed.get("raw").unwrap()).unwrap();
+        assert_eq!(back.data.rows, ds.data.rows);
+        assert_eq!(back.data.cols, ds.data.cols);
+        for (a, b) in ds.data.data.iter().zip(&back.data.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "raw push must be bit-exact");
+        }
+        assert_eq!(back.vars.len(), ds.vars.len());
+        for (a, b) in ds.vars.iter().zip(&back.vars) {
+            assert_eq!((a.col_start, a.dim, a.discrete, a.cardinality),
+                       (b.col_start, b.dim, b.discrete, b.cardinality));
+        }
+    }
+
+    #[test]
+    fn raw_dataset_rejects_bad_shapes() {
+        let (ds, _) = crate::data::synth::generate(&crate::data::synth::SynthConfig {
+            n: 5,
+            seed: 1,
+            ..Default::default()
+        });
+        let body = dataset_body("x", &ds);
+        let raw = body.get("raw").unwrap();
+        // truncate the data array
+        if let Json::Obj(kvs) = raw {
+            let mut kvs = kvs.clone();
+            for (k, v) in &mut kvs {
+                if k == "data" {
+                    if let Json::Arr(xs) = v {
+                        xs.pop();
+                    }
+                }
+            }
+            assert!(parse_raw_dataset(&Json::Obj(kvs)).is_err());
+        } else {
+            panic!("raw must be an object");
+        }
+    }
+}

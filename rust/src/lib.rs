@@ -99,4 +99,5 @@ pub mod data;
 pub mod runtime;
 pub mod coordinator;
 pub mod server;
+pub mod distrib;
 pub mod bench;

@@ -19,6 +19,7 @@
 //! ```text
 //! cvlr discover --data synth --n 500 --density 0.4 --method cv-lr
 //! cvlr discover --data sachs --n 2000 --method cv-lr --engine pjrt
+//! cvlr discover --data synth --method cv-lr --shards 127.0.0.1:7901,127.0.0.1:7902
 //! cvlr discover --data experiments/run1.csv --method bic
 //! cvlr stream --data experiments/run1.csv --chunk 200
 //! cvlr score --data child --n 500 --target 3 --parents 1,2
@@ -34,13 +35,14 @@ use anyhow::{bail, Context, Result};
 use cvlr::coordinator::{discover, Discovery, DiscoveryConfig, EngineKind};
 use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::{networks, Dataset};
+use cvlr::distrib::{PoolConfig, ShardScoreBackend};
 use cvlr::graph::{normalized_shd, skeleton_f1, Dag};
 use cvlr::linalg::Mat;
 use cvlr::lowrank::{FactorMethod, LowRankConfig};
 use cvlr::runtime::Runtime;
 use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
 use cvlr::score::folds::CvParams;
-use cvlr::score::LocalScore;
+use cvlr::score::{LocalScore, ScalarBackend, ScoreBackend, ScoreRequest};
 use cvlr::server::{registry, Server, ServerConfig};
 use cvlr::stream::{StreamConfig, StreamingDiscovery};
 use cvlr::util::cli::Args;
@@ -103,7 +105,11 @@ fn print_help() {
          \x20                                       available cores capped at the fold count)\n\
          \x20 --lowrank icl|rff                     CV-LR factorization (default icl;\n\
          \x20                                       rff = data-independent Fourier features,\n\
-         \x20                                       O(m) streaming appends, no re-pivots)\n\n\
+         \x20                                       O(m) streaming appends, no re-pivots)\n\
+         \x20 --shards H:P,H:P                      follower fleet (`cvlr serve` processes)\n\
+         \x20                                       for distributed score batches; datasets\n\
+         \x20                                       auto-register on followers, dead/slow\n\
+         \x20                                       followers degrade to local scoring\n\n\
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
@@ -121,7 +127,10 @@ fn print_help() {
          \x20 --port P         listen port on localhost (default 7878)\n\
          \x20 --job-workers J  concurrent discovery jobs (default 2)\n\
          \x20 --cache-cap C    per-service score-cache bound (default 2^20, 0 = unbounded)\n\
-         \x20 --n N --seed S   sampling of the built-in datasets"
+         \x20 --n N --seed S   sampling of the built-in datasets\n\
+         \x20 --shards H:P,H:P default follower fleet for score jobs (the server\n\
+         \x20                  acts as a sharding coordinator; per-job `shards`\n\
+         \x20                  overrides it)"
     );
 }
 
@@ -130,6 +139,29 @@ fn lowrank_arg(args: &Args) -> Result<FactorMethod> {
     let name = args.get_or("lowrank", "icl");
     FactorMethod::parse(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown --lowrank `{name}` (icl|rff)"))
+}
+
+/// Parse `--shards host:port,host:port` into the follower list (empty =
+/// local scoring).
+fn shard_arg(args: &Args) -> Vec<String> {
+    args.get("shards")
+        .map(|s| s.split(',').filter(|a| !a.is_empty()).map(str::to_string).collect())
+        .unwrap_or_default()
+}
+
+/// The registry name a coordinator uses when auto-registering its
+/// workload on followers. Registry names are `[A-Za-z0-9._-]`, so CSV
+/// paths get their separators mapped to `-`.
+fn shard_dataset_name(data: &str) -> String {
+    let s: String = data
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || "._-".contains(c) { c } else { '-' })
+        .collect();
+    if s.is_empty() {
+        "coordinator".to_string()
+    } else {
+        s
+    }
 }
 
 /// Build the workload named by `--data`: a dataset plus (if known) the
@@ -214,6 +246,13 @@ fn cmd_discover(args: &Args) -> Result<()> {
     if cache_cap > 0 {
         builder = builder.cache_capacity(cache_cap);
     }
+    let shards = shard_arg(args);
+    if !shards.is_empty() {
+        println!("shards   : {}", shards.join(", "));
+        builder = builder
+            .shards(shards)
+            .shard_dataset(shard_dataset_name(&args.get_or("data", "synth")));
+    }
     let out = builder.run()?;
     println!("method   : {} ({engine:?} engine)", out.method);
     println!("time     : {}", fmt_secs(out.seconds));
@@ -271,9 +310,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
         bail!("workload has {n} rows — need more than one chunk of {chunk} (lower --chunk or raise --n)");
     }
     let lowrank = lowrank_arg(args)?;
+    let engine = match args.get_or("engine", "native").as_str() {
+        "native" => EngineKind::Native,
+        "pjrt" => EngineKind::Pjrt,
+        e => bail!("unknown --engine `{e}` (native|pjrt)"),
+    };
     println!("workload : {desc}");
     println!(
-        "streaming: chunks of {chunk} rows, CV-LR (native engine, {} factors)\n",
+        "streaming: chunks of {chunk} rows, CV-LR ({engine:?} engine, {} factors)\n",
         lowrank.name()
     );
 
@@ -285,11 +329,13 @@ fn cmd_stream(args: &Args) -> Result<()> {
             0 => None,
             c => Some(c),
         },
+        engine,
+        artifacts_dir: args.get_or("artifacts", "artifacts"),
         ..Default::default()
     };
     // head() keeps the full variable schema (names, cardinalities), so
     // later chunks only confirm levels, never re-code them
-    let mut sess = StreamingDiscovery::with_config(ds.head(chunk), cfg);
+    let mut sess = StreamingDiscovery::try_with_config(ds.head(chunk), cfg)?;
     let rows_of = |lo: usize, hi: usize| -> Mat {
         let idx: Vec<usize> = (lo..hi).collect();
         ds.data.select_rows(&idx)
@@ -382,15 +428,36 @@ fn cmd_score(args: &Args) -> Result<()> {
         bail!("variable index out of range (d = {})", ds.d());
     }
     println!("workload : {desc}");
+    let lowrank = lowrank_arg(args)?;
+    let shards = shard_arg(args);
     let sw = Stopwatch::start();
     let score = CvLrScore::with_backend(
-        ds,
+        ds.clone(),
         CvParams::default(),
-        LowRankConfig::with_method(lowrank_arg(args)?),
+        LowRankConfig::with_method(lowrank),
         NativeCvLrKernel,
     )
     .with_parallelism(args.usize_or("parallelism", 1));
-    let s = score.local_score(target, &parents);
+    let s = if shards.is_empty() {
+        score.local_score(target, &parents)
+    } else {
+        // a single request would normally stay under the remote floor;
+        // an explicit --shards means "ship it", so lower the floor
+        println!("shards   : {}", shards.join(", "));
+        let cfg = PoolConfig { min_remote: 1, ..Default::default() };
+        let backend: Arc<dyn ScoreBackend> = Arc::new(ScalarBackend(score));
+        let sharded = ShardScoreBackend::new(
+            backend,
+            &ds,
+            &shard_dataset_name(&args.get_or("data", "synth")),
+            "cv-lr",
+            "native",
+            lowrank.name(),
+            &shards,
+            cfg,
+        );
+        sharded.score_batch(&[ScoreRequest::new(target, &parents)])[0]
+    };
     println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
     Ok(())
 }
@@ -413,16 +480,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         builtin_n: args.usize_or("n", 500),
         seed: args.u64_or("seed", 0),
         artifacts_dir: args.get_or("artifacts", "artifacts"),
+        shards: shard_arg(args),
     };
+    let coordinator = !cfg.shards.is_empty();
+    if coordinator {
+        println!("coordinating follower fleet: {}", cfg.shards.join(", "));
+    }
     let server = Server::start(cfg)?;
     println!("cvlr discovery server listening on http://{}", server.addr());
-    println!("  POST   /v1/datasets    register a CSV upload or built-in");
+    println!("  POST   /v1/datasets    register a CSV upload, built-in, or raw push");
     println!("  POST   /v1/datasets/<name>/rows   append rows (streaming ingest)");
     println!("  GET    /v1/datasets    list datasets");
     println!("  POST   /v1/jobs        submit a discovery job");
     println!("  GET    /v1/jobs/<id>   poll state / progress / result");
     println!("  DELETE /v1/jobs/<id>   cancel");
-    println!("  GET    /v1/stats       job + score-cache statistics");
+    println!("  POST   /v1/score_batch follower-side shard scoring");
+    println!("  GET    /v1/stats       job + score-cache + shard statistics");
     println!("  POST   /v1/shutdown    graceful shutdown");
     // graceful shutdown is driven by the shutdown endpoint: the accept
     // loop drains connections, then the job manager cancels + joins

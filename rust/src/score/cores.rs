@@ -566,6 +566,157 @@ impl FoldCoreCache {
     }
 }
 
+/// One resident cross-core bundle plus its second-chance bit.
+struct PairSlot {
+    cores: Arc<PairCores>,
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct PairCacheInner {
+    map: HashMap<(usize, Vec<usize>), PairSlot>,
+    /// Clock queue over resident keys, oldest first; each resident key
+    /// appears at most once (inserts enqueue, evictions pop).
+    ring: VecDeque<(usize, Vec<usize>)>,
+    evictions: u64,
+}
+
+/// Cross-segment cache of the per-pair E/U cross-cores, keyed by
+/// (target, sorted parent set) — the [`FoldCoreCache`] twin for
+/// [`PairCores`]. GES re-scores the same (parents → target) pair far
+/// beyond one batch segment: neighbor re-evaluations repeat across
+/// sweeps, and the memo layer only absorbs *exact* request repeats
+/// after the score cache survives. Without this cache every
+/// re-appearance of a pair in a new segment repays the O(n·mz·mx)
+/// cross-product pass even though both self-core bundles are resident.
+/// Bounded with the same second-chance (clock) eviction as the
+/// self-core cache; owners clear it whenever the dataset rows change
+/// (every core depends on every row).
+#[derive(Default)]
+pub struct PairCoreCache {
+    inner: Mutex<PairCacheInner>,
+    /// Maximum resident entries (None = unbounded).
+    capacity: Option<usize>,
+}
+
+impl PairCoreCache {
+    /// Unbounded cache (the one-shot CLI default).
+    pub fn new() -> PairCoreCache {
+        PairCoreCache::default()
+    }
+
+    /// Cache holding at most `capacity` entries (None = unbounded).
+    pub fn with_capacity(capacity: Option<usize>) -> PairCoreCache {
+        PairCoreCache { inner: Mutex::new(PairCacheInner::default()), capacity }
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Entries reclaimed by the second-chance sweep so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// Cached cross-cores for (target, parents), if resident. `parents`
+    /// must be sorted (`ScoreRequest` canonicalizes). Sets the entry's
+    /// second-chance bit.
+    pub fn get(&self, target: usize, parents: &[usize]) -> Option<Arc<PairCores>> {
+        self.get_key(&(target, parents.to_vec()))
+    }
+
+    fn get_key(&self, key: &(usize, Vec<usize>)) -> Option<Arc<PairCores>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.get_mut(key).map(|slot| {
+            slot.referenced = true;
+            slot.cores.clone()
+        })
+    }
+
+    /// Cached cross-cores for (target, parents), building from the two
+    /// self-core bundles on a miss. The O(n·mz·mx) build runs OUTSIDE
+    /// the lock; racing builders of the same pair: first insert wins. A
+    /// bounded cache sweeps after the insert.
+    pub fn get_or_build(
+        &self,
+        target: usize,
+        parents: &[usize],
+        z: &SetCores,
+        x: &SetCores,
+        threads: usize,
+    ) -> Arc<PairCores> {
+        let key = (target, parents.to_vec());
+        if let Some(c) = self.get_key(&key) {
+            return c;
+        }
+        let built = Arc::new(pair_cores(z, x, threads));
+        let mut inner = self.inner.lock().unwrap();
+        let out = match inner.map.get_mut(&key) {
+            // racing builder won: serve its entry, drop ours
+            Some(slot) => {
+                slot.referenced = true;
+                slot.cores.clone()
+            }
+            None => {
+                inner
+                    .map
+                    .insert(key.clone(), PairSlot { cores: built.clone(), referenced: false });
+                inner.ring.push_back(key);
+                built
+            }
+        };
+        if let Some(cap) = self.capacity {
+            Self::enforce_capacity(&mut inner, cap);
+        }
+        out
+    }
+
+    /// Second-chance sweep — same discipline as the self-core cache:
+    /// referenced entries spend their bit and requeue, unreferenced
+    /// ones are reclaimed; budgeted so it always terminates.
+    fn enforce_capacity(inner: &mut PairCacheInner, cap: usize) {
+        let mut budget = 2 * inner.ring.len();
+        while inner.map.len() > cap && budget > 0 {
+            budget -= 1;
+            let k = match inner.ring.pop_front() {
+                Some(k) => k,
+                None => break,
+            };
+            match inner.map.get_mut(&k) {
+                Some(slot) if slot.referenced => {
+                    slot.referenced = false;
+                    inner.ring.push_back(k);
+                }
+                Some(_) => {
+                    inner.map.remove(&k);
+                    inner.evictions += 1;
+                }
+                None => {}
+            }
+        }
+    }
+
+    /// Drop every cached entry (dataset rows changed); returns how many
+    /// were resident. Not counted as evictions.
+    pub fn clear(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.map.len();
+        inner.map.clear();
+        inner.ring.clear();
+        n
+    }
+
+    /// Resident (target, parents) pairs.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -719,6 +870,43 @@ mod tests {
         }
         assert_eq!(cache.len(), 10);
         assert_eq!(cache.evictions(), 0);
+    }
+
+    #[test]
+    fn pair_core_cache_reuses_and_clears() {
+        let folds = stride_folds(40, 4);
+        let z = SetCores::build(&random_mat(40, 3, 20), &folds, 1);
+        let x = SetCores::build(&random_mat(40, 2, 21), &folds, 1);
+        let cache = PairCoreCache::new();
+        let a = cache.get_or_build(1, &[0, 2], &z, &x, 1);
+        let b = cache.get_or_build(1, &[0, 2], &z, &x, 1);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        assert_eq!(cache.len(), 1);
+        // the cached bundle is the real pair_cores output
+        let want = pair_cores(&z, &x, 1);
+        for f in 0..folds.len() {
+            assert_eq!(a.train_cross[f].data, want.train_cross[f].data);
+            assert_eq!(a.test_cross[f].data, want.test_cross[f].data);
+        }
+        assert_eq!(cache.clear(), 1);
+        assert!(cache.is_empty());
+        assert_eq!(cache.evictions(), 0, "clears are not evictions");
+    }
+
+    #[test]
+    fn bounded_pair_cache_evicts_second_chance() {
+        let folds = stride_folds(30, 3);
+        let z = SetCores::build(&random_mat(30, 2, 22), &folds, 1);
+        let x = SetCores::build(&random_mat(30, 2, 23), &folds, 1);
+        let cache = PairCoreCache::with_capacity(Some(2));
+        cache.get_or_build(0, &[1], &z, &x, 1); // A
+        cache.get_or_build(1, &[2], &z, &x, 1); // B
+        assert!(cache.get(0, &[1]).is_some()); // hit A → referenced
+        cache.get_or_build(2, &[0], &z, &x, 1); // sweep: spares A, evicts B
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(0, &[1]).is_some(), "referenced entry survived");
+        assert!(cache.get(1, &[2]).is_none(), "B was the victim");
     }
 
     #[test]

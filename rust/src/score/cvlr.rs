@@ -37,7 +37,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use super::cores::{cond_fold, pair_cores, FoldCoreCache, PairCores, SetCores};
+use super::cores::{cond_fold, FoldCoreCache, PairCoreCache, PairCores, SetCores};
 pub use super::cores::{CondCores, CondCoresBuf, MargCores, MargCoresBuf};
 use super::folds::{stride_folds, CvParams};
 use super::{LocalScore, ScoreBackend, ScoreRequest};
@@ -210,6 +210,10 @@ pub struct CvLrScore<K: CvLrKernel> {
     /// Downdated per-(set, fold) self-cores, built once per set for the
     /// life of the score and shared by every candidate and sweep.
     fold_cores: FoldCoreCache,
+    /// Centered E/U cross-cores per (target, parents) pair, shared
+    /// across batch segments and sweeps — the repeated-candidate twin
+    /// of the self-core cache.
+    pair_cores: PairCoreCache,
 }
 
 impl CvLrScore<NativeCvLrKernel> {
@@ -229,6 +233,7 @@ impl<K: CvLrKernel> CvLrScore<K> {
             parallelism: 1,
             factor_cache: Mutex::new(HashMap::new()),
             fold_cores: FoldCoreCache::new(),
+            pair_cores: PairCoreCache::new(),
         }
     }
 
@@ -246,12 +251,13 @@ impl<K: CvLrKernel> CvLrScore<K> {
         self.parallelism
     }
 
-    /// Bound the fold-core cache to at most `capacity` variable sets
-    /// (second-chance eviction, mirroring `ScoreCache::with_capacity`).
-    /// Unbounded by default; long-lived servers default this from their
-    /// score-cache capacity.
+    /// Bound the fold-core and pair-core caches to at most `capacity`
+    /// entries each (second-chance eviction, mirroring
+    /// `ScoreCache::with_capacity`). Unbounded by default; long-lived
+    /// servers default this from their score-cache capacity.
     pub fn with_core_capacity(mut self, capacity: Option<usize>) -> Self {
         self.fold_cores = FoldCoreCache::with_capacity(capacity);
+        self.pair_cores = PairCoreCache::with_capacity(capacity);
         self
     }
 
@@ -293,16 +299,18 @@ impl<K: CvLrKernel> CvLrScore<K> {
 /// (`stream::StreamBackend`, whose cores are rebuilt over incrementally
 /// maintained `FactorState`s after every append). Per unique variable
 /// set the provider hands back the cached downdated P/V bundle; per
-/// unique (parents → target) pair the segment computes the E/U
-/// cross-cores once — the only per-pair O(n·mz·mx) work — and every
+/// unique (parents → target) pair the E/U cross-cores — the only
+/// per-pair O(n·mz·mx) work — come from the caller's [`PairCoreCache`],
+/// so a pair re-scored in a later segment or sweep pays nothing; every
 /// candidate's fold scores are assembled from O(m²) core views.
 /// Per-request values are independent of how the caller segments its
 /// batches.
-pub fn score_segment_with<K: CvLrKernel>(
+pub fn score_segment_with<K: CvLrKernel + ?Sized>(
     params: &CvParams,
     backend: &K,
     reqs: &[ScoreRequest],
     cores_for: &mut dyn FnMut(&[usize]) -> Arc<SetCores>,
+    pairs: &PairCoreCache,
     parallelism: usize,
 ) -> Vec<f64> {
     // Unique variable sets referenced by the batch: every target
@@ -325,8 +333,9 @@ pub fn score_segment_with<K: CvLrKernel>(
         self_cores.insert(set, cores);
     }
 
-    // Cross-cores per unique (parents → target) pair in the segment.
-    let mut cross: HashMap<(usize, Vec<usize>), PairCores> = HashMap::new();
+    // Cross-cores per unique (parents → target) pair in the segment,
+    // resolved through the cross-segment pair cache.
+    let mut cross: HashMap<(usize, Vec<usize>), Arc<PairCores>> = HashMap::new();
     for r in reqs {
         if r.parents.is_empty() {
             continue;
@@ -337,7 +346,7 @@ pub fn score_segment_with<K: CvLrKernel>(
         }
         let z = &self_cores[&r.parents[..]];
         let x = &self_cores[&[r.target][..]];
-        let pc = pair_cores(z, x, parallelism);
+        let pc = pairs.get_or_build(r.target, &r.parents, z, x, parallelism);
         cross.insert(key, pc);
     }
 
@@ -369,6 +378,7 @@ impl<K: CvLrKernel> CvLrScore<K> {
             &self.backend,
             reqs,
             &mut |set: &[usize]| self.cores_for(set),
+            &self.pair_cores,
             self.parallelism,
         )
     }
@@ -403,7 +413,11 @@ impl<K: CvLrKernel> ScoreBackend for CvLrScore<K> {
     }
 
     fn core_cache_stats(&self) -> Option<(u64, u64)> {
-        Some((self.fold_cores.len() as u64, self.fold_cores.evictions()))
+        // resident entries / evictions across both core caches
+        Some((
+            self.fold_cores.len() as u64 + self.pair_cores.len() as u64,
+            self.fold_cores.evictions() + self.pair_cores.evictions(),
+        ))
     }
 }
 
@@ -504,6 +518,25 @@ mod tests {
         let c1 = lr.cores_for(&[0, 1]);
         let c2 = lr.cores_for(&[1, 0]);
         assert!(Arc::ptr_eq(&c1, &c2), "fold cores share the sorted-set key");
+    }
+
+    /// The E/U cross-cores of a (parents → target) pair persist across
+    /// batch segments: a pair re-scored later hits the pair cache
+    /// instead of repaying the O(n·mz·mx) cross-product pass.
+    #[test]
+    fn pair_cores_cached_across_segments() {
+        let ds = continuous_ds(80, 10);
+        let lr = CvLrScore::native(ds);
+        let a = lr.local_score(1, &[0]);
+        assert_eq!(lr.pair_cores.len(), 1, "one conditional pair resident");
+        let b = lr.local_score(1, &[0]); // a fresh batch = a fresh segment
+        assert_eq!(a, b, "cached cross-cores are the same bits");
+        assert_eq!(lr.pair_cores.len(), 1, "repeat pair reused the cache");
+        let _ = lr.local_score(2, &[0, 1]);
+        assert_eq!(lr.pair_cores.len(), 2, "new pairs still insert");
+        // marginals never touch the pair cache
+        let _ = lr.local_score(0, &[]);
+        assert_eq!(lr.pair_cores.len(), 2);
     }
 
     /// The downdated core path and the straight-line split_center

@@ -83,6 +83,41 @@ impl From<(usize, Vec<usize>)> for ScoreRequest {
     }
 }
 
+/// Aggregate counters of a sharding backend (`distrib`): how sub-batch
+/// dispatch across the follower fleet went. All zero for local-only
+/// backends. Surfaced through `ServiceStats` and `/v1/stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardCounters {
+    /// Sub-batch requests sent to followers (every attempt counts).
+    pub dispatches: u64,
+    /// Re-dispatches after a failed attempt (bounded, backed off).
+    pub retries: u64,
+    /// Hedged re-dispatches of straggler sub-batches.
+    pub hedges: u64,
+    /// Sub-batches that fell back to local scoring.
+    pub degraded: u64,
+}
+
+/// Point-in-time view of one follower in a shard pool: health, EWMA
+/// latency, and its dispatch/retry/hedge/degrade counters. Rendered
+/// per follower in `/v1/stats`.
+#[derive(Clone, Debug)]
+pub struct FollowerStat {
+    pub addr: String,
+    /// False while the consecutive-failure trip wire holds the
+    /// follower out of rotation (re-probed periodically).
+    pub healthy: bool,
+    /// Exponentially-weighted moving average of request latency in
+    /// milliseconds (0 until the first completed request).
+    pub ewma_ms: f64,
+    pub dispatches: u64,
+    pub successes: u64,
+    pub failures: u64,
+    pub retries: u64,
+    pub hedges: u64,
+    pub degraded: u64,
+}
+
 /// A decomposable local score: higher is better.
 pub trait LocalScore: Send + Sync {
     /// S(X_target | parents). `parents` must be sorted ascending
@@ -122,6 +157,20 @@ pub trait ScoreBackend: Send + Sync {
     /// observable in long-lived servers.
     fn core_cache_stats(&self) -> Option<(u64, u64)> {
         None
+    }
+
+    /// Aggregate shard-dispatch counters (`distrib::ShardScoreBackend`),
+    /// `None` for backends that score locally. Surfaced through
+    /// `ServiceStats::shard_*` and `/v1/stats`.
+    fn shard_counters(&self) -> Option<ShardCounters> {
+        None
+    }
+
+    /// Per-follower health/latency/counter snapshots of a sharding
+    /// backend; empty for local backends. Rendered per follower in
+    /// `/v1/stats`.
+    fn follower_stats(&self) -> Vec<FollowerStat> {
+        Vec::new()
     }
 }
 

@@ -1,8 +1,11 @@
 //! Minimal HTTP/1.1 wire layer on `std::net` — enough protocol for a
-//! JSON API server (and nothing more): one request per connection
-//! (`Connection: close`), `Content-Length` bodies, thread per
-//! connection, a non-blocking accept loop polling a shutdown flag, and
-//! connection drain on the way out.
+//! JSON API server (and nothing more): keep-alive connections serving
+//! requests in sequence (`Connection: close` honored when a client
+//! sends it), `Content-Length` bodies, thread per connection, a
+//! non-blocking accept loop polling a shutdown flag, and connection
+//! drain on the way out. Persistent connections are what makes the
+//! distrib shard client (`distrib::client`) cheap: one TCP handshake
+//! per follower, reused across every sub-batch of a sweep.
 //!
 //! Also hosts the matching blocking [`request`] client used by the
 //! integration tests, `examples/serve_client.rs`, and anyone scripting
@@ -160,16 +163,34 @@ fn handle_connection(mut stream: TcpStream, handler: &Handler) -> Result<()> {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let resp = match read_request(&mut stream) {
-        Ok(req) => handler(&req),
-        Err(e) => Response::error(400, &format!("{e:#}")),
-    };
-    write_response(&mut stream, &resp)
+    // bytes read past the previous request's body (a pipelined next
+    // request head) — fed back into the next read_request
+    let mut carry: Vec<u8> = Vec::new();
+    loop {
+        let req = match read_request(&mut stream, &mut carry) {
+            Ok(Some(req)) => req,
+            // clean close between requests: the client is done
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                let resp = Response::error(400, &format!("{e:#}"));
+                return write_response(&mut stream, &resp, false);
+            }
+        };
+        let keep_alive = !req
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        let resp = handler(&req);
+        write_response(&mut stream, &resp, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<Request> {
+fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Request>> {
     // read until the blank line separating head from body
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut buf: Vec<u8> = std::mem::take(carry);
     let head_end = loop {
         if let Some(pos) = find_head_end(&buf) {
             break pos;
@@ -180,6 +201,9 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
         let mut chunk = [0u8; 4096];
         let n = stream.read(&mut chunk).context("reading request head")?;
         if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
             bail!("connection closed mid-request");
         }
         buf.extend_from_slice(&chunk[..n]);
@@ -222,7 +246,7 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
             stream.flush().context("flushing 100 Continue")?;
         }
     }
-    let mut body = buf[head_end + 4..].to_vec();
+    let mut body = buf.split_off(head_end + 4);
     while body.len() < content_length {
         let mut chunk = [0u8; 8192];
         let n = stream.read(&mut chunk).context("reading request body")?;
@@ -231,17 +255,19 @@ fn read_request(stream: &mut TcpStream) -> Result<Request> {
         }
         body.extend_from_slice(&chunk[..n]);
     }
-    body.truncate(content_length);
-    Ok(Request { body, ..req })
+    // bytes past the body belong to the next pipelined request
+    *carry = body.split_off(content_length);
+    Ok(Some(Request { body, ..req }))
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> Result<()> {
+    let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
         resp.status,
         reason(resp.status),
         resp.body.len()

@@ -172,18 +172,21 @@ impl JobSnapshot {
     }
 }
 
-// (dataset name, dataset version, method, engine, lowrank method). The
-// version comes from the registry and is bumped on replacement, so
-// re-uploading a dataset under the same name can never hit a stale
-// service/cache; the lowrank component keeps `icl` and `rff` jobs on
-// separate pools — their factors (and therefore every memoized score)
-// differ. Deliberately keyed for EVERY method, not just cv-lr: the
-// registry accepts custom score factories that may also read
-// `cfg.lowrank`, and for lowrank-agnostic methods (bic, ...) the only
-// cost of a spurious `lowrank` option is a duplicate (LRU-bounded) pool
-// entry — far cheaper than sharing a cache between backends whose
-// scores actually differ.
-type ServiceKey = (String, u64, String, String, String);
+// (dataset name, dataset version, method, engine, lowrank method,
+// comma-joined shard fleet). The version comes from the registry and is
+// bumped on replacement, so re-uploading a dataset under the same name
+// can never hit a stale service/cache; the lowrank component keeps
+// `icl` and `rff` jobs on separate pools — their factors (and therefore
+// every memoized score) differ. Deliberately keyed for EVERY method,
+// not just cv-lr: the registry accepts custom score factories that may
+// also read `cfg.lowrank`, and for lowrank-agnostic methods (bic, ...)
+// the only cost of a spurious `lowrank` option is a duplicate
+// (LRU-bounded) pool entry — far cheaper than sharing a cache between
+// backends whose scores actually differ. The shards component keeps
+// sharded and local jobs on separate services: their *scores* are
+// bit-identical by construction, but their backends (and follower
+// counters) are not interchangeable.
+type ServiceKey = (String, u64, String, String, String, String);
 
 /// A pooled service plus its LRU stamp (monotonic use counter) and the
 /// config that built its backend (needed to rebuild the backend over an
@@ -371,7 +374,7 @@ impl JobManager {
     }
 
     /// Per-service counters of the pool: ((dataset, dataset version,
-    /// method, engine, lowrank), stats), sorted by key.
+    /// method, engine, lowrank, shards), stats), sorted by key.
     pub fn service_stats(&self) -> Vec<(ServiceKey, ServiceStats)> {
         let services = self.services.lock().unwrap();
         let mut out: Vec<(ServiceKey, ServiceStats)> =
@@ -553,6 +556,85 @@ impl JobManager {
         }
     }
 
+    /// Fetch-or-build the pooled [`ScoreService`] keyed by (`dataset` @
+    /// `ds_version`, `canon`, and the engine/lowrank/shards of `cfg`).
+    /// Shared by the job path and the follower-side `/v1/score_batch`
+    /// endpoint, so a follower's stateless scoring requests land on the
+    /// same memoized service its jobs use. `workers`/`cache_capacity`
+    /// only take effect for the caller that *creates* the entry.
+    pub(crate) fn service_for(
+        &self,
+        dataset: &str,
+        ds_version: u64,
+        ds: Arc<Dataset>,
+        canon: &str,
+        cfg: &DiscoveryConfig,
+    ) -> Result<Arc<ScoreService>> {
+        let key: ServiceKey = (
+            dataset.to_string(),
+            ds_version,
+            canon.to_string(),
+            format!("{:?}", cfg.engine),
+            cfg.lowrank.method.name().to_string(),
+            cfg.shards.join(","),
+        );
+        let stamp = || self.pool_clock.fetch_add(1, Ordering::Relaxed) + 1;
+        let cached = {
+            let mut services = self.services.lock().unwrap();
+            services.get_mut(&key).map(|e| {
+                e.last_use = stamp();
+                e.service.clone()
+            })
+        };
+        if let Some(svc) = cached {
+            return Ok(svc);
+        }
+        // the server default cache bound applies to the score memo AND
+        // (through the factory) the backend's fold-core cache; resolve
+        // it before the build so both see the same bound
+        let cap = cfg.cache_capacity.or(self.default_cache_capacity);
+        let mut bcfg = cfg.clone();
+        bcfg.cache_capacity = cap;
+        // a sharding coordinator pushes the dataset to followers under
+        // this dataset's own registry name unless the spec overrode it
+        if bcfg.shard_dataset.is_empty() {
+            bcfg.shard_dataset = dataset.to_string();
+        }
+        // build outside the pool lock: a factory may load PJRT
+        // artifacts from disk (and a shard wrap opens sockets lazily)
+        let (_, backend) = score_backend_for(canon, ds, &bcfg)?;
+        let backend = backend.ok_or_else(|| anyhow!("`{canon}` is not score-based"))?;
+        let svc = Arc::new(ScoreService::with_cache_capacity(backend, cfg.workers, cap));
+        svc.set_gram_threads(crate::score::cores::resolve_parallelism(
+            cfg.parallelism,
+            cfg.params.folds,
+        ) as u64);
+        let mut services = self.services.lock().unwrap();
+        // a replaced dataset's services are now unreachable (stale
+        // version): drop them
+        services.retain(|k, _| k.0 != dataset || k.1 >= ds_version);
+        // LRU-bound the pool: running jobs keep their own Arc, only the
+        // warm cache goes
+        while services.len() >= MAX_POOLED_SERVICES {
+            let lru =
+                services.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| k.clone());
+            match lru {
+                Some(k) => {
+                    services.remove(&k);
+                }
+                None => break,
+            }
+        }
+        // racing builders: first insert wins so all callers share one
+        // cache; retain the resolved config so refresh-time rebuilds
+        // reproduce the same cache bounds
+        Ok(services
+            .entry(key)
+            .or_insert_with(|| PoolEntry { service: svc, last_use: stamp(), cfg: bcfg })
+            .service
+            .clone())
+    }
+
     /// Run the job to completion; `Ok(None)` means it observed its
     /// cancel flag.
     fn execute(&self, job: &Job) -> Result<Option<JobResult>> {
@@ -570,82 +652,7 @@ impl JobManager {
                 // NOTE: `workers` and `cache_capacity` of a job spec
                 // only take effect for the job that *creates* the
                 // pooled service; later jobs share the existing one.
-                let service = {
-                    let key: ServiceKey = (
-                        spec.dataset.clone(),
-                        ds_version,
-                        canon.clone(),
-                        format!("{:?}", spec.cfg.engine),
-                        spec.cfg.lowrank.method.name().to_string(),
-                    );
-                    let stamp = || self.pool_clock.fetch_add(1, Ordering::Relaxed) + 1;
-                    let cached = {
-                        let mut services = self.services.lock().unwrap();
-                        services.get_mut(&key).map(|e| {
-                            e.last_use = stamp();
-                            e.service.clone()
-                        })
-                    };
-                    match cached {
-                        Some(svc) => svc,
-                        None => {
-                            // the server default cache bound applies to the
-                            // score memo AND (through the factory) the
-                            // backend's fold-core cache; resolve it before
-                            // the build so both see the same bound
-                            let cap = spec.cfg.cache_capacity.or(self.default_cache_capacity);
-                            let mut bcfg = spec.cfg.clone();
-                            bcfg.cache_capacity = cap;
-                            // build outside the pool lock: a factory may
-                            // load PJRT artifacts from disk
-                            let (_, backend) = score_backend_for(&canon, ds, &bcfg)?;
-                            let backend =
-                                backend.ok_or_else(|| anyhow!("`{canon}` is not score-based"))?;
-                            let svc = Arc::new(ScoreService::with_cache_capacity(
-                                backend,
-                                spec.cfg.workers,
-                                cap,
-                            ));
-                            svc.set_gram_threads(
-                                crate::score::cores::resolve_parallelism(
-                                    spec.cfg.parallelism,
-                                    spec.cfg.params.folds,
-                                ) as u64,
-                            );
-                            let mut services = self.services.lock().unwrap();
-                            // a replaced dataset's services are now
-                            // unreachable (stale version): drop them
-                            services.retain(|k, _| k.0 != spec.dataset || k.1 >= ds_version);
-                            // LRU-bound the pool: running jobs keep
-                            // their own Arc, only the warm cache goes
-                            while services.len() >= MAX_POOLED_SERVICES {
-                                let lru = services
-                                    .iter()
-                                    .min_by_key(|(_, e)| e.last_use)
-                                    .map(|(k, _)| k.clone());
-                                match lru {
-                                    Some(k) => {
-                                        services.remove(&k);
-                                    }
-                                    None => break,
-                                }
-                            }
-                            // racing builders: first insert wins so all
-                            // jobs share one cache
-                            // retain the resolved config so refresh-time
-                            // rebuilds reproduce the same cache bounds
-                            services
-                                .entry(key)
-                                .or_insert_with(|| PoolEntry {
-                                    service: svc,
-                                    last_use: stamp(),
-                                    cfg: bcfg,
-                                })
-                                .service
-                                .clone()
-                        }
-                    }
-                };
+                let service = self.service_for(&spec.dataset, ds_version, ds, &canon, &spec.cfg)?;
                 *job.stats_at_start.lock().unwrap() = Some(service.stats());
                 *job.service.lock().unwrap() = Some(service.clone());
                 let backend = CancelBackend {

@@ -18,15 +18,16 @@
 //!
 //! | Route | Meaning |
 //! |---|---|
-//! | `POST /v1/datasets` | register a CSV upload (`{"name", "csv", "header"?}`) or a parameterized built-in (`{"name", "builtin", "n"?, "seed"?}`) |
+//! | `POST /v1/datasets` | register a CSV upload (`{"name", "csv", "header"?}`), a parameterized built-in (`{"name", "builtin", "n"?, "seed"?}`), or a raw internal-coordinates push (`{"name", "raw"}` — bit-exact, used by sharding coordinators for auto-registration); replies include the registry `version` |
 //! | `GET /v1/datasets` | list registered datasets |
 //! | `POST /v1/datasets/{name}/rows` | append header-less CSV rows (`{"csv"}`) in the dataset's internal coordinates; refreshes (not retires) the pooled services, invalidating their stale score entries; `409` while jobs on the dataset are active |
 //! | `DELETE /v1/datasets/{name}` | remove a dataset and retire its pooled services |
-//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "parallelism"?, "lowrank"?, "cache_capacity"?, "warm_start"?}` → `202 {"id", "state"}` (`workers`/`parallelism`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `parallelism` = Gram-product threads of the fold-core builds, `0` = auto, exposed resolved as `gram_threads` in `/v1/stats`; `lowrank` = `"icl"` or `"rff"` — the CV-LR factorization, part of the service-pool key; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
+//! | `POST /v1/jobs` | submit `{"dataset", "method", "engine"?, "workers"?, "parallelism"?, "lowrank"?, "cache_capacity"?, "warm_start"?, "shards"?}` → `202 {"id", "state"}` (`shards` = follower `host:port` list overriding the serve-level `--shards` default; `[]` forces local scoring) (`workers`/`parallelism`/`cache_capacity` configure the pooled service and only apply to the job that creates it; `parallelism` = Gram-product threads of the fold-core builds, `0` = auto, exposed resolved as `gram_threads` in `/v1/stats`; `lowrank` = `"icl"` or `"rff"` — the CV-LR factorization, part of the service-pool key; `warm_start: true` resumes GES from the pooled service's last CPDAG — the cheap re-discovery after an append) |
 //! | `GET /v1/jobs` | list job snapshots (without results) |
 //! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
 //! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
-//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions), datasets |
+//! | `POST /v1/score_batch` | stateless follower-side scoring for the distrib shard protocol: `{"dataset", "version"?, "method", "engine"?, "lowrank"?, "requests": [{"target", "parents"}]}` → `{"scores", "version"}` in request order; `404` for an unknown dataset, `409` on a version-pin mismatch (the coordinator re-pushes and retries) |
+//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions, shard dispatch/retry/hedge/degrade and per-follower health), datasets |
 //! | `POST /v1/shutdown` | graceful shutdown: stop accepting, drain, cancel jobs |
 //!
 //! Job states: `queued → running → done | failed | cancelled`.
@@ -43,8 +44,9 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{DiscoveryConfig, EngineKind};
+use crate::coordinator::{resolve_method, DiscoveryConfig, EngineKind, MethodKind};
 use crate::lowrank::FactorMethod;
+use crate::score::ScoreBackend;
 
 use self::http::{Handler, HttpServer, Request, Response};
 use self::jobs::{JobManager, JobResult, JobSnapshot, JobSpec};
@@ -78,6 +80,12 @@ pub struct ServerConfig {
     pub seed: u64,
     /// Artifacts directory handed to PJRT-engine jobs.
     pub artifacts_dir: String,
+    /// Default follower fleet (`host:port` each) for score-based jobs:
+    /// this server acts as a sharding **coordinator**, fanning score
+    /// batches out over `POST /v1/score_batch`. Per-job `shards`
+    /// overrides it; empty means local scoring. A follower handling
+    /// `/v1/score_batch` never re-shards, so fleets cannot loop.
+    pub shards: Vec<String>,
 }
 
 impl Default for ServerConfig {
@@ -92,6 +100,7 @@ impl Default for ServerConfig {
             builtin_n: 500,
             seed: 0,
             artifacts_dir: "artifacts".to_string(),
+            shards: Vec::new(),
         }
     }
 }
@@ -228,6 +237,31 @@ fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
         ("core_cache_entries", num(st.core_cache_entries)),
         ("core_cache_evictions", num(st.core_cache_evictions)),
         ("gram_threads", num(st.gram_threads)),
+        ("shard_dispatches", num(st.shard_dispatches)),
+        ("shard_retries", num(st.shard_retries)),
+        ("shard_hedges", num(st.shard_hedges)),
+        ("shard_degraded", num(st.shard_degraded)),
+        (
+            "followers",
+            Json::Arr(
+                st.followers
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("addr", Json::str(f.addr.clone())),
+                            ("healthy", Json::Bool(f.healthy)),
+                            ("ewma_ms", Json::Num(f.ewma_ms)),
+                            ("dispatches", num(f.dispatches)),
+                            ("successes", num(f.successes)),
+                            ("failures", num(f.failures)),
+                            ("retries", num(f.retries)),
+                            ("hedges", num(f.hedges)),
+                            ("degraded", num(f.degraded)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("eval_seconds", Json::Num(st.eval_seconds)),
         ("consistent", Json::Bool(st.consistent())),
     ])
@@ -313,7 +347,8 @@ fn post_dataset(registry: &DatasetRegistry, cfg: &ServerConfig, req: &Request) -
         Ok(b) => b,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
-    if let Err(resp) = check_keys(&body, &["name", "csv", "header", "builtin", "n", "seed"]) {
+    if let Err(resp) = check_keys(&body, &["name", "csv", "header", "builtin", "n", "seed", "raw"])
+    {
         return resp;
     }
     let name = match body.get("name").and_then(Json::as_str) {
@@ -322,18 +357,19 @@ fn post_dataset(registry: &DatasetRegistry, cfg: &ServerConfig, req: &Request) -
     };
     let csv = body.get("csv").and_then(Json::as_str);
     let builtin = body.get("builtin").and_then(Json::as_str);
-    let ds = match (csv, builtin) {
-        (Some(_), Some(_)) => {
-            return Response::error(400, "give either `csv` or `builtin`, not both")
-        }
-        (Some(text), None) => {
+    let raw = body.get("raw");
+    if (csv.is_some() as u8) + (builtin.is_some() as u8) + (raw.is_some() as u8) > 1 {
+        return Response::error(400, "give exactly one of `csv`, `builtin`, `raw`");
+    }
+    let ds = match (csv, builtin, raw) {
+        (Some(text), None, None) => {
             let header = body.get("header").and_then(Json::as_bool);
             match registry::dataset_from_csv(text, header) {
                 Ok(ds) => ds,
                 Err(e) => return Response::error(400, &format!("{e:#}")),
             }
         }
-        (None, Some(b)) => {
+        (None, Some(b), None) => {
             let n = body.get("n").and_then(Json::as_u64).map(|v| v as usize);
             let seed = body.get("seed").and_then(Json::as_u64);
             match registry::builtin_dataset(
@@ -353,13 +389,24 @@ fn post_dataset(registry: &DatasetRegistry, cfg: &ServerConfig, req: &Request) -
                 }
             }
         }
-        (None, None) => return Response::error(400, "`csv` or `builtin` is required"),
+        // raw mode: a sharding coordinator pushing its dataset in
+        // internal coordinates — re-ingesting CSV would z-score a
+        // second time; this reconstructs the exact sample matrix, so
+        // follower scores match the coordinator's bit for bit
+        (None, None, Some(raw)) => match crate::distrib::wire::parse_raw_dataset(raw) {
+            Ok(ds) => ds,
+            Err(e) => return Response::error(400, &format!("{e:#}")),
+        },
+        _ => return Response::error(400, "`csv`, `builtin` or `raw` is required"),
     };
     let ds = Arc::new(ds);
     let replaced = match registry.insert(&name, ds.clone()) {
         Ok(r) => r,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
+    // the registry version the insert assigned — sharding coordinators
+    // pin it so every scoring request hits exactly these bits
+    let version = registry.entry(&name).map(|(_, v)| v).unwrap_or(0);
     let vars: Vec<Json> = ds
         .vars
         .iter()
@@ -378,6 +425,7 @@ fn post_dataset(registry: &DatasetRegistry, cfg: &ServerConfig, req: &Request) -
             ("n", num(ds.n() as u64)),
             ("d", num(ds.d() as u64)),
             ("replaced", Json::Bool(replaced)),
+            ("version", num(version)),
             ("vars", Json::Arr(vars)),
         ]),
     )
@@ -456,6 +504,7 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
             "lowrank",
             "cache_capacity",
             "warm_start",
+            "shards",
         ],
     ) {
         return resp;
@@ -499,6 +548,29 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
     if let Some(c) = body.get("cache_capacity").and_then(Json::as_u64) {
         dcfg.cache_capacity = Some(c as usize);
     }
+    // follower fleet: serve-level default, overridable per job; an
+    // explicit `[]` forces local scoring even when the server has a
+    // default fleet configured
+    dcfg.shards = cfg.shards.clone();
+    if let Some(v) = body.get("shards") {
+        let arr = match v.as_arr() {
+            Some(a) => a,
+            None => return Response::error(400, "`shards` must be an array of host:port strings"),
+        };
+        let mut shards = Vec::with_capacity(arr.len());
+        for s in arr {
+            match s.as_str() {
+                Some(addr) => shards.push(addr.to_string()),
+                None => {
+                    return Response::error(
+                        400,
+                        "`shards` must be an array of host:port strings",
+                    )
+                }
+            }
+        }
+        dcfg.shards = shards;
+    }
     let warm_start = body.get("warm_start").and_then(Json::as_bool).unwrap_or(false);
     match manager.submit(JobSpec { dataset, method, cfg: dcfg, warm_start }) {
         Ok(id) => Response::json(
@@ -507,6 +579,101 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
         ),
         Err(e) => Response::error(conflict_status(&e, 400), &format!("{e:#}")),
     }
+}
+
+/// `POST /v1/score_batch` — the follower side of the distrib shard
+/// protocol: score one sub-batch against a registered dataset. Routed
+/// through the same pooled [`ScoreService`]s as jobs, so repeated
+/// coordinator sweeps share the follower's score cache. The service
+/// config is built with `shards` **empty** — a follower never fans out
+/// again, so coordinator fleets cannot loop.
+///
+/// [`ScoreService`]: crate::coordinator::ScoreService
+fn post_score_batch(
+    manager: &JobManager,
+    registry: &DatasetRegistry,
+    cfg: &ServerConfig,
+    req: &Request,
+) -> Response {
+    let body = match req.json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(resp) =
+        check_keys(&body, &["dataset", "version", "method", "engine", "lowrank", "requests"])
+    {
+        return resp;
+    }
+    let (spec, pinned, reqs) = match crate::distrib::wire::parse_score_batch(&body) {
+        Ok(t) => t,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let (ds, ds_version) = match registry.entry(&spec.dataset) {
+        Some(e) => e,
+        None => {
+            return Response::error(
+                404,
+                &format!(
+                    "no dataset `{}` (the coordinator pushes it via the raw mode of POST /v1/datasets)",
+                    spec.dataset
+                ),
+            )
+        }
+    };
+    // version pin: a concurrent re-registration must never serve scores
+    // from different bits — the coordinator re-pushes on 409 and retries
+    if let Some(v) = pinned {
+        if v != ds_version {
+            return Response::error(
+                409,
+                &format!(
+                    "dataset `{}` is at version {ds_version}, request pinned version {v}",
+                    spec.dataset
+                ),
+            );
+        }
+    }
+    let engine = match spec.engine.as_str() {
+        "native" => EngineKind::Native,
+        "pjrt" => EngineKind::Pjrt,
+        e => return Response::error(400, &format!("unknown engine `{e}` (native|pjrt)")),
+    };
+    let lowrank = match FactorMethod::parse(&spec.lowrank) {
+        Some(m) => m,
+        None => {
+            return Response::error(
+                400,
+                &format!("unknown lowrank method `{}` (icl|rff)", spec.lowrank),
+            )
+        }
+    };
+    let canon = match resolve_method(&spec.method) {
+        Some((canon, MethodKind::Score)) => canon,
+        Some((canon, _)) => {
+            return Response::error(400, &format!("`{canon}` is not a score-based method"))
+        }
+        None => return Response::error(400, &format!("unknown method `{}`", spec.method)),
+    };
+    let mut dcfg = DiscoveryConfig {
+        engine,
+        workers: cfg.score_workers,
+        parallelism: cfg.parallelism,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        ..Default::default()
+    };
+    dcfg.lowrank.method = lowrank;
+    let service = match manager.service_for(&spec.dataset, ds_version, ds, &canon, &dcfg) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let scores = service.score_batch(&reqs);
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("scores", Json::Arr(scores.into_iter().map(Json::Num).collect())),
+            ("version", num(ds_version)),
+        ]),
+    )
 }
 
 fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
@@ -520,13 +687,14 @@ fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
     let services: Vec<Json> = manager
         .service_stats()
         .into_iter()
-        .map(|((dataset, version, method, engine, lowrank), st)| {
+        .map(|((dataset, version, method, engine, lowrank, shards), st)| {
             Json::obj(vec![
                 ("dataset", Json::str(dataset)),
                 ("dataset_version", num(version)),
                 ("method", Json::str(method)),
                 ("engine", Json::str(engine)),
                 ("lowrank", Json::str(lowrank)),
+                ("shards", Json::str(shards)),
                 ("stats", stats_json(&st)),
             ])
         })
@@ -592,6 +760,9 @@ fn build_handler(
                 }
             }
             ("POST", ["v1", "jobs"]) => post_job(&manager, &cfg, req),
+            ("POST", ["v1", "score_batch"]) => {
+                post_score_batch(&manager, &registry, &cfg, req)
+            }
             ("GET", ["v1", "jobs"]) => {
                 let list: Vec<Json> = manager
                     .job_ids()
@@ -632,7 +803,9 @@ fn build_handler(
             ),
             (_, ["v1", "datasets"]) | (_, ["v1", "datasets", _])
             | (_, ["v1", "datasets", _, "rows"]) | (_, ["v1", "jobs"])
-            | (_, ["v1", "jobs", _]) => Response::error(405, "method not allowed"),
+            | (_, ["v1", "jobs", _]) | (_, ["v1", "score_batch"]) => {
+                Response::error(405, "method not allowed")
+            }
             _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
         }
     })

@@ -20,16 +20,18 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::{ScoreService, ServiceStats};
+use crate::coordinator::{EngineKind, ScoreService, ServiceStats};
 use crate::data::Dataset;
 use crate::graph::Pdag;
 use crate::kernel::{gram, median_heuristic, Kernel};
 use crate::linalg::Mat;
 use crate::lowrank::LowRankConfig;
-use crate::score::cores::FoldCoreCache;
-use crate::score::cvlr::{score_segment_with, NativeCvLrKernel};
+use crate::runtime::pjrt_kernel::PjrtCvLrKernel;
+use crate::runtime::Runtime;
+use crate::score::cores::{FoldCoreCache, PairCoreCache};
+use crate::score::cvlr::{score_segment_with, CvLrKernel, NativeCvLrKernel};
 use crate::score::folds::{stride_folds, CvParams};
 use crate::score::{ScoreBackend, ScoreRequest};
 use crate::search::ges::GesConfig;
@@ -87,6 +89,12 @@ pub struct StreamConfig {
     /// Gram-product threads for the fold-core builds
     /// (`DiscoveryConfig::parallelism` twin).
     pub parallelism: usize,
+    /// CV-LR fold kernel: `Native` (pure rust, infallible) or `Pjrt`
+    /// (the AOT-compiled XLA artifacts — loading can fail, so PJRT
+    /// sessions go through [`StreamingDiscovery::try_with_config`]).
+    pub engine: EngineKind,
+    /// Artifacts directory for the PJRT engine.
+    pub artifacts_dir: String,
 }
 
 impl Default for StreamConfig {
@@ -98,6 +106,8 @@ impl Default for StreamConfig {
             workers: 1,
             cache_capacity: None,
             parallelism: 1,
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".to_string(),
         }
     }
 }
@@ -113,7 +123,11 @@ pub struct StreamBackend {
     data: RwLock<Dataset>,
     params: CvParams,
     lr_cfg: LowRankConfig,
-    kernel: NativeCvLrKernel,
+    /// The fold kernel consuming the assembled core views — native by
+    /// default, swappable for the PJRT artifact path
+    /// ([`StreamBackend::with_kernel`]); the incremental factor
+    /// machinery above it is engine-agnostic.
+    kernel: Box<dyn CvLrKernel>,
     /// Gram-product threads for the fold-core builds.
     parallelism: usize,
     states: Mutex<HashMap<Vec<usize>, FactorState>>,
@@ -122,6 +136,10 @@ pub struct StreamBackend {
     /// every row), rebuilt lazily from the incrementally maintained
     /// factors on the next score.
     cores: FoldCoreCache,
+    /// Centered E/U cross-cores per (target, parents) pair — shared
+    /// across segments and sweeps, cleared on every append with the
+    /// self-cores.
+    pairs: PairCoreCache,
 }
 
 impl StreamBackend {
@@ -130,11 +148,20 @@ impl StreamBackend {
             data: RwLock::new(initial),
             params,
             lr_cfg,
-            kernel: NativeCvLrKernel,
+            kernel: Box::new(NativeCvLrKernel),
             parallelism: 1,
             states: Mutex::new(HashMap::new()),
             cores: FoldCoreCache::new(),
+            pairs: PairCoreCache::new(),
         }
+    }
+
+    /// Swap the fold kernel (e.g. `PjrtCvLrKernel` for the AOT-compiled
+    /// XLA path). Scores from any conforming kernel flow through the
+    /// identical provider/cache machinery.
+    pub fn with_kernel(mut self, kernel: Box<dyn CvLrKernel>) -> StreamBackend {
+        self.kernel = kernel;
+        self
     }
 
     /// Gram-product threads for the fold-core builds (default 1; `0` =
@@ -149,10 +176,12 @@ impl StreamBackend {
         self.parallelism
     }
 
-    /// Bound the fold-core cache (see `FoldCoreCache::with_capacity`);
-    /// sessions default this from their score-cache capacity.
+    /// Bound the fold-core and pair-core caches (see
+    /// `FoldCoreCache::with_capacity`); sessions default this from
+    /// their score-cache capacity.
     pub fn with_core_capacity(mut self, capacity: Option<usize>) -> StreamBackend {
         self.cores = FoldCoreCache::with_capacity(capacity);
+        self.pairs = PairCoreCache::with_capacity(capacity);
         self
     }
 
@@ -196,6 +225,7 @@ impl StreamBackend {
         // every fold core depends on every row: drop them all while the
         // data write lock still excludes concurrent scorers
         self.cores.clear();
+        self.pairs.clear();
         stats.seconds = sw.secs();
         Ok(stats)
     }
@@ -255,13 +285,14 @@ impl ScoreBackend for StreamBackend {
         for seg in reqs.chunks(SEGMENT) {
             out.extend(score_segment_with(
                 &self.params,
-                &self.kernel,
+                self.kernel.as_ref(),
                 seg,
                 &mut |set: &[usize]| {
                     self.cores.get_or_build(set, &folds, self.parallelism, &mut || {
                         self.factor_for(set, &ds)
                     })
                 },
+                &self.pairs,
                 self.parallelism,
             ));
         }
@@ -273,7 +304,10 @@ impl ScoreBackend for StreamBackend {
     }
 
     fn core_cache_stats(&self) -> Option<(u64, u64)> {
-        Some((self.cores.len() as u64, self.cores.evictions()))
+        Some((
+            self.cores.len() as u64 + self.pairs.len() as u64,
+            self.cores.evictions() + self.pairs.evictions(),
+        ))
     }
 }
 
@@ -305,9 +339,37 @@ impl StreamingDiscovery {
         StreamingDiscovery::with_config(initial, StreamConfig::default())
     }
 
+    /// Infallible construction — requires the native engine (the PJRT
+    /// artifact load can fail; use
+    /// [`StreamingDiscovery::try_with_config`] for it).
     pub fn with_config(initial: Dataset, cfg: StreamConfig) -> StreamingDiscovery {
+        assert!(
+            matches!(cfg.engine, EngineKind::Native),
+            "with_config is native-only; PJRT sessions go through try_with_config"
+        );
+        StreamingDiscovery::try_with_config(initial, cfg)
+            .expect("native stream construction is infallible")
+    }
+
+    /// Session over either fold kernel: native, or the PJRT engine
+    /// (loading the XLA artifacts named by `cfg.artifacts_dir` — the
+    /// one fallible step). The incremental factor machinery, the core
+    /// caches and the warm-start protocol are identical across engines;
+    /// only the m×m core algebra moves.
+    pub fn try_with_config(initial: Dataset, cfg: StreamConfig) -> Result<StreamingDiscovery> {
+        let kernel: Box<dyn CvLrKernel> = match cfg.engine {
+            EngineKind::Native => Box::new(NativeCvLrKernel),
+            EngineKind::Pjrt => {
+                let rt = Arc::new(
+                    Runtime::load(&cfg.artifacts_dir)
+                        .context("loading PJRT artifacts for the streaming CV-LR engine")?,
+                );
+                Box::new(PjrtCvLrKernel::new(rt))
+            }
+        };
         let backend = Arc::new(
             StreamBackend::new(initial, cfg.params, cfg.lowrank)
+                .with_kernel(kernel)
                 .with_parallelism(cfg.parallelism)
                 // the fold-core bound rides the score-cache bound: both
                 // exist for the same long-lived-process reason
@@ -320,7 +382,7 @@ impl StreamingDiscovery {
             cfg.cache_capacity,
         ));
         service.set_gram_threads(backend.parallelism() as u64);
-        StreamingDiscovery { backend, service, ges: cfg.ges, chunks: 0 }
+        Ok(StreamingDiscovery { backend, service, ges: cfg.ges, chunks: 0 })
     }
 
     /// Current number of samples.
@@ -427,6 +489,35 @@ mod tests {
         // factorization's own, not the stream's: a rank-capped ICL
         // state carries its cold-run residual too)
         assert!(sess.backend().max_reconstruction_error() < 1e-3);
+    }
+
+    /// An explicitly boxed kernel must flow through the identical
+    /// provider/cache machinery as the default — same bits out.
+    #[test]
+    fn boxed_kernel_routing_is_bit_identical() {
+        let ds = Dataset::from_columns(chain_rows(80, 4), &[false; 3]);
+        let a = StreamBackend::new(ds.clone(), CvParams::default(), LowRankConfig::default());
+        let b = StreamBackend::new(ds, CvParams::default(), LowRankConfig::default())
+            .with_kernel(Box::new(NativeCvLrKernel));
+        let reqs = [
+            ScoreRequest::new(1, &[0]),
+            ScoreRequest::new(2, &[0, 1]),
+            ScoreRequest::new(0, &[]),
+        ];
+        assert_eq!(a.score_batch(&reqs), b.score_batch(&reqs));
+    }
+
+    #[test]
+    fn appends_clear_pair_cores() {
+        let ds = Dataset::from_columns(chain_rows(90, 5), &[false; 3]);
+        let backend = StreamBackend::new(ds, CvParams::default(), LowRankConfig::default());
+        let reqs = [ScoreRequest::new(1, &[0])];
+        let _ = backend.score_batch(&reqs);
+        let (entries, _) = backend.core_cache_stats().unwrap();
+        assert!(entries >= 3, "self-cores for {{0}},{{1}} plus one pair: {entries}");
+        backend.append(&chain_rows(10, 6)).unwrap();
+        let (after, _) = backend.core_cache_stats().unwrap();
+        assert_eq!(after, 0, "appends clear both core caches");
     }
 
     #[test]

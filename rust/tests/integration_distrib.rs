@@ -1,0 +1,294 @@
+//! Integration tests of distributed sharded scoring over real TCP:
+//! a coordinator fanning GES score batches out across follower
+//! `cvlr serve` processes (in-process [`Server`] instances here).
+//!
+//! The property under test is the module's core invariant: **sharded
+//! results are bit-identical to local scoring** — through healthy
+//! fleets, a follower killed mid-sweep, and a follower dead from the
+//! start — and every failure surfaces in the shard counters rather
+//! than in the CPDAG.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cvlr::coordinator::Discovery;
+use cvlr::data::synth::{generate, SynthConfig};
+use cvlr::distrib::wire;
+use cvlr::distrib::ShardSpec;
+use cvlr::score::ScoreRequest;
+use cvlr::server::http::request;
+use cvlr::server::json::Json;
+use cvlr::server::{Server, ServerConfig};
+use cvlr::util::Pcg64;
+
+fn start_follower() -> Server {
+    Server::start(ServerConfig {
+        port: 0, // ephemeral
+        job_workers: 1,
+        builtin_n: 40,
+        cache_capacity: Some(1 << 16),
+        ..Default::default()
+    })
+    .expect("follower starts")
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
+    request(addr, "GET", path, None).expect("GET")
+}
+
+fn post(addr: SocketAddr, path: &str, body: Json) -> (u16, Json) {
+    request(addr, "POST", path, Some(&body)).expect("POST")
+}
+
+/// A CSV chain a→b→c (continuous) plus an independent discrete column.
+fn chain_csv(n: usize) -> String {
+    let mut rng = Pcg64::new(7);
+    let mut s = String::from("a,b,c,grp\n");
+    for _ in 0..n {
+        let a = rng.normal();
+        let b = 1.3 * a + 0.3 * rng.normal();
+        let c = -1.1 * b + 0.3 * rng.normal();
+        let g = rng.below(3);
+        s.push_str(&format!("{a:.6},{b:.6},{c:.6},{g}\n"));
+    }
+    s
+}
+
+/// Poll until the job is terminal; panics on timeout.
+fn poll_until_terminal(addr: SocketAddr, id: u64, timeout: Duration) -> Json {
+    let t0 = Instant::now();
+    loop {
+        let (status, job) = get(addr, &format!("/v1/jobs/{id}"));
+        assert_eq!(status, 200, "{job:?}");
+        let state = job.get("state").and_then(Json::as_str).expect("state").to_string();
+        if state == "done" || state == "failed" || state == "cancelled" {
+            return job;
+        }
+        assert!(t0.elapsed() < timeout, "job {id} stuck in `{state}`: {job:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Submit a job with extra body entries; returns the finished job JSON.
+fn run_job(addr: SocketAddr, dataset: &str, extra: Vec<(&str, Json)>) -> Json {
+    let mut body = vec![("dataset", Json::str(dataset)), ("method", Json::str("cv-lr"))];
+    body.extend(extra);
+    let (status, resp) = post(addr, "/v1/jobs", Json::obj(body));
+    assert_eq!(status, 202, "{resp:?}");
+    let id = resp.get("id").and_then(Json::as_u64).expect("job id");
+    let job = poll_until_terminal(addr, id, Duration::from_secs(180));
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("done"), "{job:?}");
+    job
+}
+
+/// Flatten a job result's adjacency matrix to f64s for exact compare.
+fn adjacency_of(job: &Json) -> Vec<f64> {
+    let adj = job
+        .get("result")
+        .and_then(|r| r.get("adjacency"))
+        .and_then(Json::as_arr)
+        .expect("adjacency");
+    adj.iter()
+        .flat_map(|row| row.as_arr().expect("row").iter().map(|v| v.as_f64().expect("cell")))
+        .collect()
+}
+
+/// End-to-end over the `Discovery` builder: a two-follower fleet must
+/// reproduce the local CPDAG exactly — with both followers healthy,
+/// with one killed mid-sweep, and with one dead from the first dispatch
+/// (connection refused → retry/hop/degrade, never corruption).
+#[test]
+fn sharded_discovery_is_bit_identical_and_survives_follower_loss() {
+    let (ds, _) = generate(&SynthConfig {
+        num_vars: 5,
+        density: 0.5,
+        n: 120,
+        seed: 11,
+        ..Default::default()
+    });
+    let ds = Arc::new(ds);
+
+    let baseline = Discovery::builder(ds.clone()).method("cv-lr").run().expect("local run");
+
+    let f1 = start_follower();
+    let f2 = start_follower();
+    let (a1, a2) = (f1.addr().to_string(), f2.addr().to_string());
+
+    // --- healthy fleet: identical CPDAG, and the fleet saw real work
+    let sharded = Discovery::builder(ds.clone())
+        .method("cv-lr")
+        .shards([a1.clone(), a2.clone()])
+        .shard_dataset("it-distrib")
+        .run()
+        .expect("sharded run");
+    assert_eq!(sharded.cpdag, baseline.cpdag, "sharded CPDAG must match local exactly");
+    let st = sharded.score_stats.expect("score stats");
+    assert!(st.shard_dispatches > 0, "no sub-batch ever reached the fleet");
+
+    // --- kill follower 2 while a sharded sweep is (likely) in flight
+    let (ds2, b1, b2) = (ds.clone(), a1.clone(), a2.clone());
+    let running = std::thread::spawn(move || {
+        Discovery::builder(ds2)
+            .method("cv-lr")
+            .shards([b1, b2])
+            .shard_dataset("it-distrib")
+            .run()
+            .expect("sharded run with mid-sweep kill")
+    });
+    std::thread::sleep(Duration::from_millis(25));
+    f2.stop();
+    let killed = running.join().expect("sweep survives the kill");
+    assert_eq!(killed.cpdag, baseline.cpdag, "mid-sweep follower loss corrupted the CPDAG");
+
+    // --- follower 2 stays dead: every dispatch to it is refused, so the
+    // lane retries onto follower 1 (or degrades locally) — visible in
+    // the counters, invisible in the result
+    let dead = Discovery::builder(ds.clone())
+        .method("cv-lr")
+        .shards([a1, a2])
+        .shard_dataset("it-distrib")
+        .run()
+        .expect("sharded run with a dead follower");
+    assert_eq!(dead.cpdag, baseline.cpdag, "dead follower corrupted the CPDAG");
+    let st = dead.score_stats.expect("score stats");
+    assert!(st.shard_dispatches > 0, "live follower still serves");
+    assert!(
+        st.shard_retries + st.shard_degraded > 0,
+        "a dead follower must surface as retries or degradation"
+    );
+
+    f1.stop();
+}
+
+/// The server as coordinator: `ServerConfig::shards` turns jobs into
+/// sharded sweeps, a per-job `"shards": []` override forces local
+/// scoring, the two results agree bit-for-bit, and `/v1/stats` exposes
+/// the per-follower counters.
+#[test]
+fn coordinator_server_shards_jobs_and_reports_follower_stats() {
+    let f1 = start_follower();
+    let f2 = start_follower();
+    let fleet = vec![f1.addr().to_string(), f2.addr().to_string()];
+    let coord = Server::start(ServerConfig {
+        port: 0,
+        job_workers: 2,
+        builtin_n: 40,
+        cache_capacity: Some(1 << 16),
+        shards: fleet.clone(),
+        ..Default::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.addr();
+
+    let (status, reg) = post(
+        addr,
+        "/v1/datasets",
+        Json::obj(vec![("name", Json::str("chain")), ("csv", Json::str(chain_csv(200)))]),
+    );
+    assert_eq!(status, 201, "{reg:?}");
+
+    // default fleet from the server config vs an explicit local override
+    let sharded = run_job(addr, "chain", vec![]);
+    let local = run_job(addr, "chain", vec![("shards", Json::Arr(vec![]))]);
+    assert_eq!(
+        adjacency_of(&sharded),
+        adjacency_of(&local),
+        "sharded job result must be bit-identical to the local job"
+    );
+
+    // the sharded service (non-empty shards key) reports fleet counters
+    let (status, stats) = get(addr, "/v1/stats");
+    assert_eq!(status, 200, "{stats:?}");
+    let services = stats.get("services").and_then(Json::as_arr).expect("services");
+    let sharded_svc = services
+        .iter()
+        .find(|s| s.get("shards").and_then(Json::as_str).is_some_and(|v| !v.is_empty()))
+        .expect("a sharded service is pooled");
+    let st = sharded_svc.get("stats").expect("stats");
+    assert!(st.get("shard_dispatches").and_then(Json::as_u64).unwrap() > 0, "{st:?}");
+    let followers = st.get("followers").and_then(Json::as_arr).expect("followers");
+    assert_eq!(followers.len(), 2, "{st:?}");
+    let mut dispatched = 0u64;
+    for f in followers {
+        let fa = f.get("addr").and_then(Json::as_str).expect("addr");
+        assert!(fleet.iter().any(|a| a == fa), "unknown follower {fa}");
+        assert!(f.get("healthy").and_then(Json::as_bool).is_some());
+        assert!(f.get("ewma_ms").and_then(Json::as_f64).is_some());
+        dispatched += f.get("dispatches").and_then(Json::as_u64).expect("dispatches");
+    }
+    assert!(dispatched > 0, "per-follower dispatch counters never moved: {st:?}");
+    // the local service coexists under its own key (empty shards)
+    assert!(
+        services
+            .iter()
+            .any(|s| s.get("shards").and_then(Json::as_str) == Some("")
+                && s.get("dataset").and_then(Json::as_str) == Some("chain")),
+        "{services:?}"
+    );
+
+    coord.stop();
+    f1.stop();
+    f2.stop();
+}
+
+/// The wire protocol of `POST /v1/score_batch` itself: 404 before the
+/// dataset push, 409 on a stale version pin, 400 on an unknown method,
+/// then bit-stable scores once registered.
+#[test]
+fn score_batch_endpoint_protocol() {
+    let f = start_follower();
+    let addr = f.addr();
+    let (ds, _) =
+        generate(&SynthConfig { num_vars: 4, n: 80, seed: 9, ..Default::default() });
+    let spec = |dataset: &str, method: &str| ShardSpec {
+        dataset: dataset.to_string(),
+        method: method.to_string(),
+        engine: "native".to_string(),
+        lowrank: "icl".to_string(),
+    };
+    let reqs =
+        vec![ScoreRequest::new(0, &[]), ScoreRequest::new(1, &[0]), ScoreRequest::new(2, &[0, 1])];
+
+    // unknown dataset: the follower asks for the raw push
+    let (status, resp) =
+        post(addr, "/v1/score_batch", wire::score_batch_body(&spec("nope", "cv-lr"), None, &reqs));
+    assert_eq!(status, 404, "{resp:?}");
+
+    // raw push in internal coordinates; the follower assigns a version
+    let (status, reg) = post(addr, "/v1/datasets", wire::dataset_body("wiretest", &ds));
+    assert_eq!(status, 201, "{reg:?}");
+    let version = reg.get("version").and_then(Json::as_u64).expect("version");
+
+    // stale version pin: the coordinator must re-push, not get stale bits
+    let (status, resp) = post(
+        addr,
+        "/v1/score_batch",
+        wire::score_batch_body(&spec("wiretest", "cv-lr"), Some(version + 1), &reqs),
+    );
+    assert_eq!(status, 409, "{resp:?}");
+
+    // unknown method
+    let (status, resp) = post(
+        addr,
+        "/v1/score_batch",
+        wire::score_batch_body(&spec("wiretest", "nope"), Some(version), &reqs),
+    );
+    assert_eq!(status, 400, "{resp:?}");
+
+    // a correct pin scores; a repeat is bit-identical (memoized or not)
+    let body = wire::score_batch_body(&spec("wiretest", "cv-lr"), Some(version), &reqs);
+    let (status, resp) = post(addr, "/v1/score_batch", body.clone());
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("version").and_then(Json::as_u64), Some(version));
+    let scores = wire::parse_scores(&resp, reqs.len()).expect("scores");
+    assert!(scores.iter().all(|s| s.is_finite()), "{scores:?}");
+    let (status, resp) = post(addr, "/v1/score_batch", body);
+    assert_eq!(status, 200, "{resp:?}");
+    let again = wire::parse_scores(&resp, reqs.len()).expect("scores");
+    for (a, b) in scores.iter().zip(&again) {
+        assert_eq!(a.to_bits(), b.to_bits(), "follower scoring must be bit-stable");
+    }
+
+    f.stop();
+}
