@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file written by ``--trace-out``
+or scraped from ``GET /v1/trace``.
+
+Usage:
+
+    python3 check_trace.py TRACE.json [--require-remote] [--require NAME ...]
+
+Checks (stdlib only — runs on any CI image):
+
+* the document is a JSON object with a ``traceEvents`` list;
+* every ``X`` (complete-span) event carries ``name``, ``cat``, numeric
+  ``ts``/``dur`` and integer ``pid``/``tid``;
+* every ``i`` (instant) event carries ``name``, numeric ``ts`` and a
+  thread scope;
+* every pid referenced by an event has ``process_name`` metadata, and
+  every (pid, tid) pair has ``thread_name`` metadata — without these
+  Perfetto shows anonymous tracks;
+* with ``--require-remote``: at least one span is follower-attributed
+  (pid >= 2; pid 1 is the local process), i.e. fleet timing propagation
+  actually merged remote events;
+* with ``--require NAME``: a span or instant with that name exists
+  (e.g. ``ges-forward-sweep``).
+
+Exits non-zero with a message on the first failure; prints an event
+census on success.
+"""
+
+import argparse
+import json
+import sys
+from collections import Counter
+
+
+def fail(msg):
+    sys.exit(f"check_trace: FAIL: {msg}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSON file")
+    ap.add_argument(
+        "--require-remote",
+        action="store_true",
+        help="require at least one follower-attributed span (pid >= 2)",
+    )
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="require an event with this name (repeatable)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace) as fh:
+            doc = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {args.trace}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level is not a JSON object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("`traceEvents` is missing or not a list")
+
+    spans = instants = 0
+    names = Counter()
+    pids_used = set()
+    tids_used = set()
+    proc_named = set()
+    thread_named = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event #{i} is not an object")
+        ph = ev.get("ph")
+        if ph == "M":
+            pid = ev.get("pid")
+            if ev.get("name") == "process_name":
+                proc_named.add(pid)
+            elif ev.get("name") == "thread_name":
+                thread_named.add((pid, ev.get("tid")))
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"event #{i} ({ph!r}) has no name")
+        pid, tid = ev.get("pid"), ev.get("tid")
+        if not isinstance(pid, int) or not isinstance(tid, int):
+            fail(f"event #{i} ({name}) has non-integer pid/tid")
+        if not isinstance(ev.get("ts"), (int, float)):
+            fail(f"event #{i} ({name}) has non-numeric ts")
+        if ph == "X":
+            if not isinstance(ev.get("cat"), str):
+                fail(f"span #{i} ({name}) has no cat")
+            if not isinstance(ev.get("dur"), (int, float)):
+                fail(f"span #{i} ({name}) has non-numeric dur")
+            spans += 1
+        elif ph == "i":
+            if "s" not in ev:
+                fail(f"instant #{i} ({name}) has no scope")
+            instants += 1
+        else:
+            fail(f"event #{i} ({name}) has unknown phase {ph!r}")
+        names[name] += 1
+        pids_used.add(pid)
+        tids_used.add((pid, tid))
+
+    for pid in sorted(pids_used):
+        if pid not in proc_named:
+            fail(f"pid {pid} has events but no process_name metadata")
+    for pid, tid in sorted(tids_used):
+        if (pid, tid) not in thread_named:
+            fail(f"(pid {pid}, tid {tid}) has events but no thread_name metadata")
+
+    if args.require_remote and not any(p >= 2 for p in pids_used):
+        fail("no follower-attributed span (pid >= 2) in the trace")
+    for want in args.require:
+        if names[want] == 0:
+            fail(f"required event `{want}` absent")
+
+    top = ", ".join(f"{n}×{c}" for n, c in names.most_common(6))
+    print(
+        f"check_trace: OK: {spans} span(s), {instants} instant(s) across "
+        f"{len(pids_used)} process(es) / {len(tids_used)} thread track(s); top: {top}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -138,7 +138,9 @@ def series_of(header, rows, metric):
 
 def is_metric_like(col, metric):
     """Other measure columns are not identity: drop them from series keys."""
-    measure_suffixes = ("_seconds", "_mean", "_std", "_pct", "seconds", "speedup", "_score")
+    measure_suffixes = (
+        "_seconds", "_mean", "_std", "_pct", "_p50", "_p95", "seconds", "speedup", "_score",
+    )
     return col != metric and (col.endswith(measure_suffixes) or col in ("rank_used",))
 
 
@@ -278,6 +280,13 @@ def main():
 
     for bench in benches:
         metric = args.metric or DEFAULT_METRIC.get(bench)
+        if not args.metric and metric is not None:
+            # prefer the median over the mean when every run carries it:
+            # at CI rep counts one cold-cache outlier moves the mean
+            headers = [b[bench][0] for (_, b) in runs if bench in b]
+            p50 = f"{metric}_p50"
+            if headers and all(p50 in h for h in headers):
+                metric = p50
         if metric is None:
             # fall back to the last numeric column of the first run
             header, rows = next(b[bench] for (_, b) in runs if bench in b)

@@ -104,7 +104,17 @@ fn main() {
     let mut rep = Report::new(
         &cfg,
         "fig1_runtime",
-        &["setting", "lowrank", "shards", "n", "cv_seconds", "cvlr_seconds", "speedup"],
+        &[
+            "setting",
+            "lowrank",
+            "shards",
+            "n",
+            "cv_seconds",
+            "cvlr_seconds",
+            "cvlr_seconds_p50",
+            "cvlr_seconds_p95",
+            "speedup",
+        ],
     );
 
     for s in &SETTINGS {
@@ -134,8 +144,8 @@ fn main() {
                     // fleet, per score — registration and the follower
                     // service build stay outside the timed region (they
                     // amortize over a sweep in real use).
-                    let lr_mean = if k == 0 {
-                        bench_fn(1, cfg.reps, || {
+                    let (lr_mean, lr_p50, lr_p95) = if k == 0 {
+                        let st = bench_fn(1, cfg.reps, || {
                             let lr = CvLrScore::with_backend(
                                 ds.clone(),
                                 CvParams::default(),
@@ -144,8 +154,8 @@ fn main() {
                             )
                             .with_parallelism(parallelism);
                             let _ = lr.local_score(target, &parents);
-                        })
-                        .mean_s
+                        });
+                        (st.mean_s, st.p50_s, st.p95_s)
                     } else {
                         while fleet.len() < k {
                             fleet.push(
@@ -201,7 +211,8 @@ fn main() {
                         let st = bench_fn(0, 1, || {
                             let _ = backend.score_batch(&reqs);
                         });
-                        st.mean_s / reqs.len() as f64
+                        let per = reqs.len() as f64;
+                        (st.mean_s / per, st.p50_s / per, st.p95_s / per)
                     };
 
                     let speedup = cv_mean.map(|c| c / lr_mean);
@@ -222,6 +233,8 @@ fn main() {
                         n.to_string(),
                         cv_mean.map(|x| format!("{x:.6}")).unwrap_or_default(),
                         format!("{lr_mean:.6}"),
+                        format!("{lr_p50:.6}"),
+                        format!("{lr_p95:.6}"),
                         speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
                     ]);
                 }

@@ -30,6 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use crate::graph::Pdag;
+use crate::obs::{metrics, trace};
 use crate::score::{
     FollowerStat, LocalScore, ScalarBackend, ScoreBackend, ScoreRequest, ShardCounters,
 };
@@ -350,6 +351,14 @@ pub struct ServiceStats {
     /// Per-follower health/latency snapshots of a sharding backend;
     /// empty for local backends.
     pub followers: Vec<FollowerStat>,
+    /// Basis re-pivots performed by a streaming backend's incremental
+    /// factor states (0 for non-streaming backends) — how often the
+    /// append path had to fall back to a fresh factorization.
+    pub stream_repivots: u64,
+    /// Appended-residual level summed over a streaming backend's live
+    /// factor states (0.0 for non-streaming backends) — how far the
+    /// incremental bases have drifted since their last re-pivot.
+    pub stream_residual: f64,
     pub eval_seconds: f64,
 }
 
@@ -476,6 +485,7 @@ impl ScoreService {
         let (core_entries, core_evictions) = backend.core_cache_stats().unwrap_or((0, 0));
         let shard = backend.shard_counters().unwrap_or_default();
         let followers = backend.follower_stats();
+        let (stream_repivots, stream_residual) = backend.stream_stats().unwrap_or((0, 0.0));
         drop(backend);
         ServiceStats {
             requests: self.requests.load(Ordering::Relaxed),
@@ -496,6 +506,8 @@ impl ScoreService {
             shard_hedges: shard.hedges,
             shard_degraded: shard.degraded,
             followers,
+            stream_repivots,
+            stream_residual,
             eval_seconds: *self.eval_secs.lock().unwrap(),
         }
     }
@@ -562,6 +574,10 @@ impl ScoreBackend for ScoreService {
             (0..uniq.len()).filter(|&i| matches!(claims[i], Claim::Owned)).collect();
         self.hits.fetch_add((uniq.len() - owned.len()) as u64, Ordering::Relaxed);
         self.evals.fetch_add(owned.len() as u64, Ordering::Relaxed);
+        metrics::requests_total().add(reqs.len() as u64);
+        metrics::dedup_skips_total().add((reqs.len() - uniq.len()) as u64);
+        metrics::cache_hits_total().add((uniq.len() - owned.len()) as u64);
+        metrics::evaluations_total().add(owned.len() as u64);
 
         // Evaluate claimed misses and publish them. The guard abandons
         // the claims if the backend panics, so waiters fail instead of
@@ -570,13 +586,18 @@ impl ScoreBackend for ScoreService {
         if !owned.is_empty() {
             let guard =
                 ClaimGuard::new(&self.cache, owned.iter().map(|&i| uniq[i].clone()).collect());
+            let span = trace::span("score-batch", "service")
+                .arg("misses", owned.len().to_string());
             let sw = crate::util::Stopwatch::start();
             let miss_reqs: Vec<ScoreRequest> = owned
                 .iter()
                 .map(|&i| ScoreRequest { target: uniq[i].0, parents: uniq[i].1.clone() })
                 .collect();
             let vals = self.evaluate(&miss_reqs);
-            *self.eval_secs.lock().unwrap() += sw.secs();
+            let secs = sw.secs();
+            drop(span);
+            metrics::score_batch_seconds().observe(secs);
+            *self.eval_secs.lock().unwrap() += secs;
             self.cache.fill(owned.iter().zip(&vals).map(|(&i, &v)| (uniq[i].clone(), v)));
             guard.disarm();
             for (&i, &v) in owned.iter().zip(&vals) {
@@ -617,6 +638,10 @@ impl ScoreBackend for ScoreService {
     fn follower_stats(&self) -> Vec<FollowerStat> {
         self.backend.read().unwrap().follower_stats()
     }
+
+    fn stream_stats(&self) -> Option<(u64, f64)> {
+        self.backend.read().unwrap().stream_stats()
+    }
 }
 
 impl LocalScore for ScoreService {
@@ -624,24 +649,30 @@ impl LocalScore for ScoreService {
     /// one-request batch without the batch counters.
     fn local_score(&self, target: usize, parents: &[usize]) -> f64 {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        metrics::requests_total().inc();
         let req = ScoreRequest::new(target, parents);
         let key = req.key();
         match &self.cache.claim(std::slice::from_ref(&key))[0] {
             Claim::Hit(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                metrics::cache_hits_total().inc();
                 *v
             }
             Claim::InFlight => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                metrics::cache_hits_total().inc();
                 self.cache.wait(&key)
             }
             Claim::Owned => {
                 self.evals.fetch_add(1, Ordering::Relaxed);
+                metrics::evaluations_total().inc();
                 let guard = ClaimGuard::new(&self.cache, vec![key.clone()]);
                 let sw = crate::util::Stopwatch::start();
                 let backend = self.backend.read().unwrap().clone();
                 let v = backend.score_batch(std::slice::from_ref(&req))[0];
-                *self.eval_secs.lock().unwrap() += sw.secs();
+                let secs = sw.secs();
+                metrics::score_batch_seconds().observe(secs);
+                *self.eval_secs.lock().unwrap() += secs;
                 self.cache.fill([(key, v)]);
                 guard.disarm();
                 v

@@ -23,7 +23,7 @@
 //! (bounded by the socket timeout anyway) cannot hold the sweep
 //! hostage. The controller waits on a channel with deadlines instead.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
+use crate::obs::{metrics, trace};
 use crate::score::{FollowerStat, ScoreBackend, ScoreRequest, ShardCounters};
 use crate::server::json::Json;
 
@@ -98,10 +99,19 @@ impl ScoreBackend for ShardScoreBackend {
         if reqs.len() < inner.pool.cfg.min_remote || avail.is_empty() {
             if avail.is_empty() && !inner.pool.is_empty() && !reqs.is_empty() {
                 inner.pool.unattributed_degraded.fetch_add(1, Ordering::Relaxed);
+                metrics::shard_degraded_total().inc();
             }
             return inner.local.score_batch(reqs);
         }
+        // per-coordinator sharded-batch id, stamped on the batch span
+        // and every dispatch span so follower timings attribute back
+        static NEXT_BATCH: AtomicU64 = AtomicU64::new(1);
+        let batch_id = NEXT_BATCH.fetch_add(1, Ordering::Relaxed);
         let k = avail.len().min(reqs.len());
+        let _span = trace::span("shard-batch", "distrib")
+            .arg("batch", batch_id.to_string())
+            .arg("requests", reqs.len().to_string())
+            .arg("shards", k.to_string());
         let parts = partition(reqs.len(), k);
         let (tx, rx) = mpsc::channel::<(usize, Vec<f64>)>();
         let mut offset = 0usize;
@@ -133,6 +143,7 @@ impl ScoreBackend for ShardScoreBackend {
                 Some(s) => result.extend(s),
                 None => {
                     inner.pool.unattributed_degraded.fetch_add(1, Ordering::Relaxed);
+                    metrics::shard_degraded_total().inc();
                     result.extend(inner.local.score_batch(&reqs[offset..offset + len]));
                 }
             }
@@ -192,6 +203,12 @@ fn run_shard(
                 // sub-batch to another healthy follower, first wins
                 hedged = true;
                 assigned.hedges.fetch_add(1, Ordering::Relaxed);
+                metrics::shard_hedges_total().inc();
+                trace::instant(
+                    "shard-hedge",
+                    "distrib",
+                    vec![("follower".to_string(), assigned.addr().to_string())],
+                );
                 if let Some(other) = inner.pool.pick_other(assigned.addr()) {
                     spawn_lane(inner, other, reqs.clone(), tx.clone());
                     lanes += 1;
@@ -201,6 +218,12 @@ fn run_shard(
         }
     }
     assigned.degraded.fetch_add(1, Ordering::Relaxed);
+    metrics::shard_degraded_total().inc();
+    trace::instant(
+        "shard-degrade",
+        "distrib",
+        vec![("follower".to_string(), assigned.addr().to_string())],
+    );
     inner.local.score_batch(&reqs)
 }
 
@@ -219,6 +242,12 @@ fn spawn_lane(
         for attempt in 0..=inner.pool.cfg.max_retries {
             if attempt > 0 {
                 f.retries.fetch_add(1, Ordering::Relaxed);
+                metrics::shard_retries_total().inc();
+                trace::instant(
+                    "shard-retry",
+                    "distrib",
+                    vec![("attempt".to_string(), attempt.to_string())],
+                );
                 std::thread::sleep(inner.pool.backoff(attempt));
                 if let Some(other) = inner.pool.pick_other(f.addr()) {
                     f = other;
@@ -242,6 +271,8 @@ fn spawn_lane(
 /// re-push and retry once.
 fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<Vec<f64>> {
     f.dispatches.fetch_add(1, Ordering::Relaxed);
+    metrics::shard_dispatches_total().inc();
+    let _span = trace::span("shard-dispatch", "distrib").arg("follower", f.addr());
     let pinned = *f.version.lock().unwrap();
     let version = match pinned {
         Some(v) => v,
@@ -266,6 +297,18 @@ fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<V
     let scores = wire::parse_scores(&resp, reqs.len())
         .with_context(|| format!("bad scores from {}", f.addr()))?;
     inner.pool.success(f, t0.elapsed());
+    // fold the follower's own span timings (optional reply field; absent
+    // from old followers) into this coordinator's trace, re-based to the
+    // dispatch wall clock and attributed to a per-follower synthetic pid
+    if trace::is_enabled() {
+        let base = trace::instant_us(t0);
+        let pid = trace::remote_pid(f.addr());
+        for mut ev in wire::parse_timings(&resp) {
+            ev.ts_us += base;
+            ev.pid = pid;
+            trace::record_remote(ev);
+        }
+    }
     Ok(scores)
 }
 

@@ -247,6 +247,7 @@ impl FollowerPool {
     /// `trip_failures` consecutive failures.
     pub fn failure(&self, f: &Follower) {
         f.failures.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::shard_failures_total().inc();
         f.health.lock().unwrap().on_failure(self.cfg.trip_failures, Instant::now());
     }
 

@@ -19,6 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::{Dataset, Variable};
 use crate::linalg::Mat;
+use crate::obs::trace::SpanEvent;
 use crate::score::ScoreRequest;
 use crate::server::json::Json;
 
@@ -136,6 +137,54 @@ pub fn parse_scores(body: &Json, expect: usize) -> Result<Vec<f64>> {
         .collect()
 }
 
+/// The optional `timings` array of a `score_batch` reply: the
+/// follower's stage spans for this sub-batch, timestamps re-based to
+/// the start of its evaluation (a `trace::capture`). Old followers
+/// simply omit the field — the protocol stays backward compatible in
+/// both directions (old coordinators ignore unknown reply fields).
+pub fn timings_json(events: &[SpanEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|ev| {
+                Json::obj(vec![
+                    ("name", Json::str(ev.name.clone())),
+                    ("cat", Json::str(ev.cat.clone())),
+                    ("ts", num(ev.ts_us)),
+                    ("dur", num(ev.dur_us)),
+                    ("tid", num(ev.tid)),
+                    ("instant", Json::Bool(ev.instant)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Coordinator-side decode of a reply's `timings` field. Tolerant by
+/// design: an absent field (old follower) or malformed entries yield an
+/// empty/partial list — timing merge is observability, never worth
+/// failing a scoring reply over. `pid` is left 0 for the caller to
+/// re-assign (`trace::remote_pid`).
+pub fn parse_timings(reply: &Json) -> Vec<SpanEvent> {
+    let Some(arr) = reply.get("timings").and_then(Json::as_arr) else {
+        return Vec::new();
+    };
+    arr.iter()
+        .filter_map(|e| {
+            Some(SpanEvent {
+                name: e.get("name")?.as_str()?.to_string(),
+                cat: e.get("cat").and_then(Json::as_str).unwrap_or("remote").to_string(),
+                ts_us: e.get("ts").and_then(Json::as_u64)?,
+                dur_us: e.get("dur").and_then(Json::as_u64).unwrap_or(0),
+                pid: 0,
+                tid: e.get("tid").and_then(Json::as_u64).unwrap_or(1),
+                instant: e.get("instant").and_then(Json::as_bool).unwrap_or(false),
+                args: Vec::new(),
+            })
+        })
+        .collect()
+}
+
 /// `POST /v1/datasets` body registering `ds` on a follower in raw
 /// internal coordinates (no CSV re-ingestion, bit-exact round trip).
 pub fn dataset_body(name: &str, ds: &Dataset) -> Json {
@@ -244,6 +293,52 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert!(parse_scores(&parsed, 4).is_err(), "length mismatch must fail");
+    }
+
+    #[test]
+    fn timings_roundtrip_and_tolerate_absence() {
+        let events = vec![
+            SpanEvent {
+                name: "score-segment".into(),
+                cat: "score".into(),
+                ts_us: 120,
+                dur_us: 4500,
+                pid: 1,
+                tid: 3,
+                instant: false,
+                args: vec![("requests".into(), "64".into())],
+            },
+            SpanEvent {
+                name: "re-pivot".into(),
+                cat: "stream".into(),
+                ts_us: 9000,
+                dur_us: 0,
+                pid: 1,
+                tid: 3,
+                instant: true,
+                args: Vec::new(),
+            },
+        ];
+        let reply = Json::obj(vec![("scores", Json::Arr(vec![])), ("timings", timings_json(&events))]);
+        let parsed = json::parse(&reply.encode()).unwrap();
+        let back = parse_timings(&parsed);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "score-segment");
+        assert_eq!((back[0].ts_us, back[0].dur_us, back[0].tid), (120, 4500, 3));
+        assert!(!back[0].instant);
+        assert!(back[1].instant);
+        assert_eq!(back[0].pid, 0, "pid is re-assigned by the coordinator");
+        // absent field (old follower) → empty, not an error
+        let old = json::parse(r#"{"scores":[1.0],"version":2}"#).unwrap();
+        assert!(parse_timings(&old).is_empty());
+        // malformed entries are skipped, valid ones survive
+        let mixed = json::parse(
+            r#"{"timings":[{"cat":"x"},{"name":"ok","ts":5},"nonsense"]}"#,
+        )
+        .unwrap();
+        let kept = parse_timings(&mixed);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].name, "ok");
     }
 
     #[test]

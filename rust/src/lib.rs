@@ -86,6 +86,7 @@
 //! `artifacts/*.hlo.txt`, and the rust binary is self-contained after that.
 
 pub mod util;
+pub mod obs;
 pub mod linalg;
 pub mod kernel;
 pub mod lowrank;

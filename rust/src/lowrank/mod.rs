@@ -140,6 +140,15 @@ impl LowRankConfig {
 /// request on a kernel without a Gaussian spectral form — falls through
 /// to ICL with [`LowRank::fell_back`] set.
 pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> LowRank {
+    let _span = crate::obs::trace::span("factorize", "lowrank")
+        .arg("n", x.rows.to_string());
+    let sw = crate::util::Stopwatch::start();
+    let out = factorize_inner(k, x, is_discrete, cfg);
+    crate::obs::metrics::factorize_seconds().observe(sw.secs());
+    out
+}
+
+fn factorize_inner(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> LowRank {
     let mut fell_back = false;
     if is_discrete {
         let distinct = distinct_rows(x);

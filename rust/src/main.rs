@@ -109,7 +109,10 @@ fn print_help() {
          \x20 --shards H:P,H:P                      follower fleet (`cvlr serve` processes)\n\
          \x20                                       for distributed score batches; datasets\n\
          \x20                                       auto-register on followers, dead/slow\n\
-         \x20                                       followers degrade to local scoring\n\n\
+         \x20                                       followers degrade to local scoring\n\
+         \x20 --trace-out FILE.json                 record stage spans and write a Chrome\n\
+         \x20                                       trace-event snapshot (Perfetto-loadable)\n\
+         \x20                                       on completion (discover/stream/score)\n\n\
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
@@ -132,6 +135,23 @@ fn print_help() {
          \x20                  acts as a sharding coordinator; per-job `shards`\n\
          \x20                  overrides it)"
     );
+}
+
+/// `--trace-out FILE`: attach the span recorder before the run so every
+/// stage span of the command lands in the ring. Returns the path to
+/// write at completion.
+fn trace_out_arg(args: &Args) -> Option<String> {
+    let path = args.get("trace-out")?;
+    cvlr::obs::trace::enable();
+    Some(path.to_string())
+}
+
+/// Snapshot the span ring as Chrome trace-event JSON at `path`.
+fn write_trace(path: &str) -> Result<()> {
+    std::fs::write(path, cvlr::obs::trace::export_json())
+        .with_context(|| format!("writing trace to {path}"))?;
+    println!("trace    : wrote {path} (load it in Perfetto or chrome://tracing)");
+    Ok(())
 }
 
 /// Parse `--lowrank {icl,rff}` (the CV-LR factorization; default icl).
@@ -227,6 +247,7 @@ fn load_workload(args: &Args) -> Result<(Arc<Dataset>, Option<Dag>, String)> {
 }
 
 fn cmd_discover(args: &Args) -> Result<()> {
+    let trace_out = trace_out_arg(args);
     let (ds, truth, desc) = load_workload(args)?;
     let engine = match args.get_or("engine", "native").as_str() {
         "native" => EngineKind::Native,
@@ -291,6 +312,9 @@ fn cmd_discover(args: &Args) -> Result<()> {
             }
         }
     }
+    if let Some(path) = &trace_out {
+        write_trace(path)?;
+    }
     Ok(())
 }
 
@@ -299,6 +323,7 @@ fn cmd_discover(args: &Args) -> Result<()> {
 /// reporting append latency (the O(c·m²) incremental factor work —
 /// flat in n), re-pivots, discovery latency and cache reuse.
 fn cmd_stream(args: &Args) -> Result<()> {
+    let trace_out = trace_out_arg(args);
     let (ds, truth, desc) = load_workload(args)?;
     let chunk = args.usize_or("chunk", 100);
     let folds = cvlr::score::folds::CvParams::default().folds;
@@ -412,10 +437,14 @@ fn cmd_stream(args: &Args) -> Result<()> {
             }
         }
     }
+    if let Some(path) = &trace_out {
+        write_trace(path)?;
+    }
     Ok(())
 }
 
 fn cmd_score(args: &Args) -> Result<()> {
+    let trace_out = trace_out_arg(args);
     let (ds, _, desc) = load_workload(args)?;
     let target = args.usize_or("target", 0);
     let parents: Vec<usize> = args
@@ -459,6 +488,9 @@ fn cmd_score(args: &Args) -> Result<()> {
         sharded.score_batch(&[ScoreRequest::new(target, &parents)])[0]
     };
     println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
+    if let Some(path) = &trace_out {
+        write_trace(path)?;
+    }
     Ok(())
 }
 
@@ -496,6 +528,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  DELETE /v1/jobs/<id>   cancel");
     println!("  POST   /v1/score_batch follower-side shard scoring");
     println!("  GET    /v1/stats       job + score-cache + shard statistics");
+    println!("  GET    /v1/metrics     Prometheus text exposition (cvlr_* series)");
+    println!("  GET    /v1/trace       Chrome trace-event JSON (Perfetto-loadable)");
     println!("  POST   /v1/shutdown    graceful shutdown");
     // graceful shutdown is driven by the shutdown endpoint: the accept
     // loop drains connections, then the job manager cancels + joins

@@ -1,0 +1,467 @@
+//! Process-global metrics registry: counters, gauges, and log-bucketed
+//! latency histograms, rendered in Prometheus text exposition format
+//! (`GET /v1/metrics`).
+//!
+//! Design points:
+//!
+//! * **Always on, stage-granular.** Instrumented code bumps a relaxed
+//!   atomic once per *stage* (a score batch, a fold-core build, a
+//!   sweep) — never per score — so the registry needs no enable flag.
+//! * **Log-2 latency buckets.** [`latency_edges`] spans 1 µs … ~134 s
+//!   in powers of two; p50/p95/p99 are derivable from the cumulative
+//!   bucket counts ([`Histogram::quantile`]) without storing samples.
+//! * **Get-or-register.** [`counter`]/[`gauge`]/[`histogram`] return
+//!   the existing series under the same name, so call sites just ask
+//!   for their handle; [`register_defaults`] pre-creates every
+//!   well-known series so a scrape sees the full schema even before
+//!   traffic arrives.
+//!
+//! Naming scheme: `cvlr_<subsystem>_<what>[_total|_seconds]` —
+//! counters end in `_total`, latency histograms in `_seconds`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically-increasing counter (name it `*_total`).
+pub struct Counter {
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins f64 gauge (value stored as bits in an atomic).
+pub struct Gauge {
+    help: &'static str,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A histogram over fixed upper-bound edges (ascending), with an
+/// implicit `+Inf` bucket at the end. Buckets are **le-inclusive**,
+/// matching Prometheus: a value exactly on an edge lands in that edge's
+/// bucket. The running sum is a CAS loop over f64 bits; everything else
+/// is relaxed atomics.
+pub struct Histogram {
+    help: &'static str,
+    edges: Vec<f64>,
+    /// `edges.len() + 1` buckets; the last one is `+Inf`.
+    buckets: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(help: &'static str, edges: Vec<f64>) -> Histogram {
+        let buckets = (0..=edges.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram { help, edges, buckets, sum_bits: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    /// Bucket index a value lands in (`edges.len()` = the `+Inf`
+    /// bucket). Exposed so the boundary semantics are unit-testable.
+    pub fn bucket_index(&self, v: f64) -> usize {
+        self.edges.iter().position(|&e| v <= e).unwrap_or(self.edges.len())
+    }
+
+    pub fn observe(&self, v: f64) {
+        self.buckets[self.bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Observe a duration in seconds (alias that reads better at call
+    /// sites timing stages).
+    pub fn observe_secs(&self, secs: f64) {
+        self.observe(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Upper bounds, ascending (without the implicit `+Inf`).
+    pub fn edges(&self) -> &[f64] {
+        &self.edges
+    }
+
+    /// Per-bucket (non-cumulative) counts, `+Inf` last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Quantile estimate from the buckets: the upper edge of the bucket
+    /// holding the q-th sample (`+Inf` reported as `f64::INFINITY`,
+    /// empty histograms as 0). The resolution is the bucket width — a
+    /// factor of 2 for [`latency_edges`] — which is what makes p50/p95
+    /// derivable without storing samples.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return self.edges.get(i).copied().unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Log-2 latency edges: `1e-6 · 2^i` for i = 0..28 (1 µs … ~134 s).
+pub fn latency_edges() -> Vec<f64> {
+    (0..28).map(|i| 1e-6 * (1u64 << i) as f64).collect()
+}
+
+struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
+    })
+}
+
+/// Get or register a counter. The first registration's help text wins.
+pub fn counter(name: &str, help: &'static str) -> Arc<Counter> {
+    registry()
+        .counters
+        .lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_insert_with(|| Arc::new(Counter { help, value: AtomicU64::new(0) }))
+        .clone()
+}
+
+/// Get or register a gauge.
+pub fn gauge(name: &str, help: &'static str) -> Arc<Gauge> {
+    registry()
+        .gauges
+        .lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_insert_with(|| Arc::new(Gauge { help, bits: AtomicU64::new(0.0f64.to_bits()) }))
+        .clone()
+}
+
+/// Get or register a latency histogram over [`latency_edges`].
+pub fn histogram(name: &str, help: &'static str) -> Arc<Histogram> {
+    histogram_with_edges(name, help, latency_edges())
+}
+
+/// Get or register a histogram with explicit edges (ascending upper
+/// bounds; `+Inf` is implicit). An existing series under the same name
+/// is returned as-is, edges and all.
+pub fn histogram_with_edges(name: &str, help: &'static str, edges: Vec<f64>) -> Arc<Histogram> {
+    registry()
+        .histograms
+        .lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_insert_with(|| Arc::new(Histogram::new(help, edges)))
+        .clone()
+}
+
+// ---- the well-known series -------------------------------------------------
+//
+// Instrumented modules fetch their handle through these accessors, and
+// `register_defaults` touches every one so `/v1/metrics` exposes the
+// full schema from the first scrape.
+
+/// Latency of one memo-missing score-batch evaluation
+/// (`ScoreService`), batch and scalar paths alike.
+pub fn score_batch_seconds() -> Arc<Histogram> {
+    histogram("cvlr_score_batch_seconds", "seconds evaluating one score-service batch of misses")
+}
+
+/// Latency of one GES sweep iteration (forward or backward).
+pub fn ges_sweep_seconds() -> Arc<Histogram> {
+    histogram("cvlr_ges_sweep_seconds", "seconds per GES sweep iteration (collect + score + apply)")
+}
+
+/// Latency of one downdated fold-core build (`SetCores::build`).
+pub fn fold_core_build_seconds() -> Arc<Histogram> {
+    histogram("cvlr_fold_core_build_seconds", "seconds per downdated fold-core build of one set")
+}
+
+/// Latency of one low-rank factorization (`lowrank::factorize`).
+pub fn factorize_seconds() -> Arc<Histogram> {
+    histogram("cvlr_factorize_seconds", "seconds per low-rank kernel factorization")
+}
+
+/// Latency of one streaming chunk append (`StreamBackend::append`).
+pub fn stream_append_seconds() -> Arc<Histogram> {
+    histogram("cvlr_stream_append_seconds", "seconds per streaming chunk append across states")
+}
+
+pub fn requests_total() -> Arc<Counter> {
+    counter("cvlr_requests_total", "score requests seen by score services")
+}
+
+pub fn cache_hits_total() -> Arc<Counter> {
+    counter("cvlr_cache_hits_total", "score requests answered from the memo cache")
+}
+
+pub fn evaluations_total() -> Arc<Counter> {
+    counter("cvlr_evaluations_total", "score requests evaluated by a backend")
+}
+
+pub fn dedup_skips_total() -> Arc<Counter> {
+    counter("cvlr_dedup_skips_total", "duplicate in-batch score requests skipped")
+}
+
+pub fn shard_dispatches_total() -> Arc<Counter> {
+    counter("cvlr_shard_dispatches_total", "sub-batches dispatched to followers")
+}
+
+pub fn shard_retries_total() -> Arc<Counter> {
+    counter("cvlr_shard_retries_total", "sub-batch re-dispatches after a failure")
+}
+
+pub fn shard_hedges_total() -> Arc<Counter> {
+    counter("cvlr_shard_hedges_total", "straggler sub-batches hedged to a second follower")
+}
+
+pub fn shard_degraded_total() -> Arc<Counter> {
+    counter("cvlr_shard_degraded_total", "sub-batches degraded to local scoring")
+}
+
+pub fn shard_failures_total() -> Arc<Counter> {
+    counter("cvlr_shard_failures_total", "failed follower requests (timeouts, errors)")
+}
+
+pub fn stream_repivots_total() -> Arc<Counter> {
+    counter("cvlr_stream_repivots_total", "full re-pivots forced by the appended-residual budget")
+}
+
+/// Touch every well-known series so the exposition carries the full
+/// schema even before any traffic. Called by the `/v1/metrics` handler.
+pub fn register_defaults() {
+    let _ = score_batch_seconds();
+    let _ = ges_sweep_seconds();
+    let _ = fold_core_build_seconds();
+    let _ = factorize_seconds();
+    let _ = stream_append_seconds();
+    let _ = requests_total();
+    let _ = cache_hits_total();
+    let _ = evaluations_total();
+    let _ = dedup_skips_total();
+    let _ = shard_dispatches_total();
+    let _ = shard_retries_total();
+    let _ = shard_hedges_total();
+    let _ = shard_degraded_total();
+    let _ = shard_failures_total();
+    let _ = stream_repivots_total();
+}
+
+/// Render the registry in Prometheus text exposition format
+/// (deterministic: series sorted by name, counters → gauges →
+/// histograms). Histogram buckets are cumulative with `le` labels and
+/// a final `+Inf`, followed by `_sum` and `_count`.
+pub fn render() -> String {
+    let reg = registry();
+    let mut out = String::new();
+    for (name, c) in reg.counters.lock().unwrap().iter() {
+        out.push_str(&format!("# HELP {name} {}\n# TYPE {name} counter\n", c.help));
+        out.push_str(&format!("{name} {}\n", c.get()));
+    }
+    for (name, g) in reg.gauges.lock().unwrap().iter() {
+        out.push_str(&format!("# HELP {name} {}\n# TYPE {name} gauge\n", g.help));
+        out.push_str(&format!("{name} {}\n", g.get()));
+    }
+    for (name, h) in reg.histograms.lock().unwrap().iter() {
+        out.push_str(&format!("# HELP {name} {}\n# TYPE {name} histogram\n", h.help));
+        let mut cum = 0u64;
+        for (edge, count) in h.edges.iter().zip(h.bucket_counts()) {
+            cum += count;
+            out.push_str(&format!("{name}_bucket{{le=\"{edge}\"}} {cum}\n"));
+        }
+        cum += h.bucket_counts().last().copied().unwrap_or(0);
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        out.push_str(&format!("{name}_sum {}\n", h.sum()));
+        out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_le_inclusive() {
+        let h = Histogram::new("test", vec![0.001, 0.01, 0.1]);
+        // a value exactly on an edge belongs to that edge's bucket
+        assert_eq!(h.bucket_index(0.001), 0);
+        assert_eq!(h.bucket_index(0.01), 1);
+        assert_eq!(h.bucket_index(0.1), 2);
+        // zero (and anything below the first edge) lands in bucket 0
+        assert_eq!(h.bucket_index(0.0), 0);
+        assert_eq!(h.bucket_index(1e-300), 0);
+        // just past an edge spills into the next bucket
+        assert_eq!(h.bucket_index(0.0100000001), 2);
+        // huge values land in the implicit +Inf bucket
+        assert_eq!(h.bucket_index(1e9), 3);
+        assert_eq!(h.bucket_index(f64::INFINITY), 3);
+    }
+
+    #[test]
+    fn latency_edges_are_exact_powers_of_two_microseconds() {
+        let edges = latency_edges();
+        assert_eq!(edges.len(), 28);
+        assert_eq!(edges[0], 1e-6);
+        // power-of-two scaling is exact in f64, so a value computed the
+        // same way observes into its own edge bucket
+        let h = Histogram::new("test", edges.clone());
+        for (i, &e) in edges.iter().enumerate() {
+            assert_eq!(h.bucket_index(e), i, "edge {e} must be le-inclusive");
+            assert_eq!(e, 1e-6 * (1u64 << i) as f64);
+        }
+        assert!(edges[27] > 100.0, "top edge covers >100s stages");
+    }
+
+    #[test]
+    fn observe_tracks_sum_count_and_quantiles() {
+        let h = Histogram::new("test", vec![0.1, 1.0, 10.0]);
+        for v in [0.05, 0.05, 0.05, 0.5, 0.5, 0.5, 0.5, 0.5, 5.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.bucket_counts(), vec![3, 5, 1, 1]);
+        assert!((h.sum() - (0.15 + 2.5 + 105.0)).abs() < 1e-12);
+        // quantiles resolve to bucket upper edges
+        assert_eq!(h.quantile(0.5), 1.0, "5th sample sits in the le=1 bucket");
+        assert_eq!(h.quantile(0.9), 10.0);
+        assert_eq!(h.quantile(1.0), f64::INFINITY, "the max landed past the last edge");
+        let empty = Histogram::new("test", vec![1.0]);
+        assert_eq!(empty.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn registry_get_or_register_returns_same_series() {
+        let a = counter("test_metrics_same_series_total", "a");
+        let b = counter("test_metrics_same_series_total", "b");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "both handles hit one underlying counter");
+        let g = gauge("test_metrics_same_gauge", "g");
+        g.set(2.5);
+        assert_eq!(gauge("test_metrics_same_gauge", "g").get(), 2.5);
+        let h = histogram("test_metrics_same_seconds", "h");
+        h.observe(0.5);
+        assert_eq!(histogram("test_metrics_same_seconds", "h").count(), 1);
+    }
+
+    /// Golden exposition block for one histogram (values chosen exactly
+    /// representable so the rendered text is deterministic).
+    #[test]
+    fn prometheus_exposition_golden() {
+        let h = histogram_with_edges("test_golden_demo_seconds", "demo histogram", vec![0.1, 1.0]);
+        h.observe(0.0625);
+        h.observe(0.5);
+        h.observe(3.0);
+        let rendered = render();
+        let block: Vec<&str> =
+            rendered.lines().filter(|l| l.contains("test_golden_demo_seconds")).collect();
+        assert_eq!(
+            block,
+            vec![
+                "# HELP test_golden_demo_seconds demo histogram",
+                "# TYPE test_golden_demo_seconds histogram",
+                "test_golden_demo_seconds_bucket{le=\"0.1\"} 1",
+                "test_golden_demo_seconds_bucket{le=\"1\"} 2",
+                "test_golden_demo_seconds_bucket{le=\"+Inf\"} 3",
+                "test_golden_demo_seconds_sum 3.5625",
+                "test_golden_demo_seconds_count 3",
+            ]
+        );
+    }
+
+    /// Parse-back round trip: the exposition must be line-parseable
+    /// (name{labels} value), histogram buckets cumulative and
+    /// consistent with _count.
+    #[test]
+    fn prometheus_exposition_parses_back() {
+        let c = counter("test_parseback_hits_total", "hits");
+        c.add(7);
+        let h = histogram("test_parseback_lat_seconds", "lat");
+        h.observe(0.002);
+        h.observe(0.004);
+        h.observe(900.0); // +Inf bucket
+        let rendered = render();
+        let mut counter_val = None;
+        let mut buckets: Vec<(String, u64)> = Vec::new();
+        let mut count_val = None;
+        for line in rendered.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (series, value) = line.rsplit_once(' ').expect("every sample line is `name value`");
+            if series == "test_parseback_hits_total" {
+                counter_val = Some(value.parse::<u64>().unwrap());
+            } else if let Some(rest) = series.strip_prefix("test_parseback_lat_seconds_bucket") {
+                let le = rest
+                    .strip_prefix("{le=\"")
+                    .and_then(|s| s.strip_suffix("\"}"))
+                    .expect("bucket lines carry exactly the le label");
+                buckets.push((le.to_string(), value.parse().unwrap()));
+            } else if series == "test_parseback_lat_seconds_count" {
+                count_val = Some(value.parse::<u64>().unwrap());
+            }
+        }
+        assert_eq!(counter_val, Some(7));
+        assert_eq!(count_val, Some(3));
+        assert_eq!(buckets.len(), latency_edges().len() + 1);
+        assert_eq!(buckets.last().unwrap().0, "+Inf");
+        assert_eq!(buckets.last().unwrap().1, 3, "+Inf bucket equals _count");
+        for w in buckets.windows(2) {
+            assert!(w[0].1 <= w[1].1, "cumulative buckets are monotone");
+        }
+        // the two 2–4ms observations land before 900s does
+        let le8ms = buckets.iter().find(|(le, _)| le.starts_with("0.004")).unwrap();
+        assert_eq!(le8ms.1, 2);
+    }
+}

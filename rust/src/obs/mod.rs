@@ -1,0 +1,25 @@
+//! Observability — the process-wide evidence layer behind the paper's
+//! asymptotic claims: where a discover run actually spends its time.
+//!
+//! Two std-only halves:
+//!
+//! * [`trace`] — a lock-cheap span recorder at **stage** granularity
+//!   (GES sweep → score batch → fold-core Gram build → factorization;
+//!   stream append/re-pivot; shard dispatch/retry/hedge), exported as
+//!   Chrome trace-event JSON that loads in Perfetto /
+//!   `chrome://tracing`. Reached through `GET /v1/trace` and
+//!   `cvlr ... --trace-out file.json`. Follower per-batch timings ride
+//!   back on `POST /v1/score_batch` replies and merge into the
+//!   coordinator trace, so one view shows the whole fleet.
+//! * [`metrics`] — a process-global registry of counters, gauges and
+//!   log-bucketed latency histograms rendered in Prometheus text
+//!   exposition format at `GET /v1/metrics`.
+//!
+//! Overhead discipline: with no sink attached (tracing disabled, no
+//! capture in flight) every span call site is one relaxed atomic load
+//! and an early return — no clock read, no allocation. Metrics are
+//! always-on relaxed-atomic bumps, but only at stage granularity (once
+//! per batch/build/sweep), never per score.
+
+pub mod metrics;
+pub mod trace;

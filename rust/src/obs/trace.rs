@@ -1,0 +1,561 @@
+//! Lock-cheap span recorder with Chrome trace-event export.
+//!
+//! Spans are recorded at **stage** granularity (one GES sweep, one
+//! score batch, one fold-core build, one factorization, one shard
+//! dispatch — never one score) by RAII guards from [`span`]. Guards
+//! buffer completed events in a thread-local vector and flush to a
+//! bounded global ring under one short lock — either when the buffer
+//! grows past [`FLUSH_AT`] or when the thread's span nesting returns to
+//! zero, so quiescent threads are always fully flushed.
+//!
+//! **Cost with no sink attached**: [`span`]/[`instant`] load two
+//! relaxed atomics and return — no clock read, no allocation, no lock.
+//! A sink is attached either globally ([`enable`], set by `--trace-out`
+//! and the first `GET /v1/trace`) or per-thread ([`capture`], used by
+//! the follower side of `POST /v1/score_batch` to collect the stage
+//! timings of one request without turning global tracing on).
+//!
+//! **Fleet merge**: follower captures come back over the wire
+//! (re-based to the capture start) and re-enter the coordinator's ring
+//! through [`record_remote`] with a per-follower synthetic pid from
+//! [`remote_pid`], so [`export_json`] renders coordinator and follower
+//! stages on one Perfetto timeline.
+//!
+//! The export is the Chrome trace-event JSON object form
+//! (`{"traceEvents": [...]}`) with complete (`ph:"X"`) and instant
+//! (`ph:"i"`) events plus `process_name`/`thread_name` metadata —
+//! loadable in Perfetto and `chrome://tracing`.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::server::json::Json;
+
+/// Ring-buffer capacity: the oldest events fall off first.
+const RING_CAP: usize = 65536;
+/// Thread-local buffer size that forces a flush mid-nesting.
+const FLUSH_AT: usize = 32;
+
+/// Global sink flag (`--trace-out`, `GET /v1/trace`).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Number of in-flight per-thread captures; non-zero keeps the span
+/// path live even when the global sink is off.
+static CAPTURES: AtomicUsize = AtomicUsize::new(0);
+/// Trace-local thread-id allocator (small ints, not OS tids).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// One completed trace event. `ts_us` is microseconds since the
+/// process trace epoch ([`epoch`]); remote events are re-based by the
+/// coordinator before they get here.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: String,
+    pub cat: String,
+    pub ts_us: u64,
+    /// 0 for instants.
+    pub dur_us: u64,
+    /// 1 = this process; 2+ = remote followers (see [`remote_pid`]).
+    pub pid: u64,
+    pub tid: u64,
+    /// Chrome phase `i` (instant) instead of `X` (complete span).
+    pub instant: bool,
+    pub args: Vec<(String, String)>,
+}
+
+struct CaptureBuf {
+    start: Instant,
+    events: Vec<SpanEvent>,
+}
+
+struct LocalState {
+    tid: u64,
+    /// Open [`SpanGuard`] nesting depth on this thread.
+    depth: usize,
+    /// Completed events awaiting a ring flush.
+    buf: Vec<SpanEvent>,
+    capture: Option<CaptureBuf>,
+}
+
+impl LocalState {
+    fn new() -> LocalState {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current().name().unwrap_or("thread").to_string();
+        thread_names().lock().unwrap().push((tid, name));
+        LocalState { tid, depth: 0, buf: Vec::new(), capture: None }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalState> = RefCell::new(LocalState::new());
+}
+
+/// The process trace epoch: every local `ts_us` counts from here.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ring() -> &'static Mutex<VecDeque<SpanEvent>> {
+    static RING: OnceLock<Mutex<VecDeque<SpanEvent>>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// (tid, thread name) pairs, in tid-assignment order.
+fn thread_names() -> &'static Mutex<Vec<(u64, String)>> {
+    static NAMES: OnceLock<Mutex<Vec<(u64, String)>>> = OnceLock::new();
+    NAMES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Follower addresses seen by [`remote_pid`], index i ↔ pid i + 2.
+fn remote_addrs() -> &'static Mutex<Vec<String>> {
+    static ADDRS: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    ADDRS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Is any sink attached? Two relaxed loads — the entire cost of a
+/// disabled span call site.
+fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed) || CAPTURES.load(Ordering::Relaxed) != 0
+}
+
+/// Attach the global sink (idempotent). Pins the epoch so spans that
+/// start before the first export still get consistent timestamps.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drop every buffered event (test isolation).
+pub fn clear() {
+    ring().lock().unwrap().clear();
+}
+
+fn push_ring(batch: Vec<SpanEvent>) {
+    let mut r = ring().lock().unwrap();
+    for ev in batch {
+        if r.len() == RING_CAP {
+            r.pop_front();
+        }
+        r.push_back(ev);
+    }
+}
+
+/// Route one completed event: into the thread's capture (when one is
+/// in flight) and/or the global ring (when enabled).
+fn record(ev: SpanEvent) {
+    LOCAL.with(|cell| {
+        let mut l = cell.borrow_mut();
+        let captured = if let Some(cap) = l.capture.as_mut() {
+            cap.events.push(ev.clone());
+            true
+        } else {
+            false
+        };
+        if !ENABLED.load(Ordering::Relaxed) {
+            let _ = captured; // capture-only sink: nothing for the ring
+            return;
+        }
+        l.buf.push(ev);
+        if l.depth == 0 || l.buf.len() >= FLUSH_AT {
+            let batch = std::mem::take(&mut l.buf);
+            drop(l);
+            push_ring(batch);
+        }
+    });
+}
+
+/// RAII span: records one complete (`ph:"X"`) event on drop. Inert
+/// (and cost-free beyond the [`active`] check) with no sink attached.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+struct LiveSpan {
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    args: Vec<(String, String)>,
+}
+
+/// Open a stage span. Drop the guard at the end of the stage.
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    if !active() {
+        return SpanGuard { live: None };
+    }
+    let _ = epoch();
+    LOCAL.with(|cell| cell.borrow_mut().depth += 1);
+    SpanGuard { live: Some(LiveSpan { name, cat, start: Instant::now(), args: Vec::new() }) }
+}
+
+impl SpanGuard {
+    /// Attach a key/value argument (shown in the Perfetto detail pane).
+    pub fn arg(mut self, key: &str, value: impl Into<String>) -> SpanGuard {
+        if let Some(live) = self.live.as_mut() {
+            live.args.push((key.to_string(), value.into()));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(live) = self.live.take() else { return };
+        let dur_us = live.start.elapsed().as_micros() as u64;
+        let ts_us = live.start.checked_duration_since(epoch()).unwrap_or_default().as_micros() as u64;
+        let (tid, _) = LOCAL.with(|cell| {
+            let mut l = cell.borrow_mut();
+            l.depth = l.depth.saturating_sub(1);
+            (l.tid, ())
+        });
+        record(SpanEvent {
+            name: live.name.to_string(),
+            cat: live.cat.to_string(),
+            ts_us,
+            dur_us,
+            pid: 1,
+            tid,
+            instant: false,
+            args: live.args,
+        });
+    }
+}
+
+/// Record a zero-duration instant event (`ph:"i"`) — used for
+/// point-in-time facts like a hedge firing or a re-pivot.
+pub fn instant(name: &'static str, cat: &'static str, args: Vec<(String, String)>) {
+    if !active() {
+        return;
+    }
+    let ts_us = epoch().elapsed().as_micros() as u64;
+    let tid = LOCAL.with(|cell| cell.borrow().tid);
+    record(SpanEvent {
+        name: name.to_string(),
+        cat: cat.to_string(),
+        ts_us,
+        dur_us: 0,
+        pid: 1,
+        tid,
+        instant: true,
+        args,
+    });
+}
+
+/// Microseconds since the trace epoch of an [`Instant`] taken by the
+/// caller (used to re-base follower timings at their dispatch time).
+pub fn instant_us(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).unwrap_or_default().as_micros() as u64
+}
+
+/// A per-thread capture: collects every span completed on this thread
+/// until [`Capture::finish`], independent of the global sink. The
+/// follower side of `POST /v1/score_batch` wraps its evaluation in one
+/// of these to ship stage timings back to the coordinator.
+pub struct Capture {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+/// Start capturing this thread's spans. Keeps the span path live even
+/// with global tracing off.
+pub fn capture() -> Capture {
+    CAPTURES.fetch_add(1, Ordering::Relaxed);
+    let _ = epoch();
+    LOCAL.with(|cell| {
+        cell.borrow_mut().capture = Some(CaptureBuf { start: Instant::now(), events: Vec::new() })
+    });
+    Capture { _not_send: std::marker::PhantomData }
+}
+
+impl Capture {
+    /// Stop capturing and return the events, timestamps re-based to
+    /// the capture start (wire-friendly: the coordinator re-bases them
+    /// again onto its own dispatch time).
+    pub fn finish(self) -> Vec<SpanEvent> {
+        let buf = LOCAL.with(|cell| cell.borrow_mut().capture.take());
+        let Some(buf) = buf else { return Vec::new() };
+        let start_us = buf.start.checked_duration_since(epoch()).unwrap_or_default().as_micros()
+            as u64;
+        buf.events
+            .into_iter()
+            .map(|mut ev| {
+                ev.ts_us = ev.ts_us.saturating_sub(start_us);
+                ev
+            })
+            .collect()
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        LOCAL.with(|cell| cell.borrow_mut().capture = None);
+        CAPTURES.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Stable synthetic pid for a follower address (2, 3, … in first-seen
+/// order; pid 1 is this process).
+pub fn remote_pid(addr: &str) -> u64 {
+    let mut addrs = remote_addrs().lock().unwrap();
+    if let Some(i) = addrs.iter().position(|a| a == addr) {
+        i as u64 + 2
+    } else {
+        addrs.push(addr.to_string());
+        addrs.len() as u64 + 1
+    }
+}
+
+/// Merge an already-timed event (a follower stage span, re-based by
+/// the caller) straight into the ring. No-op when tracing is off.
+pub fn record_remote(ev: SpanEvent) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    push_ring(vec![ev]);
+}
+
+fn event_json(ev: &SpanEvent) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(ev.name.clone())),
+        ("cat", Json::str(ev.cat.clone())),
+        ("ph", Json::str(if ev.instant { "i" } else { "X" })),
+        ("ts", Json::Num(ev.ts_us as f64)),
+    ];
+    if ev.instant {
+        // thread-scoped instant marker
+        fields.push(("s", Json::str("t")));
+    } else {
+        fields.push(("dur", Json::Num(ev.dur_us as f64)));
+    }
+    fields.push(("pid", Json::Num(ev.pid as f64)));
+    fields.push(("tid", Json::Num(ev.tid as f64)));
+    if !ev.args.is_empty() {
+        let args: Vec<(&str, Json)> =
+            ev.args.iter().map(|(k, v)| (k.as_str(), Json::str(v.clone()))).collect();
+        fields.push(("args", Json::obj(args)));
+    }
+    Json::obj(fields)
+}
+
+fn metadata_json(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::Num(pid as f64)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(value))])),
+    ])
+}
+
+/// Snapshot the ring as one Chrome trace-event JSON document
+/// (Perfetto/`chrome://tracing` loadable). Metadata events name every
+/// process (pid 1 plus each follower) and every thread referenced by
+/// at least one event.
+pub fn export_json() -> String {
+    let events: Vec<SpanEvent> = ring().lock().unwrap().iter().cloned().collect();
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + 16);
+    out.push(metadata_json("process_name", 1, 0, "cvlr"));
+    for (i, addr) in remote_addrs().lock().unwrap().iter().enumerate() {
+        out.push(metadata_json(
+            "process_name",
+            i as u64 + 2,
+            0,
+            &format!("follower {addr}"),
+        ));
+    }
+    // thread_name metadata for every (pid, tid) the events reference:
+    // recorded names for local threads, a generic label for remote ones
+    let names = thread_names().lock().unwrap().clone();
+    let mut seen: Vec<(u64, u64)> = Vec::new();
+    for ev in &events {
+        if !seen.contains(&(ev.pid, ev.tid)) {
+            seen.push((ev.pid, ev.tid));
+        }
+    }
+    seen.sort_unstable();
+    for (pid, tid) in seen {
+        let label = if pid == 1 {
+            names
+                .iter()
+                .find(|(t, _)| *t == tid)
+                .map(|(_, n)| n.clone())
+                .unwrap_or_else(|| format!("thread {tid}"))
+        } else {
+            format!("worker {tid}")
+        };
+        out.push(metadata_json("thread_name", pid, tid, &label));
+    }
+    out.extend(events.iter().map(event_json));
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .encode()
+}
+
+/// The recorder is process-global: any unit test that toggles
+/// [`enable`]/[`disable`] or reads the ring must hold this lock so
+/// parallel tests cannot see each other's events (server `/v1/trace`
+/// tests share it too).
+#[cfg(test)]
+pub(crate) fn test_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::json;
+
+    fn events_of(doc: &Json) -> Vec<Json> {
+        doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array").to_vec()
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let _guard = test_lock().lock().unwrap();
+        disable();
+        clear();
+        {
+            let _s = span("test-never-recorded", "test");
+        }
+        instant("test-never-recorded-instant", "test", Vec::new());
+        let doc = json::parse(&export_json()).unwrap();
+        assert!(
+            !events_of(&doc).iter().any(|e| {
+                e.get("name").and_then(Json::as_str).is_some_and(|n| n.starts_with("test-never"))
+            }),
+            "no sink attached: nothing may be recorded"
+        );
+    }
+
+    #[test]
+    fn spans_export_as_complete_events_with_metadata() {
+        let _guard = test_lock().lock().unwrap();
+        disable();
+        clear();
+        enable();
+        {
+            let _outer = span("test-outer", "test").arg("k", "v");
+            let _inner = span("test-inner", "test");
+        }
+        instant("test-mark", "test", vec![("why".to_string(), "because".to_string())]);
+        disable();
+        let doc = json::parse(&export_json()).unwrap();
+        let events = events_of(&doc);
+        let find = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("event `{name}` missing"))
+                .clone()
+        };
+        let outer = find("test-outer");
+        let inner = find("test-inner");
+        for ev in [&outer, &inner] {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"), "complete span");
+            assert!(ev.get("dur").and_then(Json::as_u64).is_some());
+            assert!(ev.get("ts").and_then(Json::as_u64).is_some());
+        }
+        // inner nests inside outer on the same thread
+        assert_eq!(outer.get("tid").unwrap(), inner.get("tid").unwrap());
+        let (o_ts, o_dur) = (
+            outer.get("ts").and_then(Json::as_u64).unwrap(),
+            outer.get("dur").and_then(Json::as_u64).unwrap(),
+        );
+        let i_ts = inner.get("ts").and_then(Json::as_u64).unwrap();
+        assert!(o_ts <= i_ts && i_ts <= o_ts + o_dur, "inner starts inside outer");
+        assert_eq!(
+            outer.get("args").and_then(|a| a.get("k")).and_then(Json::as_str),
+            Some("v")
+        );
+        let mark = find("test-mark");
+        assert_eq!(mark.get("ph").and_then(Json::as_str), Some("i"));
+        // every referenced (pid, tid) has thread_name metadata
+        for ev in &events {
+            if ev.get("ph").and_then(Json::as_str) != Some("X") {
+                continue;
+            }
+            let pid = ev.get("pid").and_then(Json::as_u64).unwrap();
+            let tid = ev.get("tid").and_then(Json::as_u64).unwrap();
+            assert!(
+                events.iter().any(|m| {
+                    m.get("ph").and_then(Json::as_str) == Some("M")
+                        && m.get("name").and_then(Json::as_str) == Some("thread_name")
+                        && m.get("pid").and_then(Json::as_u64) == Some(pid)
+                        && m.get("tid").and_then(Json::as_u64) == Some(tid)
+                }),
+                "thread ({pid},{tid}) must carry thread_name metadata"
+            );
+        }
+        clear();
+    }
+
+    #[test]
+    fn capture_collects_thread_events_rebased_without_global_sink() {
+        let _guard = test_lock().lock().unwrap();
+        disable();
+        clear();
+        let cap = capture();
+        {
+            let _s = span("test-captured", "test");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let events = cap.finish();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "test-captured");
+        assert!(events[0].dur_us >= 1000, "the 2ms sleep is inside the span");
+        assert!(events[0].ts_us < 1_000_000, "timestamps are re-based to the capture start");
+        // the global ring stayed empty — the sink was never attached
+        let doc = json::parse(&export_json()).unwrap();
+        assert!(!events_of(&doc)
+            .iter()
+            .any(|e| e.get("name").and_then(Json::as_str) == Some("test-captured")));
+    }
+
+    #[test]
+    fn remote_events_merge_under_their_follower_pid() {
+        let _guard = test_lock().lock().unwrap();
+        disable();
+        clear();
+        enable();
+        let pid = remote_pid("127.0.0.1:7991");
+        assert!(pid >= 2);
+        assert_eq!(remote_pid("127.0.0.1:7991"), pid, "pid is stable per address");
+        record_remote(SpanEvent {
+            name: "test-remote-build".to_string(),
+            cat: "score".to_string(),
+            ts_us: 100,
+            dur_us: 50,
+            pid,
+            tid: 1,
+            instant: false,
+            args: Vec::new(),
+        });
+        disable();
+        let doc = json::parse(&export_json()).unwrap();
+        let events = events_of(&doc);
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("test-remote-build"))
+            .expect("merged remote event");
+        assert_eq!(ev.get("pid").and_then(Json::as_u64), Some(pid));
+        // the follower process is named in metadata
+        assert!(events.iter().any(|m| {
+            m.get("ph").and_then(Json::as_str) == Some("M")
+                && m.get("name").and_then(Json::as_str) == Some("process_name")
+                && m.get("pid").and_then(Json::as_u64) == Some(pid)
+        }));
+        clear();
+    }
+}

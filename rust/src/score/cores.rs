@@ -244,6 +244,9 @@ impl SetCores {
     /// gated) sum to the full Gram, and every centered core is an
     /// O(m²) downdate + rank-one correction of them.
     pub fn build(lam: &Mat, folds: &[(Vec<usize>, Vec<usize>)], threads: usize) -> SetCores {
+        let _span = crate::obs::trace::span("fold-core-build", "score")
+            .arg("m", lam.cols.to_string());
+        let sw = crate::util::Stopwatch::start();
         let m = lam.cols;
         let q = folds.len();
         assert!(q >= 2, "need at least 2 folds");
@@ -303,6 +306,7 @@ impl SetCores {
             train_mean.push(mu);
             sizes.push((n0, n1));
         }
+        crate::obs::metrics::fold_core_build_seconds().observe(sw.secs());
         SetCores {
             test_blocks,
             test_colsum,
@@ -352,6 +356,7 @@ pub struct PairCores {
 /// Both must have been built over the same fold assignment (the
 /// provider guarantees it — folds are a function of (n, Q) only).
 pub fn pair_cores(z: &SetCores, x: &SetCores, threads: usize) -> PairCores {
+    let _span = crate::obs::trace::span("pair-cores", "score");
     let q = z.num_folds();
     assert_eq!(q, x.num_folds(), "pair_cores needs matching fold counts");
     let (mz, mx) = (z.cols(), x.cols());

@@ -313,6 +313,8 @@ pub fn score_segment_with<K: CvLrKernel + ?Sized>(
     pairs: &PairCoreCache,
     parallelism: usize,
 ) -> Vec<f64> {
+    let _span = crate::obs::trace::span("score-segment", "score")
+        .arg("requests", reqs.len().to_string());
     // Unique variable sets referenced by the batch: every target
     // singleton plus every non-empty parent set.
     let mut sets: Vec<Vec<usize>> = Vec::with_capacity(2 * reqs.len());

@@ -172,6 +172,15 @@ pub trait ScoreBackend: Send + Sync {
     fn follower_stats(&self) -> Vec<FollowerStat> {
         Vec::new()
     }
+
+    /// `(total re-pivots, appended-residual level summed over live
+    /// factor states)` of a streaming backend (`stream::StreamBackend`),
+    /// `None` otherwise. Surfaced through `ServiceStats::stream_*` and
+    /// `/v1/stats` — the observables the adaptive re-tune roadmap item
+    /// watches.
+    fn stream_stats(&self) -> Option<(u64, f64)> {
+        None
+    }
 }
 
 /// Adapter turning any scalar [`LocalScore`] into a (serial)

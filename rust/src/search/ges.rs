@@ -25,6 +25,7 @@
 //! Dor–Tarsi consistent extension + Chickering edge labeling.
 
 use crate::graph::pdag::{dag_to_cpdag, Pdag};
+use crate::obs::{metrics, trace};
 use crate::score::{ScoreBackend, ScoreRequest};
 
 /// GES configuration.
@@ -194,6 +195,8 @@ fn forward_phase<B: ScoreBackend + ?Sized>(
     let d = state.d;
     let mut steps = 0usize;
     loop {
+        let sweep = trace::span("ges-forward-sweep", "search");
+        let sw = crate::util::Stopwatch::start();
         // collect every valid Insert(x, y, T) of this sweep
         let mut cands: Vec<Candidate> = vec![];
         for y in 0..d {
@@ -235,21 +238,27 @@ fn forward_phase<B: ScoreBackend + ?Sized>(
         if cands.is_empty() {
             break;
         }
+        let _sweep = sweep.arg("candidates", cands.len().to_string());
         // one wide batch per sweep
         *score_calls += 2 * cands.len();
         *batches += 1;
-        match best_candidate(backend, &cands, true, cfg.min_improvement) {
-            Some(i) => {
-                // apply Insert(x, y, T)
-                let c = &cands[i];
-                state.add_directed(c.x, c.y);
-                for &t in &c.set {
-                    state.orient(t, c.y);
-                }
-                *state = recomplete(state);
-                steps += 1;
+        let best = best_candidate(backend, &cands, true, cfg.min_improvement);
+        let applied = if let Some(i) = best {
+            // apply Insert(x, y, T)
+            let c = &cands[i];
+            state.add_directed(c.x, c.y);
+            for &t in &c.set {
+                state.orient(t, c.y);
             }
-            None => break,
+            *state = recomplete(state);
+            steps += 1;
+            true
+        } else {
+            false
+        };
+        metrics::ges_sweep_seconds().observe(sw.secs());
+        if !applied {
+            break;
         }
     }
     steps
@@ -268,6 +277,8 @@ fn backward_phase<B: ScoreBackend + ?Sized>(
     let d = state.d;
     let mut steps = 0usize;
     loop {
+        let sweep = trace::span("ges-backward-sweep", "search");
+        let sw = crate::util::Stopwatch::start();
         let mut cands: Vec<Candidate> = vec![];
         for y in 0..d {
             let pa_y = state.parents(y);
@@ -293,25 +304,31 @@ fn backward_phase<B: ScoreBackend + ?Sized>(
         if cands.is_empty() {
             break;
         }
+        let _sweep = sweep.arg("candidates", cands.len().to_string());
         *score_calls += 2 * cands.len();
         *batches += 1;
-        match best_candidate(backend, &cands, false, cfg.min_improvement) {
-            Some(i) => {
-                // apply Delete(x, y, H)
-                let c = &cands[i];
-                state.remove_edge(c.x, c.y);
-                for &h in &c.set {
-                    if state.undirected(c.y, h) {
-                        state.orient(c.y, h);
-                    }
-                    if state.undirected(c.x, h) {
-                        state.orient(c.x, h);
-                    }
+        let best = best_candidate(backend, &cands, false, cfg.min_improvement);
+        let applied = if let Some(i) = best {
+            // apply Delete(x, y, H)
+            let c = &cands[i];
+            state.remove_edge(c.x, c.y);
+            for &h in &c.set {
+                if state.undirected(c.y, h) {
+                    state.orient(c.y, h);
                 }
-                *state = recomplete(state);
-                steps += 1;
+                if state.undirected(c.x, h) {
+                    state.orient(c.x, h);
+                }
             }
-            None => break,
+            *state = recomplete(state);
+            steps += 1;
+            true
+        } else {
+            false
+        };
+        metrics::ges_sweep_seconds().observe(sw.secs());
+        if !applied {
+            break;
         }
     }
     steps

@@ -60,15 +60,22 @@ impl Request {
     }
 }
 
-/// A JSON response (every endpoint speaks JSON, including errors).
+/// A response. Every endpoint speaks JSON (including errors) except
+/// `/v1/metrics`, which serves the Prometheus text exposition format.
 pub struct Response {
     pub status: u16,
     pub body: String,
+    pub content_type: &'static str,
 }
 
 impl Response {
     pub fn json(status: u16, body: &Json) -> Response {
-        Response { status, body: body.encode() }
+        Response { status, body: body.encode(), content_type: "application/json" }
+    }
+
+    /// A non-JSON body with an explicit content type.
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response { status, body, content_type }
     }
 
     /// `{"error": msg}` with the given status.
@@ -267,9 +274,10 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
 fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> Result<()> {
     let connection = if keep_alive { "keep-alive" } else { "close" };
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
         resp.status,
         reason(resp.status),
+        resp.content_type,
         resp.body.len()
     );
     stream.write_all(head.as_bytes()).context("writing response head")?;
@@ -286,6 +294,19 @@ pub fn request(
     path: &str,
     body: Option<&Json>,
 ) -> Result<(u16, Json)> {
+    let (status, text) = request_raw(addr, method, path, body)?;
+    let value = if text.trim().is_empty() { Json::Null } else { json::parse(&text)? };
+    Ok((status, value))
+}
+
+/// Like [`request`], but returns the response body verbatim — for
+/// endpoints that do not speak JSON (`/v1/metrics`).
+pub fn request_raw(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> Result<(u16, String)> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
@@ -309,6 +330,5 @@ pub fn request(
         .and_then(|s| s.parse().ok())
         .with_context(|| format!("bad status line `{status_line}`"))?;
     let body_text = std::str::from_utf8(&raw[head_end + 4..]).context("response body not UTF-8")?;
-    let value = if body_text.trim().is_empty() { Json::Null } else { json::parse(body_text)? };
-    Ok((status, value))
+    Ok((status, body_text.to_string()))
 }

@@ -375,10 +375,19 @@ impl JobManager {
 
     /// Per-service counters of the pool: ((dataset, dataset version,
     /// method, engine, lowrank, shards), stats), sorted by key.
+    ///
+    /// Snapshots the pool under one short lock and calls `stats()`
+    /// afterwards: `stats()` takes each service's backend read lock,
+    /// which a mid-append backend swap can hold — collecting stats
+    /// under the pool lock would stall every `service_for` (and with it
+    /// job submission and follower scoring) behind that swap.
     pub fn service_stats(&self) -> Vec<(ServiceKey, ServiceStats)> {
-        let services = self.services.lock().unwrap();
+        let entries: Vec<(ServiceKey, Arc<ScoreService>)> = {
+            let services = self.services.lock().unwrap();
+            services.iter().map(|(k, e)| (k.clone(), e.service.clone())).collect()
+        };
         let mut out: Vec<(ServiceKey, ServiceStats)> =
-            services.iter().map(|(k, e)| (k.clone(), e.service.stats())).collect();
+            entries.into_iter().map(|(k, svc)| (k, svc.stats())).collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }

@@ -27,7 +27,9 @@
 //! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
 //! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
 //! | `POST /v1/score_batch` | stateless follower-side scoring for the distrib shard protocol: `{"dataset", "version"?, "method", "engine"?, "lowrank"?, "requests": [{"target", "parents"}]}` → `{"scores", "version"}` in request order; `404` for an unknown dataset, `409` on a version-pin mismatch (the coordinator re-pushes and retries) |
-//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions, shard dispatch/retry/hedge/degrade and per-follower health), datasets |
+//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions, shard dispatch/retry/hedge/degrade, stream re-pivot/residual and per-follower health), datasets |
+//! | `GET /v1/metrics` | Prometheus text exposition: process-global stage counters/histograms (`cvlr_*`) plus the `/v1/stats` service counters folded in as aggregate gauges |
+//! | `GET /v1/trace` | Chrome trace-event JSON snapshot of the span ring (Perfetto-loadable); the first scrape attaches the recorder, so traces cover traffic after it |
 //! | `POST /v1/shutdown` | graceful shutdown: stop accepting, drain, cancel jobs |
 //!
 //! Job states: `queued → running → done | failed | cancelled`.
@@ -46,6 +48,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{resolve_method, DiscoveryConfig, EngineKind, MethodKind};
 use crate::lowrank::FactorMethod;
+use crate::obs::{metrics, trace};
 use crate::score::ScoreBackend;
 
 use self::http::{Handler, HttpServer, Request, Response};
@@ -241,6 +244,8 @@ fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
         ("shard_retries", num(st.shard_retries)),
         ("shard_hedges", num(st.shard_hedges)),
         ("shard_degraded", num(st.shard_degraded)),
+        ("stream_repivots", num(st.stream_repivots)),
+        ("stream_residual", Json::Num(st.stream_residual)),
         (
             "followers",
             Json::Arr(
@@ -666,14 +671,21 @@ fn post_score_batch(
         Ok(s) => s,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
+    // capture this thread's stage spans while scoring and ship them back
+    // as the optional `timings` reply field — the coordinator merges
+    // them into its trace under this follower's synthetic pid. Old
+    // coordinators simply ignore the extra field.
+    let cap = trace::capture();
     let scores = service.score_batch(&reqs);
-    Response::json(
-        200,
-        &Json::obj(vec![
-            ("scores", Json::Arr(scores.into_iter().map(Json::Num).collect())),
-            ("version", num(ds_version)),
-        ]),
-    )
+    let timings = cap.finish();
+    let mut fields = vec![
+        ("scores", Json::Arr(scores.into_iter().map(Json::Num).collect())),
+        ("version", num(ds_version)),
+    ];
+    if !timings.is_empty() {
+        fields.push(("timings", crate::distrib::wire::timings_json(&timings)));
+    }
+    Response::json(200, &Json::obj(fields))
 }
 
 fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
@@ -714,6 +726,66 @@ fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
             ("datasets", Json::Arr(datasets)),
         ]),
     )
+}
+
+/// `GET /v1/metrics` — the process-global registry in Prometheus text
+/// exposition format, with the per-service `/v1/stats` counters folded
+/// in as aggregate gauges (gauges, not counters: pool entries are
+/// LRU-evicted and retired, so the aggregates can go down).
+fn get_metrics(manager: &JobManager, registry: &DatasetRegistry) -> Response {
+    metrics::register_defaults();
+    let stats = manager.service_stats();
+    let mut cache_entries = 0u64;
+    let mut core_cache_entries = 0u64;
+    let mut evictions = 0u64;
+    let mut invalidations = 0u64;
+    let mut warm_start_hits = 0u64;
+    let mut eval_seconds = 0.0f64;
+    let mut followers = 0u64;
+    let mut followers_healthy = 0u64;
+    for (_, st) in &stats {
+        cache_entries += st.cache_entries;
+        core_cache_entries += st.core_cache_entries;
+        evictions += st.evictions;
+        invalidations += st.invalidations;
+        warm_start_hits += st.warm_start_hits;
+        eval_seconds += st.eval_seconds;
+        followers += st.followers.len() as u64;
+        followers_healthy += st.followers.iter().filter(|f| f.healthy).count() as u64;
+    }
+    metrics::gauge("cvlr_services", "pooled score services").set(stats.len() as f64);
+    metrics::gauge("cvlr_service_cache_entries", "memoized scores across pooled services")
+        .set(cache_entries as f64);
+    metrics::gauge("cvlr_service_core_cache_entries", "cached fold cores across pooled services")
+        .set(core_cache_entries as f64);
+    metrics::gauge("cvlr_service_evictions", "score-cache evictions across pooled services")
+        .set(evictions as f64);
+    metrics::gauge("cvlr_service_invalidations", "append-invalidated scores across pooled services")
+        .set(invalidations as f64);
+    metrics::gauge("cvlr_service_warm_start_hits", "warm-start CPDAG reuses across pooled services")
+        .set(warm_start_hits as f64);
+    metrics::gauge("cvlr_service_eval_seconds", "seconds spent evaluating across pooled services")
+        .set(eval_seconds);
+    metrics::gauge("cvlr_followers", "followers across pooled sharding services")
+        .set(followers as f64);
+    metrics::gauge("cvlr_followers_healthy", "healthy followers across pooled sharding services")
+        .set(followers_healthy as f64);
+    metrics::gauge("cvlr_datasets", "registered datasets").set(registry.summaries().len() as f64);
+    for (state, count) in manager.state_counts() {
+        metrics::gauge(&format!("cvlr_jobs_{}", state.name()), "jobs in this lifecycle state")
+            .set(count as f64);
+    }
+    Response::text(200, "text/plain; version=0.0.4", metrics::render())
+}
+
+/// `GET /v1/trace` — snapshot the span ring as one Chrome trace-event
+/// JSON document. The first scrape attaches the global recorder
+/// (idempotent), so the very first response may be empty — traces cover
+/// traffic after it. `--trace-out` enables the recorder at startup
+/// instead.
+fn get_trace() -> Response {
+    trace::enable();
+    Response::text(200, "application/json", trace::export_json())
 }
 
 /// Build the route table over the job manager + dataset registry.
@@ -790,6 +862,8 @@ fn build_handler(
                 None => Response::error(400, "job id must be an integer"),
             },
             ("GET", ["v1", "stats"]) => get_stats(&manager, &registry),
+            ("GET", ["v1", "metrics"]) => get_metrics(&manager, &registry),
+            ("GET", ["v1", "trace"]) => get_trace(),
             ("POST", ["v1", "shutdown"]) => {
                 shutdown.store(true, Ordering::SeqCst);
                 Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
@@ -803,7 +877,8 @@ fn build_handler(
             ),
             (_, ["v1", "datasets"]) | (_, ["v1", "datasets", _])
             | (_, ["v1", "datasets", _, "rows"]) | (_, ["v1", "jobs"])
-            | (_, ["v1", "jobs", _]) | (_, ["v1", "score_batch"]) => {
+            | (_, ["v1", "jobs", _]) | (_, ["v1", "score_batch"])
+            | (_, ["v1", "metrics"]) | (_, ["v1", "trace"]) => {
                 Response::error(405, "method not allowed")
             }
             _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),

@@ -361,6 +361,12 @@ impl FactorState {
     /// Full refactorization over all rows with the pinned kernel —
     /// identical to a cold `FactorState::new` on the same block.
     fn repivot(&mut self, full: &Mat) {
+        crate::obs::metrics::stream_repivots_total().inc();
+        crate::obs::trace::instant(
+            "re-pivot",
+            "stream",
+            vec![("residual".to_string(), format!("{:.3e}", self.appended_residual))],
+        );
         let repivots = self.repivots + 1;
         *self = FactorState::new(self.kernel, full, self.is_discrete, &self.cfg);
         self.repivots = repivots;

@@ -43,6 +43,23 @@ pub struct BenchStats {
     pub min_s: f64,
     pub max_s: f64,
     pub std_s: f64,
+    /// Median (nearest-rank). At the small rep counts CI uses, the
+    /// mean is skew-fragile — one cold-cache outlier moves it; bench
+    /// consumers prefer p50 when present.
+    pub p50_s: f64,
+    /// 95th percentile (nearest-rank).
+    pub p95_s: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample: the value at
+/// rank ⌈q·n⌉ (1-based), so `q=0.5` of 5 samples is the 3rd and
+/// `q=1.0` is the max. Empty input yields 0.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Run `f` for `reps` repetitions (after `warmup` unmeasured runs) and
@@ -64,12 +81,16 @@ pub fn bench_fn(warmup: usize, reps: usize, mut f: impl FnMut()) -> BenchStats {
     } else {
         0.0
     };
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
     BenchStats {
         reps,
         mean_s: mean,
         min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
         max_s: times.iter().cloned().fold(0.0, f64::max),
         std_s: var.sqrt(),
+        p50_s: percentile(&sorted, 0.5),
+        p95_s: percentile(&sorted, 0.95),
     }
 }
 
@@ -97,6 +118,23 @@ mod tests {
         assert_eq!(calls, 7);
         assert_eq!(st.reps, 5);
         assert!(st.min_s <= st.mean_s && st.mean_s <= st.max_s);
+    }
+
+    #[test]
+    fn bench_fn_percentiles_bracket_the_sample() {
+        let st = bench_fn(0, 9, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(st.min_s <= st.p50_s && st.p50_s <= st.p95_s && st.p95_s <= st.max_s);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.5), 3.0, "median of 5 is the 3rd value");
+        assert_eq!(percentile(&xs, 0.95), 5.0, "⌈0.95·5⌉ = 5th value");
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0, "rank clamps to the first value");
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
     }
 
     #[test]

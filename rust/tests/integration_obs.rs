@@ -1,0 +1,243 @@
+//! Integration tests of the observability subsystem end to end: a
+//! sharded discovery recorded as one Chrome trace with coordinator AND
+//! follower-attributed spans, the Prometheus `/v1/metrics` exposition,
+//! and the `/v1/trace` endpoint.
+//!
+//! The span recorder is process-global, so every test that toggles it
+//! serializes on a file-local lock (tests in this binary run in
+//! parallel threads; other test binaries are separate processes).
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use cvlr::coordinator::Discovery;
+use cvlr::data::synth::{generate, SynthConfig};
+use cvlr::obs::trace;
+use cvlr::server::http::{request, request_raw};
+use cvlr::server::json::{self, Json};
+use cvlr::server::{Server, ServerConfig};
+
+fn trace_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+fn start_follower() -> Server {
+    Server::start(ServerConfig {
+        port: 0,
+        job_workers: 1,
+        builtin_n: 40,
+        cache_capacity: Some(1 << 16),
+        ..Default::default()
+    })
+    .expect("follower starts")
+}
+
+fn events_of(doc: &Json) -> Vec<Json> {
+    doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array").to_vec()
+}
+
+fn names_of(events: &[Json]) -> Vec<String> {
+    events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str).map(str::to_string))
+        .collect()
+}
+
+/// The PR's acceptance shape: one sharded discovery, traced, must land
+/// coordinator stage spans (pid 1) and follower stage spans merged
+/// under per-follower synthetic pids (≥ 2) in a single Perfetto-valid
+/// document.
+#[test]
+fn sharded_discovery_trace_attributes_follower_spans() {
+    let _guard = trace_lock().lock().unwrap();
+    trace::disable();
+    trace::clear();
+
+    let (ds, _) = generate(&SynthConfig {
+        num_vars: 5,
+        density: 0.5,
+        n: 120,
+        seed: 11,
+        ..Default::default()
+    });
+    let ds = Arc::new(ds);
+    let f1 = start_follower();
+    let f2 = start_follower();
+
+    trace::enable();
+    let out = Discovery::builder(ds)
+        .method("cv-lr")
+        .shards([f1.addr().to_string(), f2.addr().to_string()])
+        .shard_dataset("it-obs")
+        .run()
+        .expect("sharded run");
+    trace::disable();
+    f1.stop();
+    f2.stop();
+    assert!(out.score_stats.expect("stats").shard_dispatches > 0, "fleet saw no work");
+
+    let doc = json::parse(&trace::export_json()).expect("trace JSON parses");
+    let events = events_of(&doc);
+    let names = names_of(&events);
+    for want in ["ges-forward-sweep", "score-batch", "shard-batch", "shard-dispatch"] {
+        assert!(names.iter().any(|n| n == want), "coordinator span `{want}` missing");
+    }
+    // follower stage timings came back over the wire and merged under
+    // synthetic pids ≥ 2 (pid 1 is the coordinator process)
+    let remote: Vec<&Json> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+                && e.get("pid").and_then(Json::as_u64).is_some_and(|p| p >= 2)
+        })
+        .collect();
+    assert!(
+        !remote.is_empty(),
+        "no follower-attributed spans were merged into the coordinator trace"
+    );
+    // every follower pid referenced by a span carries process_name
+    // metadata, so Perfetto shows "follower <addr>" tracks
+    for ev in &remote {
+        let pid = ev.get("pid").and_then(Json::as_u64).unwrap();
+        assert!(
+            events.iter().any(|m| {
+                m.get("ph").and_then(Json::as_str) == Some("M")
+                    && m.get("name").and_then(Json::as_str) == Some("process_name")
+                    && m.get("pid").and_then(Json::as_u64) == Some(pid)
+            }),
+            "follower pid {pid} has no process_name metadata"
+        );
+    }
+    trace::clear();
+}
+
+fn poll_until_done(addr: SocketAddr, id: u64) {
+    let t0 = Instant::now();
+    loop {
+        let (status, job) =
+            request(addr, "GET", &format!("/v1/jobs/{id}"), None).expect("poll");
+        assert_eq!(status, 200, "{job:?}");
+        let state = job.get("state").and_then(Json::as_str).expect("state").to_string();
+        if state == "done" {
+            return;
+        }
+        assert!(
+            state == "queued" || state == "running",
+            "job {id} ended in `{state}`: {job:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(120), "job {id} stuck in `{state}`");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn submit_builtin_job(addr: SocketAddr) -> u64 {
+    let body = Json::obj(vec![
+        ("dataset", Json::str("synth")),
+        ("method", Json::str("cv-lr")),
+    ]);
+    let (status, resp) = request(addr, "POST", "/v1/jobs", Some(&body)).expect("submit");
+    assert_eq!(status, 202, "{resp:?}");
+    resp.get("id").and_then(Json::as_u64).expect("job id")
+}
+
+/// `/v1/metrics` speaks the Prometheus text exposition: parseable
+/// line format, the well-known `cvlr_*` schema present even before
+/// traffic, and real counts after a job ran.
+#[test]
+fn metrics_endpoint_serves_prometheus_text() {
+    let server = Server::start(ServerConfig {
+        port: 0,
+        job_workers: 1,
+        builtin_n: 60,
+        cache_capacity: Some(1 << 16),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr();
+
+    poll_until_done(addr, submit_builtin_job(addr));
+
+    let (status, text) = request_raw(addr, "GET", "/v1/metrics", None).expect("scrape");
+    assert_eq!(status, 200);
+    for series in [
+        "cvlr_score_batch_seconds_bucket",
+        "cvlr_ges_sweep_seconds_bucket",
+        "cvlr_requests_total",
+        "cvlr_cache_hits_total",
+        "cvlr_evaluations_total",
+        "cvlr_shard_dispatches_total",
+        "cvlr_shard_degraded_total",
+        "cvlr_stream_repivots_total",
+        "cvlr_services",
+        "cvlr_jobs_done",
+    ] {
+        assert!(text.contains(series), "series `{series}` missing from:\n{text}");
+    }
+    // every sample line is `name[{labels}] value` with a numeric value
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let (_, value) = line.rsplit_once(' ').expect("sample line has a value");
+        assert!(value.parse::<f64>().is_ok(), "non-numeric sample: {line}");
+        samples += 1;
+    }
+    assert!(samples > 20, "suspiciously few samples:\n{text}");
+    // metrics are process-global and always on: a cv-lr job must have
+    // moved the stage counters
+    let field = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.split(' ').next() == Some(name))
+            .and_then(|l| l.rsplit_once(' '))
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or_else(|| panic!("series `{name}` missing"))
+    };
+    assert!(field("cvlr_requests_total") > 0.0);
+    assert!(field("cvlr_evaluations_total") > 0.0);
+    assert!(field("cvlr_score_batch_seconds_count") > 0.0);
+    assert!(field("cvlr_ges_sweep_seconds_count") > 0.0);
+    assert!(field("cvlr_jobs_done") >= 1.0);
+
+    server.stop();
+}
+
+/// `GET /v1/trace`: the first scrape attaches the recorder, later
+/// scrapes return a Chrome trace-event document covering the traffic
+/// in between.
+#[test]
+fn trace_endpoint_records_between_scrapes() {
+    let _guard = trace_lock().lock().unwrap();
+    trace::disable();
+    trace::clear();
+    let server = Server::start(ServerConfig {
+        port: 0,
+        job_workers: 1,
+        builtin_n: 60,
+        cache_capacity: Some(1 << 16),
+        ..Default::default()
+    })
+    .expect("server starts");
+    let addr = server.addr();
+
+    // first scrape: attaches the recorder, returns a valid (possibly
+    // empty) document
+    let (status, first) = request(addr, "GET", "/v1/trace", None).expect("first scrape");
+    assert_eq!(status, 200);
+    assert!(first.get("traceEvents").and_then(Json::as_arr).is_some(), "{first:?}");
+
+    poll_until_done(addr, submit_builtin_job(addr));
+
+    let (status, doc) = request(addr, "GET", "/v1/trace", None).expect("second scrape");
+    assert_eq!(status, 200);
+    let names = names_of(&events_of(&doc));
+    for want in ["ges-forward-sweep", "score-batch"] {
+        assert!(names.iter().any(|n| n == want), "span `{want}` missing after a job ran");
+    }
+
+    server.stop();
+    trace::disable();
+    trace::clear();
+}
