@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Assert structural properties of a cvlr Prometheus snapshot.
+
+Stdlib-only validator for the text exposition the server serves at
+``GET /v1/metrics`` and the CLI writes via ``--metrics-out`` — the CI
+smoke jobs gate on it instead of grepping raw text:
+
+    python3 check_metrics.py FILE.prom \
+        [--require-scope SCOPE]...        # cvlr_mem_peak_bytes{scope=...} > 0
+        [--require-follower ADDR]...      # a follower="ADDR"-labeled series exists
+        [--require-exemplar]              # some histogram bucket carries an exemplar
+        [--trace FILE.json]               # ...whose span id exists in this Chrome trace
+
+Exemplar lines follow the OpenMetrics shape the registry renders:
+
+    cvlr_score_batch_seconds_bucket{le="0.25"} 3 # {trace_span="17"} 0.0625
+
+Exits 0 when every requirement holds, 1 with a diagnostic otherwise.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+LABEL_RE = re.compile(r'([A-Za-z_][A-Za-z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def unescape(v):
+    return v.replace("\\n", "\n").replace('\\"', '"').replace("\\\\", "\\")
+
+
+def parse_exposition(text):
+    """[(name, {label: value}, float value, exemplar-labels-or-None)]."""
+    samples = []
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        # split off the OpenMetrics exemplar suffix first
+        sample, exemplar = line, None
+        if " # " in line:
+            sample, suffix = line.split(" # ", 1)
+            exemplar = {k: unescape(v) for k, v in LABEL_RE.findall(suffix)}
+        if "{" in sample:
+            name = sample[: sample.index("{")]
+            rest = sample[sample.index("{") :]
+            labels = {k: unescape(v) for k, v in LABEL_RE.findall(rest)}
+            value_str = rest[rest.index("}") + 1 :].strip().split(" ")[0]
+        else:
+            parts = sample.split(" ")
+            if len(parts) < 2:
+                continue
+            name, labels, value_str = parts[0], {}, parts[1]
+        try:
+            value = float(value_str)
+        except ValueError:
+            continue
+        samples.append((name, labels, value, exemplar))
+    return samples
+
+
+def trace_span_ids(path):
+    """Span ids exported in a Chrome trace-event JSON (args.span_id)."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+    ids = set()
+    for ev in events:
+        sid = (ev.get("args") or {}).get("span_id")
+        if sid:
+            ids.add(str(sid))
+    return ids
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("prom", help="Prometheus text exposition file")
+    ap.add_argument(
+        "--require-scope",
+        action="append",
+        default=[],
+        metavar="SCOPE",
+        help="require cvlr_mem_peak_bytes{scope=SCOPE} with a nonzero value",
+    )
+    ap.add_argument(
+        "--require-follower",
+        action="append",
+        default=[],
+        metavar="ADDR",
+        help='require at least one series labeled follower="ADDR"',
+    )
+    ap.add_argument(
+        "--require-exemplar",
+        action="store_true",
+        help="require at least one histogram bucket exemplar",
+    )
+    ap.add_argument(
+        "--trace",
+        metavar="FILE.json",
+        help="with --require-exemplar: some exemplar span id must exist in this trace",
+    )
+    args = ap.parse_args()
+
+    with open(args.prom) as fh:
+        samples = parse_exposition(fh.read())
+    if not samples:
+        sys.exit(f"error: no samples parsed from {args.prom}")
+
+    failures = []
+
+    for scope in args.require_scope:
+        hit = any(
+            name == "cvlr_mem_peak_bytes" and labels.get("scope") == scope and value > 0
+            for name, labels, value, _ in samples
+        )
+        if not hit:
+            seen = sorted(
+                labels["scope"]
+                for name, labels, value, _ in samples
+                if name == "cvlr_mem_peak_bytes" and "scope" in labels and value > 0
+            )
+            failures.append(
+                f'no nonzero cvlr_mem_peak_bytes{{scope="{scope}"}} (nonzero scopes: {seen})'
+            )
+
+    for addr in args.require_follower:
+        hit = any(labels.get("follower") == addr for _, labels, _, _ in samples)
+        if not hit:
+            seen = sorted(
+                {labels["follower"] for _, labels, _, _ in samples if "follower" in labels}
+            )
+            failures.append(f'no series labeled follower="{addr}" (followers seen: {seen})')
+
+    if args.require_exemplar:
+        exemplars = [
+            (name, ex["trace_span"])
+            for name, _, _, ex in samples
+            if ex and "trace_span" in ex
+        ]
+        if not exemplars:
+            failures.append("no histogram bucket carries an exemplar")
+        elif args.trace:
+            ids = trace_span_ids(args.trace)
+            linked = [(n, s) for (n, s) in exemplars if s in ids]
+            if not linked:
+                failures.append(
+                    f"no exemplar span id among {sorted({s for _, s in exemplars})} "
+                    f"exists in {args.trace} ({len(ids)} trace spans)"
+                )
+            else:
+                print(
+                    f"ok: {len(linked)}/{len(exemplars)} exemplar(s) link to spans "
+                    f"in {args.trace} (e.g. {linked[0][0]} -> span {linked[0][1]})"
+                )
+
+    if failures:
+        for f in failures:
+            print(f"check_metrics: FAIL: {f}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"check_metrics: ok ({len(samples)} samples; "
+        f"scopes={args.require_scope or '-'}, followers={args.require_follower or '-'}, "
+        f"exemplar={'yes' if args.require_exemplar else 'not required'})"
+    )
+
+
+if __name__ == "__main__":
+    main()

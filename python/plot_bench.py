@@ -140,6 +140,7 @@ def is_metric_like(col, metric):
     """Other measure columns are not identity: drop them from series keys."""
     measure_suffixes = (
         "_seconds", "_mean", "_std", "_pct", "_p50", "_p95", "seconds", "speedup", "_score",
+        "_bytes", "_bytes_per_row",
     )
     return col != metric and (col.endswith(measure_suffixes) or col in ("rank_used",))
 
@@ -162,7 +163,7 @@ def text_view(bench, metric, labels, table):
         print(f"{facet} | {series}".ljust(name_w) + "".join(cells))
 
 
-def png_view(bench, metric, labels, table, out_dir):
+def png_view(bench, metric, labels, table, out_dir, fname=None):
     try:
         import matplotlib
 
@@ -254,7 +255,7 @@ def png_view(bench, metric, labels, table, out_dir):
         axes[pi // ncols][pi % ncols].set_visible(False)
     fig.suptitle(f"{bench} — {metric}", color=INK, fontsize=13, x=0.01, ha="left")
     fig.tight_layout(rect=(0, 0, 1, 0.96))
-    path = os.path.join(out_dir, f"{bench}_trajectory.png")
+    path = os.path.join(out_dir, fname or f"{bench}_trajectory.png")
     fig.savefig(path, dpi=120)
     plt.close(fig)
     return path
@@ -295,25 +296,34 @@ def main():
             if not numeric:
                 continue
             metric = numeric[-1]
-        # {(facet, series): {label: value}}
-        table = OrderedDict()
-        for label, by_bench in runs:
-            if bench not in by_bench:
+        # the primary metric, plus a memory panel when every run carries
+        # the allocator columns — flat peak_bytes_per_row across n is the
+        # O(n)-space evidence the bench records
+        panels = [(metric, None)]
+        headers = [b[bench][0] for (_, b) in runs if bench in b]
+        mem_col = "peak_bytes_per_row"
+        if metric != mem_col and headers and all(mem_col in h for h in headers):
+            panels.append((mem_col, f"{bench}_memory.png"))
+        for panel_metric, fname in panels:
+            # {(facet, series): {label: value}}
+            table = OrderedDict()
+            for label, by_bench in runs:
+                if bench not in by_bench:
+                    continue
+                header, rows = by_bench[bench]
+                points = series_of(header, rows, panel_metric)
+                if points is None:
+                    continue
+                for key, v in points.items():
+                    table.setdefault(key, {})[label] = v
+            if not table:
                 continue
-            header, rows = by_bench[bench]
-            points = series_of(header, rows, metric)
-            if points is None:
-                continue
-            for key, v in points.items():
-                table.setdefault(key, {})[label] = v
-        if not table:
-            continue
-        text_view(bench, metric, labels, table)
-        png = png_view(bench, metric, labels, table, out_dir)
-        if png:
-            print(f"chart: {png}")
-        else:
-            print("(matplotlib unavailable — table view only)")
+            text_view(bench, panel_metric, labels, table)
+            png = png_view(bench, panel_metric, labels, table, out_dir, fname)
+            if png:
+                print(f"chart: {png}")
+            else:
+                print("(matplotlib unavailable — table view only)")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::data::{networks, Dataset};
 use cvlr::distrib::{PoolConfig, ShardScoreBackend};
 use cvlr::lowrank::{FactorMethod, LowRankConfig};
+use cvlr::obs::mem;
 use cvlr::score::cv_exact::CvExactScore;
 use cvlr::score::cvlr::{CvLrScore, NativeCvLrKernel};
 use cvlr::score::folds::CvParams;
@@ -114,6 +115,8 @@ fn main() {
             "cvlr_seconds_p50",
             "cvlr_seconds_p95",
             "speedup",
+            "peak_bytes",
+            "peak_bytes_per_row",
         ],
     );
 
@@ -144,7 +147,12 @@ fn main() {
                     // fleet, per score — registration and the follower
                     // service build stay outside the timed region (they
                     // amortize over a sweep in real use).
-                    let (lr_mean, lr_p50, lr_p95) = if k == 0 {
+                    // peak-delta window around the timed region: rebase
+                    // the allocator high-water marks, measure, and read
+                    // back the process peak over the baseline — this is
+                    // the memory trajectory the O(n)-space gate checks
+                    let (lr_mean, lr_p50, lr_p95, peak) = if k == 0 {
+                        let baseline = mem::reset_peak();
                         let st = bench_fn(1, cfg.reps, || {
                             let lr = CvLrScore::with_backend(
                                 ds.clone(),
@@ -155,7 +163,8 @@ fn main() {
                             .with_parallelism(parallelism);
                             let _ = lr.local_score(target, &parents);
                         });
-                        (st.mean_s, st.p50_s, st.p95_s)
+                        let peak = mem::peak_bytes().saturating_sub(baseline);
+                        (st.mean_s, st.p50_s, st.p95_s, peak)
                     } else {
                         while fleet.len() < k {
                             fleet.push(
@@ -208,23 +217,26 @@ fn main() {
                             .collect();
                         // one rep: the follower-side score memo would turn
                         // a second rep into a cache-hit measurement
+                        let baseline = mem::reset_peak();
                         let st = bench_fn(0, 1, || {
                             let _ = backend.score_batch(&reqs);
                         });
+                        let peak = mem::peak_bytes().saturating_sub(baseline);
                         let per = reqs.len() as f64;
-                        (st.mean_s / per, st.p50_s / per, st.p95_s / per)
+                        (st.mean_s / per, st.p50_s / per, st.p95_s / per, peak)
                     };
 
                     let speedup = cv_mean.map(|c| c / lr_mean);
                     println!(
-                        "{:<18} {:<4} shards={} n={:<5} CV={:<10} CV-LR={:<10} speedup={}",
+                        "{:<18} {:<4} shards={} n={:<5} CV={:<10} CV-LR={:<10} speedup={:<8} peak={}KiB",
                         s.name,
                         lm.name(),
                         k,
                         n,
                         cv_mean.map(fmt_secs).unwrap_or_else(|| "-".into()),
                         fmt_secs(lr_mean),
-                        speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into())
+                        speedup.map(|x| format!("{x:.0}x")).unwrap_or_else(|| "-".into()),
+                        peak / 1024
                     );
                     rep.row(&[
                         s.name.trim().to_string(),
@@ -236,6 +248,8 @@ fn main() {
                         format!("{lr_p50:.6}"),
                         format!("{lr_p95:.6}"),
                         speedup.map(|x| format!("{x:.1}")).unwrap_or_default(),
+                        peak.to_string(),
+                        format!("{:.1}", peak as f64 / n as f64),
                     ]);
                 }
             }

@@ -20,6 +20,7 @@ use cvlr::coordinator::{discover, DiscoveryConfig, Method};
 use cvlr::data::synth::{generate, DataKind, SynthConfig};
 use cvlr::graph::{normalized_shd, skeleton_f1};
 use cvlr::lowrank::FactorMethod;
+use cvlr::obs::mem;
 
 fn applicable(method: Method, kind: DataKind) -> bool {
     match method {
@@ -57,7 +58,7 @@ fn main() {
         "fig2_4_synthetic",
         &[
             "n", "kind", "density", "method", "lowrank", "f1_mean", "f1_std", "shd_mean",
-            "shd_std", "secs_mean",
+            "shd_std", "secs_mean", "peak_bytes", "peak_bytes_per_row",
         ],
     );
 
@@ -80,6 +81,8 @@ fn main() {
                         let mut f1s = vec![];
                         let mut shds = vec![];
                         let mut secs = vec![];
+                        // high-water delta across every rep of this cell
+                        let baseline = mem::reset_peak();
                         for r in 0..cfg.reps {
                             let (ds, dag) = generate(&SynthConfig {
                                 n,
@@ -104,6 +107,7 @@ fn main() {
                                 ),
                             }
                         }
+                        let peak = mem::peak_bytes().saturating_sub(baseline);
                         if f1s.is_empty() {
                             continue;
                         }
@@ -126,6 +130,8 @@ fn main() {
                             format!("{shm:.4}"),
                             format!("{shs:.4}"),
                             format!("{tm:.3}"),
+                            peak.to_string(),
+                            format!("{:.1}", peak as f64 / n as f64),
                         ]);
                     }
                 }

@@ -132,6 +132,25 @@ impl ScoreCache {
         self.inner.lock().unwrap().invalidations
     }
 
+    /// Resident heap bytes of the memo layer: per-entry key vectors
+    /// (map + ring clones) plus a fixed map/ring slot estimate per
+    /// entry. Walked under the lock — stats paths only.
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        let key_heap = |k: &Key| k.1.capacity() * std::mem::size_of::<usize>();
+        let slots = inner
+            .map
+            .keys()
+            .map(|k| key_heap(k) + std::mem::size_of::<(Key, Slot)>())
+            .sum::<usize>();
+        let ring = inner
+            .ring
+            .iter()
+            .map(|k| key_heap(k) + std::mem::size_of::<Key>())
+            .sum::<usize>();
+        (slots + ring) as u64
+    }
+
     /// Targeted invalidation: drop every resident `Ready` entry that no
     /// waiter is pinned to (the append path — every memoized score
     /// depends on every sample row, so an append stales them all).
@@ -326,6 +345,11 @@ pub struct ServiceStats {
     pub warm_start_hits: u64,
     /// Resident cache entries at snapshot time.
     pub cache_entries: u64,
+    /// Resident heap bytes of the score memo layer (keys + slot
+    /// estimate) at snapshot time — the byte-accurate companion of
+    /// `cache_entries`, surfaced as the `cvlr_service_cache_bytes`
+    /// gauge.
+    pub cache_bytes: u64,
     /// Resident fold-core bundles in the backend's `FoldCoreCache`
     /// (CV-LR backends only; 0 otherwise). Each bundle retains a
     /// variable set's per-fold blocks — ~2× the factor-cache footprint
@@ -334,6 +358,12 @@ pub struct ServiceStats {
     /// Fold-core bundles reclaimed by the bounded cache's second-chance
     /// sweep. Outside the request identity, like `evictions`.
     pub core_cache_evictions: u64,
+    /// Resident heap bytes across the backend's core caches (fold-core
+    /// + pair-core bundles + factor matrices; CV-LR backends only, 0
+    /// otherwise) — the byte-accurate companion of
+    /// `core_cache_entries`, surfaced as the
+    /// `cvlr_service_core_cache_bytes` gauge.
+    pub core_cache_bytes: u64,
     /// Gram-product threads of the backing backend
     /// (`DiscoveryConfig::parallelism`) — a gauge, not a counter, so
     /// the server can expose what each pooled service is using.
@@ -483,6 +513,7 @@ impl ScoreService {
     pub fn stats(&self) -> ServiceStats {
         let backend = self.backend.read().unwrap();
         let (core_entries, core_evictions) = backend.core_cache_stats().unwrap_or((0, 0));
+        let core_bytes = backend.core_cache_bytes().unwrap_or(0);
         let shard = backend.shard_counters().unwrap_or_default();
         let followers = backend.follower_stats();
         let (stream_repivots, stream_residual) = backend.stream_stats().unwrap_or((0, 0.0));
@@ -498,8 +529,10 @@ impl ScoreService {
             invalidations: self.cache.invalidations(),
             warm_start_hits: self.warm_hits.load(Ordering::Relaxed),
             cache_entries: self.cache.len() as u64,
+            cache_bytes: self.cache.resident_bytes(),
             core_cache_entries: core_entries,
             core_cache_evictions: core_evictions,
+            core_cache_bytes: core_bytes,
             gram_threads: self.gram_threads.load(Ordering::Relaxed),
             shard_dispatches: shard.dispatches,
             shard_retries: shard.retries,
@@ -516,6 +549,10 @@ impl ScoreService {
     /// worker pool. Each worker submits its chunk as one sub-batch, so
     /// batch-aware backends amortize shared work within a chunk.
     fn evaluate(&self, misses: &[ScoreRequest]) -> Vec<f64> {
+        // Memory scoping is thread-local, so the worker closures enter
+        // the score-batch scope themselves — allocations inside spawned
+        // workers would otherwise land in "unscoped".
+        let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::ScoreBatch);
         let backend = self.backend.read().unwrap().clone();
         if self.workers <= 1 || misses.len() <= 1 {
             return backend.score_batch(misses);
@@ -526,7 +563,11 @@ impl ScoreService {
             let mut handles = vec![];
             for (ci, batch) in misses.chunks(chunk).enumerate() {
                 let backend = backend.clone();
-                handles.push((ci, scope.spawn(move || backend.score_batch(batch))));
+                handles.push((ci, scope.spawn(move || {
+                    let _mem =
+                        crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::ScoreBatch);
+                    backend.score_batch(batch)
+                })));
             }
             for (ci, h) in handles {
                 let vals = h.join().expect("score worker panicked");
@@ -595,8 +636,9 @@ impl ScoreBackend for ScoreService {
                 .collect();
             let vals = self.evaluate(&miss_reqs);
             let secs = sw.secs();
+            let span_id = span.id();
             drop(span);
-            metrics::score_batch_seconds().observe(secs);
+            metrics::score_batch_seconds().observe_with_exemplar(secs, span_id);
             *self.eval_secs.lock().unwrap() += secs;
             self.cache.fill(owned.iter().zip(&vals).map(|(&i, &v)| (uniq[i].clone(), v)));
             guard.disarm();
@@ -629,6 +671,10 @@ impl ScoreBackend for ScoreService {
     /// report the same fold-core counters.
     fn core_cache_stats(&self) -> Option<(u64, u64)> {
         self.backend.read().unwrap().core_cache_stats()
+    }
+
+    fn core_cache_bytes(&self) -> Option<u64> {
+        self.backend.read().unwrap().core_cache_bytes()
     }
 
     fn shard_counters(&self) -> Option<ShardCounters> {
@@ -668,6 +714,7 @@ impl LocalScore for ScoreService {
                 metrics::evaluations_total().inc();
                 let guard = ClaimGuard::new(&self.cache, vec![key.clone()]);
                 let sw = crate::util::Stopwatch::start();
+                let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::ScoreBatch);
                 let backend = self.backend.read().unwrap().clone();
                 let v = backend.score_batch(std::slice::from_ref(&req))[0];
                 let secs = sw.secs();
@@ -919,6 +966,8 @@ mod tests {
         let st = svc.stats();
         assert_eq!(st.evictions, 0);
         assert_eq!(st.cache_entries, 5);
+        assert!(st.cache_bytes > 0, "resident entries have nonzero byte footprint");
+        assert_eq!(st.core_cache_bytes, 0, "scalar backends report no core cache");
     }
 
     #[test]

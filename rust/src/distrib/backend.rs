@@ -160,6 +160,10 @@ impl ScoreBackend for ShardScoreBackend {
         self.inner.local.core_cache_stats()
     }
 
+    fn core_cache_bytes(&self) -> Option<u64> {
+        self.inner.local.core_cache_bytes()
+    }
+
     fn shard_counters(&self) -> Option<ShardCounters> {
         Some(self.inner.pool.counters())
     }

@@ -66,30 +66,45 @@ impl ShardClient {
     /// connection lock for the duration — callers dispatch to
     /// *different* followers concurrently, never to one.
     pub fn post(&self, path: &str, body: &Json) -> Result<(u16, Json)> {
+        let (status, text) = self.send("POST", path, &body.encode())?;
+        let value = if text.trim().is_empty() { Json::Null } else { json::parse(&text)? };
+        Ok((status, value))
+    }
+
+    /// GET `path`; returns (status, raw body text) — for non-JSON
+    /// endpoints (the coordinator's federated scrape of follower
+    /// `/v1/metrics`). Same pooled connection and stale-retry
+    /// discipline as [`ShardClient::post`].
+    pub fn get_text(&self, path: &str) -> Result<(u16, String)> {
+        self.send("GET", path, "")
+    }
+
+    /// One pooled exchange with single-resend on a stale connection.
+    fn send(&self, method: &str, path: &str, payload: &str) -> Result<(u16, String)> {
         let mut guard = self.conn.lock().unwrap();
         let reused = guard.is_some();
         let mut stream = match guard.take() {
             Some(s) => s,
             None => self.connect()?,
         };
-        let payload = body.encode();
-        match roundtrip(&mut stream, &self.addr, path, &payload) {
-            Ok((status, value, keep)) => {
+        match roundtrip(&mut stream, &self.addr, method, path, payload) {
+            Ok((status, text, keep)) => {
                 if keep {
                     *guard = Some(stream);
                 }
-                Ok((status, value))
+                Ok((status, text))
             }
             // a pooled connection can die between requests (server
             // restart, idle close); requests are idempotent reads, so
             // resend exactly once on a fresh connection
             Err(_) if reused => {
                 let mut fresh = self.connect()?;
-                let (status, value, keep) = roundtrip(&mut fresh, &self.addr, path, &payload)?;
+                let (status, text, keep) =
+                    roundtrip(&mut fresh, &self.addr, method, path, payload)?;
                 if keep {
                     *guard = Some(fresh);
                 }
-                Ok((status, value))
+                Ok((status, text))
             }
             Err(e) => Err(e),
         }
@@ -99,11 +114,12 @@ impl ShardClient {
 fn roundtrip(
     stream: &mut TcpStream,
     addr: &str,
+    method: &str,
     path: &str,
     payload: &str,
-) -> Result<(u16, Json, bool)> {
+) -> Result<(u16, String, bool)> {
     let head = format!(
-        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
         payload.len()
     );
     stream.write_all(head.as_bytes()).context("writing request head")?;
@@ -162,6 +178,5 @@ fn roundtrip(
     }
     body.truncate(content_length);
     let text = std::str::from_utf8(&body).context("response body not UTF-8")?;
-    let value = if text.trim().is_empty() { Json::Null } else { json::parse(text)? };
-    Ok((status, value, keep_alive))
+    Ok((status, text.to_string(), keep_alive))
 }

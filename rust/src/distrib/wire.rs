@@ -179,6 +179,7 @@ pub fn parse_timings(reply: &Json) -> Vec<SpanEvent> {
                 pid: 0,
                 tid: e.get("tid").and_then(Json::as_u64).unwrap_or(1),
                 instant: e.get("instant").and_then(Json::as_bool).unwrap_or(false),
+                id: 0,
                 args: Vec::new(),
             })
         })
@@ -306,6 +307,7 @@ mod tests {
                 pid: 1,
                 tid: 3,
                 instant: false,
+                id: 0,
                 args: vec![("requests".into(), "64".into())],
             },
             SpanEvent {
@@ -316,6 +318,7 @@ mod tests {
                 pid: 1,
                 tid: 3,
                 instant: true,
+                id: 0,
                 args: Vec::new(),
             },
         ];

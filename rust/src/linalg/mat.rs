@@ -87,6 +87,13 @@ impl Mat {
         Mat::from_vec(xs.len(), 1, xs.to_vec())
     }
 
+    /// Heap bytes held by the element buffer (capacity, not length):
+    /// the per-matrix term of the byte-accurate cache accounting
+    /// surfaced in `/v1/stats` and the `cvlr_service_*_bytes` gauges.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.data.capacity() * std::mem::size_of::<f64>()) as u64
+    }
+
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]

@@ -140,11 +140,12 @@ impl LowRankConfig {
 /// request on a kernel without a Gaussian spectral form — falls through
 /// to ICL with [`LowRank::fell_back`] set.
 pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> LowRank {
-    let _span = crate::obs::trace::span("factorize", "lowrank")
+    let span = crate::obs::trace::span("factorize", "lowrank")
         .arg("n", x.rows.to_string());
+    let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::Factorize);
     let sw = crate::util::Stopwatch::start();
     let out = factorize_inner(k, x, is_discrete, cfg);
-    crate::obs::metrics::factorize_seconds().observe(sw.secs());
+    crate::obs::metrics::factorize_seconds().observe_with_exemplar(sw.secs(), span.id());
     out
 }
 

@@ -112,7 +112,11 @@ fn print_help() {
          \x20                                       followers degrade to local scoring\n\
          \x20 --trace-out FILE.json                 record stage spans and write a Chrome\n\
          \x20                                       trace-event snapshot (Perfetto-loadable)\n\
-         \x20                                       on completion (discover/stream/score)\n\n\
+         \x20                                       on completion (discover/stream/score)\n\
+         \x20 --metrics-out FILE.prom               write a final Prometheus snapshot of\n\
+         \x20                                       every cvlr_* series — incl. per-scope\n\
+         \x20                                       cvlr_mem_peak_bytes — on completion\n\
+         \x20                                       (discover/stream/score)\n\n\
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
@@ -151,6 +155,24 @@ fn write_trace(path: &str) -> Result<()> {
     std::fs::write(path, cvlr::obs::trace::export_json())
         .with_context(|| format!("writing trace to {path}"))?;
     println!("trace    : wrote {path} (load it in Perfetto or chrome://tracing)");
+    Ok(())
+}
+
+/// `--metrics-out FILE.prom`: the path for a final Prometheus snapshot
+/// written at command completion (the one-shot mirror of the server's
+/// `GET /v1/metrics` pull endpoint).
+fn metrics_out_arg(args: &Args) -> Option<String> {
+    args.get("metrics-out").map(str::to_string)
+}
+
+/// Dump every `cvlr_*` series — counters, gauges, per-scope memory
+/// peaks, histograms with exemplars — as Prometheus text at `path`.
+fn write_metrics(path: &str) -> Result<()> {
+    cvlr::obs::metrics::register_defaults();
+    cvlr::obs::mem::publish();
+    std::fs::write(path, cvlr::obs::metrics::render())
+        .with_context(|| format!("writing metrics to {path}"))?;
+    println!("metrics  : wrote {path} (Prometheus text exposition)");
     Ok(())
 }
 
@@ -248,6 +270,7 @@ fn load_workload(args: &Args) -> Result<(Arc<Dataset>, Option<Dag>, String)> {
 
 fn cmd_discover(args: &Args) -> Result<()> {
     let trace_out = trace_out_arg(args);
+    let metrics_out = metrics_out_arg(args);
     let (ds, truth, desc) = load_workload(args)?;
     let engine = match args.get_or("engine", "native").as_str() {
         "native" => EngineKind::Native,
@@ -315,6 +338,9 @@ fn cmd_discover(args: &Args) -> Result<()> {
     if let Some(path) = &trace_out {
         write_trace(path)?;
     }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
+    }
     Ok(())
 }
 
@@ -324,6 +350,7 @@ fn cmd_discover(args: &Args) -> Result<()> {
 /// flat in n), re-pivots, discovery latency and cache reuse.
 fn cmd_stream(args: &Args) -> Result<()> {
     let trace_out = trace_out_arg(args);
+    let metrics_out = metrics_out_arg(args);
     let (ds, truth, desc) = load_workload(args)?;
     let chunk = args.usize_or("chunk", 100);
     let folds = cvlr::score::folds::CvParams::default().folds;
@@ -440,11 +467,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
     if let Some(path) = &trace_out {
         write_trace(path)?;
     }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
+    }
     Ok(())
 }
 
 fn cmd_score(args: &Args) -> Result<()> {
     let trace_out = trace_out_arg(args);
+    let metrics_out = metrics_out_arg(args);
     let (ds, _, desc) = load_workload(args)?;
     let target = args.usize_or("target", 0);
     let parents: Vec<usize> = args
@@ -490,6 +521,9 @@ fn cmd_score(args: &Args) -> Result<()> {
     println!("S_LR(X{target} | {parents:?}) = {s:.6}   [{}]", fmt_secs(sw.secs()));
     if let Some(path) = &trace_out {
         write_trace(path)?;
+    }
+    if let Some(path) = &metrics_out {
+        write_metrics(path)?;
     }
     Ok(())
 }

@@ -1,0 +1,502 @@
+//! Memory accounting — the tracking [`std::alloc::GlobalAlloc`] behind
+//! the paper's O(n) **space** claim, with scoped attribution.
+//!
+//! The bench/metrics stack measures *time* per stage; nothing proved
+//! that resident bytes scale linearly in n, or could catch a cache or
+//! factor leak silently reintroducing the O(n²) memory the low-rank
+//! rules exist to avoid. This module wraps the system allocator
+//! (feature `mem-profile`, on by default) and charges every
+//! allocation to the **active scope** of the allocating thread — a
+//! thread-local stage marker mirroring the span taxonomy
+//! (`factorize`, `fold_core_build`, `pair_cores`, `score_batch`,
+//! `score_cache`, `dataset`, `stream_append`) — so one
+//! `/v1/metrics` scrape answers "where is the memory":
+//!
+//! ```text
+//! cvlr_mem_live_bytes{scope="fold_core_build"} 1.84e6
+//! cvlr_mem_peak_bytes{scope="factorize"}       5.4e6
+//! ```
+//!
+//! Discipline on the allocator hot path: **two relaxed atomic adds and
+//! two relaxed maxes**, no locks, no clock reads, and — critically —
+//! no allocation (the scope marker is a const-initialized
+//! `Cell<usize>` thread-local, so reading it never re-enters the
+//! allocator). Deallocations are charged to the scope active *at free
+//! time*; a buffer allocated in one scope and dropped in another can
+//! therefore drive a scope's signed live counter below zero, which the
+//! reporting surface clamps to 0 (peaks are monotone within a
+//! [`reset_peak`] window either way — attribution is a profile, not a
+//! ledger).
+//!
+//! With the feature off every entry point is a no-op stub and no
+//! global allocator is installed.
+
+/// An attribution scope — the memory twin of the span taxonomy. The
+/// discriminant indexes the static accounting tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Scope {
+    /// No explicit scope active on the thread (the default).
+    Unscoped = 0,
+    /// Low-rank factorization (`lowrank::factorize`) — factor storage.
+    Factorize = 1,
+    /// Per-set fold-core Gram builds (`SetCores::build`).
+    FoldCoreBuild = 2,
+    /// Per-pair cross-core builds (`score::cores::pair_cores`).
+    PairCores = 3,
+    /// Score-batch evaluation (`ScoreService::score_batch` misses).
+    ScoreBatch = 4,
+    /// The memoizing score cache (`ScoreCache` fills).
+    ScoreCache = 5,
+    /// Dataset / registry storage (CSV ingestion, builtins, appends).
+    Dataset = 6,
+    /// Streaming factor maintenance (`stream::FactorState` appends).
+    StreamAppend = 7,
+    /// Reserved for unit tests — never entered by library code, so
+    /// tests can assert exact deltas without cross-test interference.
+    Probe = 8,
+}
+
+/// Number of scopes (table size).
+pub const SCOPE_COUNT: usize = 9;
+
+/// Every scope in table order.
+pub const ALL_SCOPES: [Scope; SCOPE_COUNT] = [
+    Scope::Unscoped,
+    Scope::Factorize,
+    Scope::FoldCoreBuild,
+    Scope::PairCores,
+    Scope::ScoreBatch,
+    Scope::ScoreCache,
+    Scope::Dataset,
+    Scope::StreamAppend,
+    Scope::Probe,
+];
+
+impl Scope {
+    /// The `scope` label value of the Prometheus series.
+    pub fn name(self) -> &'static str {
+        match self {
+            Scope::Unscoped => "unscoped",
+            Scope::Factorize => "factorize",
+            Scope::FoldCoreBuild => "fold_core_build",
+            Scope::PairCores => "pair_cores",
+            Scope::ScoreBatch => "score_batch",
+            Scope::ScoreCache => "score_cache",
+            Scope::Dataset => "dataset",
+            Scope::StreamAppend => "stream_append",
+            Scope::Probe => "probe",
+        }
+    }
+}
+
+#[cfg(feature = "mem-profile")]
+mod imp {
+    use super::{Scope, ALL_SCOPES, SCOPE_COUNT};
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicI64, Ordering::Relaxed};
+
+    // Const items (not statics) so the array-repeat initializer below
+    // is legal; each array element is its own atomic.
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicI64 = AtomicI64::new(0);
+
+    /// Signed live bytes per scope. Signed because deallocations are
+    /// charged to the scope active at free time (see module docs).
+    static LIVE: [AtomicI64; SCOPE_COUNT] = [ZERO; SCOPE_COUNT];
+    /// High-water mark of `LIVE` per scope since the last reset.
+    static PEAK: [AtomicI64; SCOPE_COUNT] = [ZERO; SCOPE_COUNT];
+    /// Process-wide live bytes (always balanced: every free subtracts
+    /// exactly what the matching alloc added).
+    static G_LIVE: AtomicI64 = AtomicI64::new(0);
+    /// Process-wide high-water mark since the last reset.
+    static G_PEAK: AtomicI64 = AtomicI64::new(0);
+
+    thread_local! {
+        // Const-init: no lazy-init allocation, safe inside the
+        // allocator. `try_with` guards against TLS teardown.
+        static CURRENT: Cell<usize> = const { Cell::new(0) };
+    }
+
+    #[inline]
+    fn current_idx() -> usize {
+        CURRENT.try_with(Cell::get).unwrap_or(0)
+    }
+
+    #[inline]
+    fn on_alloc(size: usize) {
+        let s = size as i64;
+        let now = G_LIVE.fetch_add(s, Relaxed) + s;
+        G_PEAK.fetch_max(now, Relaxed);
+        let i = current_idx();
+        let now = LIVE[i].fetch_add(s, Relaxed) + s;
+        PEAK[i].fetch_max(now, Relaxed);
+    }
+
+    #[inline]
+    fn on_dealloc(size: usize) {
+        let s = size as i64;
+        G_LIVE.fetch_sub(s, Relaxed);
+        LIVE[current_idx()].fetch_sub(s, Relaxed);
+    }
+
+    /// The tracking allocator: `System` plus the accounting above.
+    pub struct TrackingAlloc;
+
+    // SAFETY: defers every allocation to `System`; the accounting
+    // callbacks never allocate (const-init TLS + static atomics).
+    unsafe impl GlobalAlloc for TrackingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let p = System.alloc_zeroed(layout);
+            if !p.is_null() {
+                on_alloc(layout.size());
+            }
+            p
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout);
+            on_dealloc(layout.size());
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let p = System.realloc(ptr, layout, new_size);
+            if !p.is_null() {
+                on_dealloc(layout.size());
+                on_alloc(new_size);
+            }
+            p
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: TrackingAlloc = TrackingAlloc;
+
+    /// RAII scope marker: allocations on this thread are charged to
+    /// `scope` until the guard drops (restoring the previous scope, so
+    /// scopes nest).
+    pub struct MemScope {
+        prev: usize,
+    }
+
+    impl MemScope {
+        pub fn enter(scope: Scope) -> MemScope {
+            let prev = CURRENT
+                .try_with(|c| {
+                    let p = c.get();
+                    c.set(scope as usize);
+                    p
+                })
+                .unwrap_or(0);
+            MemScope { prev }
+        }
+    }
+
+    impl Drop for MemScope {
+        fn drop(&mut self) {
+            let _ = CURRENT.try_with(|c| c.set(self.prev));
+        }
+    }
+
+    pub fn enabled() -> bool {
+        true
+    }
+
+    pub fn current_scope() -> Scope {
+        ALL_SCOPES[current_idx()]
+    }
+
+    fn clamp(v: i64) -> u64 {
+        v.max(0) as u64
+    }
+
+    /// Process-wide live bytes.
+    pub fn live_bytes() -> u64 {
+        clamp(G_LIVE.load(Relaxed))
+    }
+
+    /// Process-wide high-water mark since the last [`reset_peak`].
+    pub fn peak_bytes() -> u64 {
+        clamp(G_PEAK.load(Relaxed))
+    }
+
+    /// Live bytes attributed to `scope` (clamped at 0 — see module
+    /// docs on cross-scope frees).
+    pub fn scope_live(scope: Scope) -> u64 {
+        clamp(LIVE[scope as usize].load(Relaxed))
+    }
+
+    /// High-water mark of `scope` since the last [`reset_peak`].
+    pub fn scope_peak(scope: Scope) -> u64 {
+        clamp(PEAK[scope as usize].load(Relaxed))
+    }
+
+    /// Unclamped signed live counter of `scope` — test instrumentation
+    /// (exact deltas survive a negative baseline).
+    pub fn scope_live_raw(scope: Scope) -> i64 {
+        LIVE[scope as usize].load(Relaxed)
+    }
+
+    /// Rebase every high-water mark to the current live level and
+    /// return the process-wide live bytes at the reset — the baseline
+    /// for a peak-delta measurement window (`peak_bytes() - baseline`
+    /// is the window's allocation high-water above what was already
+    /// resident).
+    pub fn reset_peak() -> u64 {
+        for i in 0..SCOPE_COUNT {
+            PEAK[i].store(LIVE[i].load(Relaxed), Relaxed);
+        }
+        let live = G_LIVE.load(Relaxed);
+        G_PEAK.store(live, Relaxed);
+        clamp(live)
+    }
+
+    /// `(scope name, live, peak)` for every scope with nonzero
+    /// accounting, plus the process totals under the pseudo-scope
+    /// names used by [`publish`].
+    pub fn snapshot() -> Vec<(&'static str, u64, u64)> {
+        ALL_SCOPES
+            .iter()
+            .filter_map(|&s| {
+                let (live, peak) = (scope_live(s), scope_peak(s));
+                (live > 0 || peak > 0).then(|| (s.name(), live, peak))
+            })
+            .collect()
+    }
+
+    /// Write the accounting into the metrics registry:
+    /// `cvlr_mem_live_bytes{scope=…}` / `cvlr_mem_peak_bytes{scope=…}`
+    /// per active scope, plus the process-wide
+    /// `cvlr_mem_process_live_bytes` / `cvlr_mem_process_peak_bytes`
+    /// gauges. Called at scrape/snapshot time (`GET /v1/metrics`,
+    /// `--metrics-out`), not on the allocation path.
+    pub fn publish() {
+        use crate::obs::metrics;
+        for (name, live, peak) in snapshot() {
+            metrics::set_labeled_gauge(
+                "cvlr_mem_live_bytes",
+                "Live heap bytes attributed to each allocation scope.",
+                &[("scope", name)],
+                live as f64,
+            );
+            metrics::set_labeled_gauge(
+                "cvlr_mem_peak_bytes",
+                "High-water heap bytes per allocation scope since the last reset.",
+                &[("scope", name)],
+                peak as f64,
+            );
+        }
+        metrics::gauge(
+            "cvlr_mem_process_live_bytes",
+            "Process-wide live heap bytes (tracking allocator).",
+        )
+        .set(live_bytes() as f64);
+        metrics::gauge(
+            "cvlr_mem_process_peak_bytes",
+            "Process-wide high-water heap bytes since the last reset.",
+        )
+        .set(peak_bytes() as f64);
+    }
+}
+
+#[cfg(not(feature = "mem-profile"))]
+mod imp {
+    //! No-op stubs: same surface, zero cost, no global allocator.
+    use super::Scope;
+
+    pub struct MemScope;
+
+    impl MemScope {
+        pub fn enter(_scope: Scope) -> MemScope {
+            MemScope
+        }
+    }
+
+    pub fn enabled() -> bool {
+        false
+    }
+
+    pub fn current_scope() -> Scope {
+        Scope::Unscoped
+    }
+
+    pub fn live_bytes() -> u64 {
+        0
+    }
+
+    pub fn peak_bytes() -> u64 {
+        0
+    }
+
+    pub fn scope_live(_scope: Scope) -> u64 {
+        0
+    }
+
+    pub fn scope_peak(_scope: Scope) -> u64 {
+        0
+    }
+
+    pub fn scope_live_raw(_scope: Scope) -> i64 {
+        0
+    }
+
+    pub fn reset_peak() -> u64 {
+        0
+    }
+
+    pub fn snapshot() -> Vec<(&'static str, u64, u64)> {
+        Vec::new()
+    }
+
+    pub fn publish() {}
+}
+
+pub use imp::{
+    current_scope, enabled, live_bytes, peak_bytes, publish, reset_peak, scope_live,
+    scope_live_raw, scope_peak, snapshot, MemScope,
+};
+
+#[cfg(all(test, feature = "mem-profile"))]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, OnceLock};
+
+    /// The `Probe` scope is exclusive to these tests, but they still
+    /// share its counters with each other — serialize.
+    fn probe_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    const MIB: usize = 1 << 20;
+
+    #[test]
+    fn scope_stack_nests_and_restores() {
+        let _guard = probe_lock().lock().unwrap();
+        assert_eq!(current_scope(), Scope::Unscoped);
+        {
+            let _a = MemScope::enter(Scope::Probe);
+            assert_eq!(current_scope(), Scope::Probe);
+            {
+                let _b = MemScope::enter(Scope::ScoreBatch);
+                assert_eq!(current_scope(), Scope::ScoreBatch);
+            }
+            assert_eq!(current_scope(), Scope::Probe, "inner drop restores outer scope");
+        }
+        assert_eq!(current_scope(), Scope::Unscoped);
+    }
+
+    #[test]
+    fn alloc_charges_the_active_scope_exactly() {
+        let _guard = probe_lock().lock().unwrap();
+        let before = scope_live_raw(Scope::Probe);
+        let buf: Vec<u8> = {
+            let _scope = MemScope::enter(Scope::Probe);
+            Vec::with_capacity(MIB)
+        };
+        let held = scope_live_raw(Scope::Probe);
+        assert!(
+            held - before >= MIB as i64,
+            "probe scope grew by {} after a {MIB}-byte alloc",
+            held - before
+        );
+        // freed outside any scope: the probe's live counter keeps the
+        // charge (attribution is a profile, not a ledger — the free is
+        // billed to Unscoped)
+        drop(buf);
+        assert_eq!(scope_live_raw(Scope::Probe), held, "unscoped free must not touch the probe");
+    }
+
+    #[test]
+    fn cross_thread_allocations_stay_isolated() {
+        let _guard = probe_lock().lock().unwrap();
+        let _scope = MemScope::enter(Scope::Probe);
+        let before = scope_live_raw(Scope::Probe);
+        // the spawned thread starts Unscoped: its allocations must not
+        // charge this thread's probe scope
+        std::thread::spawn(|| {
+            assert_eq!(current_scope(), Scope::Unscoped);
+            let v: Vec<u8> = Vec::with_capacity(4 * MIB);
+            drop(v);
+        })
+        .join()
+        .unwrap();
+        let after = scope_live_raw(Scope::Probe);
+        assert!(
+            (after - before).unsigned_abs() < MIB as u64,
+            "probe scope moved by {} bytes from another thread's traffic",
+            after - before
+        );
+    }
+
+    #[test]
+    fn dealloc_in_other_scope_is_underflow_safe() {
+        let _guard = probe_lock().lock().unwrap();
+        // allocate unscoped, free inside the probe scope: the probe's
+        // signed counter may go negative; the clamped surface must not
+        // underflow and the process stays alive
+        let buf: Vec<u8> = Vec::with_capacity(2 * MIB);
+        let raw_before = scope_live_raw(Scope::Probe);
+        {
+            let _scope = MemScope::enter(Scope::Probe);
+            drop(buf);
+        }
+        let raw_after = scope_live_raw(Scope::Probe);
+        assert!(
+            raw_after <= raw_before - (2 * MIB) as i64,
+            "the free was charged to the probe scope"
+        );
+        // clamped view never wraps to a huge unsigned value
+        let clamped = scope_live(Scope::Probe);
+        assert!(clamped < u64::MAX / 2, "clamp failed: {clamped}");
+    }
+
+    #[test]
+    fn peaks_track_high_water_above_a_reset_baseline() {
+        let _guard = probe_lock().lock().unwrap();
+        // Exact assertions use the Probe scope: only these serialized
+        // tests touch its counters, while the *global* counters see
+        // every parallel test thread in this process and only admit
+        // monotonicity checks.
+        let _scope = MemScope::enter(Scope::Probe);
+        reset_peak();
+        let raw_base = scope_live_raw(Scope::Probe);
+        let g_peak_before = peak_bytes();
+        let buf: Vec<u8> = Vec::with_capacity(8 * MIB);
+        let scope_delta = scope_peak(Scope::Probe) as i64 - raw_base;
+        let g_peak_held = peak_bytes();
+        drop(buf);
+        assert!(
+            scope_delta >= (8 * MIB) as i64,
+            "probe peak rose {scope_delta} over an 8 MiB allocation"
+        );
+        // the mark survives the free (nothing else resets concurrently:
+        // reset_peak's only other callers are the single-threaded bench
+        // binaries)
+        assert!(scope_peak(Scope::Probe) as i64 - raw_base >= (8 * MIB) as i64);
+        assert!(g_peak_held >= g_peak_before, "global peak is monotone until reset");
+        assert!(peak_bytes() >= g_peak_held, "global peak must survive the free");
+    }
+
+    #[test]
+    fn snapshot_names_match_the_span_taxonomy() {
+        assert!(enabled());
+        for s in ALL_SCOPES {
+            assert!(!s.name().is_empty());
+        }
+        // snapshot only reports touched scopes, and every entry is a
+        // known scope name
+        for (name, _, _) in snapshot() {
+            assert!(ALL_SCOPES.iter().any(|s| s.name() == name), "unknown scope `{name}`");
+        }
+    }
+}

@@ -18,6 +18,21 @@
 //!
 //! Naming scheme: `cvlr_<subsystem>_<what>[_total|_seconds]` —
 //! counters end in `_total`, latency histograms in `_seconds`.
+//!
+//! Two extensions on the base schema:
+//!
+//! * **Labeled gauge families** ([`set_labeled_gauge`]) — one family
+//!   name, many `{label="value"}` series, last-write-wins per series.
+//!   Used by `obs::mem` for the per-scope memory gauges
+//!   (`cvlr_mem_live_bytes{scope=…}`) and the fleet-federation stale
+//!   markers.
+//! * **Exemplars** ([`Histogram::observe_with_exemplar`]) — each
+//!   bucket retains the trace span id of its most recent observation
+//!   and renders it as an OpenMetrics exemplar
+//!   (`… # {trace_span="17"} 0.53`), so a fat latency bucket links
+//!   straight to the span in the Chrome trace that caused it. Only
+//!   observations that carry a span id (tracing active) leave
+//!   exemplars; a quiet registry renders byte-identical to before.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -69,14 +84,37 @@ pub struct Histogram {
     edges: Vec<f64>,
     /// `edges.len() + 1` buckets; the last one is `+Inf`.
     buckets: Vec<AtomicU64>,
+    /// Per-bucket exemplar: (trace span id, observed value bits) of the
+    /// bucket's most recent id-carrying observation; id 0 = none. Two
+    /// independent relaxed stores — a racing reader can pair an id with
+    /// the value of a neighboring observation in the *same bucket*,
+    /// which is within the bucket's factor-of-2 resolution anyway.
+    exemplars: Vec<(AtomicU64, AtomicU64)>,
     sum_bits: AtomicU64,
     count: AtomicU64,
+}
+
+/// One retained bucket exemplar: the observed value and the trace span
+/// that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Exemplar {
+    pub span_id: u64,
+    pub value: f64,
 }
 
 impl Histogram {
     fn new(help: &'static str, edges: Vec<f64>) -> Histogram {
         let buckets = (0..=edges.len()).map(|_| AtomicU64::new(0)).collect();
-        Histogram { help, edges, buckets, sum_bits: AtomicU64::new(0), count: AtomicU64::new(0) }
+        let exemplars =
+            (0..=edges.len()).map(|_| (AtomicU64::new(0), AtomicU64::new(0))).collect();
+        Histogram {
+            help,
+            edges,
+            buckets,
+            exemplars,
+            sum_bits: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
     }
 
     /// Bucket index a value lands in (`edges.len()` = the `+Inf`
@@ -103,6 +141,28 @@ impl Histogram {
     /// sites timing stages).
     pub fn observe_secs(&self, secs: f64) {
         self.observe(secs);
+    }
+
+    /// Observe a value and, when `span_id` is nonzero (tracing was
+    /// active at the call site), retain it as the bucket's exemplar —
+    /// most recent wins. `span_id == 0` degrades to a plain
+    /// [`Histogram::observe`].
+    pub fn observe_with_exemplar(&self, v: f64, span_id: u64) {
+        self.observe(v);
+        if span_id != 0 {
+            let (id, bits) = &self.exemplars[self.bucket_index(v)];
+            bits.store(v.to_bits(), Ordering::Relaxed);
+            id.store(span_id, Ordering::Relaxed);
+        }
+    }
+
+    /// The retained exemplar of bucket `i` (`edges.len()` = `+Inf`),
+    /// if any observation with a span id ever landed there.
+    pub fn exemplar(&self, i: usize) -> Option<Exemplar> {
+        let (id, bits) = &self.exemplars[i];
+        let span_id = id.load(Ordering::Relaxed);
+        (span_id != 0)
+            .then(|| Exemplar { span_id, value: f64::from_bits(bits.load(Ordering::Relaxed)) })
     }
 
     pub fn count(&self) -> u64 {
@@ -150,9 +210,18 @@ pub fn latency_edges() -> Vec<f64> {
     (0..28).map(|i| 1e-6 * (1u64 << i) as f64).collect()
 }
 
+/// One labeled gauge family: shared help text, one last-write-wins
+/// value per rendered label set (the BTreeMap key is the canonical
+/// `label="value",…` string, so rendering is deterministic).
+struct LabeledFamily {
+    help: &'static str,
+    series: BTreeMap<String, f64>,
+}
+
 struct Registry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    labeled_gauges: Mutex<BTreeMap<String, LabeledFamily>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -161,6 +230,7 @@ fn registry() -> &'static Registry {
     REG.get_or_init(|| Registry {
         counters: Mutex::new(BTreeMap::new()),
         gauges: Mutex::new(BTreeMap::new()),
+        labeled_gauges: Mutex::new(BTreeMap::new()),
         histograms: Mutex::new(BTreeMap::new()),
     })
 }
@@ -185,6 +255,33 @@ pub fn gauge(name: &str, help: &'static str) -> Arc<Gauge> {
         .entry(name.to_string())
         .or_insert_with(|| Arc::new(Gauge { help, bits: AtomicU64::new(0.0f64.to_bits()) }))
         .clone()
+}
+
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Canonical `key="value",…` rendering of a label set.
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Set one series of a labeled gauge family, registering the family on
+/// first use (its help text wins). Series are last-write-wins and
+/// persist until overwritten — callers re-set them at snapshot time
+/// (`obs::mem::publish`, the fleet scrape), so a scrape always sees
+/// the latest value.
+pub fn set_labeled_gauge(name: &str, help: &'static str, labels: &[(&str, &str)], v: f64) {
+    let mut families = registry().labeled_gauges.lock().unwrap();
+    let fam = families
+        .entry(name.to_string())
+        .or_insert_with(|| LabeledFamily { help, series: BTreeMap::new() });
+    fam.series.insert(render_labels(labels), v);
 }
 
 /// Get or register a latency histogram over [`latency_edges`].
@@ -298,9 +395,11 @@ pub fn register_defaults() {
 }
 
 /// Render the registry in Prometheus text exposition format
-/// (deterministic: series sorted by name, counters → gauges →
-/// histograms). Histogram buckets are cumulative with `le` labels and
-/// a final `+Inf`, followed by `_sum` and `_count`.
+/// (deterministic: series sorted by name, counters → gauges → labeled
+/// gauge families → histograms). Histogram buckets are cumulative with
+/// `le` labels and a final `+Inf`, followed by `_sum` and `_count`;
+/// buckets that retained an exemplar append the OpenMetrics
+/// `# {trace_span="…"} value` suffix.
 pub fn render() -> String {
     let reg = registry();
     let mut out = String::new();
@@ -312,19 +411,38 @@ pub fn render() -> String {
         out.push_str(&format!("# HELP {name} {}\n# TYPE {name} gauge\n", g.help));
         out.push_str(&format!("{name} {}\n", g.get()));
     }
+    for (name, fam) in reg.labeled_gauges.lock().unwrap().iter() {
+        out.push_str(&format!("# HELP {name} {}\n# TYPE {name} gauge\n", fam.help));
+        for (labels, v) in &fam.series {
+            out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+        }
+    }
     for (name, h) in reg.histograms.lock().unwrap().iter() {
         out.push_str(&format!("# HELP {name} {}\n# TYPE {name} histogram\n", h.help));
+        let counts = h.bucket_counts();
         let mut cum = 0u64;
-        for (edge, count) in h.edges.iter().zip(h.bucket_counts()) {
+        for (i, (edge, count)) in h.edges.iter().zip(&counts).enumerate() {
             cum += count;
-            out.push_str(&format!("{name}_bucket{{le=\"{edge}\"}} {cum}\n"));
+            out.push_str(&format!("{name}_bucket{{le=\"{edge}\"}} {cum}"));
+            push_exemplar(&mut out, h, i);
+            out.push('\n');
         }
-        cum += h.bucket_counts().last().copied().unwrap_or(0);
-        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        cum += counts.last().copied().unwrap_or(0);
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}"));
+        push_exemplar(&mut out, h, h.edges.len());
+        out.push('\n');
         out.push_str(&format!("{name}_sum {}\n", h.sum()));
         out.push_str(&format!("{name}_count {}\n", h.count()));
     }
     out
+}
+
+/// Append the OpenMetrics exemplar suffix of bucket `i`, if one was
+/// retained: ` # {trace_span="17"} 0.53`.
+fn push_exemplar(out: &mut String, h: &Histogram, i: usize) {
+    if let Some(ex) = h.exemplar(i) {
+        out.push_str(&format!(" # {{trace_span=\"{}\"}} {}", ex.span_id, ex.value));
+    }
 }
 
 #[cfg(test)]
@@ -393,6 +511,67 @@ mod tests {
         let h = histogram("test_metrics_same_seconds", "h");
         h.observe(0.5);
         assert_eq!(histogram("test_metrics_same_seconds", "h").count(), 1);
+    }
+
+    #[test]
+    fn exemplar_retention_most_recent_wins() {
+        let h = Histogram::new("test", vec![0.1, 1.0]);
+        assert_eq!(h.exemplar(0), None, "no exemplar before any id-carrying observation");
+        h.observe_with_exemplar(0.05, 11);
+        assert_eq!(h.exemplar(0), Some(Exemplar { span_id: 11, value: 0.05 }));
+        // a later observation in the same bucket replaces the exemplar
+        h.observe_with_exemplar(0.0625, 12);
+        assert_eq!(h.exemplar(0), Some(Exemplar { span_id: 12, value: 0.0625 }));
+        // other buckets are independent; span id 0 leaves no exemplar
+        h.observe_with_exemplar(0.5, 13);
+        h.observe_with_exemplar(5.0, 0);
+        assert_eq!(h.exemplar(1), Some(Exemplar { span_id: 13, value: 0.5 }));
+        assert_eq!(h.exemplar(2), None, "id 0 must not be retained");
+        assert_eq!(h.count(), 4, "exemplar observations still count");
+    }
+
+    #[test]
+    fn exemplars_render_as_openmetrics_suffix() {
+        let h = histogram_with_edges("test_exemplar_demo_seconds", "demo", vec![0.1, 1.0]);
+        h.observe_with_exemplar(0.0625, 17);
+        let rendered = render();
+        let line = rendered
+            .lines()
+            .find(|l| l.starts_with("test_exemplar_demo_seconds_bucket{le=\"0.1\"}"))
+            .expect("bucket line present");
+        assert_eq!(line, "test_exemplar_demo_seconds_bucket{le=\"0.1\"} 1 # {trace_span=\"17\"} 0.0625");
+        // buckets without exemplars render exactly as before
+        let plain = rendered
+            .lines()
+            .find(|l| l.starts_with("test_exemplar_demo_seconds_bucket{le=\"1\"}"))
+            .unwrap();
+        assert_eq!(plain, "test_exemplar_demo_seconds_bucket{le=\"1\"} 1");
+        // the exemplar suffix still ends in a numeric token, so naive
+        // `rsplit(' ')` value parsers keep working
+        let last = line.rsplit(' ').next().unwrap();
+        assert!(last.parse::<f64>().is_ok());
+    }
+
+    #[test]
+    fn labeled_gauges_render_per_series_and_overwrite() {
+        set_labeled_gauge("test_labeled_bytes", "labeled demo", &[("scope", "alpha")], 10.0);
+        set_labeled_gauge("test_labeled_bytes", "labeled demo", &[("scope", "beta")], 20.0);
+        set_labeled_gauge("test_labeled_bytes", "labeled demo", &[("scope", "alpha")], 30.0);
+        let rendered = render();
+        let block: Vec<&str> =
+            rendered.lines().filter(|l| l.contains("test_labeled_bytes")).collect();
+        assert_eq!(
+            block,
+            vec![
+                "# HELP test_labeled_bytes labeled demo",
+                "# TYPE test_labeled_bytes gauge",
+                "test_labeled_bytes{scope=\"alpha\"} 30",
+                "test_labeled_bytes{scope=\"beta\"} 20",
+            ]
+        );
+        // label values are escaped
+        set_labeled_gauge("test_labeled_esc", "esc", &[("addr", "a\"b\\c")], 1.0);
+        assert!(render().contains("test_labeled_esc{addr=\"a\\\"b\\\\c\"} 1"));
     }
 
     /// Golden exposition block for one histogram (values chosen exactly

@@ -1,7 +1,7 @@
 //! Observability — the process-wide evidence layer behind the paper's
 //! asymptotic claims: where a discover run actually spends its time.
 //!
-//! Two std-only halves:
+//! Three std-only parts:
 //!
 //! * [`trace`] — a lock-cheap span recorder at **stage** granularity
 //!   (GES sweep → score batch → fold-core Gram build → factorization;
@@ -13,13 +13,23 @@
 //!   coordinator trace, so one view shows the whole fleet.
 //! * [`metrics`] — a process-global registry of counters, gauges and
 //!   log-bucketed latency histograms rendered in Prometheus text
-//!   exposition format at `GET /v1/metrics`.
+//!   exposition format at `GET /v1/metrics`. Histogram buckets retain
+//!   OpenMetrics exemplars linking their latest observation to the
+//!   trace span that produced it.
+//! * [`mem`] — a tracking global allocator (feature `mem-profile`, on
+//!   by default) charging every allocation to the thread's active
+//!   stage scope, so `cvlr_mem_live_bytes{scope=…}` /
+//!   `cvlr_mem_peak_bytes{scope=…}` prove the paper's O(n) *space*
+//!   claim stage by stage.
 //!
 //! Overhead discipline: with no sink attached (tracing disabled, no
 //! capture in flight) every span call site is one relaxed atomic load
 //! and an early return — no clock read, no allocation. Metrics are
 //! always-on relaxed-atomic bumps, but only at stage granularity (once
-//! per batch/build/sweep), never per score.
+//! per batch/build/sweep), never per score. The allocator adds two
+//! relaxed adds + two relaxed maxes per alloc and never allocates on
+//! its own path.
 
+pub mod mem;
 pub mod metrics;
 pub mod trace;

@@ -46,6 +46,11 @@ static ENABLED: AtomicBool = AtomicBool::new(false);
 static CAPTURES: AtomicUsize = AtomicUsize::new(0);
 /// Trace-local thread-id allocator (small ints, not OS tids).
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+/// Span-id allocator: every recorded span gets a process-unique id so
+/// metric exemplars (`# {trace_span="…"}`) can link a histogram bucket
+/// to the exact span in the exported trace. 0 means "no id" (inert
+/// guards, instants).
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
 
 /// One completed trace event. `ts_us` is microseconds since the
 /// process trace epoch ([`epoch`]); remote events are re-based by the
@@ -62,6 +67,9 @@ pub struct SpanEvent {
     pub tid: u64,
     /// Chrome phase `i` (instant) instead of `X` (complete span).
     pub instant: bool,
+    /// Process-unique span id (0 = none): the exemplar link target,
+    /// exported as the `span_id` arg.
+    pub id: u64,
     pub args: Vec<(String, String)>,
 }
 
@@ -185,6 +193,7 @@ struct LiveSpan {
     name: &'static str,
     cat: &'static str,
     start: Instant,
+    id: u64,
     args: Vec<(String, String)>,
 }
 
@@ -195,7 +204,8 @@ pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
     }
     let _ = epoch();
     LOCAL.with(|cell| cell.borrow_mut().depth += 1);
-    SpanGuard { live: Some(LiveSpan { name, cat, start: Instant::now(), args: Vec::new() }) }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    SpanGuard { live: Some(LiveSpan { name, cat, start: Instant::now(), id, args: Vec::new() }) }
 }
 
 impl SpanGuard {
@@ -205,6 +215,13 @@ impl SpanGuard {
             live.args.push((key.to_string(), value.into()));
         }
         self
+    }
+
+    /// The span's process-unique id, or 0 when no sink is attached —
+    /// feed it to [`crate::obs::metrics::Histogram::observe_with_exemplar`]
+    /// so the latency bucket links back to this span in the trace.
+    pub fn id(&self) -> u64 {
+        self.live.as_ref().map(|l| l.id).unwrap_or(0)
     }
 }
 
@@ -226,6 +243,7 @@ impl Drop for SpanGuard {
             pid: 1,
             tid,
             instant: false,
+            id: live.id,
             args: live.args,
         });
     }
@@ -247,6 +265,7 @@ pub fn instant(name: &'static str, cat: &'static str, args: Vec<(String, String)
         pid: 1,
         tid,
         instant: true,
+        id: 0,
         args,
     });
 }
@@ -338,9 +357,15 @@ fn event_json(ev: &SpanEvent) -> Json {
     }
     fields.push(("pid", Json::Num(ev.pid as f64)));
     fields.push(("tid", Json::Num(ev.tid as f64)));
-    if !ev.args.is_empty() {
-        let args: Vec<(&str, Json)> =
+    // the span id rides in args so Perfetto's detail pane shows the
+    // exemplar link target (`cvlr_*_bucket … # {trace_span="id"}`)
+    let id_str = (ev.id != 0).then(|| ev.id.to_string());
+    if !ev.args.is_empty() || id_str.is_some() {
+        let mut args: Vec<(&str, Json)> =
             ev.args.iter().map(|(k, v)| (k.as_str(), Json::str(v.clone()))).collect();
+        if let Some(id) = &id_str {
+            args.push(("span_id", Json::str(id.clone())));
+        }
         fields.push(("args", Json::obj(args)));
     }
     Json::obj(fields)
@@ -502,6 +527,41 @@ mod tests {
     }
 
     #[test]
+    fn span_ids_are_unique_and_exported() {
+        let _guard = test_lock().lock().unwrap();
+        disable();
+        clear();
+        // inert guards carry no id
+        assert_eq!(span("test-inert", "test").id(), 0);
+        enable();
+        let (id_a, id_b);
+        {
+            let a = span("test-id-a", "test");
+            id_a = a.id();
+        }
+        {
+            let b = span("test-id-b", "test");
+            id_b = b.id();
+        }
+        disable();
+        assert!(id_a != 0 && id_b != 0 && id_a != id_b, "live spans get distinct nonzero ids");
+        let doc = json::parse(&export_json()).unwrap();
+        let events = events_of(&doc);
+        for (name, id) in [("test-id-a", id_a), ("test-id-b", id_b)] {
+            let ev = events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("event `{name}` missing"));
+            assert_eq!(
+                ev.get("args").and_then(|a| a.get("span_id")).and_then(Json::as_str),
+                Some(id.to_string().as_str()),
+                "span id must be exported in args"
+            );
+        }
+        clear();
+    }
+
+    #[test]
     fn capture_collects_thread_events_rebased_without_global_sink() {
         let _guard = test_lock().lock().unwrap();
         disable();
@@ -540,6 +600,7 @@ mod tests {
             pid,
             tid: 1,
             instant: false,
+            id: 0,
             args: Vec::new(),
         });
         disable();

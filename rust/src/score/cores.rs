@@ -244,8 +244,9 @@ impl SetCores {
     /// gated) sum to the full Gram, and every centered core is an
     /// O(m²) downdate + rank-one correction of them.
     pub fn build(lam: &Mat, folds: &[(Vec<usize>, Vec<usize>)], threads: usize) -> SetCores {
-        let _span = crate::obs::trace::span("fold-core-build", "score")
+        let span = crate::obs::trace::span("fold-core-build", "score")
             .arg("m", lam.cols.to_string());
+        let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::FoldCoreBuild);
         let sw = crate::util::Stopwatch::start();
         let m = lam.cols;
         let q = folds.len();
@@ -306,7 +307,7 @@ impl SetCores {
             train_mean.push(mu);
             sizes.push((n0, n1));
         }
-        crate::obs::metrics::fold_core_build_seconds().observe(sw.secs());
+        crate::obs::metrics::fold_core_build_seconds().observe_with_exemplar(sw.secs(), span.id());
         SetCores {
             test_blocks,
             test_colsum,
@@ -328,6 +329,31 @@ impl SetCores {
     /// Factor columns m.
     pub fn cols(&self) -> usize {
         self.gram.rows
+    }
+
+    /// Resident heap bytes of this bundle: every retained matrix buffer
+    /// (fold test blocks, per-fold Grams, centered self-cores, the full
+    /// Gram) plus the column-sum / train-mean vectors. Struct overhead
+    /// (Vec headers, the `sizes` pairs) is negligible next to the
+    /// O(n·m) fold blocks and is not counted.
+    pub fn resident_bytes(&self) -> u64 {
+        let mats = self
+            .test_blocks
+            .iter()
+            .chain(self.test_gram.iter())
+            .chain(self.train_self.iter())
+            .chain(self.test_self.iter())
+            .map(Mat::resident_bytes)
+            .sum::<u64>()
+            + self.gram.resident_bytes();
+        let f64s = self
+            .test_colsum
+            .iter()
+            .chain(self.train_mean.iter())
+            .map(|v| v.capacity())
+            .sum::<usize>()
+            + self.colsum.capacity();
+        mats + (f64s * std::mem::size_of::<f64>()) as u64
     }
 
     /// The marginal core view of fold `f`.
@@ -352,11 +378,23 @@ pub struct PairCores {
     pub test_cross: Vec<Mat>,
 }
 
+impl PairCores {
+    /// Resident heap bytes of the per-fold cross-core matrices.
+    pub fn resident_bytes(&self) -> u64 {
+        self.train_cross
+            .iter()
+            .chain(self.test_cross.iter())
+            .map(Mat::resident_bytes)
+            .sum()
+    }
+}
+
 /// Build the cross-cores of a (z, x) pair from their self-core caches.
 /// Both must have been built over the same fold assignment (the
 /// provider guarantees it — folds are a function of (n, Q) only).
 pub fn pair_cores(z: &SetCores, x: &SetCores, threads: usize) -> PairCores {
     let _span = crate::obs::trace::span("pair-cores", "score");
+    let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::PairCores);
     let q = z.num_folds();
     assert_eq!(q, x.num_folds(), "pair_cores needs matching fold counts");
     let (mz, mx) = (z.cols(), x.cols());
@@ -569,6 +607,21 @@ impl FoldCoreCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Resident heap bytes across every cached bundle (matrix buffers
+    /// plus key vectors) — walked under the lock, so keep callers on
+    /// stats paths, not hot score paths.
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .map
+            .iter()
+            .map(|(k, slot)| {
+                slot.cores.resident_bytes()
+                    + (k.capacity() * std::mem::size_of::<usize>()) as u64
+            })
+            .sum()
+    }
 }
 
 /// One resident cross-core bundle plus its second-chance bit.
@@ -719,6 +772,21 @@ impl PairCoreCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Resident heap bytes across every cached bundle (matrix buffers
+    /// plus parent-key vectors) — walked under the lock; stats paths
+    /// only.
+    pub fn resident_bytes(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .map
+            .iter()
+            .map(|((_, parents), slot)| {
+                slot.cores.resident_bytes()
+                    + (parents.capacity() * std::mem::size_of::<usize>()) as u64
+            })
+            .sum()
     }
 }
 
@@ -912,6 +980,39 @@ mod tests {
         assert_eq!(cache.len(), 2);
         assert!(cache.get(0, &[1]).is_some(), "referenced entry survived");
         assert!(cache.get(1, &[2]).is_none(), "B was the victim");
+    }
+
+    /// Byte accounting covers every retained buffer and tracks cache
+    /// population: at minimum the fold blocks (n·m doubles) plus the
+    /// full Gram, and a cleared cache reports zero.
+    #[test]
+    fn resident_bytes_track_cache_population() {
+        let lam = Arc::new(random_mat(40, 3, 30));
+        let folds = stride_folds(40, 4);
+        let cores = SetCores::build(&lam, &folds, 1);
+        let floor = (40 * 3 + 3 * 3) * std::mem::size_of::<f64>() as u64;
+        assert!(
+            cores.resident_bytes() >= floor,
+            "SetCores must count at least the fold blocks + Gram ({} < {floor})",
+            cores.resident_bytes()
+        );
+        let cache = FoldCoreCache::new();
+        assert_eq!(cache.resident_bytes(), 0);
+        let mut factor = || lam.clone();
+        cache.get_or_build(&[0, 1], &folds, 1, &mut factor);
+        let one = cache.resident_bytes();
+        assert!(one >= cores.resident_bytes(), "cache counts the full bundle");
+        cache.get_or_build(&[2], &folds, 1, &mut factor);
+        assert!(cache.resident_bytes() > one, "bytes grow with residency");
+        cache.clear();
+        assert_eq!(cache.resident_bytes(), 0, "cleared caches report zero");
+
+        let z = SetCores::build(&random_mat(40, 2, 31), &folds, 1);
+        let pcache = PairCoreCache::new();
+        assert_eq!(pcache.resident_bytes(), 0);
+        let bundle = pcache.get_or_build(0, &[1], &z, &cores, 1);
+        assert!(pcache.resident_bytes() >= bundle.resident_bytes());
+        assert!(bundle.resident_bytes() >= (2 * 4 * 2 * 3 * 8) as u64);
     }
 
     #[test]

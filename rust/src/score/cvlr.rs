@@ -421,6 +421,21 @@ impl<K: CvLrKernel> ScoreBackend for CvLrScore<K> {
             self.fold_cores.evictions() + self.pair_cores.evictions(),
         ))
     }
+
+    /// Resident bytes across the fold-core and pair-core caches plus
+    /// the factor cache's Λ matrices (keys included).
+    fn core_cache_bytes(&self) -> Option<u64> {
+        let factors: u64 = self
+            .factor_cache
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, lam)| {
+                lam.resident_bytes() + (k.capacity() * std::mem::size_of::<usize>()) as u64
+            })
+            .sum();
+        Some(self.fold_cores.resident_bytes() + self.pair_cores.resident_bytes() + factors)
+    }
 }
 
 impl<K: CvLrKernel> LocalScore for CvLrScore<K> {

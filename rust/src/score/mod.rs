@@ -159,6 +159,17 @@ pub trait ScoreBackend: Send + Sync {
         None
     }
 
+    /// Resident heap bytes across the backend's core caches (fold-core
+    /// + pair-core bundles + factor matrices), `None` for backends
+    /// without one. The byte-accurate companion of
+    /// [`ScoreBackend::core_cache_stats`]: entry counts bound
+    /// *how many* bundles are resident, this bounds *how much* they
+    /// weigh — surfaced through `ServiceStats::core_cache_bytes`,
+    /// `/v1/stats`, and the `cvlr_service_core_cache_bytes` gauge.
+    fn core_cache_bytes(&self) -> Option<u64> {
+        None
+    }
+
     /// Aggregate shard-dispatch counters (`distrib::ShardScoreBackend`),
     /// `None` for backends that score locally. Surfaced through
     /// `ServiceStats::shard_*` and `/v1/stats`.

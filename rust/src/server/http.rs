@@ -35,6 +35,8 @@ pub struct Request {
     pub method: String,
     /// Path without query string.
     pub path: String,
+    /// Raw query string (without the `?`), empty when absent.
+    pub query: String,
     headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
@@ -46,6 +48,16 @@ impl Request {
             .iter()
             .find(|(k, _)| k.eq_ignore_ascii_case(name))
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Value of a `key=value` query parameter (`Some("")` for a bare
+    /// `key`). No percent-decoding — the API's parameters are plain
+    /// tokens (`fleet=1`).
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            (k == name).then_some(v)
+        })
     }
 
     /// Parse the body as one strict JSON document.
@@ -225,7 +237,10 @@ fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Re
     if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
         bail!("malformed request line `{request_line}`");
     }
-    let path = target.split('?').next().unwrap_or_default().to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
     let mut headers = Vec::new();
     for line in lines {
         if line.is_empty() {
@@ -234,7 +249,7 @@ fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Re
         let (k, v) = line.split_once(':').context("malformed header line")?;
         headers.push((k.trim().to_string(), v.trim().to_string()));
     }
-    let req = Request { method, path, headers, body: Vec::new() };
+    let req = Request { method, path, query, headers, body: Vec::new() };
     let content_length: usize = match req.header("content-length") {
         Some(v) => v.trim().parse().context("bad content-length")?,
         None => 0,
@@ -331,4 +346,29 @@ pub fn request_raw(
         .with_context(|| format!("bad status line `{status_line}`"))?;
     let body_text = std::str::from_utf8(&raw[head_end + 4..]).context("response body not UTF-8")?;
     Ok((status, body_text.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Request;
+
+    fn req(path: &str, query: &str) -> Request {
+        Request {
+            method: "GET".to_string(),
+            path: path.to_string(),
+            query: query.to_string(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn query_param_parses_pairs_and_bare_keys() {
+        let r = req("/v1/metrics", "fleet=1&verbose");
+        assert_eq!(r.query_param("fleet"), Some("1"));
+        assert_eq!(r.query_param("verbose"), Some(""));
+        assert_eq!(r.query_param("missing"), None);
+        let none = req("/v1/metrics", "");
+        assert_eq!(none.query_param("fleet"), None);
+    }
 }

@@ -27,8 +27,8 @@
 //! | `GET /v1/jobs/{id}` | poll one job: state, progress, result when done |
 //! | `DELETE /v1/jobs/{id}` | cancel (honored mid-sweep for score methods) |
 //! | `POST /v1/score_batch` | stateless follower-side scoring for the distrib shard protocol: `{"dataset", "version"?, "method", "engine"?, "lowrank"?, "requests": [{"target", "parents"}]}` → `{"scores", "version"}` in request order; `404` for an unknown dataset, `409` on a version-pin mismatch (the coordinator re-pushes and retries) |
-//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions, shard dispatch/retry/hedge/degrade, stream re-pivot/residual and per-follower health), datasets |
-//! | `GET /v1/metrics` | Prometheus text exposition: process-global stage counters/histograms (`cvlr_*`) plus the `/v1/stats` service counters folded in as aggregate gauges |
+//! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions, resident cache/core-cache bytes, shard dispatch/retry/hedge/degrade, stream re-pivot/residual and per-follower health), datasets |
+//! | `GET /v1/metrics` | Prometheus text exposition: process-global stage counters/histograms (`cvlr_*`), per-scope memory gauges (`cvlr_mem_live_bytes`/`cvlr_mem_peak_bytes`), plus the `/v1/stats` service counters folded in as aggregate gauges; `?fleet=1` additionally scrapes every `--shards` follower's `/v1/metrics` on demand and appends its samples relabeled `follower="host:port"` (a failed scrape sets `cvlr_fleet_scrape_stale{follower=…} 1` instead of failing the request) |
 //! | `GET /v1/trace` | Chrome trace-event JSON snapshot of the span ring (Perfetto-loadable); the first scrape attaches the recorder, so traces cover traffic after it |
 //! | `POST /v1/shutdown` | graceful shutdown: stop accepting, drain, cancel jobs |
 //!
@@ -39,14 +39,17 @@ pub mod jobs;
 pub mod json;
 pub mod registry;
 
+use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{resolve_method, DiscoveryConfig, EngineKind, MethodKind};
+use crate::distrib::ShardClient;
 use crate::lowrank::FactorMethod;
 use crate::obs::{metrics, trace};
 use crate::score::ScoreBackend;
@@ -237,8 +240,10 @@ fn stats_json(st: &crate::coordinator::ServiceStats) -> Json {
         ("invalidations", num(st.invalidations)),
         ("warm_start_hits", num(st.warm_start_hits)),
         ("cache_entries", num(st.cache_entries)),
+        ("cache_bytes", num(st.cache_bytes)),
         ("core_cache_entries", num(st.core_cache_entries)),
         ("core_cache_evictions", num(st.core_cache_evictions)),
+        ("core_cache_bytes", num(st.core_cache_bytes)),
         ("gram_threads", num(st.gram_threads)),
         ("shard_dispatches", num(st.shard_dispatches)),
         ("shard_retries", num(st.shard_retries)),
@@ -728,15 +733,78 @@ fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
     )
 }
 
+/// Socket timeout for one federated follower scrape — deliberately
+/// tight: a hung follower must not stall the coordinator's exposition.
+const FLEET_SCRAPE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Pooled per-follower scrape clients, shared across `?fleet=1`
+/// requests so repeated scrapes reuse the keep-alive connections like
+/// the shard dispatch path does.
+type FleetClients = Mutex<HashMap<String, Arc<ShardClient>>>;
+
+/// Re-emit a follower's Prometheus exposition with a
+/// `follower="addr"` label injected into every sample line. Comment
+/// lines (`# HELP`/`# TYPE`) are dropped — the coordinator's own
+/// exposition already carries the metadata for shared metric names —
+/// while exemplar suffixes (`… # {trace_span="…"} v`) ride along
+/// untouched after the label splice.
+fn relabel_exposition(text: &str, follower: &str) -> String {
+    let label = format!(
+        "follower=\"{}\"",
+        follower.replace('\\', "\\\\").replace('"', "\\\"")
+    );
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        let t = line.trim_end();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let brace = t.find('{');
+        let space = t.find(' ');
+        match (brace, space) {
+            (Some(b), Some(s)) if b < s => {
+                out.push_str(&t[..b]);
+                out.push('{');
+                out.push_str(&label);
+                out.push(',');
+                out.push_str(&t[b + 1..]);
+            }
+            (_, Some(s)) => {
+                out.push_str(&t[..s]);
+                out.push('{');
+                out.push_str(&label);
+                out.push('}');
+                out.push_str(&t[s..]);
+            }
+            _ => continue,
+        }
+        out.push('\n');
+    }
+    out
+}
+
 /// `GET /v1/metrics` — the process-global registry in Prometheus text
 /// exposition format, with the per-service `/v1/stats` counters folded
 /// in as aggregate gauges (gauges, not counters: pool entries are
 /// LRU-evicted and retired, so the aggregates can go down).
-fn get_metrics(manager: &JobManager, registry: &DatasetRegistry) -> Response {
+///
+/// `fleet` carries the follower fleet and the pooled scrape clients
+/// when the request asked for `?fleet=1`: each follower's `/v1/metrics`
+/// is scraped on demand and appended relabeled
+/// (`follower="host:port"`); a failed scrape degrades to
+/// `cvlr_fleet_scrape_stale{follower=…} 1` in the local exposition
+/// instead of failing the request.
+fn get_metrics(
+    manager: &JobManager,
+    registry: &DatasetRegistry,
+    fleet: Option<(&[String], &FleetClients)>,
+) -> Response {
     metrics::register_defaults();
     let stats = manager.service_stats();
     let mut cache_entries = 0u64;
+    let mut cache_bytes = 0u64;
     let mut core_cache_entries = 0u64;
+    let mut core_cache_bytes = 0u64;
     let mut evictions = 0u64;
     let mut invalidations = 0u64;
     let mut warm_start_hits = 0u64;
@@ -745,7 +813,9 @@ fn get_metrics(manager: &JobManager, registry: &DatasetRegistry) -> Response {
     let mut followers_healthy = 0u64;
     for (_, st) in &stats {
         cache_entries += st.cache_entries;
+        cache_bytes += st.cache_bytes;
         core_cache_entries += st.core_cache_entries;
+        core_cache_bytes += st.core_cache_bytes;
         evictions += st.evictions;
         invalidations += st.invalidations;
         warm_start_hits += st.warm_start_hits;
@@ -756,8 +826,15 @@ fn get_metrics(manager: &JobManager, registry: &DatasetRegistry) -> Response {
     metrics::gauge("cvlr_services", "pooled score services").set(stats.len() as f64);
     metrics::gauge("cvlr_service_cache_entries", "memoized scores across pooled services")
         .set(cache_entries as f64);
+    metrics::gauge("cvlr_service_cache_bytes", "resident score-cache bytes across pooled services")
+        .set(cache_bytes as f64);
     metrics::gauge("cvlr_service_core_cache_entries", "cached fold cores across pooled services")
         .set(core_cache_entries as f64);
+    metrics::gauge(
+        "cvlr_service_core_cache_bytes",
+        "resident core-cache bytes across pooled services",
+    )
+    .set(core_cache_bytes as f64);
     metrics::gauge("cvlr_service_evictions", "score-cache evictions across pooled services")
         .set(evictions as f64);
     metrics::gauge("cvlr_service_invalidations", "append-invalidated scores across pooled services")
@@ -775,7 +852,38 @@ fn get_metrics(manager: &JobManager, registry: &DatasetRegistry) -> Response {
         metrics::gauge(&format!("cvlr_jobs_{}", state.name()), "jobs in this lifecycle state")
             .set(count as f64);
     }
-    Response::text(200, "text/plain; version=0.0.4", metrics::render())
+    // scrape followers BEFORE rendering: the stale markers a failed
+    // scrape sets must land in this very response
+    let mut remote = String::new();
+    if let Some((addrs, clients)) = fleet {
+        for addr in addrs {
+            let client = clients
+                .lock()
+                .unwrap()
+                .entry(addr.clone())
+                .or_insert_with(|| {
+                    Arc::new(ShardClient::new(addr.clone(), FLEET_SCRAPE_TIMEOUT))
+                })
+                .clone();
+            let stale = match client.get_text("/v1/metrics") {
+                Ok((200, text)) => {
+                    remote.push_str(&relabel_exposition(&text, addr));
+                    0.0
+                }
+                _ => 1.0,
+            };
+            metrics::set_labeled_gauge(
+                "cvlr_fleet_scrape_stale",
+                "1 when the last federated scrape of this follower failed",
+                &[("follower", addr)],
+                stale,
+            );
+        }
+    }
+    crate::obs::mem::publish();
+    let mut body = metrics::render();
+    body.push_str(&remote);
+    Response::text(200, "text/plain; version=0.0.4", body)
 }
 
 /// `GET /v1/trace` — snapshot the span ring as one Chrome trace-event
@@ -795,6 +903,7 @@ fn build_handler(
     shutdown: Arc<AtomicBool>,
     cfg: ServerConfig,
 ) -> Handler {
+    let fleet_clients: FleetClients = Mutex::new(HashMap::new());
     Arc::new(move |req: &Request| -> Response {
         let segs = req.segments();
         match (req.method.as_str(), segs.as_slice()) {
@@ -862,7 +971,11 @@ fn build_handler(
                 None => Response::error(400, "job id must be an integer"),
             },
             ("GET", ["v1", "stats"]) => get_stats(&manager, &registry),
-            ("GET", ["v1", "metrics"]) => get_metrics(&manager, &registry),
+            ("GET", ["v1", "metrics"]) => {
+                let fleet = (req.query_param("fleet") == Some("1"))
+                    .then_some((cfg.shards.as_slice(), &fleet_clients));
+                get_metrics(&manager, &registry, fleet)
+            }
             ("GET", ["v1", "trace"]) => get_trace(),
             ("POST", ["v1", "shutdown"]) => {
                 shutdown.store(true, Ordering::SeqCst);
@@ -884,4 +997,35 @@ fn build_handler(
             _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
         }
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::relabel_exposition;
+
+    /// Label injection covers bare names, labeled series (splicing
+    /// before existing labels), and exemplar suffixes, while comments
+    /// and blanks are dropped.
+    #[test]
+    fn relabel_injects_follower_label_per_sample() {
+        let text = "# HELP cvlr_requests_total requests\n\
+                    # TYPE cvlr_requests_total counter\n\
+                    cvlr_requests_total 7\n\
+                    cvlr_mem_peak_bytes{scope=\"factorize\"} 4096\n\
+                    cvlr_score_batch_seconds_bucket{le=\"0.1\"} 1 # {trace_span=\"17\"} 0.0625\n\
+                    \n";
+        let out = relabel_exposition(text, "127.0.0.1:7001");
+        assert_eq!(
+            out,
+            "cvlr_requests_total{follower=\"127.0.0.1:7001\"} 7\n\
+             cvlr_mem_peak_bytes{follower=\"127.0.0.1:7001\",scope=\"factorize\"} 4096\n\
+             cvlr_score_batch_seconds_bucket{follower=\"127.0.0.1:7001\",le=\"0.1\"} 1 # {trace_span=\"17\"} 0.0625\n"
+        );
+    }
+
+    #[test]
+    fn relabel_escapes_label_value() {
+        let out = relabel_exposition("m 1\n", "a\"b\\c");
+        assert_eq!(out, "m{follower=\"a\\\"b\\\\c\"} 1\n");
+    }
 }

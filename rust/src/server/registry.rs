@@ -28,6 +28,7 @@ const MAX_STRING_LEVELS: usize = 64;
 
 /// Materialize one of the paper's built-in workloads by name.
 pub fn builtin_dataset(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::Dataset);
     match name {
         "synth" => Some(generate(&SynthConfig { n, seed, ..Default::default() }).0),
         "sachs" => {
@@ -61,6 +62,7 @@ pub const BUILTIN_NAMES: [&str; 4] = ["synth", "sachs", "child", "sachs-cont"];
 ///   (see [`Dataset::standardize`]).
 /// * Empty fields are rejected — there is no missing-data handling.
 pub fn dataset_from_csv(text: &str, header: Option<bool>) -> Result<Dataset> {
+    let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::Dataset);
     let rows = parse_csv(text)?;
     if rows.is_empty() {
         bail!("csv: no rows");
@@ -304,6 +306,7 @@ impl DatasetRegistry {
     /// removed, or appended-to concurrently in the meantime, the append
     /// fails with a retry error instead of silently dropping rows.
     pub fn append_rows(&self, name: &str, rows: &Mat) -> Result<(Arc<Dataset>, u64)> {
+        let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::Dataset);
         let (ds, version) =
             self.entry(name).ok_or_else(|| anyhow!("no dataset `{name}`"))?;
         let mut updated = (*ds).clone();

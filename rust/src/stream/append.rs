@@ -117,6 +117,10 @@ impl FactorState {
     /// bit-identical factors to `lowrank::factorize` with the same
     /// kernel.
     pub fn new(kernel: Kernel, block: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> FactorState {
+        // This path factorizes directly (icl_detailed / rff_factorize)
+        // rather than through `lowrank::factorize`, so it charges the
+        // factorize memory scope itself.
+        let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::Factorize);
         if is_discrete {
             let distinct = distinct_rows(block);
             if distinct.len() <= cfg.max_rank {
@@ -193,6 +197,17 @@ impl FactorState {
         self.lambda.clone()
     }
 
+    /// Resident heap bytes of the state: the factor Λ plus the retained
+    /// pivot data/factor (or the RFF frequency table). The O(n·m)
+    /// factor dominates — the term that must stay linear in n for the
+    /// streaming space claim.
+    pub fn resident_bytes(&self) -> u64 {
+        let rff = self.rff.as_ref().map_or(0, |m| {
+            m.omega.resident_bytes() + (m.phases.capacity() * std::mem::size_of::<f64>()) as u64
+        });
+        self.lambda.resident_bytes() + self.xp.resident_bytes() + self.lp.resident_bytes() + rff
+    }
+
     /// Number of pivots (columns of Λ).
     pub fn rank(&self) -> usize {
         self.lambda.cols
@@ -238,6 +253,7 @@ impl FactorState {
     /// column layout) — it is only invoked on the rare paths that need
     /// all rows: discrete basis growth and re-pivot.
     pub fn append(&mut self, chunk: &Mat, full: &dyn Fn() -> Mat) -> AppendOutcome {
+        let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::StreamAppend);
         let mut out = AppendOutcome::default();
         if self.method == Method::Rff {
             // exact-by-construction appends: each row is the same

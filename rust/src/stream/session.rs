@@ -210,8 +210,9 @@ impl StreamBackend {
     /// re-pivot only when the residual budget is exhausted — both
     /// reported in the returned stats).
     pub fn append(&self, rows: &Mat) -> Result<AppendStats> {
-        let _span = crate::obs::trace::span("stream-append", "stream")
+        let span = crate::obs::trace::span("stream-append", "stream")
             .arg("rows", rows.rows.to_string());
+        let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::StreamAppend);
         let sw = Stopwatch::start();
         let mut ds = self.data.write().unwrap();
         let added = ds.append_rows(rows)?;
@@ -229,7 +230,8 @@ impl StreamBackend {
         self.cores.clear();
         self.pairs.clear();
         stats.seconds = sw.secs();
-        crate::obs::metrics::stream_append_seconds().observe(stats.seconds);
+        crate::obs::metrics::stream_append_seconds()
+            .observe_with_exemplar(stats.seconds, span.id());
         Ok(stats)
     }
 
@@ -318,6 +320,21 @@ impl ScoreBackend for StreamBackend {
             self.cores.len() as u64 + self.pairs.len() as u64,
             self.cores.evictions() + self.pairs.evictions(),
         ))
+    }
+
+    /// Core caches plus the live incremental factor states (the
+    /// streaming twin of `CvLrScore::core_cache_bytes`).
+    fn core_cache_bytes(&self) -> Option<u64> {
+        let states: u64 = self
+            .states
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, st)| {
+                st.resident_bytes() + (k.capacity() * std::mem::size_of::<usize>()) as u64
+            })
+            .sum();
+        Some(self.cores.resident_bytes() + self.pairs.resident_bytes() + states)
     }
 
     fn stream_stats(&self) -> Option<(u64, f64)> {

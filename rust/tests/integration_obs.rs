@@ -204,6 +204,90 @@ fn metrics_endpoint_serves_prometheus_text() {
     server.stop();
 }
 
+/// Fleet federation: `GET /v1/metrics?fleet=1` on a coordinator merges
+/// every follower's exposition with a `follower="host:port"` label per
+/// sample, and a dead follower degrades to a
+/// `cvlr_fleet_scrape_stale{follower=…} 1` marker instead of failing
+/// the scrape.
+#[test]
+fn federated_metrics_merge_followers_and_mark_stale() {
+    let f1 = start_follower();
+    let f2 = start_follower();
+    let (a1, a2) = (f1.addr().to_string(), f2.addr().to_string());
+    let coord = Server::start(ServerConfig {
+        port: 0,
+        job_workers: 1,
+        builtin_n: 60,
+        cache_capacity: Some(1 << 16),
+        shards: vec![a1.clone(), a2.clone()],
+        ..Default::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.addr();
+
+    // without ?fleet=1 the coordinator serves local-only exposition
+    let (status, text) = request_raw(addr, "GET", "/v1/metrics", None).expect("plain scrape");
+    assert_eq!(status, 200);
+    assert!(
+        !text.contains("follower=\""),
+        "unfederated scrape must not carry follower-labeled series"
+    );
+
+    // federated: both followers' series appear, relabeled, fresh
+    let (status, text) =
+        request_raw(addr, "GET", "/v1/metrics?fleet=1", None).expect("fleet scrape");
+    assert_eq!(status, 200);
+    for a in [&a1, &a2] {
+        assert!(
+            text.contains(&format!("cvlr_requests_total{{follower=\"{a}\"}}")),
+            "follower {a} series missing from:\n{text}"
+        );
+        assert!(
+            text.contains(&format!("cvlr_fleet_scrape_stale{{follower=\"{a}\"}} 0")),
+            "follower {a} should be marked fresh:\n{text}"
+        );
+    }
+    if cvlr::obs::mem::enabled() {
+        assert!(
+            text.contains("cvlr_mem_peak_bytes{scope="),
+            "per-scope memory gauges missing from the federated exposition"
+        );
+    }
+    // every sample line still parses: strip an exemplar suffix first,
+    // then the last space-separated token must be numeric
+    for line in text.lines() {
+        if line.starts_with('#') || line.is_empty() {
+            continue;
+        }
+        let sample = line.split(" # ").next().unwrap();
+        let (_, value) = sample.rsplit_once(' ').expect("sample line has a value");
+        assert!(value.parse::<f64>().is_ok(), "non-numeric sample: {line}");
+    }
+
+    // kill one follower: its samples drop out, the stale marker flips,
+    // the healthy follower keeps federating and the scrape still 200s
+    f2.stop();
+    let (status, text) =
+        request_raw(addr, "GET", "/v1/metrics?fleet=1", None).expect("degraded scrape");
+    assert_eq!(status, 200);
+    assert!(
+        text.contains(&format!("cvlr_fleet_scrape_stale{{follower=\"{a2}\"}} 1")),
+        "dead follower {a2} not marked stale:\n{text}"
+    );
+    assert!(
+        !text.contains(&format!("cvlr_requests_total{{follower=\"{a2}\"}}")),
+        "dead follower {a2} still contributes relabeled series"
+    );
+    assert!(
+        text.contains(&format!("cvlr_requests_total{{follower=\"{a1}\"}}")),
+        "healthy follower {a1} dropped out of the federated exposition"
+    );
+    assert!(text.contains(&format!("cvlr_fleet_scrape_stale{{follower=\"{a1}\"}} 0")));
+
+    coord.stop();
+    f1.stop();
+}
+
 /// `GET /v1/trace`: the first scrape attaches the recorder, later
 /// scrapes return a Chrome trace-event document covering the traffic
 /// in between.
