@@ -43,7 +43,7 @@ use crate::score::cvlr::{CvLrScore, NativeCvLrKernel};
 use crate::score::folds::CvParams;
 use crate::score::marginal::MargLrScore;
 use crate::score::sc::ScScore;
-use crate::score::{ScalarBackend, ScoreBackend};
+use crate::score::{ScalarBackend, ScoreBackend, ScoreRequest};
 use crate::search::ges::{ges, GesConfig};
 use crate::search::mmmb::{mmmb, MmConfig};
 use crate::search::pc::{pc, PcConfig};
@@ -166,6 +166,14 @@ pub struct DiscoveryConfig {
     /// (auto-registration). Empty picks a generic name; the CLI sets it
     /// from `--data`, the server from the job's dataset name.
     pub shard_dataset: String,
+    /// End-to-end deadline of one discovery run, in milliseconds
+    /// (`None` = unlimited, the default). The budget threads through
+    /// shard dispatch/hedge/retry decisions, the follower socket
+    /// timeouts and the `deadline_ms` wire field; when it expires
+    /// mid-run, scoring degrades to local and the run returns a typed
+    /// [`crate::util::DeadlineExceeded`] error rather than a graph
+    /// computed from partial scores.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for DiscoveryConfig {
@@ -183,6 +191,7 @@ impl Default for DiscoveryConfig {
             artifacts_dir: "artifacts".to_string(),
             shards: Vec::new(),
             shard_dataset: String::new(),
+            deadline_ms: None,
         }
     }
 }
@@ -448,6 +457,49 @@ pub fn score_backend_for(
     }
 }
 
+/// Per-run deadline enforcement on the GES scoring loop: each sweep is
+/// submitted in a few wide chunks, and the remaining chunks are skipped
+/// (padded with zeros) once the budget expires. The padded result is
+/// never returned — `run_method` discards it and surfaces a typed
+/// [`crate::util::DeadlineExceeded`] instead, so an expired deadline
+/// can't silently yield a graph computed from partial scores. Mirrors
+/// the server's chunked cancel-aware backend.
+struct DeadlineGuard<'a> {
+    inner: &'a ScoreService,
+    budget: crate::util::Budget,
+    expired: std::sync::atomic::AtomicBool,
+}
+
+impl<'a> DeadlineGuard<'a> {
+    fn new(inner: &'a ScoreService, budget: crate::util::Budget) -> DeadlineGuard<'a> {
+        DeadlineGuard { inner, budget, expired: std::sync::atomic::AtomicBool::new(false) }
+    }
+
+    fn tripped(&self) -> bool {
+        self.expired.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+impl ScoreBackend for DeadlineGuard<'_> {
+    fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
+        let chunk_len = 32usize.max(reqs.len().div_ceil(8));
+        let mut out: Vec<f64> = Vec::with_capacity(reqs.len());
+        for sub in reqs.chunks(chunk_len) {
+            if self.budget.expired() {
+                self.expired.store(true, std::sync::atomic::Ordering::SeqCst);
+                break;
+            }
+            out.extend(self.inner.score_batch(sub));
+        }
+        out.resize(reqs.len(), 0.0);
+        out
+    }
+
+    fn num_vars(&self) -> usize {
+        ScoreBackend::num_vars(self.inner)
+    }
+}
+
 /// Run the method registered under `name` (public twin of the builder's
 /// `run()` for callers that already hold a config).
 pub fn run_named(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<DiscoveryOutcome> {
@@ -473,13 +525,29 @@ fn run_method(name: &str, ds: Arc<Dataset>, cfg: &DiscoveryConfig) -> Result<Dis
             let sw = Stopwatch::start();
             let backend = factory(ds.clone(), cfg)?;
             let backend = shard_wrap(&canon, &ds, cfg, backend);
+            let budget = crate::util::Budget::from_ms(cfg.deadline_ms);
+            backend.set_budget(budget);
             let service =
                 ScoreService::with_cache_capacity(backend, cfg.workers, cfg.cache_capacity);
             service.set_gram_threads(crate::score::cores::resolve_parallelism(
                 cfg.parallelism,
                 cfg.params.folds,
             ) as u64);
-            let res = ges(&service, &cfg.ges);
+            let res = if budget.is_limited() {
+                let guard = DeadlineGuard::new(&service, budget);
+                let res = ges(&guard, &cfg.ges);
+                if guard.tripped() {
+                    crate::obs::metrics::deadline_exceeded_total().inc();
+                    return Err(crate::util::DeadlineExceeded::new(format!(
+                        "discovery `{canon}` ran past its {}ms deadline",
+                        cfg.deadline_ms.unwrap_or(0)
+                    ))
+                    .into());
+                }
+                res
+            } else {
+                ges(&service, &cfg.ges)
+            };
             Ok(DiscoveryOutcome {
                 cpdag: res.cpdag,
                 seconds: sw.secs(),
@@ -613,6 +681,15 @@ impl DiscoveryBuilder {
         self
     }
 
+    /// End-to-end deadline for the run, in milliseconds (see
+    /// [`DiscoveryConfig::deadline_ms`]). An expired budget degrades
+    /// remote scoring to local and fails the run with a typed
+    /// [`crate::util::DeadlineExceeded`] rather than hanging.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.cfg.deadline_ms = Some(ms);
+        self
+    }
+
     /// Run discovery and return the learned equivalence class.
     pub fn run(self) -> Result<DiscoveryOutcome> {
         run_method(&self.method, self.ds, &self.cfg)
@@ -703,6 +780,30 @@ mod tests {
         );
         assert!(st.core_cache_entries > 0, "CV-LR populates the fold-core cache: {st:?}");
         assert!(st.consistent(), "{st:?}");
+    }
+
+    #[test]
+    fn expired_deadline_fails_with_typed_error() {
+        let (ds, _) = generate(&SynthConfig { n: 100, density: 0.3, seed: 8, ..Default::default() });
+        let err = Discovery::builder(Arc::new(ds))
+            .method("bic")
+            .deadline_ms(0)
+            .run()
+            .expect_err("a zero deadline cannot complete");
+        assert!(
+            err.downcast_ref::<crate::util::DeadlineExceeded>().is_some(),
+            "expected a typed DeadlineExceeded, got: {err}"
+        );
+    }
+
+    #[test]
+    fn generous_deadline_changes_nothing() {
+        let (ds, _) = generate(&SynthConfig { n: 150, density: 0.3, seed: 1, ..Default::default() });
+        let ds = Arc::new(ds);
+        let plain = Discovery::builder(ds.clone()).method("bic").run().unwrap();
+        let bounded =
+            Discovery::builder(ds).method("bic").deadline_ms(600_000).run().unwrap();
+        assert_eq!(plain.cpdag, bounded.cpdag, "a slack deadline must not alter the graph");
     }
 
     #[test]

@@ -488,6 +488,14 @@ impl ScoreService {
         *self.warm.lock().unwrap() = Some(cpdag);
     }
 
+    /// Arm (or lift, with `Budget::none()`) the deadline budget of the
+    /// backing backend — see [`ScoreBackend::set_budget`]. Pooled
+    /// services outlive one job, so the job runner re-arms this per
+    /// run.
+    pub fn set_budget(&self, budget: crate::util::Budget) {
+        self.backend.read().unwrap().set_budget(budget);
+    }
+
     /// Record the Gram-product thread count the backing backend was
     /// built with (`DiscoveryConfig::parallelism`), so it shows up in
     /// [`ServiceStats::gram_threads`] — set by whoever wires the

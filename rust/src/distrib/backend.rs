@@ -25,15 +25,16 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::Dataset;
-use crate::obs::{metrics, trace};
+use crate::obs::{fail, metrics, trace};
 use crate::score::{FollowerStat, ScoreBackend, ScoreRequest, ShardCounters};
 use crate::server::json::Json;
+use crate::util::Budget;
 
 use super::pool::{Follower, FollowerPool, PoolConfig};
 use super::wire::{self, ShardSpec};
@@ -57,6 +58,16 @@ struct ShardInner {
     /// `POST /v1/datasets` body (raw mode) pushing the coordinator's
     /// dataset to a follower that does not have it yet.
     push: Json,
+    /// The deadline budget the current run/job executes under; re-armed
+    /// per run via [`ScoreBackend::set_budget`] (pooled services
+    /// outlive one job). Copy-cheap, read at every dispatch decision.
+    budget: Mutex<Budget>,
+}
+
+impl ShardInner {
+    fn budget(&self) -> Budget {
+        *self.budget.lock().unwrap()
+    }
 }
 
 /// The coordinator-side sharding backend. Cheap to clone (all state is
@@ -88,13 +99,32 @@ impl ShardScoreBackend {
         };
         let push = wire::dataset_body(dataset, ds);
         let pool = FollowerPool::new(shards, cfg);
-        ShardScoreBackend { inner: Arc::new(ShardInner { local, pool, spec, push }) }
+        ShardScoreBackend {
+            inner: Arc::new(ShardInner {
+                local,
+                pool,
+                spec,
+                push,
+                budget: Mutex::new(Budget::none()),
+            }),
+        }
     }
 }
 
 impl ScoreBackend for ShardScoreBackend {
     fn score_batch(&self, reqs: &[ScoreRequest]) -> Vec<f64> {
         let inner = &self.inner;
+        // an exhausted deadline can't afford wire round-trips: the
+        // local path is the fastest remaining route to exact scores
+        // (the caller's chunked cancel loop turns the expiry into a
+        // typed error; this layer only guarantees "never hang")
+        if inner.budget().expired() {
+            if !inner.pool.is_empty() && !reqs.is_empty() {
+                inner.pool.unattributed_degraded.fetch_add(1, Ordering::Relaxed);
+                metrics::shard_degraded_total().inc();
+            }
+            return inner.local.score_batch(reqs);
+        }
         let avail = inner.pool.available();
         if reqs.len() < inner.pool.cfg.min_remote || avail.is_empty() {
             if avail.is_empty() && !inner.pool.is_empty() && !reqs.is_empty() {
@@ -171,6 +201,11 @@ impl ScoreBackend for ShardScoreBackend {
     fn follower_stats(&self) -> Vec<FollowerStat> {
         self.inner.pool.snapshots()
     }
+
+    fn set_budget(&self, budget: Budget) {
+        *self.inner.budget.lock().unwrap() = budget;
+        self.inner.local.set_budget(budget);
+    }
 }
 
 /// Drive one sub-batch to completion: primary lane, hedge lane on
@@ -183,9 +218,13 @@ fn run_shard(
 ) -> Vec<f64> {
     let cfg = &inner.pool.cfg;
     // every lane is bounded: ≤ max_retries+1 attempts, each ≤ roughly
-    // 3 socket timeouts (connect/write/read) + one capped backoff
+    // 3 socket timeouts (connect/write/read) + one capped backoff —
+    // further clamped by whatever end-to-end deadline budget remains
     let lane_budget = (cfg.timeout * 3 + cfg.backoff_cap) * (cfg.max_retries + 1);
-    let deadline = Instant::now() + lane_budget;
+    let mut deadline = Instant::now() + lane_budget;
+    if let Some(d) = inner.budget().deadline() {
+        deadline = deadline.min(d);
+    }
     let (tx, rx) = mpsc::channel::<Option<Vec<f64>>>();
     spawn_lane(inner, assigned.clone(), reqs.clone(), tx.clone());
     let mut lanes = 1usize;
@@ -245,6 +284,16 @@ fn spawn_lane(
         let mut f = follower;
         for attempt in 0..=inner.pool.cfg.max_retries {
             if attempt > 0 {
+                let pause = inner.pool.backoff(attempt);
+                // a retry is only worth its backoff plus the candidate
+                // follower's expected latency; when the remaining
+                // budget can't cover that, stop burning it and let the
+                // controller degrade to local scoring
+                let expected =
+                    Duration::from_secs_f64(f.health.lock().unwrap().ewma_ms() / 1e3);
+                if !inner.budget().covers(pause + expected) {
+                    break;
+                }
                 f.retries.fetch_add(1, Ordering::Relaxed);
                 metrics::shard_retries_total().inc();
                 trace::instant(
@@ -252,7 +301,7 @@ fn spawn_lane(
                     "distrib",
                     vec![("attempt".to_string(), attempt.to_string())],
                 );
-                std::thread::sleep(inner.pool.backoff(attempt));
+                std::thread::sleep(pause);
                 if let Some(other) = inner.pool.pick_other(f.addr()) {
                     f = other;
                 }
@@ -277,19 +326,23 @@ fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<V
     f.dispatches.fetch_add(1, Ordering::Relaxed);
     metrics::shard_dispatches_total().inc();
     let _span = trace::span("shard-dispatch", "distrib").arg("follower", f.addr());
+    let budget = inner.budget();
     let pinned = *f.version.lock().unwrap();
     let version = match pinned {
         Some(v) => v,
         None => register(inner, f)?,
     };
-    let body = wire::score_batch_body(&inner.spec, Some(version), reqs);
+    let body = dispatch_body(inner, version, reqs, budget)?;
     let t0 = Instant::now();
-    let (status, resp) = f.client.post("/v1/score_batch", &body)?;
+    let (status, resp) = f.client.post_within("/v1/score_batch", &body, budget)?;
     let (status, resp, t0) = if status == 404 || status == 409 {
+        // the follower restarted or its registry moved on: pause one
+        // jittered backoff step, re-push the dataset, retry once
+        std::thread::sleep(budget.clamp(inner.pool.backoff(1)));
         let v = register(inner, f)?;
-        let body = wire::score_batch_body(&inner.spec, Some(v), reqs);
+        let body = dispatch_body(inner, v, reqs, budget)?;
         let t1 = Instant::now();
-        let (s, r) = f.client.post("/v1/score_batch", &body)?;
+        let (s, r) = f.client.post_within("/v1/score_batch", &body, budget)?;
         (s, r, t1)
     } else {
         (status, resp, t0)
@@ -298,6 +351,13 @@ fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<V
         let msg = resp.get("error").and_then(Json::as_str).unwrap_or("").to_string();
         bail!("follower {} answered {status} {msg}", f.addr());
     }
+    let resp = match fail::hit("distrib.reply") {
+        Some(fail::Hit::Error) => return Err(fail::injected_error("distrib.reply")),
+        // a corrupt reply must fail the length-checked decode below,
+        // driving the same retry → degrade path a garbled wire would
+        Some(fail::Hit::Corrupt) => Json::obj(vec![("scores", Json::Arr(Vec::new()))]),
+        None => resp,
+    };
     let scores = wire::parse_scores(&resp, reqs.len())
         .with_context(|| format!("bad scores from {}", f.addr()))?;
     inner.pool.success(f, t0.elapsed());
@@ -316,10 +376,36 @@ fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<V
     Ok(scores)
 }
 
+/// Build one dispatch body, stamped with the remaining deadline budget
+/// so the follower cancels cooperatively. The `distrib.dispatch`
+/// failpoint intercepts here: `error` fails the attempt outright,
+/// `corrupt` substitutes a payload the follower must reject.
+fn dispatch_body(
+    inner: &ShardInner,
+    version: u64,
+    reqs: &[ScoreRequest],
+    budget: Budget,
+) -> Result<Json> {
+    match fail::hit("distrib.dispatch") {
+        Some(fail::Hit::Error) => Err(fail::injected_error("distrib.dispatch")),
+        Some(fail::Hit::Corrupt) => Ok(Json::str("corrupt-request")),
+        None => Ok(wire::score_batch_body(&inner.spec, Some(version), budget.remaining_ms(), reqs)),
+    }
+}
+
 /// Push the coordinator's dataset (raw coordinates) to `f` and pin the
 /// registry version the follower assigned.
 fn register(inner: &ShardInner, f: &Follower) -> Result<u64> {
-    let (status, resp) = f.client.post("/v1/datasets", &inner.push)?;
+    let corrupt;
+    let push = match fail::hit("wire.dataset_push") {
+        Some(fail::Hit::Error) => return Err(fail::injected_error("wire.dataset_push")),
+        Some(fail::Hit::Corrupt) => {
+            corrupt = Json::str("corrupt-dataset");
+            &corrupt
+        }
+        None => &inner.push,
+    };
+    let (status, resp) = f.client.post_within("/v1/datasets", push, inner.budget())?;
     if status != 200 && status != 201 {
         let msg = resp.get("error").and_then(Json::as_str).unwrap_or("").to_string();
         bail!("follower {} rejected dataset push: {status} {msg}", f.addr());
@@ -389,7 +475,16 @@ mod tests {
         // port 9 (discard) on localhost is closed: connect is refused
         let shards = vec!["127.0.0.1:9".to_string(), "127.0.0.1:9".to_string()];
         let backend =
-            ShardScoreBackend::new(local.clone(), &ds, "toy", "cv-lr", "native", "icl", &shards, cfg);
+            ShardScoreBackend::new(
+                local.clone(),
+                &ds,
+                "toy",
+                "cv-lr",
+                "native",
+                "icl",
+                &shards,
+                cfg,
+            );
         let reqs: Vec<ScoreRequest> =
             (0..6).map(|t| ScoreRequest::new(t, &[(t + 1) % 6])).collect();
         let want = local.score_batch(&reqs);
@@ -407,6 +502,48 @@ mod tests {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         assert!(!backend.follower_stats().iter().any(|f| f.healthy), "both should be tripped");
+    }
+
+    /// An expired deadline budget never touches the wire: the batch
+    /// degrades straight to local scoring, bit-identical, without
+    /// paying connect timeouts first.
+    #[test]
+    fn expired_budget_degrades_without_dispatch() {
+        let (ds, _) = crate::data::synth::generate(&crate::data::synth::SynthConfig {
+            n: 10,
+            seed: 3,
+            ..Default::default()
+        });
+        let local: Arc<dyn ScoreBackend> = Arc::new(ScalarBackend(Toy));
+        let cfg = PoolConfig { min_remote: 1, ..Default::default() };
+        let shards = vec!["127.0.0.1:9".to_string()];
+        let backend =
+            ShardScoreBackend::new(
+                local.clone(),
+                &ds,
+                "toy",
+                "cv-lr",
+                "native",
+                "icl",
+                &shards,
+                cfg,
+            );
+        backend.set_budget(Budget::until(Instant::now() - Duration::from_millis(5)));
+        let reqs: Vec<ScoreRequest> =
+            (0..6).map(|t| ScoreRequest::new(t, &[(t + 1) % 6])).collect();
+        let want = local.score_batch(&reqs);
+        let got = backend.score_batch(&reqs);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits(), "degraded scores must be bit-identical");
+        }
+        let c = backend.shard_counters().unwrap();
+        assert_eq!(c.dispatches, 0, "an expired budget must skip the wire entirely");
+        assert!(c.degraded > 0, "deadline-driven local scoring counts as degradation");
+        // re-arming the budget restores normal dispatch policy
+        backend.set_budget(Budget::none());
+        let got2 = backend.score_batch(&reqs);
+        assert_eq!(got2.len(), reqs.len());
+        assert!(backend.shard_counters().unwrap().dispatches > 0);
     }
 
     /// Tiny batches never touch the wire.

@@ -6,7 +6,13 @@
 //! keeps connections open since the keep-alive rework of
 //! `server::http`). Responses are read **bounded by `Content-Length`**
 //! — unlike the one-shot test client in `server::http`, this never
-//! waits for the peer to close.
+//! waits for the peer to close — and capped by a configurable body
+//! limit (default 256 MiB) so a hostile or corrupt `Content-Length`
+//! can't balloon coordinator memory. Read/write socket timeouts are
+//! always armed (the pool's `timeout`), so a dead peer mid-body
+//! surfaces as a clean truncation error, never an indefinite block;
+//! when the caller carries a deadline [`Budget`], the timeouts clamp
+//! to the remaining budget per exchange.
 //!
 //! Scoring requests are pure reads, so a request that dies on a stale
 //! pooled connection (the server restarted, an idle timeout fired) is
@@ -22,17 +28,20 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::server::json::{self, Json};
+use crate::util::budget::{Budget, DeadlineExceeded};
 
 /// Upper bound on response heads (mirrors the server's request bound).
 const MAX_HEAD: usize = 16 * 1024;
-/// Upper bound on response bodies.
-const MAX_BODY: usize = 64 * 1024 * 1024;
+/// Default upper bound on response bodies; raise per client via
+/// [`ShardClient::set_body_cap`] for outsized datasets.
+pub const DEFAULT_BODY_CAP: usize = 256 * 1024 * 1024;
 
 /// A blocking JSON-over-HTTP client bound to one follower address,
 /// pooling a single keep-alive connection.
 pub struct ShardClient {
     addr: String,
     timeout: Duration,
+    body_cap: usize,
     conn: Mutex<Option<TcpStream>>,
 }
 
@@ -40,24 +49,32 @@ impl ShardClient {
     /// Client for `addr` (`host:port`); `timeout` bounds connect, read
     /// and write individually.
     pub fn new(addr: impl Into<String>, timeout: Duration) -> ShardClient {
-        ShardClient { addr: addr.into(), timeout, conn: Mutex::new(None) }
+        ShardClient {
+            addr: addr.into(),
+            timeout,
+            body_cap: DEFAULT_BODY_CAP,
+            conn: Mutex::new(None),
+        }
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
     }
 
-    fn connect(&self) -> Result<TcpStream> {
+    /// Override the response-body cap (bytes).
+    pub fn set_body_cap(&mut self, cap: usize) {
+        self.body_cap = cap;
+    }
+
+    fn connect(&self, timeout: Duration) -> Result<TcpStream> {
         let sa = self
             .addr
             .to_socket_addrs()
             .with_context(|| format!("resolving `{}`", self.addr))?
             .next()
             .with_context(|| format!("`{}` resolved to no address", self.addr))?;
-        let stream = TcpStream::connect_timeout(&sa, self.timeout)
+        let stream = TcpStream::connect_timeout(&sa, timeout)
             .with_context(|| format!("connecting to {}", self.addr))?;
-        let _ = stream.set_read_timeout(Some(self.timeout));
-        let _ = stream.set_write_timeout(Some(self.timeout));
         let _ = stream.set_nodelay(true);
         Ok(stream)
     }
@@ -66,7 +83,14 @@ impl ShardClient {
     /// connection lock for the duration — callers dispatch to
     /// *different* followers concurrently, never to one.
     pub fn post(&self, path: &str, body: &Json) -> Result<(u16, Json)> {
-        let (status, text) = self.send("POST", path, &body.encode())?;
+        self.post_within(path, body, Budget::none())
+    }
+
+    /// [`ShardClient::post`] with socket timeouts clamped to the
+    /// remaining deadline budget. An already-expired budget fails fast
+    /// with a typed [`DeadlineExceeded`] instead of touching the wire.
+    pub fn post_within(&self, path: &str, body: &Json, budget: Budget) -> Result<(u16, Json)> {
+        let (status, text) = self.send("POST", path, &body.encode(), budget)?;
         let value = if text.trim().is_empty() { Json::Null } else { json::parse(&text)? };
         Ok((status, value))
     }
@@ -76,18 +100,32 @@ impl ShardClient {
     /// `/v1/metrics`). Same pooled connection and stale-retry
     /// discipline as [`ShardClient::post`].
     pub fn get_text(&self, path: &str) -> Result<(u16, String)> {
-        self.send("GET", path, "")
+        self.send("GET", path, "", Budget::none())
     }
 
     /// One pooled exchange with single-resend on a stale connection.
-    fn send(&self, method: &str, path: &str, payload: &str) -> Result<(u16, String)> {
+    fn send(
+        &self,
+        method: &str,
+        path: &str,
+        payload: &str,
+        budget: Budget,
+    ) -> Result<(u16, String)> {
+        if budget.expired() {
+            return Err(DeadlineExceeded::new(format!("{method} {path} to {}", self.addr)).into());
+        }
+        // every socket operation is bounded: the nominal per-request
+        // timeout, clamped by whatever budget remains
+        let timeout = budget.clamp(self.timeout);
         let mut guard = self.conn.lock().unwrap();
         let reused = guard.is_some();
         let mut stream = match guard.take() {
             Some(s) => s,
-            None => self.connect()?,
+            None => self.connect(timeout)?,
         };
-        match roundtrip(&mut stream, &self.addr, method, path, payload) {
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+        match roundtrip(&mut stream, &self.addr, method, path, payload, self.body_cap) {
             Ok((status, text, keep)) => {
                 if keep {
                     *guard = Some(stream);
@@ -98,9 +136,12 @@ impl ShardClient {
             // restart, idle close); requests are idempotent reads, so
             // resend exactly once on a fresh connection
             Err(_) if reused => {
-                let mut fresh = self.connect()?;
+                let timeout = budget.clamp(self.timeout);
+                let mut fresh = self.connect(timeout)?;
+                let _ = fresh.set_read_timeout(Some(timeout));
+                let _ = fresh.set_write_timeout(Some(timeout));
                 let (status, text, keep) =
-                    roundtrip(&mut fresh, &self.addr, method, path, payload)?;
+                    roundtrip(&mut fresh, &self.addr, method, path, payload, self.body_cap)?;
                 if keep {
                     *guard = Some(fresh);
                 }
@@ -117,6 +158,7 @@ fn roundtrip(
     method: &str,
     path: &str,
     payload: &str,
+    body_cap: usize,
 ) -> Result<(u16, String, bool)> {
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
@@ -162,17 +204,21 @@ fn roundtrip(
             }
         }
     }
-    // bounded body read: never depends on the peer closing
+    // bounded body read: never depends on the peer closing, never
+    // allocates more than the cap no matter what the header claims
     let content_length = content_length.context("response has no content-length")?;
-    if content_length > MAX_BODY {
-        bail!("response body larger than {MAX_BODY} bytes");
+    if content_length > body_cap {
+        bail!("response body of {content_length} bytes exceeds the {body_cap}-byte cap");
     }
     let mut body = buf.split_off(head_end + 4);
     while body.len() < content_length {
         let mut chunk = [0u8; 8192];
         let n = stream.read(&mut chunk).context("reading response body")?;
         if n == 0 {
-            bail!("connection closed mid-body");
+            bail!(
+                "response body truncated: connection closed after {} of {content_length} bytes",
+                body.len()
+            );
         }
         body.extend_from_slice(&chunk[..n]);
     }

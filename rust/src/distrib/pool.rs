@@ -22,7 +22,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::score::{FollowerStat, ShardCounters};
-use crate::util::Pcg64;
+use crate::util::{Backoff, Pcg64};
 
 use super::client::ShardClient;
 
@@ -55,6 +55,8 @@ pub struct PoolConfig {
     pub min_remote: usize,
     /// Seed of the jitter generator (deterministic backoff schedule).
     pub seed: u64,
+    /// Response-body cap for follower replies (bytes).
+    pub body_cap: usize,
 }
 
 impl Default for PoolConfig {
@@ -70,6 +72,7 @@ impl Default for PoolConfig {
             reprobe_after: Duration::from_secs(2),
             min_remote: 8,
             seed: 0x5eed,
+            body_cap: super::client::DEFAULT_BODY_CAP,
         }
     }
 }
@@ -157,9 +160,11 @@ pub struct Follower {
 }
 
 impl Follower {
-    fn new(addr: &str, timeout: Duration) -> Follower {
+    fn new(addr: &str, timeout: Duration, body_cap: usize) -> Follower {
+        let mut client = ShardClient::new(addr, timeout);
+        client.set_body_cap(body_cap);
         Follower {
-            client: ShardClient::new(addr, timeout),
+            client,
             health: Mutex::new(Health::new()),
             version: Mutex::new(None),
             dispatches: AtomicU64::new(0),
@@ -203,7 +208,10 @@ pub struct FollowerPool {
 
 impl FollowerPool {
     pub fn new(addrs: &[String], cfg: PoolConfig) -> FollowerPool {
-        let followers = addrs.iter().map(|a| Arc::new(Follower::new(a, cfg.timeout))).collect();
+        let followers = addrs
+            .iter()
+            .map(|a| Arc::new(Follower::new(a, cfg.timeout, cfg.body_cap)))
+            .collect();
         let rng = Mutex::new(Pcg64::new(cfg.seed));
         FollowerPool { followers, cfg, rng, unattributed_degraded: AtomicU64::new(0) }
     }
@@ -251,14 +259,13 @@ impl FollowerPool {
         f.health.lock().unwrap().on_failure(self.cfg.trip_failures, Instant::now());
     }
 
-    /// Jittered exponential backoff before retry `attempt` (1-based):
-    /// `backoff × 2^(attempt−1)`, capped, scaled by a uniform factor in
-    /// [0.5, 1). Jitter comes from the pool's seeded generator.
+    /// Jittered exponential backoff before retry `attempt` (1-based),
+    /// via the crate-wide [`Backoff`] policy: `backoff × 2^(attempt−1)`,
+    /// capped, scaled by a uniform factor in [0.5, 1). Jitter comes
+    /// from the pool's seeded generator.
     pub fn backoff(&self, attempt: u32) -> Duration {
-        let base = self.cfg.backoff.as_secs_f64() * 2f64.powi(attempt.saturating_sub(1) as i32);
-        let capped = base.min(self.cfg.backoff_cap.as_secs_f64());
-        let jitter = 0.5 + 0.5 * self.rng.lock().unwrap().uniform();
-        Duration::from_secs_f64(capped * jitter)
+        Backoff::new(self.cfg.backoff, self.cfg.backoff_cap)
+            .delay(attempt, &mut self.rng.lock().unwrap())
     }
 
     /// How long to wait on `f` before hedging a sub-batch elsewhere.

@@ -46,7 +46,16 @@ fn num(x: u64) -> Json {
 /// pins the follower's registry version of the dataset so a concurrent
 /// re-registration can never serve scores from different bits — the
 /// follower answers `409` on a mismatch and the coordinator re-pushes.
-pub fn score_batch_body(spec: &ShardSpec, version: Option<u64>, reqs: &[ScoreRequest]) -> Json {
+/// `deadline_ms`, when set, is the coordinator's remaining budget at
+/// dispatch time; the follower cancels its chunked evaluation
+/// cooperatively once it runs out (old followers ignore the field —
+/// the protocol stays backward compatible in both directions).
+pub fn score_batch_body(
+    spec: &ShardSpec,
+    version: Option<u64>,
+    deadline_ms: Option<u64>,
+    reqs: &[ScoreRequest],
+) -> Json {
     let requests: Vec<Json> = reqs
         .iter()
         .map(|r| {
@@ -60,6 +69,9 @@ pub fn score_batch_body(spec: &ShardSpec, version: Option<u64>, reqs: &[ScoreReq
     if let Some(v) = version {
         fields.push(("version", num(v)));
     }
+    if let Some(d) = deadline_ms {
+        fields.push(("deadline_ms", num(d)));
+    }
     fields.push(("method", Json::str(spec.method.clone())));
     fields.push(("engine", Json::str(spec.engine.clone())));
     fields.push(("lowrank", Json::str(spec.lowrank.clone())));
@@ -67,8 +79,18 @@ pub fn score_batch_body(spec: &ShardSpec, version: Option<u64>, reqs: &[ScoreReq
     Json::obj(fields)
 }
 
+/// A decoded `score_batch` request body.
+#[derive(Clone, Debug)]
+pub struct ScoreBatchMsg {
+    pub spec: ShardSpec,
+    pub version: Option<u64>,
+    /// Remaining coordinator budget at dispatch, in milliseconds.
+    pub deadline_ms: Option<u64>,
+    pub reqs: Vec<ScoreRequest>,
+}
+
 /// Follower-side decode of a `score_batch` body.
-pub fn parse_score_batch(body: &Json) -> Result<(ShardSpec, Option<u64>, Vec<ScoreRequest>)> {
+pub fn parse_score_batch(body: &Json) -> Result<ScoreBatchMsg> {
     let dataset = body
         .get("dataset")
         .and_then(Json::as_str)
@@ -91,6 +113,10 @@ pub fn parse_score_batch(body: &Json) -> Result<(ShardSpec, Option<u64>, Vec<Sco
         .to_string();
     let version = match body.get("version") {
         Some(v) => Some(v.as_u64().context("`version` must be a non-negative integer")?),
+        None => None,
+    };
+    let deadline_ms = match body.get("deadline_ms") {
+        Some(v) => Some(v.as_u64().context("`deadline_ms` must be a non-negative integer")?),
         None => None,
     };
     let raw = body
@@ -118,7 +144,12 @@ pub fn parse_score_batch(body: &Json) -> Result<(ShardSpec, Option<u64>, Vec<Sco
         }
         reqs.push(ScoreRequest::new(target, &p));
     }
-    Ok((ShardSpec { dataset, method, engine, lowrank }, version, reqs))
+    Ok(ScoreBatchMsg {
+        spec: ShardSpec { dataset, method, engine, lowrank },
+        version,
+        deadline_ms,
+        reqs,
+    })
 }
 
 /// Coordinator-side decode of a `score_batch` reply; `expect` guards
@@ -272,12 +303,18 @@ mod tests {
             lowrank: "rff".into(),
         };
         let reqs = vec![ScoreRequest::new(2, &[0, 1]), ScoreRequest::new(0, &[])];
-        let body = score_batch_body(&spec, Some(3), &reqs);
+        let body = score_batch_body(&spec, Some(3), Some(750), &reqs);
         let parsed = json::parse(&body.encode()).unwrap();
-        let (spec2, version, reqs2) = parse_score_batch(&parsed).unwrap();
-        assert_eq!(spec2, spec);
-        assert_eq!(version, Some(3));
-        assert_eq!(reqs2, reqs);
+        let msg = parse_score_batch(&parsed).unwrap();
+        assert_eq!(msg.spec, spec);
+        assert_eq!(msg.version, Some(3));
+        assert_eq!(msg.deadline_ms, Some(750));
+        assert_eq!(msg.reqs, reqs);
+        // absent deadline (old coordinator) decodes as unlimited
+        let body = score_batch_body(&spec, None, None, &reqs);
+        let msg = parse_score_batch(&json::parse(&body.encode()).unwrap()).unwrap();
+        assert_eq!(msg.version, None);
+        assert_eq!(msg.deadline_ms, None);
     }
 
     #[test]

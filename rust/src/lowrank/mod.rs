@@ -140,6 +140,11 @@ impl LowRankConfig {
 /// request on a kernel without a Gaussian spectral form — falls through
 /// to ICL with [`LowRank::fell_back`] set.
 pub fn factorize(k: Kernel, x: &Mat, is_discrete: bool, cfg: &LowRankConfig) -> LowRank {
+    // chaos site: Delay (straggler factorization) and Panic run inline
+    // in `hit`; Error/Corrupt are deliberately ignored — factorize is
+    // infallible and an injected wrong factor would silently corrupt
+    // the learned graph instead of exercising a failure path
+    let _ = crate::obs::fail::hit("lowrank.factorize");
     let span = crate::obs::trace::span("factorize", "lowrank")
         .arg("n", x.rows.to_string());
     let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::Factorize);

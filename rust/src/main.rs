@@ -52,6 +52,13 @@ use cvlr::util::Stopwatch;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
+    // chaos configuration first, so every command (and the serve
+    // endpoints) runs under the armed failpoints; both sources error
+    // out unless the binary was built with `--features fail-inject`
+    if let Err(e) = init_failpoints(&args) {
+        eprintln!("error: {e:#}");
+        return ExitCode::FAILURE;
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let res = match cmd {
         "discover" => cmd_discover(&args),
@@ -116,13 +123,18 @@ fn print_help() {
          \x20 --metrics-out FILE.prom               write a final Prometheus snapshot of\n\
          \x20                                       every cvlr_* series — incl. per-scope\n\
          \x20                                       cvlr_mem_peak_bytes — on completion\n\
-         \x20                                       (discover/stream/score)\n\n\
+         \x20                                       (discover/stream/score)\n\
+         \x20 --failpoints site=action;…            arm chaos failpoints (error, delay(MS),\n\
+         \x20                                       corrupt, panic; also CVLR_FAILPOINTS env\n\
+         \x20                                       var); needs a --features fail-inject build\n\n\
          discover OPTIONS:\n\
          \x20 --density D      synth graph density (default 0.4)\n\
          \x20 --kind continuous|mixed|multidim      synth data kind\n\
          \x20 --vars V         synth variable count (default 7)\n\
          \x20 --csv-header true|false               force/suppress CSV header row\n\
-         \x20 --cache-cap C    bound the score cache (0 = unbounded)\n\n\
+         \x20 --cache-cap C    bound the score cache (0 = unbounded)\n\
+         \x20 --deadline-ms T  end-to-end deadline: shard dispatch/retries clamp to\n\
+         \x20                  it and an expired run fails typed, never hangs\n\n\
          stream OPTIONS:\n\
          \x20 --chunk C        rows per streamed chunk (default 100, min 2×folds)\n\
          \x20 --cache-cap C    bound the score cache (0 = unbounded)\n\
@@ -137,8 +149,24 @@ fn print_help() {
          \x20 --n N --seed S   sampling of the built-in datasets\n\
          \x20 --shards H:P,H:P default follower fleet for score jobs (the server\n\
          \x20                  acts as a sharding coordinator; per-job `shards`\n\
-         \x20                  overrides it)"
+         \x20                  overrides it)\n\
+         \x20 --max-queued-jobs Q                   admission bound: queued jobs beyond Q\n\
+         \x20                  are refused with 429 + Retry-After (default 256)\n\
+         \x20 --mem-high-water-mb M                 live-heap high-water mark: above it job\n\
+         \x20                  submission sheds pooled caches, then answers 503\n\
+         \x20                  (needs the default mem-profile feature)"
     );
+}
+
+/// Arm the failpoint registry before any command runs: the
+/// `CVLR_FAILPOINTS` env var first, then `--failpoints site=action;…`
+/// merged over it.
+fn init_failpoints(args: &Args) -> Result<()> {
+    cvlr::obs::fail::init_from_env()?;
+    if let Some(spec) = args.get("failpoints") {
+        cvlr::obs::fail::configure(spec)?;
+    }
+    Ok(())
 }
 
 /// `--trace-out FILE`: attach the span recorder before the run so every
@@ -289,6 +317,11 @@ fn cmd_discover(args: &Args) -> Result<()> {
     let cache_cap = args.usize_or("cache-cap", 0);
     if cache_cap > 0 {
         builder = builder.cache_capacity(cache_cap);
+    }
+    // end-to-end deadline: clamps shard dispatch/retry and fails the
+    // run with a typed `deadline exceeded` error instead of hanging
+    if let Some(ms) = args.get("deadline-ms") {
+        builder = builder.deadline_ms(ms.parse().context("bad --deadline-ms")?);
     }
     let shards = shard_arg(args);
     if !shards.is_empty() {
@@ -547,6 +580,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.u64_or("seed", 0),
         artifacts_dir: args.get_or("artifacts", "artifacts"),
         shards: shard_arg(args),
+        max_queued_jobs: args.usize_or("max-queued-jobs", 256),
+        mem_high_water: match args.get("mem-high-water-mb") {
+            Some(v) => {
+                let mb: u64 = v.parse().context("bad --mem-high-water-mb")?;
+                Some(mb * 1024 * 1024)
+            }
+            None => None,
+        },
     };
     let coordinator = !cfg.shards.is_empty();
     if coordinator {
@@ -564,6 +605,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  GET    /v1/stats       job + score-cache + shard statistics");
     println!("  GET    /v1/metrics     Prometheus text exposition (cvlr_* series)");
     println!("  GET    /v1/trace       Chrome trace-event JSON (Perfetto-loadable)");
+    if cvlr::obs::fail::compiled_in() {
+        println!("  POST   /v1/failpoints  chaos control (fail-inject build)");
+    }
     println!("  POST   /v1/shutdown    graceful shutdown");
     // graceful shutdown is driven by the shutdown endpoint: the accept
     // loop drains connections, then the job manager cancels + joins

@@ -1,0 +1,283 @@
+//! Failpoint injection — deterministic fault schedules for chaos tests.
+//!
+//! A failpoint is a named site in the serving stack where a test can
+//! inject a fault: an error return, a fixed delay, a corrupted payload
+//! or an outright panic. Sites are compiled in only under the
+//! (default-off) `fail-inject` cargo feature; without it every call
+//! site collapses to a no-op returning `None`. With the feature on but
+//! no site armed, a [`hit`] costs one relaxed atomic load and an early
+//! return — the same overhead discipline as the span recorder.
+//!
+//! Schedules are configured three ways, all sharing one syntax
+//! `site=action;site=action`:
+//!
+//! * env — `CVLR_FAILPOINTS='distrib.reply=corrupt;jobs.worker=delay(200)'`
+//! * CLI — `--failpoints 'distrib.dispatch=error'`
+//! * HTTP — `POST /v1/failpoints {"spec": "stream.append=off"}`
+//!   (test-only; answers 501 without the feature)
+//!
+//! Actions: `error` (the site returns a typed injected-fault error),
+//! `delay(MS)` (the site sleeps, then proceeds normally), `corrupt`
+//! (the site mangles its payload — wire sites only), `panic` (the
+//! site panics; worker threads are expected to contain it), and `off`
+//! (disarm). A site stays armed until reconfigured, so a persistent
+//! fault exercises every retry the dispatch layer owns.
+
+/// The sites the serving stack consults, in dispatch order. Unknown
+/// names are rejected at configure time so schedules can't silently
+/// miss their target.
+pub const SITES: &[&str] = &[
+    "distrib.dispatch",
+    "distrib.reply",
+    "wire.dataset_push",
+    "jobs.worker",
+    "stream.append",
+    "lowrank.factorize",
+];
+
+/// What an armed site asks its caller to do. `delay` and `panic` are
+/// executed inside [`hit`] itself (sleep / panic), so callers only see
+/// the two actions that need site-specific handling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hit {
+    /// Return an injected error from the site.
+    Error,
+    /// Mangle the site's payload (request or reply bytes).
+    Corrupt,
+}
+
+#[cfg(feature = "fail-inject")]
+mod imp {
+    use super::Hit;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    use anyhow::{bail, Result};
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum Action {
+        Error,
+        Delay(u64),
+        Corrupt,
+        Panic,
+    }
+
+    impl Action {
+        fn parse(s: &str) -> Result<Option<Action>> {
+            let s = s.trim();
+            if s == "off" {
+                return Ok(None);
+            }
+            if s == "error" {
+                return Ok(Some(Action::Error));
+            }
+            if s == "corrupt" {
+                return Ok(Some(Action::Corrupt));
+            }
+            if s == "panic" {
+                return Ok(Some(Action::Panic));
+            }
+            if let Some(ms) = s.strip_prefix("delay(").and_then(|r| r.strip_suffix(')')) {
+                let ms: u64 = ms.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("bad delay milliseconds `{ms}` (want delay(MS))")
+                })?;
+                return Ok(Some(Action::Delay(ms)));
+            }
+            bail!("unknown failpoint action `{s}` (want error|delay(MS)|corrupt|panic|off)");
+        }
+
+        fn render(&self) -> String {
+            match self {
+                Action::Error => "error".to_string(),
+                Action::Delay(ms) => format!("delay({ms})"),
+                Action::Corrupt => "corrupt".to_string(),
+                Action::Panic => "panic".to_string(),
+            }
+        }
+    }
+
+    /// Fast-path gate: false ⇒ no site is armed, `hit` returns
+    /// immediately without touching the registry lock.
+    static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+    static REGISTRY: Mutex<BTreeMap<&'static str, Action>> = Mutex::new(BTreeMap::new());
+
+    fn canonical_site(name: &str) -> Option<&'static str> {
+        super::SITES.iter().find(|s| **s == name).copied()
+    }
+
+    /// True when the binary carries the injection machinery at all.
+    pub fn compiled_in() -> bool {
+        true
+    }
+
+    /// Arm/disarm sites from a `site=action;site=action` spec. Entries
+    /// merge into the current schedule; `site=off` disarms one site.
+    /// Unknown sites and malformed actions are rejected whole — a
+    /// failing spec changes nothing.
+    pub fn configure(spec: &str) -> Result<()> {
+        let mut updates: Vec<(&'static str, Option<Action>)> = Vec::new();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (site, action) = entry.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("bad failpoint entry `{entry}` (want site=action)")
+            })?;
+            let site = canonical_site(site.trim()).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown failpoint site `{}` (known: {})",
+                    site.trim(),
+                    super::SITES.join(", ")
+                )
+            })?;
+            updates.push((site, Action::parse(action)?));
+        }
+        let mut reg = REGISTRY.lock().unwrap();
+        for (site, action) in updates {
+            match action {
+                Some(a) => {
+                    reg.insert(site, a);
+                }
+                None => {
+                    reg.remove(site);
+                }
+            }
+        }
+        ANY_ARMED.store(!reg.is_empty(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Disarm every site.
+    pub fn clear() {
+        REGISTRY.lock().unwrap().clear();
+        ANY_ARMED.store(false, Ordering::Relaxed);
+    }
+
+    /// Arm sites from `CVLR_FAILPOINTS` when set. Called once from the
+    /// binary entry point; a malformed spec is a startup error.
+    pub fn init_from_env() -> Result<()> {
+        if let Ok(spec) = std::env::var("CVLR_FAILPOINTS") {
+            configure(&spec)?;
+        }
+        Ok(())
+    }
+
+    /// The current schedule as `(site, action)` pairs, sorted by site.
+    pub fn list() -> Vec<(String, String)> {
+        REGISTRY
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(s, a)| (s.to_string(), a.render()))
+            .collect()
+    }
+
+    /// Consult a site. Disabled/unarmed: one relaxed load, `None`.
+    /// `delay(ms)` sleeps here and returns `None` (the site proceeds);
+    /// `panic` panics here; `error`/`corrupt` are returned for the
+    /// site to act on.
+    pub fn hit(site: &str) -> Option<Hit> {
+        if !ANY_ARMED.load(Ordering::Relaxed) {
+            return None;
+        }
+        let action = *REGISTRY.lock().unwrap().get(site)?;
+        match action {
+            Action::Error => Some(Hit::Error),
+            Action::Corrupt => Some(Hit::Corrupt),
+            Action::Delay(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                None
+            }
+            Action::Panic => panic!("failpoint `{site}` injected panic"),
+        }
+    }
+}
+
+#[cfg(not(feature = "fail-inject"))]
+mod imp {
+    use super::Hit;
+    use anyhow::{bail, Result};
+
+    pub fn compiled_in() -> bool {
+        false
+    }
+
+    pub fn configure(_spec: &str) -> Result<()> {
+        bail!("failpoints are not compiled in (rebuild with --features fail-inject)");
+    }
+
+    pub fn clear() {}
+
+    pub fn init_from_env() -> Result<()> {
+        if std::env::var("CVLR_FAILPOINTS").is_ok() {
+            bail!(
+                "CVLR_FAILPOINTS is set but failpoints are not compiled in \
+                 (rebuild with --features fail-inject)"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn list() -> Vec<(String, String)> {
+        Vec::new()
+    }
+
+    #[inline(always)]
+    pub fn hit(_site: &str) -> Option<Hit> {
+        None
+    }
+}
+
+pub use imp::{clear, compiled_in, configure, hit, init_from_env, list};
+
+/// The error message prefix every injected `error` action carries, so
+/// tests can tell an injected fault from an organic one.
+pub const INJECTED: &str = "injected fault";
+
+/// Convenience for `Hit::Error` sites: the error the site returns.
+pub fn injected_error(site: &str) -> anyhow::Error {
+    anyhow::anyhow!("{INJECTED} at failpoint `{site}`")
+}
+
+#[cfg(all(test, feature = "fail-inject"))]
+mod tests {
+    use super::*;
+
+    // The registry is process-global, so the feature-on tests run as
+    // one serialized test to avoid cross-talk.
+    #[test]
+    fn configure_parse_arm_disarm() {
+        clear();
+        assert_eq!(hit("distrib.dispatch"), None, "unarmed site is silent");
+
+        configure("distrib.dispatch=error; distrib.reply=corrupt").unwrap();
+        assert_eq!(hit("distrib.dispatch"), Some(Hit::Error));
+        assert_eq!(hit("distrib.reply"), Some(Hit::Corrupt));
+        assert_eq!(hit("jobs.worker"), None, "other sites stay unarmed");
+        assert_eq!(
+            list(),
+            vec![
+                ("distrib.dispatch".to_string(), "error".to_string()),
+                ("distrib.reply".to_string(), "corrupt".to_string()),
+            ]
+        );
+
+        configure("distrib.dispatch=off").unwrap();
+        assert_eq!(hit("distrib.dispatch"), None, "off disarms one site");
+        assert_eq!(hit("distrib.reply"), Some(Hit::Corrupt), "others stay armed");
+
+        assert!(configure("bogus.site=error").is_err(), "unknown site rejected");
+        assert!(configure("distrib.reply=explode").is_err(), "unknown action rejected");
+        assert!(configure("distrib.reply").is_err(), "missing `=` rejected");
+        assert!(configure("distrib.reply=delay(x)").is_err(), "bad delay ms rejected");
+        assert_eq!(hit("distrib.reply"), Some(Hit::Corrupt), "failed spec changes nothing");
+
+        let t0 = std::time::Instant::now();
+        configure("stream.append=delay(30)").unwrap();
+        assert_eq!(hit("stream.append"), None, "delay proceeds normally");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(30), "…after sleeping");
+
+        clear();
+        assert_eq!(list(), Vec::<(String, String)>::new());
+        assert_eq!(hit("distrib.reply"), None);
+    }
+}

@@ -374,6 +374,14 @@ pub fn stream_repivots_total() -> Arc<Counter> {
     counter("cvlr_stream_repivots_total", "full re-pivots forced by the appended-residual budget")
 }
 
+pub fn shed_total() -> Arc<Counter> {
+    counter("cvlr_shed_total", "work refused or caches dropped by overload protection")
+}
+
+pub fn deadline_exceeded_total() -> Arc<Counter> {
+    counter("cvlr_deadline_exceeded_total", "requests or jobs that ran out of deadline budget")
+}
+
 /// Touch every well-known series so the exposition carries the full
 /// schema even before any traffic. Called by the `/v1/metrics` handler.
 pub fn register_defaults() {
@@ -392,6 +400,8 @@ pub fn register_defaults() {
     let _ = shard_degraded_total();
     let _ = shard_failures_total();
     let _ = stream_repivots_total();
+    let _ = shed_total();
+    let _ = deadline_exceeded_total();
 }
 
 /// Render the registry in Prometheus text exposition format

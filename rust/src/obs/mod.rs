@@ -22,6 +22,12 @@
 //!   `cvlr_mem_peak_bytes{scope=…}` prove the paper's O(n) *space*
 //!   claim stage by stage.
 //!
+//! A fourth part rides along for tests only: [`fail`], the failpoint
+//! registry behind the (default-off) `fail-inject` feature — named
+//! fault-injection sites across the serving stack, used by the chaos
+//! suite to prove the retry/hedge/degrade and deadline paths under
+//! adversarial schedules.
+//!
 //! Overhead discipline: with no sink attached (tracing disabled, no
 //! capture in flight) every span call site is one relaxed atomic load
 //! and an early return — no clock read, no allocation. Metrics are
@@ -30,6 +36,7 @@
 //! relaxed adds + two relaxed maxes per alloc and never allocates on
 //! its own path.
 
+pub mod fail;
 pub mod mem;
 pub mod metrics;
 pub mod trace;

@@ -192,6 +192,13 @@ pub trait ScoreBackend: Send + Sync {
     fn stream_stats(&self) -> Option<(u64, f64)> {
         None
     }
+
+    /// Install the deadline budget subsequent batches run under
+    /// (`distrib::ShardScoreBackend` clamps dispatch/hedge/retry and
+    /// socket timeouts by it; local backends have nothing to clamp).
+    /// Pooled services outlive one run, so callers re-arm this per
+    /// run/job — `Budget::none()` lifts the deadline again.
+    fn set_budget(&self, _budget: crate::util::Budget) {}
 }
 
 /// Adapter turning any scalar [`LocalScore`] into a (serial)

@@ -27,7 +27,17 @@ const MAX_HEAD: usize = 16 * 1024;
 const MAX_BODY: usize = 64 * 1024 * 1024;
 /// Per-connection socket timeout.
 const IO_TIMEOUT: Duration = Duration::from_secs(30);
-/// How long shutdown waits for in-flight connections to drain.
+/// Read-poll interval on idle keep-alive connections, so a draining
+/// server is noticed within one tick instead of one [`IO_TIMEOUT`].
+const IDLE_POLL: Duration = Duration::from_millis(250);
+/// How long shutdown waits for **in-flight requests** (handler running
+/// or response being written) to complete — a follower mid
+/// `/v1/score_batch` gets to answer, the coordinator never sees a
+/// half-served sweep. Generous because it only ever binds when a
+/// handler is genuinely stuck.
+const REQUEST_DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+/// How long shutdown additionally waits for idle connections to notice
+/// the drain flag and close.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// One parsed request.
@@ -78,21 +88,36 @@ pub struct Response {
     pub status: u16,
     pub body: String,
     pub content_type: &'static str,
+    /// Extra response headers (`Retry-After` on 429/503 overload
+    /// replies); `Content-Type`/`Content-Length`/`Connection` are
+    /// always emitted by the writer and must not appear here.
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
     pub fn json(status: u16, body: &Json) -> Response {
-        Response { status, body: body.encode(), content_type: "application/json" }
+        Response {
+            status,
+            body: body.encode(),
+            content_type: "application/json",
+            headers: Vec::new(),
+        }
     }
 
     /// A non-JSON body with an explicit content type.
     pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
-        Response { status, body, content_type }
+        Response { status, body, content_type, headers: Vec::new() }
     }
 
     /// `{"error": msg}` with the given status.
     pub fn error(status: u16, msg: &str) -> Response {
         Response::json(status, &Json::obj(vec![("error", Json::str(msg))]))
+    }
+
+    /// Attach an extra response header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.headers.push((name, value));
+        self
     }
 }
 
@@ -106,8 +131,11 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         409 => "Conflict",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
+        501 => "Not Implemented",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "",
     }
 }
@@ -146,21 +174,29 @@ impl HttpServer {
         self.addr
     }
 
-    /// Accept connections until `shutdown` is set, then drain in-flight
-    /// connections (bounded by [`DRAIN_TIMEOUT`]) and return.
+    /// Accept connections until `shutdown` is set, then drain: first
+    /// wait for **in-flight requests** to complete (bounded by
+    /// [`REQUEST_DRAIN_TIMEOUT`] — a follower answering
+    /// `/v1/score_batch` finishes before the listener goes away), then
+    /// give idle keep-alive connections [`DRAIN_TIMEOUT`] to observe
+    /// the drain flag and close.
     pub fn run(&self, handler: Handler, shutdown: &AtomicBool) {
         let active = Arc::new(AtomicUsize::new(0));
+        let busy = Arc::new(AtomicUsize::new(0));
+        let draining = Arc::new(AtomicBool::new(false));
         while !shutdown.load(Ordering::SeqCst) {
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     active.fetch_add(1, Ordering::SeqCst);
                     let guard = ActiveGuard(active.clone());
                     let handler = handler.clone();
+                    let busy = busy.clone();
+                    let draining = draining.clone();
                     let _ = std::thread::Builder::new()
                         .name("cvlr-http-conn".to_string())
                         .spawn(move || {
                             let _guard = guard;
-                            let _ = handle_connection(stream, &handler);
+                            let _ = handle_connection(stream, &handler, &busy, &draining);
                         });
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -169,6 +205,11 @@ impl HttpServer {
                 Err(_) => std::thread::sleep(Duration::from_millis(5)),
             }
         }
+        draining.store(true, Ordering::SeqCst);
+        let t0 = Instant::now();
+        while busy.load(Ordering::SeqCst) > 0 && t0.elapsed() < REQUEST_DRAIN_TIMEOUT {
+            std::thread::sleep(Duration::from_millis(10));
+        }
         let t0 = Instant::now();
         while active.load(Ordering::SeqCst) > 0 && t0.elapsed() < DRAIN_TIMEOUT {
             std::thread::sleep(Duration::from_millis(10));
@@ -176,19 +217,30 @@ impl HttpServer {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, handler: &Handler) -> Result<()> {
+fn handle_connection(
+    mut stream: TcpStream,
+    handler: &Handler,
+    busy: &Arc<AtomicUsize>,
+    draining: &AtomicBool,
+) -> Result<()> {
     // some platforms hand accepted sockets the listener's non-blocking
-    // mode; connection I/O below wants blocking reads with timeouts
+    // mode; connection I/O below wants blocking reads with timeouts.
+    // The short read timeout is the idle-drain poll tick — read_request
+    // accumulates ticks up to IO_TIMEOUT for a genuinely slow peer.
     let _ = stream.set_nonblocking(false);
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     // bytes read past the previous request's body (a pipelined next
     // request head) — fed back into the next read_request
     let mut carry: Vec<u8> = Vec::new();
     loop {
-        let req = match read_request(&mut stream, &mut carry) {
+        if draining.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match read_request(&mut stream, &mut carry, draining) {
             Ok(Some(req)) => req,
-            // clean close between requests: the client is done
+            // clean close between requests: the client is done (or the
+            // server is draining and no request had started)
             Ok(None) => return Ok(()),
             Err(e) => {
                 let resp = Response::error(400, &format!("{e:#}"));
@@ -199,17 +251,35 @@ fn handle_connection(mut stream: TcpStream, handler: &Handler) -> Result<()> {
             .header("connection")
             .map(|v| v.eq_ignore_ascii_case("close"))
             .unwrap_or(false);
-        let resp = handler(&req);
-        write_response(&mut stream, &resp, keep_alive)?;
-        if !keep_alive {
+        // count the request as in-flight while the handler runs and the
+        // response goes out: shutdown's first drain phase waits on this
+        // (guard, so a panicking handler can't wedge the drain)
+        let resp = {
+            busy.fetch_add(1, Ordering::SeqCst);
+            let _busy = ActiveGuard(busy.clone());
+            let resp = handler(&req);
+            // a draining server finishes the in-flight request, then
+            // closes — advertise it so the client re-connects elsewhere
+            let keep = keep_alive && !draining.load(Ordering::SeqCst);
+            write_response(&mut stream, &resp, keep)?;
+            keep
+        };
+        if !resp {
             return Ok(());
         }
     }
 }
 
-fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Request>> {
-    // read until the blank line separating head from body
+fn read_request(
+    stream: &mut TcpStream,
+    carry: &mut Vec<u8>,
+    draining: &AtomicBool,
+) -> Result<Option<Request>> {
+    // read until the blank line separating head from body; reads tick
+    // every IDLE_POLL so an idle keep-alive connection notices a
+    // draining server long before IO_TIMEOUT
     let mut buf: Vec<u8> = std::mem::take(carry);
+    let mut waited = Duration::ZERO;
     let head_end = loop {
         if let Some(pos) = find_head_end(&buf) {
             break pos;
@@ -218,14 +288,28 @@ fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Re
             bail!("request head larger than {MAX_HEAD} bytes");
         }
         let mut chunk = [0u8; 4096];
-        let n = stream.read(&mut chunk).context("reading request head")?;
-        if n == 0 {
-            if buf.is_empty() {
-                return Ok(None);
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-request");
             }
-            bail!("connection closed mid-request");
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // idle poll tick: close cleanly when the server is
+                // draining and no request has started; a request mid-head
+                // keeps its full IO_TIMEOUT allowance
+                if buf.is_empty() && draining.load(Ordering::SeqCst) {
+                    return Ok(None);
+                }
+                waited += IDLE_POLL;
+                if waited >= IO_TIMEOUT {
+                    return Err(e).context("reading request head");
+                }
+            }
+            Err(e) => return Err(e).context("reading request head"),
         }
-        buf.extend_from_slice(&chunk[..n]);
     };
     let head = std::str::from_utf8(&buf[..head_end]).context("request head is not UTF-8")?;
     let mut lines = head.split("\r\n");
@@ -269,13 +353,22 @@ fn read_request(stream: &mut TcpStream, carry: &mut Vec<u8>) -> Result<Option<Re
         }
     }
     let mut body = buf.split_off(head_end + 4);
+    let mut waited = Duration::ZERO;
     while body.len() < content_length {
         let mut chunk = [0u8; 8192];
-        let n = stream.read(&mut chunk).context("reading request body")?;
-        if n == 0 {
-            bail!("connection closed mid-body");
+        match stream.read(&mut chunk) {
+            Ok(0) => bail!("connection closed mid-body"),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // mid-body: the request has started, so draining does
+                // not abort it — only the cumulative IO timeout does
+                waited += IDLE_POLL;
+                if waited >= IO_TIMEOUT {
+                    return Err(e).context("reading request body");
+                }
+            }
+            Err(e) => return Err(e).context("reading request body"),
         }
-        body.extend_from_slice(&chunk[..n]);
     }
     // bytes past the body belong to the next pipelined request
     *carry = body.split_off(content_length);
@@ -288,8 +381,15 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
 
 fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> Result<()> {
     let connection = if keep_alive { "keep-alive" } else { "close" };
+    let mut extra = String::new();
+    for (name, value) in &resp.headers {
+        extra.push_str(name);
+        extra.push_str(": ");
+        extra.push_str(value);
+        extra.push_str("\r\n");
+    }
     let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {connection}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {connection}\r\n{extra}\r\n",
         resp.status,
         reason(resp.status),
         resp.content_type,

@@ -17,11 +17,23 @@
 //! padded sweep may let GES apply one bogus operator, but the following
 //! sweep scores as an all-zero surface and terminates the search; the
 //! partial result is then discarded and the job reports `Cancelled`.
+//!
+//! Deadlines ride the same wrapper: a job's `deadline_ms` becomes a
+//! [`Budget`] armed at **submit** (queue wait counts), checked between
+//! sub-batches and pushed into the backing service so a sharding
+//! backend clamps its dispatch/retry decisions by it. An expired budget
+//! discards the partial result and fails the job with a typed
+//! [`DeadlineExceeded`]. Overload protection is admission-side: the
+//! queue is bounded ([`JobLimits::max_queued`]) and a live-heap
+//! high-water mark ([`JobLimits::mem_high_water`]) sheds the pooled
+//! service caches before refusing new jobs — both surface as typed
+//! [`Overloaded`] errors (HTTP 429/503 + `Retry-After`).
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,9 +43,10 @@ use crate::coordinator::{
 };
 use crate::data::Dataset;
 use crate::graph::Pdag;
+use crate::obs::{fail, metrics};
 use crate::score::{ScoreBackend, ScoreRequest};
 use crate::search::ges::ges_from;
-use crate::util::Stopwatch;
+use crate::util::{Budget, DeadlineExceeded, Overloaded, Stopwatch};
 
 use super::registry::DatasetRegistry;
 
@@ -59,6 +72,29 @@ const MAX_RETAINED_TERMINAL_JOBS: usize = 1024;
 /// per-cache capacity this bounds server memory by
 /// `MAX_POOLED_SERVICES × cache_capacity` entries.
 const MAX_POOLED_SERVICES: usize = 32;
+
+/// Overload-protection knobs of a [`JobManager`].
+#[derive(Clone, Copy, Debug)]
+pub struct JobLimits {
+    /// Queued-but-not-running jobs admitted before `submit` refuses
+    /// with a typed [`Overloaded`] (HTTP 429 + `Retry-After`). Running
+    /// jobs don't count — the bound is on *waiting* work.
+    pub max_queued: usize,
+    /// Live-heap high-water mark in bytes, checked against
+    /// `obs::mem::live_bytes()` at submit. Above it the manager sheds
+    /// every pooled service cache (score memos and, through the dropped
+    /// backends, their fold-core caches) and — if the heap is still
+    /// over — refuses the job with [`Overloaded`] (HTTP 503). `None`
+    /// disables the guard; without the `mem-profile` feature
+    /// `live_bytes()` is always 0, so the guard is inert either way.
+    pub mem_high_water: Option<u64>,
+}
+
+impl Default for JobLimits {
+    fn default() -> JobLimits {
+        JobLimits { max_queued: 256, mem_high_water: None }
+    }
+}
 
 /// Lifecycle of a job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -132,6 +168,9 @@ struct Job {
     canon_method: String,
     state: Mutex<JobState>,
     cancel: AtomicBool,
+    /// Deadline budget armed at submit time — queue wait counts against
+    /// it, which is what makes the deadline end-to-end.
+    budget: Budget,
     progress: JobProgress,
     /// Shared-service counters at job start — polls report this job's
     /// activity as the delta against the live (or final) counters.
@@ -220,14 +259,27 @@ pub struct JobManager {
     /// Cache bound applied when a job spec leaves `cache_capacity`
     /// unset — a long-lived server must not grow memo maps unboundedly.
     default_cache_capacity: Option<usize>,
+    limits: JobLimits,
 }
 
 impl JobManager {
-    /// Spawn a manager draining the queue with `workers` threads.
+    /// Spawn a manager draining the queue with `workers` threads, under
+    /// the default [`JobLimits`].
     pub fn start(
         registry: Arc<DatasetRegistry>,
         workers: usize,
         default_cache_capacity: Option<usize>,
+    ) -> Arc<JobManager> {
+        let limits = JobLimits::default();
+        JobManager::start_with_limits(registry, workers, default_cache_capacity, limits)
+    }
+
+    /// [`JobManager::start`] with explicit overload-protection limits.
+    pub fn start_with_limits(
+        registry: Arc<DatasetRegistry>,
+        workers: usize,
+        default_cache_capacity: Option<usize>,
+        limits: JobLimits,
     ) -> Arc<JobManager> {
         let mgr = Arc::new(JobManager {
             registry,
@@ -241,6 +293,7 @@ impl JobManager {
             shutdown: AtomicBool::new(false),
             workers: Mutex::new(Vec::new()),
             default_cache_capacity,
+            limits,
         });
         let mut handles = Vec::new();
         for i in 0..workers.max(1) {
@@ -256,10 +309,44 @@ impl JobManager {
     }
 
     /// Enqueue a job. Validates the dataset and method names up front so
-    /// misspellings fail at submit, not minutes later in a worker.
+    /// misspellings fail at submit, not minutes later in a worker, and
+    /// applies the overload guards of [`JobLimits`]: a saturated
+    /// admission queue or a breached memory high-water mark refuses the
+    /// job with a typed [`Overloaded`] instead of queueing work the
+    /// server can't absorb.
     pub fn submit(&self, spec: JobSpec) -> Result<u64> {
         if self.shutdown.load(Ordering::SeqCst) {
             bail!("server is shutting down");
+        }
+        let queued = self.queue.lock().unwrap().len();
+        if queued >= self.limits.max_queued {
+            metrics::shed_total().inc();
+            return Err(Overloaded::new(format!(
+                "admission queue full ({queued}/{} jobs queued)",
+                self.limits.max_queued
+            ))
+            .retry_after(Duration::from_secs(1))
+            .into());
+        }
+        if let Some(high_water) = self.limits.mem_high_water {
+            let live = crate::obs::mem::live_bytes();
+            if live > high_water {
+                // shed the warm caches first: the pooled score memos and
+                // (through the dropped backend Arcs) their fold-core
+                // caches are the only server-held memory that can be
+                // released without touching running jobs
+                let dropped = self.shed_services();
+                metrics::shed_total().add(dropped.max(1));
+                // no retry hint: memory pressure maps to 503 at the
+                // HTTP layer (queue saturation, with a hint, maps 429)
+                if crate::obs::mem::live_bytes() > high_water {
+                    return Err(Overloaded::new(format!(
+                        "live heap {live} B over the {high_water} B high-water mark \
+                         (shed {dropped} cache entries, still over)"
+                    ))
+                    .into());
+                }
+            }
         }
         if self.registry.get(&spec.dataset).is_none() {
             bail!(
@@ -271,12 +358,14 @@ impl JobManager {
         let (canon, _) = resolve_method(&spec.method)
             .ok_or_else(|| anyhow!("unknown method `{}`", spec.method))?;
         let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let budget = Budget::from_ms(spec.cfg.deadline_ms);
         let job = Arc::new(Job {
             id,
             spec,
             canon_method: canon,
             state: Mutex::new(JobState::Queued),
             cancel: AtomicBool::new(false),
+            budget,
             progress: JobProgress::default(),
             stats_at_start: Mutex::new(None),
             service: Mutex::new(None),
@@ -396,6 +485,20 @@ impl JobManager {
     /// is deleted from the registry). Running jobs keep their own Arc.
     pub fn drop_dataset_services(&self, dataset: &str) {
         self.services.lock().unwrap().retain(|k, _| k.0 != dataset);
+    }
+
+    /// Overload shedding: invalidate every pooled score memo and drop
+    /// the pool entries themselves (releasing backend fold-core caches
+    /// not pinned by a running job). Returns the number of memo entries
+    /// dropped. Invalidation runs outside the pool lock — it takes each
+    /// service's cache lock, and stalling `service_for` behind that
+    /// would block the very submissions shedding is trying to save.
+    pub fn shed_services(&self) -> u64 {
+        let entries: Vec<Arc<ScoreService>> = {
+            let mut services = self.services.lock().unwrap();
+            services.drain().map(|(_, e)| e.service).collect()
+        };
+        entries.iter().map(|svc| svc.invalidate_all()).sum()
     }
 
     /// Any queued or running job targeting `dataset`? Appends are
@@ -524,7 +627,18 @@ impl JobManager {
             }
             *st = JobState::Running;
         }
-        let outcome = self.execute(job);
+        // contain panics (including an armed `jobs.worker=panic`
+        // failpoint): the job fails, the worker thread survives — a
+        // dead worker would silently strand the queue
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.execute(job)))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                Err(anyhow!("job panicked: {msg}"))
+            });
         // drop the live-service handle before publishing the terminal
         // state so late polls go through the result snapshot
         *job.service.lock().unwrap() = None;
@@ -647,6 +761,19 @@ impl JobManager {
     /// Run the job to completion; `Ok(None)` means it observed its
     /// cancel flag.
     fn execute(&self, job: &Job) -> Result<Option<JobResult>> {
+        if fail::hit("jobs.worker").is_some() {
+            // Error and Corrupt both mean "this worker run fails";
+            // Delay/Panic already happened inline in `hit`
+            return Err(fail::injected_error("jobs.worker"));
+        }
+        if job.budget.expired() {
+            metrics::deadline_exceeded_total().inc();
+            return Err(DeadlineExceeded::new(format!(
+                "job {} expired in the queue before work began",
+                job.id
+            ))
+            .into());
+        }
         let spec = &job.spec;
         let (ds, ds_version) = self
             .registry
@@ -664,9 +791,16 @@ impl JobManager {
                 let service = self.service_for(&spec.dataset, ds_version, ds, &canon, &spec.cfg)?;
                 *job.stats_at_start.lock().unwrap() = Some(service.stats());
                 *job.service.lock().unwrap() = Some(service.clone());
+                // arm the deadline on the backing service too, so a
+                // sharding backend clamps dispatch/hedge/retry by it;
+                // re-armed (or lifted) here per job because the pooled
+                // service outlives this one
+                service.set_budget(job.budget);
                 let backend = CancelBackend {
                     inner: service.clone(),
                     cancel: &job.cancel,
+                    budget: job.budget,
+                    deadlined: AtomicBool::new(false),
                     progress: &job.progress,
                 };
                 // warm start: resume from the service's last CPDAG (set
@@ -674,8 +808,21 @@ impl JobManager {
                 let init = if spec.warm_start { service.warm_start() } else { None };
                 let sw = Stopwatch::start();
                 let res = ges_from(&backend, &spec.cfg.ges, init.as_ref());
+                service.set_budget(Budget::none());
                 if job.cancel.load(Ordering::SeqCst) {
                     return Ok(None);
+                }
+                if backend.deadlined.load(Ordering::SeqCst) {
+                    // the zero-padded tail may have let GES apply bogus
+                    // operators: the partial CPDAG is discarded, never
+                    // published (and never warm-starts the next job)
+                    metrics::deadline_exceeded_total().inc();
+                    return Err(DeadlineExceeded::new(format!(
+                        "job {} ran past its {} ms deadline",
+                        job.id,
+                        spec.cfg.deadline_ms.unwrap_or(0)
+                    ))
+                    .into());
                 }
                 service.set_warm_start(res.cpdag.clone());
                 Ok(Some(JobResult {
@@ -691,10 +838,20 @@ impl JobManager {
                     return Ok(None);
                 }
                 // constraint-based searches run end to end through the
-                // registry; cancellation lands before/after, not inside
+                // registry; cancellation (and the deadline check) land
+                // before/after, not inside
                 let out = run_named(&canon, ds, &spec.cfg)?;
                 if job.cancel.load(Ordering::SeqCst) {
                     return Ok(None);
+                }
+                if job.budget.expired() {
+                    metrics::deadline_exceeded_total().inc();
+                    return Err(DeadlineExceeded::new(format!(
+                        "job {} ran past its {} ms deadline",
+                        job.id,
+                        spec.cfg.deadline_ms.unwrap_or(0)
+                    ))
+                    .into());
                 }
                 Ok(Some(JobResult {
                     cpdag: out.cpdag,
@@ -723,12 +880,17 @@ impl Drop for AppendGuard<'_> {
 }
 
 /// Per-job wrapper over the pooled service: submits each sweep in a few
-/// wide chunks, stops between chunks once the cancel flag is set
-/// (padding the remainder with zeros — the job runner discards the
-/// result), and counts sweeps/candidates for progress reporting.
+/// wide chunks, stops between chunks once the cancel flag is set **or
+/// the deadline budget expires** (padding the remainder with zeros —
+/// the job runner discards the result either way), and counts
+/// sweeps/candidates for progress reporting.
 struct CancelBackend<'a> {
     inner: Arc<ScoreService>,
     cancel: &'a AtomicBool,
+    budget: Budget,
+    /// Set once the budget expired mid-sweep; the job runner turns it
+    /// into a typed [`DeadlineExceeded`] failure.
+    deadlined: AtomicBool,
     progress: &'a JobProgress,
 }
 
@@ -741,6 +903,10 @@ impl ScoreBackend for CancelBackend<'_> {
         let mut out: Vec<f64> = Vec::with_capacity(reqs.len());
         for sub in reqs.chunks(chunk_len) {
             if self.cancel.load(Ordering::SeqCst) {
+                break;
+            }
+            if self.budget.expired() {
+                self.deadlined.store(true, Ordering::SeqCst);
                 break;
             }
             out.extend(self.inner.score_batch(sub));
@@ -929,6 +1095,49 @@ mod tests {
         assert!(st.invalidations > 0, "{st:?}");
         assert!(st.warm_start_hits >= 1, "{st:?}");
         assert!(st.consistent(), "{st:?}");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn full_admission_queue_refuses_with_overloaded() {
+        let limits = JobLimits { max_queued: 0, mem_high_water: None };
+        let mgr = JobManager::start_with_limits(test_registry(), 1, None, limits);
+        let err = mgr.submit(spec("bic")).unwrap_err();
+        let over = err.downcast_ref::<Overloaded>().expect("submit fails with a typed Overloaded");
+        assert!(over.retry_after.is_some(), "saturation advertises a Retry-After");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn expired_job_deadline_fails_typed() {
+        let mgr = JobManager::start(test_registry(), 1, None);
+        let mut s = spec("bic");
+        s.cfg.deadline_ms = Some(0);
+        let id = mgr.submit(s).unwrap();
+        let snap = wait_terminal(&mgr, id, Duration::from_secs(30));
+        assert_eq!(snap.state, JobState::Failed);
+        assert!(snap.result.is_none(), "deadlined jobs publish no result");
+        let msg = snap.error.as_deref().unwrap_or("");
+        assert!(msg.contains("deadline exceeded"), "typed deadline error, got: {msg}");
+
+        // a generous deadline changes nothing about the outcome
+        let mut s = spec("bic");
+        s.cfg.deadline_ms = Some(600_000);
+        let id = mgr.submit(s).unwrap();
+        let snap = wait_terminal(&mgr, id, Duration::from_secs(60));
+        assert_eq!(snap.state, JobState::Done, "{:?}", snap.error);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn shed_services_drops_the_warm_pool() {
+        let mgr = JobManager::start(test_registry(), 1, Some(1 << 16));
+        let id = mgr.submit(spec("bic")).unwrap();
+        let snap = wait_terminal(&mgr, id, Duration::from_secs(60));
+        assert_eq!(snap.state, JobState::Done, "{:?}", snap.error);
+        assert_eq!(mgr.service_stats().len(), 1);
+        assert!(mgr.shed_services() > 0, "the completed job left memo entries to shed");
+        assert!(mgr.service_stats().is_empty(), "shedding empties the pool");
         mgr.shutdown();
     }
 

@@ -30,9 +30,19 @@
 //! | `GET /v1/stats` | job counts, per-service cache counters (incl. evictions, resident cache/core-cache bytes, shard dispatch/retry/hedge/degrade, stream re-pivot/residual and per-follower health), datasets |
 //! | `GET /v1/metrics` | Prometheus text exposition: process-global stage counters/histograms (`cvlr_*`), per-scope memory gauges (`cvlr_mem_live_bytes`/`cvlr_mem_peak_bytes`), plus the `/v1/stats` service counters folded in as aggregate gauges; `?fleet=1` additionally scrapes every `--shards` follower's `/v1/metrics` on demand and appends its samples relabeled `follower="host:port"` (a failed scrape sets `cvlr_fleet_scrape_stale{follower=…} 1` instead of failing the request) |
 //! | `GET /v1/trace` | Chrome trace-event JSON snapshot of the span ring (Perfetto-loadable); the first scrape attaches the recorder, so traces cover traffic after it |
-//! | `POST /v1/shutdown` | graceful shutdown: stop accepting, drain, cancel jobs |
+//! | `POST /v1/failpoints` | test-only chaos control: `{"spec": "site=action;…"}` arms failpoints, `{"clear": true}` disarms them; `501` unless the binary was built with `--features fail-inject` |
+//! | `POST /v1/shutdown` | graceful shutdown: stop accepting, finish in-flight requests, drain, cancel jobs |
 //!
 //! Job states: `queued → running → done | failed | cancelled`.
+//!
+//! ## Failure semantics
+//!
+//! Typed resilience errors map to dedicated statuses at this layer: a
+//! saturated admission queue answers `429` with a `Retry-After` header,
+//! a breached memory high-water mark (after cache shedding) answers
+//! `503`, and an exhausted `deadline_ms` budget answers `504` — all
+//! counted in `cvlr_shed_total` / `cvlr_deadline_exceeded_total` and
+//! surfaced through `/v1/stats`.
 
 pub mod http;
 pub mod jobs;
@@ -51,11 +61,12 @@ use anyhow::{Context, Result};
 use crate::coordinator::{resolve_method, DiscoveryConfig, EngineKind, MethodKind};
 use crate::distrib::ShardClient;
 use crate::lowrank::FactorMethod;
-use crate::obs::{metrics, trace};
+use crate::obs::{fail, metrics, trace};
 use crate::score::ScoreBackend;
+use crate::util::{Backoff, Budget, DeadlineExceeded, Overloaded, Pcg64};
 
 use self::http::{Handler, HttpServer, Request, Response};
-use self::jobs::{JobManager, JobResult, JobSnapshot, JobSpec};
+use self::jobs::{JobLimits, JobManager, JobResult, JobSnapshot, JobSpec};
 use self::json::Json;
 use self::registry::DatasetRegistry;
 
@@ -92,6 +103,14 @@ pub struct ServerConfig {
     /// overrides it; empty means local scoring. A follower handling
     /// `/v1/score_batch` never re-shards, so fleets cannot loop.
     pub shards: Vec<String>,
+    /// Admission bound: queued-but-not-running jobs accepted before
+    /// `POST /v1/jobs` answers `429` + `Retry-After`.
+    pub max_queued_jobs: usize,
+    /// Live-heap high-water mark in bytes: above it job submission
+    /// sheds the pooled service caches, then answers `503` if the heap
+    /// is still over. `None` disables the guard (it is also inert
+    /// without the `mem-profile` feature).
+    pub mem_high_water: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -107,6 +126,8 @@ impl Default for ServerConfig {
             seed: 0,
             artifacts_dir: "artifacts".to_string(),
             shards: Vec::new(),
+            max_queued_jobs: 256,
+            mem_high_water: None,
         }
     }
 }
@@ -127,7 +148,14 @@ impl Server {
     /// accept loop, and return immediately.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let registry = Arc::new(DatasetRegistry::with_builtins(cfg.builtin_n, cfg.seed));
-        let manager = JobManager::start(registry.clone(), cfg.job_workers, cfg.cache_capacity);
+        let limits =
+            JobLimits { max_queued: cfg.max_queued_jobs, mem_high_water: cfg.mem_high_water };
+        let manager = JobManager::start_with_limits(
+            registry.clone(),
+            cfg.job_workers,
+            cfg.cache_capacity,
+            limits,
+        );
         let listener = HttpServer::bind(cfg.port)?;
         let addr = listener.addr();
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -208,6 +236,25 @@ fn conflict_status(e: &anyhow::Error, fallback: u16) -> u16 {
     } else {
         fallback
     }
+}
+
+/// Map the typed resilience errors to their statuses: [`Overloaded`]
+/// with a retry hint → `429` + `Retry-After` (queue saturation),
+/// without → `503` (memory pressure after shedding);
+/// [`DeadlineExceeded`] → `504`; [`TransientConflict`] → `409`;
+/// everything else `fallback`.
+fn error_response(e: &anyhow::Error, fallback: u16) -> Response {
+    if let Some(o) = e.downcast_ref::<Overloaded>() {
+        return match o.retry_after {
+            Some(d) => Response::error(429, &format!("{e:#}"))
+                .with_header("Retry-After", d.as_secs().max(1).to_string()),
+            None => Response::error(503, &format!("{e:#}")),
+        };
+    }
+    if e.is::<DeadlineExceeded>() {
+        return Response::error(504, &format!("{e:#}"));
+    }
+    Response::error(conflict_status(e, fallback), &format!("{e:#}"))
 }
 
 /// Reject unknown object keys — typos fail loudly instead of being
@@ -515,6 +562,7 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
             "cache_capacity",
             "warm_start",
             "shards",
+            "deadline_ms",
         ],
     ) {
         return resp;
@@ -558,6 +606,11 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
     if let Some(c) = body.get("cache_capacity").and_then(Json::as_u64) {
         dcfg.cache_capacity = Some(c as usize);
     }
+    // end-to-end deadline: the budget is armed at submit, so queue wait
+    // counts; an expired job fails with `deadline exceeded` → 504 here
+    if let Some(ms) = body.get("deadline_ms").and_then(Json::as_u64) {
+        dcfg.deadline_ms = Some(ms);
+    }
     // follower fleet: serve-level default, overridable per job; an
     // explicit `[]` forces local scoring even when the server has a
     // default fleet configured
@@ -587,7 +640,7 @@ fn post_job(manager: &JobManager, cfg: &ServerConfig, req: &Request) -> Response
             202,
             &Json::obj(vec![("id", num(id)), ("state", Json::str("queued"))]),
         ),
-        Err(e) => Response::error(conflict_status(&e, 400), &format!("{e:#}")),
+        Err(e) => error_response(&e, 400),
     }
 }
 
@@ -609,15 +662,20 @@ fn post_score_batch(
         Ok(b) => b,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
-    if let Err(resp) =
-        check_keys(&body, &["dataset", "version", "method", "engine", "lowrank", "requests"])
-    {
+    if let Err(resp) = check_keys(
+        &body,
+        &["dataset", "version", "deadline_ms", "method", "engine", "lowrank", "requests"],
+    ) {
         return resp;
     }
-    let (spec, pinned, reqs) = match crate::distrib::wire::parse_score_batch(&body) {
-        Ok(t) => t,
+    let msg = match crate::distrib::wire::parse_score_batch(&body) {
+        Ok(m) => m,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
+    let (spec, pinned, reqs) = (msg.spec, msg.version, msg.reqs);
+    // the coordinator ships its *remaining* budget; an armed deadline
+    // makes this follower cancel cooperatively between chunks below
+    let budget = Budget::from_ms(msg.deadline_ms);
     let (ds, ds_version) = match registry.entry(&spec.dataset) {
         Some(e) => e,
         None => {
@@ -681,8 +739,36 @@ fn post_score_batch(
     // them into its trace under this follower's synthetic pid. Old
     // coordinators simply ignore the extra field.
     let cap = trace::capture();
-    let scores = service.score_batch(&reqs);
+    // deadline-free requests score as one batch, byte-identical to the
+    // pre-deadline protocol; budgeted ones go in a few wide chunks so an
+    // expired budget stops the work instead of finishing a doomed batch
+    let (scores, expired) = if budget.is_limited() {
+        let chunk_len = 32usize.max(reqs.len().div_ceil(8));
+        let mut scores: Vec<f64> = Vec::with_capacity(reqs.len());
+        let mut expired = false;
+        for sub in reqs.chunks(chunk_len) {
+            if budget.expired() {
+                expired = true;
+                break;
+            }
+            scores.extend(service.score_batch(sub));
+        }
+        (scores, expired)
+    } else {
+        (service.score_batch(&reqs), false)
+    };
     let timings = cap.finish();
+    if expired {
+        metrics::deadline_exceeded_total().inc();
+        return Response::error(
+            504,
+            &format!(
+                "score_batch on `{}` ran past its {} ms budget",
+                spec.dataset,
+                msg.deadline_ms.unwrap_or(0)
+            ),
+        );
+    }
     let mut fields = vec![
         ("scores", Json::Arr(scores.into_iter().map(Json::Num).collect())),
         ("version", num(ds_version)),
@@ -729,6 +815,9 @@ fn get_stats(manager: &JobManager, registry: &DatasetRegistry) -> Response {
             ("jobs", jobs),
             ("services", Json::Arr(services)),
             ("datasets", Json::Arr(datasets)),
+            // overload/deadline observables (process-global counters)
+            ("shed_total", num(metrics::shed_total().get())),
+            ("deadline_exceeded_total", num(metrics::deadline_exceeded_total().get())),
         ]),
     )
 }
@@ -856,6 +945,12 @@ fn get_metrics(
     // scrape sets must land in this very response
     let mut remote = String::new();
     if let Some((addrs, clients)) = fleet {
+        // one jittered re-probe before declaring a follower stale — a
+        // keep-alive connection torn down between scrapes shouldn't
+        // mark the fleet degraded. Fixed seed: the jitter decorrelates
+        // the two attempts, not scrape requests from each other.
+        let backoff = Backoff::new(Duration::from_millis(50), Duration::from_millis(250));
+        let mut rng = Pcg64::new(0xf1ee7);
         for addr in addrs {
             let client = clients
                 .lock()
@@ -865,12 +960,23 @@ fn get_metrics(
                     Arc::new(ShardClient::new(addr.clone(), FLEET_SCRAPE_TIMEOUT))
                 })
                 .clone();
-            let stale = match client.get_text("/v1/metrics") {
-                Ok((200, text)) => {
+            let mut scraped = None;
+            for attempt in 1..=2u32 {
+                match client.get_text("/v1/metrics") {
+                    Ok((200, text)) => {
+                        scraped = Some(text);
+                        break;
+                    }
+                    _ if attempt < 2 => std::thread::sleep(backoff.delay(attempt, &mut rng)),
+                    _ => {}
+                }
+            }
+            let stale = match scraped {
+                Some(text) => {
                     remote.push_str(&relabel_exposition(&text, addr));
                     0.0
                 }
-                _ => 1.0,
+                None => 1.0,
             };
             metrics::set_labeled_gauge(
                 "cvlr_fleet_scrape_stale",
@@ -894,6 +1000,43 @@ fn get_metrics(
 fn get_trace() -> Response {
     trace::enable();
     Response::text(200, "application/json", trace::export_json())
+}
+
+/// `POST /v1/failpoints` — test-only chaos control over the process
+/// failpoint registry: `{"spec": "site=action;…"}` merges new arms
+/// (`site=off` disarms one), `{"clear": true}` disarms everything; both
+/// may be combined (clear runs first). Replies with the armed list.
+/// `501` unless the binary was built with `--features fail-inject` —
+/// production builds physically cannot be chaos-injected.
+fn post_failpoints(req: &Request) -> Response {
+    if !fail::compiled_in() {
+        return Response::error(
+            501,
+            "failpoints are not compiled in (rebuild with --features fail-inject)",
+        );
+    }
+    let body = match req.json() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    if let Err(resp) = check_keys(&body, &["spec", "clear"]) {
+        return resp;
+    }
+    if body.get("clear").and_then(Json::as_bool).unwrap_or(false) {
+        fail::clear();
+    }
+    if let Some(spec) = body.get("spec").and_then(Json::as_str) {
+        if let Err(e) = fail::configure(spec) {
+            return Response::error(400, &format!("{e:#}"));
+        }
+    }
+    let armed: Vec<Json> = fail::list()
+        .into_iter()
+        .map(|(site, action)| {
+            Json::obj(vec![("site", Json::str(site)), ("action", Json::str(action))])
+        })
+        .collect();
+    Response::json(200, &Json::obj(vec![("armed", Json::Arr(armed))]))
 }
 
 /// Build the route table over the job manager + dataset registry.
@@ -977,6 +1120,7 @@ fn build_handler(
                 get_metrics(&manager, &registry, fleet)
             }
             ("GET", ["v1", "trace"]) => get_trace(),
+            ("POST", ["v1", "failpoints"]) => post_failpoints(req),
             ("POST", ["v1", "shutdown"]) => {
                 shutdown.store(true, Ordering::SeqCst);
                 Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
@@ -991,7 +1135,8 @@ fn build_handler(
             (_, ["v1", "datasets"]) | (_, ["v1", "datasets", _])
             | (_, ["v1", "datasets", _, "rows"]) | (_, ["v1", "jobs"])
             | (_, ["v1", "jobs", _]) | (_, ["v1", "score_batch"])
-            | (_, ["v1", "metrics"]) | (_, ["v1", "trace"]) => {
+            | (_, ["v1", "metrics"]) | (_, ["v1", "trace"])
+            | (_, ["v1", "failpoints"]) => {
                 Response::error(405, "method not allowed")
             }
             _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),

@@ -210,6 +210,12 @@ impl StreamBackend {
     /// re-pivot only when the residual budget is exhausted — both
     /// reported in the returned stats).
     pub fn append(&self, rows: &Mat) -> Result<AppendStats> {
+        // chaos site: fails the append before any state mutates, so an
+        // injected fault can never leave factors and data out of sync
+        // (Delay/Panic run inline, Error and Corrupt both mean Err)
+        if crate::obs::fail::hit("stream.append").is_some() {
+            return Err(crate::obs::fail::injected_error("stream.append"));
+        }
         let span = crate::obs::trace::span("stream-append", "stream")
             .arg("rows", rows.rows.to_string());
         let _mem = crate::obs::mem::MemScope::enter(crate::obs::mem::Scope::StreamAppend);

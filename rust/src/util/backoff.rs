@@ -1,0 +1,104 @@
+//! Jittered exponential backoff — the one retry-delay policy shared by
+//! every resend loop in the crate.
+//!
+//! Three call sites used to hand-roll this independently (the follower
+//! pool's retry delay, the dataset-push 409 re-register pause, and the
+//! fleet-metrics stale-resend); they now all go through [`Backoff`]:
+//! `base × 2^(attempt−1)`, capped, scaled by a uniform jitter factor in
+//! [0.5, 1) drawn from a caller-owned seeded [`Pcg64`]. Deterministic
+//! per seed — chaos schedules replay bit-for-bit — and bounded above by
+//! the cap, so the worst-case delay of a retry ladder is computable.
+
+use std::time::Duration;
+
+use crate::util::Pcg64;
+
+/// A jittered exponential backoff policy. Stateless per attempt: the
+/// caller tracks the attempt number and owns the jitter RNG, so one
+/// policy can serve many concurrent retry ladders.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    /// Delay base for the first retry.
+    pub base: Duration,
+    /// Ceiling applied before jitter.
+    pub cap: Duration,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration) -> Backoff {
+        Backoff { base, cap }
+    }
+
+    /// The un-jittered delay for retry `attempt` (1-based):
+    /// `base × 2^(attempt−1)`, capped. Attempt 0 is treated as 1.
+    pub fn nominal(&self, attempt: u32) -> Duration {
+        let scaled = self.base.as_secs_f64() * 2f64.powi(attempt.saturating_sub(1).min(62) as i32);
+        Duration::from_secs_f64(scaled.min(self.cap.as_secs_f64()))
+    }
+
+    /// The jittered delay for retry `attempt`: nominal scaled by a
+    /// uniform factor in [0.5, 1) from `rng`. Always within
+    /// [nominal/2, nominal] — a retry ladder's total delay is bounded.
+    pub fn delay(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let jitter = 0.5 + 0.5 * rng.uniform();
+        Duration::from_secs_f64(self.nominal(attempt).as_secs_f64() * jitter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_doubles_and_caps() {
+        let b = Backoff::new(Duration::from_millis(50), Duration::from_millis(400));
+        assert_eq!(b.nominal(0), Duration::from_millis(50), "attempt 0 behaves as 1");
+        assert_eq!(b.nominal(1), Duration::from_millis(50));
+        assert_eq!(b.nominal(2), Duration::from_millis(100));
+        assert_eq!(b.nominal(3), Duration::from_millis(200));
+        assert_eq!(b.nominal(4), Duration::from_millis(400));
+        assert_eq!(b.nominal(5), Duration::from_millis(400), "capped");
+        assert_eq!(b.nominal(64), Duration::from_millis(400), "huge attempts don't overflow");
+    }
+
+    #[test]
+    fn delay_is_jittered_within_bounds() {
+        let b = Backoff::new(Duration::from_millis(50), Duration::from_millis(400));
+        let mut rng = Pcg64::new(0x5eed);
+        for attempt in 1..=8u32 {
+            let nominal = b.nominal(attempt);
+            for _ in 0..64 {
+                let d = b.delay(attempt, &mut rng);
+                assert!(d >= nominal / 2, "attempt {attempt}: {d:?} below jitter floor");
+                assert!(d <= nominal, "attempt {attempt}: {d:?} above nominal");
+            }
+        }
+    }
+
+    #[test]
+    fn delay_is_deterministic_per_seed() {
+        let b = Backoff::new(Duration::from_millis(50), Duration::from_secs(1));
+        let mut a = Pcg64::new(7);
+        let mut c = Pcg64::new(7);
+        for attempt in 1..=6u32 {
+            assert_eq!(b.delay(attempt, &mut a), b.delay(attempt, &mut c));
+        }
+        let mut d = Pcg64::new(8);
+        let same: Vec<_> = (1..=6u32)
+            .map(|i| b.delay(i, &mut Pcg64::new(7)) == b.delay(i, &mut d))
+            .collect();
+        assert!(same.iter().any(|eq| !eq), "different seeds give a different schedule");
+    }
+
+    #[test]
+    fn worst_case_ladder_is_computable() {
+        // The dispatch layer sizes its lane budget from the sum of
+        // nominal delays; verify the bound the jitter respects.
+        let b = Backoff::new(Duration::from_millis(50), Duration::from_millis(400));
+        let mut rng = Pcg64::new(1);
+        let worst: Duration = (1..=4u32).map(|i| b.nominal(i)).sum();
+        let actual: Duration = (1..=4u32).map(|i| b.delay(i, &mut rng)).sum();
+        assert!(actual <= worst);
+        assert!(actual >= worst / 2);
+    }
+}

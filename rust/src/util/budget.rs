@@ -1,0 +1,200 @@
+//! End-to-end deadline budgets and the typed resilience errors.
+//!
+//! A [`Budget`] is an optional absolute deadline threaded from the
+//! entry point (CLI `--deadline-ms`, the `deadline_ms` job option, or
+//! the `deadline_ms` field of `POST /v1/score_batch`) down through the
+//! job manager, the shard dispatch layer and the follower's chunked
+//! scoring loop. Every layer consults the *remaining* budget before
+//! committing to work it couldn't finish in time — retries stop, socket
+//! timeouts clamp, followers cancel cooperatively — so an expired
+//! budget always resolves to either a degraded-but-exact local result
+//! or a typed [`DeadlineExceeded`] error, never a hang.
+//!
+//! [`Overloaded`] is the admission-control twin: the server sheds work
+//! it can't queue (bounded admission) or afford (memory high-water)
+//! with a typed error that maps to HTTP 429/503 + `Retry-After`.
+
+use std::time::{Duration, Instant};
+
+/// An optional absolute deadline. `Budget::none()` is unlimited and
+/// costs nothing to consult; a limited budget is a single `Instant`
+/// comparison. Copy-cheap by design — it crosses thread boundaries
+/// into lane controllers and worker threads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Budget {
+    deadline: Option<Instant>,
+}
+
+impl Budget {
+    /// The unlimited budget: never expires, clamps nothing.
+    pub fn none() -> Budget {
+        Budget { deadline: None }
+    }
+
+    /// A budget expiring `ms` milliseconds from now; `None` ⇒ unlimited.
+    pub fn from_ms(ms: Option<u64>) -> Budget {
+        Budget { deadline: ms.map(|m| Instant::now() + Duration::from_millis(m)) }
+    }
+
+    /// A budget expiring at an absolute instant.
+    pub fn until(deadline: Instant) -> Budget {
+        Budget { deadline: Some(deadline) }
+    }
+
+    /// The absolute deadline, when limited.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// True when a deadline is set at all.
+    pub fn is_limited(&self) -> bool {
+        self.deadline.is_some()
+    }
+
+    /// True once the deadline has passed (never for unlimited budgets).
+    pub fn expired(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d)
+    }
+
+    /// Time left, when limited. Expired budgets report zero.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// Milliseconds left, when limited (zero once expired).
+    pub fn remaining_ms(&self) -> Option<u64> {
+        self.remaining().map(|d| d.as_millis() as u64)
+    }
+
+    /// Clamp a nominal timeout by the remaining budget, flooring at
+    /// 1 ms so socket APIs (which reject a zero timeout) still get a
+    /// valid — immediately-expiring — value.
+    pub fn clamp(&self, nominal: Duration) -> Duration {
+        match self.remaining() {
+            Some(rem) => nominal.min(rem).max(Duration::from_millis(1)),
+            None => nominal,
+        }
+    }
+
+    /// Does the remaining budget cover `cost`? Unlimited budgets cover
+    /// everything; this is the retry/hedge gate ("don't re-dispatch to
+    /// a follower whose EWMA outlives the deadline").
+    pub fn covers(&self, cost: Duration) -> bool {
+        match self.remaining() {
+            Some(rem) => rem >= cost,
+            None => true,
+        }
+    }
+}
+
+/// Typed error for a budget that ran out before the work finished.
+/// Downcast from `anyhow::Error` at the HTTP boundary → 504.
+#[derive(Debug, Clone)]
+pub struct DeadlineExceeded {
+    /// What ran out of time (a stage or endpoint name).
+    pub what: String,
+}
+
+impl DeadlineExceeded {
+    pub fn new(what: impl Into<String>) -> DeadlineExceeded {
+        DeadlineExceeded { what: what.into() }
+    }
+}
+
+impl std::fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deadline exceeded: {}", self.what)
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Typed error for work the server refused to take on: a full
+/// admission queue (→ 429 + `Retry-After`) or a breached memory
+/// high-water mark (→ 503 after shedding caches didn't recover
+/// enough).
+#[derive(Debug, Clone)]
+pub struct Overloaded {
+    /// Why admission was refused.
+    pub what: String,
+    /// Suggested client wait before retrying, for `Retry-After`.
+    pub retry_after: Option<Duration>,
+}
+
+impl Overloaded {
+    pub fn new(what: impl Into<String>) -> Overloaded {
+        Overloaded { what: what.into(), retry_after: None }
+    }
+
+    pub fn retry_after(mut self, d: Duration) -> Overloaded {
+        self.retry_after = Some(d);
+        self
+    }
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "overloaded: {}", self.what)
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_budget_never_expires_or_clamps() {
+        let b = Budget::none();
+        assert!(!b.is_limited());
+        assert!(!b.expired());
+        assert_eq!(b.remaining(), None);
+        assert_eq!(b.clamp(Duration::from_secs(10)), Duration::from_secs(10));
+        assert!(b.covers(Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn limited_budget_expires_and_clamps() {
+        let b = Budget::until(Instant::now() + Duration::from_secs(5));
+        assert!(b.is_limited());
+        assert!(!b.expired());
+        let rem = b.remaining().unwrap();
+        assert!(rem <= Duration::from_secs(5) && rem > Duration::from_secs(4));
+        assert_eq!(b.clamp(Duration::from_secs(1)), Duration::from_secs(1), "short stays");
+        assert!(b.clamp(Duration::from_secs(60)) <= Duration::from_secs(5), "long clamps");
+        assert!(b.covers(Duration::from_secs(1)));
+        assert!(!b.covers(Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn expired_budget_floors_at_one_ms() {
+        let past = Instant::now() - Duration::from_millis(10);
+        let b = Budget::until(past);
+        assert!(b.expired());
+        assert_eq!(b.remaining(), Some(Duration::ZERO));
+        assert_eq!(b.remaining_ms(), Some(0));
+        assert_eq!(b.clamp(Duration::from_secs(10)), Duration::from_millis(1));
+        assert!(!b.covers(Duration::from_millis(1)));
+        assert!(b.covers(Duration::ZERO));
+    }
+
+    #[test]
+    fn from_ms_none_is_unlimited() {
+        assert!(!Budget::from_ms(None).is_limited());
+        assert!(Budget::from_ms(Some(50)).is_limited());
+    }
+
+    #[test]
+    fn typed_errors_downcast_from_anyhow() {
+        let e: anyhow::Error = DeadlineExceeded::new("score_batch").into();
+        assert!(e.downcast_ref::<DeadlineExceeded>().is_some());
+        assert_eq!(e.to_string(), "deadline exceeded: score_batch");
+
+        let e: anyhow::Error =
+            Overloaded::new("admission queue full").retry_after(Duration::from_secs(2)).into();
+        let o = e.downcast_ref::<Overloaded>().unwrap();
+        assert_eq!(o.retry_after, Some(Duration::from_secs(2)));
+        assert_eq!(e.to_string(), "overloaded: admission queue full");
+    }
+}

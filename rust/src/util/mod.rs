@@ -13,6 +13,10 @@ pub mod csv;
 pub mod timing;
 pub mod cli;
 pub mod prop;
+pub mod backoff;
+pub mod budget;
 
 pub use rng::Pcg64;
 pub use timing::Stopwatch;
+pub use backoff::Backoff;
+pub use budget::{Budget, DeadlineExceeded, Overloaded};

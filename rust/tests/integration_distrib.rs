@@ -251,8 +251,8 @@ fn score_batch_endpoint_protocol() {
         vec![ScoreRequest::new(0, &[]), ScoreRequest::new(1, &[0]), ScoreRequest::new(2, &[0, 1])];
 
     // unknown dataset: the follower asks for the raw push
-    let (status, resp) =
-        post(addr, "/v1/score_batch", wire::score_batch_body(&spec("nope", "cv-lr"), None, &reqs));
+    let body = wire::score_batch_body(&spec("nope", "cv-lr"), None, None, &reqs);
+    let (status, resp) = post(addr, "/v1/score_batch", body);
     assert_eq!(status, 404, "{resp:?}");
 
     // raw push in internal coordinates; the follower assigns a version
@@ -264,7 +264,7 @@ fn score_batch_endpoint_protocol() {
     let (status, resp) = post(
         addr,
         "/v1/score_batch",
-        wire::score_batch_body(&spec("wiretest", "cv-lr"), Some(version + 1), &reqs),
+        wire::score_batch_body(&spec("wiretest", "cv-lr"), Some(version + 1), None, &reqs),
     );
     assert_eq!(status, 409, "{resp:?}");
 
@@ -272,12 +272,12 @@ fn score_batch_endpoint_protocol() {
     let (status, resp) = post(
         addr,
         "/v1/score_batch",
-        wire::score_batch_body(&spec("wiretest", "nope"), Some(version), &reqs),
+        wire::score_batch_body(&spec("wiretest", "nope"), Some(version), None, &reqs),
     );
     assert_eq!(status, 400, "{resp:?}");
 
     // a correct pin scores; a repeat is bit-identical (memoized or not)
-    let body = wire::score_batch_body(&spec("wiretest", "cv-lr"), Some(version), &reqs);
+    let body = wire::score_batch_body(&spec("wiretest", "cv-lr"), Some(version), None, &reqs);
     let (status, resp) = post(addr, "/v1/score_batch", body.clone());
     assert_eq!(status, 200, "{resp:?}");
     assert_eq!(resp.get("version").and_then(Json::as_u64), Some(version));

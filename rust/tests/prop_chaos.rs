@@ -1,0 +1,326 @@
+//! Chaos property tests — randomized failpoint schedules over a
+//! two-follower sharded fleet (requires `--features fail-inject`).
+//!
+//! The property under test is the robustness contract of the serving
+//! stack: **under any injected fault schedule, a discovery run
+//! terminates within its wall-clock bound and either returns the
+//! bit-identical CPDAG of a fault-free local run or fails with a typed
+//! error** — never a hang, never a silently wrong graph.
+//!
+//! The failpoint registry is process-global, so every test here
+//! serializes on one mutex; schedules are derived from a fixed PCG
+//! seed so a failing round reproduces exactly.
+
+#![cfg(feature = "fail-inject")]
+
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use cvlr::coordinator::Discovery;
+use cvlr::data::synth::{generate, SynthConfig};
+use cvlr::obs::fail;
+use cvlr::server::http::request;
+use cvlr::server::json::Json;
+use cvlr::server::{Server, ServerConfig};
+use cvlr::util::{DeadlineExceeded, Pcg64};
+
+/// Serializes tests against the process-global failpoint registry.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Guard that disarms every failpoint when a test (or an assert inside
+/// it) exits, so one failing round can't poison the next test.
+struct ClearOnDrop;
+impl Drop for ClearOnDrop {
+    fn drop(&mut self) {
+        fail::clear();
+    }
+}
+
+fn start_follower() -> Server {
+    Server::start(ServerConfig {
+        port: 0, // ephemeral
+        job_workers: 1,
+        builtin_n: 40,
+        cache_capacity: Some(1 << 16),
+        ..Default::default()
+    })
+    .expect("follower starts")
+}
+
+fn post(addr: SocketAddr, path: &str, body: Json) -> (u16, Json) {
+    request(addr, "POST", path, Some(&body)).expect("POST")
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
+    request(addr, "GET", path, None).expect("GET")
+}
+
+/// The sites a coordinator-side schedule may arm. `jobs.worker` and
+/// `stream.append` never fire on this path, and `panic` is excluded
+/// because only the job worker contains panics — dispatch lanes are
+/// expected to stay panic-free, which `error`/`corrupt`/`delay`
+/// already exercise end to end.
+const CHAOS_SITES: &[&str] = &["distrib.dispatch", "distrib.reply", "wire.dataset_push"];
+const CHAOS_ACTIONS: &[&str] = &["error", "corrupt", "delay(40)"];
+
+/// Randomized schedules: each round arms one or two (site, action)
+/// pairs, runs a sharded discovery under a slack deadline, and demands
+/// the robustness contract — termination well inside the wall-clock
+/// bound, and a result that is either bit-identical to the fault-free
+/// baseline (injected faults degrade to local scoring) or a typed
+/// error naming the injected fault.
+#[test]
+fn randomized_fault_schedules_terminate_with_identical_cpdag_or_typed_error() {
+    let _serial = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = ClearOnDrop;
+    fail::clear();
+
+    let (ds, _) = generate(&SynthConfig {
+        num_vars: 5,
+        density: 0.5,
+        n: 120,
+        seed: 11,
+        ..Default::default()
+    });
+    let ds = Arc::new(ds);
+    let baseline = Discovery::builder(ds.clone()).method("cv-lr").run().expect("local baseline");
+
+    let f1 = start_follower();
+    let f2 = start_follower();
+    let fleet = [f1.addr().to_string(), f2.addr().to_string()];
+
+    let mut rng = Pcg64::new(0xc4a0_5031);
+    for round in 0..8 {
+        let mut spec = String::new();
+        for _ in 0..(1 + rng.below(2)) {
+            let site = CHAOS_SITES[rng.below(CHAOS_SITES.len())];
+            let action = CHAOS_ACTIONS[rng.below(CHAOS_ACTIONS.len())];
+            if !spec.is_empty() {
+                spec.push(';');
+            }
+            spec.push_str(&format!("{site}={action}"));
+        }
+        fail::configure(&spec).expect("schedule parses");
+
+        let t0 = Instant::now();
+        let run = Discovery::builder(ds.clone())
+            .method("cv-lr")
+            .shards(fleet.clone())
+            .shard_dataset("prop-chaos")
+            .deadline_ms(120_000)
+            .run();
+        let elapsed = t0.elapsed();
+        fail::clear();
+        assert!(
+            elapsed < Duration::from_secs(90),
+            "round {round} [{spec}] blew the wall-clock bound: {elapsed:?}"
+        );
+        match run {
+            Ok(out) => assert_eq!(
+                out.cpdag, baseline.cpdag,
+                "round {round} [{spec}] returned a corrupted CPDAG"
+            ),
+            Err(e) => assert!(
+                e.downcast_ref::<DeadlineExceeded>().is_some()
+                    || format!("{e:#}").contains(fail::INJECTED),
+                "round {round} [{spec}] failed with an untyped error: {e:#}"
+            ),
+        }
+    }
+
+    f1.stop();
+    f2.stop();
+}
+
+/// Persistent hard faults: with every dispatch (or every dataset push)
+/// failing for the whole run, the backend must degrade to local scoring
+/// and still return the exact baseline CPDAG — follower loss is a
+/// wall-clock event, never a correctness event.
+#[test]
+fn persistent_fault_degrades_to_local_with_identical_cpdag() {
+    let _serial = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = ClearOnDrop;
+    fail::clear();
+
+    let (ds, _) = generate(&SynthConfig {
+        num_vars: 4,
+        density: 0.5,
+        n: 100,
+        seed: 3,
+        ..Default::default()
+    });
+    let ds = Arc::new(ds);
+    let baseline = Discovery::builder(ds.clone()).method("cv-lr").run().expect("local baseline");
+
+    let f1 = start_follower();
+    let f2 = start_follower();
+    let fleet = [f1.addr().to_string(), f2.addr().to_string()];
+
+    for spec in ["distrib.dispatch=error", "wire.dataset_push=error", "distrib.reply=corrupt"] {
+        fail::configure(spec).expect("schedule parses");
+        let out = Discovery::builder(ds.clone())
+            .method("cv-lr")
+            .shards(fleet.clone())
+            .shard_dataset("prop-chaos-hard")
+            .deadline_ms(120_000)
+            .run()
+            .unwrap_or_else(|e| panic!("[{spec}] must degrade to local, got: {e:#}"));
+        fail::clear();
+        assert_eq!(out.cpdag, baseline.cpdag, "[{spec}] corrupted the CPDAG");
+    }
+
+    f1.stop();
+    f2.stop();
+}
+
+/// A straggler fleet against a tight deadline: replies delayed past the
+/// whole budget must end the run quickly with either a typed
+/// `DeadlineExceeded` or a (degraded-to-local) baseline-identical graph
+/// — the one forbidden outcome is hanging for the full delay schedule.
+#[test]
+fn tight_deadline_against_stragglers_never_hangs() {
+    let _serial = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = ClearOnDrop;
+    fail::clear();
+
+    let (ds, _) = generate(&SynthConfig {
+        num_vars: 4,
+        density: 0.5,
+        n: 100,
+        seed: 3,
+        ..Default::default()
+    });
+    let ds = Arc::new(ds);
+    let baseline = Discovery::builder(ds.clone()).method("cv-lr").run().expect("local baseline");
+
+    let f1 = start_follower();
+    let f2 = start_follower();
+    let fleet = [f1.addr().to_string(), f2.addr().to_string()];
+
+    fail::configure("distrib.dispatch=delay(3000)").expect("schedule parses");
+    let t0 = Instant::now();
+    let run = Discovery::builder(ds.clone())
+        .method("cv-lr")
+        .shards(fleet)
+        .shard_dataset("prop-chaos-straggler")
+        .deadline_ms(400)
+        .run();
+    let elapsed = t0.elapsed();
+    fail::clear();
+    // Generous bound: far above the 400ms budget (local degrade still
+    // has to score), far below what honoring every injected 3s delay
+    // per dispatch would cost.
+    assert!(elapsed < Duration::from_secs(60), "straggler run hung: {elapsed:?}");
+    match run {
+        Ok(out) => assert_eq!(out.cpdag, baseline.cpdag, "straggler run corrupted the CPDAG"),
+        Err(e) => assert!(
+            e.downcast_ref::<DeadlineExceeded>().is_some(),
+            "expected DeadlineExceeded, got: {e:#}"
+        ),
+    }
+
+    f1.stop();
+    f2.stop();
+}
+
+/// The HTTP chaos surface end to end: `POST /v1/failpoints` arms and
+/// clears schedules, rejects bad specs whole, and an armed
+/// `jobs.worker` fault — including a panic — turns into a typed failed
+/// job while the worker thread survives to run the next one.
+#[test]
+fn http_failpoints_control_jobs_worker_faults() {
+    let _serial = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _disarm = ClearOnDrop;
+    fail::clear();
+
+    let srv = start_follower();
+    let addr = srv.addr();
+
+    // arm via HTTP; the reply lists the armed schedule
+    let (status, resp) = post(
+        addr,
+        "/v1/failpoints",
+        Json::obj(vec![("spec", Json::str("jobs.worker=error"))]),
+    );
+    assert_eq!(status, 200, "{resp:?}");
+    let armed = resp.get("armed").and_then(Json::as_arr).expect("armed");
+    assert_eq!(armed.len(), 1, "{resp:?}");
+    assert_eq!(armed[0].get("site").and_then(Json::as_str), Some("jobs.worker"));
+
+    // a bad spec is rejected whole and changes nothing
+    let (status, resp) = post(
+        addr,
+        "/v1/failpoints",
+        Json::obj(vec![("spec", Json::str("jobs.worker=off;bogus.site=error"))]),
+    );
+    assert_eq!(status, 400, "{resp:?}");
+    assert_eq!(fail::list().len(), 1, "failed spec must change nothing");
+
+    // the armed fault fails the job with the injected-fault marker
+    let mut csv = String::from("a,b\n");
+    let mut rng = Pcg64::new(5);
+    for _ in 0..60 {
+        let a = rng.normal();
+        csv.push_str(&format!("{a:.6},{:.6}\n", 0.8 * a + 0.5 * rng.normal()));
+    }
+    let (status, resp) = post(
+        addr,
+        "/v1/datasets",
+        Json::obj(vec![("name", Json::str("chaos")), ("csv", Json::str(csv))]),
+    );
+    assert_eq!(status, 201, "{resp:?}");
+
+    let submit = |addr| {
+        let (status, resp) = post(
+            addr,
+            "/v1/jobs",
+            Json::obj(vec![("dataset", Json::str("chaos")), ("method", Json::str("bic"))]),
+        );
+        assert_eq!(status, 202, "{resp:?}");
+        resp.get("id").and_then(Json::as_u64).expect("job id")
+    };
+    let poll = |addr, id: u64| {
+        let t0 = Instant::now();
+        loop {
+            let (status, job) = get(addr, &format!("/v1/jobs/{id}"));
+            assert_eq!(status, 200, "{job:?}");
+            let state = job.get("state").and_then(Json::as_str).expect("state").to_string();
+            if state == "done" || state == "failed" || state == "cancelled" {
+                return job;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(60), "job {id} hung in `{state}`");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    };
+
+    let job = poll(addr, submit(addr));
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("failed"), "{job:?}");
+    let err = job.get("error").and_then(Json::as_str).expect("error");
+    assert!(err.contains(fail::INJECTED), "untyped job error: {err}");
+
+    // a worker panic is contained: the job fails, the thread survives
+    let (status, resp) = post(
+        addr,
+        "/v1/failpoints",
+        Json::obj(vec![("spec", Json::str("jobs.worker=panic"))]),
+    );
+    assert_eq!(status, 200, "{resp:?}");
+    let job = poll(addr, submit(addr));
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("failed"), "{job:?}");
+    let err = job.get("error").and_then(Json::as_str).expect("error");
+    assert!(err.contains("panicked"), "panic not surfaced as a typed failure: {err}");
+
+    // clear via HTTP; the same worker thread now finishes a job
+    let (status, resp) = post(addr, "/v1/failpoints", Json::obj(vec![("clear", Json::Bool(true))]));
+    assert_eq!(status, 200, "{resp:?}");
+    assert!(resp.get("armed").and_then(Json::as_arr).expect("armed").is_empty(), "{resp:?}");
+    let job = poll(addr, submit(addr));
+    assert_eq!(
+        job.get("state").and_then(Json::as_str),
+        Some("done"),
+        "worker thread did not survive the contained panic: {job:?}"
+    );
+
+    srv.stop();
+}
