@@ -1,0 +1,499 @@
+//! `cvlr lint` — repo-invariant checks that `cargo build` cannot
+//! express, run in CI before the test matrix (`cargo run -- lint`).
+//!
+//! Four rules, each a pure function over file *contents* so every rule
+//! is unit-testable against synthetic violations without touching the
+//! filesystem:
+//!
+//! 1. **SAFETY comments** — every `unsafe` keyword in non-test code
+//!    carries a `// SAFETY:` comment on the same line or within the
+//!    few lines above it (shared comments cover adjacent `unsafe fn`s
+//!    of one impl via the block rule below).
+//! 2. **No unwrap on locks/I/O in the serving stack** — non-test code
+//!    under `server/` and `distrib/` must not `.unwrap()`/`.expect()`
+//!    a lock guard (`.lock()`, `.read()`, `.write()`) or a flush;
+//!    locks go through `util::lockorder` (poison-absorbing, and the
+//!    lock-order CI build checks acquisition cycles), I/O errors
+//!    propagate with `?` + context.
+//! 3. **Failpoints documented** — every site in `obs::fail::SITES`
+//!    appears in README's "Failure semantics" section, so the chaos
+//!    surface and its docs cannot drift apart.
+//! 4. **Metrics declared** — every `cvlr_*` string literal in `obs/`
+//!    and `server/mod.rs` matches an entry of
+//!    [`crate::obs::metrics::DECLARED_METRICS`] exactly, or starts
+//!    with an entry that ends in `_` (a declared dynamic-suffix
+//!    family such as `cvlr_jobs_<state>`).
+//!
+//! Line/byte heuristics, not a parser: rules skip `#[cfg(test)]` mod
+//! regions by brace tracking and comment-only lines where relevant.
+//! That is deliberate — the lint must stay dependency-free and fast,
+//! and a false positive is fixed by writing the comment the rule asks
+//! for anyway.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::fail;
+use crate::obs::metrics::DECLARED_METRICS;
+
+/// One rule violation, formatted `path:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// How many lines above an `unsafe` keyword a `// SAFETY:` comment may
+/// sit. Generous enough for an attribute + signature between the
+/// comment and the keyword.
+const SAFETY_LOOKBACK: usize = 6;
+
+/// The keyword and tag, assembled so this file's own non-test code
+/// never contains the keyword as a bare word (the lint lints itself).
+const UNSAFE_KW: &str = concat!("un", "safe");
+const UNSAFE_FN: &str = concat!("un", "safe fn");
+const SAFETY_TAG: &str = "// SAFETY:";
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of word-boundary occurrences of `word` in `line`.
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(i) = line[from..].find(word) {
+        let at = from + i;
+        let before_ok = at == 0 || !is_word(bytes[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= bytes.len() || !is_word(bytes[after]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+/// Line numbers (1-based) inside `#[cfg(test)] mod { … }` regions,
+/// located by brace tracking from the `cfg` attribute's following
+/// `mod`. Also covers `#[cfg(all(test, …))]`.
+fn test_region_lines(content: &str) -> Vec<bool> {
+    let lines: Vec<&str> = content.lines().collect();
+    let mut in_test = vec![false; lines.len() + 1];
+    let mut i = 0;
+    while i < lines.len() {
+        let t = lines[i].trim_start();
+        let is_test_cfg = t.starts_with("#[cfg(")
+            && t.contains("test")
+            && !t.contains("not(test)");
+        if !is_test_cfg {
+            i += 1;
+            continue;
+        }
+        // find the opening brace of the annotated item, then its close
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            in_test[j + 1] = true;
+            for b in lines[j].bytes() {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    in_test
+}
+
+/// Rule 1: every word-boundary `unsafe` in non-test, non-comment code
+/// has a `// SAFETY:` comment nearby (same line or within
+/// [`SAFETY_LOOKBACK`] lines above).
+pub fn check_safety_comments(path: &str, content: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = content.lines().collect();
+    let in_test = test_region_lines(content);
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let n = idx + 1;
+        if in_test[n] {
+            continue;
+        }
+        let trimmed = line.trim_start();
+        if trimmed.starts_with("//") {
+            continue; // comment or doc line mentioning the word
+        }
+        // ignore occurrences inside a trailing line comment, and
+        // `unsafe fn` signatures: declaring one performs no unsafe
+        // operation — `#![deny(unsafe_op_in_unsafe_fn)]` forces the
+        // body's operations into blocks this rule does cover
+        let code = line.split("//").next().unwrap_or(line).replace(UNSAFE_FN, "");
+        if word_positions(&code, UNSAFE_KW).is_empty() {
+            continue;
+        }
+        let covered = (idx.saturating_sub(SAFETY_LOOKBACK)..=idx)
+            .any(|k| lines[k].contains(SAFETY_TAG));
+        if !covered {
+            out.push(Violation {
+                path: path.to_string(),
+                line: n,
+                rule: "safety-comment",
+                message: format!("`{UNSAFE_KW}` without a nearby `{SAFETY_TAG}` comment"),
+            });
+        }
+    }
+    out
+}
+
+/// Forbidden call chains for rule 2, matched on whitespace-condensed
+/// text so multi-line method chains cannot hide one.
+const LOCK_UNWRAP_PATTERNS: &[&str] = &[
+    ".lock().unwrap()",
+    ".lock().expect(",
+    ".read().unwrap()",
+    ".read().expect(",
+    ".write().unwrap()",
+    ".write().expect(",
+    ".flush().unwrap()",
+    ".flush().expect(",
+];
+
+/// Rule 2: no `.unwrap()`/`.expect()` on lock guards or flushes in
+/// non-test serving-stack code. `path` decides applicability; the
+/// caller passes every file, the rule self-selects.
+pub fn check_lock_unwrap(path: &str, content: &str) -> Vec<Violation> {
+    let normalized = path.replace('\\', "/");
+    if !(normalized.contains("server/") || normalized.contains("distrib/")) {
+        return Vec::new();
+    }
+    let in_test = test_region_lines(content);
+    // condense: drop whitespace, remember each kept byte's line
+    let mut condensed = String::new();
+    let mut line_of = Vec::new();
+    for (idx, line) in content.lines().enumerate() {
+        if in_test[idx + 1] {
+            continue;
+        }
+        let code = line.split("//").next().unwrap_or(line);
+        for c in code.chars().filter(|c| !c.is_whitespace()) {
+            condensed.push(c);
+            line_of.push(idx + 1);
+        }
+    }
+    let mut out = Vec::new();
+    for pat in LOCK_UNWRAP_PATTERNS {
+        let mut from = 0;
+        while let Some(i) = condensed[from..].find(pat) {
+            let at = from + i;
+            out.push(Violation {
+                path: path.to_string(),
+                line: line_of[at],
+                rule: "lock-unwrap",
+                message: format!(
+                    "`{pat}` in serving-stack code: use util::lockorder (locks) or propagate with `?` (I/O)"
+                ),
+            });
+            from = at + pat.len();
+        }
+    }
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Rule 3: every failpoint site appears in README's
+/// "## Failure semantics" section.
+pub fn check_failpoints_documented(readme: &str, sites: &[&str]) -> Vec<Violation> {
+    let section = match readme.find("## Failure semantics") {
+        Some(start) => {
+            let rest = &readme[start..];
+            match rest[2..].find("\n## ") {
+                Some(end) => &rest[..end + 2],
+                None => rest,
+            }
+        }
+        None => {
+            return vec![Violation {
+                path: "README.md".to_string(),
+                line: 1,
+                rule: "failpoint-docs",
+                message: "README has no `## Failure semantics` section".to_string(),
+            }]
+        }
+    };
+    sites
+        .iter()
+        .filter(|site| !section.contains(*site))
+        .map(|site| Violation {
+            path: "README.md".to_string(),
+            line: 1,
+            rule: "failpoint-docs",
+            message: format!(
+                "failpoint site `{site}` (obs::fail::SITES) missing from the Failure semantics section"
+            ),
+        })
+        .collect()
+}
+
+/// Extract every `"cvlr_…` string-literal prefix in non-test code:
+/// the `cvlr_` start plus its maximal `[a-z0-9_]` run (a following
+/// `{` or `"` ends the name — format strings contribute their static
+/// prefix).
+fn cvlr_literals(content: &str) -> Vec<(usize, String)> {
+    let in_test = test_region_lines(content);
+    let mut out = Vec::new();
+    for (idx, line) in content.lines().enumerate() {
+        if in_test[idx + 1] {
+            continue;
+        }
+        let mut from = 0;
+        while let Some(i) = line[from..].find("\"cvlr_") {
+            let at = from + i + 1; // past the quote
+            let name: String = line[at..]
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+                .collect();
+            out.push((idx + 1, name));
+            from = at + name.len();
+        }
+    }
+    out
+}
+
+/// Rule 4: every `cvlr_*` literal matches `DECLARED_METRICS` (exactly,
+/// or by a declared `…_` prefix family).
+pub fn check_metrics_declared(path: &str, content: &str, declared: &[&str]) -> Vec<Violation> {
+    cvlr_literals(content)
+        .into_iter()
+        .filter(|(_, name)| {
+            !declared
+                .iter()
+                .any(|d| name == d || (d.ends_with('_') && name.starts_with(d)))
+        })
+        .map(|(line, name)| Violation {
+            path: path.to_string(),
+            line,
+            rule: "metric-declared",
+            message: format!(
+                "metric literal `{name}` is not in obs::metrics::DECLARED_METRICS"
+            ),
+        })
+        .collect()
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for
+/// deterministic output.
+fn rust_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in
+            fs::read_dir(&d).with_context(|| format!("reading {}", d.display()))?
+        {
+            let p = entry?.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run every rule over the tree rooted at the crate's own sources
+/// (located from `CARGO_MANIFEST_DIR`, so `cargo run -- lint` works
+/// from any cwd). Returns all violations, sorted.
+pub fn run() -> Result<Vec<Violation>> {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let src = manifest.join("src");
+    let readme = manifest
+        .parent()
+        .map(|repo| repo.join("README.md"))
+        .filter(|p| p.is_file())
+        .context("README.md not found next to the rust/ crate")?;
+
+    let mut out = Vec::new();
+    for file in rust_files(&src)? {
+        let rel = file
+            .strip_prefix(manifest)
+            .unwrap_or(&file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let content =
+            fs::read_to_string(&file).with_context(|| format!("reading {}", file.display()))?;
+        out.extend(check_safety_comments(&rel, &content));
+        out.extend(check_lock_unwrap(&rel, &content));
+        if rel.starts_with("src/obs/") || rel == "src/server/mod.rs" {
+            out.extend(check_metrics_declared(&rel, &content, DECLARED_METRICS));
+        }
+    }
+    let readme_text = fs::read_to_string(&readme)
+        .with_context(|| format!("reading {}", readme.display()))?;
+    out.extend(check_failpoints_documented(&readme_text, fail::SITES));
+    out.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(out)
+}
+
+/// CLI entry: print violations and error out if any (`cvlr lint`).
+pub fn run_cli() -> Result<()> {
+    let violations = run()?;
+    if violations.is_empty() {
+        println!("cvlr lint: clean");
+        return Ok(());
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    bail!("cvlr lint: {} violation(s)", violations.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- rule 1: SAFETY comments ----------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = "pub fn f(p: *mut u8) {\n    unsafe { p.write(0) };\n}\n";
+        let v = check_safety_comments("src/x.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "safety-comment");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let src = "pub fn f(p: *mut u8) {\n    // SAFETY: p is valid per the caller contract\n    unsafe { p.write(0) };\n}\n";
+        assert!(check_safety_comments("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_rule_skips_comments_tests_and_identifiers() {
+        // the word in comments, in test code, and as part of an
+        // identifier (`unsafe_op_in_unsafe_fn`) must not trip the rule
+        let src = "\
+// unsafe is discussed here\n\
+#![deny(unsafe_op_in_unsafe_fn)]\n\
+fn ok() {} // unsafe in a trailing comment\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn t() {\n\
+        let _ = unsafe { std::mem::transmute::<u32, i32>(0) };\n\
+    }\n\
+}\n";
+        assert!(check_safety_comments("src/x.rs", src).is_empty());
+    }
+
+    // ---- rule 2: lock/I-O unwraps ---------------------------------
+
+    #[test]
+    fn lock_unwrap_in_serving_code_is_flagged() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+        let v = check_lock_unwrap("src/server/thing.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "lock-unwrap");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn multiline_lock_unwrap_is_still_caught() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m\n        .lock()\n        .unwrap()\n}\n";
+        let v = check_lock_unwrap("src/distrib/thing.rs", src);
+        assert_eq!(v.len(), 1, "whitespace between chain links must not hide the pattern");
+        assert_eq!(v[0].line, 2, "reported at the start of the chain");
+    }
+
+    #[test]
+    fn lock_unwrap_outside_serving_scope_or_in_tests_passes() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 {\n    *m.lock().unwrap()\n}\n";
+        assert!(check_lock_unwrap("src/score/thing.rs", src).is_empty(), "scope is server/+distrib/");
+        let test_only = "#[cfg(test)]\nmod tests {\n    fn f(m: &std::sync::Mutex<u32>) -> u32 {\n        *m.lock().unwrap()\n    }\n}\n";
+        assert!(check_lock_unwrap("src/server/thing.rs", test_only).is_empty());
+    }
+
+    #[test]
+    fn expect_on_locks_is_also_flagged() {
+        let src = "fn f(m: &std::sync::RwLock<u32>) -> u32 {\n    *m.read().expect(\"poisoned\")\n}\n";
+        assert_eq!(check_lock_unwrap("src/server/thing.rs", src).len(), 1);
+    }
+
+    // ---- rule 3: failpoint docs -----------------------------------
+
+    #[test]
+    fn undocumented_failpoint_site_is_flagged() {
+        let readme = "# x\n\n## Failure semantics\n\nSites: `a.b`.\n\n## Next\n";
+        let v = check_failpoints_documented(readme, &["a.b", "c.d"]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("c.d"));
+        assert!(check_failpoints_documented(readme, &["a.b"]).is_empty());
+    }
+
+    #[test]
+    fn site_mentioned_outside_the_section_does_not_count() {
+        let readme = "# x\n`c.d` is mentioned here.\n\n## Failure semantics\n\nSites: `a.b`.\n";
+        let v = check_failpoints_documented(readme, &["c.d"]);
+        assert_eq!(v.len(), 1, "the site must be documented in the section itself");
+    }
+
+    // ---- rule 4: declared metrics ---------------------------------
+
+    #[test]
+    fn undeclared_metric_literal_is_flagged() {
+        let src = "fn f() {\n    super::counter(\"cvlr_surprise_total\", \"?\");\n}\n";
+        let v = check_metrics_declared("src/obs/x.rs", src, &["cvlr_requests_total"]);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("cvlr_surprise_total"));
+    }
+
+    #[test]
+    fn declared_exact_and_prefix_families_pass() {
+        let src = "fn f() {\n    g(\"cvlr_requests_total\");\n    g(&format!(\"cvlr_jobs_{}\", s));\n}\n";
+        let declared = &["cvlr_requests_total", "cvlr_jobs_"];
+        assert!(check_metrics_declared("src/obs/x.rs", src, declared).is_empty());
+    }
+
+    #[test]
+    fn prefix_families_require_the_trailing_underscore() {
+        // `cvlr_requests_total` must not authorize `cvlr_requests_totals`
+        let src = "fn f() { g(\"cvlr_requests_totals\"); }\n";
+        let v = check_metrics_declared("src/obs/x.rs", src, &["cvlr_requests_total"]);
+        assert_eq!(v.len(), 1);
+    }
+
+    // ---- the real tree --------------------------------------------
+
+    #[test]
+    fn repo_tree_is_lint_clean() {
+        let violations = run().expect("lint walks the tree");
+        assert!(
+            violations.is_empty(),
+            "lint violations in the tree:\n{}",
+            violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+        );
+    }
+}

@@ -1,5 +1,7 @@
-//! Conditional-independence testing for the constraint-based baselines.
+//! Conditional-independence testing for the constraint-based baselines,
+//! plus the repo-invariant lint pass (`cvlr lint`, see [`lint`]).
 
 pub mod kci;
+pub mod lint;
 
 pub use kci::{CiTest, Kci};

@@ -25,7 +25,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -34,6 +34,7 @@ use crate::data::Dataset;
 use crate::obs::{fail, metrics, trace};
 use crate::score::{FollowerStat, ScoreBackend, ScoreRequest, ShardCounters};
 use crate::server::json::Json;
+use crate::util::lockorder::Mutex;
 use crate::util::Budget;
 
 use super::pool::{Follower, FollowerPool, PoolConfig};
@@ -66,7 +67,7 @@ struct ShardInner {
 
 impl ShardInner {
     fn budget(&self) -> Budget {
-        *self.budget.lock().unwrap()
+        *self.budget.lock()
     }
 }
 
@@ -105,7 +106,7 @@ impl ShardScoreBackend {
                 pool,
                 spec,
                 push,
-                budget: Mutex::new(Budget::none()),
+                budget: Mutex::new("distrib.budget", Budget::none()),
             }),
         }
     }
@@ -203,7 +204,7 @@ impl ScoreBackend for ShardScoreBackend {
     }
 
     fn set_budget(&self, budget: Budget) {
-        *self.inner.budget.lock().unwrap() = budget;
+        *self.inner.budget.lock() = budget;
         self.inner.local.set_budget(budget);
     }
 }
@@ -290,7 +291,7 @@ fn spawn_lane(
                 // budget can't cover that, stop burning it and let the
                 // controller degrade to local scoring
                 let expected =
-                    Duration::from_secs_f64(f.health.lock().unwrap().ewma_ms() / 1e3);
+                    Duration::from_secs_f64(f.health.lock().ewma_ms() / 1e3);
                 if !inner.budget().covers(pause + expected) {
                     break;
                 }
@@ -327,7 +328,7 @@ fn score_on(inner: &ShardInner, f: &Follower, reqs: &[ScoreRequest]) -> Result<V
     metrics::shard_dispatches_total().inc();
     let _span = trace::span("shard-dispatch", "distrib").arg("follower", f.addr());
     let budget = inner.budget();
-    let pinned = *f.version.lock().unwrap();
+    let pinned = *f.version.lock();
     let version = match pinned {
         Some(v) => v,
         None => register(inner, f)?,
@@ -414,7 +415,7 @@ fn register(inner: &ShardInner, f: &Follower) -> Result<u64> {
         .get("version")
         .and_then(Json::as_u64)
         .with_context(|| format!("follower {} returned no dataset version", f.addr()))?;
-    *f.version.lock().unwrap() = Some(v);
+    *f.version.lock() = Some(v);
     Ok(v)
 }
 

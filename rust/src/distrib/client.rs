@@ -22,7 +22,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::Mutex;
+use crate::util::lockorder::Mutex;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -53,7 +53,7 @@ impl ShardClient {
             addr: addr.into(),
             timeout,
             body_cap: DEFAULT_BODY_CAP,
-            conn: Mutex::new(None),
+            conn: Mutex::new("distrib.client.conn", None),
         }
     }
 
@@ -117,7 +117,7 @@ impl ShardClient {
         // every socket operation is bounded: the nominal per-request
         // timeout, clamped by whatever budget remains
         let timeout = budget.clamp(self.timeout);
-        let mut guard = self.conn.lock().unwrap();
+        let mut guard = self.conn.lock();
         let reused = guard.is_some();
         let mut stream = match guard.take() {
             Some(s) => s,

@@ -18,10 +18,11 @@
 //! no dependency on wall-clock entropy.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::score::{FollowerStat, ShardCounters};
+use crate::util::lockorder::Mutex;
 use crate::util::{Backoff, Pcg64};
 
 use super::client::ShardClient;
@@ -86,14 +87,20 @@ pub(crate) struct Health {
     consecutive_failures: u32,
     /// When the trip wire fired; `None` while healthy.
     tripped_at: Option<Instant>,
-    /// A half-open probe is in flight; no further traffic until it
-    /// resolves.
-    probing: bool,
+    /// When the current half-open probe was granted; no further
+    /// traffic until it resolves — or until `reprobe_after` passes
+    /// without a resolution, at which point a fresh probe is granted.
+    /// (A granted probe only resolves if the dispatch layer actually
+    /// routes a request to this follower; under light or hedged
+    /// traffic it may never do so, and a plain `bool` here left the
+    /// follower out of rotation *forever*. Time-stamping the grant
+    /// makes the probe self-healing.)
+    probing_since: Option<Instant>,
 }
 
 impl Health {
     fn new() -> Health {
-        Health { ewma_ms: 0.0, consecutive_failures: 0, tripped_at: None, probing: false }
+        Health { ewma_ms: 0.0, consecutive_failures: 0, tripped_at: None, probing_since: None }
     }
 
     pub(crate) fn on_success(&mut self, ms: f64) {
@@ -101,15 +108,15 @@ impl Health {
             if self.ewma_ms == 0.0 { ms } else { (1.0 - EWMA_ALPHA) * self.ewma_ms + EWMA_ALPHA * ms };
         self.consecutive_failures = 0;
         self.tripped_at = None;
-        self.probing = false;
+        self.probing_since = None;
     }
 
     /// Returns true when this failure tripped the wire.
     pub(crate) fn on_failure(&mut self, trip_failures: u32, now: Instant) -> bool {
         self.consecutive_failures = self.consecutive_failures.saturating_add(1);
-        if self.probing {
+        if self.probing_since.is_some() {
             // failed half-open probe: re-arm the full sit-out
-            self.probing = false;
+            self.probing_since = None;
             self.tripped_at = Some(now);
             return false;
         }
@@ -120,16 +127,25 @@ impl Health {
         false
     }
 
-    /// May this follower take traffic at `now`? Grants exactly one
-    /// half-open probe per `reprobe_after` while tripped.
+    /// May this follower take traffic at `now`? Grants one half-open
+    /// probe per `reprobe_after` while tripped; an unresolved grant
+    /// (no success/failure recorded) expires after another
+    /// `reprobe_after` and is re-issued rather than starving the
+    /// follower out of rotation.
     pub(crate) fn available(&mut self, reprobe_after: Duration, now: Instant) -> bool {
-        match self.tripped_at {
-            None => true,
-            Some(t) if !self.probing && now.duration_since(t) >= reprobe_after => {
-                self.probing = true;
+        let Some(tripped) = self.tripped_at else {
+            return true;
+        };
+        match self.probing_since {
+            None if now.duration_since(tripped) >= reprobe_after => {
+                self.probing_since = Some(now);
                 true
             }
-            Some(_) => false,
+            Some(granted) if now.duration_since(granted) >= reprobe_after => {
+                self.probing_since = Some(now);
+                true
+            }
+            _ => false,
         }
     }
 
@@ -165,8 +181,8 @@ impl Follower {
         client.set_body_cap(body_cap);
         Follower {
             client,
-            health: Mutex::new(Health::new()),
-            version: Mutex::new(None),
+            health: Mutex::new("pool.health", Health::new()),
+            version: Mutex::new("pool.version", None),
             dispatches: AtomicU64::new(0),
             successes: AtomicU64::new(0),
             failures: AtomicU64::new(0),
@@ -181,7 +197,7 @@ impl Follower {
     }
 
     fn stat(&self) -> FollowerStat {
-        let h = self.health.lock().unwrap();
+        let h = self.health.lock();
         FollowerStat {
             addr: self.addr().to_string(),
             healthy: h.healthy(),
@@ -212,7 +228,7 @@ impl FollowerPool {
             .iter()
             .map(|a| Arc::new(Follower::new(a, cfg.timeout, cfg.body_cap)))
             .collect();
-        let rng = Mutex::new(Pcg64::new(cfg.seed));
+        let rng = Mutex::new("pool.rng", Pcg64::new(cfg.seed));
         FollowerPool { followers, cfg, rng, unattributed_degraded: AtomicU64::new(0) }
     }
 
@@ -230,7 +246,7 @@ impl FollowerPool {
         let now = Instant::now();
         self.followers
             .iter()
-            .filter(|f| f.health.lock().unwrap().available(self.cfg.reprobe_after, now))
+            .filter(|f| f.health.lock().available(self.cfg.reprobe_after, now))
             .cloned()
             .collect()
     }
@@ -241,14 +257,14 @@ impl FollowerPool {
     pub fn pick_other(&self, not: &str) -> Option<Arc<Follower>> {
         self.followers
             .iter()
-            .find(|f| f.addr() != not && f.health.lock().unwrap().healthy())
+            .find(|f| f.addr() != not && f.health.lock().healthy())
             .cloned()
     }
 
     /// Record a successful request and its latency.
     pub fn success(&self, f: &Follower, elapsed: Duration) {
         f.successes.fetch_add(1, Ordering::Relaxed);
-        f.health.lock().unwrap().on_success(elapsed.as_secs_f64() * 1e3);
+        f.health.lock().on_success(elapsed.as_secs_f64() * 1e3);
     }
 
     /// Record a failed request; trips the wire after
@@ -256,7 +272,7 @@ impl FollowerPool {
     pub fn failure(&self, f: &Follower) {
         f.failures.fetch_add(1, Ordering::Relaxed);
         crate::obs::metrics::shard_failures_total().inc();
-        f.health.lock().unwrap().on_failure(self.cfg.trip_failures, Instant::now());
+        f.health.lock().on_failure(self.cfg.trip_failures, Instant::now());
     }
 
     /// Jittered exponential backoff before retry `attempt` (1-based),
@@ -265,12 +281,12 @@ impl FollowerPool {
     /// from the pool's seeded generator.
     pub fn backoff(&self, attempt: u32) -> Duration {
         Backoff::new(self.cfg.backoff, self.cfg.backoff_cap)
-            .delay(attempt, &mut self.rng.lock().unwrap())
+            .delay(attempt, &mut self.rng.lock())
     }
 
     /// How long to wait on `f` before hedging a sub-batch elsewhere.
     pub fn hedge_delay(&self, f: &Follower) -> Duration {
-        let ewma = f.health.lock().unwrap().ewma_ms();
+        let ewma = f.health.lock().ewma_ms();
         let by_latency = Duration::from_secs_f64(self.cfg.hedge_mult * ewma / 1e3);
         by_latency.max(self.cfg.hedge_floor)
     }
@@ -342,6 +358,32 @@ mod tests {
         assert!(h.healthy());
         assert!(h.available(reprobe, t(base, 271)));
         assert!(h.available(reprobe, t(base, 272)), "healthy follower has no probe budget");
+    }
+
+    #[test]
+    fn unresolved_probe_regrants_instead_of_starving() {
+        // Regression: `available` used to set a plain `probing` flag
+        // when granting the half-open probe. If dispatch never routed
+        // a request to the follower (light traffic, hedges landing
+        // elsewhere), no on_success/on_failure ever cleared the flag
+        // and the follower stayed out of rotation permanently. The
+        // grant is now time-stamped and expires after `reprobe_after`.
+        let base = Instant::now();
+        let reprobe = Duration::from_millis(100);
+        let mut h = Health::new();
+        for i in 0..3 {
+            h.on_failure(3, t(base, i));
+        }
+        assert!(h.available(reprobe, t(base, 150)), "probe granted");
+        assert!(!h.available(reprobe, t(base, 200)), "grant still pending");
+        assert!(
+            h.available(reprobe, t(base, 260)),
+            "unresolved grant expires after reprobe_after and is re-issued"
+        );
+        assert!(!h.available(reprobe, t(base, 261)), "…as a single probe again");
+        // and the re-issued probe resolves normally
+        h.on_success(3.0);
+        assert!(h.healthy());
     }
 
     #[test]

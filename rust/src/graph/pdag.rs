@@ -58,8 +58,18 @@ impl Pdag {
     }
 
     /// Turn whatever edge exists between i,j into i → j.
+    ///
+    /// Debug invariant: the edge must exist and must not already be
+    /// compelled the other way — orienting over j → i would silently
+    /// flip a compelled edge and corrupt the equivalence class. Callers
+    /// that may race a prior orientation (conflicting v-structures in
+    /// PC/MMMB) guard with [`Pdag::undirected`] first.
     pub fn orient(&mut self, i: usize, j: usize) {
-        debug_assert!(self.adjacent(i, j));
+        debug_assert!(self.adjacent(i, j), "orient({i},{j}): no edge to orient");
+        debug_assert!(
+            !self.directed(j, i),
+            "orient({i},{j}) would flip the compelled edge {j}\u{2192}{i}"
+        );
         self.add_directed(i, j);
     }
 
@@ -155,78 +165,132 @@ impl Pdag {
         out
     }
 
-    /// Apply Meek rules R1-R4 to closure (orients undirected edges that
-    /// are compelled by the current orientations).
-    pub fn meek_closure(&mut self) {
-        loop {
-            let mut changed = false;
-            for a in 0..self.d {
-                for b in 0..self.d {
-                    if a == b || !self.undirected(a, b) {
-                        continue;
-                    }
-                    // R1: ∃c: c→a, c,b nonadjacent ⇒ a→b
-                    let r1 = (0..self.d)
-                        .any(|c| c != b && self.directed(c, a) && !self.adjacent(c, b));
-                    // R2: ∃c: a→c→b ⇒ a→b
-                    let r2 = (0..self.d).any(|c| self.directed(a, c) && self.directed(c, b));
-                    // R3: ∃c,d: a−c, a−d, c→b, d→b, c,d nonadjacent ⇒ a→b
-                    let r3 = {
-                        let mut hit = false;
-                        for c in 0..self.d {
-                            if !(self.undirected(a, c) && self.directed(c, b)) {
-                                continue;
-                            }
-                            for dd in 0..self.d {
-                                if dd != c
-                                    && self.undirected(a, dd)
-                                    && self.directed(dd, b)
-                                    && !self.adjacent(c, dd)
-                                {
-                                    hit = true;
-                                    break;
-                                }
-                            }
-                            if hit {
-                                break;
-                            }
-                        }
-                        hit
-                    };
-                    // R4: ∃c,d: a−d (or a adjacent d), d→c, c→b, a−c,
-                    //     b,d nonadjacent ⇒ a→b
-                    let r4 = {
-                        let mut hit = false;
-                        for c in 0..self.d {
-                            if !(self.undirected(a, c) || self.adjacent(a, c)) || !self.directed(c, b) {
-                                continue;
-                            }
-                            for dd in 0..self.d {
-                                if dd != c
-                                    && self.adjacent(a, dd)
-                                    && self.directed(dd, c)
-                                    && !self.adjacent(dd, b)
-                                {
-                                    hit = true;
-                                    break;
-                                }
-                            }
-                            if hit {
-                                break;
-                            }
-                        }
-                        hit
-                    };
-                    if r1 || r2 || r3 || r4 {
-                        self.orient(a, b);
-                        changed = true;
+    /// Is the directed sub-graph acyclic? Kahn's algorithm over the
+    /// directed edges only; undirected edges are ignored. Every PDAG
+    /// the search layers build must keep this true — a directed cycle
+    /// means no consistent DAG extension exists.
+    pub fn directed_part_acyclic(&self) -> bool {
+        let mut indeg = vec![0usize; self.d];
+        for i in 0..self.d {
+            for j in 0..self.d {
+                if self.directed(i, j) {
+                    indeg[j] += 1;
+                }
+            }
+        }
+        let mut stack: Vec<usize> = (0..self.d).filter(|&v| indeg[v] == 0).collect();
+        let mut seen = 0;
+        while let Some(v) = stack.pop() {
+            seen += 1;
+            for w in 0..self.d {
+                if self.directed(v, w) {
+                    indeg[w] -= 1;
+                    if indeg[w] == 0 {
+                        stack.push(w);
                     }
                 }
             }
-            if !changed {
-                break;
+        }
+        seen == self.d
+    }
+
+    /// Apply Meek rules R1-R4 to closure (orients undirected edges that
+    /// are compelled by the current orientations).
+    pub fn meek_closure(&mut self) {
+        while self.meek_sweep() {}
+        self.debug_check_closure();
+    }
+
+    /// Debug hooks run after every [`Pdag::meek_closure`]: the closure
+    /// must be idempotent (one extra sweep orients nothing — guards
+    /// early-exit refactors of the fixpoint loop) and must not have
+    /// introduced a directed cycle. Compiled out of release builds.
+    #[cfg(debug_assertions)]
+    fn debug_check_closure(&self) {
+        debug_assert!(
+            self.directed_part_acyclic(),
+            "meek_closure left a directed cycle in the PDAG"
+        );
+        let mut again = self.clone();
+        debug_assert!(
+            !again.meek_sweep(),
+            "meek_closure is not idempotent: an extra sweep still orients edges"
+        );
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn debug_check_closure(&self) {}
+
+    /// One full pass of Meek rules R1-R4; returns whether any edge was
+    /// oriented (the fixpoint loop in [`Pdag::meek_closure`] repeats
+    /// until a pass comes back clean).
+    fn meek_sweep(&mut self) -> bool {
+        let mut changed = false;
+        for a in 0..self.d {
+            for b in 0..self.d {
+                if a == b || !self.undirected(a, b) {
+                    continue;
+                }
+                // R1: ∃c: c→a, c,b nonadjacent ⇒ a→b
+                let r1 = (0..self.d)
+                    .any(|c| c != b && self.directed(c, a) && !self.adjacent(c, b));
+                // R2: ∃c: a→c→b ⇒ a→b
+                let r2 = (0..self.d).any(|c| self.directed(a, c) && self.directed(c, b));
+                // R3: ∃c,d: a−c, a−d, c→b, d→b, c,d nonadjacent ⇒ a→b
+                let r3 = {
+                    let mut hit = false;
+                    for c in 0..self.d {
+                        if !(self.undirected(a, c) && self.directed(c, b)) {
+                            continue;
+                        }
+                        for dd in 0..self.d {
+                            if dd != c
+                                && self.undirected(a, dd)
+                                && self.directed(dd, b)
+                                && !self.adjacent(c, dd)
+                            {
+                                hit = true;
+                                break;
+                            }
+                        }
+                        if hit {
+                            break;
+                        }
+                    }
+                    hit
+                };
+                // R4: ∃c,d: a−d (or a adjacent d), d→c, c→b, a−c,
+                //     b,d nonadjacent ⇒ a→b
+                let r4 = {
+                    let mut hit = false;
+                    for c in 0..self.d {
+                        if !(self.undirected(a, c) || self.adjacent(a, c)) || !self.directed(c, b) {
+                            continue;
+                        }
+                        for dd in 0..self.d {
+                            if dd != c
+                                && self.adjacent(a, dd)
+                                && self.directed(dd, c)
+                                && !self.adjacent(dd, b)
+                            {
+                                hit = true;
+                                break;
+                            }
+                        }
+                        if hit {
+                            break;
+                        }
+                    }
+                    hit
+                };
+                if r1 || r2 || r3 || r4 {
+                    self.orient(a, b);
+                    changed = true;
+                }
             }
         }
+        changed
     }
 
     /// Dor & Tarsi (1992): a DAG that is a consistent extension of this
@@ -364,6 +428,45 @@ pub fn dag_to_cpdag(g: &Dag) -> Pdag {
     out
 }
 
+// Bounded proof for the CI `verify-core` job (continue-on-error): over
+// every 3-node PDAG the solver can construct, the Meek closure
+// terminates within the unwind bound, never flips a directed edge, and
+// keeps the directed part acyclic when it started acyclic.
+#[cfg(kani)]
+mod verification {
+    use super::*;
+
+    #[kani::proof]
+    #[kani::unwind(16)]
+    fn meek_closure_small_pdag_preserves_orientations() {
+        let mut p = Pdag::new(3);
+        for i in 0..3usize {
+            for j in 0..3usize {
+                if i < j && kani::any() {
+                    if kani::any() {
+                        p.add_undirected(i, j);
+                    } else if kani::any() {
+                        p.add_directed(i, j);
+                    } else {
+                        p.add_directed(j, i);
+                    }
+                }
+            }
+        }
+        kani::assume(p.directed_part_acyclic());
+        let before = p.clone();
+        p.meek_closure();
+        for i in 0..3 {
+            for j in 0..3 {
+                if before.directed(i, j) {
+                    assert!(p.directed(i, j), "meek_closure flipped a directed edge");
+                }
+            }
+        }
+        assert!(p.directed_part_acyclic(), "meek_closure introduced a directed cycle");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -445,6 +548,21 @@ mod tests {
         assert!(p.all_semi_directed_paths_blocked(0, 3, &[2]));
         // reversed: no semi-directed path 3⇒0 (edges point wrong way)
         assert!(p.all_semi_directed_paths_blocked(3, 0, &[]));
+    }
+
+    #[test]
+    fn directed_part_acyclic_ignores_undirected_edges() {
+        let mut p = Pdag::new(3);
+        p.add_directed(0, 1);
+        p.add_directed(1, 2);
+        p.add_undirected(0, 2); // undirected edges never form a "cycle"
+        assert!(p.directed_part_acyclic());
+        let mut c = Pdag::new(3);
+        c.add_directed(0, 1);
+        c.add_directed(1, 2);
+        c.add_directed(2, 0);
+        assert!(!c.directed_part_acyclic());
+        assert!(Pdag::new(0).directed_part_acyclic(), "empty graph is vacuously acyclic");
     }
 
     #[test]

@@ -85,6 +85,11 @@
 //! Python never runs on the request path: `make artifacts` produces
 //! `artifacts/*.hlo.txt`, and the rust binary is self-contained after that.
 
+// Every `unsafe` operation must sit in its own `unsafe {}` block with a
+// `// SAFETY:` comment, even inside `unsafe fn` — enforced here and
+// cross-checked by `cvlr lint` (`ci::lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod util;
 pub mod obs;
 pub mod linalg;

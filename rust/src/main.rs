@@ -12,6 +12,7 @@
 //!   API over the batch-first score service; see `server`);
 //! * `selftest` — quick end-to-end check of all three layers
 //!   (used by `make smoke`);
+//! * `lint`     — repo-invariant static checks (`ci::lint`; CI gate);
 //! * `info`     — print the artifact registry and build information.
 //!
 //! Examples:
@@ -66,6 +67,7 @@ fn main() -> ExitCode {
         "score" => cmd_score(&args),
         "serve" => cmd_serve(&args),
         "selftest" => cmd_selftest(&args),
+        "lint" => cvlr::ci::lint::run_cli(),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -98,6 +100,9 @@ fn print_help() {
          \x20 score      evaluate one local score S(X | Z)\n\
          \x20 serve      run the HTTP/JSON discovery server\n\
          \x20 selftest   end-to-end three-layer smoke check\n\
+         \x20 lint       repo-invariant checks (SAFETY comments, no lock\n\
+         \x20            unwraps in the serving stack, failpoint docs,\n\
+         \x20            declared metrics); nonzero exit on violations\n\
          \x20 info       artifact registry + build info\n\n\
          COMMON OPTIONS:\n\
          \x20 --data synth|sachs|child|sachs-cont|FILE.csv  workload (default synth)\n\

@@ -148,7 +148,9 @@ mod imp {
     // callbacks never allocate (const-init TLS + static atomics).
     unsafe impl GlobalAlloc for TrackingAlloc {
         unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-            let p = System.alloc(layout);
+            // SAFETY: caller upholds GlobalAlloc's contract on `layout`;
+            // we forward it unchanged to `System`.
+            let p = unsafe { System.alloc(layout) };
             if !p.is_null() {
                 on_alloc(layout.size());
             }
@@ -156,7 +158,9 @@ mod imp {
         }
 
         unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-            let p = System.alloc_zeroed(layout);
+            // SAFETY: caller upholds GlobalAlloc's contract on `layout`;
+            // we forward it unchanged to `System`.
+            let p = unsafe { System.alloc_zeroed(layout) };
             if !p.is_null() {
                 on_alloc(layout.size());
             }
@@ -164,12 +168,16 @@ mod imp {
         }
 
         unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-            System.dealloc(ptr, layout);
+            // SAFETY: caller guarantees `ptr` came from this allocator
+            // with this `layout`; we only ever hand out `System` blocks.
+            unsafe { System.dealloc(ptr, layout) };
             on_dealloc(layout.size());
         }
 
         unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-            let p = System.realloc(ptr, layout, new_size);
+            // SAFETY: caller guarantees `ptr`/`layout` describe a live
+            // `System` block and `new_size` is nonzero per the contract.
+            let p = unsafe { System.realloc(ptr, layout, new_size) };
             if !p.is_null() {
                 on_dealloc(layout.size());
                 on_alloc(new_size);

@@ -36,7 +36,9 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
+
+use crate::util::lockorder::Mutex;
 
 /// A monotonically-increasing counter (name it `*_total`).
 pub struct Counter {
@@ -228,10 +230,10 @@ struct Registry {
 fn registry() -> &'static Registry {
     static REG: OnceLock<Registry> = OnceLock::new();
     REG.get_or_init(|| Registry {
-        counters: Mutex::new(BTreeMap::new()),
-        gauges: Mutex::new(BTreeMap::new()),
-        labeled_gauges: Mutex::new(BTreeMap::new()),
-        histograms: Mutex::new(BTreeMap::new()),
+        counters: Mutex::new("metrics.counters", BTreeMap::new()),
+        gauges: Mutex::new("metrics.gauges", BTreeMap::new()),
+        labeled_gauges: Mutex::new("metrics.labeled_gauges", BTreeMap::new()),
+        histograms: Mutex::new("metrics.histograms", BTreeMap::new()),
     })
 }
 
@@ -240,7 +242,6 @@ pub fn counter(name: &str, help: &'static str) -> Arc<Counter> {
     registry()
         .counters
         .lock()
-        .unwrap()
         .entry(name.to_string())
         .or_insert_with(|| Arc::new(Counter { help, value: AtomicU64::new(0) }))
         .clone()
@@ -251,7 +252,6 @@ pub fn gauge(name: &str, help: &'static str) -> Arc<Gauge> {
     registry()
         .gauges
         .lock()
-        .unwrap()
         .entry(name.to_string())
         .or_insert_with(|| Arc::new(Gauge { help, bits: AtomicU64::new(0.0f64.to_bits()) }))
         .clone()
@@ -277,7 +277,7 @@ fn render_labels(labels: &[(&str, &str)]) -> String {
 /// (`obs::mem::publish`, the fleet scrape), so a scrape always sees
 /// the latest value.
 pub fn set_labeled_gauge(name: &str, help: &'static str, labels: &[(&str, &str)], v: f64) {
-    let mut families = registry().labeled_gauges.lock().unwrap();
+    let mut families = registry().labeled_gauges.lock();
     let fam = families
         .entry(name.to_string())
         .or_insert_with(|| LabeledFamily { help, series: BTreeMap::new() });
@@ -296,7 +296,6 @@ pub fn histogram_with_edges(name: &str, help: &'static str, edges: Vec<f64>) -> 
     registry()
         .histograms
         .lock()
-        .unwrap()
         .entry(name.to_string())
         .or_insert_with(|| Arc::new(Histogram::new(help, edges)))
         .clone()
@@ -382,6 +381,55 @@ pub fn deadline_exceeded_total() -> Arc<Counter> {
     counter("cvlr_deadline_exceeded_total", "requests or jobs that ran out of deadline budget")
 }
 
+/// Every metric family the crate exposes, in one place. `cvlr lint`
+/// cross-checks this list against the `cvlr_*` string literals in
+/// `obs/` and `server/mod.rs`: a literal must equal an entry, or start
+/// with an entry that ends in `_` (a declared dynamic-suffix family,
+/// e.g. `cvlr_jobs_<state>`). Registering a metric without declaring
+/// it here fails CI — the list is the schema reviewers audit.
+pub const DECLARED_METRICS: &[&str] = &[
+    // stage latency histograms
+    "cvlr_score_batch_seconds",
+    "cvlr_ges_sweep_seconds",
+    "cvlr_fold_core_build_seconds",
+    "cvlr_factorize_seconds",
+    "cvlr_stream_append_seconds",
+    // service counters
+    "cvlr_requests_total",
+    "cvlr_cache_hits_total",
+    "cvlr_evaluations_total",
+    "cvlr_dedup_skips_total",
+    "cvlr_shard_dispatches_total",
+    "cvlr_shard_retries_total",
+    "cvlr_shard_hedges_total",
+    "cvlr_shard_degraded_total",
+    "cvlr_shard_failures_total",
+    "cvlr_stream_repivots_total",
+    "cvlr_shed_total",
+    "cvlr_deadline_exceeded_total",
+    // `/v1/stats` snapshot gauges folded in by `server::get_metrics`
+    "cvlr_services",
+    "cvlr_service_cache_entries",
+    "cvlr_service_cache_bytes",
+    "cvlr_service_core_cache_entries",
+    "cvlr_service_core_cache_bytes",
+    "cvlr_service_evictions",
+    "cvlr_service_invalidations",
+    "cvlr_service_warm_start_hits",
+    "cvlr_service_eval_seconds",
+    "cvlr_followers",
+    "cvlr_followers_healthy",
+    "cvlr_datasets",
+    "cvlr_jobs_", // one gauge per job lifecycle state
+    // fleet federation
+    "cvlr_fleet_scrape_stale",
+    // memory accounting (`obs::mem`)
+    "cvlr_mem_live_bytes",
+    "cvlr_mem_peak_bytes",
+    "cvlr_mem_process_live_bytes",
+    "cvlr_mem_process_peak_bytes",
+];
+
 /// Touch every well-known series so the exposition carries the full
 /// schema even before any traffic. Called by the `/v1/metrics` handler.
 pub fn register_defaults() {
@@ -413,21 +461,21 @@ pub fn register_defaults() {
 pub fn render() -> String {
     let reg = registry();
     let mut out = String::new();
-    for (name, c) in reg.counters.lock().unwrap().iter() {
+    for (name, c) in reg.counters.lock().iter() {
         out.push_str(&format!("# HELP {name} {}\n# TYPE {name} counter\n", c.help));
         out.push_str(&format!("{name} {}\n", c.get()));
     }
-    for (name, g) in reg.gauges.lock().unwrap().iter() {
+    for (name, g) in reg.gauges.lock().iter() {
         out.push_str(&format!("# HELP {name} {}\n# TYPE {name} gauge\n", g.help));
         out.push_str(&format!("{name} {}\n", g.get()));
     }
-    for (name, fam) in reg.labeled_gauges.lock().unwrap().iter() {
+    for (name, fam) in reg.labeled_gauges.lock().iter() {
         out.push_str(&format!("# HELP {name} {}\n# TYPE {name} gauge\n", fam.help));
         for (labels, v) in &fam.series {
             out.push_str(&format!("{name}{{{labels}}} {v}\n"));
         }
     }
-    for (name, h) in reg.histograms.lock().unwrap().iter() {
+    for (name, h) in reg.histograms.lock().iter() {
         out.push_str(&format!("# HELP {name} {}\n# TYPE {name} histogram\n", h.help));
         let counts = h.bucket_counts();
         let mut cum = 0u64;
@@ -458,6 +506,24 @@ fn push_exemplar(out: &mut String, h: &Histogram, i: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn every_default_series_is_declared() {
+        register_defaults();
+        for line in render().lines() {
+            let Some(name) = line.strip_prefix("# HELP ").and_then(|r| r.split(' ').next())
+            else {
+                continue;
+            };
+            if !name.starts_with("cvlr_") {
+                continue; // other tests register `test_*` series
+            }
+            let declared = DECLARED_METRICS.iter().any(|d| {
+                name == *d || (d.ends_with('_') && name.starts_with(d))
+            });
+            assert!(declared, "rendered series `{name}` missing from DECLARED_METRICS");
+        }
+    }
 
     #[test]
     fn bucket_boundaries_are_le_inclusive() {

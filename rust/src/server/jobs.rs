@@ -31,7 +31,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -46,6 +46,7 @@ use crate::graph::Pdag;
 use crate::obs::{fail, metrics};
 use crate::score::{ScoreBackend, ScoreRequest};
 use crate::search::ges::ges_from;
+use crate::util::lockorder::{Condvar, Mutex};
 use crate::util::{Budget, DeadlineExceeded, Overloaded, Stopwatch};
 
 use super::registry::DatasetRegistry;
@@ -283,15 +284,15 @@ impl JobManager {
     ) -> Arc<JobManager> {
         let mgr = Arc::new(JobManager {
             registry,
-            jobs: Mutex::new(HashMap::new()),
-            queue: Mutex::new(VecDeque::new()),
+            jobs: Mutex::new("jobs.map", HashMap::new()),
+            queue: Mutex::new("jobs.queue", VecDeque::new()),
             queue_cv: Condvar::new(),
             next_id: AtomicU64::new(0),
-            services: Mutex::new(HashMap::new()),
-            appending: Mutex::new(HashSet::new()),
+            services: Mutex::new("jobs.services", HashMap::new()),
+            appending: Mutex::new("jobs.appending", HashSet::new()),
             pool_clock: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
-            workers: Mutex::new(Vec::new()),
+            workers: Mutex::new("jobs.workers", Vec::new()),
             default_cache_capacity,
             limits,
         });
@@ -304,7 +305,7 @@ impl JobManager {
                 .expect("spawn job worker");
             handles.push(h);
         }
-        *mgr.workers.lock().unwrap() = handles;
+        *mgr.workers.lock() = handles;
         mgr
     }
 
@@ -318,7 +319,7 @@ impl JobManager {
         if self.shutdown.load(Ordering::SeqCst) {
             bail!("server is shutting down");
         }
-        let queued = self.queue.lock().unwrap().len();
+        let queued = self.queue.lock().len();
         if queued >= self.limits.max_queued {
             metrics::shed_total().inc();
             return Err(Overloaded::new(format!(
@@ -363,20 +364,20 @@ impl JobManager {
             id,
             spec,
             canon_method: canon,
-            state: Mutex::new(JobState::Queued),
+            state: Mutex::new("jobs.job.state", JobState::Queued),
             cancel: AtomicBool::new(false),
             budget,
             progress: JobProgress::default(),
-            stats_at_start: Mutex::new(None),
-            service: Mutex::new(None),
-            result: Mutex::new(None),
-            error: Mutex::new(None),
+            stats_at_start: Mutex::new("jobs.job.stats", None),
+            service: Mutex::new("jobs.job.service", None),
+            result: Mutex::new("jobs.job.result", None),
+            error: Mutex::new("jobs.job.error", None),
         });
         {
             // hold the append marker lock across the job-map insert so
             // an append can never begin between this check and the job
             // becoming visible to `has_active_jobs`
-            let appending = self.appending.lock().unwrap();
+            let appending = self.appending.lock();
             if appending.contains(&job.spec.dataset) {
                 return Err(super::TransientConflict(format!(
                     "dataset `{}` has an append in progress; retry shortly",
@@ -384,9 +385,9 @@ impl JobManager {
                 ))
                 .into());
             }
-            self.jobs.lock().unwrap().insert(id, job);
+            self.jobs.lock().insert(id, job);
         }
-        self.queue.lock().unwrap().push_back(id);
+        self.queue.lock().push_back(id);
         self.queue_cv.notify_one();
         Ok(id)
     }
@@ -394,9 +395,9 @@ impl JobManager {
     /// Request cancellation; returns the state right after the request
     /// (a queued job cancels immediately, a running one cooperatively).
     pub fn cancel(&self, id: u64) -> Option<JobState> {
-        let job = self.jobs.lock().unwrap().get(&id).cloned()?;
+        let job = self.jobs.lock().get(&id).cloned()?;
         job.cancel.store(true, Ordering::SeqCst);
-        let mut st = job.state.lock().unwrap();
+        let mut st = job.state.lock();
         if *st == JobState::Queued {
             *st = JobState::Cancelled;
         }
@@ -405,12 +406,12 @@ impl JobManager {
 
     /// Current view of a job (None for unknown ids).
     pub fn snapshot(&self, id: u64) -> Option<JobSnapshot> {
-        let job = self.jobs.lock().unwrap().get(&id).cloned()?;
-        let state = *job.state.lock().unwrap();
-        let result = job.result.lock().unwrap().clone();
-        let error = job.error.lock().unwrap().clone();
-        let start = job.stats_at_start.lock().unwrap().clone();
-        let now = match (&result, &*job.service.lock().unwrap()) {
+        let job = self.jobs.lock().get(&id).cloned()?;
+        let state = *job.state.lock();
+        let result = job.result.lock().clone();
+        let error = job.error.lock().clone();
+        let start = job.stats_at_start.lock().clone();
+        let now = match (&result, &*job.service.lock()) {
             (Some(r), _) if r.stats.is_some() => r.stats.clone(),
             (_, Some(svc)) => Some(svc.stats()),
             _ => None,
@@ -440,14 +441,14 @@ impl JobManager {
 
     /// All job ids, ascending (submission order).
     pub fn job_ids(&self) -> Vec<u64> {
-        let mut ids: Vec<u64> = self.jobs.lock().unwrap().keys().copied().collect();
+        let mut ids: Vec<u64> = self.jobs.lock().keys().copied().collect();
         ids.sort_unstable();
         ids
     }
 
     /// Job counts per state, in lifecycle order.
     pub fn state_counts(&self) -> Vec<(JobState, u64)> {
-        let jobs = self.jobs.lock().unwrap();
+        let jobs = self.jobs.lock();
         let states = [
             JobState::Queued,
             JobState::Running,
@@ -457,7 +458,7 @@ impl JobManager {
         ];
         let mut counts: HashMap<JobState, u64> = HashMap::new();
         for job in jobs.values() {
-            *counts.entry(*job.state.lock().unwrap()).or_insert(0) += 1;
+            *counts.entry(*job.state.lock()).or_insert(0) += 1;
         }
         states.iter().map(|s| (*s, counts.get(s).copied().unwrap_or(0))).collect()
     }
@@ -472,7 +473,7 @@ impl JobManager {
     /// job submission and follower scoring) behind that swap.
     pub fn service_stats(&self) -> Vec<(ServiceKey, ServiceStats)> {
         let entries: Vec<(ServiceKey, Arc<ScoreService>)> = {
-            let services = self.services.lock().unwrap();
+            let services = self.services.lock();
             services.iter().map(|(k, e)| (k.clone(), e.service.clone())).collect()
         };
         let mut out: Vec<(ServiceKey, ServiceStats)> =
@@ -484,7 +485,7 @@ impl JobManager {
     /// Drop every pooled service of `dataset` (called when the dataset
     /// is deleted from the registry). Running jobs keep their own Arc.
     pub fn drop_dataset_services(&self, dataset: &str) {
-        self.services.lock().unwrap().retain(|k, _| k.0 != dataset);
+        self.services.lock().retain(|k, _| k.0 != dataset);
     }
 
     /// Overload shedding: invalidate every pooled score memo and drop
@@ -495,7 +496,7 @@ impl JobManager {
     /// would block the very submissions shedding is trying to save.
     pub fn shed_services(&self) -> u64 {
         let entries: Vec<Arc<ScoreService>> = {
-            let mut services = self.services.lock().unwrap();
+            let mut services = self.services.lock();
             services.drain().map(|(_, e)| e.service).collect()
         };
         entries.iter().map(|svc| svc.invalidate_all()).sum()
@@ -508,9 +509,8 @@ impl JobManager {
     pub fn has_active_jobs(&self, dataset: &str) -> bool {
         self.jobs
             .lock()
-            .unwrap()
             .values()
-            .any(|j| j.spec.dataset == dataset && !j.state.lock().unwrap().is_terminal())
+            .any(|j| j.spec.dataset == dataset && !j.state.lock().is_terminal())
     }
 
     /// Atomically begin an append on `dataset`: fails while jobs on it
@@ -520,7 +520,7 @@ impl JobManager {
     /// the same lock `submit` holds across its job-map insert — closes
     /// the check-then-swap race in both directions.
     pub fn begin_append(&self, dataset: &str) -> Result<AppendGuard<'_>> {
-        let mut appending = self.appending.lock().unwrap();
+        let mut appending = self.appending.lock();
         if self.has_active_jobs(dataset) {
             bail!("dataset `{dataset}` has queued/running jobs; wait before appending");
         }
@@ -548,7 +548,7 @@ impl JobManager {
         // work (e.g. load PJRT artifacts) and must not run under the
         // pool lock
         let targets: Vec<(ServiceKey, DiscoveryConfig, Arc<ScoreService>)> = {
-            let services = self.services.lock().unwrap();
+            let services = self.services.lock();
             services
                 .iter()
                 .filter(|(k, _)| k.0 == dataset)
@@ -568,7 +568,7 @@ impl JobManager {
                 // results — invalidate and retire it
                 Ok((_, None)) | Err(_) => {
                     invalidated += svc.invalidate_all();
-                    self.services.lock().unwrap().remove(&key);
+                    self.services.lock().remove(&key);
                 }
             }
         }
@@ -579,15 +579,27 @@ impl JobManager {
     /// workers. Idempotent.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        for job in self.jobs.lock().unwrap().values() {
+        for job in self.jobs.lock().values() {
             job.cancel.store(true, Ordering::SeqCst);
-            let mut st = job.state.lock().unwrap();
+            let mut st = job.state.lock();
             if *st == JobState::Queued {
                 *st = JobState::Cancelled;
             }
         }
+        // The flag store above is lock-free, so it can land in the
+        // window between a worker's predicate check (under the queue
+        // lock) and its `wait` — and `notify_all` only wakes threads
+        // already parked, so notifying here would be lost and the
+        // worker would park forever. One empty queue-lock span closes
+        // the window: a worker mid-window still holds the lock, so by
+        // the time this acquisition succeeds it is parked (and the
+        // notify below reaches it) or will re-check the flag before
+        // parking. Found by the `JobsModel` schedule explorer
+        // (`util::model`); the unlocked variant is kept there as a
+        // regression model.
+        drop(self.queue.lock());
         self.queue_cv.notify_all();
-        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        let handles = std::mem::take(&mut *self.workers.lock());
         for h in handles {
             let _ = h.join();
         }
@@ -596,7 +608,7 @@ impl JobManager {
     fn worker_loop(&self) {
         loop {
             let id = {
-                let mut q = self.queue.lock().unwrap();
+                let mut q = self.queue.lock();
                 loop {
                     if let Some(id) = q.pop_front() {
                         break id;
@@ -604,10 +616,10 @@ impl JobManager {
                     if self.shutdown.load(Ordering::SeqCst) {
                         return;
                     }
-                    q = self.queue_cv.wait(q).unwrap();
+                    q = self.queue_cv.wait(q);
                 }
             };
-            let job = match self.jobs.lock().unwrap().get(&id).cloned() {
+            let job = match self.jobs.lock().get(&id).cloned() {
                 Some(j) => j,
                 None => continue,
             };
@@ -617,7 +629,7 @@ impl JobManager {
 
     fn run_job(&self, job: &Job) {
         {
-            let mut st = job.state.lock().unwrap();
+            let mut st = job.state.lock();
             if *st != JobState::Queued {
                 return; // cancelled while queued
             }
@@ -641,17 +653,17 @@ impl JobManager {
             });
         // drop the live-service handle before publishing the terminal
         // state so late polls go through the result snapshot
-        *job.service.lock().unwrap() = None;
+        *job.service.lock() = None;
         {
-            let mut st = job.state.lock().unwrap();
+            let mut st = job.state.lock();
             match outcome {
                 Ok(Some(result)) => {
-                    *job.result.lock().unwrap() = Some(result);
+                    *job.result.lock() = Some(result);
                     *st = JobState::Done;
                 }
                 Ok(None) => *st = JobState::Cancelled,
                 Err(e) => {
-                    *job.error.lock().unwrap() = Some(format!("{e:#}"));
+                    *job.error.lock() = Some(format!("{e:#}"));
                     *st = JobState::Failed;
                 }
             }
@@ -663,10 +675,10 @@ impl JobManager {
     /// [`MAX_RETAINED_TERMINAL_JOBS`] (their results become 404s).
     /// Queued/running jobs are never pruned.
     fn prune_terminal_jobs(&self) {
-        let mut jobs = self.jobs.lock().unwrap();
+        let mut jobs = self.jobs.lock();
         let mut terminal: Vec<u64> = jobs
             .iter()
-            .filter(|(_, j)| j.state.lock().unwrap().is_terminal())
+            .filter(|(_, j)| j.state.lock().is_terminal())
             .map(|(id, _)| *id)
             .collect();
         if terminal.len() <= MAX_RETAINED_TERMINAL_JOBS {
@@ -703,7 +715,7 @@ impl JobManager {
         );
         let stamp = || self.pool_clock.fetch_add(1, Ordering::Relaxed) + 1;
         let cached = {
-            let mut services = self.services.lock().unwrap();
+            let mut services = self.services.lock();
             services.get_mut(&key).map(|e| {
                 e.last_use = stamp();
                 e.service.clone()
@@ -732,7 +744,7 @@ impl JobManager {
             cfg.parallelism,
             cfg.params.folds,
         ) as u64);
-        let mut services = self.services.lock().unwrap();
+        let mut services = self.services.lock();
         // a replaced dataset's services are now unreachable (stale
         // version): drop them
         services.retain(|k, _| k.0 != dataset || k.1 >= ds_version);
@@ -789,8 +801,8 @@ impl JobManager {
                 // only take effect for the job that *creates* the
                 // pooled service; later jobs share the existing one.
                 let service = self.service_for(&spec.dataset, ds_version, ds, &canon, &spec.cfg)?;
-                *job.stats_at_start.lock().unwrap() = Some(service.stats());
-                *job.service.lock().unwrap() = Some(service.clone());
+                *job.stats_at_start.lock() = Some(service.stats());
+                *job.service.lock() = Some(service.clone());
                 // arm the deadline on the backing service too, so a
                 // sharding backend clamps dispatch/hedge/retry by it;
                 // re-armed (or lifted) here per job because the pooled
@@ -875,7 +887,7 @@ pub struct AppendGuard<'a> {
 
 impl Drop for AppendGuard<'_> {
     fn drop(&mut self) {
-        self.mgr.appending.lock().unwrap().remove(&self.dataset);
+        self.mgr.appending.lock().remove(&self.dataset);
     }
 }
 
@@ -1139,6 +1151,29 @@ mod tests {
         assert!(mgr.shed_services() > 0, "the completed job left memo entries to shed");
         assert!(mgr.service_stats().is_empty(), "shedding empties the pool");
         mgr.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_idle_workers_never_hangs() {
+        // Regression for the missed-wakeup window in `shutdown()`: the
+        // flag store + notify used to run without the queue lock, so a
+        // worker between its predicate check and its wait parked
+        // forever and `join` hung. Many start/shutdown rounds against
+        // idle workers give the interleaving real opportunity; the
+        // deterministic proof is `util::model::JobsModel`.
+        let reg = test_registry();
+        let h = std::thread::spawn(move || {
+            for _ in 0..50 {
+                let mgr = JobManager::start(reg.clone(), 2, None);
+                mgr.shutdown();
+            }
+        });
+        let t0 = Instant::now();
+        while !h.is_finished() {
+            assert!(t0.elapsed() < Duration::from_secs(60), "shutdown drain hung");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        h.join().expect("shutdown loop");
     }
 
     #[test]

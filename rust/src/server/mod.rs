@@ -52,7 +52,7 @@ pub mod registry;
 use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -63,6 +63,7 @@ use crate::distrib::ShardClient;
 use crate::lowrank::FactorMethod;
 use crate::obs::{fail, metrics, trace};
 use crate::score::ScoreBackend;
+use crate::util::lockorder::Mutex;
 use crate::util::{Backoff, Budget, DeadlineExceeded, Overloaded, Pcg64};
 
 use self::http::{Handler, HttpServer, Request, Response};
@@ -954,7 +955,6 @@ fn get_metrics(
         for addr in addrs {
             let client = clients
                 .lock()
-                .unwrap()
                 .entry(addr.clone())
                 .or_insert_with(|| {
                     Arc::new(ShardClient::new(addr.clone(), FLEET_SCRAPE_TIMEOUT))
@@ -1046,7 +1046,7 @@ fn build_handler(
     shutdown: Arc<AtomicBool>,
     cfg: ServerConfig,
 ) -> Handler {
-    let fleet_clients: FleetClients = Mutex::new(HashMap::new());
+    let fleet_clients: FleetClients = Mutex::new("server.fleet_clients", HashMap::new());
     Arc::new(move |req: &Request| -> Response {
         let segs = req.segments();
         match (req.method.as_str(), segs.as_slice()) {

@@ -8,7 +8,7 @@
 //! the server.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -16,6 +16,7 @@ use crate::data::synth::{generate, SynthConfig};
 use crate::data::{networks, Dataset};
 use crate::linalg::Mat;
 use crate::util::csv::parse_csv;
+use crate::util::lockorder::Mutex;
 
 /// Discrete-column inference cap: an all-integer column with more
 /// distinct levels than this is treated as continuous (an ID-like
@@ -242,7 +243,10 @@ impl DatasetRegistry {
     /// Empty registry.
     pub fn new() -> DatasetRegistry {
         DatasetRegistry {
-            inner: Mutex::new(RegistryInner { datasets: HashMap::new(), next_version: 0 }),
+            inner: Mutex::new(
+                "registry.inner",
+                RegistryInner { datasets: HashMap::new(), next_version: 0 },
+            ),
         }
     }
 
@@ -266,7 +270,7 @@ impl DatasetRegistry {
         {
             bail!("invalid dataset name `{name}` (use [A-Za-z0-9._-])");
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         let version = inner.next_version;
         inner.next_version += 1;
         Ok(inner.datasets.insert(name.to_string(), (ds, version)).is_some())
@@ -291,7 +295,7 @@ impl DatasetRegistry {
     /// Remove `name`; returns whether it existed. Running jobs keep
     /// their own `Arc<Dataset>`; queued jobs on the name fail cleanly.
     pub fn remove(&self, name: &str) -> bool {
-        self.inner.lock().unwrap().datasets.remove(name).is_some()
+        self.inner.lock().datasets.remove(name).is_some()
     }
 
     /// Append validated rows to `name` **in place**: the registry
@@ -313,7 +317,7 @@ impl DatasetRegistry {
         updated.append_rows(rows)?;
         let row_version = updated.version();
         let arc = Arc::new(updated);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock();
         match inner.datasets.get(name) {
             Some((cur, v)) if *v == version && Arc::ptr_eq(cur, &ds) => {
                 inner.datasets.insert(name.to_string(), (arc.clone(), version));
@@ -328,13 +332,13 @@ impl DatasetRegistry {
 
     /// The dataset plus its registration version (bumped on replace).
     pub fn entry(&self, name: &str) -> Option<(Arc<Dataset>, u64)> {
-        self.inner.lock().unwrap().datasets.get(name).cloned()
+        self.inner.lock().datasets.get(name).cloned()
     }
 
     /// Registered names, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut names: Vec<String> =
-            self.inner.lock().unwrap().datasets.keys().cloned().collect();
+            self.inner.lock().datasets.keys().cloned().collect();
         names.sort();
         names
     }
@@ -344,7 +348,6 @@ impl DatasetRegistry {
         let mut out: Vec<(String, usize, usize)> = self
             .inner
             .lock()
-            .unwrap()
             .datasets
             .iter()
             .map(|(name, (ds, _))| (name.clone(), ds.n(), ds.d()))

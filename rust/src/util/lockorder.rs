@@ -1,0 +1,398 @@
+//! Runtime lock-ordering detector (cargo feature `lock-order`).
+//!
+//! Deadlocks from inconsistent lock acquisition order are invisible to
+//! example-based tests until the unlucky interleaving fires. This
+//! module makes the *order* itself checkable on every run: each
+//! [`Mutex`]/[`RwLock`] carries a static class name, every acquisition
+//! records `held-class → acquired-class` edges into a process-global
+//! acquisition-order graph, and an acquisition that would close a
+//! cycle panics immediately with the offending path — on the first
+//! run that ever uses the two orders, not the first run that
+//! deadlocks. CI runs the full test suite with the feature enabled.
+//!
+//! With the feature off (the default), the wrappers are transparent
+//! shims over `std::sync` with zero bookkeeping; `lock()` absorbs
+//! poisoning in both modes (every value these locks guard stays
+//! consistent under panic — workers already contain panics via
+//! `catch_unwind`), which also satisfies the `cvlr lint` rule against
+//! `.unwrap()` on lock results in the serving stack.
+//!
+//! Same-class edges are not recorded: sibling instances of one class
+//! (e.g. two per-follower `health` locks) are ranked by the caller's
+//! own discipline, and self-edges would make every reentrant *class*
+//! (not lock) use a false positive.
+
+use std::sync::PoisonError;
+
+#[cfg(feature = "lock-order")]
+mod track {
+    use std::cell::RefCell;
+    use std::collections::{BTreeMap, BTreeSet};
+    use std::sync::Mutex;
+
+    /// class → classes acquired while it was held. A `BTreeMap` keeps
+    /// panic messages deterministic.
+    static GRAPH: Mutex<BTreeMap<&'static str, BTreeSet<&'static str>>> =
+        Mutex::new(BTreeMap::new());
+
+    thread_local! {
+        /// Classes this thread currently holds, in acquisition order.
+        static HELD: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Depth-first path search `from → … → to` over the edge graph.
+    fn find_path(
+        g: &BTreeMap<&'static str, BTreeSet<&'static str>>,
+        from: &'static str,
+        to: &'static str,
+        path: &mut Vec<&'static str>,
+    ) -> bool {
+        if path.contains(&from) {
+            return false;
+        }
+        path.push(from);
+        if from == to {
+            return true;
+        }
+        if let Some(nexts) = g.get(from) {
+            for &n in nexts {
+                if find_path(g, n, to, path) {
+                    return true;
+                }
+            }
+        }
+        path.pop();
+        false
+    }
+
+    pub fn acquired(class: &'static str) {
+        let held: Vec<&'static str> = HELD.with(|h| h.borrow().clone());
+        if !held.is_empty() && !held.contains(&class) {
+            let mut g = GRAPH.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            for &h in &held {
+                if h != class {
+                    g.entry(h).or_default().insert(class);
+                }
+            }
+            // A path class → … → h for any held h means some other
+            // code path acquires in the opposite order: cycle.
+            for &h in &held {
+                let mut path = Vec::new();
+                if find_path(&g, class, h, &mut path) {
+                    path.push(class);
+                    drop(g);
+                    panic!(
+                        "lock-order cycle: acquiring `{class}` while holding {held:?} \
+                         closes the cycle {path:?} (some path acquires these classes \
+                         in the opposite order)"
+                    );
+                }
+            }
+        }
+        HELD.with(|h| h.borrow_mut().push(class));
+    }
+
+    pub fn released(class: &'static str) {
+        // Guards are not necessarily dropped LIFO; remove the most
+        // recent occurrence of this class.
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|&c| c == class) {
+                held.remove(pos);
+            }
+        });
+    }
+
+}
+
+#[cfg(not(feature = "lock-order"))]
+mod track {
+    #[inline(always)]
+    pub fn acquired(_class: &'static str) {}
+    #[inline(always)]
+    pub fn released(_class: &'static str) {}
+}
+
+/// A `std::sync::Mutex` carrying a lock-order class name.
+pub struct Mutex<T: ?Sized> {
+    class: &'static str,
+    inner: std::sync::Mutex<T>,
+}
+
+/// Guard for [`Mutex`]; deregisters its class on drop.
+pub struct MutexGuard<'a, T: ?Sized> {
+    class: &'static str,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(class: &'static str, value: T) -> Self {
+        Mutex { class, inner: std::sync::Mutex::new(value) }
+    }
+
+    /// Acquire, registering the acquisition edge(s). Absorbs poison.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        track::acquired(self.class);
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        MutexGuard { class: self.class, inner: Some(inner) }
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        self.inner.get_mut().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() {
+            track::released(self.class);
+        }
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard consumed by Condvar::wait")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard consumed by Condvar::wait")
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mutex").field("class", &self.class).finish_non_exhaustive()
+    }
+}
+
+/// A `std::sync::RwLock` carrying a lock-order class name. Readers and
+/// writers register the same class — ordering cycles do not care about
+/// the sharing mode.
+pub struct RwLock<T: ?Sized> {
+    class: &'static str,
+    inner: std::sync::RwLock<T>,
+}
+
+/// Shared-read guard for [`RwLock`].
+pub struct RwLockReadGuard<'a, T: ?Sized> {
+    class: &'static str,
+    inner: Option<std::sync::RwLockReadGuard<'a, T>>,
+}
+
+/// Exclusive-write guard for [`RwLock`].
+pub struct RwLockWriteGuard<'a, T: ?Sized> {
+    class: &'static str,
+    inner: Option<std::sync::RwLockWriteGuard<'a, T>>,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(class: &'static str, value: T) -> Self {
+        RwLock { class, inner: std::sync::RwLock::new(value) }
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        track::acquired(self.class);
+        let inner = self.inner.read().unwrap_or_else(PoisonError::into_inner);
+        RwLockReadGuard { class: self.class, inner: Some(inner) }
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        track::acquired(self.class);
+        let inner = self.inner.write().unwrap_or_else(PoisonError::into_inner);
+        RwLockWriteGuard { class: self.class, inner: Some(inner) }
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() {
+            track::released(self.class);
+        }
+    }
+}
+
+impl<T: ?Sized> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() {
+            track::released(self.class);
+        }
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("read guard consumed")
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("write guard consumed")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("write guard consumed")
+    }
+}
+
+/// A `std::sync::Condvar` that understands [`MutexGuard`]: the wait
+/// deregisters the mutex class while parked (the lock really is
+/// released) and re-registers it on wakeup, so held-set accounting
+/// stays exact across waits.
+pub struct Condvar(std::sync::Condvar);
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar(std::sync::Condvar::new())
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        let class = guard.class;
+        let std_guard = guard.inner.take().expect("guard consumed twice");
+        track::released(class);
+        drop(guard); // inner already taken: Drop is a no-op
+        let std_guard = self.0.wait(std_guard).unwrap_or_else(PoisonError::into_inner);
+        track::acquired(class);
+        MutexGuard { class, inner: Some(std_guard) }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> (MutexGuard<'a, T>, std::sync::WaitTimeoutResult) {
+        let class = guard.class;
+        let std_guard = guard.inner.take().expect("guard consumed twice");
+        track::released(class);
+        drop(guard);
+        let (std_guard, timed_out) = self
+            .0
+            .wait_timeout(std_guard, dur)
+            .unwrap_or_else(PoisonError::into_inner);
+        track::acquired(class);
+        (MutexGuard { class, inner: Some(std_guard) }, timed_out)
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+#[cfg(all(test, feature = "lock-order"))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // Class names are unique per test: the edge graph is process-global.
+
+    #[test]
+    fn consistent_order_is_clean() {
+        let a = Mutex::new("t1.a", 1);
+        let b = Mutex::new("t1.b", 2);
+        for _ in 0..3 {
+            let ga = a.lock();
+            let gb = b.lock();
+            assert_eq!(*ga + *gb, 3);
+        }
+    }
+
+    #[test]
+    fn inverted_order_panics_with_cycle_path() {
+        let a = Mutex::new("t2.a", ());
+        let b = Mutex::new("t2.b", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock();
+            let _ga = a.lock(); // t2.b → t2.a closes the cycle
+        }))
+        .expect_err("inversion must panic");
+        let msg = err.downcast_ref::<String>().expect("panic carries a message");
+        assert!(msg.contains("lock-order cycle"), "got: {msg}");
+        assert!(msg.contains("t2.a") && msg.contains("t2.b"), "path names both classes: {msg}");
+    }
+
+    #[test]
+    fn transitive_inversion_detected() {
+        let a = Mutex::new("t3.a", ());
+        let b = Mutex::new("t3.b", ());
+        let c = Mutex::new("t3.c", ());
+        {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        {
+            let _gb = b.lock();
+            let _gc = c.lock();
+        }
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _gc = c.lock();
+            let _ga = a.lock(); // t3.c → t3.a closes a → b → c → a
+        }))
+        .expect_err("transitive inversion must panic");
+        let msg = err.downcast_ref::<String>().expect("panic carries a message");
+        assert!(msg.contains("lock-order cycle"), "got: {msg}");
+    }
+
+    #[test]
+    fn same_class_siblings_are_exempt() {
+        let a1 = Mutex::new("t4.health", 1);
+        let a2 = Mutex::new("t4.health", 2);
+        let _g1 = a1.lock();
+        let _g2 = a2.lock(); // same class: no self-edge, no panic
+    }
+
+    #[test]
+    fn condvar_wait_releases_the_class() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new("t5.queue", false));
+        let cv = Arc::new(Condvar::new());
+        let other = Mutex::new("t5.other", ());
+        let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+        let waker = std::thread::spawn(move || {
+            *m2.lock() = true;
+            cv2.notify_all();
+        });
+        let mut g = m.lock();
+        while !*g {
+            g = cv.wait(g);
+        }
+        drop(g);
+        waker.join().expect("waker thread");
+        // After the wait round-trip the held set is empty again, so an
+        // unrelated acquisition stays clean.
+        let _go = other.lock();
+    }
+
+    #[test]
+    fn rwlock_read_and_write_register() {
+        let r = RwLock::new("t6.reg", 5);
+        assert_eq!(*r.read(), 5);
+        *r.write() = 6;
+        assert_eq!(*r.read(), 6);
+    }
+}

@@ -15,6 +15,8 @@ pub mod cli;
 pub mod prop;
 pub mod backoff;
 pub mod budget;
+pub mod model;
+pub mod lockorder;
 
 pub use rng::Pcg64;
 pub use timing::Stopwatch;

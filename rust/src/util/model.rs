@@ -1,0 +1,1067 @@
+//! A miniature deterministic schedule explorer ("loom-lite") plus
+//! extracted protocol models of the crate's hand-rolled concurrency
+//! cores.
+//!
+//! The real protocols — `ScoreCache` claim/fill/evict in
+//! `coordinator/service.rs`, the `JobManager` queue/cancel/drain loop
+//! in `server/jobs.rs`, and the stream append-vs-job guard — are a few
+//! dozen lines each, but their correctness arguments are interleaving
+//! arguments, which example-based tests sample rather than cover. Here
+//! each protocol is re-stated as a [`Model`]: shared state plus one
+//! atomic step function per modeled thread, where every step
+//! corresponds to one lock span (or one lock-free action) of the real
+//! code. [`explore`] then enumerates *every* interleaving up to a
+//! bounded depth with DFS + state hashing and checks the invariants
+//! the real code assumes in every reachable state.
+//!
+//! A violation comes back as a [`Counterexample`] carrying the exact
+//! schedule (the sequence of thread ids that were stepped); feeding it
+//! to [`replay`] re-executes that schedule deterministically and
+//! prints a state trace, so a failure in CI is reproducible locally
+//! from the printed schedule alone.
+//!
+//! The deliberately-buggy model variants (`two_phase_claim`,
+//! `skip_notify`, `unpinned_evict`, `locked_notify: false`,
+//! `release_early`) re-introduce real historical or hypothetical races
+//! — e.g. the pre-PR-1 double-eval race — and the tests assert the
+//! explorer finds each one. That is the regression harness: if a
+//! future refactor re-creates one of these shapes, the matching model
+//! edit will reproduce the counterexample.
+
+use std::collections::HashSet;
+use std::fmt::Debug;
+use std::hash::{Hash, Hasher};
+
+/// A protocol model: shared state plus per-thread atomic steps.
+///
+/// Each call to [`Model::step`] must correspond to one indivisible
+/// action of the real protocol (one lock span, one atomic store). The
+/// explorer owns all scheduling: it only steps threads for which
+/// [`Model::enabled`] is true, so blocking (condvar waits, mutex
+/// acquisition) is expressed as enabledness predicates rather than by
+/// spinning.
+pub trait Model {
+    /// Full shared + per-thread state. `Hash` drives the visited-state
+    /// pruning; `Debug` renders replay traces.
+    type State: Clone + Hash + Debug;
+
+    /// Stable name, used in counterexample headers and trace artifacts.
+    fn name(&self) -> &'static str;
+    /// Number of modeled threads (thread ids are `0..threads()`).
+    fn threads(&self) -> usize;
+    /// The initial state.
+    fn init(&self) -> Self::State;
+    /// True once `tid` has finished its program.
+    fn done(&self, s: &Self::State, tid: usize) -> bool;
+    /// True when `tid` can take a step now (e.g. the lock it needs is
+    /// free, or the wakeup it waits for has been delivered).
+    fn enabled(&self, s: &Self::State, tid: usize) -> bool;
+    /// Execute one atomic step of `tid`. Only called when enabled.
+    fn step(&self, s: &mut Self::State, tid: usize);
+    /// Safety invariant, checked in every reachable state.
+    fn invariant(&self, s: &Self::State) -> Result<(), String>;
+    /// Checked in every state where all threads are done.
+    fn final_check(&self, _s: &Self::State) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// Exploration bounds. Depth is the schedule length; a branch that
+/// reaches `max_depth` without finishing is counted as truncated, not
+/// failed, so bounded runs stay sound for the states they did visit.
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    pub max_depth: usize,
+    pub max_states: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options { max_depth: 64, max_states: 1 << 20 }
+    }
+}
+
+impl Options {
+    /// CI knob: `CVLR_MODEL_DEPTH` overrides the depth bound (the
+    /// weekly exhaustive tier raises it; the PR tier uses the default).
+    pub fn from_env() -> Self {
+        let mut o = Options::default();
+        if let Some(d) = std::env::var("CVLR_MODEL_DEPTH")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            o.max_depth = d.max(1);
+        }
+        o
+    }
+}
+
+/// Statistics from a successful exhaustive run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Report {
+    /// Distinct states visited (after hashing dedup).
+    pub distinct_states: usize,
+    /// Schedules that ran every thread to completion.
+    pub completed_schedules: usize,
+    /// Branches cut off by the depth or state bound.
+    pub truncated: usize,
+    /// Longest schedule explored.
+    pub max_depth_seen: usize,
+}
+
+/// A violating interleaving: the schedule replays it deterministically.
+#[derive(Clone, Debug)]
+pub struct Counterexample {
+    pub model: &'static str,
+    /// Thread ids in step order, from the initial state.
+    pub schedule: Vec<usize>,
+    pub message: String,
+}
+
+impl Counterexample {
+    /// Header + schedule in the exact form [`replay`] accepts.
+    pub fn render(&self) -> String {
+        format!(
+            "model `{}` violated: {}\nschedule ({} steps): {:?}\n",
+            self.model,
+            self.message,
+            self.schedule.len(),
+            self.schedule
+        )
+    }
+}
+
+fn fingerprint<S: Hash>(s: &S) -> u64 {
+    // DefaultHasher::new() is keyed with fixed zeros, so fingerprints
+    // are stable across runs — required for deterministic exploration.
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    s.hash(&mut h);
+    h.finish()
+}
+
+/// Exhaustively enumerate interleavings of `m` up to `o.max_depth`,
+/// checking [`Model::invariant`] in every state, [`Model::final_check`]
+/// in every terminal state, and reporting deadlock when live threads
+/// exist but none is enabled.
+pub fn explore<M: Model>(m: &M, o: &Options) -> Result<Report, Box<Counterexample>> {
+    let mut report = Report::default();
+    let mut visited: HashSet<u64> = HashSet::new();
+    let init = m.init();
+    visited.insert(fingerprint(&init));
+    let mut schedule: Vec<usize> = Vec::new();
+    dfs(m, o, &init, &mut schedule, &mut visited, &mut report)?;
+    Ok(report)
+}
+
+fn dfs<M: Model>(
+    m: &M,
+    o: &Options,
+    s: &M::State,
+    schedule: &mut Vec<usize>,
+    visited: &mut HashSet<u64>,
+    report: &mut Report,
+) -> Result<(), Box<Counterexample>> {
+    let fail = |msg: String, schedule: &[usize]| {
+        Box::new(Counterexample {
+            model: m.name(),
+            schedule: schedule.to_vec(),
+            message: msg,
+        })
+    };
+    if let Err(msg) = m.invariant(s) {
+        return Err(fail(msg, schedule));
+    }
+    report.max_depth_seen = report.max_depth_seen.max(schedule.len());
+    let live: Vec<usize> = (0..m.threads()).filter(|&t| !m.done(s, t)).collect();
+    if live.is_empty() {
+        if let Err(msg) = m.final_check(s) {
+            return Err(fail(format!("final check failed: {msg}"), schedule));
+        }
+        report.completed_schedules += 1;
+        return Ok(());
+    }
+    let runnable: Vec<usize> = live.iter().copied().filter(|&t| m.enabled(s, t)).collect();
+    if runnable.is_empty() {
+        return Err(fail(
+            format!("deadlock: threads {live:?} are live but none is enabled"),
+            schedule,
+        ));
+    }
+    if schedule.len() >= o.max_depth || visited.len() >= o.max_states {
+        report.truncated += 1;
+        return Ok(());
+    }
+    for tid in runnable {
+        let mut next = s.clone();
+        m.step(&mut next, tid);
+        if visited.insert(fingerprint(&next)) {
+            schedule.push(tid);
+            dfs(m, o, &next, schedule, visited, report)?;
+            schedule.pop();
+        }
+    }
+    Ok(())
+}
+
+/// Outcome of replaying one schedule.
+#[derive(Clone, Debug)]
+pub struct Replay {
+    /// One line per step: `step k: thread t -> <state>`.
+    pub trace: String,
+    /// The violation the schedule reproduces, if any.
+    pub violation: Option<String>,
+}
+
+/// Deterministically re-execute `schedule` from the initial state,
+/// rendering every intermediate state and re-checking the invariants.
+/// This is how a CI counterexample is debugged locally: paste the
+/// printed schedule and read the trace.
+pub fn replay<M: Model>(m: &M, schedule: &[usize]) -> Replay {
+    let mut s = m.init();
+    let mut trace = format!("replay of model `{}` ({} steps)\n", m.name(), schedule.len());
+    trace.push_str(&format!("  init: {s:?}\n"));
+    let mut violation = m.invariant(&s).err();
+    if violation.is_none() {
+        for (k, &tid) in schedule.iter().enumerate() {
+            if m.done(&s, tid) || !m.enabled(&s, tid) {
+                violation = Some(format!(
+                    "schedule step {k} chose thread {tid}, which is not runnable"
+                ));
+                break;
+            }
+            m.step(&mut s, tid);
+            trace.push_str(&format!("  step {k}: thread {tid} -> {s:?}\n"));
+            if let Err(msg) = m.invariant(&s) {
+                violation = Some(msg);
+                break;
+            }
+        }
+    }
+    if violation.is_none() {
+        let live: Vec<usize> = (0..m.threads()).filter(|&t| !m.done(&s, t)).collect();
+        if live.is_empty() {
+            violation = m.final_check(&s).err().map(|e| format!("final check failed: {e}"));
+        } else if !live.iter().any(|&t| m.enabled(&s, t)) {
+            violation = Some(format!(
+                "deadlock: threads {live:?} are live but none is enabled"
+            ));
+        }
+    }
+    if let Some(v) = &violation {
+        trace.push_str(&format!("  violation: {v}\n"));
+    }
+    Replay { trace, violation }
+}
+
+/// Run [`explore`]; on violation, render the counterexample and its
+/// replay trace into `$CVLR_MODEL_TRACE_DIR/<model>.trace` (when the
+/// env var is set — CI sets it and uploads the directory as an
+/// artifact on failure) before returning it.
+pub fn check_model<M: Model>(m: &M, o: &Options) -> Result<Report, Box<Counterexample>> {
+    match explore(m, o) {
+        Ok(r) => Ok(r),
+        Err(cex) => {
+            if let Ok(dir) = std::env::var("CVLR_MODEL_TRACE_DIR") {
+                let _ = std::fs::create_dir_all(&dir);
+                let body = format!("{}\n{}", cex.render(), replay(m, &cex.schedule).trace);
+                let _ = std::fs::write(format!("{}/{}.trace", dir, m.name()), body);
+            }
+            Err(cex)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 1: ScoreCache claim / fill / evict
+// ---------------------------------------------------------------------------
+
+/// Extracted model of the `ScoreCache` protocol
+/// (`coordinator/service.rs`): N requesters race for one key; the
+/// first to claim becomes the owner and evaluates, later claimants
+/// register as waiters and sleep on the condvar; fill publishes the
+/// value and wakes every registered waiter; an optional evictor runs a
+/// second-chance sweep that must skip entries with uncollected
+/// waiters.
+///
+/// The bug knobs re-introduce specific races:
+/// * `two_phase_claim` — the pre-PR-1 shape: check-then-insert in two
+///   separate lock spans, so two racing misses both evaluate.
+/// * `skip_notify` — fill forgets `notify_all`; a registered waiter
+///   sleeps forever (lost wakeup ⇒ deadlock).
+/// * `unpinned_evict` — the evictor ignores waiter pinning and evicts
+///   a `Ready` entry before its waiters collected it, forcing a
+///   registered waiter to re-evaluate.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheModel {
+    pub requesters: usize,
+    pub evictor: bool,
+    pub two_phase_claim: bool,
+    pub skip_notify: bool,
+    pub unpinned_evict: bool,
+}
+
+impl CacheModel {
+    /// The protocol as shipped: single-lock-span claim, notify on
+    /// fill, waiter-pinned eviction.
+    pub fn correct(requesters: usize, evictor: bool) -> Self {
+        CacheModel {
+            requesters,
+            evictor,
+            two_phase_claim: false,
+            skip_notify: false,
+            unpinned_evict: false,
+        }
+    }
+}
+
+/// One cache slot, as the model sees it.
+#[derive(Clone, Copy, Debug, Hash, PartialEq, Eq)]
+pub enum Slot {
+    Empty,
+    /// Claimed, evaluation in flight.
+    Pending,
+    /// Value published.
+    Ready,
+}
+
+/// Requester program counters (single-lock-span protocol).
+const C_CLAIM: u8 = 0; // one lock span: classify hit / owner / waiter
+const C_EVAL: u8 = 1; // owner: start evaluation (outside the lock)
+const C_FILL: u8 = 2; // owner: publish + notify (one lock span)
+const C_WAIT: u8 = 3; // waiter: re-check predicate (one lock span)
+const C_SLEEP: u8 = 4; // waiter: parked on the condvar
+const C_DONE: u8 = 5;
+// Two-phase (buggy) claim re-uses C_CLAIM as the bare check, then
+// C_EVAL / C_FILL as the unreserved evaluate + insert.
+
+/// Full state of [`CacheModel`].
+#[derive(Clone, Debug, Hash)]
+pub struct CacheState {
+    pc: Vec<u8>,
+    slot: Slot,
+    /// Waiters registered on the slot that have not yet collected.
+    uncollected: u8,
+    /// Bitmask of requesters parked on the condvar.
+    sleeping: u16,
+    /// Bitmask of parked requesters that have been notified.
+    woken: u16,
+    /// Stats — the identity `requests == hits + evals + dedup` is the
+    /// protocol's observable contract (`/v1/stats` exposes it).
+    requests: u8,
+    hits: u8,
+    evals: u8,
+    dedup: u8,
+    /// Total evaluations ever started (catches double-eval).
+    total_evals: u8,
+    evals_live: u8,
+    /// A *registered waiter* observed `Empty` — its pinned entry was
+    /// evicted out from under it.
+    waiter_lost_entry: u8,
+    evictions: u8,
+}
+
+impl Model for CacheModel {
+    type State = CacheState;
+
+    fn name(&self) -> &'static str {
+        if self.two_phase_claim {
+            "cache-two-phase-claim-bug"
+        } else if self.skip_notify {
+            "cache-skip-notify-bug"
+        } else if self.unpinned_evict {
+            "cache-unpinned-evict-bug"
+        } else {
+            "cache-claim-fill-evict"
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.requesters + usize::from(self.evictor)
+    }
+
+    fn init(&self) -> CacheState {
+        CacheState {
+            pc: vec![0; self.threads()],
+            slot: Slot::Empty,
+            uncollected: 0,
+            sleeping: 0,
+            woken: 0,
+            requests: 0,
+            hits: 0,
+            evals: 0,
+            dedup: 0,
+            total_evals: 0,
+            evals_live: 0,
+            waiter_lost_entry: 0,
+            evictions: 0,
+        }
+    }
+
+    fn done(&self, s: &CacheState, tid: usize) -> bool {
+        if self.evictor && tid == self.requesters {
+            s.pc[tid] == 1
+        } else {
+            s.pc[tid] == C_DONE
+        }
+    }
+
+    fn enabled(&self, s: &CacheState, tid: usize) -> bool {
+        if self.done(s, tid) {
+            return false;
+        }
+        if self.evictor && tid == self.requesters {
+            return true;
+        }
+        if s.pc[tid] == C_SLEEP {
+            return s.woken & (1 << tid) != 0;
+        }
+        true
+    }
+
+    fn step(&self, s: &mut CacheState, tid: usize) {
+        if self.evictor && tid == self.requesters {
+            // One second-chance sweep attempt. Correct: only evict a
+            // Ready entry nobody is still waiting to collect.
+            if s.slot == Slot::Ready && (self.unpinned_evict || s.uncollected == 0) {
+                s.slot = Slot::Empty;
+                s.evictions += 1;
+            }
+            s.pc[tid] = 1;
+            return;
+        }
+        let bit = 1u16 << tid;
+        if self.two_phase_claim {
+            // Pre-PR-1 shape: the miss check and the insert are two
+            // separate lock spans with the evaluation in between, and
+            // nothing reserves the key.
+            match s.pc[tid] {
+                C_CLAIM => {
+                    s.requests += 1;
+                    if s.slot == Slot::Ready {
+                        s.hits += 1;
+                        s.pc[tid] = C_DONE;
+                    } else {
+                        s.pc[tid] = C_EVAL;
+                    }
+                }
+                C_EVAL => {
+                    s.total_evals += 1;
+                    s.evals_live += 1;
+                    s.pc[tid] = C_FILL;
+                }
+                C_FILL => {
+                    s.evals_live -= 1;
+                    s.evals += 1;
+                    s.slot = Slot::Ready;
+                    s.pc[tid] = C_DONE;
+                }
+                _ => unreachable!("two-phase requester pc"),
+            }
+            return;
+        }
+        match s.pc[tid] {
+            C_CLAIM => {
+                // One lock span classifies the request (PR 1's fix).
+                s.requests += 1;
+                match s.slot {
+                    Slot::Empty => {
+                        s.slot = Slot::Pending;
+                        s.pc[tid] = C_EVAL;
+                    }
+                    Slot::Pending => {
+                        s.uncollected += 1;
+                        s.pc[tid] = C_WAIT;
+                    }
+                    Slot::Ready => {
+                        s.hits += 1;
+                        s.pc[tid] = C_DONE;
+                    }
+                }
+            }
+            C_EVAL => {
+                s.total_evals += 1;
+                s.evals_live += 1;
+                s.pc[tid] = C_FILL;
+            }
+            C_FILL => {
+                s.evals_live -= 1;
+                s.evals += 1;
+                s.slot = Slot::Ready;
+                if !self.skip_notify {
+                    s.woken |= s.sleeping;
+                }
+                s.pc[tid] = C_DONE;
+            }
+            C_WAIT => {
+                // The wait loop's predicate re-check, under the lock.
+                match s.slot {
+                    Slot::Ready => {
+                        s.dedup += 1;
+                        s.uncollected -= 1;
+                        s.pc[tid] = C_DONE;
+                    }
+                    Slot::Empty => {
+                        // Pinned entry vanished: the waiter must
+                        // re-claim and re-evaluate. Recorded as a
+                        // violation via the invariant.
+                        s.waiter_lost_entry += 1;
+                        s.uncollected -= 1;
+                        s.slot = Slot::Pending;
+                        s.pc[tid] = C_EVAL;
+                    }
+                    Slot::Pending => {
+                        s.sleeping |= bit;
+                        s.pc[tid] = C_SLEEP;
+                    }
+                }
+            }
+            C_SLEEP => {
+                s.sleeping &= !bit;
+                s.woken &= !bit;
+                s.pc[tid] = C_WAIT;
+            }
+            _ => unreachable!("requester pc"),
+        }
+    }
+
+    fn invariant(&self, s: &CacheState) -> Result<(), String> {
+        if s.evals_live > 1 {
+            return Err(format!(
+                "double eval: {} evaluations in flight for one claimed key",
+                s.evals_live
+            ));
+        }
+        if !self.evictor && s.total_evals > 1 {
+            return Err(format!(
+                "double eval: key evaluated {} times with no eviction",
+                s.total_evals
+            ));
+        }
+        if s.waiter_lost_entry > 0 {
+            return Err(
+                "pinned entry evicted under a registered waiter (waiter saw Empty)".to_string()
+            );
+        }
+        Ok(())
+    }
+
+    fn final_check(&self, s: &CacheState) -> Result<(), String> {
+        let total = s.hits + s.evals + s.dedup;
+        if s.requests != total {
+            return Err(format!(
+                "stats identity broken: requests={} != hits={} + evals={} + dedup={}",
+                s.requests, s.hits, s.evals, s.dedup
+            ));
+        }
+        if s.requests != self.requesters as u8 {
+            return Err(format!(
+                "lost request: {} of {} requesters recorded",
+                s.requests, self.requesters
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: JobManager queue / shutdown drain
+// ---------------------------------------------------------------------------
+
+/// Extracted model of the `JobManager` worker loop and shutdown drain
+/// (`server/jobs.rs`): a worker holds the queue lock while checking
+/// `shutdown`/queue and enters the condvar wait atomically with
+/// releasing it; a submitter pushes one job *under the lock* and
+/// notifies; the shutdowner stores the (atomic, lock-free) shutdown
+/// flag and notifies.
+///
+/// `locked_notify: false` is the shipped-before-this-PR shutdown: the
+/// flag store and `notify_all` happen without touching the queue
+/// mutex, so both can land in the window between the worker's
+/// predicate check (under the lock) and its wait — the notify finds no
+/// sleeper and the worker parks forever. `locked_notify: true` is the
+/// fix: shutdown acquires and releases the queue mutex between the
+/// store and the notify, which the explorer proves closes the window.
+#[derive(Clone, Copy, Debug)]
+pub struct JobsModel {
+    pub locked_notify: bool,
+}
+
+/// Thread ids in [`JobsModel`].
+const T_WORKER: usize = 0;
+const T_SUBMIT: usize = 1;
+const T_SHUTDOWN: usize = 2;
+
+// Worker pcs.
+const W_ACQ: u8 = 0;
+const W_CHECK: u8 = 1;
+const W_WAIT_ENTER: u8 = 2;
+const W_PARKED: u8 = 3;
+const W_REACQ: u8 = 4;
+const W_EXIT: u8 = 5;
+// Submitter pcs.
+const SUB_ACQ: u8 = 0;
+const SUB_PUSH: u8 = 1;
+const SUB_NOTIFY: u8 = 2;
+const SUB_DONE: u8 = 3;
+// Shutdowner pcs (locked_notify inserts ACQ/REL between FLAG and NOTIFY).
+const SH_FLAG: u8 = 0;
+const SH_ACQ: u8 = 1;
+const SH_REL: u8 = 2;
+const SH_NOTIFY: u8 = 3;
+const SH_JOIN: u8 = 4;
+const SH_DONE: u8 = 5;
+
+/// Full state of [`JobsModel`].
+#[derive(Clone, Debug, Hash)]
+pub struct JobsState {
+    pc: [u8; 3],
+    /// Queue mutex holder.
+    lock: Option<u8>,
+    queue: u8,
+    shutdown: bool,
+    /// Worker parked in the condvar wait.
+    sleeping: bool,
+    /// A notify was delivered to the parked worker.
+    woken: bool,
+    jobs_run: u8,
+}
+
+impl Model for JobsModel {
+    type State = JobsState;
+
+    fn name(&self) -> &'static str {
+        if self.locked_notify {
+            "jobs-shutdown-drain"
+        } else {
+            "jobs-shutdown-unlocked-notify-bug"
+        }
+    }
+
+    fn threads(&self) -> usize {
+        3
+    }
+
+    fn init(&self) -> JobsState {
+        JobsState {
+            pc: [W_ACQ, SUB_ACQ, SH_FLAG],
+            lock: None,
+            queue: 0,
+            shutdown: false,
+            sleeping: false,
+            woken: false,
+            jobs_run: 0,
+        }
+    }
+
+    fn done(&self, s: &JobsState, tid: usize) -> bool {
+        match tid {
+            T_WORKER => s.pc[0] == W_EXIT,
+            T_SUBMIT => s.pc[1] == SUB_DONE,
+            _ => s.pc[2] == SH_DONE,
+        }
+    }
+
+    fn enabled(&self, s: &JobsState, tid: usize) -> bool {
+        if self.done(s, tid) {
+            return false;
+        }
+        match (tid, s.pc[tid]) {
+            (T_WORKER, W_ACQ) | (T_WORKER, W_REACQ) => s.lock.is_none(),
+            (T_WORKER, W_PARKED) => s.woken,
+            (T_SUBMIT, SUB_ACQ) => s.lock.is_none(),
+            (T_SHUTDOWN, SH_ACQ) => s.lock.is_none(),
+            (T_SHUTDOWN, SH_JOIN) => s.pc[0] == W_EXIT,
+            _ => true,
+        }
+    }
+
+    fn step(&self, s: &mut JobsState, tid: usize) {
+        match tid {
+            T_WORKER => match s.pc[0] {
+                W_ACQ | W_REACQ => {
+                    s.lock = Some(0);
+                    s.pc[0] = W_CHECK;
+                }
+                W_CHECK => {
+                    // Predicate check under the lock, exactly as in
+                    // `worker_loop`.
+                    if s.shutdown {
+                        s.lock = None;
+                        s.pc[0] = W_EXIT;
+                    } else if s.queue > 0 {
+                        s.queue -= 1;
+                        s.jobs_run += 1;
+                        s.lock = None; // run the job outside the lock
+                        s.pc[0] = W_ACQ;
+                    } else {
+                        s.pc[0] = W_WAIT_ENTER; // decided to wait, still holds the lock
+                    }
+                }
+                W_WAIT_ENTER => {
+                    // Condvar wait: park + release, atomically.
+                    s.sleeping = true;
+                    s.lock = None;
+                    s.pc[0] = W_PARKED;
+                }
+                W_PARKED => {
+                    s.sleeping = false;
+                    s.woken = false;
+                    s.pc[0] = W_REACQ;
+                }
+                _ => unreachable!("worker pc"),
+            },
+            T_SUBMIT => match s.pc[1] {
+                SUB_ACQ => {
+                    s.lock = Some(1);
+                    s.pc[1] = SUB_PUSH;
+                }
+                SUB_PUSH => {
+                    // Push happens under the queue lock — this is why
+                    // submit has no missed-wakeup window.
+                    s.queue += 1;
+                    s.lock = None;
+                    s.pc[1] = SUB_NOTIFY;
+                }
+                SUB_NOTIFY => {
+                    if s.sleeping {
+                        s.woken = true;
+                    }
+                    s.pc[1] = SUB_DONE;
+                }
+                _ => unreachable!("submitter pc"),
+            },
+            _ => match s.pc[2] {
+                SH_FLAG => {
+                    // Lock-free atomic store, exactly as in `shutdown()`.
+                    s.shutdown = true;
+                    s.pc[2] = if self.locked_notify { SH_ACQ } else { SH_NOTIFY };
+                }
+                SH_ACQ => {
+                    s.lock = Some(2);
+                    s.pc[2] = SH_REL;
+                }
+                SH_REL => {
+                    s.lock = None;
+                    s.pc[2] = SH_NOTIFY;
+                }
+                SH_NOTIFY => {
+                    if s.sleeping {
+                        s.woken = true;
+                    }
+                    s.pc[2] = SH_JOIN;
+                }
+                SH_JOIN => {
+                    s.pc[2] = SH_DONE;
+                }
+                _ => unreachable!("shutdowner pc"),
+            },
+        }
+    }
+
+    fn invariant(&self, _s: &JobsState) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn final_check(&self, s: &JobsState) -> Result<(), String> {
+        if s.pc[0] != W_EXIT {
+            return Err("worker did not exit".to_string());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model 3: stream append-vs-job guard
+// ---------------------------------------------------------------------------
+
+/// Extracted model of the append-vs-job guard: an append must not
+/// publish new rows (`data_v`) without the rebuilt factors
+/// (`factor_v`) before any scorer can observe them. The real guard is
+/// the `appending` set in `server/jobs.rs` + the session lock in
+/// `stream/session.rs`: appends take the guard only when no job is
+/// active, jobs refuse to start while the guard is held, and the
+/// factor rebuild completes inside the guarded span.
+///
+/// `release_early: true` re-orders the release before the factor
+/// rebuild — a scorer admitted in that window scores new rows against
+/// stale factors, which the invariant flags.
+#[derive(Clone, Copy, Debug)]
+pub struct AppendModel {
+    pub scorers: usize,
+    pub release_early: bool,
+}
+
+// Appender pcs.
+const A_GUARD: u8 = 0;
+const A_DATA: u8 = 1;
+const A_FACTOR: u8 = 2;
+const A_RELEASE: u8 = 3;
+const A_DONE: u8 = 4;
+// Scorer pcs.
+const S_ENTER: u8 = 0;
+const S_SERVE: u8 = 1;
+const S_EXIT: u8 = 2;
+const S_DONE: u8 = 3;
+
+/// Full state of [`AppendModel`]. Thread 0 is the appender; threads
+/// `1..=scorers` are scorers.
+#[derive(Clone, Debug, Hash)]
+pub struct AppendState {
+    pc: Vec<u8>,
+    guard: bool,
+    active_scorers: u8,
+    data_v: u8,
+    factor_v: u8,
+    stale_served: u8,
+}
+
+impl Model for AppendModel {
+    type State = AppendState;
+
+    fn name(&self) -> &'static str {
+        if self.release_early {
+            "append-guard-release-early-bug"
+        } else {
+            "append-vs-job-guard"
+        }
+    }
+
+    fn threads(&self) -> usize {
+        1 + self.scorers
+    }
+
+    fn init(&self) -> AppendState {
+        AppendState {
+            pc: vec![0; self.threads()],
+            guard: false,
+            active_scorers: 0,
+            data_v: 0,
+            factor_v: 0,
+            stale_served: 0,
+        }
+    }
+
+    fn done(&self, s: &AppendState, tid: usize) -> bool {
+        if tid == 0 {
+            s.pc[0] == A_DONE
+        } else {
+            s.pc[tid] == S_DONE
+        }
+    }
+
+    fn enabled(&self, s: &AppendState, tid: usize) -> bool {
+        if self.done(s, tid) {
+            return false;
+        }
+        if tid == 0 {
+            // Appends wait for running jobs to drain before taking the
+            // guard.
+            s.pc[0] != A_GUARD || (!s.guard && s.active_scorers == 0)
+        } else {
+            // Jobs refuse to start while an append holds the guard.
+            s.pc[tid] != S_ENTER || !s.guard
+        }
+    }
+
+    fn step(&self, s: &mut AppendState, tid: usize) {
+        if tid == 0 {
+            match s.pc[0] {
+                A_GUARD => {
+                    s.guard = true;
+                    s.pc[0] = A_DATA;
+                }
+                A_DATA => {
+                    s.data_v += 1;
+                    // Buggy variant drops the guard here, before the
+                    // factor rebuild.
+                    s.pc[0] = if self.release_early { A_RELEASE } else { A_FACTOR };
+                }
+                A_FACTOR => {
+                    s.factor_v = s.data_v;
+                    s.pc[0] = if self.release_early { A_DONE } else { A_RELEASE };
+                }
+                A_RELEASE => {
+                    s.guard = false;
+                    s.pc[0] = if self.release_early { A_FACTOR } else { A_DONE };
+                }
+                _ => unreachable!("appender pc"),
+            }
+        } else {
+            match s.pc[tid] {
+                S_ENTER => {
+                    s.active_scorers += 1;
+                    s.pc[tid] = S_SERVE;
+                }
+                S_SERVE => {
+                    if s.factor_v != s.data_v {
+                        s.stale_served += 1;
+                    }
+                    s.pc[tid] = S_EXIT;
+                }
+                S_EXIT => {
+                    s.active_scorers -= 1;
+                    s.pc[tid] = S_DONE;
+                }
+                _ => unreachable!("scorer pc"),
+            }
+        }
+    }
+
+    fn invariant(&self, s: &AppendState) -> Result<(), String> {
+        if s.stale_served > 0 {
+            return Err(format!(
+                "stale factor served: scorer observed data_v={} with factor_v={}",
+                s.data_v, s.factor_v
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---- bounded proofs (kani) -------------------------------------------------
+//
+// The CI `verify-core` job (continue-on-error) runs these under `cargo
+// kani`. Where `explore()` enumerates interleavings of a fixed thread
+// count exhaustively, the harnesses below let the solver pick a fully
+// nondeterministic bounded schedule — same models, different prover.
+#[cfg(kani)]
+mod verification {
+    use super::*;
+
+    /// No bounded schedule of two requesters over the shipped cache
+    /// protocol breaks an invariant, and every completed schedule
+    /// satisfies the stats identity.
+    #[kani::proof]
+    #[kani::unwind(22)]
+    fn cache_model_two_requesters_bounded_safe() {
+        let m = CacheModel::correct(2, false);
+        let mut s = m.init();
+        for _ in 0..18 {
+            let tid: usize = kani::any();
+            kani::assume(tid < m.threads());
+            if m.enabled(&s, tid) {
+                m.step(&mut s, tid);
+                assert!(m.invariant(&s).is_ok(), "cache invariant violated");
+            }
+        }
+        if (0..m.threads()).all(|t| m.done(&s, t)) {
+            assert!(m.final_check(&s).is_ok(), "stats identity violated");
+        }
+    }
+
+    /// The append guard serves no stale factor under any bounded
+    /// schedule of one appender and one scorer.
+    #[kani::proof]
+    #[kani::unwind(20)]
+    fn append_guard_bounded_serves_no_stale_factor() {
+        let m = AppendModel { scorers: 1, release_early: false };
+        let mut s = m.init();
+        for _ in 0..16 {
+            let tid: usize = kani::any();
+            kani::assume(tid < m.threads());
+            if m.enabled(&s, tid) {
+                m.step(&mut s, tid);
+                assert!(m.invariant(&s).is_ok(), "stale factor served");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_model_exhaustive_clean() {
+        let m = CacheModel::correct(3, true);
+        let r = check_model(&m, &Options::default()).expect("correct cache protocol holds");
+        assert!(r.completed_schedules > 0, "explored to completion");
+        assert_eq!(r.truncated, 0, "default depth covers the full model");
+        assert!(r.distinct_states > 50, "nontrivial state space");
+    }
+
+    #[test]
+    fn double_eval_bug_yields_replayable_counterexample() {
+        // The pre-PR-1 race: check and insert in two lock spans.
+        let m = CacheModel { two_phase_claim: true, ..CacheModel::correct(2, false) };
+        let cex = check_model(&m, &Options::default()).expect_err("two-phase claim double-evals");
+        assert!(cex.message.contains("double eval"), "message: {}", cex.message);
+        assert!(!cex.schedule.is_empty());
+        // The schedule replays deterministically to the same violation.
+        let replayed = replay(&m, &cex.schedule);
+        assert_eq!(replayed.violation.as_deref(), Some(cex.message.as_str()));
+        assert!(replayed.trace.contains("thread"), "trace renders steps:\n{}", replayed.trace);
+        // And the render round-trips the schedule for copy-paste repro.
+        assert!(cex.render().contains(&format!("{:?}", cex.schedule)));
+    }
+
+    #[test]
+    fn lost_wakeup_bug_detected_as_deadlock() {
+        let m = CacheModel { skip_notify: true, ..CacheModel::correct(2, false) };
+        let cex = explore(&m, &Options::default()).expect_err("skipping notify strands a waiter");
+        assert!(cex.message.contains("deadlock"), "message: {}", cex.message);
+        let replayed = replay(&m, &cex.schedule);
+        assert!(replayed.violation.expect("replay deadlocks too").contains("deadlock"));
+    }
+
+    #[test]
+    fn unpinned_evict_bug_detected() {
+        let m = CacheModel { unpinned_evict: true, ..CacheModel::correct(2, true) };
+        let cex = explore(&m, &Options::default()).expect_err("unpinned eviction strands waiters");
+        assert!(
+            cex.message.contains("pinned entry evicted") || cex.message.contains("double eval"),
+            "message: {}",
+            cex.message
+        );
+    }
+
+    #[test]
+    fn jobs_shutdown_locked_notify_clean() {
+        let r = check_model(&JobsModel { locked_notify: true }, &Options::default())
+            .expect("lock-bracketed shutdown notify drains the worker in every interleaving");
+        assert!(r.completed_schedules > 0);
+        assert_eq!(r.truncated, 0);
+    }
+
+    #[test]
+    fn jobs_shutdown_unlocked_notify_misses_wakeup() {
+        // The pre-fix shutdown: flag store + notify_all without the
+        // queue mutex. The explorer finds the parked-forever worker.
+        let m = JobsModel { locked_notify: false };
+        let cex = explore(&m, &Options::default()).expect_err("unlocked notify loses the wakeup");
+        assert!(cex.message.contains("deadlock"), "message: {}", cex.message);
+        let replayed = replay(&m, &cex.schedule);
+        assert!(replayed.violation.expect("replays to the hang").contains("deadlock"));
+    }
+
+    #[test]
+    fn append_guard_exhaustive_clean() {
+        let r = check_model(&AppendModel { scorers: 2, release_early: false }, &Options::default())
+            .expect("guarded append never serves a stale factor");
+        assert!(r.completed_schedules > 0);
+        assert_eq!(r.truncated, 0);
+    }
+
+    #[test]
+    fn append_guard_release_early_serves_stale_factor() {
+        let m = AppendModel { scorers: 1, release_early: true };
+        let cex = explore(&m, &Options::default()).expect_err("early release exposes stale factors");
+        assert!(cex.message.contains("stale factor"), "message: {}", cex.message);
+    }
+
+    #[test]
+    fn depth_bound_truncates_instead_of_failing() {
+        let m = CacheModel { two_phase_claim: true, ..CacheModel::correct(2, false) };
+        let r = explore(&m, &Options { max_depth: 2, max_states: 1 << 20 })
+            .expect("bug is deeper than 2 steps, bounded run stays clean");
+        assert!(r.truncated > 0, "bounded run reports what it cut off");
+    }
+
+    #[test]
+    fn options_from_env_reads_depth() {
+        // Parse-level check only; avoids mutating the process env in a
+        // threaded test binary.
+        let o = Options::default();
+        assert_eq!(o.max_depth, 64);
+    }
+}

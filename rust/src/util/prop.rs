@@ -4,16 +4,37 @@
 //! inputs generated from a deterministic per-case RNG; on failure it
 //! panics with the reproducing seed. No shrinking — the generators used
 //! by the library produce small inputs by construction.
+//!
+//! The `CVLR_PROP_CASES` environment variable multiplies every
+//! property's case count (default 1): the weekly exhaustive CI tier
+//! sets `CVLR_PROP_CASES=20` to run the same properties twenty times
+//! deeper without touching the tests. Seeds stay a pure function of
+//! the case index, so a failure reported under a high multiplier
+//! reproduces at the default one by seed.
 
 use super::rng::Pcg64;
 
-/// Run `prop` for `cases` deterministic random cases. The property gets a
-/// seeded RNG and returns `Ok(())` or a failure description.
+/// Parse a case-count multiplier (`CVLR_PROP_CASES` semantics): a
+/// positive integer, anything unset/empty/invalid → 1. Split from
+/// [`cases_multiplier`] so the parsing is testable without mutating
+/// the process environment.
+pub fn parse_multiplier(raw: Option<&str>) -> usize {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&m| m >= 1).unwrap_or(1)
+}
+
+/// The process-wide case multiplier from `CVLR_PROP_CASES`.
+pub fn cases_multiplier() -> usize {
+    parse_multiplier(std::env::var("CVLR_PROP_CASES").ok().as_deref())
+}
+
+/// Run `prop` for `cases` deterministic random cases (times the
+/// `CVLR_PROP_CASES` multiplier). The property gets a seeded RNG and
+/// returns `Ok(())` or a failure description.
 pub fn check<F>(name: &str, cases: usize, mut prop: F)
 where
     F: FnMut(&mut Pcg64) -> Result<(), String>,
 {
-    for case in 0..cases {
+    for case in 0..cases * cases_multiplier() {
         let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut rng = Pcg64::new(seed);
         if let Err(msg) = prop(&mut rng) {
@@ -43,7 +64,9 @@ mod tests {
             n += 1;
             Ok(())
         });
-        assert_eq!(n, 17);
+        // `n` is 17 × the ambient multiplier, whatever tier this test
+        // runs under
+        assert_eq!(n, 17 * cases_multiplier());
     }
 
     #[test]
@@ -57,5 +80,16 @@ mod tests {
                 Ok(())
             }
         });
+    }
+
+    #[test]
+    fn multiplier_parsing_defaults_and_bounds() {
+        assert_eq!(parse_multiplier(None), 1, "unset → 1");
+        assert_eq!(parse_multiplier(Some("")), 1, "empty → 1");
+        assert_eq!(parse_multiplier(Some("banana")), 1, "garbage → 1");
+        assert_eq!(parse_multiplier(Some("0")), 1, "zero would skip every property");
+        assert_eq!(parse_multiplier(Some("1")), 1);
+        assert_eq!(parse_multiplier(Some("20")), 20);
+        assert_eq!(parse_multiplier(Some(" 20 ")), 20, "whitespace tolerated");
     }
 }

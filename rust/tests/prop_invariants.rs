@@ -562,3 +562,104 @@ fn prop_rbf_gram_symmetric_psd() {
         Ok(())
     });
 }
+
+// ---- PDAG machinery tier (see `graph::pdag`'s debug hooks; the
+// schedule explorer in `util::model` covers the concurrency side) ----
+
+/// `meek_closure` is idempotent: once the R1-R4 fixpoint is reached, a
+/// second closure over the result changes nothing — over random CPDAGs
+/// with extra random (acyclicity-respecting) orientations layered on.
+#[test]
+fn prop_meek_closure_idempotent() {
+    check("meek_closure_idempotent", 30, |rng| {
+        let d = 4 + rng.below(5);
+        let dag = random_dag(d, 0.2 + 0.6 * rng.uniform(), rng);
+        let order = dag.topological_order().expect("random_dag is a DAG");
+        let mut p = dag_to_cpdag(&dag);
+        // orient a few undirected edges along the DAG's topological
+        // order, so the input stays extendable and cycle-free
+        let mut pos = vec![0usize; d];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v] = i;
+        }
+        for a in 0..d {
+            for b in 0..d {
+                if p.undirected(a, b) && pos[a] < pos[b] && rng.below(3) == 0 {
+                    p.orient(a, b);
+                }
+            }
+        }
+        p.meek_closure();
+        let closed = p.clone();
+        p.meek_closure();
+        prop_assert!(p == closed, "second meek_closure changed the graph");
+        Ok(())
+    });
+}
+
+/// `dag_to_cpdag` produces a valid CPDAG: same skeleton as the DAG,
+/// every v-structure kept directed, and an acyclic directed part.
+#[test]
+fn prop_dag_to_cpdag_is_valid_cpdag() {
+    check("dag_to_cpdag_valid", 30, |rng| {
+        let d = 4 + rng.below(5);
+        let dag = random_dag(d, 0.2 + 0.6 * rng.uniform(), rng);
+        let c = dag_to_cpdag(&dag);
+        for i in 0..d {
+            for j in (i + 1)..d {
+                let in_dag = dag.has_edge(i, j) || dag.has_edge(j, i);
+                prop_assert!(
+                    c.adjacent(i, j) == in_dag,
+                    "skeleton differs at ({i},{j})"
+                );
+            }
+        }
+        // v-structures x→z←y (x,y nonadjacent) are compelled
+        for z in 0..d {
+            let parents = dag.parents(z);
+            for (a, &x) in parents.iter().enumerate() {
+                for &y in parents.iter().skip(a + 1) {
+                    if !dag.has_edge(x, y) && !dag.has_edge(y, x) {
+                        prop_assert!(
+                            c.directed(x, z) && c.directed(y, z),
+                            "v-structure {x}\u{2192}{z}\u{2190}{y} lost"
+                        );
+                    }
+                }
+            }
+        }
+        prop_assert!(c.directed_part_acyclic(), "CPDAG directed part has a cycle");
+        Ok(())
+    });
+}
+
+/// `orient` refuses to flip a compelled (already directed) edge — the
+/// debug hook panics rather than corrupting the equivalence class.
+#[test]
+fn prop_orient_rejects_compelled_flip() {
+    use cvlr::graph::pdag::Pdag;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    check("orient_rejects_flip", 20, |rng| {
+        let d = 3 + rng.below(4);
+        let i = rng.below(d);
+        let j = (i + 1 + rng.below(d - 1)) % d;
+        let mut p = Pdag::new(d);
+        p.add_directed(i, j);
+        let flipped = catch_unwind(AssertUnwindSafe(|| {
+            let mut q = p.clone();
+            q.orient(j, i);
+        }));
+        prop_assert!(flipped.is_err(), "orient({j},{i}) over {i}\u{2192}{j} must panic");
+        // the legal direction is a no-op re-orientation, not a panic
+        let kept = catch_unwind(AssertUnwindSafe(|| {
+            let mut q = p.clone();
+            q.orient(i, j);
+            q
+        }));
+        match kept {
+            Ok(q) => prop_assert!(q.directed(i, j), "re-orientation dropped the edge"),
+            Err(_) => return Err("orienting the existing direction must not panic".into()),
+        }
+        Ok(())
+    });
+}
